@@ -1,0 +1,45 @@
+//! Figure 2a-c (+ Appendix A.11): mixed quantization + 2:4 pruning over
+//! BOP reduction targets — OBC vs the strongest independent baseline
+//! combination (AdaPrune for masks + AdaQuant for quantization).
+//!
+//! Paper shape: smooth trade-off curves; OBC above the AdaPruneQuant
+//! baseline with the gap widening at aggressive targets; ~2.5% relative
+//! drop at 12-14x (ResNets) and 7-8x (YOLO/BERT).
+
+use obc::coordinator::pipeline::{LayerScope, Pipeline};
+use obc::util::benchkit::Table;
+
+fn main() {
+    let models = ["rneta", "tinydet", "bert2"];
+    let targets = [4.0, 6.0, 8.0, 10.0, 12.0, 14.0];
+    for model in models {
+        let Some(p) = Pipeline::try_load_for_bench(model) else { continue };
+        let dense = p.dense_metric();
+        println!("{model}: building OBC + baseline mixed DBs ...");
+        let db_obc = p.build_mixed_gpu_db(LayerScope::SkipFirstLast);
+        let db_base = p.build_mixed_gpu_db_baseline(LayerScope::SkipFirstLast);
+        let mut t = Table::new(
+            &format!("Figure 2 — {model} mixed quant + 2:4 (dense {dense:.2})"),
+            &["BOP target", "OBC", "AdaPruneQuant", "OBC gap"],
+        );
+        for &target in &targets {
+            let obc = p.eval_bop_target(&db_obc, LayerScope::SkipFirstLast, target);
+            let base = p.eval_bop_target(&db_base, LayerScope::SkipFirstLast, target);
+            match (obc, base) {
+                (Some((mo, _)), Some((mb, _))) => {
+                    t.row(vec![
+                        format!("{target}x"),
+                        format!("{mo:.2}"),
+                        format!("{mb:.2}"),
+                        format!("{:+.2}", mo - mb),
+                    ]);
+                }
+                _ => {
+                    t.row(vec![format!("{target}x"), "-".into(), "-".into(), "-".into()]);
+                }
+            }
+            t.print();
+        }
+        t.print();
+    }
+}

@@ -1,0 +1,40 @@
+//! Figure 2d: joint 4-block pruning + int8 quantization for real-time
+//! CPU inference speedup targets under the DeepSparse-calibrated latency
+//! model.
+//!
+//! Paper shape: ~1 point drop at 4x, ~2 points at 5x (ResNet50 scale);
+//! the int8 dense base alone gives ~2.7x.
+
+use obc::coordinator::pipeline::{LayerScope, Pipeline};
+use obc::solver::sparsity_grid;
+use obc::util::benchkit::Table;
+
+fn main() {
+    let model = "rnetb";
+    let Some(p) = Pipeline::try_load_for_bench(model) else { return };
+    let dense = p.dense_metric();
+    let grid = sparsity_grid(0.1, 0.95);
+    println!("{model}: building CPU DB ({} block levels x int8) ...", grid.len());
+    let db = p.build_cpu_db(&grid, LayerScope::SkipFirstLast);
+    let mut t = Table::new(
+        &format!("Figure 2d — {model} CPU speedup targets (dense {dense:.2})"),
+        &["speedup", "achieved", "metric", "drop"],
+    );
+    for target in [2.7, 3.0, 3.5, 4.0, 4.5, 5.0] {
+        match p.eval_time_target(&db, LayerScope::SkipFirstLast, target) {
+            Some((metric, sp)) => {
+                t.row(vec![
+                    format!("{target}x"),
+                    format!("{sp:.1}x"),
+                    format!("{metric:.2}"),
+                    format!("{:+.2}", metric - dense),
+                ]);
+            }
+            None => {
+                t.row(vec![format!("{target}x"), "-".into(), "infeasible".into(), "-".into()]);
+            }
+        }
+        t.print();
+    }
+    t.print();
+}

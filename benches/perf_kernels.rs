@@ -1,0 +1,87 @@
+//! §Perf microbenches: the L3 hot paths (Hessian accumulation, ExactOBS
+//! sweep, group reconstruction, OBQ sweep) and the PJRT-vs-native bridge.
+//!
+//! Used by the performance pass (EXPERIMENTS.md §Perf) to find and track
+//! bottlenecks; thresholds are not asserted here — numbers are recorded.
+
+use obc::compress::hessian::{HessianAccumulator, LayerHessian};
+use obc::compress::{exact_obs, obq};
+use obc::linalg::Mat;
+use obc::util::benchkit::bench;
+
+fn main() {
+    // Hessian accumulation: d=288 (the largest conv in the zoo), N=1024.
+    let x = Mat::randn(288, 1024, 1);
+    bench("hessian_xxt_d288_n1024", 1, 3, || {
+        let mut acc = HessianAccumulator::new(288);
+        acc.add_batch(&x);
+        std::hint::black_box(acc.raw());
+    });
+
+    // Cholesky inverse at d=288.
+    let h288 = LayerHessian::from_inputs(&Mat::randn(288, 640, 2), 1e-8);
+    bench("cholesky_inverse_d288", 1, 3, || {
+        let mut acc = HessianAccumulator::new(288);
+        acc.add_batch(&Mat::randn(288, 320, 3));
+        std::hint::black_box(acc.finalize(1e-8).unwrap());
+    });
+
+    // ExactOBS full-trace sweep, one row, d ∈ {72, 144, 288}.
+    for d in [72usize, 144, 288] {
+        let h = LayerHessian::synthetic(d, 4 + d as u64);
+        let w = Mat::randn(1, d, 5 + d as u64);
+        bench(&format!("obs_sweep_row_d{d}_full"), 1, 3, || {
+            let mut wr = w.row(0).to_vec();
+            let mut hinv = h.hinv.clone();
+            std::hint::black_box(exact_obs::sweep_row(&mut wr, &mut hinv, d, |_, _| true));
+        });
+    }
+
+    // Group-OBS reconstruction at 80% sparsity, d=288.
+    {
+        let d = 288;
+        let w = Mat::randn(1, d, 9);
+        let pruned: Vec<usize> = (0..(d * 4 / 5)).collect();
+        bench("group_reconstruct_d288_s80", 1, 3, || {
+            std::hint::black_box(exact_obs::group_obs_reconstruct(
+                w.row(0),
+                &h288.hinv,
+                &pruned,
+            ));
+        });
+    }
+
+    // OBQ sweep, 4-bit, matrix 32x144.
+    {
+        let h = LayerHessian::synthetic(144, 11);
+        let w = Mat::randn(32, 144, 12);
+        bench("obq_quantize_32x144_4bit", 1, 3, || {
+            std::hint::black_box(obq::quantize(&w, &h, &obq::ObqOpts::new(4)));
+        });
+    }
+
+    // PJRT bridge vs native on an artifact shape (16 rows x d=32).
+    match obc::runtime::Runtime::new() {
+        Ok(rt) => {
+            let d = 32;
+            let h = LayerHessian::synthetic(d, 13);
+            let w = Mat::randn(16, d, 14);
+            bench("obs_sweep_16x32_native", 1, 5, || {
+                for r in 0..16 {
+                    let mut wr = w.row(r).to_vec();
+                    let mut hinv = h.hinv.clone();
+                    std::hint::black_box(exact_obs::sweep_row(&mut wr, &mut hinv, d, |_, _| true));
+                }
+            });
+            // First call compiles (cold), subsequent are cached.
+            let _ = obc::runtime::dispatch::obs_sweep_pjrt(&rt, &w, &h.hinv);
+            bench("obs_sweep_16x32_pjrt_cached", 1, 5, || {
+                std::hint::black_box(
+                    obc::runtime::dispatch::obs_sweep_pjrt(&rt, &w, &h.hinv)
+                        .map(|r| r.ok()),
+                );
+            });
+        }
+        Err(e) => eprintln!("SKIP pjrt benches: {e}"),
+    }
+}

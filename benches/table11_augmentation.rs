@@ -1,0 +1,47 @@
+//! Table 11 (Appendix A.9): impact of calibration-set augmentations on
+//! OBQ — with vs without flip/crop augmentation of the Hessian inputs.
+//!
+//! Paper shape: differences of only ~0.1-0.2 points either way;
+//! augmentations mainly buy Hessian rank, not accuracy.
+
+use obc::coordinator::pipeline::{LayerScope, Pipeline};
+use obc::coordinator::{CalibOpts, methods::QuantMethod};
+use obc::util::benchkit::Table;
+use obc::util::io::artifacts_dir;
+
+fn main() {
+    let model = "rneta";
+    let dir = artifacts_dir().join("models");
+    let load = |augment: usize| -> Option<Pipeline> {
+        let calib = CalibOpts { augment, ..Default::default() };
+        match Pipeline::load_with(&dir, model, calib) {
+            Ok(mut p) => {
+                p.eval_samples = 512;
+                Some(p)
+            }
+            Err(e) => {
+                eprintln!("SKIP: {e}");
+                None
+            }
+        }
+    };
+    let Some(p_aug) = load(4) else { return };
+    let Some(p_plain) = load(1) else { return };
+    let dense = p_aug.dense_metric();
+    let mut t = Table::new(
+        &format!("Table 11 — augmentation impact on OBQ ({model}, dense {dense:.2})"),
+        &["variant", "4bit", "3bit", "2bit"],
+    );
+    for (name, p) in [("OBQ (4x aug)", &p_aug), ("OBQ (no aug)", &p_plain)] {
+        let mut row = vec![name.to_string()];
+        for bits in [4u32, 3, 2] {
+            row.push(format!(
+                "{:.2}",
+                p.run_quant(QuantMethod::Obq, bits, false, LayerScope::All, true)
+            ));
+        }
+        t.row(row);
+        t.print();
+    }
+    t.print();
+}

@@ -1,0 +1,47 @@
+//! Table 12 (Appendix A.10): sensitivity to random seeds — 4-bit OBQ and
+//! 2:4 ExactOBS over 5 calibration/augmentation seeds.
+//!
+//! Paper shape: std < 0.1 points — OBC results are essentially
+//! deterministic given a task.
+
+use obc::coordinator::methods::{PruneMethod, QuantMethod};
+use obc::coordinator::pipeline::{LayerScope, Pipeline};
+use obc::coordinator::CalibOpts;
+use obc::util::benchkit::Table;
+use obc::util::io::artifacts_dir;
+use obc::util::{mean, stddev};
+
+fn main() {
+    let model = "rneta";
+    let dir = artifacts_dir().join("models");
+    let mut quant = Vec::new();
+    let mut nm = Vec::new();
+    for seed in 0..5u64 {
+        let calib = CalibOpts { seed, augment: 2, ..Default::default() };
+        let Ok(mut p) = Pipeline::load_with(&dir, model, calib) else {
+            eprintln!("SKIP: run `make artifacts`");
+            return;
+        };
+        p.eval_samples = 512;
+        let q = p.run_quant(QuantMethod::Obq, 4, true, LayerScope::All, true);
+        let s = p.run_nm(PruneMethod::ExactObs, 2, 4, LayerScope::SkipFirstLast);
+        println!("seed {seed}: 4bit {q:.2}  2:4 {s:.2}");
+        quant.push(q);
+        nm.push(s);
+    }
+    let mut t = Table::new(
+        &format!("Table 12 — seed sensitivity over {} seeds ({model})", quant.len()),
+        &["experiment", "mean", "std"],
+    );
+    t.row(vec![
+        "OBQ 4-bit (sym)".into(),
+        format!("{:.2}", mean(&quant)),
+        format!("{:.3}", stddev(&quant)),
+    ]);
+    t.row(vec![
+        "ExactOBS 2:4".into(),
+        format!("{:.2}", mean(&nm)),
+        format!("{:.3}", stddev(&nm)),
+    ]);
+    t.print();
+}

@@ -1,0 +1,50 @@
+//! Table 1: unstructured pruning for 2x/3x/4x FLOP reduction targets,
+//! GMP / L-OBS / AdaPrune / ExactOBS on a ResNet, a detector and a BERT.
+//!
+//! Paper shape: ExactOBS best overall; the gap widens with the reduction
+//! target; on BERT, GMP/L-OBS collapse while ExactOBS stays reasonable.
+//!
+//! Substitution note (DESIGN.md §2): rnetb/tinydet/bert4 stand in for
+//! ResNet50/YOLOv5l/BERT; absolute numbers are on SynthImage/Det/Seq.
+
+use obc::coordinator::methods::PruneMethod;
+use obc::coordinator::pipeline::{LayerScope, Pipeline};
+use obc::solver::sparsity_grid;
+use obc::util::benchkit::Table;
+
+fn main() {
+    let models = ["rnetb", "tinydet", "bert4"];
+    let targets = [2.0, 3.0, 4.0];
+    let grid = sparsity_grid(0.1, 0.95);
+    let mut t = Table::new(
+        "Table 1 — unstructured pruning at FLOP reduction targets",
+        &["model", "dense", "method", "2x", "3x", "4x"],
+    );
+    for model in models {
+        let Some(p) = Pipeline::try_load_for_bench(model) else { continue };
+        let dense = p.dense_metric();
+        for m in PruneMethod::ALL {
+            let mut row = vec![model.to_string(), format!("{dense:.2}"), m.name()];
+            match m {
+                PruneMethod::Gmp => {
+                    for &tg in &targets {
+                        let metric = p.eval_gmp_flop_target(LayerScope::All, tg);
+                        row.push(format!("{metric:.2}"));
+                    }
+                }
+                _ => {
+                    let db = p.build_sparsity_db(m, &grid, LayerScope::All);
+                    for &tg in &targets {
+                        match p.eval_flop_target(&db, LayerScope::All, tg) {
+                            Some((metric, _)) => row.push(format!("{metric:.2}")),
+                            None => row.push("-".into()),
+                        }
+                    }
+                }
+            }
+            t.row(row);
+            t.print();
+        }
+    }
+    t.print();
+}

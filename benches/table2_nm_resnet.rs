@@ -1,0 +1,33 @@
+//! Table 2: semi-structured N:M pruning (+ BN reset) of ResNets, all
+//! layers except the first and the last: AdaPrune 4:8 vs ExactOBS 2:4
+//! and 4:8.
+//!
+//! Paper shape: ExactOBS at the *stricter* 2:4 pattern matches or beats
+//! AdaPrune at 4:8; ExactOBS 4:8 beats both.
+
+use obc::coordinator::methods::PruneMethod;
+use obc::coordinator::pipeline::{LayerScope, Pipeline};
+use obc::util::benchkit::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "Table 2 — N:M pruning of ResNets (skip first/last, BN reset)",
+        &["model", "dense", "AdaPrune 4:8", "ExactOBS 2:4", "ExactOBS 4:8"],
+    );
+    for model in ["rneta", "rnetb", "rnetc"] {
+        let Some(p) = Pipeline::try_load_for_bench(model) else { continue };
+        let dense = p.dense_metric();
+        let ap48 = p.run_nm(PruneMethod::AdaPrune, 4, 8, LayerScope::SkipFirstLast);
+        let ex24 = p.run_nm(PruneMethod::ExactObs, 2, 4, LayerScope::SkipFirstLast);
+        let ex48 = p.run_nm(PruneMethod::ExactObs, 4, 8, LayerScope::SkipFirstLast);
+        t.row(vec![
+            model.into(),
+            format!("{dense:.2}"),
+            format!("{ap48:.2}"),
+            format!("{ex24:.2}"),
+            format!("{ex48:.2}"),
+        ]);
+        t.print();
+    }
+    t.print();
+}

@@ -1,0 +1,31 @@
+//! Table 3: 2:4 pruning of BERT models (all layers except embeddings):
+//! AdaPrune vs ExactOBS.
+//!
+//! Paper shape: ExactOBS 1-2 points F1 above AdaPrune on every size.
+
+use obc::coordinator::methods::PruneMethod;
+use obc::coordinator::pipeline::{LayerScope, Pipeline};
+use obc::util::benchkit::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "Table 3 — 2:4 pruning of MiniBERTs (embeddings excluded)",
+        &["model", "dense", "AdaPrune", "ExactOBS"],
+    );
+    for model in ["bert2", "bert4", "bert6"] {
+        let Some(p) = Pipeline::try_load_for_bench(model) else { continue };
+        let dense = p.dense_metric();
+        // Embeddings are not compressible layers in our BERT engine, so
+        // LayerScope::All == "all but embeddings" here, as in the paper.
+        let ap = p.run_nm(PruneMethod::AdaPrune, 2, 4, LayerScope::All);
+        let ex = p.run_nm(PruneMethod::ExactObs, 2, 4, LayerScope::All);
+        t.row(vec![
+            model.into(),
+            format!("{dense:.2}"),
+            format!("{ap:.2}"),
+            format!("{ex:.2}"),
+        ]);
+        t.print();
+    }
+    t.print();
+}

@@ -1,0 +1,41 @@
+//! Table 4: asymmetric per-channel weight quantization at 4/3/2 bits,
+//! AdaRound / AdaQuant / OBQ (+ RTN reference), with statistics
+//! correction.
+//!
+//! Paper shape: OBQ ≈ AdaRound ≥ AdaQuant at 4/3 bits; AdaQuant
+//! collapses at 2 bits while OBQ/AdaRound degrade gracefully.
+//!
+//! BRECQ (block reconstruction with second-order losses) is out of scope
+//! for this reproduction — AdaRound is the closest sequential baseline
+//! (DESIGN.md §2).
+
+use obc::coordinator::methods::QuantMethod;
+use obc::coordinator::pipeline::{LayerScope, Pipeline};
+use obc::util::benchkit::Table;
+
+fn main() {
+    let methods = [
+        QuantMethod::Rtn,
+        QuantMethod::AdaRound,
+        QuantMethod::AdaQuant,
+        QuantMethod::Obq,
+    ];
+    let mut t = Table::new(
+        "Table 4 — asymmetric per-channel quantization (+ correction)",
+        &["model", "dense", "method", "4bit", "3bit", "2bit"],
+    );
+    for model in ["rneta", "rnetb"] {
+        let Some(p) = Pipeline::try_load_for_bench(model) else { continue };
+        let dense = p.dense_metric();
+        for m in methods {
+            let mut row = vec![model.to_string(), format!("{dense:.2}"), m.name().into()];
+            for bits in [4u32, 3, 2] {
+                let metric = p.run_quant(m, bits, false, LayerScope::All, true);
+                row.push(format!("{metric:.2}"));
+            }
+            t.row(row);
+            t.print();
+        }
+    }
+    t.print();
+}

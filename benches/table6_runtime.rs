@@ -1,0 +1,32 @@
+//! Table 6 (Appendix A.5): wall-clock runtime of post-training
+//! quantization methods — full-model 4-bit weight quantization.
+//!
+//! Paper shape: AdaQuant fastest; OBQ in the same ballpark as
+//! AdaRound (BitSplit slowest). Absolute numbers are for THIS testbed.
+
+use obc::coordinator::methods::QuantMethod;
+use obc::coordinator::pipeline::{LayerScope, Pipeline};
+use obc::util::benchkit::{fmt_time, Table};
+use std::time::Instant;
+
+fn main() {
+    let model = "rnetb";
+    let Some(p) = Pipeline::try_load_for_bench(model) else { return };
+    let mut t = Table::new(
+        &format!("Table 6 — PTQ method runtime, {model} 4-bit all layers"),
+        &["method", "wall time", "metric"],
+    );
+    for m in [
+        QuantMethod::BitSplit,
+        QuantMethod::AdaRound,
+        QuantMethod::AdaQuant,
+        QuantMethod::Obq,
+    ] {
+        let t0 = Instant::now();
+        let metric = p.run_quant(m, 4, false, LayerScope::All, true);
+        let dt = t0.elapsed().as_secs_f64();
+        t.row(vec![m.name().into(), fmt_time(dt), format!("{metric:.2}")]);
+        t.print();
+    }
+    t.print();
+}

@@ -1,0 +1,65 @@
+//! Table 7 (Appendix A.5): ExactOBS/OBQ runtime per compression type
+//! (quant / unstructured / 4-block / 2:4 / quant+2:4) across model sizes.
+//!
+//! Paper shape: quant ≈ unstructured; 2:4 about half of those (half the
+//! work); blocked most expensive for transformer-shaped layers.
+
+use obc::compress::{exact_obs, obq};
+use obc::coordinator::pipeline::{LayerScope, Pipeline};
+use obc::util::benchkit::{fmt_time, Table};
+use std::time::Instant;
+
+fn main() {
+    let mut t = Table::new(
+        "Table 7 — ExactOBS runtime by compression type (whole model)",
+        &["model", "quant", "unstr", "4-block", "2:4", "quant 2:4"],
+    );
+    for model in ["rneta", "tinydet", "bert2"] {
+        let Some(p) = Pipeline::try_load_for_bench(model) else { continue };
+        let layers = p.layers(LayerScope::All);
+        let mats: Vec<_> = layers
+            .iter()
+            .map(|l| (p.model().get_weight(&l.name), p.hessians[&l.name].clone()))
+            .collect();
+        let time_it = |f: &dyn Fn()| -> String {
+            let t0 = Instant::now();
+            f();
+            fmt_time(t0.elapsed().as_secs_f64())
+        };
+        let quant = time_it(&|| {
+            for (w, h) in &mats {
+                obq::quantize(w, h, &obq::ObqOpts::new(4));
+            }
+        });
+        let unstr = time_it(&|| {
+            for (w, h) in &mats {
+                exact_obs::prune_unstructured(w, h, 0.6, &Default::default());
+            }
+        });
+        let block4 = time_it(&|| {
+            for (w, h) in &mats {
+                if w.cols % 4 == 0 {
+                    exact_obs::prune_block(w, h, 0.6, 4);
+                }
+            }
+        });
+        let nm24 = time_it(&|| {
+            for (w, h) in &mats {
+                if w.cols % 4 == 0 {
+                    exact_obs::prune_nm(w, h, 2, 4);
+                }
+            }
+        });
+        let q24 = time_it(&|| {
+            for (w, h) in &mats {
+                if w.cols % 4 == 0 {
+                    let pruned = exact_obs::prune_nm(w, h, 2, 4);
+                    obq::quantize_sparse(&pruned.w, h, &obq::ObqOpts::new(4));
+                }
+            }
+        });
+        t.row(vec![model.into(), quant, unstr, block4, nm24, q24]);
+        t.print();
+    }
+    t.print();
+}

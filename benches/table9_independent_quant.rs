@@ -1,0 +1,31 @@
+//! Table 9 (Appendix A.7): independent layer-wise quantization, raw (no
+//! statistics correction), symmetric per-channel: BitSplit / AdaQuant /
+//! OBQ at 4/3/2 bits.
+//!
+//! Paper shape: OBQ clearly ahead on all models and widths; at 2 bits it
+//! is the only method that does not collapse completely.
+
+use obc::coordinator::methods::QuantMethod;
+use obc::coordinator::pipeline::{LayerScope, Pipeline};
+use obc::util::benchkit::Table;
+
+fn main() {
+    let mut t = Table::new(
+        "Table 9 — raw symmetric per-channel quantization (no correction)",
+        &["model", "dense", "method", "4bit", "3bit", "2bit"],
+    );
+    for model in ["rneta", "rnetb", "rnetc"] {
+        let Some(p) = Pipeline::try_load_for_bench(model) else { continue };
+        let dense = p.dense_metric();
+        for m in [QuantMethod::BitSplit, QuantMethod::AdaQuant, QuantMethod::Obq] {
+            let mut row = vec![model.to_string(), format!("{dense:.2}"), m.name().into()];
+            for bits in [4u32, 3, 2] {
+                let metric = p.run_quant(m, bits, true, LayerScope::All, false);
+                row.push(format!("{metric:.2}"));
+            }
+            t.row(row);
+            t.print();
+        }
+    }
+    t.print();
+}

@@ -1,0 +1,57 @@
+//! CPU scenario (paper Fig. 2d): 4-block sparsity + int8 under the
+//! DeepSparse-calibrated latency model, for real-time speedup targets.
+//!
+//! Run after `make artifacts`:
+//!   `cargo run --release --example cpu_speedup -- [--model rnetc]`
+
+use obc::coordinator::pipeline::{LayerScope, Pipeline};
+use obc::solver::sparsity_grid;
+use obc::util::benchkit::Table;
+use obc::util::cli::{opt, Args};
+use obc::util::io::artifacts_dir;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(
+        "cpu_speedup",
+        "block-sparse + int8 latency-constrained compression",
+        vec![
+            opt("model", "model to compress", Some("rnetc")),
+            opt("targets", "speedup targets over fp32 dense", Some("2.7,3,4,5")),
+        ],
+    );
+    let model = args.str_or("model", "rnetc");
+    let targets = args.f64_list_or("targets", &[2.7, 3.0, 4.0, 5.0]);
+
+    let p = Pipeline::load(&artifacts_dir().join("models"), &model)?;
+    let dense = p.dense_metric();
+    println!("{model}: dense metric {dense:.2}");
+    // Paper: "30 available block-sparsity targets per-layer, in steps of
+    // pruning 10% of the remaining weights, all further quantized to
+    // 8 bits" — Eq. 10 with δ=0.1 capped at 0.95.
+    let grid = sparsity_grid(0.1, 0.95);
+    println!("building CPU database ({} block-sparsity levels x int8) ...", grid.len());
+    let db = p.build_cpu_db(&grid, LayerScope::SkipFirstLast);
+
+    let mut t = Table::new(
+        &format!("{model} — CPU inference-time speedup targets (dense {dense:.2})"),
+        &["speedup target", "achieved", "metric", "drop"],
+    );
+    for &target in &targets {
+        match p.eval_time_target(&db, LayerScope::SkipFirstLast, target) {
+            Some((metric, sp)) => {
+                t.row(vec![
+                    format!("{target}x"),
+                    format!("{sp:.1}x"),
+                    format!("{metric:.2}"),
+                    format!("{:+.2}", metric - dense),
+                ]);
+            }
+            None => {
+                t.row(vec![format!("{target}x"), "-".into(), "infeasible".into(), "-".into()]);
+            }
+        }
+    }
+    t.print();
+    println!("\n(int8 dense base speedup is ~2.7x in the latency model, as in the paper)");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! End-to-end driver: the full OBC pipeline on a real trained model.
+//!
+//! Stages (all timed and logged):
+//!   1. load the trained MiniResNet + data splits from artifacts/
+//!   2. evaluate the dense reference
+//!   3. calibrate (streaming Hessian accumulation on 1024 samples)
+//!   4. build the ExactOBS sparsity database (Eq. 10 grid, traces reused
+//!      across levels)
+//!   5. SPDY-solve per-layer sparsities for 2x/3x/4x FLOP targets
+//!   6. stitch + batchnorm-reset + evaluate each target
+//!
+//! Run after `make artifacts`:
+//!   `cargo run --release --example e2e_compress -- [--model rneta]`
+
+use obc::coordinator::methods::PruneMethod;
+use obc::coordinator::pipeline::{LayerScope, Pipeline};
+use obc::solver::sparsity_grid;
+use obc::util::benchkit::Table;
+use obc::util::cli::{opt, Args};
+use obc::util::io::artifacts_dir;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(
+        "e2e_compress",
+        "end-to-end OBC pipeline driver",
+        vec![
+            opt("model", "model to compress", Some("rneta")),
+            opt("targets", "FLOP reduction targets", Some("2,3,4")),
+        ],
+    );
+    let model = args.str_or("model", "rneta");
+    let targets = args.f64_list_or("targets", &[2.0, 3.0, 4.0]);
+
+    let t0 = Instant::now();
+    println!("[1/6] loading + [3/6] calibrating {model} ...");
+    let p = Pipeline::load(&artifacts_dir().join("models"), &model)?;
+    println!("      {} layers, calibrated in {:.1}s", p.layers(LayerScope::All).len(), t0.elapsed().as_secs_f64());
+
+    println!("[2/6] dense evaluation ...");
+    let t = Instant::now();
+    let dense = p.dense_metric();
+    println!("      dense metric = {dense:.2} ({:.1}s)", t.elapsed().as_secs_f64());
+
+    println!("[4/6] building ExactOBS sparsity database ...");
+    let t = Instant::now();
+    let grid = sparsity_grid(0.1, 0.95);
+    let db = p.build_sparsity_db(PruneMethod::ExactObs, &grid, LayerScope::All);
+    println!(
+        "      {} entries ({} levels x {} layers) in {:.1}s",
+        db.len(),
+        grid.len(),
+        p.layers(LayerScope::All).len(),
+        t.elapsed().as_secs_f64()
+    );
+
+    let mut table = Table::new(
+        &format!("{model} — non-uniform unstructured pruning (dense {dense:.2})"),
+        &["target", "achieved", "metric", "drop"],
+    );
+    for &target in &targets {
+        println!("[5/6] solving {target}x FLOP target + [6/6] stitch/correct/eval ...");
+        let t = Instant::now();
+        match p.eval_flop_target(&db, LayerScope::All, target) {
+            Some((metric, achieved)) => {
+                println!(
+                    "      {target}x -> metric {metric:.2} (achieved {achieved:.2}x, {:.1}s)",
+                    t.elapsed().as_secs_f64()
+                );
+                table.row(vec![
+                    format!("{target}x"),
+                    format!("{achieved:.2}x"),
+                    format!("{metric:.2}"),
+                    format!("{:+.2}", metric - dense),
+                ]);
+            }
+            None => {
+                table.row(vec![format!("{target}x"), "-".into(), "infeasible".into(), "-".into()]);
+            }
+        }
+    }
+    table.print();
+    println!("\ntotal wall time: {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! GPU scenario (paper Fig. 2a-c): joint quantization + 2:4 sparsity.
+//!
+//! Builds the 4-level mixed database ({8w8a, 4w4a} × {dense, 2:4}) and
+//! sweeps BOP-reduction targets, printing the compression-accuracy
+//! trade-off curve.
+//!
+//! Run after `make artifacts`:
+//!   `cargo run --release --example mixed_gpu -- [--model rneta]`
+
+use obc::coordinator::pipeline::{LayerScope, Pipeline};
+use obc::util::benchkit::Table;
+use obc::util::cli::{opt, Args};
+use obc::util::io::artifacts_dir;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(
+        "mixed_gpu",
+        "joint quant + 2:4 BOP-constrained compression",
+        vec![
+            opt("model", "model to compress", Some("rneta")),
+            opt("targets", "BOP reduction targets", Some("4,6,8,10,12,14")),
+        ],
+    );
+    let model = args.str_or("model", "rneta");
+    let targets = args.f64_list_or("targets", &[4.0, 6.0, 8.0, 10.0, 12.0, 14.0]);
+
+    let p = Pipeline::load(&artifacts_dir().join("models"), &model)?;
+    let dense = p.dense_metric();
+    println!("{model}: dense metric {dense:.2}");
+    println!("building mixed GPU database (8w8a / 4w4a x dense / 2:4, symmetric per-channel) ...");
+    let db = p.build_mixed_gpu_db(LayerScope::SkipFirstLast);
+
+    let mut t = Table::new(
+        &format!("{model} — BOP-constrained mixed compression (dense {dense:.2})"),
+        &["BOP target", "achieved", "metric", "drop"],
+    );
+    for &target in &targets {
+        match p.eval_bop_target(&db, LayerScope::SkipFirstLast, target) {
+            Some((metric, red)) => {
+                t.row(vec![
+                    format!("{target}x"),
+                    format!("{red:.1}x"),
+                    format!("{metric:.2}"),
+                    format!("{:+.2}", metric - dense),
+                ]);
+            }
+            None => {
+                t.row(vec![format!("{target}x"), "-".into(), "infeasible".into(), "-".into()]);
+            }
+        }
+    }
+    t.print();
+    Ok(())
+}

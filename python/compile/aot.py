@@ -1,0 +1,161 @@
+"""AOT lowering: JAX/Pallas kernels → HLO text artifacts for the Rust
+runtime (python -m compile.aot).
+
+HLO **text** is the interchange format, NOT `lowered.serialize()`: the
+image's xla_extension 0.5.1 rejects jax≥0.5 protos (64-bit instruction
+ids violate `proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts (per shape in SHAPES):
+  obs_sweep_r{rows}_d{d}.hlo.txt   — full pruning sweep, trace outputs
+  obq_sweep_r{rows}_d{d}.hlo.txt   — OBQ quantization sweep
+  hessian_d{d}_n{n}.hlo.txt        — H = 2XXᵀ accumulation tile
+  rneta_fwd_b{b}.hlo.txt           — MiniResNet-A forward (bridge check)
+plus manifest.json describing every artifact (name, inputs, outputs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import models as M
+from .kernels.hessian import hessian
+from .kernels.obq_sweep import obq_sweep
+from .kernels.obs_sweep import obs_sweep
+
+# Shape set: (rows, d_col) pairs used by runtime dispatch. Chosen to cover
+# the smaller model layers exactly; larger layers fall back to the native
+# Rust path (runtime/dispatch.rs). Kept small to bound XLA compile time on
+# the single-core CPU testbed.
+SHAPES = [(8, 16), (16, 32), (16, 64), (32, 128)]
+HESSIAN_SHAPES = [(16, 128), (32, 128), (64, 128), (128, 128)]
+FWD_BATCH = 4
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_obs(rows: int, d: int) -> str:
+    w = jax.ShapeDtypeStruct((rows, d), jnp.float32)
+    hinv = jax.ShapeDtypeStruct((d, d), jnp.float32)
+    return to_hlo_text(jax.jit(lambda a, b: obs_sweep(a, b, k=d)).lower(w, hinv))
+
+
+def lower_obq(rows: int, d: int) -> str:
+    # maxq must be static (clip bounds); the artifact set is 4-bit
+    # (maxq=15). Other widths use the native Rust path.
+    w = jax.ShapeDtypeStruct((rows, d), jnp.float32)
+    hinv = jax.ShapeDtypeStruct((d, d), jnp.float32)
+    grids = jax.ShapeDtypeStruct((rows, 2), jnp.float32)
+    fn = lambda a, b, g: obq_sweep(a, b, g, maxq=15.0, outlier=True)
+    return to_hlo_text(jax.jit(fn).lower(w, hinv, grids))
+
+
+def lower_hessian(d: int, n: int) -> str:
+    x = jax.ShapeDtypeStruct((d, n), jnp.float32)
+    return to_hlo_text(jax.jit(lambda a: hessian(a, bt=16)).lower(x))
+
+
+def lower_rneta_fwd(models_dir: str, batch: int) -> str:
+    """Forward pass of the trained MiniResNet-A — the L2 'model' artifact
+    used by the Rust side to cross-check its native inference engine
+    against the JAX reference through PJRT.
+
+    Weights are passed as ARGUMENTS (sorted by name: params then state),
+    not captured constants — `as_hlo_text` elides large constants as
+    `constant({...})`, which would not survive the text round-trip.
+    """
+    from .obcw import load_obcw
+
+    bundle = load_obcw(os.path.join(models_dir, "rneta.obcw"))
+    params = {k[len("param."):]: v for k, v in bundle.items()
+              if k.startswith("param.")}
+    state = {k[len("state."):]: v for k, v in bundle.items()
+             if k.startswith("state.")}
+    pkeys = sorted(params)
+    skeys = sorted(state)
+
+    def fwd(x, plist, slist):
+        p = dict(zip(pkeys, plist))
+        s = dict(zip(skeys, slist))
+        logits, _ = M.resnet_forward("rneta", p, s, x, False)
+        return logits
+
+    x = jax.ShapeDtypeStruct((batch, 3, D.IMG, D.IMG), jnp.float32)
+    pspec = [jax.ShapeDtypeStruct(params[k].shape, jnp.float32) for k in pkeys]
+    sspec = [jax.ShapeDtypeStruct(state[k].shape, jnp.float32) for k in skeys]
+    return to_hlo_text(jax.jit(fwd).lower(x, pspec, sspec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--skip-fwd", action="store_true",
+                    help="skip the model-forward artifact (models not trained yet)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest: dict = {"kernels": []}
+
+    for rows, d in SHAPES:
+        name = f"obs_sweep_r{rows}_d{d}"
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(lower_obs(rows, d))
+        manifest["kernels"].append(
+            {"name": name, "kind": "obs_sweep", "rows": rows, "d": d,
+             "file": f"{name}.hlo.txt"}
+        )
+        print(f"lowered {name}")
+
+        name = f"obq_sweep_r{rows}_d{d}"
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(lower_obq(rows, d))
+        manifest["kernels"].append(
+            {"name": name, "kind": "obq_sweep", "rows": rows, "d": d,
+             "maxq": 15.0, "file": f"{name}.hlo.txt"}
+        )
+        print(f"lowered {name}")
+
+    for d, n in HESSIAN_SHAPES:
+        name = f"hessian_d{d}_n{n}"
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(lower_hessian(d, n))
+        manifest["kernels"].append(
+            {"name": name, "kind": "hessian", "d": d, "n": n,
+             "file": f"{name}.hlo.txt"}
+        )
+        print(f"lowered {name}")
+
+    models_dir = os.path.join(args.out, "models")
+    if not args.skip_fwd and os.path.exists(os.path.join(models_dir, "rneta.obcw")):
+        name = f"rneta_fwd_b{FWD_BATCH}"
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(lower_rneta_fwd(models_dir, FWD_BATCH))
+        manifest["kernels"].append(
+            {"name": name, "kind": "model_fwd", "model": "rneta",
+             "batch": FWD_BATCH, "file": f"{name}.hlo.txt"}
+        )
+        print(f"lowered {name}")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

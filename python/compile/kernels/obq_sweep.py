@@ -1,0 +1,83 @@
+"""L1 — Pallas kernel: OBQ quantization sweep (Algorithm 3).
+
+Same VMEM-resident structure as `obs_sweep`; the per-step selection adds
+the paper's outlier heuristic (any weight with quantization error > Δ/2
+is quantized immediately, otherwise argmin of the compensated score).
+Per-row grid parameters (scale, zero) support per-channel quantization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant(w, scale, zero, maxq):
+    q = jnp.clip(jnp.round(w / scale + zero), 0.0, maxq)
+    return scale * (q - zero)
+
+
+def _obq_kernel(w_ref, hinv_ref, grid_ref, wout_ref, *, maxq: float, outlier: bool):
+    d = w_ref.shape[-1]
+    w = w_ref[0, :].astype(jnp.float32)
+    hinv = hinv_ref[...].astype(jnp.float32)
+    scale = grid_ref[0, 0]
+    zero = grid_ref[0, 1]
+    alive = jnp.ones((d,), dtype=jnp.float32)
+    half_delta = scale * 0.5
+
+    def body(_, carry):
+        w, hinv, alive = carry
+        q = _quant(w, scale, zero, maxq)
+        err = jnp.abs(q - w)
+        diag = jnp.diagonal(hinv)
+        scores = jnp.where(alive > 0, err * err / jnp.maximum(diag, 1e-30), jnp.inf)
+        p_min = jnp.argmin(scores).astype(jnp.int32)
+        if outlier:
+            masked_err = jnp.where(alive > 0, err, -jnp.inf)
+            p_out = jnp.argmax(masked_err).astype(jnp.int32)
+            p = jnp.where(masked_err[p_out] > half_delta, p_out, p_min)
+        else:
+            p = p_min
+        dpp = jnp.maximum(diag[p], 1e-30)
+        hrow = hinv[p, :]
+        f = (w[p] - q[p]) / dpp
+        qp = q[p]
+        w = jnp.where(alive > 0, w - f * hrow, w)
+        w = w.at[p].set(qp)
+        alive = alive.at[p].set(0.0)
+        hinv = hinv - jnp.outer(hinv[:, p], hrow) / dpp
+        hinv = hinv * alive[:, None] * alive[None, :]
+        return w, hinv, alive
+
+    w, hinv, alive = jax.lax.fori_loop(0, d, body, (w, hinv, alive))
+    wout_ref[0, :] = w
+
+
+@functools.partial(jax.jit, static_argnames=("maxq", "outlier"))
+def obq_sweep(w: jax.Array, hinv: jax.Array, grids: jax.Array, *, maxq: float,
+              outlier: bool = True):
+    """Quantize every row of `w` with OBQ.
+
+    `grids` is rows × 2: (scale, zero) per row (per-channel grids);
+    `maxq` is static (2^bits − 1). Returns the quantized matrix.
+    """
+    rows, d = w.shape
+    assert hinv.shape == (d, d)
+    assert grids.shape == (rows, 2)
+    kern = functools.partial(_obq_kernel, maxq=maxq, outlier=outlier)
+    return pl.pallas_call(
+        kern,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), jnp.float32),
+        interpret=True,
+    )(w.astype(jnp.float32), hinv.astype(jnp.float32), grids.astype(jnp.float32))

@@ -1,0 +1,92 @@
+"""Pure-numpy/jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth at the Python layer (pytest
+compares every Pallas kernel against them) and they mirror, op for op,
+the Rust-native implementations in `rust/src/compress/` — giving a
+three-way check: numpy oracle == Pallas kernel == Rust native (the last
+leg is exercised through the PJRT runtime integration tests).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def hessian_ref(x: np.ndarray) -> np.ndarray:
+    """H = 2·X·Xᵀ for X of shape (d_col, n)."""
+    x = np.asarray(x, dtype=np.float64)
+    return (2.0 * x @ x.T).astype(np.float32)
+
+
+def obs_sweep_ref(w: np.ndarray, hinv: np.ndarray, k: int):
+    """Algorithm 1 on one row.
+
+    Returns (w_out, order, dloss): pruned weights, pruning order (int32,
+    padded with -1 past k), and per-step loss increase ½·w_p²/[H⁻¹]ₚₚ.
+    """
+    w = np.asarray(w, dtype=np.float64).copy()
+    hinv = np.asarray(hinv, dtype=np.float64).copy()
+    d = w.shape[0]
+    alive = np.ones(d, dtype=bool)
+    order = np.full(d, -1, dtype=np.int32)
+    dloss = np.zeros(d, dtype=np.float64)
+    for step in range(min(k, d)):
+        scores = np.where(alive, w * w / np.maximum(np.diag(hinv), 1e-30), np.inf)
+        p = int(np.argmin(scores))
+        diag = max(hinv[p, p], 1e-30)
+        f = w[p] / diag
+        upd = f * hinv[p, :]
+        w = np.where(alive, w - upd, w)
+        w[p] = 0.0
+        alive[p] = False
+        hinv = hinv - np.outer(hinv[:, p], hinv[p, :]) / diag
+        hinv[p, :] = 0.0
+        hinv[:, p] = 0.0
+        order[step] = p
+        dloss[step] = 0.5 * scores[p]
+    return w.astype(np.float32), order, dloss.astype(np.float32)
+
+
+def quant_ref(w, scale, zero, maxq):
+    """q(w) = s·(clamp(round(w/s)+z, 0, maxq) − z)."""
+    q = np.clip(np.round(np.asarray(w, np.float64) / scale + zero), 0, maxq)
+    return scale * (q - zero)
+
+
+def obq_sweep_ref(w: np.ndarray, hinv: np.ndarray, scale: float, zero: float, maxq: float,
+                  outlier: bool = True):
+    """Algorithm 3 (OBQ) on one row: quantize ALL weights one at a time.
+
+    With `outlier`, weights whose quantization error exceeds Δ/2 are
+    quantized immediately (the paper's heuristic).
+    """
+    w = np.asarray(w, dtype=np.float64).copy()
+    hinv = np.asarray(hinv, dtype=np.float64).copy()
+    d = w.shape[0]
+    alive = np.ones(d, dtype=bool)
+    half_delta = scale / 2.0
+    for _ in range(d):
+        q = quant_ref(w, scale, zero, maxq)
+        err = np.abs(q - w)
+        p = -1
+        if outlier:
+            masked = np.where(alive, err, -np.inf)
+            cand = int(np.argmax(masked))
+            if masked[cand] > half_delta:
+                p = cand
+        if p < 0:
+            scores = np.where(
+                alive, (q - w) ** 2 / np.maximum(np.diag(hinv), 1e-30), np.inf
+            )
+            p = int(np.argmin(scores))
+        diag = max(hinv[p, p], 1e-30)
+        f = (w[p] - q[p]) / diag
+        upd = f * hinv[p, :]
+        keep = w[p]
+        w = np.where(alive, w - upd, w)
+        w[p] = quant_ref(np.array([keep]), scale, zero, maxq)[0]
+        alive[p] = False
+        hinv = hinv - np.outer(hinv[:, p], hinv[p, :]) / diag
+        hinv[p, :] = 0.0
+        hinv[:, p] = 0.0
+    return w.astype(np.float32)

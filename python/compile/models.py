@@ -1,0 +1,295 @@
+"""L2 — JAX model zoo (build-time only).
+
+Functional models over flat param dicts whose keys match the Rust
+inference engine's layer names exactly (`rust/src/nn/models.rs`). Weight
+layout conventions (shared with Rust):
+
+* Linear: weight [out, in], bias [out]
+* Conv2d: weight [out, in, kh, kw] (NCHW activations)
+* BatchNorm: gamma/beta/mean/var [ch]  (inference uses running stats)
+* LayerNorm: gamma/beta [d]
+
+Model families (DESIGN.md §2 substitutions):
+
+* MiniResNet-A/B/C  — post-activation residual CNNs on SynthImage
+  (stand-ins for ResNet18/34/50).
+* MiniBERT-2/4/6    — transformer encoders with span-pointer heads on
+  SynthSeq (stand-ins for BERT3/BERT6/BERT-base on SQuAD).
+* TinyDet           — conv detector with a 6x6 cell grid head on SynthDet
+  (stand-in for YOLOv5 on COCO).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+
+# ----------------------------------------------------------------------
+# Model configs
+# ----------------------------------------------------------------------
+
+RESNETS = {
+    "rneta": dict(w0=8, n_blocks=1),   # ~RN18 role
+    "rnetb": dict(w0=8, n_blocks=2),   # ~RN34 role
+    "rnetc": dict(w0=12, n_blocks=2),  # ~RN50 role
+}
+
+BERTS = {
+    "bert2": dict(layers=2),
+    "bert4": dict(layers=4),
+    "bert6": dict(layers=6),
+}
+
+D_MODEL = 64
+N_HEADS = 4
+D_FF = 128
+
+
+# ----------------------------------------------------------------------
+# Primitives
+# ----------------------------------------------------------------------
+
+def conv2d(x, w, stride=1, padding=1):
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def bn_apply(p, prefix, x, state, train: bool, momentum=0.9, eps=1e-5):
+    """BatchNorm over NCHW channel dim; returns (y, new_state)."""
+    g, b = p[f"{prefix}.gamma"], p[f"{prefix}.beta"]
+    if train:
+        mean = jnp.mean(x, axis=(0, 2, 3))
+        var = jnp.var(x, axis=(0, 2, 3))
+        new_state = dict(state)
+        new_state[f"{prefix}.mean"] = momentum * state[f"{prefix}.mean"] + (1 - momentum) * mean
+        new_state[f"{prefix}.var"] = momentum * state[f"{prefix}.var"] + (1 - momentum) * var
+    else:
+        mean, var = state[f"{prefix}.mean"], state[f"{prefix}.var"]
+        new_state = state
+    y = (x - mean[None, :, None, None]) / jnp.sqrt(var[None, :, None, None] + eps)
+    return y * g[None, :, None, None] + b[None, :, None, None], new_state
+
+
+def layernorm(p, prefix, x, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * p[f"{prefix}.gamma"] + p[f"{prefix}.beta"]
+
+
+def linear(p, prefix, x):
+    return x @ p[f"{prefix}.weight"].T + p[f"{prefix}.bias"]
+
+
+def _kaiming(rng, shape, fan_in):
+    return (rng.normal(0, 1, size=shape) * math.sqrt(2.0 / fan_in)).astype(np.float32)
+
+
+# ----------------------------------------------------------------------
+# MiniResNet
+# ----------------------------------------------------------------------
+
+def resnet_init(name: str, seed: int = 0):
+    cfg = RESNETS[name]
+    w0, nb = cfg["w0"], cfg["n_blocks"]
+    rng = np.random.default_rng(seed)
+    p: dict[str, np.ndarray] = {}
+    s: dict[str, np.ndarray] = {}
+
+    def add_conv(pre, cin, cout, k):
+        p[f"{pre}.weight"] = _kaiming(rng, (cout, cin, k, k), cin * k * k)
+
+    def add_bn(pre, ch):
+        p[f"{pre}.gamma"] = np.ones(ch, np.float32)
+        p[f"{pre}.beta"] = np.zeros(ch, np.float32)
+        s[f"{pre}.mean"] = np.zeros(ch, np.float32)
+        s[f"{pre}.var"] = np.ones(ch, np.float32)
+
+    add_conv("stem.conv", 3, w0, 3)
+    add_bn("stem.bn", w0)
+    widths = [w0, 2 * w0, 4 * w0]
+    cin = w0
+    for si, w in enumerate(widths):
+        for bi in range(nb):
+            pre = f"s{si}.b{bi}"
+            add_conv(f"{pre}.conv1", cin if bi == 0 else w, w, 3)
+            add_bn(f"{pre}.bn1", w)
+            add_conv(f"{pre}.conv2", w, w, 3)
+            add_bn(f"{pre}.bn2", w)
+            if bi == 0 and (si > 0 or cin != w):
+                add_conv(f"{pre}.down.conv", cin, w, 1)
+                add_bn(f"{pre}.down.bn", w)
+        cin = w
+    p["fc.weight"] = _kaiming(rng, (D.N_CLASSES, widths[-1]), widths[-1])
+    p["fc.bias"] = np.zeros(D.N_CLASSES, np.float32)
+    return p, s
+
+
+def resnet_forward(name: str, p, state, x, train: bool):
+    cfg = RESNETS[name]
+    w0, nb = cfg["w0"], cfg["n_blocks"]
+    st = state
+    h = conv2d(x, p["stem.conv.weight"], 1, 1)
+    h, st = bn_apply(p, "stem.bn", h, st, train)
+    h = jax.nn.relu(h)
+    widths = [w0, 2 * w0, 4 * w0]
+    for si, _w in enumerate(widths):
+        for bi in range(nb):
+            pre = f"s{si}.b{bi}"
+            stride = 2 if (si > 0 and bi == 0) else 1
+            y = conv2d(h, p[f"{pre}.conv1.weight"], stride, 1)
+            y, st = bn_apply(p, f"{pre}.bn1", y, st, train)
+            y = jax.nn.relu(y)
+            y = conv2d(y, p[f"{pre}.conv2.weight"], 1, 1)
+            y, st = bn_apply(p, f"{pre}.bn2", y, st, train)
+            if f"{pre}.down.conv.weight" in p:
+                sc = conv2d(h, p[f"{pre}.down.conv.weight"], stride, 0)
+                sc, st = bn_apply(p, f"{pre}.down.bn", sc, st, train)
+            else:
+                sc = h
+            h = jax.nn.relu(y + sc)
+    h = jnp.mean(h, axis=(2, 3))  # global average pool
+    logits = linear(p, "fc", h)
+    return logits, st
+
+
+# ----------------------------------------------------------------------
+# MiniBERT
+# ----------------------------------------------------------------------
+
+def bert_init(name: str, seed: int = 0):
+    layers = BERTS[name]["layers"]
+    rng = np.random.default_rng(seed + 10)
+    p: dict[str, np.ndarray] = {}
+
+    def lin(pre, dout, din):
+        p[f"{pre}.weight"] = (rng.normal(0, 0.02, size=(dout, din))).astype(np.float32)
+        p[f"{pre}.bias"] = np.zeros(dout, np.float32)
+
+    p["embed.tok"] = (rng.normal(0, 0.02, size=(D.VOCAB, D_MODEL))).astype(np.float32)
+    p["embed.pos"] = (rng.normal(0, 0.02, size=(D.SEQ_LEN, D_MODEL))).astype(np.float32)
+    for li in range(layers):
+        pre = f"l{li}"
+        p[f"{pre}.ln1.gamma"] = np.ones(D_MODEL, np.float32)
+        p[f"{pre}.ln1.beta"] = np.zeros(D_MODEL, np.float32)
+        lin(f"{pre}.attn.wq", D_MODEL, D_MODEL)
+        lin(f"{pre}.attn.wk", D_MODEL, D_MODEL)
+        lin(f"{pre}.attn.wv", D_MODEL, D_MODEL)
+        lin(f"{pre}.attn.wo", D_MODEL, D_MODEL)
+        p[f"{pre}.ln2.gamma"] = np.ones(D_MODEL, np.float32)
+        p[f"{pre}.ln2.beta"] = np.zeros(D_MODEL, np.float32)
+        lin(f"{pre}.ff.w1", D_FF, D_MODEL)
+        lin(f"{pre}.ff.w2", D_MODEL, D_FF)
+    lin("head.span", 2, D_MODEL)
+    return p, {}
+
+
+def bert_forward(name: str, p, state, toks, train: bool):
+    layers = BERTS[name]["layers"]
+    del train
+    x = p["embed.tok"][toks] + p["embed.pos"][None, :, :]
+    for li in range(layers):
+        pre = f"l{li}"
+        h = layernorm(p, f"{pre}.ln1", x)
+        q = linear(p, f"{pre}.attn.wq", h)
+        k = linear(p, f"{pre}.attn.wk", h)
+        v = linear(p, f"{pre}.attn.wv", h)
+        B, S, _ = q.shape
+        hd = D_MODEL // N_HEADS
+        def split(t):
+            return t.reshape(B, S, N_HEADS, hd).transpose(0, 2, 1, 3)
+        qh, kh, vh = split(q), split(k), split(v)
+        att = jnp.einsum("bhsd,bhtd->bhst", qh, kh) / math.sqrt(hd)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhst,bhtd->bhsd", att, vh)
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, D_MODEL)
+        x = x + linear(p, f"{pre}.attn.wo", o)
+        h = layernorm(p, f"{pre}.ln2", x)
+        h = jax.nn.gelu(linear(p, f"{pre}.ff.w1", h), approximate=True)
+        x = x + linear(p, f"{pre}.ff.w2", h)
+    span = linear(p, "head.span", x)  # [B, S, 2]
+    return (span[:, :, 0], span[:, :, 1]), state  # start/end logits
+
+
+# ----------------------------------------------------------------------
+# TinyDet
+# ----------------------------------------------------------------------
+
+def det_init(seed: int = 0):
+    rng = np.random.default_rng(seed + 20)
+    p: dict[str, np.ndarray] = {}
+    s: dict[str, np.ndarray] = {}
+
+    def add_conv(pre, cin, cout, k):
+        p[f"{pre}.weight"] = _kaiming(rng, (cout, cin, k, k), cin * k * k)
+
+    def add_bn(pre, ch):
+        p[f"{pre}.gamma"] = np.ones(ch, np.float32)
+        p[f"{pre}.beta"] = np.zeros(ch, np.float32)
+        s[f"{pre}.mean"] = np.zeros(ch, np.float32)
+        s[f"{pre}.var"] = np.ones(ch, np.float32)
+
+    add_conv("c1.conv", 3, 16, 3)
+    add_bn("c1.bn", 16)
+    add_conv("c2.conv", 16, 32, 3)
+    add_bn("c2.bn", 32)
+    add_conv("c3.conv", 32, 32, 3)
+    add_bn("c3.bn", 32)
+    add_conv("head.conv", 32, 1 + D.DET_CLASSES, 1)
+    p["head.bias"] = np.zeros(1 + D.DET_CLASSES, np.float32)
+    return p, s
+
+
+def det_forward(p, state, x, train: bool):
+    st = state
+    h = conv2d(x, p["c1.conv.weight"], 1, 1)
+    h, st = bn_apply(p, "c1.bn", h, st, train)
+    h = jax.nn.relu(h)
+    h = conv2d(h, p["c2.conv.weight"], 2, 1)
+    h, st = bn_apply(p, "c2.bn", h, st, train)
+    h = jax.nn.relu(h)
+    h = conv2d(h, p["c3.conv.weight"], 2, 1)
+    h, st = bn_apply(p, "c3.bn", h, st, train)
+    h = jax.nn.relu(h)
+    logits = conv2d(h, p["head.conv.weight"], 1, 0) + p["head.bias"][None, :, None, None]
+    return logits, st  # [B, 1+C, 6, 6]
+
+
+# ----------------------------------------------------------------------
+# Dispatch
+# ----------------------------------------------------------------------
+
+def init_model(name: str, seed: int = 0):
+    if name in RESNETS:
+        return resnet_init(name, seed)
+    if name in BERTS:
+        return bert_init(name, seed)
+    if name == "tinydet":
+        return det_init(seed)
+    raise ValueError(name)
+
+
+def forward(name: str, p, state, x, train: bool):
+    if name in RESNETS:
+        return resnet_forward(name, p, state, x, train)
+    if name in BERTS:
+        return bert_forward(name, p, state, x, train)
+    if name == "tinydet":
+        return det_forward(p, state, x, train)
+    raise ValueError(name)
+
+
+def task_of(name: str) -> str:
+    if name in RESNETS:
+        return "image"
+    if name in BERTS:
+        return "seq"
+    return "det"

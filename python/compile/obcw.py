@@ -1,0 +1,47 @@
+"""Python writer/reader for the `.obcw` tensor container.
+
+Must stay bit-compatible with `rust/src/util/io.rs` (format spec there).
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"OBCW"
+
+
+def save_obcw(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in sorted(tensors.items()):
+            a = np.ascontiguousarray(arr, dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", a.ndim))
+            for d in a.shape:
+                f.write(struct.pack("<I", d))
+            f.write(struct.pack("<I", 0))  # dtype f32
+            f.write(a.tobytes())
+
+
+def load_obcw(path: str) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == 1
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            (ndim,) = struct.unpack("<I", f.read(4))
+            shape = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            (dtype,) = struct.unpack("<I", f.read(4))
+            assert dtype == 0
+            n = int(np.prod(shape)) if ndim else 1
+            data = np.frombuffer(f.read(4 * n), dtype="<f4").reshape(shape)
+            out[name] = data.copy()
+    return out

@@ -1,0 +1,229 @@
+"""Build-time training of the substitute models (python -m compile.train).
+
+Trains every model in the zoo on its synthetic task with hand-rolled Adam
+(no optax in this environment), then writes per-model `.obcw` bundles
+containing weights + BN state + calibration and test splits, plus a
+`manifest.json` with the dense reference metrics the Rust experiments
+compare against.
+
+This is the ONLY training in the whole project and it runs once, at
+`make artifacts` time. The Rust side never trains anything.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import models as M
+from .obcw import save_obcw
+
+N_TRAIN = 4096
+N_TRAIN_SEQ = 20480  # span task needs more data to force rule learning
+N_CALIB = 1024
+N_TEST = 1024
+BATCH = 64
+
+
+def adam_init(params):
+    return {
+        "m": jax.tree.map(jnp.zeros_like, params),
+        "v": jax.tree.map(jnp.zeros_like, params),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_update(params, grads, opt, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
+    t = opt["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    mhat_s = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_s = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    new = jax.tree.map(
+        lambda p_, m_, v_: p_ - lr * ((m_ * mhat_s) / (jnp.sqrt(v_ * vhat_s) + eps) + wd * p_),
+        params, m, v,
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def loss_fn(name, params, state, xb, yb):
+    if name in M.RESNETS:
+        logits, st = M.forward(name, params, state, xb, True)
+        ll = jax.nn.log_softmax(logits)
+        loss = -jnp.mean(ll[jnp.arange(xb.shape[0]), yb])
+        return loss, st
+    if name in M.BERTS:
+        (s_log, e_log), st = M.forward(name, params, state, xb, True)
+        starts, ends = yb
+        ls = jax.nn.log_softmax(s_log, axis=-1)
+        le = jax.nn.log_softmax(e_log, axis=-1)
+        n = xb.shape[0]
+        loss = -jnp.mean(ls[jnp.arange(n), starts] + le[jnp.arange(n), ends]) / 2
+        return loss, st
+    # tinydet: per-cell cross entropy
+    logits, st = M.forward(name, params, state, xb, True)
+    ll = jax.nn.log_softmax(logits, axis=1)  # [B, 1+C, G, G]
+    onehot = jax.nn.one_hot(yb, 1 + D.DET_CLASSES).transpose(0, 3, 1, 2)
+    loss = -jnp.mean(jnp.sum(ll * onehot, axis=1))
+    return loss, st
+
+
+def metric_fn(name, params, state, xb, yb) -> float:
+    if name in M.RESNETS:
+        logits, _ = M.forward(name, params, state, xb, False)
+        return float(jnp.mean(jnp.argmax(logits, -1) == yb) * 100)
+    if name in M.BERTS:
+        (s_log, e_log), _ = M.forward(name, params, state, xb, False)
+        starts, ends = yb
+        ps, pe = jnp.argmax(s_log, -1), jnp.argmax(e_log, -1)
+        # Span F1: token-level overlap between predicted and gold spans.
+        f1s = []
+        for i in range(xb.shape[0]):
+            a0, a1 = int(ps[i]), int(pe[i])
+            if a1 < a0:
+                a0, a1 = a1, a0
+            g0, g1 = int(starts[i]), int(ends[i])
+            pred = set(range(a0, a1 + 1))
+            gold = set(range(g0, g1 + 1))
+            inter = len(pred & gold)
+            if inter == 0:
+                f1s.append(0.0)
+            else:
+                prec, rec = inter / len(pred), inter / len(gold)
+                f1s.append(2 * prec * rec / (prec + rec))
+        return float(np.mean(f1s) * 100)
+    # tinydet: cell accuracy on object cells + background precision → F1.
+    logits, _ = M.forward(name, params, state, xb, False)
+    pred = jnp.argmax(logits, axis=1)  # [B, G, G]
+    obj = yb > 0
+    tp = float(jnp.sum((pred == yb) & obj))
+    fp = float(jnp.sum((pred > 0) & ~obj)) + float(jnp.sum((pred != yb) & obj & (pred > 0)))
+    fn = float(jnp.sum((pred == 0) & obj))
+    prec = tp / max(tp + fp, 1e-9)
+    rec = tp / max(tp + fn, 1e-9)
+    return 200 * prec * rec / max(prec + rec, 1e-9)
+
+
+def get_batches(name, split, n):
+    task = M.task_of(name)
+    raw = D.dataset(task, split, n)
+    if task == "image" or task == "det":
+        return raw
+    return raw  # (toks, starts, ends)
+
+
+def train_model(name: str, epochs: int, lr: float, out_dir: str) -> dict:
+    t0 = time.time()
+    params, state = M.init_model(name, seed=0)
+    params = {k: jnp.asarray(v) for k, v in params.items()}
+    state = {k: jnp.asarray(v) for k, v in state.items()}
+    opt = adam_init(params)
+    task = M.task_of(name)
+
+    train = get_batches(name, "train", N_TRAIN_SEQ if task == "seq" else N_TRAIN)
+    test = get_batches(name, "test", N_TEST)
+
+    wd = 0.02 if task == "seq" else 0.0
+
+    @jax.jit
+    def step(params, state, opt, xb, yb):
+        (loss, st), grads = jax.value_and_grad(
+            lambda p: loss_fn(name, p, state, xb, yb), has_aux=True
+        )(params)
+        params, opt = adam_update(params, grads, opt, lr, wd=wd)
+        return params, st, opt, loss
+
+    rng = np.random.default_rng(7)
+    n = N_TRAIN_SEQ if task == "seq" else N_TRAIN
+    for ep in range(epochs):
+        perm = rng.permutation(n)
+        losses = []
+        for i in range(0, n - BATCH + 1, BATCH):
+            idx = perm[i : i + BATCH]
+            if task == "image" or task == "det":
+                xb, yb = jnp.asarray(train[0][idx]), jnp.asarray(train[1][idx])
+            else:
+                xb = jnp.asarray(train[0][idx])
+                yb = (jnp.asarray(train[1][idx]), jnp.asarray(train[2][idx]))
+            params, state, opt, loss = step(params, state, opt, xb, yb)
+            losses.append(float(loss))
+        if ep % 2 == 0 or ep == epochs - 1:
+            if task == "seq":
+                xb = jnp.asarray(test[0][:256])
+                yb = (test[1][:256], test[2][:256])
+            else:
+                xb, yb = jnp.asarray(test[0][:256]), jnp.asarray(test[1][:256])
+            m = metric_fn(name, params, state, xb, yb)
+            print(f"[{name}] epoch {ep}: loss {np.mean(losses):.4f} metric {m:.2f}")
+
+    # Final full-test metric (in batches to bound memory).
+    metrics = []
+    for i in range(0, N_TEST, 256):
+        if task == "seq":
+            xb = jnp.asarray(test[0][i : i + 256])
+            yb = (test[1][i : i + 256], test[2][i : i + 256])
+        else:
+            xb = jnp.asarray(test[0][i : i + 256])
+            yb = jnp.asarray(test[1][i : i + 256])
+        metrics.append(metric_fn(name, params, state, xb, yb))
+    dense_metric = float(np.mean(metrics))
+
+    # Bundle weights + state + calib + test splits.
+    calib = get_batches(name, "calib", N_CALIB)
+    bundle: dict[str, np.ndarray] = {}
+    for k, v in params.items():
+        bundle[f"param.{k}"] = np.asarray(v)
+    for k, v in state.items():
+        bundle[f"state.{k}"] = np.asarray(v)
+    if task == "seq":
+        bundle["data.calib.x"] = calib[0].astype(np.float32)
+        bundle["data.calib.y0"] = calib[1].astype(np.float32)
+        bundle["data.calib.y1"] = calib[2].astype(np.float32)
+        bundle["data.test.x"] = test[0].astype(np.float32)
+        bundle["data.test.y0"] = test[1].astype(np.float32)
+        bundle["data.test.y1"] = test[2].astype(np.float32)
+    else:
+        bundle["data.calib.x"] = calib[0].astype(np.float32)
+        bundle["data.calib.y"] = calib[1].astype(np.float32)
+        bundle["data.test.x"] = test[0].astype(np.float32)
+        bundle["data.test.y"] = test[1].astype(np.float32)
+    path = os.path.join(out_dir, f"{name}.obcw")
+    save_obcw(path, bundle)
+    dt = time.time() - t0
+    print(f"[{name}] dense metric {dense_metric:.2f}  ({dt:.0f}s) -> {path}")
+    return {"model": name, "dense_metric": dense_metric, "train_seconds": dt}
+
+
+EPOCHS = {
+    "rneta": 14, "rnetb": 12, "rnetc": 12,
+    "bert2": 16, "bert4": 14, "bert6": 12,
+    "tinydet": 12,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--models", default="all")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    names = list(EPOCHS) if args.models == "all" else args.models.split(",")
+    results = []
+    for name in names:
+        lr = 3e-3 if M.task_of(name) != "seq" else 2e-3
+        results.append(train_model(name, EPOCHS[name], lr, args.out))
+    manifest_path = os.path.join(args.out, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump({"models": results}, f, indent=2)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

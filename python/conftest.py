@@ -1,0 +1,8 @@
+"""Make `compile.*` importable when pytest runs from the repo root
+(`pytest python/tests/`) as well as from `python/` (`cd python && pytest
+tests/`, which the Makefile uses)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

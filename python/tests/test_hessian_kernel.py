@@ -1,0 +1,48 @@
+"""Pallas hessian kernel vs oracle + tiling invariances."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.hessian import hessian
+from compile.kernels.ref import hessian_ref
+
+
+@pytest.mark.parametrize("d,n", [(16, 8), (32, 64), (64, 128)])
+def test_matches_ref(d, n):
+    rng = np.random.default_rng(d + n)
+    x = rng.normal(size=(d, n)).astype(np.float32)
+    out = np.asarray(hessian(jnp.asarray(x), bt=16))
+    np.testing.assert_allclose(out, hessian_ref(x), rtol=1e-4, atol=1e-4)
+
+
+def test_symmetric_and_psd_diag():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(32, 48)).astype(np.float32)
+    h = np.asarray(hessian(jnp.asarray(x), bt=16))
+    np.testing.assert_allclose(h, h.T, atol=1e-5)
+    assert (np.diag(h) >= 0).all()
+
+
+def test_tile_size_invariant():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(64, 32)).astype(np.float32)
+    h16 = np.asarray(hessian(jnp.asarray(x), bt=16))
+    h32 = np.asarray(hessian(jnp.asarray(x), bt=32))
+    h64 = np.asarray(hessian(jnp.asarray(x), bt=64))
+    np.testing.assert_allclose(h16, h32, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(h16, h64, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    d=st.sampled_from([16, 32, 48]),
+    n=st.integers(4, 96),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_hypothesis_scales_and_shapes(d, n, scale):
+    rng = np.random.default_rng(d * 1000 + n)
+    x = (scale * rng.normal(size=(d, n))).astype(np.float32)
+    out = np.asarray(hessian(jnp.asarray(x), bt=16))
+    np.testing.assert_allclose(out, hessian_ref(x), rtol=2e-4, atol=2e-4 * scale**2)

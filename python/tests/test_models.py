@@ -1,0 +1,91 @@
+"""L2 model sanity: shapes, determinism, trainability signals, obcw IO."""
+
+import os
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import data as D
+from compile import models as M
+from compile.obcw import load_obcw, save_obcw
+
+
+@pytest.mark.parametrize("name", list(M.RESNETS))
+def test_resnet_shapes(name):
+    p, s = M.init_model(name, seed=0)
+    p = {k: jnp.asarray(v) for k, v in p.items()}
+    s = {k: jnp.asarray(v) for k, v in s.items()}
+    x = jnp.zeros((2, 3, D.IMG, D.IMG), jnp.float32)
+    logits, _ = M.forward(name, p, s, x, False)
+    assert logits.shape == (2, D.N_CLASSES)
+
+
+@pytest.mark.parametrize("name", list(M.BERTS))
+def test_bert_shapes(name):
+    p, s = M.init_model(name, seed=0)
+    p = {k: jnp.asarray(v) for k, v in p.items()}
+    toks = jnp.zeros((2, D.SEQ_LEN), jnp.int32)
+    (s_log, e_log), _ = M.forward(name, p, s, toks, False)
+    assert s_log.shape == (2, D.SEQ_LEN)
+    assert e_log.shape == (2, D.SEQ_LEN)
+
+
+def test_det_shapes():
+    p, s = M.init_model("tinydet", seed=0)
+    p = {k: jnp.asarray(v) for k, v in p.items()}
+    s = {k: jnp.asarray(v) for k, v in s.items()}
+    x = jnp.zeros((2, 3, D.IMG, D.IMG), jnp.float32)
+    logits, _ = M.forward("tinydet", p, s, x, False)
+    assert logits.shape == (2, 1 + D.DET_CLASSES, D.GRID, D.GRID)
+
+
+def test_datasets_deterministic():
+    a = D.dataset("image", "calib", 8)
+    b = D.dataset("image", "calib", 8)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    # Splits differ.
+    c = D.dataset("image", "test", 8)
+    assert not np.array_equal(a[0], c[0])
+
+
+def test_seq_spans_are_consistent():
+    toks, starts, ends = D.dataset("seq", "calib", 64)
+    for i in range(64):
+        s, e = int(starts[i]), int(ends[i])
+        assert 3 <= s <= e < D.SEQ_LEN
+        # Question prefix: [MARKER, key, MARKER].
+        assert toks[i, 0] == D.MARKER and toks[i, 2] == D.MARKER
+        key = int(toks[i, 1])
+        # The span is a run of the key with at most one corrupted token
+        # (evidence corruption, |corrupted - key| == 1).
+        span = toks[i, s : e + 1]
+        bad = [t for t in span if t != key]
+        assert len(bad) <= 1
+        for t in bad:
+            assert abs(int(t) - key) == 1
+
+
+def test_det_grid_labels_in_range():
+    _, grids = D.dataset("det", "calib", 32)
+    assert grids.min() >= 0
+    assert grids.max() <= D.DET_CLASSES
+    # Every image has 1..3 objects.
+    counts = (grids > 0).sum(axis=(1, 2))
+    assert counts.min() >= 1 and counts.max() <= 3
+
+
+def test_obcw_roundtrip():
+    tensors = {
+        "a.weight": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b.bias": np.array([-1.5, 2.5], dtype=np.float32),
+    }
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "t.obcw")
+        save_obcw(path, tensors)
+        back = load_obcw(path)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])

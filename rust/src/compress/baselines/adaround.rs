@@ -1,0 +1,166 @@
+//! AdaRound [Nagel et al., 2020] — adaptive rounding.
+//!
+//! AdaRound keeps the quantization grid fixed and learns, per weight,
+//! whether to round *up or down* so that the layer reconstruction error
+//! is minimized (weights may not move further than one grid step). The
+//! reference implementation relaxes this discrete choice with a
+//! rectified-sigmoid + annealed regularizer and optimizes with Adam; we
+//! solve the same discrete problem directly with greedy coordinate
+//! descent over the binary up/down choices using the exact Hessian
+//! quadratic form — the discrete optimum its relaxation approximates.
+
+use crate::compress::hessian::LayerHessian;
+use crate::compress::quant::{fit_grids_per_row, Grid, GridSearch};
+use crate::compress::CompressResult;
+use crate::linalg::Mat;
+
+/// Options.
+#[derive(Debug, Clone)]
+pub struct AdaRoundOpts {
+    pub bits: u32,
+    pub symmetric: bool,
+    pub search: GridSearch,
+    pub passes: usize,
+}
+
+impl AdaRoundOpts {
+    pub fn new(bits: u32) -> AdaRoundOpts {
+        AdaRoundOpts { bits, symmetric: false, search: GridSearch::default(), passes: 10 }
+    }
+}
+
+/// Quantize with learned rounding.
+pub fn quantize(w: &Mat, hess: &LayerHessian, opts: &AdaRoundOpts) -> CompressResult {
+    let grids = fit_grids_per_row(w, opts.bits, opts.symmetric, opts.search);
+    let mut out = w.clone();
+    for r in 0..w.rows {
+        let q = optimize_rounding(w.row(r), &hess.h, &grids[r], opts.passes);
+        out.row_mut(r).copy_from_slice(&q);
+    }
+    let err = crate::compress::layer_sq_err(w, &out, &hess.h);
+    CompressResult::new(out, err)
+}
+
+/// Binary search space: each weight's code is floor(w/s+z) or that +1
+/// (clamped). Coordinate descent with incremental g = H·Δw updates.
+fn optimize_rounding(w: &[f64], h: &Mat, grid: &Grid, passes: usize) -> Vec<f64> {
+    let d = w.len();
+    let s = grid.delta();
+    if s == 0.0 {
+        return w.to_vec();
+    }
+    let floor_code =
+        |v: f64| -> f64 { (v / grid.scale + grid.zero).floor().clamp(0.0, grid.maxq) };
+    let up_code = |v: f64| -> f64 { (floor_code(v) + 1.0).min(grid.maxq) };
+    let wq = |c: f64| grid.scale * (c - grid.zero);
+
+    // Start from nearest rounding expressed as up/down bits.
+    let mut up: Vec<bool> = w
+        .iter()
+        .map(|&v| {
+            let fc = floor_code(v);
+            let nearest = (v / grid.scale + grid.zero).round().clamp(0.0, grid.maxq);
+            nearest > fc
+        })
+        .collect();
+    let code = |v: f64, u: bool| if u { up_code(v) } else { floor_code(v) };
+    let mut dw: Vec<f64> = w.iter().zip(&up).map(|(&v, &u)| wq(code(v, u)) - v).collect();
+    let mut g = h.matvec(&dw);
+    for _ in 0..passes {
+        let mut improved = false;
+        for p in 0..d {
+            let cur = code(w[p], up[p]);
+            let alt = code(w[p], !up[p]);
+            if alt == cur {
+                continue; // clamped: both choices identical
+            }
+            let step = wq(alt) - wq(cur);
+            let de = step * g[p] + 0.5 * step * step * h.at(p, p);
+            if de < -1e-15 {
+                up[p] = !up[p];
+                dw[p] += step;
+                for j in 0..d {
+                    g[j] += step * h.at(j, p);
+                }
+                improved = true;
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    w.iter().zip(&up).map(|(&v, &u)| wq(code(v, u))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::layer_sq_err;
+    use crate::compress::quant::rtn;
+
+    fn setup(seed: u64) -> (Mat, LayerHessian) {
+        let w = Mat::randn(4, 16, seed);
+        let x = Mat::randn(16, 48, seed + 100);
+        (w, LayerHessian::from_inputs(&x, 1e-8))
+    }
+
+    #[test]
+    fn stays_within_one_step_of_value() {
+        let (w, h) = setup(1);
+        let opts = AdaRoundOpts::new(3);
+        let res = quantize(&w, &h, &opts);
+        let grids = fit_grids_per_row(&w, 3, false, opts.search);
+        for r in 0..4 {
+            for c in 0..16 {
+                let v = w.at(r, c);
+                let q = res.w.at(r, c);
+                // AdaRound's constraint: q ∈ {floor, ceil} of v on the grid
+                // ⇒ |q − clamp(v)| ≤ Δ.
+                let clamped = v
+                    .max(grids[r].scale * (0.0 - grids[r].zero))
+                    .min(grids[r].scale * (grids[r].maxq - grids[r].zero));
+                assert!(
+                    (q - clamped).abs() <= grids[r].scale + 1e-9,
+                    "({r},{c}): v={v} q={q}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn beats_rtn() {
+        for seed in 0..5u64 {
+            let (w, h) = setup(10 + seed);
+            let opts = AdaRoundOpts::new(2);
+            let res = quantize(&w, &h, &opts);
+            let grids = fit_grids_per_row(&w, 2, false, opts.search);
+            let mut rw = w.clone();
+            for r in 0..4 {
+                let q = rtn(w.row(r), &grids[r]);
+                rw.row_mut(r).copy_from_slice(&q);
+            }
+            let rtn_err = layer_sq_err(&w, &rw, &h.h);
+            assert!(res.sq_err <= rtn_err + 1e-9, "seed {seed}");
+        }
+    }
+
+    /// AdaQuant (free codes) must be at least as good as AdaRound
+    /// (rounding-constrained) on the same objective when both converge;
+    /// but at very low bits AdaQuant's landscape has worse local minima —
+    /// the paper's Table 4 shows AdaRound ≫ AdaQuant at 2 bits. Here we
+    /// just check both are sane relative to RTN and each other's order of
+    /// magnitude.
+    #[test]
+    fn sane_relative_to_adaquant() {
+        let (w, h) = setup(77);
+        let ar = quantize(&w, &h, &AdaRoundOpts::new(4)).sq_err;
+        let aq = crate::compress::baselines::adaquant::quantize(
+            &w,
+            &h,
+            &crate::compress::baselines::adaquant::AdaQuantOpts::new(4),
+        )
+        .sq_err;
+        assert!(ar.is_finite() && aq.is_finite());
+        assert!(ar < 100.0 * aq.max(1e-12) && aq < 100.0 * ar.max(1e-12));
+    }
+}

@@ -1,0 +1,142 @@
+//! Magnitude pruning — the classic baseline [45].
+//!
+//! "Global" magnitude pruning (the paper's GMP row) selects one magnitude
+//! threshold across the whole model; the per-layer entry point here takes
+//! a pre-computed threshold or a per-layer sparsity. No reoptimization of
+//! the surviving weights is performed — that is what separates GMP from
+//! AdaPrune.
+
+use crate::compress::hessian::LayerHessian;
+use crate::compress::CompressResult;
+use crate::linalg::Mat;
+
+/// Prune the k smallest-magnitude weights of the matrix (layer-local).
+pub fn prune_by_count(w: &Mat, hess: &LayerHessian, k: usize) -> CompressResult {
+    let mut idx: Vec<usize> = (0..w.data.len()).collect();
+    idx.sort_by(|&a, &b| w.data[a].abs().partial_cmp(&w.data[b].abs()).unwrap());
+    let mut out = w.clone();
+    for &i in idx.iter().take(k) {
+        out.data[i] = 0.0;
+    }
+    let err = crate::compress::layer_sq_err(w, &out, &hess.h);
+    CompressResult::new(out, err)
+}
+
+/// Prune to a target sparsity (layer-local magnitude).
+pub fn prune(w: &Mat, hess: &LayerHessian, sparsity: f64) -> CompressResult {
+    let k = (w.data.len() as f64 * sparsity).round() as usize;
+    prune_by_count(w, hess, k)
+}
+
+/// Prune every weight with |w| below `threshold` (the global-GMP form:
+/// the coordinator computes one threshold over all layers' weights).
+pub fn prune_by_threshold(w: &Mat, hess: &LayerHessian, threshold: f64) -> CompressResult {
+    let mut out = w.clone();
+    for v in out.data.iter_mut() {
+        if v.abs() < threshold {
+            *v = 0.0;
+        }
+    }
+    let err = crate::compress::layer_sq_err(w, &out, &hess.h);
+    CompressResult::new(out, err)
+}
+
+/// Compute the global magnitude threshold that achieves `sparsity` over a
+/// set of weight matrices (model-level GMP).
+pub fn global_threshold(mats: &[&Mat], sparsity: f64) -> f64 {
+    let mut all: Vec<f64> = mats
+        .iter()
+        .flat_map(|m| m.data.iter().map(|v| v.abs()))
+        .collect();
+    if all.is_empty() {
+        return 0.0;
+    }
+    let k = ((all.len() as f64) * sparsity).round() as usize;
+    if k == 0 {
+        return 0.0;
+    }
+    let k = k.min(all.len() - 1);
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Threshold strictly above the k-th smallest magnitude.
+    all[k.saturating_sub(1)] + f64::MIN_POSITIVE
+}
+
+/// N:M magnitude pruning: in each aligned block of M, zero the M−N
+/// smallest-magnitude weights (the AdaPrune selection rule, exposed here
+/// for reuse).
+pub fn nm_magnitude_mask(w_row: &[f64], n_keep: usize, m: usize) -> Vec<usize> {
+    let d = w_row.len();
+    let mut pruned = Vec::new();
+    let mut b = 0;
+    while b < d {
+        let end = (b + m).min(d);
+        let blk: Vec<usize> = (b..end).collect();
+        let keep = n_keep.min(blk.len());
+        let mut sorted = blk.clone();
+        sorted.sort_by(|&x, &y| w_row[x].abs().partial_cmp(&w_row[y].abs()).unwrap());
+        pruned.extend_from_slice(&sorted[..blk.len() - keep]);
+        b = end;
+    }
+    pruned
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(seed: u64) -> (Mat, LayerHessian) {
+        let w = Mat::randn(4, 12, seed);
+        (w.clone(), LayerHessian::synthetic(12, seed + 1))
+    }
+
+    #[test]
+    fn prunes_smallest() {
+        let (w, h) = setup(1);
+        let r = prune(&w, &h, 0.5);
+        let kept_min = r
+            .w
+            .data
+            .iter()
+            .zip(&w.data)
+            .filter(|(o, _)| **o != 0.0)
+            .map(|(_, d)| d.abs())
+            .fold(f64::INFINITY, f64::min);
+        let dropped_max = r
+            .w
+            .data
+            .iter()
+            .zip(&w.data)
+            .filter(|(o, _)| **o == 0.0)
+            .map(|(_, d)| d.abs())
+            .fold(0.0f64, f64::max);
+        assert!(kept_min >= dropped_max);
+        assert!((r.sparsity - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn global_threshold_hits_sparsity() {
+        let a = Mat::randn(8, 8, 2);
+        let b = Mat::randn(4, 16, 3);
+        let th = global_threshold(&[&a, &b], 0.4);
+        let total = 64 + 64;
+        let zeroed = a
+            .data
+            .iter()
+            .chain(&b.data)
+            .filter(|v| v.abs() < th)
+            .count();
+        let got = zeroed as f64 / total as f64;
+        assert!((got - 0.4).abs() < 0.02, "got {got}");
+    }
+
+    #[test]
+    fn nm_mask_valid() {
+        let w = Mat::randn(1, 16, 4);
+        let pruned = nm_magnitude_mask(w.row(0), 2, 4);
+        assert_eq!(pruned.len(), 8);
+        for b in 0..4 {
+            let in_block = pruned.iter().filter(|&&p| p / 4 == b).count();
+            assert_eq!(in_block, 2);
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! L-OBS [Dong, Chen & Pan, 2017] — layer-wise OBS with a **single**
+//! Hessian computation.
+//!
+//! Scores and compensations all come from the initial H⁻¹: the k weights
+//! with the smallest w_p²/[H⁻¹]ₚₚ are pruned together, each contributing
+//! its individual OBS update δ_p = −(w_p/[H⁻¹]ₚₚ)·H⁻¹:,ₚ, with no
+//! recomputation in between. This is the approximation ExactOBS removes,
+//! and the gap between the two is exactly what the paper's Figure 1 shows.
+
+use crate::compress::hessian::LayerHessian;
+use crate::compress::CompressResult;
+use crate::linalg::Mat;
+
+/// Prune the matrix to `sparsity` with single-shot L-OBS.
+pub fn prune(w: &Mat, hess: &LayerHessian, sparsity: f64) -> CompressResult {
+    let d = w.cols;
+    let hinv = &hess.hinv;
+    // Score every weight from the single initial H⁻¹.
+    let mut scored: Vec<(f64, usize, usize)> = Vec::with_capacity(w.rows * d);
+    for r in 0..w.rows {
+        let row = w.row(r);
+        for p in 0..d {
+            let s = row[p] * row[p] / hinv.at(p, p).max(1e-300);
+            scored.push((s, r, p));
+        }
+    }
+    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let k = ((w.rows * d) as f64 * sparsity).round() as usize;
+
+    // Accumulate the independent compensations per row, then zero the mask.
+    let mut out = w.clone();
+    let mut pruned_per_row: Vec<Vec<usize>> = vec![Vec::new(); w.rows];
+    for &(_, r, p) in scored.iter().take(k) {
+        pruned_per_row[r].push(p);
+    }
+    for r in 0..w.rows {
+        if pruned_per_row[r].is_empty() {
+            continue;
+        }
+        let orig = w.row(r).to_vec();
+        let row = out.row_mut(r);
+        for &p in &pruned_per_row[r] {
+            let f = orig[p] / hinv.at(p, p).max(1e-300);
+            for j in 0..d {
+                row[j] -= f * hinv.at(p, j);
+            }
+        }
+        for &p in &pruned_per_row[r] {
+            row[p] = 0.0;
+        }
+    }
+    let err = crate::compress::layer_sq_err(w, &out, &hess.h);
+    CompressResult::new(out, err)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::exact_obs;
+
+    #[test]
+    fn hits_target_sparsity() {
+        let w = Mat::randn(4, 16, 1);
+        let h = LayerHessian::synthetic(16, 2);
+        let r = prune(&w, &h, 0.5);
+        assert!((r.sparsity - 0.5).abs() < 1e-9);
+    }
+
+    /// On correlated inputs ExactOBS must beat L-OBS (this ordering is the
+    /// core of the paper's Figure 1).
+    #[test]
+    fn exact_obs_beats_lobs() {
+        let mut exact_wins = 0;
+        for seed in 0..6u64 {
+            // Correlated inputs: mix a common component in.
+            let base = Mat::randn(1, 48, seed * 3 + 1);
+            let mut x = Mat::randn(16, 48, seed * 3 + 2);
+            for r in 0..16 {
+                for c in 0..48 {
+                    *x.at_mut(r, c) += 0.9 * base.at(0, c);
+                }
+            }
+            let h = LayerHessian::from_inputs(&x, 1e-8);
+            let w = Mat::randn(4, 16, seed * 3 + 3);
+            let lobs_err = prune(&w, &h, 0.6).sq_err;
+            let exact_err =
+                exact_obs::prune_unstructured(&w, &h, 0.6, &Default::default()).sq_err;
+            if exact_err <= lobs_err + 1e-12 {
+                exact_wins += 1;
+            }
+        }
+        assert!(exact_wins >= 5, "ExactOBS beat L-OBS only {exact_wins}/6");
+    }
+
+    /// Pruning a single weight is where L-OBS and ExactOBS coincide.
+    #[test]
+    fn single_weight_matches_exact() {
+        let w = Mat::randn(1, 10, 9);
+        let h = LayerHessian::synthetic(10, 10);
+        let l = prune(&w, &h, 0.1);
+        let e = exact_obs::prune_unstructured(&w, &h, 0.1, &Default::default());
+        assert!((l.sq_err - e.sq_err).abs() < 1e-9);
+    }
+}

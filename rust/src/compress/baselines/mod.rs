@@ -1,0 +1,29 @@
+//! Baseline post-training compression methods the paper compares against.
+//!
+//! Each baseline is implemented at the layer-wise level (the level the
+//! paper's tables use) on top of the same Hessian/quantizer substrates as
+//! ExactOBS/OBQ, so comparisons isolate the *selection/update policy*:
+//!
+//! * [`gmp`] — (global) magnitude pruning [Zhu & Gupta].
+//! * [`lobs`] — L-OBS: OBS scores + compensation from a **single** Hessian
+//!   computation (no recomputation between pruned weights).
+//! * [`adaprune`] — magnitude selection + optimal reoptimization of the
+//!   surviving weights; single-shot, iterative (k-step), and the global
+//!   (cross-layer, sequential re-regression) post-processing variant.
+//! * [`adaquant`] — quantized-weight coordinate descent on the layer
+//!   objective (a deterministic stand-in for AdaQuant's STE optimizer).
+//! * [`bitsplit`] — alternating code/scale optimization per channel.
+//! * [`adaround`] — up/down rounding search minimizing the layer error
+//!   (the discrete problem AdaRound's annealed relaxation optimizes).
+//!
+//! Where our implementation differs from the reference code (which is
+//! unavailable offline) the difference *strengthens* the baseline — e.g.
+//! AdaPrune's SGD reoptimization is replaced by the closed-form optimum —
+//! so reported gaps to ExactOBS/OBQ are conservative. See DESIGN.md §2.
+
+pub mod gmp;
+pub mod lobs;
+pub mod adaprune;
+pub mod adaquant;
+pub mod bitsplit;
+pub mod adaround;

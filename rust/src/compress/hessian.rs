@@ -1,0 +1,172 @@
+//! Layer Hessian accumulation and inversion.
+//!
+//! For the layer-wise objective ‖WX − ŴX‖² each row's Hessian is
+//! H = 2·X·Xᵀ (d_col × d_col) — identical across rows, so one H (and one
+//! inverse) is computed per layer and *copied* per row by the sweeps.
+//!
+//! Following the paper's implementation notes: calibration batches (and
+//! cheap augmentations) are *accumulated* into H one batch at a time, so
+//! memory stays Θ(d_col²) regardless of the calibration set size; a small
+//! relative diagonal dampening guards against singular H from dead or
+//! linearly-dependent inputs.
+
+use crate::linalg::{cholesky_inverse, Mat};
+
+/// Streaming accumulator for H = 2·Σ_batches X·Xᵀ.
+pub struct HessianAccumulator {
+    d_col: usize,
+    h: Mat,
+    pub n_samples: usize,
+}
+
+impl HessianAccumulator {
+    pub fn new(d_col: usize) -> HessianAccumulator {
+        HessianAccumulator { d_col, h: Mat::zeros(d_col, d_col), n_samples: 0 }
+    }
+
+    /// Accumulate a batch X of shape d_col × n.
+    pub fn add_batch(&mut self, x: &Mat) {
+        assert_eq!(x.rows, self.d_col, "batch row dim != d_col");
+        let xxt = x.xxt();
+        self.h.axpy(2.0, &xxt);
+        self.n_samples += x.cols;
+    }
+
+    /// Accumulate from an f32 column-sample layout: `samples[i]` is one
+    /// input vector of length d_col (the calibration-capture format).
+    pub fn add_samples(&mut self, samples: &[Vec<f32>]) {
+        if samples.is_empty() {
+            return;
+        }
+        let n = samples.len();
+        let mut x = Mat::zeros(self.d_col, n);
+        for (j, s) in samples.iter().enumerate() {
+            assert_eq!(s.len(), self.d_col);
+            for i in 0..self.d_col {
+                x.data[i * n + j] = s[i] as f64;
+            }
+        }
+        self.add_batch(&x);
+    }
+
+    /// The raw accumulated H (2XXᵀ), without dampening.
+    pub fn raw(&self) -> Mat {
+        self.h.clone()
+    }
+
+    /// Finalize into an invertible [`LayerHessian`].
+    ///
+    /// `rel_damp` is the relative dampening λ: H ← H + λ·mean(diag H)·I.
+    /// If Cholesky still fails (rank-deficient calibration data), the
+    /// dampening is escalated ×10 up to 1e-1 before giving up — mirroring
+    /// the paper's "add a small diagonal dampening term" guidance without
+    /// requiring per-layer hyperparameter tuning.
+    pub fn finalize(&self, rel_damp: f64) -> anyhow::Result<LayerHessian> {
+        let mean_diag = self.h.diag_mean().max(1e-12);
+        let mut damp = rel_damp.max(1e-12);
+        loop {
+            let mut h = self.h.clone();
+            h.add_diag(damp * mean_diag);
+            match cholesky_inverse(&h) {
+                Ok(hinv) => {
+                    return Ok(LayerHessian { h, hinv, damp: damp * mean_diag, n_samples: self.n_samples })
+                }
+                Err(_) if damp < 1e-1 => damp *= 10.0,
+                Err(e) => return Err(e.context("Hessian not invertible even at damp 1e-1")),
+            }
+        }
+    }
+}
+
+/// Finalized layer Hessian: H (dampened) and H⁻¹, shared across rows.
+#[derive(Debug, Clone)]
+pub struct LayerHessian {
+    /// Dampened H = 2XXᵀ + λI.
+    pub h: Mat,
+    /// Its SPD inverse.
+    pub hinv: Mat,
+    /// Absolute dampening that was applied.
+    pub damp: f64,
+    /// Number of calibration samples accumulated.
+    pub n_samples: usize,
+}
+
+impl LayerHessian {
+    /// Convenience: single-shot construction from X (d_col × N).
+    pub fn from_inputs(x: &Mat, rel_damp: f64) -> LayerHessian {
+        let mut acc = HessianAccumulator::new(x.rows);
+        acc.add_batch(x);
+        acc.finalize(rel_damp).expect("Hessian finalize")
+    }
+
+    pub fn d_col(&self) -> usize {
+        self.h.rows
+    }
+
+    /// Synthetic well-conditioned Hessian for tests/benches.
+    pub fn synthetic(d_col: usize, seed: u64) -> LayerHessian {
+        let x = Mat::randn(d_col, d_col * 2 + 8, seed);
+        LayerHessian::from_inputs(&x, 1e-8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulation_matches_concat() {
+        // Accumulating two batches must equal one concatenated batch.
+        let a = Mat::randn(6, 10, 1);
+        let b = Mat::randn(6, 14, 2);
+        let mut acc = HessianAccumulator::new(6);
+        acc.add_batch(&a);
+        acc.add_batch(&b);
+
+        let mut cat = Mat::zeros(6, 24);
+        for r in 0..6 {
+            for c in 0..10 {
+                *cat.at_mut(r, c) = a.at(r, c);
+            }
+            for c in 0..14 {
+                *cat.at_mut(r, 10 + c) = b.at(r, c);
+            }
+        }
+        let mut acc2 = HessianAccumulator::new(6);
+        acc2.add_batch(&cat);
+        assert!(acc.raw().dist(&acc2.raw()) < 1e-9);
+        assert_eq!(acc.n_samples, 24);
+    }
+
+    #[test]
+    fn finalize_inverts() {
+        let x = Mat::randn(8, 40, 3);
+        let h = LayerHessian::from_inputs(&x, 1e-8);
+        let prod = h.h.matmul(&h.hinv);
+        assert!(prod.dist(&Mat::eye(8)) < 1e-6);
+    }
+
+    #[test]
+    fn dampening_escalates_on_rank_deficiency() {
+        // Fewer samples than d_col ⇒ singular 2XXᵀ; escalation must save it.
+        let x = Mat::randn(16, 4, 4);
+        let mut acc = HessianAccumulator::new(16);
+        acc.add_batch(&x);
+        let h = acc.finalize(1e-10).unwrap();
+        assert!(h.damp > 0.0);
+        let prod = h.h.matmul(&h.hinv);
+        assert!(prod.dist(&Mat::eye(16)) < 1e-4);
+    }
+
+    #[test]
+    fn add_samples_layout() {
+        let samples = vec![vec![1.0f32, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let mut acc = HessianAccumulator::new(2);
+        acc.add_samples(&samples);
+        // X = [[1,3,5],[2,4,6]]; H = 2XXᵀ.
+        let h = acc.raw();
+        assert_eq!(h.at(0, 0), 2.0 * (1.0 + 9.0 + 25.0));
+        assert_eq!(h.at(0, 1), 2.0 * (2.0 + 12.0 + 30.0));
+        assert_eq!(acc.n_samples, 3);
+    }
+}

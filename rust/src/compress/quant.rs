@@ -1,0 +1,220 @@
+//! Quantization grids.
+//!
+//! Implements the uniform affine quantizers used throughout the paper's
+//! experiments: asymmetric or symmetric, per-channel (per weight-matrix
+//! row) or per-tensor, with either min/max calibration or LAPQ-style
+//! loss-aware clip search (a shrink-factor sweep minimizing the weighted
+//! quantization MSE — the same procedure BRECQ uses to set grids, which
+//! the paper adopts for OBQ and AdaRound).
+
+/// A uniform affine quantization grid: q(w) = s·(clamp(round(w/s)+z, 0, maxq) − z).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Grid {
+    pub scale: f64,
+    pub zero: f64,
+    pub maxq: f64,
+}
+
+impl Grid {
+    /// Quantize one value onto the grid.
+    #[inline]
+    pub fn quant(&self, w: f64) -> f64 {
+        if self.scale == 0.0 {
+            return 0.0;
+        }
+        let q = (w / self.scale + self.zero).round().clamp(0.0, self.maxq);
+        self.scale * (q - self.zero)
+    }
+
+    /// The integer code for a value (for bit-exact storage tests).
+    #[inline]
+    pub fn code(&self, w: f64) -> i64 {
+        if self.scale == 0.0 {
+            return 0;
+        }
+        (w / self.scale + self.zero).round().clamp(0.0, self.maxq) as i64
+    }
+
+    /// Grid step Δ.
+    pub fn delta(&self) -> f64 {
+        self.scale
+    }
+
+    /// Quantization error of a value.
+    #[inline]
+    pub fn err(&self, w: f64) -> f64 {
+        let d = self.quant(w) - w;
+        d * d
+    }
+}
+
+/// How the grid range is calibrated.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GridSearch {
+    /// Plain min/max range.
+    MinMax,
+    /// LAPQ-style: sweep shrink factors of the min/max range, keep the one
+    /// minimizing Σ|q(w)−w|^norm (norm 2.4, as in common PTQ practice).
+    Mse { norm: f64, steps: usize },
+}
+
+impl Default for GridSearch {
+    fn default() -> Self {
+        GridSearch::Mse { norm: 2.4, steps: 100 }
+    }
+}
+
+/// Fit a grid to the values in `w`.
+pub fn fit_grid(w: &[f64], bits: u32, symmetric: bool, search: GridSearch) -> Grid {
+    assert!(bits >= 1 && bits <= 16);
+    let maxq = ((1u64 << bits) - 1) as f64;
+    let (mut lo, mut hi) = min_max(w);
+    if symmetric {
+        let a = lo.abs().max(hi.abs());
+        lo = -a;
+        hi = a;
+    }
+    if hi == lo {
+        // Degenerate (constant) row: a zero-scale grid maps everything to
+        // that constant via zero offset. Use a tiny scale to stay affine.
+        hi = lo + 1e-8;
+    }
+    match search {
+        GridSearch::MinMax => grid_from_range(lo, hi, maxq, symmetric),
+        GridSearch::Mse { norm, steps } => {
+            let mut best = grid_from_range(lo, hi, maxq, symmetric);
+            let mut best_err = grid_loss(w, &best, norm);
+            for i in 0..steps {
+                let p = 1.0 - 0.8 * (i as f64 + 1.0) / steps as f64; // shrink 1.0 → 0.2
+                let g = grid_from_range(lo * p, hi * p, maxq, symmetric);
+                let e = grid_loss(w, &g, norm);
+                if e < best_err {
+                    best_err = e;
+                    best = g;
+                }
+            }
+            best
+        }
+    }
+}
+
+fn grid_from_range(lo: f64, hi: f64, maxq: f64, symmetric: bool) -> Grid {
+    let scale = (hi - lo) / maxq;
+    let zero = if symmetric {
+        ((maxq + 1.0) / 2.0).floor()
+    } else {
+        (-lo / scale).round().clamp(0.0, maxq)
+    };
+    Grid { scale, zero, maxq }
+}
+
+fn grid_loss(w: &[f64], g: &Grid, norm: f64) -> f64 {
+    w.iter().map(|&v| (g.quant(v) - v).abs().powf(norm)).sum()
+}
+
+fn min_max(w: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &v in w {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !lo.is_finite() {
+        (0.0, 0.0)
+    } else {
+        (lo.min(0.0), hi.max(0.0)) // grid must represent 0 (sparse-friendly)
+    }
+}
+
+/// Round-to-nearest quantization of a whole row (the trivial baseline).
+pub fn rtn(w: &[f64], g: &Grid) -> Vec<f64> {
+    w.iter().map(|&v| g.quant(v)).collect()
+}
+
+/// Per-channel grids: one grid per row of a d_row × d_col weight matrix.
+pub fn fit_grids_per_row(
+    w: &crate::linalg::Mat,
+    bits: u32,
+    symmetric: bool,
+    search: GridSearch,
+) -> Vec<Grid> {
+    (0..w.rows)
+        .map(|r| fit_grid(w.row(r), bits, symmetric, search))
+        .collect()
+}
+
+/// One grid for a whole tensor (used for activation quantization).
+pub fn fit_grid_per_tensor(w: &[f64], bits: u32, symmetric: bool, search: GridSearch) -> Grid {
+    fit_grid(w, bits, symmetric, search)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_on_grid() {
+        let g = fit_grid(&[-1.0, -0.5, 0.0, 0.5, 1.0], 4, false, GridSearch::MinMax);
+        for &v in &[-1.0, -0.3, 0.0, 0.77, 1.0] {
+            let q = g.quant(v);
+            // q must be exactly representable: code roundtrips.
+            let code = g.code(v);
+            assert!((g.scale * (code as f64 - g.zero) - q).abs() < 1e-12);
+            assert!((q - v).abs() <= g.scale / 2.0 + 1e-9, "v={v} q={q}");
+        }
+    }
+
+    #[test]
+    fn zero_is_representable() {
+        for sym in [true, false] {
+            let g = fit_grid(&[0.1, 0.9, -0.2], 3, sym, GridSearch::MinMax);
+            assert!(g.quant(0.0).abs() < 1e-12, "sym={sym} q(0)={}", g.quant(0.0));
+        }
+    }
+
+    #[test]
+    fn symmetric_grid_is_symmetric() {
+        let g = fit_grid(&[-2.0, 1.0], 4, true, GridSearch::MinMax);
+        assert!((g.quant(1.5) + g.quant(-1.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mse_search_not_worse_than_minmax() {
+        // With heavy outliers the shrink search must win (that is its job).
+        let mut w: Vec<f64> = (0..200).map(|i| (i as f64 / 100.0 - 1.0) * 0.1).collect();
+        w.push(5.0); // outlier
+        let gm = fit_grid(&w, 3, false, GridSearch::MinMax);
+        let gs = fit_grid(&w, 3, false, GridSearch::default());
+        let em: f64 = w.iter().map(|&v| gm.err(v)).sum();
+        let es: f64 = w.iter().map(|&v| gs.err(v)).sum();
+        // The search optimizes the 2.4-norm loss (which includes the
+        // outlier's clipping penalty), so the MSE gain can be modest —
+        // but it must never be worse than min/max.
+        assert!(es <= em, "search {es} vs minmax {em}");
+    }
+
+    #[test]
+    fn bits_monotonic() {
+        let w: Vec<f64> = (0..64).map(|i| ((i * 37) % 64) as f64 / 32.0 - 1.0).collect();
+        let mut prev = f64::INFINITY;
+        for bits in [2u32, 3, 4, 8] {
+            let g = fit_grid(&w, bits, false, GridSearch::MinMax);
+            let e: f64 = w.iter().map(|&v| g.err(v)).sum();
+            assert!(e <= prev + 1e-12, "bits {bits}: {e} > {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn constant_row_does_not_nan() {
+        let g = fit_grid(&[0.5; 8], 4, false, GridSearch::default());
+        assert!(g.quant(0.5).is_finite());
+    }
+
+    #[test]
+    fn per_row_grids() {
+        let w = crate::linalg::Mat::randn(4, 16, 1);
+        let grids = fit_grids_per_row(&w, 4, false, GridSearch::MinMax);
+        assert_eq!(grids.len(), 4);
+    }
+}

@@ -1,0 +1,163 @@
+//! Unified method dispatch: one enum covering the paper's method and
+//! every baseline, so benches/tables select methods by name.
+
+use crate::compress::baselines::{adaprune, adaquant, adaround, bitsplit, gmp, lobs};
+use crate::compress::hessian::LayerHessian;
+use crate::compress::obq::{self, ObqOpts};
+use crate::compress::quant::GridSearch;
+use crate::compress::{exact_obs, CompressResult};
+use crate::linalg::Mat;
+
+/// Pruning method selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PruneMethod {
+    Gmp,
+    Lobs,
+    AdaPrune,
+    /// AdaPrune iterated k times (Appendix A.6).
+    AdaPruneIter(usize),
+    ExactObs,
+}
+
+impl PruneMethod {
+    pub const ALL: [PruneMethod; 4] =
+        [PruneMethod::Gmp, PruneMethod::Lobs, PruneMethod::AdaPrune, PruneMethod::ExactObs];
+
+    pub fn name(&self) -> String {
+        match self {
+            PruneMethod::Gmp => "GMP".into(),
+            PruneMethod::Lobs => "L-OBS".into(),
+            PruneMethod::AdaPrune => "AdaPrune".into(),
+            PruneMethod::AdaPruneIter(k) => format!("AdaPrune {k}x"),
+            PruneMethod::ExactObs => "ExactOBS".into(),
+        }
+    }
+
+    /// Unstructured pruning to a target sparsity.
+    pub fn prune(&self, w: &Mat, h: &LayerHessian, sparsity: f64) -> CompressResult {
+        match self {
+            PruneMethod::Gmp => gmp::prune(w, h, sparsity),
+            PruneMethod::Lobs => lobs::prune(w, h, sparsity),
+            PruneMethod::AdaPrune => adaprune::prune(w, h, sparsity),
+            PruneMethod::AdaPruneIter(k) => adaprune::prune_iterative(w, h, sparsity, *k),
+            PruneMethod::ExactObs => {
+                exact_obs::prune_unstructured(w, h, sparsity, &Default::default())
+            }
+        }
+    }
+
+    /// N:M pruning (only AdaPrune and ExactOBS support the pattern in the
+    /// paper's tables).
+    pub fn prune_nm(&self, w: &Mat, h: &LayerHessian, n: usize, m: usize) -> CompressResult {
+        match self {
+            PruneMethod::AdaPrune | PruneMethod::AdaPruneIter(_) => adaprune::prune_nm(w, h, n, m),
+            PruneMethod::ExactObs => exact_obs::prune_nm(w, h, n, m),
+            other => panic!("{} does not support N:M", other.name()),
+        }
+    }
+}
+
+/// Quantization method selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QuantMethod {
+    Rtn,
+    BitSplit,
+    AdaQuant,
+    AdaRound,
+    Obq,
+}
+
+impl QuantMethod {
+    pub const ALL: [QuantMethod; 5] = [
+        QuantMethod::Rtn,
+        QuantMethod::BitSplit,
+        QuantMethod::AdaQuant,
+        QuantMethod::AdaRound,
+        QuantMethod::Obq,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantMethod::Rtn => "RTN",
+            QuantMethod::BitSplit => "BitSplit",
+            QuantMethod::AdaQuant => "AdaQuant",
+            QuantMethod::AdaRound => "AdaRound",
+            QuantMethod::Obq => "OBQ",
+        }
+    }
+
+    /// Quantize a full weight matrix (per-channel grids).
+    pub fn quantize(
+        &self,
+        w: &Mat,
+        h: &LayerHessian,
+        bits: u32,
+        symmetric: bool,
+    ) -> CompressResult {
+        match self {
+            QuantMethod::Rtn => {
+                let grids = crate::compress::quant::fit_grids_per_row(
+                    w,
+                    bits,
+                    symmetric,
+                    GridSearch::default(),
+                );
+                let mut out = w.clone();
+                for r in 0..w.rows {
+                    let q = crate::compress::quant::rtn(w.row(r), &grids[r]);
+                    out.row_mut(r).copy_from_slice(&q);
+                }
+                let err = crate::compress::layer_sq_err(w, &out, &h.h);
+                CompressResult::new(out, err)
+            }
+            QuantMethod::BitSplit => bitsplit::quantize(w, h, &bitsplit::BitSplitOpts::new(bits)),
+            QuantMethod::AdaQuant => {
+                let mut o = adaquant::AdaQuantOpts::new(bits);
+                o.symmetric = symmetric;
+                adaquant::quantize(w, h, &o)
+            }
+            QuantMethod::AdaRound => {
+                let mut o = adaround::AdaRoundOpts::new(bits);
+                o.symmetric = symmetric;
+                adaround::quantize(w, h, &o)
+            }
+            QuantMethod::Obq => {
+                let o = if symmetric { ObqOpts::symmetric(bits) } else { ObqOpts::new(bits) };
+                obq::quantize(w, h, &o)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_stable() {
+        assert_eq!(PruneMethod::ExactObs.name(), "ExactOBS");
+        assert_eq!(PruneMethod::AdaPruneIter(4).name(), "AdaPrune 4x");
+        assert_eq!(QuantMethod::Obq.name(), "OBQ");
+    }
+
+    #[test]
+    fn all_prune_methods_run() {
+        let w = Mat::randn(4, 16, 1);
+        let h = LayerHessian::synthetic(16, 2);
+        for m in PruneMethod::ALL {
+            let r = m.prune(&w, &h, 0.5);
+            assert!((r.sparsity - 0.5).abs() < 0.05, "{}: {}", m.name(), r.sparsity);
+            assert!(r.sq_err.is_finite());
+        }
+    }
+
+    #[test]
+    fn all_quant_methods_run() {
+        let w = Mat::randn(4, 16, 3);
+        let h = LayerHessian::synthetic(16, 4);
+        for m in QuantMethod::ALL {
+            let r = m.quantize(&w, &h, 4, false);
+            assert!(r.sq_err.is_finite(), "{}", m.name());
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! L3 coordinator: calibration, database building, and the end-to-end
+//! compression pipeline (calibrate → compress per layer → solve → stitch
+//! → correct statistics → evaluate).
+//!
+//! Layer jobs are independent (the paper's key flexibility argument), so
+//! the database builder fans them out over the in-tree thread pool; on
+//! this single-core testbed that costs nothing but the architecture is
+//! the same one that scales linearly with cores/GPUs (paper §A.5:
+//! "ExactOBS is essentially perfectly parallelizable").
+
+pub mod methods;
+pub mod pipeline;
+
+use crate::compress::hessian::{HessianAccumulator, LayerHessian};
+use crate::nn::models::{batch_slice, task_of, ModelBundle};
+use crate::nn::CompressibleModel;
+use crate::util::pool::ThreadPool;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Calibration options.
+#[derive(Debug, Clone)]
+pub struct CalibOpts {
+    /// Calibration samples to draw from the bundle (paper: 1024).
+    pub n_samples: usize,
+    /// Forward batch size.
+    pub batch: usize,
+    /// Augmentation factor for image tasks (paper: 10× for ImageNet).
+    pub augment: usize,
+    /// Relative Hessian dampening λ.
+    pub rel_damp: f64,
+    /// Restrict calibration to these layers (empty = all).
+    pub only_layers: Vec<String>,
+    /// Random seed: rotates the calibration subsample and the
+    /// augmentation stream (Appendix A.10 seed-sensitivity study).
+    pub seed: u64,
+}
+
+impl Default for CalibOpts {
+    fn default() -> CalibOpts {
+        CalibOpts {
+            n_samples: 1024,
+            batch: 128,
+            augment: 1,
+            rel_damp: 1e-6,
+            only_layers: vec![],
+            seed: 0,
+        }
+    }
+}
+
+/// Result of the calibration pass: per-layer Hessians (shared via Arc —
+/// every compression job of a layer reads the same matrix).
+pub type LayerHessians = BTreeMap<String, Arc<LayerHessian>>;
+
+/// Run the streaming calibration pass.
+pub fn calibrate(
+    model: &dyn CompressibleModel,
+    bundle: &ModelBundle,
+    opts: &CalibOpts,
+) -> anyhow::Result<LayerHessians> {
+    let layers = model.layers();
+    let mut accs: BTreeMap<String, HessianAccumulator> = layers
+        .iter()
+        .filter(|l| opts.only_layers.is_empty() || opts.only_layers.contains(&l.name))
+        .map(|l| (l.name.clone(), HessianAccumulator::new(l.d_col)))
+        .collect();
+    let total = bundle.calib_x.shape[0];
+    let n = total.min(opts.n_samples);
+    // Seeded subsample rotation: seed k starts k·n/4 samples into the
+    // calibration split (wrapping), giving distinct-but-overlapping
+    // calibration sets for the seed-sensitivity study.
+    let offset = ((opts.seed as usize) * n / 4) % total.max(1);
+    let is_image = task_of(model.name()) != "seq";
+    let mut i = 0;
+    while i < n {
+        let j = (i + opts.batch).min(n);
+        let (lo, hi) = ((offset + i) % total, (offset + j - 1) % total + 1);
+        let xb = if lo < hi {
+            batch_slice(&bundle.calib_x, lo, hi)
+        } else {
+            // Wrapped: stitch tail + head.
+            let mut parts: Vec<crate::tensor::Tensor> = Vec::new();
+            for k in lo..total {
+                parts.push(bundle.calib_x.index0(k));
+            }
+            for k in 0..hi {
+                parts.push(bundle.calib_x.index0(k));
+            }
+            crate::tensor::Tensor::stack(&parts)
+        };
+        if is_image && opts.augment > 1 {
+            for aug in crate::data::augment(&xb, opts.augment, 0xa06 + opts.seed * 977 + i as u64)
+            {
+                model.accumulate_hessians(&aug, &mut accs);
+            }
+        } else {
+            model.accumulate_hessians(&xb, &mut accs);
+        }
+        i = j;
+    }
+    let mut out = LayerHessians::new();
+    for (name, acc) in accs {
+        let h = acc
+            .finalize(opts.rel_damp)
+            .map_err(|e| e.context(format!("finalizing Hessian of layer '{name}'")))?;
+        out.insert(name, Arc::new(h));
+    }
+    Ok(out)
+}
+
+/// A generic per-layer job runner: executes `f(layer_name)` for each
+/// requested layer on the pool, returning results keyed by layer.
+pub fn par_layers<T, F>(pool: &ThreadPool, layers: &[String], f: F) -> BTreeMap<String, T>
+where
+    T: Send + 'static,
+    F: Fn(&str) -> T + Send + Sync + 'static,
+{
+    let names: Vec<String> = layers.to_vec();
+    let names2 = names.clone();
+    let results = pool.par_map(names.len(), move |i| f(&names2[i]));
+    names.into_iter().zip(results).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::cnn::tests::fake_resnet_bundle;
+    use crate::nn::cnn::CnnModel;
+    use crate::tensor::Tensor;
+
+    fn tiny_bundle() -> (ModelBundle, CnnModel) {
+        let model = CnnModel::resnet("rneta", &fake_resnet_bundle(1)).unwrap();
+        let bundle = ModelBundle {
+            model: model.clone_box(),
+            calib_x: Tensor::randn(&[64, 3, 16, 16], 2),
+            calib_y: Tensor::zeros(&[64]),
+            test_x: Tensor::randn(&[32, 3, 16, 16], 3),
+            test_y: Tensor::zeros(&[32]),
+        };
+        (bundle, model)
+    }
+
+    #[test]
+    fn calibrate_produces_all_layers() {
+        let (bundle, model) = tiny_bundle();
+        let opts = CalibOpts { n_samples: 64, batch: 32, ..Default::default() };
+        let hs = calibrate(&model, &bundle, &opts).unwrap();
+        assert_eq!(hs.len(), model.layers().len());
+        for (name, h) in &hs {
+            assert!(h.n_samples > 0, "{name} got no samples");
+        }
+    }
+
+    #[test]
+    fn calibrate_augment_increases_samples() {
+        let (bundle, model) = tiny_bundle();
+        let base = calibrate(
+            &model,
+            &bundle,
+            &CalibOpts { n_samples: 32, batch: 32, ..Default::default() },
+        )
+        .unwrap();
+        let aug = calibrate(
+            &model,
+            &bundle,
+            &CalibOpts { n_samples: 32, batch: 32, augment: 3, ..Default::default() },
+        )
+        .unwrap();
+        let l = "fc";
+        assert_eq!(aug[l].n_samples, 3 * base[l].n_samples);
+    }
+
+    #[test]
+    fn par_layers_runs_all() {
+        let pool = ThreadPool::new(2);
+        let names: Vec<String> = (0..5).map(|i| format!("l{i}")).collect();
+        let out = par_layers(&pool, &names, |n| n.len());
+        assert_eq!(out.len(), 5);
+        assert_eq!(out["l3"], 2);
+    }
+}

@@ -1,0 +1,147 @@
+//! Cost models: FLOPs, BOPs (bit operations) and the DeepSparse-style CPU
+//! latency model used by the paper's constrained-compression experiments.
+//!
+//! * FLOPs — 2 × MACs × density (unstructured/N:M/block sparsity scales
+//!   compute linearly in the paper's accounting).
+//! * BOPs — MACs × w_bits × a_bits, halved under 2:4 (the paper's Fig. 2
+//!   x-axis: "BOP (number of bits times FLOPs) reduction").
+//! * CPU latency — an analytical stand-in for the paper's measured
+//!   DeepSparse layer timings: dense-int8 ≈ 2.7× over fp32; block-sparse
+//!   speedup acts multiplicatively with a memory-bound floor, calibrated
+//!   to the paper's statement that "sparsity speedup acts roughly
+//!   multiplicatively" on top of the int8 base.
+
+use crate::nn::LayerInfo;
+
+/// Compression level of one layer, as stored in the model database.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Level {
+    /// Fraction of zero weights (0 = dense).
+    pub sparsity: f64,
+    /// Weight bits (32 = uncompressed float).
+    pub w_bits: u32,
+    /// Activation bits.
+    pub a_bits: u32,
+    /// Semi-structured 2:4 pattern (GPU scenario).
+    pub is_24: bool,
+}
+
+impl Level {
+    /// The uncompressed reference. BOP accounting uses **fp16** as the
+    /// dense precision (the standard GPU inference dtype): with an fp32
+    /// base, uniform 8w8a alone would already be a 16× BOP reduction and
+    /// the paper's 4–14× sweep range would be trivially flat.
+    pub fn dense() -> Level {
+        Level { sparsity: 0.0, w_bits: 16, a_bits: 16, is_24: false }
+    }
+
+    /// Stable database key, e.g. "s0.500_w4a4_24".
+    pub fn key(&self) -> String {
+        format!(
+            "s{:.3}_w{}a{}{}",
+            self.sparsity,
+            self.w_bits,
+            self.a_bits,
+            if self.is_24 { "_24" } else { "" }
+        )
+    }
+}
+
+/// FLOPs of a layer at a given level (2 ops per MAC).
+pub fn layer_flops(l: &LayerInfo, level: &Level) -> f64 {
+    let density = if level.is_24 { 0.5 } else { 1.0 - level.sparsity };
+    2.0 * l.macs as f64 * density
+}
+
+/// BOPs of a layer at a given level.
+pub fn layer_bops(l: &LayerInfo, level: &Level) -> f64 {
+    let density = if level.is_24 { 0.5 } else { 1.0 - level.sparsity };
+    l.macs as f64 * density * level.w_bits as f64 * level.a_bits as f64
+}
+
+/// DeepSparse-like per-layer CPU latency model (arbitrary time units:
+/// 1.0 == one fp32 dense MAC). See module docs; the α knob expresses how
+/// much of the kernel is compute-bound (sparsity only accelerates that
+/// part); small layers saturate at a memory-bound floor.
+pub fn layer_cpu_time(l: &LayerInfo, sparsity: f64, int8: bool) -> f64 {
+    let base = l.macs as f64;
+    let quant_speedup = if int8 { 2.7 } else { 1.0 };
+    let alpha = 0.85;
+    let dense_t = base / quant_speedup;
+    let sparse_t = dense_t * ((1.0 - alpha) + alpha * (1.0 - sparsity));
+    // Memory-bound floor: reading the (compressed) weights.
+    let floor = (l.weights() as f64) * (1.0 - sparsity) * 0.05 / quant_speedup;
+    sparse_t.max(floor)
+}
+
+/// Total model cost at an assignment of levels (same order as `layers`).
+pub fn total_flops(layers: &[LayerInfo], levels: &[Level]) -> f64 {
+    layers.iter().zip(levels).map(|(l, v)| layer_flops(l, v)).sum()
+}
+
+pub fn total_bops(layers: &[LayerInfo], levels: &[Level]) -> f64 {
+    layers.iter().zip(levels).map(|(l, v)| layer_bops(l, v)).sum()
+}
+
+pub fn total_cpu_time(layers: &[LayerInfo], levels: &[Level]) -> f64 {
+    layers
+        .iter()
+        .zip(levels)
+        .map(|(l, v)| layer_cpu_time(l, v.sparsity, v.w_bits <= 8))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(macs: u64, dr: usize, dc: usize) -> LayerInfo {
+        LayerInfo { name: "t".into(), d_row: dr, d_col: dc, macs, kind: "conv" }
+    }
+
+    #[test]
+    fn flops_scale_with_sparsity() {
+        let l = layer(1000, 10, 10);
+        assert_eq!(layer_flops(&l, &Level::dense()), 2000.0);
+        assert_eq!(
+            layer_flops(&l, &Level { sparsity: 0.5, ..Level::dense() }),
+            1000.0
+        );
+    }
+
+    #[test]
+    fn bops_24_plus_4bit() {
+        let l = layer(1000, 10, 10);
+        let lv = Level { sparsity: 0.0, w_bits: 4, a_bits: 4, is_24: true };
+        assert_eq!(layer_bops(&l, &lv), 8000.0);
+        // vs the fp16 dense reference: 256/16 × 2 (2:4) = 32×.
+        let reduction = layer_bops(&l, &Level::dense()) / layer_bops(&l, &lv);
+        assert_eq!(reduction, 32.0);
+    }
+
+    #[test]
+    fn cpu_time_int8_base_speedup() {
+        let l = layer(1_000_000, 100, 100);
+        let fp = layer_cpu_time(&l, 0.0, false);
+        let q = layer_cpu_time(&l, 0.0, true);
+        assert!((fp / q - 2.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cpu_time_monotone_in_sparsity() {
+        let l = layer(1_000_000, 100, 100);
+        let mut prev = f64::INFINITY;
+        for s in [0.0, 0.3, 0.6, 0.9] {
+            let t = layer_cpu_time(&l, s, true);
+            assert!(t <= prev);
+            prev = t;
+        }
+        assert!(layer_cpu_time(&l, 0.99, true) > 0.0);
+    }
+
+    #[test]
+    fn level_key_stable() {
+        let lv = Level { sparsity: 0.5, w_bits: 4, a_bits: 8, is_24: true };
+        assert_eq!(lv.key(), "s0.500_w4a8_24");
+    }
+}

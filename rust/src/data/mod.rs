@@ -1,0 +1,102 @@
+//! Calibration-data utilities: batching and the cheap augmentations the
+//! paper applies to the calibration set (horizontal flips + random
+//! crops-with-padding, "very cheap to include for our method" since they
+//! only enter the Hessian accumulation once).
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg;
+
+/// Horizontal flip of an NCHW image batch.
+pub fn hflip(x: &Tensor) -> Tensor {
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = x.clone();
+    for bi in 0..b {
+        for ci in 0..c {
+            for y in 0..h {
+                let base = ((bi * c + ci) * h + y) * w;
+                for xx in 0..w / 2 {
+                    out.data.swap(base + xx, base + w - 1 - xx);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Random crop with `pad` pixels of zero padding (standard augmentation),
+/// same output size. One shared offset per image.
+pub fn random_crop(x: &Tensor, pad: usize, rng: &mut Pcg) -> Tensor {
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = Tensor::zeros(&x.shape);
+    for bi in 0..b {
+        let dy = rng.below(2 * pad + 1) as isize - pad as isize;
+        let dx = rng.below(2 * pad + 1) as isize - pad as isize;
+        for ci in 0..c {
+            for y in 0..h {
+                let sy = y as isize + dy;
+                if sy < 0 || sy >= h as isize {
+                    continue;
+                }
+                for xx in 0..w {
+                    let sx = xx as isize + dx;
+                    if sx < 0 || sx >= w as isize {
+                        continue;
+                    }
+                    out.data[((bi * c + ci) * h + y) * w + xx] =
+                        x.at4(bi, ci, sy as usize, sx as usize);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Generate `factor`× augmented copies of an image batch (flip + crop),
+/// deterministic by seed. Copy 0 is the identity.
+pub fn augment(x: &Tensor, factor: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Pcg::new(seed);
+    let mut out = Vec::with_capacity(factor);
+    out.push(x.clone());
+    for i in 1..factor {
+        let mut v = if i % 2 == 1 { hflip(x) } else { x.clone() };
+        v = random_crop(&v, 2, &mut rng);
+        out.push(v);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hflip_involution() {
+        let x = Tensor::randn(&[2, 3, 8, 8], 1);
+        assert_eq!(hflip(&hflip(&x)), x);
+    }
+
+    #[test]
+    fn crop_preserves_shape() {
+        let x = Tensor::randn(&[2, 3, 8, 8], 2);
+        let mut rng = Pcg::new(3);
+        let y = random_crop(&x, 2, &mut rng);
+        assert_eq!(y.shape, x.shape);
+    }
+
+    #[test]
+    fn augment_first_is_identity() {
+        let x = Tensor::randn(&[1, 3, 8, 8], 4);
+        let v = augment(&x, 4, 5);
+        assert_eq!(v.len(), 4);
+        assert_eq!(v[0], x);
+        assert_ne!(v[1], x);
+    }
+
+    #[test]
+    fn augment_deterministic() {
+        let x = Tensor::randn(&[1, 3, 8, 8], 6);
+        let a = augment(&x, 3, 7);
+        let b = augment(&x, 3, 7);
+        assert_eq!(a[2], b[2]);
+    }
+}

@@ -1,0 +1,173 @@
+//! Model database + stitcher.
+//!
+//! The paper's non-uniform pipeline ("model database" in Section 6):
+//! every layer is compressed *independently* to every candidate level;
+//! the database stores the compressed weights and the layer-wise
+//! calibration loss. Mixed-compression models are then "simply stitched
+//! together from layer-wise results" for whatever constraint the solver
+//! produces — no recompression needed when targets change (the key
+//! flexibility argument vs sequential methods like AdaRound/BRECQ).
+
+use crate::cost::Level;
+use crate::linalg::Mat;
+use crate::nn::CompressibleModel;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One database entry: a layer compressed to a level.
+///
+/// Weights are stored as f32 (the inference dtype) — the database holds
+/// every (layer × level) combination, so at f64 a single model's DB
+/// would double the resident footprint for no accuracy benefit.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub layer: String,
+    pub level: Level,
+    /// Compressed weights, f32, row-major [rows × cols].
+    pub w: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+    /// Layer-wise squared error on the calibration Hessian.
+    pub sq_err: f64,
+}
+
+impl Entry {
+    pub fn from_mat(layer: &str, level: Level, w: &Mat, sq_err: f64) -> Entry {
+        Entry {
+            layer: layer.to_string(),
+            level,
+            w: w.to_f32(),
+            rows: w.rows,
+            cols: w.cols,
+            sq_err,
+        }
+    }
+
+    pub fn to_mat(&self) -> Mat {
+        Mat::from_f32(self.rows, self.cols, &self.w)
+    }
+}
+
+/// The database: (layer, level-key) → entry.
+#[derive(Default)]
+pub struct ModelDb {
+    pub model: String,
+    entries: BTreeMap<(String, String), Entry>,
+}
+
+impl ModelDb {
+    pub fn new(model: &str) -> ModelDb {
+        ModelDb { model: model.to_string(), entries: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, e: Entry) {
+        self.entries.insert((e.layer.clone(), e.level.key()), e);
+    }
+
+    pub fn get(&self, layer: &str, level: &Level) -> Option<&Entry> {
+        self.entries.get(&(layer.to_string(), level.key()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Levels available for a layer, with losses (solver input).
+    pub fn levels_for(&self, layer: &str) -> Vec<(&Level, f64)> {
+        self.entries
+            .iter()
+            .filter(|((l, _), _)| l == layer)
+            .map(|(_, e)| (&e.level, e.sq_err))
+            .collect()
+    }
+
+    /// Stitch a model: write each layer's chosen level into a clone of
+    /// the dense model. Layers not mentioned stay dense.
+    pub fn stitch(
+        &self,
+        dense: &dyn CompressibleModel,
+        assignment: &[(String, Level)],
+    ) -> Box<dyn CompressibleModel> {
+        let mut m = dense.clone_box();
+        for (layer, level) in assignment {
+            let e = self
+                .get(layer, level)
+                .unwrap_or_else(|| panic!("db missing ({layer}, {})", level.key()));
+            m.set_weight(layer, &e.to_mat());
+            m.set_act_bits(layer, level.a_bits);
+        }
+        m
+    }
+
+    /// Summary (losses only — weights stay in memory) as JSON, for the
+    /// experiment logs.
+    pub fn summary_json(&self) -> Json {
+        let mut layers: BTreeMap<String, Vec<Json>> = BTreeMap::new();
+        for ((layer, key), e) in &self.entries {
+            let mut o = Json::obj();
+            o.set("level", key.as_str()).set("sq_err", e.sq_err).set(
+                "sparsity",
+                e.level.sparsity,
+            );
+            layers.entry(layer.clone()).or_default().push(o);
+        }
+        let mut root = Json::obj();
+        root.set("model", self.model.as_str());
+        let mut obj = Json::obj();
+        for (l, v) in layers {
+            obj.set(&l, Json::Arr(v));
+        }
+        root.set("layers", obj);
+        root
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::cnn::tests::fake_resnet_bundle;
+    use crate::nn::cnn::CnnModel;
+
+    fn level(s: f64) -> Level {
+        Level { sparsity: s, ..Level::dense() }
+    }
+
+    #[test]
+    fn insert_get_levels() {
+        let mut db = ModelDb::new("m");
+        db.insert(Entry::from_mat("a", level(0.5), &Mat::zeros(2, 2), 1.0));
+        db.insert(Entry::from_mat("a", level(0.75), &Mat::zeros(2, 2), 3.0));
+        db.insert(Entry::from_mat("b", level(0.5), &Mat::zeros(2, 2), 0.5));
+        assert_eq!(db.len(), 3);
+        let ls = db.levels_for("a");
+        assert_eq!(ls.len(), 2);
+        assert!(db.get("a", &level(0.75)).is_some());
+        assert!(db.get("a", &level(0.9)).is_none());
+    }
+
+    #[test]
+    fn stitch_writes_layers() {
+        let dense = CnnModel::resnet("rneta", &fake_resnet_bundle(1)).unwrap();
+        let mut db = ModelDb::new("rneta");
+        let name = "s0.b0.conv1";
+        let w0 = dense.get_weight(name);
+        db.insert(Entry::from_mat(name, level(1.0), &Mat::zeros(w0.rows, w0.cols), 9.0));
+        let stitched = db.stitch(&dense, &[(name.to_string(), level(1.0))]);
+        assert!(stitched.get_weight(name).data.iter().all(|&v| v == 0.0));
+        // Dense model untouched.
+        assert!(dense.get_weight(name).data.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn summary_json_roundtrips() {
+        let mut db = ModelDb::new("m");
+        db.insert(Entry::from_mat("a", level(0.5), &Mat::zeros(1, 1), 2.0));
+        let s = db.summary_json().to_string_pretty();
+        let back = crate::util::json::parse(&s).unwrap();
+        assert_eq!(back.req_str("model").unwrap(), "m");
+    }
+}

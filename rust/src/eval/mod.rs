@@ -1,0 +1,174 @@
+//! Task metrics, matching `python/compile/train.py::metric_fn` exactly so
+//! Rust-measured accuracies are comparable to the dense reference the
+//! build-time trainer records.
+
+use crate::nn::models::{batch_slice, task_of, ModelBundle};
+use crate::nn::CompressibleModel;
+use crate::tensor::Tensor;
+
+/// Top-1 accuracy (%) for classification logits [N, C] vs labels [N].
+pub fn top1(logits: &Tensor, labels: &Tensor) -> f64 {
+    let preds = logits.argmax_last();
+    let n = preds.len();
+    let correct = preds
+        .iter()
+        .enumerate()
+        .filter(|(i, &p)| p == labels.data[*i] as usize)
+        .count();
+    100.0 * correct as f64 / n as f64
+}
+
+/// Span F1 (%) for span logits [N, S, 2] vs gold spans [N, 2].
+pub fn span_f1(logits: &Tensor, spans: &Tensor) -> f64 {
+    let (n, s) = (logits.shape[0], logits.shape[1]);
+    let mut total = 0.0;
+    for i in 0..n {
+        let (mut bs, mut be) = (0usize, 0usize);
+        let (mut vs, mut ve) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+        for j in 0..s {
+            let sl = logits.at3(i, j, 0);
+            let el = logits.at3(i, j, 1);
+            if sl > vs {
+                vs = sl;
+                bs = j;
+            }
+            if el > ve {
+                ve = el;
+                be = j;
+            }
+        }
+        let (a0, a1) = if be < bs { (be, bs) } else { (bs, be) };
+        let g0 = spans.data[i * 2] as usize;
+        let g1 = spans.data[i * 2 + 1] as usize;
+        let inter = overlap(a0, a1, g0, g1);
+        if inter > 0 {
+            let prec = inter as f64 / (a1 - a0 + 1) as f64;
+            let rec = inter as f64 / (g1 - g0 + 1) as f64;
+            total += 2.0 * prec * rec / (prec + rec);
+        }
+    }
+    100.0 * total / n as f64
+}
+
+fn overlap(a0: usize, a1: usize, b0: usize, b1: usize) -> usize {
+    let lo = a0.max(b0);
+    let hi = a1.min(b1);
+    if hi >= lo {
+        hi - lo + 1
+    } else {
+        0
+    }
+}
+
+/// Detection cell-F1 (%) for logits [N, 1+C, G, G] vs grids [N, G, G]
+/// (0 = background). Mirrors the python metric: TP = correct class on an
+/// object cell; FP = any non-background prediction that is wrong; FN =
+/// object predicted background.
+pub fn det_f1(logits: &Tensor, grid: &Tensor) -> f64 {
+    let (n, ch, g, _) = (logits.shape[0], logits.shape[1], logits.shape[2], logits.shape[3]);
+    let (mut tp, mut fp, mut fnn) = (0f64, 0f64, 0f64);
+    for i in 0..n {
+        for y in 0..g {
+            for x in 0..g {
+                let mut best = 0usize;
+                let mut bv = f32::NEG_INFINITY;
+                for c in 0..ch {
+                    let v = logits.at4(i, c, y, x);
+                    if v > bv {
+                        bv = v;
+                        best = c;
+                    }
+                }
+                let truth = grid.data[(i * g + y) * g + x] as usize;
+                if truth > 0 {
+                    if best == truth {
+                        tp += 1.0;
+                    } else {
+                        fnn += if best == 0 { 1.0 } else { 0.0 };
+                        fp += if best > 0 { 1.0 } else { 0.0 };
+                    }
+                } else if best > 0 {
+                    fp += 1.0;
+                }
+            }
+        }
+    }
+    let prec = tp / (tp + fp).max(1e-9);
+    let rec = tp / (tp + fnn).max(1e-9);
+    200.0 * prec * rec / (prec + rec).max(1e-9)
+}
+
+/// Evaluate a model on (x, y) for its task, batched to bound memory.
+pub fn evaluate(model: &dyn CompressibleModel, x: &Tensor, y: &Tensor, batch: usize) -> f64 {
+    let n = x.shape[0];
+    let task = task_of(model.name());
+    let mut weighted = 0.0;
+    let mut i = 0;
+    while i < n {
+        let j = (i + batch).min(n);
+        let xb = batch_slice(x, i, j);
+        let yb = batch_slice(y, i, j);
+        let logits = model.forward(&xb);
+        let m = match task {
+            "image" => top1(&logits, &yb),
+            "seq" => span_f1(&logits, &yb),
+            "det" => det_f1(&logits, &yb),
+            _ => unreachable!(),
+        };
+        weighted += m * (j - i) as f64;
+        i = j;
+    }
+    weighted / n as f64
+}
+
+/// Evaluate on the bundle's test split (optionally subsampled to
+/// `max_samples` for cheap sweeps).
+pub fn evaluate_bundle(b: &ModelBundle, model: &dyn CompressibleModel, max_samples: usize) -> f64 {
+    let n = b.test_x.shape[0].min(max_samples);
+    let x = batch_slice(&b.test_x, 0, n);
+    let y = batch_slice(&b.test_y, 0, n);
+    evaluate(model, &x, &y, 128)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top1_counts() {
+        let logits = Tensor::from_vec(&[2, 3], vec![1.0, 5.0, 0.0, 9.0, 0.0, 0.0]);
+        let labels = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        assert_eq!(top1(&logits, &labels), 50.0);
+    }
+
+    #[test]
+    fn span_f1_exact_match_and_miss() {
+        // N=2, S=4. First: predict [1,2] gold [1,2] → F1 1. Second:
+        // predict [0,0] gold [2,3] → 0.
+        let mut logits = Tensor::zeros(&[2, 4, 2]);
+        logits.data[1 * 2] = 5.0; // i=0 j=1 start
+        logits.data[2 * 2 + 1] = 5.0; // i=0 j=2 end
+        logits.data[8] = 5.0; // i=1 j=0 start
+        logits.data[8 + 1] = 5.0; // i=1 j=0 end
+        let spans = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 2.0, 3.0]);
+        assert_eq!(span_f1(&logits, &spans), 50.0);
+    }
+
+    #[test]
+    fn span_f1_partial_overlap() {
+        // Predict [0,1], gold [1,2]: inter 1, prec 0.5, rec 0.5, F1 0.5.
+        let mut logits = Tensor::zeros(&[1, 4, 2]);
+        logits.data[0] = 5.0; // start at 0
+        logits.data[1 * 2 + 1] = 5.0; // end at 1
+        let spans = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        assert!((span_f1(&logits, &spans) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn det_f1_perfect() {
+        // 1 image, 2 classes + bg, 1x1 grid with object class 1.
+        let logits = Tensor::from_vec(&[1, 3, 1, 1], vec![0.0, 5.0, 0.0]);
+        let grid = Tensor::from_vec(&[1, 1, 1], vec![1.0]);
+        assert!((det_f1(&logits, &grid) - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,55 @@
+//! # OBC — Optimal Brain Compression
+//!
+//! A production-grade reproduction of *"Optimal Brain Compression: A
+//! Framework for Accurate Post-Training Quantization and Pruning"*
+//! (Frantar & Alistarh, NeurIPS 2022).
+//!
+//! The crate implements the full OBC system:
+//!
+//! * [`compress`] — the paper's contribution: **ExactOBS** (Algorithm 1 +
+//!   the global step Algorithm 2, N:M and block-sparsity variants) and
+//!   **OBQ** (Algorithm 3 + outlier heuristic), plus every baseline the
+//!   paper compares against (GMP, L-OBS, AdaPrune, global AdaPrune,
+//!   AdaQuant, BitSplit, AdaRound-style).
+//! * [`nn`] / [`data`] — a self-contained inference engine and synthetic
+//!   dataset substrate standing in for the paper's ImageNet/COCO/SQuAD
+//!   models (see DESIGN.md §2 for the substitution argument).
+//! * [`db`] + [`solver`] + [`cost`] — the non-uniform compression pipeline:
+//!   model database, SPDY-style DP solver, FLOP/BOP/CPU-latency models.
+//! * [`stats`] — batch-norm reset and mean/variance correction (Eq. 9).
+//! * [`coordinator`] — the L3 orchestration layer: job scheduling across a
+//!   thread pool, experiment pipelines, metrics.
+//! * [`runtime`] — PJRT bridge: loads AOT-compiled HLO artifacts produced
+//!   by the build-time JAX/Pallas layer and executes them from Rust, with
+//!   native fallbacks for shapes outside the artifact set.
+//! * [`util`], [`linalg`], [`tensor`] — substrates (JSON, RNG, CLI,
+//!   thread pool, bench harness, dense linear algebra, tensors) built
+//!   in-tree because the build is fully offline.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use obc::compress::{exact_obs, hessian::LayerHessian};
+//! use obc::linalg::Mat;
+//!
+//! // Layer weights (d_row x d_col) and calibration inputs (d_col x N).
+//! let w = Mat::randn(64, 128, 0x0bc);
+//! let x = Mat::randn(128, 512, 0x5eed);
+//! let h = LayerHessian::from_inputs(&x, 1e-8);
+//! let res = exact_obs::prune_unstructured(&w, &h, 0.5, &Default::default());
+//! println!("pruned to 50% sparsity, sq-err = {}", res.sq_err);
+//! ```
+
+pub mod util;
+pub mod linalg;
+pub mod tensor;
+pub mod nn;
+pub mod data;
+pub mod compress;
+pub mod db;
+pub mod solver;
+pub mod cost;
+pub mod stats;
+pub mod eval;
+pub mod coordinator;
+pub mod runtime;

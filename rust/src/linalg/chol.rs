@@ -1,0 +1,147 @@
+//! Cholesky decomposition, SPD solve and SPD inverse.
+//!
+//! The layer Hessian H = 2XXᵀ (+ dampening) is symmetric positive
+//! definite, so its inverse — the quantity every OBS formula consumes —
+//! is computed via Cholesky: numerically stable and ~2× cheaper than
+//! Gauss–Jordan.
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor L with A = L·Lᵀ.
+/// Returns Err if A is not (numerically) positive definite.
+pub fn cholesky(a: &Mat) -> anyhow::Result<Mat> {
+    anyhow::ensure!(a.rows == a.cols, "cholesky needs a square matrix");
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j);
+            for k in 0..j {
+                s -= l.at(i, k) * l.at(j, k);
+            }
+            if i == j {
+                anyhow::ensure!(
+                    s > 0.0,
+                    "matrix not positive definite at pivot {i} (s={s:.3e}); \
+                     increase Hessian dampening"
+                );
+                *l.at_mut(i, j) = s.sqrt();
+            } else {
+                *l.at_mut(i, j) = s / l.at(j, j);
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve A·x = b given the Cholesky factor L of A.
+pub fn cholesky_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    // Forward: L·y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        let row = l.row(i);
+        for k in 0..i {
+            s -= row[k] * y[k];
+        }
+        y[i] = s / row[i];
+    }
+    // Backward: Lᵀ·x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l.at(k, i) * x[k];
+        }
+        x[i] = s / l.at(i, i);
+    }
+    x
+}
+
+/// Full SPD inverse via Cholesky (A⁻¹ = L⁻ᵀ·L⁻¹).
+pub fn cholesky_inverse(a: &Mat) -> anyhow::Result<Mat> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    // Invert L (lower triangular) in place.
+    let mut linv = Mat::zeros(n, n);
+    for j in 0..n {
+        linv.data[j * n + j] = 1.0 / l.at(j, j);
+        for i in j + 1..n {
+            let mut s = 0.0;
+            for k in j..i {
+                s -= l.at(i, k) * linv.at(k, j);
+            }
+            linv.data[i * n + j] = s / l.at(i, i);
+        }
+    }
+    // A⁻¹ = Lᵀ⁻¹ L⁻¹ = linvᵀ · linv (linv is lower-triangular).
+    let mut inv = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let mut s = 0.0;
+            // sum over k >= max(i,j): linv[k][i] * linv[k][j]
+            for k in j..n {
+                s += linv.at(k, i) * linv.at(k, j);
+            }
+            inv.data[i * n + j] = s;
+            inv.data[j * n + i] = s;
+        }
+    }
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let x = Mat::randn(n, n + 4, seed);
+        let mut h = x.xxt();
+        h.add_diag(0.1);
+        h
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = spd(10, 1);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.transpose());
+        assert!(a.dist(&rec) < 1e-8, "dist {}", a.dist(&rec));
+    }
+
+    #[test]
+    fn solve_matches() {
+        let a = spd(12, 2);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..12).map(|i| (i as f64) - 3.0).collect();
+        let x = cholesky_solve(&l, &b);
+        let ax = a.matvec(&x);
+        for (u, v) in ax.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = spd(15, 3);
+        let inv = cholesky_inverse(&a).unwrap();
+        let prod = a.matmul(&inv);
+        assert!(prod.dist(&Mat::eye(15)) < 1e-7, "dist {}", prod.dist(&Mat::eye(15)));
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let mut a = Mat::eye(3);
+        *a.at_mut(2, 2) = -1.0;
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn inverse_symmetric() {
+        let a = spd(9, 4);
+        let inv = cholesky_inverse(&a).unwrap();
+        assert!(inv.dist(&inv.transpose()) < 1e-12);
+    }
+}

@@ -1,0 +1,182 @@
+//! General matrix inverse (Gauss–Jordan with partial pivoting) and the
+//! paper's Lemma 1: O(d²) row/column removal update of an inverse.
+
+use super::Mat;
+
+/// Invert a general square matrix via Gauss–Jordan with partial pivoting.
+/// Used for the small c×c block matrices in block-sparsity (Eq. 5) and as
+/// an independent cross-check of `cholesky_inverse` in tests.
+pub fn gauss_jordan_inverse(a: &Mat) -> anyhow::Result<Mat> {
+    anyhow::ensure!(a.rows == a.cols, "inverse needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut inv = Mat::eye(n);
+    for col in 0..n {
+        // Partial pivot.
+        let mut piv = col;
+        let mut best = m.at(col, col).abs();
+        for r in col + 1..n {
+            let v = m.at(r, col).abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        anyhow::ensure!(best > 1e-300, "singular matrix at column {col}");
+        if piv != col {
+            for c in 0..n {
+                let t = m.at(col, c);
+                *m.at_mut(col, c) = m.at(piv, c);
+                *m.at_mut(piv, c) = t;
+                let t = inv.at(col, c);
+                *inv.at_mut(col, c) = inv.at(piv, c);
+                *inv.at_mut(piv, c) = t;
+            }
+        }
+        let d = m.at(col, col);
+        for c in 0..n {
+            *m.at_mut(col, c) /= d;
+            *inv.at_mut(col, c) /= d;
+        }
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = m.at(r, col);
+            if f == 0.0 {
+                continue;
+            }
+            for c in 0..n {
+                let mv = m.at(col, c);
+                *m.at_mut(r, c) -= f * mv;
+                let iv = inv.at(col, c);
+                *inv.at_mut(r, c) -= f * iv;
+            }
+        }
+    }
+    Ok(inv)
+}
+
+/// **Lemma 1 (Row & Column Removal).** Given H⁻¹, compute the inverse of
+/// H with row and column p removed:
+///
+///   (H₋ₚ)⁻¹ = ( H⁻¹ − H⁻¹:,ₚ · H⁻¹ₚ,: / [H⁻¹]ₚₚ )₋ₚ
+///
+/// This function performs the rank-1 Gaussian-elimination step **in
+/// place** and leaves row/column p zeroed (diag set to the eliminated
+/// pivot's reciprocal magnitude is NOT preserved — it is zeroed too, and
+/// callers must never read it again), exactly as Algorithm 1 requires:
+/// the matrix is not resized so that weight indices stay stable.
+///
+/// Returns the pivot value [H⁻¹]ₚₚ that was eliminated.
+pub fn remove_row_col(hinv: &mut Mat, p: usize) -> f64 {
+    let n = hinv.rows;
+    debug_assert_eq!(n, hinv.cols);
+    let d = hinv.at(p, p);
+    debug_assert!(d != 0.0, "eliminating an already-eliminated index");
+    // Copy column p (== row p by symmetry, but we keep generality).
+    let colp: Vec<f64> = (0..n).map(|r| hinv.at(r, p)).collect();
+    let rowp: Vec<f64> = hinv.row(p).to_vec();
+    let inv_d = 1.0 / d;
+    for r in 0..n {
+        let cr = colp[r];
+        if cr == 0.0 {
+            continue;
+        }
+        let f = cr * inv_d;
+        let row = hinv.row_mut(r);
+        for c in 0..n {
+            row[c] -= f * rowp[c];
+        }
+    }
+    // Numerical hygiene: force the eliminated row/col to exact zero.
+    for r in 0..n {
+        *hinv.at_mut(r, p) = 0.0;
+        *hinv.at_mut(p, r) = 0.0;
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky_inverse;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let x = Mat::randn(n, n + 6, seed);
+        let mut h = x.xxt();
+        h.add_diag(0.05);
+        h
+    }
+
+    #[test]
+    fn gj_inverse_matches_cholesky() {
+        let a = spd(12, 7);
+        let gi = gauss_jordan_inverse(&a).unwrap();
+        let ci = cholesky_inverse(&a).unwrap();
+        assert!(gi.dist(&ci) < 1e-7);
+    }
+
+    #[test]
+    fn gj_rejects_singular() {
+        let a = Mat::zeros(3, 3);
+        assert!(gauss_jordan_inverse(&a).is_err());
+    }
+
+    /// Lemma 1 — the central exactness claim of the paper: the rank-1
+    /// elimination of (p,p) in H⁻¹ must equal the fresh inverse of H with
+    /// row/col p deleted.
+    #[test]
+    fn lemma1_matches_fresh_inverse() {
+        for seed in 0..5u64 {
+            let n = 10;
+            let h = spd(n, 100 + seed);
+            let mut hinv = cholesky_inverse(&h).unwrap();
+            let p = (seed as usize) % n;
+            remove_row_col(&mut hinv, p);
+
+            // Fresh inverse of H with row/col p removed.
+            let keep: Vec<usize> = (0..n).filter(|&i| i != p).collect();
+            let hsub = h.submatrix(&keep, &keep);
+            let fresh = cholesky_inverse(&hsub).unwrap();
+
+            let upd = hinv.submatrix(&keep, &keep);
+            assert!(
+                upd.dist(&fresh) < 1e-7,
+                "seed {seed} p {p}: dist {}",
+                upd.dist(&fresh)
+            );
+        }
+    }
+
+    /// Successive eliminations must also stay exact (Algorithm 1 applies
+    /// Lemma 1 once per pruned weight).
+    #[test]
+    fn lemma1_chains() {
+        let n = 12;
+        let h = spd(n, 42);
+        let mut hinv = cholesky_inverse(&h).unwrap();
+        let kill = [3usize, 7, 0, 9];
+        for &p in &kill {
+            remove_row_col(&mut hinv, p);
+        }
+        let keep: Vec<usize> = (0..n).filter(|i| !kill.contains(i)).collect();
+        let fresh = cholesky_inverse(&h.submatrix(&keep, &keep)).unwrap();
+        let upd = hinv.submatrix(&keep, &keep);
+        assert!(upd.dist(&fresh) < 1e-6, "dist {}", upd.dist(&fresh));
+    }
+
+    #[test]
+    fn remove_returns_pivot() {
+        let h = spd(5, 9);
+        let mut hinv = cholesky_inverse(&h).unwrap();
+        let d = hinv.at(2, 2);
+        let got = remove_row_col(&mut hinv, 2);
+        assert_eq!(d, got);
+        // Row/col zeroed.
+        for i in 0..5 {
+            assert_eq!(hinv.at(i, 2), 0.0);
+            assert_eq!(hinv.at(2, i), 0.0);
+        }
+    }
+}

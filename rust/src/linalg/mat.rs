@@ -1,0 +1,271 @@
+//! Row-major dense f64 matrix with the operations the OBS/OBQ math needs.
+
+use crate::util::rng::Pcg;
+
+/// Row-major dense matrix of f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// From an f32 slice (weights coming out of the inference engine).
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data: data.iter().map(|&v| v as f64).collect() }
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Standard-normal random matrix (deterministic by seed).
+    pub fn randn(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Pcg::new(seed);
+        let data = (0..rows * cols).map(|_| rng.normal()).collect();
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        let c = self.cols;
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f64> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// `self * other` — cache-blocked ikj matmul.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        const BK: usize = 64;
+        for kb in (0..k).step_by(BK) {
+            let kend = (kb + BK).min(k);
+            for i in 0..m {
+                let arow = &self.data[i * k..(i + 1) * k];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for kk in kb..kend {
+                    let a = arow[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        orow[j] += a * brow[j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `self * selfᵀ` exploiting symmetry (used for Hessian X·Xᵀ where
+    /// self = X of shape d_col × N — call on X to get d_col × d_col).
+    pub fn xxt(&self) -> Mat {
+        let (m, k) = (self.rows, self.cols);
+        let mut out = Mat::zeros(m, m);
+        for i in 0..m {
+            let ri = &self.data[i * k..(i + 1) * k];
+            for j in i..m {
+                let rj = &self.data[j * k..(j + 1) * k];
+                let mut s = 0.0;
+                for t in 0..k {
+                    s += ri[t] * rj[t];
+                }
+                out.data[i * m + j] = s;
+                out.data[j * m + i] = s;
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|r| {
+                let row = self.row(r);
+                row.iter().zip(v).map(|(a, b)| a * b).sum()
+            })
+            .collect()
+    }
+
+    /// Frobenius norm of (self - other).
+    pub fn dist(&self, other: &Mat) -> f64 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// In-place scaled add: self += alpha * other.
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Add `v` to the diagonal (dampening).
+    pub fn add_diag(&mut self, v: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self.data[i * self.cols + i] += v;
+        }
+    }
+
+    pub fn diag_mean(&self) -> f64 {
+        let n = self.rows.min(self.cols);
+        if n == 0 {
+            return 0.0;
+        }
+        (0..n).map(|i| self.data[i * self.cols + i]).sum::<f64>() / n as f64
+    }
+
+    /// Extract the submatrix with the given row and column index sets.
+    pub fn submatrix(&self, row_idx: &[usize], col_idx: &[usize]) -> Mat {
+        let mut m = Mat::zeros(row_idx.len(), col_idx.len());
+        for (ri, &r) in row_idx.iter().enumerate() {
+            for (ci, &c) in col_idx.iter().enumerate() {
+                m.data[ri * col_idx.len() + ci] = self.at(r, c);
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::randn(5, 7, 1);
+        let i7 = Mat::eye(7);
+        let p = a.matmul(&i7);
+        assert!(a.dist(&p) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let a = Mat::randn(9, 13, 2);
+        let b = Mat::randn(13, 6, 3);
+        let c = a.matmul(&b);
+        for i in 0..9 {
+            for j in 0..6 {
+                let mut s = 0.0;
+                for k in 0..13 {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                assert!((c.at(i, j) - s).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn xxt_matches_matmul() {
+        let x = Mat::randn(8, 20, 4);
+        let h1 = x.xxt();
+        let h2 = x.matmul(&x.transpose());
+        assert!(h1.dist(&h2) < 1e-10);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Mat::randn(4, 6, 5);
+        assert_eq!(a, a.transpose().transpose());
+    }
+
+    #[test]
+    fn matvec_matches() {
+        let a = Mat::randn(3, 4, 6);
+        let v = vec![1.0, -2.0, 0.5, 3.0];
+        let out = a.matvec(&v);
+        for i in 0..3 {
+            let s: f64 = (0..4).map(|j| a.at(i, j) * v[j]).sum();
+            assert!((out[i] - s).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn submatrix_extracts() {
+        let a = Mat::from_rows(vec![
+            vec![1.0, 2.0, 3.0],
+            vec![4.0, 5.0, 6.0],
+            vec![7.0, 8.0, 9.0],
+        ]);
+        let s = a.submatrix(&[0, 2], &[1, 2]);
+        assert_eq!(s.data, vec![2.0, 3.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn add_diag_and_mean() {
+        let mut a = Mat::zeros(3, 3);
+        a.add_diag(2.0);
+        assert_eq!(a.diag_mean(), 2.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Dense linear algebra substrate.
+//!
+//! All compression math (Hessians, inverses, OBS updates) runs in `f64`
+//! for numerical robustness — the paper's GPU implementation uses f32 and
+//! reports occasional dampening needs; f64 on CPU removes most of that
+//! fragility while keeping the algorithms identical. Weights enter as f32
+//! (the inference engine's dtype) and are converted per layer.
+
+mod mat;
+mod chol;
+mod inverse;
+
+pub use chol::{cholesky, cholesky_inverse, cholesky_solve};
+pub use inverse::{gauss_jordan_inverse, remove_row_col};
+pub use mat::Mat;

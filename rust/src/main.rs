@@ -1,0 +1,191 @@
+//! `obc` — the OBC coordinator CLI.
+//!
+//! Subcommands (run `obc <cmd> --help` for options):
+//!   info     — list trained models + AOT artifacts
+//!   dense    — evaluate a dense model on its test split
+//!   prune    — uniform unstructured pruning (any method) + eval
+//!   nm       — N:M semi-structured pruning + eval
+//!   quant    — uniform weight quantization (any method) + eval
+//!   flop     — non-uniform FLOP-target compression via DB + SPDY solver
+//!   mixed    — joint quant + 2:4 for a BOP-reduction target (GPU scenario)
+//!   cputime  — block-sparse + int8 for a CPU speedup target
+//!
+//! All state comes from `artifacts/` (built by `make artifacts`); no
+//! Python runs at any point in this binary.
+
+use obc::coordinator::methods::{PruneMethod, QuantMethod};
+use obc::coordinator::pipeline::{LayerScope, Pipeline};
+use obc::solver::sparsity_grid;
+use obc::util::cli::{opt, Args};
+use obc::util::io::artifacts_dir;
+
+fn parse_prune_method(s: &str) -> PruneMethod {
+    match s.to_lowercase().as_str() {
+        "gmp" => PruneMethod::Gmp,
+        "lobs" | "l-obs" => PruneMethod::Lobs,
+        "adaprune" => PruneMethod::AdaPrune,
+        "exactobs" | "obs" => PruneMethod::ExactObs,
+        other => panic!("unknown prune method '{other}' (gmp|lobs|adaprune|exactobs)"),
+    }
+}
+
+fn parse_quant_method(s: &str) -> QuantMethod {
+    match s.to_lowercase().as_str() {
+        "rtn" => QuantMethod::Rtn,
+        "bitsplit" => QuantMethod::BitSplit,
+        "adaquant" => QuantMethod::AdaQuant,
+        "adaround" => QuantMethod::AdaRound,
+        "obq" => QuantMethod::Obq,
+        other => panic!("unknown quant method '{other}' (rtn|bitsplit|adaquant|adaround|obq)"),
+    }
+}
+
+fn load(model: &str) -> Pipeline {
+    let dir = artifacts_dir().join("models");
+    Pipeline::load(&dir, model).unwrap_or_else(|e| {
+        eprintln!("failed to load '{model}': {e}\nDid you run `make artifacts`?");
+        std::process::exit(1);
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!(
+            "usage: obc <info|dense|prune|nm|quant|flop|mixed|cputime> [options]\n\
+             e.g.:  obc prune --model rneta --method exactobs --sparsity 0.5"
+        );
+        std::process::exit(2);
+    }
+    let cmd = argv.remove(0);
+    let specs = vec![
+        opt("model", "model name (rneta|rnetb|rnetc|bert2|bert4|bert6|tinydet)", Some("rneta")),
+        opt("method", "compression method", Some("exactobs")),
+        opt("sparsity", "target sparsity", Some("0.5")),
+        opt("bits", "weight bits", Some("4")),
+        opt("n", "N of N:M", Some("2")),
+        opt("m", "M of N:M", Some("4")),
+        opt("targets", "comma-separated reduction/speedup targets", Some("2,3,4")),
+        opt("symmetric", "symmetric quantization grids", None),
+        opt("all-layers", "include first/last layers", None),
+    ];
+    let args = Args::parse_from(&format!("obc {cmd}"), "OBC coordinator", specs, argv);
+    let model = args.str_or("model", "rneta");
+
+    match cmd.as_str() {
+        "info" => {
+            let dir = artifacts_dir();
+            println!("artifacts dir: {}", dir.display());
+            match obc::runtime::Manifest::load() {
+                Ok(m) => {
+                    println!("{} AOT kernels:", m.kernels.len());
+                    for k in &m.kernels {
+                        println!("  {:<24} kind={:<10} file={}", k.name, k.kind, k.file);
+                    }
+                }
+                Err(e) => println!("no manifest: {e}"),
+            }
+            for name in obc::nn::models::ALL_MODELS {
+                let path = dir.join("models").join(format!("{name}.obcw"));
+                println!(
+                    "model {:<8} {}",
+                    name,
+                    if path.exists() { "trained" } else { "MISSING (run make artifacts)" }
+                );
+            }
+        }
+        "dense" => {
+            let p = load(&model);
+            println!("{model} dense metric: {:.2}", p.dense_metric());
+        }
+        "prune" => {
+            let p = load(&model);
+            let m = parse_prune_method(&args.str_or("method", "exactobs"));
+            let s = args.f64_or("sparsity", 0.5);
+            let metric = p.run_uniform_sparsity(m, s, LayerScope::All);
+            println!(
+                "{model} {} @ {:.0}% sparsity: {:.2} (dense {:.2})",
+                m.name(),
+                s * 100.0,
+                metric,
+                p.dense_metric()
+            );
+        }
+        "nm" => {
+            let p = load(&model);
+            let m = parse_prune_method(&args.str_or("method", "exactobs"));
+            let (n, mm) = (args.usize_or("n", 2), args.usize_or("m", 4));
+            let scope = if args.flag("all-layers") {
+                LayerScope::All
+            } else {
+                LayerScope::SkipFirstLast
+            };
+            let metric = p.run_nm(m, n, mm, scope);
+            println!("{model} {} {n}:{mm}: {:.2} (dense {:.2})", m.name(), metric, p.dense_metric());
+        }
+        "quant" => {
+            let p = load(&model);
+            let m = parse_quant_method(&args.str_or("method", "obq"));
+            let bits = args.usize_or("bits", 4) as u32;
+            let metric = p.run_quant(m, bits, args.flag("symmetric"), LayerScope::All, true);
+            println!("{model} {} {bits}bit: {:.2} (dense {:.2})", m.name(), metric, p.dense_metric());
+        }
+        "flop" => {
+            let p = load(&model);
+            let m = parse_prune_method(&args.str_or("method", "exactobs"));
+            let targets = args.f64_list_or("targets", &[2.0, 3.0, 4.0]);
+            let grid = sparsity_grid(0.1, 0.95);
+            println!("building {} sparsity DB ({} levels/layer)...", m.name(), grid.len());
+            let db = p.build_sparsity_db(m, &grid, LayerScope::All);
+            for t in targets {
+                match m {
+                    PruneMethod::Gmp => {
+                        let metric = p.eval_gmp_flop_target(LayerScope::All, t);
+                        println!("{model} GMP {t}x FLOPs: {metric:.2}");
+                    }
+                    _ => match p.eval_flop_target(&db, LayerScope::All, t) {
+                        Some((metric, achieved)) => println!(
+                            "{model} {} {t}x FLOPs: {metric:.2} (achieved {achieved:.2}x)",
+                            m.name()
+                        ),
+                        None => println!("{model} {} {t}x FLOPs: infeasible", m.name()),
+                    },
+                }
+            }
+        }
+        "mixed" => {
+            let p = load(&model);
+            let targets = args.f64_list_or("targets", &[4.0, 8.0, 12.0]);
+            println!("building mixed GPU DB (8w8a/4w4a × dense/2:4)...");
+            let db = p.build_mixed_gpu_db(LayerScope::SkipFirstLast);
+            for t in targets {
+                match p.eval_bop_target(&db, LayerScope::SkipFirstLast, t) {
+                    Some((metric, red)) => {
+                        println!("{model} {t}x BOPs: {metric:.2} (achieved {red:.1}x)")
+                    }
+                    None => println!("{model} {t}x BOPs: infeasible"),
+                }
+            }
+        }
+        "cputime" => {
+            let p = load(&model);
+            let targets = args.f64_list_or("targets", &[3.0, 4.0, 5.0]);
+            let grid = sparsity_grid(0.1, 0.95);
+            println!("building CPU DB (4-block × int8, {} levels)...", grid.len());
+            let db = p.build_cpu_db(&grid, LayerScope::SkipFirstLast);
+            for t in targets {
+                match p.eval_time_target(&db, LayerScope::SkipFirstLast, t) {
+                    Some((metric, sp)) => {
+                        println!("{model} {t}x speedup: {metric:.2} (achieved {sp:.1}x)")
+                    }
+                    None => println!("{model} {t}x speedup: infeasible"),
+                }
+            }
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,591 @@
+//! Transformer engine: MiniBERT-2/4/6 (pre-LN-free, post-add residual
+//! encoder exactly mirroring `python/compile/models.py::bert_forward`).
+//!
+//! Compressible layers: all attention projections (wq/wk/wv/wo) and both
+//! FF matrices of every block. The token/position embeddings and the
+//! 2-output span head are excluded, as in the paper's BERT experiments
+//! ("all layers except the embeddings").
+
+use super::ops;
+use super::{CompressibleModel, LayerInfo};
+use crate::compress::hessian::HessianAccumulator;
+use crate::linalg::Mat;
+use crate::tensor::Tensor;
+use crate::util::io::TensorMap;
+use std::collections::BTreeMap;
+
+pub const D_MODEL: usize = 64;
+pub const N_HEADS: usize = 4;
+pub const D_FF: usize = 128;
+pub const SEQ_LEN: usize = 32;
+
+/// One linear projection.
+#[derive(Debug, Clone)]
+struct Lin {
+    name: String,
+    weight: Tensor, // [out, in]
+    bias: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+struct LnParams {
+    name: String,
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+struct Layer {
+    ln1: LnParams,
+    wq: Lin,
+    wk: Lin,
+    wv: Lin,
+    wo: Lin,
+    ln2: LnParams,
+    ff1: Lin,
+    ff2: Lin,
+}
+
+/// MiniBERT model.
+#[derive(Clone)]
+pub struct BertModel {
+    pub model_name: String,
+    tok_embed: Tensor, // [V, d]
+    pos_embed: Tensor, // [S, d]
+    layers: Vec<Layer>,
+    span_head: Lin, // [2, d]
+    /// Post-hoc per-feature corrections merged after each LN (Eq. 9):
+    /// name → (scale, shift); identity unless `correct_stats` ran.
+    ln_corrections: BTreeMap<String, (Vec<f32>, Vec<f32>)>,
+    /// Per-layer activation fake-quant bits (absent/≥16 = off).
+    act_bits: BTreeMap<String, u32>,
+}
+
+/// Calibration hooks for the transformer forward pass.
+struct Hooks<'a> {
+    hessians: Option<&'a mut BTreeMap<String, HessianAccumulator>>,
+    capture: Option<(&'a str, &'a mut Vec<Vec<f32>>)>,
+    stats: Option<&'a mut BTreeMap<String, (Vec<f32>, Vec<f32>)>>,
+    correct: Option<(
+        &'a BTreeMap<String, (Vec<f32>, Vec<f32>)>,
+        &'a mut BTreeMap<String, (Vec<f32>, Vec<f32>)>,
+    )>,
+}
+
+impl<'a> Hooks<'a> {
+    fn none() -> Hooks<'a> {
+        Hooks { hessians: None, capture: None, stats: None, correct: None }
+    }
+}
+
+impl BertModel {
+    pub fn from_bundle(name: &str, params: &TensorMap) -> anyhow::Result<BertModel> {
+        let n_layers = match name {
+            "bert2" => 2,
+            "bert4" => 4,
+            "bert6" => 6,
+            _ => anyhow::bail!("unknown bert '{name}'"),
+        };
+        let tensor = |key: &str| -> anyhow::Result<Tensor> {
+            let t = params
+                .get(key)
+                .ok_or_else(|| anyhow::anyhow!("missing '{key}'"))?;
+            Ok(Tensor::from_vec(&t.shape, t.data.clone()))
+        };
+        let vecf = |key: &str| -> anyhow::Result<Vec<f32>> {
+            Ok(params
+                .get(key)
+                .ok_or_else(|| anyhow::anyhow!("missing '{key}'"))?
+                .data
+                .clone())
+        };
+        let lin = |pre: &str| -> anyhow::Result<Lin> {
+            Ok(Lin {
+                name: pre.to_string(),
+                weight: tensor(&format!("{pre}.weight"))?,
+                bias: vecf(&format!("{pre}.bias"))?,
+            })
+        };
+        let mut layers = Vec::new();
+        for li in 0..n_layers {
+            let p = format!("l{li}");
+            layers.push(Layer {
+                ln1: LnParams {
+                    name: format!("{p}.ln1"),
+                    gamma: vecf(&format!("{p}.ln1.gamma"))?,
+                    beta: vecf(&format!("{p}.ln1.beta"))?,
+                },
+                wq: lin(&format!("{p}.attn.wq"))?,
+                wk: lin(&format!("{p}.attn.wk"))?,
+                wv: lin(&format!("{p}.attn.wv"))?,
+                wo: lin(&format!("{p}.attn.wo"))?,
+                ln2: LnParams {
+                    name: format!("{p}.ln2"),
+                    gamma: vecf(&format!("{p}.ln2.gamma"))?,
+                    beta: vecf(&format!("{p}.ln2.beta"))?,
+                },
+                ff1: lin(&format!("{p}.ff.w1"))?,
+                ff2: lin(&format!("{p}.ff.w2"))?,
+            });
+        }
+        Ok(BertModel {
+            model_name: name.to_string(),
+            tok_embed: tensor("embed.tok")?,
+            pos_embed: tensor("embed.pos")?,
+            layers,
+            span_head: lin("head.span")?,
+            ln_corrections: BTreeMap::new(),
+            act_bits: BTreeMap::new(),
+        })
+    }
+
+    fn all_lins(&self) -> Vec<&Lin> {
+        let mut v = Vec::new();
+        for l in &self.layers {
+            v.extend([&l.wq, &l.wk, &l.wv, &l.wo, &l.ff1, &l.ff2]);
+        }
+        v
+    }
+
+    fn find_lin_mut(&mut self, name: &str) -> Option<&mut Lin> {
+        for l in self.layers.iter_mut() {
+            for lin in [&mut l.wq, &mut l.wk, &mut l.wv, &mut l.wo, &mut l.ff1, &mut l.ff2] {
+                if lin.name == name {
+                    return Some(lin);
+                }
+            }
+        }
+        None
+    }
+
+    /// Apply a linear with calibration hooks on its input ([N, din] rows).
+    fn lin_fwd(&self, lin: &Lin, x: &Tensor, hooks: &mut Hooks<'_>) -> Tensor {
+        let din = lin.weight.shape[1];
+        let quantized;
+        let x = if let Some(&b) = self.act_bits.get(&lin.name) {
+            let mut xq = x.clone();
+            super::fake_quant_activations(&mut xq, b);
+            quantized = xq;
+            &quantized
+        } else {
+            x
+        };
+        let want_h = hooks
+            .hessians
+            .as_deref()
+            .map(|m| m.contains_key(&lin.name))
+            .unwrap_or(false);
+        let want_c = hooks
+            .capture
+            .as_ref()
+            .map(|(n, _)| *n == lin.name)
+            .unwrap_or(false);
+        if want_h || want_c {
+            let samples: Vec<Vec<f32>> =
+                x.data.chunks_exact(din).map(|c| c.to_vec()).collect();
+            if want_h {
+                if let Some(m) = hooks.hessians.as_deref_mut() {
+                    m.get_mut(&lin.name).unwrap().add_samples(&samples);
+                }
+            }
+            if want_c {
+                if let Some((_, out)) = hooks.capture.as_mut() {
+                    out.extend(samples);
+                }
+            }
+        }
+        // x viewed as [N, din] regardless of leading dims.
+        let n = x.numel() / din;
+        let flat = Tensor::from_vec(&[n, din], x.data.clone());
+        let y = ops::linear(&flat, &lin.weight, Some(&lin.bias));
+        let mut shape = x.shape.clone();
+        *shape.last_mut().unwrap() = lin.weight.shape[0];
+        Tensor::from_vec(&shape, y.data)
+    }
+
+    fn ln_fwd(&self, ln: &LnParams, x: &Tensor, hooks: &mut Hooks<'_>) -> Tensor {
+        let mut y = ops::layernorm(x, &ln.gamma, &ln.beta, 1e-5);
+        if let Some((scale, shift)) = self.ln_corrections.get(&ln.name) {
+            feature_affine(&mut y, scale, shift);
+        }
+        if let Some(stats) = hooks.stats.as_deref_mut() {
+            stats.insert(ln.name.clone(), feature_stats(&y));
+        }
+        if let Some((dense, merges)) = hooks.correct.as_mut() {
+            if let Some((dm, ds)) = dense.get(&ln.name) {
+                let (cm, cs) = feature_stats(&y);
+                let scale: Vec<f32> = ds
+                    .iter()
+                    .zip(&cs)
+                    .map(|(d, c)| d / c.max(1e-6))
+                    .collect();
+                let shift: Vec<f32> = dm
+                    .iter()
+                    .zip(&cm)
+                    .zip(&scale)
+                    .map(|((d, c), s)| d - s * c)
+                    .collect();
+                feature_affine(&mut y, &scale, &shift);
+                merges.insert(ln.name.clone(), (scale, shift));
+            }
+        }
+        y
+    }
+
+    fn run(&self, toks: &Tensor, hooks: &mut Hooks<'_>) -> Tensor {
+        let b = toks.shape[0];
+        let s = toks.shape[1];
+        assert_eq!(s, SEQ_LEN);
+        let d = D_MODEL;
+        // Embedding lookup: token ids arrive as f32 (Tensor is f32-only).
+        let mut x = Tensor::zeros(&[b, s, d]);
+        for bi in 0..b {
+            for si in 0..s {
+                let tok = toks.at2(bi, si) as usize;
+                let te = &self.tok_embed.data[tok * d..(tok + 1) * d];
+                let pe = &self.pos_embed.data[si * d..(si + 1) * d];
+                let dst = &mut x.data[(bi * s + si) * d..(bi * s + si + 1) * d];
+                for i in 0..d {
+                    dst[i] = te[i] + pe[i];
+                }
+            }
+        }
+        let hd = d / N_HEADS;
+        for layer in &self.layers {
+            // --- attention sublayer ---
+            let h = self.ln_fwd(&layer.ln1, &x, hooks);
+            let q = self.lin_fwd(&layer.wq, &h, hooks);
+            let k = self.lin_fwd(&layer.wk, &h, hooks);
+            let v = self.lin_fwd(&layer.wv, &h, hooks);
+            let mut attn_out = Tensor::zeros(&[b, s, d]);
+            let scale = 1.0 / (hd as f32).sqrt();
+            for bi in 0..b {
+                for head in 0..N_HEADS {
+                    // scores [s,s]
+                    let mut scores = Tensor::zeros(&[s, s]);
+                    for i in 0..s {
+                        let qi = &q.data[(bi * s + i) * d + head * hd..(bi * s + i) * d + (head + 1) * hd];
+                        for j in 0..s {
+                            let kj = &k.data[(bi * s + j) * d + head * hd..(bi * s + j) * d + (head + 1) * hd];
+                            let mut dot = 0.0f32;
+                            for t in 0..hd {
+                                dot += qi[t] * kj[t];
+                            }
+                            scores.data[i * s + j] = dot * scale;
+                        }
+                    }
+                    ops::softmax_last(&mut scores);
+                    for i in 0..s {
+                        let dst = &mut attn_out.data
+                            [(bi * s + i) * d + head * hd..(bi * s + i) * d + (head + 1) * hd];
+                        for j in 0..s {
+                            let a = scores.data[i * s + j];
+                            if a == 0.0 {
+                                continue;
+                            }
+                            let vj = &v.data[(bi * s + j) * d + head * hd..(bi * s + j) * d + (head + 1) * hd];
+                            for t in 0..hd {
+                                dst[t] += a * vj[t];
+                            }
+                        }
+                    }
+                }
+            }
+            let o = self.lin_fwd(&layer.wo, &attn_out, hooks);
+            for (a, b_) in x.data.iter_mut().zip(&o.data) {
+                *a += b_;
+            }
+            // --- FF sublayer ---
+            let h = self.ln_fwd(&layer.ln2, &x, hooks);
+            let f1 = ops::gelu(&self.lin_fwd(&layer.ff1, &h, hooks));
+            let f2 = self.lin_fwd(&layer.ff2, &f1, hooks);
+            for (a, b_) in x.data.iter_mut().zip(&f2.data) {
+                *a += b_;
+            }
+        }
+        // Span head: [B,S,2] logits.
+        self.lin_fwd(&self.span_head, &x, &mut Hooks::none())
+    }
+}
+
+fn feature_stats(x: &Tensor) -> (Vec<f32>, Vec<f32>) {
+    let d = *x.shape.last().unwrap();
+    let n = (x.numel() / d) as f32;
+    let mut mean = vec![0.0f32; d];
+    for chunk in x.data.chunks_exact(d) {
+        for (m, v) in mean.iter_mut().zip(chunk) {
+            *m += v;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n;
+    }
+    let mut var = vec![0.0f32; d];
+    for chunk in x.data.chunks_exact(d) {
+        for ((vv, v), m) in var.iter_mut().zip(chunk).zip(&mean) {
+            *vv += (v - m) * (v - m);
+        }
+    }
+    let std = var.iter().map(|v| (v / n + 1e-8).sqrt()).collect();
+    (mean, std)
+}
+
+fn feature_affine(x: &mut Tensor, scale: &[f32], shift: &[f32]) {
+    let d = *x.shape.last().unwrap();
+    for chunk in x.data.chunks_exact_mut(d) {
+        for (i, v) in chunk.iter_mut().enumerate() {
+            *v = *v * scale[i] + shift[i];
+        }
+    }
+}
+
+impl CompressibleModel for BertModel {
+    fn name(&self) -> &str {
+        &self.model_name
+    }
+
+    fn forward(&self, x: &Tensor) -> Tensor {
+        self.run(x, &mut Hooks::none())
+    }
+
+    fn layers(&self) -> Vec<LayerInfo> {
+        self.all_lins()
+            .into_iter()
+            .map(|l| LayerInfo {
+                name: l.name.clone(),
+                d_row: l.weight.shape[0],
+                d_col: l.weight.shape[1],
+                // One matmul per token position.
+                macs: (l.weight.shape[0] * l.weight.shape[1] * SEQ_LEN) as u64,
+                kind: "linear",
+            })
+            .collect()
+    }
+
+    fn get_weight(&self, name: &str) -> Mat {
+        let lin = self
+            .all_lins()
+            .into_iter()
+            .find(|l| l.name == name)
+            .unwrap_or_else(|| panic!("unknown layer '{name}'"));
+        Mat::from_f32(lin.weight.shape[0], lin.weight.shape[1], &lin.weight.data)
+    }
+
+    fn set_weight(&mut self, name: &str, w: &Mat) {
+        let lin = self
+            .find_lin_mut(name)
+            .unwrap_or_else(|| panic!("unknown layer '{name}'"));
+        assert_eq!(w.rows, lin.weight.shape[0]);
+        assert_eq!(w.cols, lin.weight.shape[1]);
+        lin.weight.data = w.to_f32();
+    }
+
+    fn set_act_bits(&mut self, name: &str, bits: u32) {
+        if bits >= 16 {
+            self.act_bits.remove(name);
+        } else {
+            self.act_bits.insert(name.to_string(), bits);
+        }
+    }
+
+    fn accumulate_hessians(&self, x: &Tensor, accs: &mut BTreeMap<String, HessianAccumulator>) {
+        let mut hooks = Hooks::none();
+        hooks.hessians = Some(accs);
+        self.run(x, &mut hooks);
+    }
+
+    fn capture_layer_input(&self, x: &Tensor, layer: &str) -> Mat {
+        let mut cols: Vec<Vec<f32>> = Vec::new();
+        {
+            let mut hooks = Hooks::none();
+            hooks.capture = Some((layer, &mut cols));
+            self.run(x, &mut hooks);
+        }
+        assert!(!cols.is_empty(), "layer '{layer}' not hit");
+        let d = cols[0].len();
+        let n = cols.len();
+        let mut m = Mat::zeros(d, n);
+        for (j, c) in cols.iter().enumerate() {
+            for i in 0..d {
+                m.data[i * n + j] = c[i] as f64;
+            }
+        }
+        m
+    }
+
+    fn activation_stats(&self, x: &Tensor) -> BTreeMap<String, (Vec<f32>, Vec<f32>)> {
+        let mut stats = BTreeMap::new();
+        {
+            let mut hooks = Hooks::none();
+            hooks.stats = Some(&mut stats);
+            self.run(x, &mut hooks);
+        }
+        stats
+    }
+
+    fn correct_stats(
+        &mut self,
+        x: &Tensor,
+        dense_stats: &BTreeMap<String, (Vec<f32>, Vec<f32>)>,
+    ) {
+        let mut merges = BTreeMap::new();
+        {
+            let mut hooks = Hooks::none();
+            hooks.correct = Some((dense_stats, &mut merges));
+            self.run(x, &mut hooks);
+        }
+        // Compose with any existing corrections.
+        for (name, (scale, shift)) in merges {
+            let entry = self
+                .ln_corrections
+                .entry(name)
+                .or_insert_with(|| (vec![1.0; D_MODEL], vec![0.0; D_MODEL]));
+            for i in 0..D_MODEL {
+                entry.0[i] *= scale[i];
+                entry.1[i] = entry.1[i] * scale[i] + shift[i];
+            }
+        }
+    }
+
+    fn reset_bn_stats(&mut self, _batches: &[Tensor]) {
+        // Transformers have no BatchNorm (paper: "the BERT models have no
+        // batchnorm layers" — they get mean/var correction instead).
+    }
+
+    fn clone_box(&self) -> Box<dyn CompressibleModel> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    use crate::util::io::NamedTensor;
+    use crate::util::rng::Pcg;
+
+    pub fn fake_bert_bundle(n_layers: usize, seed: u64) -> TensorMap {
+        let mut rng = Pcg::new(seed);
+        let mut m = TensorMap::new();
+        let mut mat = |m: &mut TensorMap, key: &str, r: usize, c: usize, s: f32| {
+            m.insert(
+                key.to_string(),
+                NamedTensor {
+                    shape: vec![r, c],
+                    data: (0..r * c).map(|_| rng.normal_f32() * s).collect(),
+                },
+            );
+        };
+        mat(&mut m, "embed.tok", 128, D_MODEL, 0.05);
+        mat(&mut m, "embed.pos", SEQ_LEN, D_MODEL, 0.05);
+        for li in 0..n_layers {
+            let p = format!("l{li}");
+            for ln in ["ln1", "ln2"] {
+                m.insert(
+                    format!("{p}.{ln}.gamma"),
+                    NamedTensor { shape: vec![D_MODEL], data: vec![1.0; D_MODEL] },
+                );
+                m.insert(
+                    format!("{p}.{ln}.beta"),
+                    NamedTensor { shape: vec![D_MODEL], data: vec![0.0; D_MODEL] },
+                );
+            }
+            for w in ["wq", "wk", "wv", "wo"] {
+                mat(&mut m, &format!("{p}.attn.{w}.weight"), D_MODEL, D_MODEL, 0.05);
+                m.insert(
+                    format!("{p}.attn.{w}.bias"),
+                    NamedTensor { shape: vec![D_MODEL], data: vec![0.0; D_MODEL] },
+                );
+            }
+            mat(&mut m, &format!("{p}.ff.w1.weight"), D_FF, D_MODEL, 0.05);
+            m.insert(
+                format!("{p}.ff.w1.bias"),
+                NamedTensor { shape: vec![D_FF], data: vec![0.0; D_FF] },
+            );
+            mat(&mut m, &format!("{p}.ff.w2.weight"), D_MODEL, D_FF, 0.05);
+            m.insert(
+                format!("{p}.ff.w2.bias"),
+                NamedTensor { shape: vec![D_MODEL], data: vec![0.0; D_MODEL] },
+            );
+        }
+        mat(&mut m, "head.span.weight", 2, D_MODEL, 0.05);
+        m.insert("head.span.bias".into(), NamedTensor { shape: vec![2], data: vec![0.0; 2] });
+        m
+    }
+
+    fn toks(b: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg::new(seed);
+        Tensor::from_vec(
+            &[b, SEQ_LEN],
+            (0..b * SEQ_LEN).map(|_| (10 + rng.below(118)) as f32).collect(),
+        )
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = BertModel::from_bundle("bert2", &fake_bert_bundle(2, 1)).unwrap();
+        let y = m.forward(&toks(3, 2));
+        assert_eq!(y.shape, vec![3, SEQ_LEN, 2]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn layers_count() {
+        let m = BertModel::from_bundle("bert4", &fake_bert_bundle(4, 3)).unwrap();
+        let ls = m.layers();
+        assert_eq!(ls.len(), 4 * 6);
+        assert_eq!(ls[0].name, "l0.attn.wq");
+        assert!(ls.iter().any(|l| l.d_col == D_FF)); // ff.w2
+    }
+
+    #[test]
+    fn weight_roundtrip() {
+        let mut m = BertModel::from_bundle("bert2", &fake_bert_bundle(2, 4)).unwrap();
+        let x = toks(2, 5);
+        let y0 = m.forward(&x);
+        let mut w = m.get_weight("l1.ff.w1");
+        assert_eq!((w.rows, w.cols), (D_FF, D_MODEL));
+        for v in w.data.iter_mut() {
+            *v = 0.0;
+        }
+        m.set_weight("l1.ff.w1", &w);
+        let y1 = m.forward(&x);
+        assert!(y0.sq_err(&y1) > 0.0);
+    }
+
+    #[test]
+    fn hessian_capture_counts_tokens() {
+        let m = BertModel::from_bundle("bert2", &fake_bert_bundle(2, 6)).unwrap();
+        let mut accs = BTreeMap::new();
+        accs.insert("l0.attn.wq".to_string(), HessianAccumulator::new(D_MODEL));
+        m.accumulate_hessians(&toks(4, 7), &mut accs);
+        // One sample per token position.
+        assert_eq!(accs["l0.attn.wq"].n_samples, 4 * SEQ_LEN);
+    }
+
+    #[test]
+    fn stats_correction_improves_ln_stats() {
+        let dense = BertModel::from_bundle("bert2", &fake_bert_bundle(2, 8)).unwrap();
+        let x = toks(8, 9);
+        let ref_stats = dense.activation_stats(&x);
+        let mut comp = dense.clone();
+        let mut w = comp.get_weight("l0.attn.wv");
+        for v in w.data.iter_mut() {
+            *v *= 0.3;
+        }
+        comp.set_weight("l0.attn.wv", &w);
+        let before = comp.activation_stats(&x);
+        comp.correct_stats(&x, &ref_stats);
+        let after = comp.activation_stats(&x);
+        let key = "l1.ln2";
+        let dist = |s: &BTreeMap<String, (Vec<f32>, Vec<f32>)>| -> f32 {
+            let (dm, dsd) = &ref_stats[key];
+            let (m2, sd2) = &s[key];
+            dm.iter()
+                .zip(m2)
+                .map(|(a, b)| (a - b).abs())
+                .chain(dsd.iter().zip(sd2).map(|(a, b)| (a - b).abs()))
+                .sum()
+        };
+        assert!(dist(&after) <= dist(&before) + 1e-4, "{} vs {}", dist(&after), dist(&before));
+    }
+}

@@ -1,0 +1,870 @@
+//! CNN engine: a small op-list IR that realizes the MiniResNet family and
+//! TinyDet, with calibration hooks.
+//!
+//! The IR mirrors `python/compile/models.py` exactly (layer names, NCHW /
+//! OIHW layouts, strides, residual wiring), so weights trained in JAX
+//! drop in unchanged; the correspondence is verified end-to-end by the
+//! runtime bridge test (native forward vs JAX-lowered HLO via PJRT).
+
+use super::ops;
+use super::{CompressibleModel, LayerInfo};
+use crate::compress::hessian::HessianAccumulator;
+use crate::linalg::Mat;
+use crate::tensor::Tensor;
+use crate::util::io::TensorMap;
+use crate::util::rng::Pcg;
+use std::collections::BTreeMap;
+
+/// A convolution layer (the compressible unit).
+#[derive(Debug, Clone)]
+pub struct ConvLayer {
+    pub name: String,
+    /// OIHW weights.
+    pub weight: Tensor,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvLayer {
+    fn d_row(&self) -> usize {
+        self.weight.shape[0]
+    }
+    fn d_col(&self) -> usize {
+        self.weight.shape[1] * self.weight.shape[2] * self.weight.shape[3]
+    }
+}
+
+/// BatchNorm (inference form, running stats).
+#[derive(Debug, Clone)]
+pub struct BnLayer {
+    pub name: String,
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub mean: Vec<f32>,
+    pub var: Vec<f32>,
+}
+
+/// Fully-connected layer.
+#[derive(Debug, Clone)]
+pub struct LinLayer {
+    pub name: String,
+    /// [out, in] weights.
+    pub weight: Tensor,
+    pub bias: Vec<f32>,
+}
+
+/// IR node. `Block` is a residual unit: relu(body(x) + down(x)) where
+/// `down` defaults to identity.
+#[derive(Debug, Clone)]
+pub enum Node {
+    Conv(usize),
+    Bn(usize),
+    Relu,
+    Block { body: Vec<Node>, down: Vec<Node> },
+    GlobalPool,
+    Linear(usize),
+    /// Per-channel bias add on a [B,C,H,W] tensor (TinyDet head).
+    ChannelBias(Vec<f32>),
+}
+
+/// Calibration hooks threaded through a forward pass.
+struct Hooks<'a> {
+    /// Accumulate unfolded conv/linear inputs into Hessians.
+    hessians: Option<&'a mut BTreeMap<String, HessianAccumulator>>,
+    /// Capture raw input columns of one named layer.
+    capture: Option<(&'a str, &'a mut Vec<Vec<f32>>)>,
+    /// Record per-channel (mean, std) after each BN.
+    stats: Option<&'a mut BTreeMap<String, (Vec<f32>, Vec<f32>)>>,
+    /// In-flight statistics correction (dense reference stats) +
+    /// collected affine merges (applied to the model afterwards).
+    correct: Option<(
+        &'a BTreeMap<String, (Vec<f32>, Vec<f32>)>,
+        &'a mut Vec<(String, Vec<f32>, Vec<f32>)>,
+    )>,
+    /// Use batch statistics in BN (true BN-reset pass) and record them.
+    bn_batch_stats: Option<&'a mut BTreeMap<String, (Vec<f32>, Vec<f32>)>>,
+    /// Max im2col columns per image fed to Hessians (subsampled).
+    cols_per_image: usize,
+    rng: Pcg,
+}
+
+impl<'a> Hooks<'a> {
+    fn none() -> Hooks<'a> {
+        Hooks {
+            hessians: None,
+            capture: None,
+            stats: None,
+            correct: None,
+            bn_batch_stats: None,
+            cols_per_image: 16,
+            rng: Pcg::new(0x0bc),
+        }
+    }
+}
+
+/// A CNN model instance.
+#[derive(Clone)]
+pub struct CnnModel {
+    pub model_name: String,
+    pub nodes: Vec<Node>,
+    pub convs: Vec<ConvLayer>,
+    pub bns: Vec<BnLayer>,
+    pub linears: Vec<LinLayer>,
+    /// Input spatial size (for MAC accounting).
+    pub img: usize,
+    /// Per-layer activation fake-quant bits (absent/≥16 = off).
+    pub act_bits: BTreeMap<String, u32>,
+}
+
+impl CnnModel {
+    // ------------------------------------------------------------------
+    // Builders
+    // ------------------------------------------------------------------
+
+    /// Build a MiniResNet ("rneta"/"rnetb"/"rnetc") from a weight bundle.
+    pub fn resnet(name: &str, params: &TensorMap) -> anyhow::Result<CnnModel> {
+        let (w0, nb) = match name {
+            "rneta" => (8, 1),
+            "rnetb" => (8, 2),
+            "rnetc" => (12, 2),
+            _ => anyhow::bail!("unknown resnet '{name}'"),
+        };
+        let mut m = CnnModel {
+            model_name: name.to_string(),
+            nodes: Vec::new(),
+            convs: Vec::new(),
+            bns: Vec::new(),
+            linears: Vec::new(),
+            img: 16,
+            act_bits: BTreeMap::new(),
+        };
+        let mut nodes = vec![
+            m.add_conv(params, "stem.conv", 1, 1)?,
+            m.add_bn(params, "stem.bn")?,
+            Node::Relu,
+        ];
+        let widths = [w0, 2 * w0, 4 * w0];
+        for (si, _w) in widths.iter().enumerate() {
+            for bi in 0..nb {
+                let pre = format!("s{si}.b{bi}");
+                let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+                let body = vec![
+                    m.add_conv(params, &format!("{pre}.conv1"), stride, 1)?,
+                    m.add_bn(params, &format!("{pre}.bn1"))?,
+                    Node::Relu,
+                    m.add_conv(params, &format!("{pre}.conv2"), 1, 1)?,
+                    m.add_bn(params, &format!("{pre}.bn2"))?,
+                ];
+                let down = if params.contains_key(&format!("{pre}.down.conv.weight")) {
+                    vec![
+                        m.add_conv(params, &format!("{pre}.down.conv"), stride, 0)?,
+                        m.add_bn(params, &format!("{pre}.down.bn"))?,
+                    ]
+                } else {
+                    vec![]
+                };
+                nodes.push(Node::Block { body, down });
+            }
+        }
+        nodes.push(Node::GlobalPool);
+        nodes.push(m.add_linear(params, "fc")?);
+        m.nodes = nodes;
+        Ok(m)
+    }
+
+    /// Build TinyDet from a weight bundle.
+    pub fn tinydet(params: &TensorMap) -> anyhow::Result<CnnModel> {
+        let mut m = CnnModel {
+            model_name: "tinydet".to_string(),
+            nodes: Vec::new(),
+            convs: Vec::new(),
+            bns: Vec::new(),
+            linears: Vec::new(),
+            img: 16,
+            act_bits: BTreeMap::new(),
+        };
+        let head_bias = params
+            .get("head.bias")
+            .ok_or_else(|| anyhow::anyhow!("missing head.bias"))?
+            .data
+            .clone();
+        let nodes = vec![
+            m.add_conv(params, "c1.conv", 1, 1)?,
+            m.add_bn(params, "c1.bn")?,
+            Node::Relu,
+            m.add_conv(params, "c2.conv", 2, 1)?,
+            m.add_bn(params, "c2.bn")?,
+            Node::Relu,
+            m.add_conv(params, "c3.conv", 2, 1)?,
+            m.add_bn(params, "c3.bn")?,
+            Node::Relu,
+            m.add_conv(params, "head.conv", 1, 0)?,
+            Node::ChannelBias(head_bias),
+        ];
+        m.nodes = nodes;
+        Ok(m)
+    }
+
+    fn add_conv(&mut self, p: &TensorMap, name: &str, stride: usize, pad: usize) -> anyhow::Result<Node> {
+        let t = p
+            .get(&format!("{name}.weight"))
+            .ok_or_else(|| anyhow::anyhow!("missing {name}.weight"))?;
+        let weight = Tensor::from_vec(&t.shape, t.data.clone());
+        self.convs.push(ConvLayer { name: name.to_string(), weight, stride, pad });
+        Ok(Node::Conv(self.convs.len() - 1))
+    }
+
+    fn add_bn(&mut self, p: &TensorMap, name: &str) -> anyhow::Result<Node> {
+        let get = |suffix: &str| -> anyhow::Result<Vec<f32>> {
+            Ok(p.get(&format!("{name}.{suffix}"))
+                .ok_or_else(|| anyhow::anyhow!("missing {name}.{suffix}"))?
+                .data
+                .clone())
+        };
+        self.bns.push(BnLayer {
+            name: name.to_string(),
+            gamma: get("gamma")?,
+            beta: get("beta")?,
+            mean: get("mean")?,
+            var: get("var")?,
+        });
+        Ok(Node::Bn(self.bns.len() - 1))
+    }
+
+    fn add_linear(&mut self, p: &TensorMap, name: &str) -> anyhow::Result<Node> {
+        let w = p
+            .get(&format!("{name}.weight"))
+            .ok_or_else(|| anyhow::anyhow!("missing {name}.weight"))?;
+        let b = p
+            .get(&format!("{name}.bias"))
+            .ok_or_else(|| anyhow::anyhow!("missing {name}.bias"))?;
+        self.linears.push(LinLayer {
+            name: name.to_string(),
+            weight: Tensor::from_vec(&w.shape, w.data.clone()),
+            bias: b.data.clone(),
+        });
+        Ok(Node::Linear(self.linears.len() - 1))
+    }
+
+    // ------------------------------------------------------------------
+    // Forward (with hooks)
+    // ------------------------------------------------------------------
+
+    fn run_nodes(&self, nodes: &[Node], x: Tensor, hooks: &mut Hooks<'_>) -> Tensor {
+        let mut h = x;
+        for node in nodes {
+            h = match node {
+                Node::Conv(i) => {
+                    let conv = &self.convs[*i];
+                    if let Some(&b) = self.act_bits.get(&conv.name) {
+                        super::fake_quant_activations(&mut h, b);
+                    }
+                    self.hook_conv_input(conv, &h, hooks);
+                    ops::conv2d(&h, &conv.weight, conv.stride, conv.pad)
+                }
+                Node::Bn(i) => {
+                    let bn = &self.bns[*i];
+                    let mut y = if let Some(recs) = hooks.bn_batch_stats.as_deref_mut() {
+                        // BN-reset pass: normalize by the batch statistics
+                        // and record them as the new running stats.
+                        let (mean, var) = batch_stats(&h);
+                        recs.insert(bn.name.clone(), (mean.clone(), var.clone()));
+                        ops::batchnorm2d(&h, &bn.gamma, &bn.beta, &mean, &var, 1e-5)
+                    } else {
+                        ops::batchnorm2d(&h, &bn.gamma, &bn.beta, &bn.mean, &bn.var, 1e-5)
+                    };
+                    if let Some(stats) = hooks.stats.as_deref_mut() {
+                        let (mean, var) = batch_stats(&y);
+                        let std = var.iter().map(|v| (v + 1e-8).sqrt()).collect();
+                        stats.insert(bn.name.clone(), (mean, std));
+                    }
+                    if let Some((dense, merges)) = hooks.correct.as_mut() {
+                        if let Some((dm, ds)) = dense.get(&bn.name) {
+                            let (cm, cv) = batch_stats(&y);
+                            let cs: Vec<f32> =
+                                cv.iter().map(|v| (v + 1e-8).sqrt()).collect();
+                            // y' = ds/cs · (y − cm) + dm  (Eq. 9)
+                            let scale: Vec<f32> =
+                                ds.iter().zip(&cs).map(|(d, c)| d / c).collect();
+                            let shift: Vec<f32> = dm
+                                .iter()
+                                .zip(&cm)
+                                .zip(&scale)
+                                .map(|((d, c), s)| d - s * c)
+                                .collect();
+                            y = apply_channel_affine(&y, &scale, &shift);
+                            merges.push((bn.name.clone(), scale, shift));
+                        }
+                    }
+                    y
+                }
+                Node::Relu => ops::relu(&h),
+                Node::Block { body, down } => {
+                    let main = self.run_nodes(body, h.clone(), hooks);
+                    let skip = if down.is_empty() {
+                        h
+                    } else {
+                        self.run_nodes(down, h, hooks)
+                    };
+                    let mut sum = main;
+                    for (a, b) in sum.data.iter_mut().zip(&skip.data) {
+                        *a += b;
+                    }
+                    ops::relu(&sum)
+                }
+                Node::GlobalPool => ops::global_avg_pool(&h),
+                Node::Linear(i) => {
+                    let lin = &self.linears[*i];
+                    if let Some(&b) = self.act_bits.get(&lin.name) {
+                        super::fake_quant_activations(&mut h, b);
+                    }
+                    self.hook_linear_input(lin, &h, hooks);
+                    ops::linear(&h, &lin.weight, Some(&lin.bias))
+                }
+                Node::ChannelBias(bias) => {
+                    let mut y = h;
+                    let (b, c, hh, ww) =
+                        (y.shape[0], y.shape[1], y.shape[2], y.shape[3]);
+                    for bi in 0..b {
+                        for ci in 0..c {
+                            let sl = &mut y.data
+                                [(bi * c + ci) * hh * ww..(bi * c + ci + 1) * hh * ww];
+                            for v in sl.iter_mut() {
+                                *v += bias[ci];
+                            }
+                        }
+                    }
+                    y
+                }
+            };
+        }
+        h
+    }
+
+    fn hook_conv_input(&self, conv: &ConvLayer, h: &Tensor, hooks: &mut Hooks<'_>) {
+        let want_hessian = hooks
+            .hessians
+            .as_deref()
+            .map(|m| m.contains_key(&conv.name))
+            .unwrap_or(false);
+        let want_capture = hooks
+            .capture
+            .as_ref()
+            .map(|(n, _)| *n == conv.name)
+            .unwrap_or(false);
+        if !want_hessian && !want_capture {
+            return;
+        }
+        let (kh, kw) = (conv.weight.shape[2], conv.weight.shape[3]);
+        let (cols, oh, ow) = ops::im2col(h, kh, kw, conv.stride, conv.pad);
+        let d_col = conv.d_col();
+        let b = h.shape[0];
+        let n_cols = b * oh * ow;
+        // Subsample positions per image (paper subsamples layer inputs;
+        // full conv im2col would make XXᵀ quadratically expensive).
+        let per_img = hooks.cols_per_image.min(oh * ow);
+        let mut samples: Vec<Vec<f32>> = Vec::with_capacity(b * per_img);
+        for bi in 0..b {
+            let picks = hooks.rng.sample_indices(oh * ow, per_img);
+            for pos in picks {
+                let col = bi * oh * ow + pos;
+                let mut v = Vec::with_capacity(d_col);
+                for r in 0..d_col {
+                    v.push(cols[r * n_cols + col]);
+                }
+                samples.push(v);
+            }
+        }
+        if want_hessian {
+            if let Some(m) = hooks.hessians.as_deref_mut() {
+                m.get_mut(&conv.name).unwrap().add_samples(&samples);
+            }
+        }
+        if want_capture {
+            if let Some((_, out)) = hooks.capture.as_mut() {
+                out.extend(samples);
+            }
+        }
+    }
+
+    fn hook_linear_input(&self, lin: &LinLayer, h: &Tensor, hooks: &mut Hooks<'_>) {
+        let din = lin.weight.shape[1];
+        let want_hessian = hooks
+            .hessians
+            .as_deref()
+            .map(|m| m.contains_key(&lin.name))
+            .unwrap_or(false);
+        let want_capture = hooks
+            .capture
+            .as_ref()
+            .map(|(n, _)| *n == lin.name)
+            .unwrap_or(false);
+        if !want_hessian && !want_capture {
+            return;
+        }
+        let samples: Vec<Vec<f32>> = h.data.chunks_exact(din).map(|c| c.to_vec()).collect();
+        if want_hessian {
+            if let Some(m) = hooks.hessians.as_deref_mut() {
+                m.get_mut(&lin.name).unwrap().add_samples(&samples);
+            }
+        }
+        if want_capture {
+            if let Some((_, out)) = hooks.capture.as_mut() {
+                out.extend(samples);
+            }
+        }
+    }
+
+    /// Spatial output size of each conv (for MAC accounting), walked
+    /// statically from the input resolution.
+    fn conv_out_positions(&self) -> BTreeMap<String, usize> {
+        let mut out = BTreeMap::new();
+        fn walk(
+            model: &CnnModel,
+            nodes: &[Node],
+            mut hw: usize,
+            out: &mut BTreeMap<String, usize>,
+        ) -> usize {
+            for n in nodes {
+                match n {
+                    Node::Conv(i) => {
+                        let c = &model.convs[*i];
+                        let k = c.weight.shape[2];
+                        let oh = (hw + 2 * c.pad - k) / c.stride + 1;
+                        hw = oh;
+                        out.insert(c.name.clone(), oh * oh);
+                    }
+                    Node::Block { body, down } => {
+                        let after = walk(model, body, hw, out);
+                        if !down.is_empty() {
+                            walk(model, down, hw, out);
+                        }
+                        hw = after;
+                    }
+                    Node::GlobalPool => hw = 1,
+                    _ => {}
+                }
+            }
+            hw
+        }
+        walk(self, &self.nodes, self.img, &mut out);
+        out
+    }
+}
+
+fn batch_stats(x: &Tensor) -> (Vec<f32>, Vec<f32>) {
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let n = (b * h * w) as f32;
+    let mut mean = vec![0.0f32; c];
+    let mut var = vec![0.0f32; c];
+    for bi in 0..b {
+        for ci in 0..c {
+            let sl = &x.data[(bi * c + ci) * h * w..(bi * c + ci + 1) * h * w];
+            mean[ci] += sl.iter().sum::<f32>();
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n;
+    }
+    for bi in 0..b {
+        for ci in 0..c {
+            let sl = &x.data[(bi * c + ci) * h * w..(bi * c + ci + 1) * h * w];
+            var[ci] += sl.iter().map(|v| (v - mean[ci]) * (v - mean[ci])).sum::<f32>();
+        }
+    }
+    for v in var.iter_mut() {
+        *v /= n;
+    }
+    (mean, var)
+}
+
+fn apply_channel_affine(x: &Tensor, scale: &[f32], shift: &[f32]) -> Tensor {
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut y = x.clone();
+    for bi in 0..b {
+        for ci in 0..c {
+            let sl = &mut y.data[(bi * c + ci) * h * w..(bi * c + ci + 1) * h * w];
+            for v in sl.iter_mut() {
+                *v = *v * scale[ci] + shift[ci];
+            }
+        }
+    }
+    y
+}
+
+impl CompressibleModel for CnnModel {
+    fn name(&self) -> &str {
+        &self.model_name
+    }
+
+    fn forward(&self, x: &Tensor) -> Tensor {
+        self.run_nodes(&self.nodes, x.clone(), &mut Hooks::none())
+    }
+
+    fn layers(&self) -> Vec<LayerInfo> {
+        let positions = self.conv_out_positions();
+        let mut out = Vec::new();
+        // Walk nodes in order so the list is forward-ordered.
+        fn walk(model: &CnnModel, nodes: &[Node], positions: &BTreeMap<String, usize>, out: &mut Vec<LayerInfo>) {
+            for n in nodes {
+                match n {
+                    Node::Conv(i) => {
+                        let c = &model.convs[*i];
+                        let pos = *positions.get(&c.name).unwrap_or(&1) as u64;
+                        out.push(LayerInfo {
+                            name: c.name.clone(),
+                            d_row: c.d_row(),
+                            d_col: c.d_col(),
+                            macs: (c.d_row() * c.d_col()) as u64 * pos,
+                            kind: "conv",
+                        });
+                    }
+                    Node::Linear(i) => {
+                        let l = &model.linears[*i];
+                        out.push(LayerInfo {
+                            name: l.name.clone(),
+                            d_row: l.weight.shape[0],
+                            d_col: l.weight.shape[1],
+                            macs: (l.weight.shape[0] * l.weight.shape[1]) as u64,
+                            kind: "linear",
+                        });
+                    }
+                    Node::Block { body, down } => {
+                        walk(model, body, positions, out);
+                        walk(model, down, positions, out);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        walk(self, &self.nodes, &positions, &mut out);
+        out
+    }
+
+    fn get_weight(&self, name: &str) -> Mat {
+        if let Some(c) = self.convs.iter().find(|c| c.name == name) {
+            return Mat::from_f32(c.d_row(), c.d_col(), &c.weight.data);
+        }
+        if let Some(l) = self.linears.iter().find(|l| l.name == name) {
+            return Mat::from_f32(l.weight.shape[0], l.weight.shape[1], &l.weight.data);
+        }
+        panic!("unknown layer '{name}'");
+    }
+
+    fn set_weight(&mut self, name: &str, w: &Mat) {
+        if let Some(c) = self.convs.iter_mut().find(|c| c.name == name) {
+            assert_eq!(w.rows, c.weight.shape[0]);
+            assert_eq!(w.cols, c.weight.shape[1] * c.weight.shape[2] * c.weight.shape[3]);
+            c.weight.data = w.to_f32();
+            return;
+        }
+        if let Some(l) = self.linears.iter_mut().find(|l| l.name == name) {
+            assert_eq!(w.rows, l.weight.shape[0]);
+            assert_eq!(w.cols, l.weight.shape[1]);
+            l.weight.data = w.to_f32();
+            return;
+        }
+        panic!("unknown layer '{name}'");
+    }
+
+    fn set_act_bits(&mut self, name: &str, bits: u32) {
+        if bits >= 16 {
+            self.act_bits.remove(name);
+        } else {
+            self.act_bits.insert(name.to_string(), bits);
+        }
+    }
+
+    fn accumulate_hessians(&self, x: &Tensor, accs: &mut BTreeMap<String, HessianAccumulator>) {
+        let mut hooks = Hooks::none();
+        hooks.hessians = Some(accs);
+        self.run_nodes(&self.nodes, x.clone(), &mut hooks);
+    }
+
+    fn capture_layer_input(&self, x: &Tensor, layer: &str) -> Mat {
+        let mut cols: Vec<Vec<f32>> = Vec::new();
+        {
+            let mut hooks = Hooks::none();
+            hooks.capture = Some((layer, &mut cols));
+            self.run_nodes(&self.nodes, x.clone(), &mut hooks);
+        }
+        assert!(!cols.is_empty(), "layer '{layer}' not hit by forward");
+        let d = cols[0].len();
+        let n = cols.len();
+        let mut m = Mat::zeros(d, n);
+        for (j, c) in cols.iter().enumerate() {
+            for i in 0..d {
+                m.data[i * n + j] = c[i] as f64;
+            }
+        }
+        m
+    }
+
+    fn activation_stats(&self, x: &Tensor) -> BTreeMap<String, (Vec<f32>, Vec<f32>)> {
+        let mut stats = BTreeMap::new();
+        {
+            let mut hooks = Hooks::none();
+            hooks.stats = Some(&mut stats);
+            self.run_nodes(&self.nodes, x.clone(), &mut hooks);
+        }
+        stats
+    }
+
+    fn correct_stats(
+        &mut self,
+        x: &Tensor,
+        dense_stats: &BTreeMap<String, (Vec<f32>, Vec<f32>)>,
+    ) {
+        let mut merges: Vec<(String, Vec<f32>, Vec<f32>)> = Vec::new();
+        {
+            let mut hooks = Hooks::none();
+            hooks.correct = Some((dense_stats, &mut merges));
+            self.run_nodes(&self.nodes, x.clone(), &mut hooks);
+        }
+        // Merge corrections into BN affine params: bn(x)·s + t.
+        for (name, scale, shift) in merges {
+            let bn = self.bns.iter_mut().find(|b| b.name == name).unwrap();
+            for c in 0..bn.gamma.len() {
+                bn.gamma[c] *= scale[c];
+                bn.beta[c] = bn.beta[c] * scale[c] + shift[c];
+            }
+        }
+    }
+
+    fn reset_bn_stats(&mut self, batches: &[Tensor]) {
+        // One big pass per batch with batch-statistics BN; average the
+        // recorded stats across batches (equal weights — batches are the
+        // same size).
+        let mut sums: BTreeMap<String, (Vec<f32>, Vec<f32>, usize)> = BTreeMap::new();
+        for b in batches {
+            let mut recs = BTreeMap::new();
+            {
+                let mut hooks = Hooks::none();
+                hooks.bn_batch_stats = Some(&mut recs);
+                self.run_nodes(&self.nodes, b.clone(), &mut hooks);
+            }
+            for (name, (mean, var)) in recs {
+                let e = sums
+                    .entry(name)
+                    .or_insert_with(|| (vec![0.0; mean.len()], vec![0.0; var.len()], 0));
+                for (a, v) in e.0.iter_mut().zip(&mean) {
+                    *a += v;
+                }
+                for (a, v) in e.1.iter_mut().zip(&var) {
+                    *a += v;
+                }
+                e.2 += 1;
+            }
+        }
+        for (name, (mean, var, n)) in sums {
+            let bn = self.bns.iter_mut().find(|b| b.name == name).unwrap();
+            bn.mean = mean.iter().map(|v| v / n as f32).collect();
+            bn.var = var.iter().map(|v| v / n as f32).collect();
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn CompressibleModel> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    use crate::util::io::NamedTensor;
+
+    /// Build a tiny random rneta-shaped bundle for engine tests.
+    pub fn fake_resnet_bundle(seed: u64) -> TensorMap {
+        let mut rng = Pcg::new(seed);
+        let mut m = TensorMap::new();
+        let mut conv = |m: &mut TensorMap, name: &str, o: usize, i: usize, k: usize| {
+            let n = o * i * k * k;
+            let scale = (2.0 / (i * k * k) as f64).sqrt();
+            m.insert(
+                format!("{name}.weight"),
+                NamedTensor {
+                    shape: vec![o, i, k, k],
+                    data: (0..n).map(|_| (rng.normal() * scale) as f32).collect(),
+                },
+            );
+        };
+        let bn = |m: &mut TensorMap, name: &str, c: usize| {
+            m.insert(format!("{name}.gamma"), NamedTensor { shape: vec![c], data: vec![1.0; c] });
+            m.insert(format!("{name}.beta"), NamedTensor { shape: vec![c], data: vec![0.0; c] });
+            m.insert(format!("{name}.mean"), NamedTensor { shape: vec![c], data: vec![0.0; c] });
+            m.insert(format!("{name}.var"), NamedTensor { shape: vec![c], data: vec![1.0; c] });
+        };
+        conv(&mut m, "stem.conv", 8, 3, 3);
+        bn(&mut m, "stem.bn", 8);
+        let widths = [8usize, 16, 32];
+        let mut cin = 8;
+        for (si, &w) in widths.iter().enumerate() {
+            let pre = format!("s{si}.b0");
+            conv(&mut m, &format!("{pre}.conv1"), w, cin, 3);
+            bn(&mut m, &format!("{pre}.bn1"), w);
+            conv(&mut m, &format!("{pre}.conv2"), w, w, 3);
+            bn(&mut m, &format!("{pre}.bn2"), w);
+            if si > 0 {
+                conv(&mut m, &format!("{pre}.down.conv"), w, cin, 1);
+                bn(&mut m, &format!("{pre}.down.bn"), w);
+            }
+            cin = w;
+        }
+        let mut rngf = Pcg::new(seed + 1);
+        m.insert(
+            "fc.weight".into(),
+            NamedTensor {
+                shape: vec![16, 32],
+                data: (0..512).map(|_| rngf.normal_f32() * 0.18).collect(),
+            },
+        );
+        m.insert("fc.bias".into(), NamedTensor { shape: vec![16], data: vec![0.0; 16] });
+        m
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = CnnModel::resnet("rneta", &fake_resnet_bundle(1)).unwrap();
+        let x = Tensor::randn(&[2, 3, 16, 16], 2);
+        let y = m.forward(&x);
+        assert_eq!(y.shape, vec![2, 16]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn layers_enumerate_in_order() {
+        let m = CnnModel::resnet("rneta", &fake_resnet_bundle(2)).unwrap();
+        let ls = m.layers();
+        assert_eq!(ls[0].name, "stem.conv");
+        assert_eq!(ls.last().unwrap().name, "fc");
+        // rneta: stem + 3 blocks × 2 convs + 2 downsamples + fc = 10.
+        assert_eq!(ls.len(), 10);
+        let stem = &ls[0];
+        assert_eq!((stem.d_row, stem.d_col), (8, 27));
+        assert_eq!(stem.macs, 8 * 27 * 256); // 16×16 positions
+    }
+
+    #[test]
+    fn weight_roundtrip_changes_output() {
+        let mut m = CnnModel::resnet("rneta", &fake_resnet_bundle(3)).unwrap();
+        let x = Tensor::randn(&[1, 3, 16, 16], 4);
+        let y0 = m.forward(&x);
+        let mut w = m.get_weight("s1.b0.conv1");
+        assert_eq!((w.rows, w.cols), (16, 72));
+        for v in w.data.iter_mut() {
+            *v = 0.0;
+        }
+        m.set_weight("s1.b0.conv1", &w);
+        let y1 = m.forward(&x);
+        assert!(y0.sq_err(&y1) > 0.0);
+        let back = m.get_weight("s1.b0.conv1");
+        assert!(back.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn hessian_capture_produces_spd() {
+        let m = CnnModel::resnet("rneta", &fake_resnet_bundle(5)).unwrap();
+        let mut accs = BTreeMap::new();
+        accs.insert("s0.b0.conv1".to_string(), HessianAccumulator::new(72));
+        let x = Tensor::randn(&[8, 3, 16, 16], 6);
+        m.accumulate_hessians(&x, &mut accs);
+        let acc = &accs["s0.b0.conv1"];
+        assert!(acc.n_samples > 0);
+        let h = acc.finalize(1e-6).unwrap();
+        assert_eq!(h.d_col(), 72);
+    }
+
+    #[test]
+    fn capture_layer_input_dims() {
+        let m = CnnModel::resnet("rneta", &fake_resnet_bundle(7)).unwrap();
+        let x = Tensor::randn(&[4, 3, 16, 16], 8);
+        let cols = m.capture_layer_input(&x, "fc");
+        assert_eq!(cols.rows, 32); // fc d_col
+        assert_eq!(cols.cols, 4); // one column per image
+    }
+
+    #[test]
+    fn bn_reset_matches_batch_stats() {
+        let mut m = CnnModel::resnet("rneta", &fake_resnet_bundle(9)).unwrap();
+        // Skew the running stats, then reset from data.
+        for bn in m.bns.iter_mut() {
+            for v in bn.mean.iter_mut() {
+                *v = 5.0;
+            }
+        }
+        let batches: Vec<Tensor> = (0..3).map(|i| Tensor::randn(&[16, 3, 16, 16], 10 + i)).collect();
+        m.reset_bn_stats(&batches);
+        // Stem BN mean should now be near the true conv-output mean (≈0
+        // for random inputs/weights), definitely not 5.
+        assert!(m.bns[0].mean.iter().all(|v| v.abs() < 1.0));
+    }
+
+    #[test]
+    fn stats_correction_restores_dense_distribution() {
+        let dense = CnnModel::resnet("rneta", &fake_resnet_bundle(20)).unwrap();
+        let x = Tensor::randn(&[32, 3, 16, 16], 21);
+        let ref_stats = dense.activation_stats(&x);
+        // Corrupt a mid conv to shift downstream distributions.
+        let mut comp = dense.clone();
+        let mut w = comp.get_weight("s0.b0.conv1");
+        for v in w.data.iter_mut() {
+            *v *= 0.25;
+        }
+        comp.set_weight("s0.b0.conv1", &w);
+        let before = comp.activation_stats(&x);
+        comp.correct_stats(&x, &ref_stats);
+        let after = comp.activation_stats(&x);
+        // Distribution after the LAST bn must be closer to dense than
+        // before the correction.
+        let key = "s2.b0.bn2";
+        let dist = |s: &BTreeMap<String, (Vec<f32>, Vec<f32>)>| -> f32 {
+            let (dm, dsd) = &ref_stats[key];
+            let (m2, sd2) = &s[key];
+            dm.iter()
+                .zip(m2)
+                .map(|(a, b)| (a - b).abs())
+                .chain(dsd.iter().zip(sd2).map(|(a, b)| (a - b).abs()))
+                .sum()
+        };
+        assert!(
+            dist(&after) < dist(&before) * 0.5,
+            "correction too weak: {} -> {}",
+            dist(&before),
+            dist(&after)
+        );
+    }
+
+    #[test]
+    fn tinydet_builds_and_runs() {
+        let mut rng = Pcg::new(30);
+        let mut m = TensorMap::new();
+        let mut conv = |m: &mut TensorMap, name: &str, o: usize, i: usize, k: usize| {
+            let n = o * i * k * k;
+            m.insert(
+                format!("{name}.weight"),
+                NamedTensor {
+                    shape: vec![o, i, k, k],
+                    data: (0..n).map(|_| rng.normal_f32() * 0.1).collect(),
+                },
+            );
+        };
+        let bn = |m: &mut TensorMap, name: &str, c: usize| {
+            m.insert(format!("{name}.gamma"), NamedTensor { shape: vec![c], data: vec![1.0; c] });
+            m.insert(format!("{name}.beta"), NamedTensor { shape: vec![c], data: vec![0.0; c] });
+            m.insert(format!("{name}.mean"), NamedTensor { shape: vec![c], data: vec![0.0; c] });
+            m.insert(format!("{name}.var"), NamedTensor { shape: vec![c], data: vec![1.0; c] });
+        };
+        conv(&mut m, "c1.conv", 16, 3, 3);
+        bn(&mut m, "c1.bn", 16);
+        conv(&mut m, "c2.conv", 32, 16, 3);
+        bn(&mut m, "c2.bn", 32);
+        conv(&mut m, "c3.conv", 32, 32, 3);
+        bn(&mut m, "c3.bn", 32);
+        conv(&mut m, "head.conv", 9, 32, 1);
+        m.insert("head.bias".into(), NamedTensor { shape: vec![9], data: vec![0.0; 9] });
+        let det = CnnModel::tinydet(&m).unwrap();
+        let x = Tensor::randn(&[2, 3, 16, 16], 31);
+        let y = det.forward(&x);
+        assert_eq!(y.shape, vec![2, 9, 4, 4]);
+    }
+}

@@ -1,0 +1,138 @@
+//! Self-contained inference engine — the substrate standing in for
+//! PyTorch/torchvision in the paper's pipeline.
+//!
+//! Design: every model in the zoo implements [`CompressibleModel`], which
+//! exposes (a) forward inference for evaluation, (b) the list of
+//! compressible layers as unfolded weight matrices (conv → [out, C·kh·kw]),
+//! (c) calibration-input capture per layer (streamed straight into
+//! Hessian accumulators — inputs are never stored whole), and (d) weight
+//! write-back for stitching compressed layers.
+
+pub mod ops;
+pub mod cnn;
+pub mod bert;
+pub mod models;
+
+use crate::compress::hessian::HessianAccumulator;
+use crate::linalg::Mat;
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+
+/// Static description of one compressible layer.
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub name: String,
+    /// Unfolded weight-matrix dims.
+    pub d_row: usize,
+    pub d_col: usize,
+    /// Multiply-accumulate count per forward sample (for FLOP budgets).
+    pub macs: u64,
+    /// "conv" | "linear" — used by cost models and exclusion rules
+    /// (e.g. "all layers except the first and the last").
+    pub kind: &'static str,
+}
+
+impl LayerInfo {
+    pub fn weights(&self) -> u64 {
+        (self.d_row * self.d_col) as u64
+    }
+}
+
+/// A model whose layers can be calibrated, compressed and stitched.
+pub trait CompressibleModel: Send {
+    /// Model identifier ("rneta", "bert6", ...).
+    fn name(&self) -> &str;
+
+    /// Run inference. Input/output tensor layouts are model-specific
+    /// (images: [B,3,H,W] → logits [B,classes]; sequences: [B,S] token
+    /// ids as f32 → [B,S,2] span logits; detection: [B,3,H,W] →
+    /// [B,1+C,G,G] cell logits).
+    fn forward(&self, x: &Tensor) -> Tensor;
+
+    /// Compressible layers, in forward order.
+    fn layers(&self) -> Vec<LayerInfo>;
+
+    /// Unfolded weight matrix of a layer.
+    fn get_weight(&self, name: &str) -> Mat;
+
+    /// Write back a (compressed) weight matrix.
+    fn set_weight(&mut self, name: &str, w: &Mat);
+
+    /// Enable per-tensor asymmetric fake-quantization of this layer's
+    /// INPUT activations at `bits` (<16). Simulates the paper's
+    /// activation quantization in the GPU compound-compression scenario;
+    /// 16+ disables it.
+    fn set_act_bits(&mut self, name: &str, bits: u32);
+
+    /// Run the batch and accumulate every layer's unfolded inputs into
+    /// the provided Hessian accumulators (keyed by layer name). This is
+    /// the streaming calibration pass: Θ(d_col²) memory per layer.
+    fn accumulate_hessians(&self, x: &Tensor, accs: &mut BTreeMap<String, HessianAccumulator>);
+
+    /// Capture the raw unfolded input matrix (d_col × n_samples) of ONE
+    /// layer on this batch — used by sequential-OBQ / global-AdaPrune
+    /// passes that need actual inputs, not just second moments.
+    fn capture_layer_input(&self, x: &Tensor, layer: &str) -> Mat;
+
+    /// Per-channel activation statistics (mean, std) after every
+    /// normalization layer on this batch — recorded on the DENSE model as
+    /// the reference for the statistics correction (Eq. 9). Keyed by
+    /// normalization-layer name.
+    fn activation_stats(&self, x: &Tensor) -> BTreeMap<String, (Vec<f32>, Vec<f32>)>;
+
+    /// The paper's mean/variance correction (Appendix A.4): run the batch
+    /// through the COMPRESSED model; at each normalization layer, compare
+    /// the in-flight statistics against `dense_stats`, rescale/shift the
+    /// activations immediately (so downstream layers see corrected
+    /// distributions — the paper's "critical" step 3), and merge the
+    /// correction into the layer's affine parameters.
+    fn correct_stats(&mut self, x: &Tensor, dense_stats: &BTreeMap<String, (Vec<f32>, Vec<f32>)>);
+
+    /// Recompute BatchNorm running statistics from calibration batches
+    /// (CNNs only; no-op for transformers).
+    fn reset_bn_stats(&mut self, batches: &[Tensor]);
+
+    /// Deep clone into a boxed trait object (models are stitched by
+    /// cloning the dense model and writing compressed layers into it).
+    fn clone_box(&self) -> Box<dyn CompressibleModel>;
+}
+
+impl Clone for Box<dyn CompressibleModel> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// Find a layer's info by name.
+pub fn layer_info(model: &dyn CompressibleModel, name: &str) -> Option<LayerInfo> {
+    model.layers().into_iter().find(|l| l.name == name)
+}
+
+/// Per-tensor asymmetric fake-quantization of activations (in place):
+/// min/max range of this tensor, 2^bits levels, zero representable.
+pub fn fake_quant_activations(x: &mut Tensor, bits: u32) {
+    if bits >= 16 {
+        return;
+    }
+    let maxq = ((1u64 << bits) - 1) as f32;
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in &x.data {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !lo.is_finite() || hi <= lo {
+        return;
+    }
+    let lo = lo.min(0.0);
+    let hi = hi.max(0.0);
+    let scale = (hi - lo) / maxq;
+    if scale == 0.0 {
+        return;
+    }
+    let zero = (-lo / scale).round();
+    for v in x.data.iter_mut() {
+        let q = (*v / scale + zero).round().clamp(0.0, maxq);
+        *v = scale * (q - zero);
+    }
+}

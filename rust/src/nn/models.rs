@@ -1,0 +1,115 @@
+//! Model zoo loader: `.obcw` bundles (trained at build time by
+//! `python -m compile.train`) → [`CompressibleModel`] instances plus the
+//! calibration/test splits stored alongside the weights.
+
+use super::bert::BertModel;
+use super::cnn::CnnModel;
+use super::CompressibleModel;
+use crate::tensor::Tensor;
+use crate::util::io::{load_obcw, TensorMap};
+use std::path::Path;
+
+pub const ALL_MODELS: [&str; 7] =
+    ["rneta", "rnetb", "rnetc", "bert2", "bert4", "bert6", "tinydet"];
+
+/// Task family of a model ("image" | "seq" | "det").
+pub fn task_of(name: &str) -> &'static str {
+    match name {
+        "rneta" | "rnetb" | "rnetc" => "image",
+        "bert2" | "bert4" | "bert6" => "seq",
+        "tinydet" => "det",
+        _ => panic!("unknown model '{name}'"),
+    }
+}
+
+/// A loaded bundle: model + data splits.
+pub struct ModelBundle {
+    pub model: Box<dyn CompressibleModel>,
+    /// Calibration inputs (images [N,3,H,W] or token ids [N,S]).
+    pub calib_x: Tensor,
+    /// Calibration labels (task-specific; spans are [N,2]).
+    pub calib_y: Tensor,
+    pub test_x: Tensor,
+    pub test_y: Tensor,
+}
+
+/// Load a model bundle from `dir/<name>.obcw`.
+pub fn load_bundle(dir: &Path, name: &str) -> anyhow::Result<ModelBundle> {
+    let raw = load_obcw(&dir.join(format!("{name}.obcw")))?;
+    // Split into param.* / state.* / data.* namespaces.
+    let mut params = TensorMap::new();
+    for (k, v) in &raw {
+        if let Some(rest) = k.strip_prefix("param.") {
+            params.insert(rest.to_string(), v.clone());
+        } else if let Some(rest) = k.strip_prefix("state.") {
+            params.insert(rest.to_string(), v.clone());
+        }
+    }
+    let model: Box<dyn CompressibleModel> = match task_of(name) {
+        "image" => Box::new(CnnModel::resnet(name, &params)?),
+        "det" => Box::new(CnnModel::tinydet(&params)?),
+        "seq" => Box::new(BertModel::from_bundle(name, &params)?),
+        _ => unreachable!(),
+    };
+    let t = |key: &str| -> anyhow::Result<Tensor> {
+        let nt = raw
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("bundle missing '{key}'"))?;
+        Ok(Tensor::from_vec(&nt.shape, nt.data.clone()))
+    };
+    let (calib_y, test_y) = if task_of(name) == "seq" {
+        // Stack start/end into [N,2].
+        let c0 = t("data.calib.y0")?;
+        let c1 = t("data.calib.y1")?;
+        let t0 = t("data.test.y0")?;
+        let t1 = t("data.test.y1")?;
+        (stack_spans(&c0, &c1), stack_spans(&t0, &t1))
+    } else {
+        (t("data.calib.y")?, t("data.test.y")?)
+    };
+    Ok(ModelBundle {
+        model,
+        calib_x: t("data.calib.x")?,
+        calib_y,
+        test_x: t("data.test.x")?,
+        test_y,
+    })
+}
+
+fn stack_spans(a: &Tensor, b: &Tensor) -> Tensor {
+    let n = a.numel();
+    let mut out = Tensor::zeros(&[n, 2]);
+    for i in 0..n {
+        out.data[i * 2] = a.data[i];
+        out.data[i * 2 + 1] = b.data[i];
+    }
+    out
+}
+
+/// Slice a batch [i0, i1) from the leading dimension.
+pub fn batch_slice(x: &Tensor, i0: usize, i1: usize) -> Tensor {
+    let inner: usize = x.shape[1..].iter().product();
+    let mut shape = x.shape.clone();
+    shape[0] = i1 - i0;
+    Tensor::from_vec(&shape, x.data[i0 * inner..i1 * inner].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_mapping() {
+        assert_eq!(task_of("rnetc"), "image");
+        assert_eq!(task_of("bert6"), "seq");
+        assert_eq!(task_of("tinydet"), "det");
+    }
+
+    #[test]
+    fn batch_slice_shapes() {
+        let x = Tensor::randn(&[10, 3, 4, 4], 1);
+        let b = batch_slice(&x, 2, 5);
+        assert_eq!(b.shape, vec![3, 3, 4, 4]);
+        assert_eq!(b.data[0], x.data[2 * 48]);
+    }
+}

@@ -1,0 +1,314 @@
+//! Inference-engine primitive ops over f32 [`Tensor`]s.
+//!
+//! Layout conventions match the build-time JAX models exactly
+//! (`python/compile/models.py`): NCHW activations, OIHW conv weights,
+//! `[out, in]` linear weights, tanh-approx GELU, 1e-5 epsilons.
+
+use crate::tensor::Tensor;
+
+/// f32 matmul: a [m×k] · b [k×n] → [m×n], cache-friendly ikj loops.
+pub fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// im2col: x [B,C,H,W] → columns [C·kh·kw, B·OH·OW].
+/// Column index order is (c, kh, kw) — matching the row-major flattening
+/// of OIHW conv weights to [out, C·kh·kw].
+pub fn im2col(
+    x: &Tensor,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> (Vec<f32>, usize, usize) {
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (w + 2 * pad - kw) / stride + 1;
+    let d_col = c * kh * kw;
+    let n_cols = b * oh * ow;
+    let mut cols = vec![0.0f32; d_col * n_cols];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let col = (bi * oh + oy) * ow + ox;
+                for ci in 0..c {
+                    for ky in 0..kh {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            let row = (ci * kh + ky) * kw + kx;
+                            cols[row * n_cols + col] =
+                                x.at4(bi, ci, iy as usize, ix as usize);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (cols, oh, ow)
+}
+
+/// Conv2d: x [B,C,H,W], weight [O,C,kh,kw] → [B,O,OH,OW].
+pub fn conv2d(x: &Tensor, weight: &Tensor, stride: usize, pad: usize) -> Tensor {
+    let (b, _c, _h, _w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let o = weight.shape[0];
+    let (kh, kw) = (weight.shape[2], weight.shape[3]);
+    let d_col = weight.shape[1] * kh * kw;
+    let (cols, oh, ow) = im2col(x, kh, kw, stride, pad);
+    let n_cols = b * oh * ow;
+    // y [o, n_cols] = W [o, d_col] · cols
+    let y = matmul_f32(&weight.data, &cols, o, d_col, n_cols);
+    // Reorder [o][b,oy,ox] → [b][o][oy][ox].
+    let mut out = Tensor::zeros(&[b, o, oh, ow]);
+    let hw = oh * ow;
+    for oi in 0..o {
+        for bi in 0..b {
+            let src = &y[oi * n_cols + bi * hw..oi * n_cols + (bi + 1) * hw];
+            let dst = &mut out.data[(bi * o + oi) * hw..(bi * o + oi + 1) * hw];
+            dst.copy_from_slice(src);
+        }
+    }
+    out
+}
+
+/// BatchNorm2d inference: per-channel affine with running stats.
+pub fn batchnorm2d(
+    x: &Tensor,
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    eps: f32,
+) -> Tensor {
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = x.clone();
+    let hw = h * w;
+    for bi in 0..b {
+        for ci in 0..c {
+            let scale = gamma[ci] / (var[ci] + eps).sqrt();
+            let shift = beta[ci] - mean[ci] * scale;
+            let sl = &mut out.data[(bi * c + ci) * hw..(bi * c + ci + 1) * hw];
+            for v in sl.iter_mut() {
+                *v = *v * scale + shift;
+            }
+        }
+    }
+    out
+}
+
+/// ReLU.
+pub fn relu(x: &Tensor) -> Tensor {
+    x.map(|v| v.max(0.0))
+}
+
+/// GELU (tanh approximation — matches `jax.nn.gelu(approximate=True)`).
+pub fn gelu(x: &Tensor) -> Tensor {
+    x.map(|v| {
+        let c = (2.0f32 / std::f32::consts::PI).sqrt();
+        0.5 * v * (1.0 + (c * (v + 0.044715 * v * v * v)).tanh())
+    })
+}
+
+/// Global average pool [B,C,H,W] → [B,C].
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let hw = (h * w) as f32;
+    let mut out = Tensor::zeros(&[b, c]);
+    for bi in 0..b {
+        for ci in 0..c {
+            let sl = &x.data[(bi * c + ci) * h * w..(bi * c + ci + 1) * h * w];
+            out.data[bi * c + ci] = sl.iter().sum::<f32>() / hw;
+        }
+    }
+    out
+}
+
+/// Linear: x [B,din] · Wᵀ [din,dout] + b → [B,dout]. Weight is [dout,din].
+pub fn linear(x: &Tensor, weight: &Tensor, bias: Option<&[f32]>) -> Tensor {
+    let (b, din) = (x.shape[0], x.shape[1]);
+    let dout = weight.shape[0];
+    assert_eq!(weight.shape[1], din, "linear dim mismatch");
+    let mut out = Tensor::zeros(&[b, dout]);
+    for bi in 0..b {
+        let xrow = &x.data[bi * din..(bi + 1) * din];
+        let orow = &mut out.data[bi * dout..(bi + 1) * dout];
+        for oi in 0..dout {
+            let wrow = &weight.data[oi * din..(oi + 1) * din];
+            let mut s = 0.0f32;
+            for k in 0..din {
+                s += xrow[k] * wrow[k];
+            }
+            orow[oi] = s + bias.map(|b| b[oi]).unwrap_or(0.0);
+        }
+    }
+    out
+}
+
+/// LayerNorm over the last dimension.
+pub fn layernorm(x: &Tensor, gamma: &[f32], beta: &[f32], eps: f32) -> Tensor {
+    let d = *x.shape.last().unwrap();
+    assert_eq!(gamma.len(), d);
+    let mut out = x.clone();
+    for chunk in out.data.chunks_exact_mut(d) {
+        let mean: f32 = chunk.iter().sum::<f32>() / d as f32;
+        let var: f32 = chunk.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (i, v) in chunk.iter_mut().enumerate() {
+            *v = (*v - mean) * inv * gamma[i] + beta[i];
+        }
+    }
+    out
+}
+
+/// Softmax over the last dimension, in place.
+pub fn softmax_last(x: &mut Tensor) {
+    let d = *x.shape.last().unwrap();
+    for chunk in x.data.chunks_exact_mut(d) {
+        let m = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in chunk.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        for v in chunk.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 identity conv returns the input.
+        let x = Tensor::randn(&[2, 3, 4, 4], 1);
+        let mut w = Tensor::zeros(&[3, 3, 1, 1]);
+        for i in 0..3 {
+            w.data[i * 3 + i] = 1.0;
+        }
+        let y = conv2d(&x, &w, 1, 0);
+        assert_eq!(y.shape, x.shape);
+        for (a, b) in x.data.iter().zip(&y.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn conv_known_values() {
+        // 1 channel, 3x3 all-ones kernel on a 3x3 all-ones image, pad 1:
+        // center output = 9, corners = 4, edges = 6.
+        let x = Tensor::from_vec(&[1, 1, 3, 3], vec![1.0; 9]);
+        let w = Tensor::from_vec(&[1, 1, 3, 3], vec![1.0; 9]);
+        let y = conv2d(&x, &w, 1, 1);
+        assert_eq!(y.shape, vec![1, 1, 3, 3]);
+        assert_eq!(y.at4(0, 0, 1, 1), 9.0);
+        assert_eq!(y.at4(0, 0, 0, 0), 4.0);
+        assert_eq!(y.at4(0, 0, 0, 1), 6.0);
+    }
+
+    #[test]
+    fn conv_stride_shapes() {
+        let x = Tensor::randn(&[1, 2, 8, 8], 2);
+        let w = Tensor::randn(&[4, 2, 3, 3], 3);
+        let y = conv2d(&x, &w, 2, 1);
+        assert_eq!(y.shape, vec![1, 4, 4, 4]);
+    }
+
+    #[test]
+    fn im2col_dims_and_weight_order() {
+        // A conv whose weight picks exactly input pixel (c=1,ky=0,kx=2)
+        // checks the (c,kh,kw) column ordering.
+        let mut x = Tensor::zeros(&[1, 2, 3, 3]);
+        *x.data.last_mut().unwrap() = 0.0;
+        x.data[9 + 2] = 7.0; // c=1, y=0, x=2
+        let mut w = Tensor::zeros(&[1, 2, 3, 3]);
+        w.data[9 + 2] = 1.0; // weight at (o=0,c=1,ky=0,kx=2)
+        let y = conv2d(&x, &w, 1, 1);
+        // Output at (1,0): receptive field places input (0,2) at (ky=0,kx=2)
+        // iy = oy+ky-1 = 0 ⇒ oy=1; ix = ox+kx-1 = 2 ⇒ ox=1.
+        assert_eq!(y.at4(0, 0, 1, 1), 7.0);
+    }
+
+    #[test]
+    fn batchnorm_normalizes() {
+        let x = Tensor::from_vec(&[1, 1, 1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = batchnorm2d(&x, &[2.0], &[1.0], &[2.5], &[1.25], 0.0);
+        // (x-2.5)/sqrt(1.25)*2+1
+        let expect: Vec<f32> = [1.0f32, 2.0, 3.0, 4.0]
+            .iter()
+            .map(|v| (v - 2.5) / 1.25f32.sqrt() * 2.0 + 1.0)
+            .collect();
+        for (a, b) in y.data.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn linear_matches_manual() {
+        let x = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let w = Tensor::from_vec(&[2, 3], vec![1.0, 0.0, -1.0, 0.5, 0.5, 0.5]);
+        let y = linear(&x, &w, Some(&[10.0, 20.0]));
+        assert_eq!(y.data, vec![1.0 - 3.0 + 10.0, 3.0 + 20.0]);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let x = Tensor::randn(&[4, 16], 5);
+        let y = layernorm(&x, &vec![1.0; 16], &vec![0.0; 16], 1e-5);
+        for chunk in y.data.chunks_exact(16) {
+            let m: f32 = chunk.iter().sum::<f32>() / 16.0;
+            let v: f32 = chunk.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / 16.0;
+            assert!(m.abs() < 1e-5);
+            assert!((v - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut x = Tensor::randn(&[3, 8], 6);
+        softmax_last(&mut x);
+        for chunk in x.data.chunks_exact(8) {
+            let s: f32 = chunk.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(chunk.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        let x = Tensor::from_vec(&[3], vec![0.0, 1.0, -1.0]);
+        let y = gelu(&x);
+        assert!((y.data[0]).abs() < 1e-7);
+        assert!((y.data[1] - 0.841192).abs() < 1e-4);
+        assert!((y.data[2] + 0.158808).abs() < 1e-4);
+    }
+
+    #[test]
+    fn global_pool_averages() {
+        let x = Tensor::from_vec(&[1, 2, 1, 2], vec![1.0, 3.0, 10.0, 20.0]);
+        let y = global_avg_pool(&x);
+        assert_eq!(y.data, vec![2.0, 15.0]);
+    }
+}

@@ -1,0 +1,162 @@
+//! Kernel dispatch: PJRT-executed AOT artifacts when the problem shape is
+//! covered, native Rust otherwise. The two paths compute the same
+//! algorithm and are cross-checked by integration tests
+//! (`rust/tests/runtime_bridge.rs`).
+
+use super::Runtime;
+use crate::compress::exact_obs::RowTrace;
+use crate::linalg::Mat;
+
+/// Result of an OBS sweep over a batch of rows.
+pub struct SweepOut {
+    pub w: Mat,
+    pub traces: Vec<RowTrace>,
+}
+
+/// Run the full ExactOBS trace sweep on `w` (rows × d) with shared
+/// initial inverse Hessian through a PJRT artifact. Rows are padded up to
+/// the artifact's row count with zeros (rows are independent, so padding
+/// is sound). Returns None when no artifact covers d.
+pub fn obs_sweep_pjrt(rt: &Runtime, w: &Mat, hinv: &Mat) -> Option<anyhow::Result<SweepOut>> {
+    let d = w.cols;
+    let art = rt.manifest.find_sweep("obs_sweep", w.rows, d)?;
+    if art.rows < w.rows {
+        // Run in row-chunks of the artifact size.
+        let mut traces = Vec::with_capacity(w.rows);
+        let mut out = Mat::zeros(w.rows, d);
+        let mut r0 = 0;
+        while r0 < w.rows {
+            let r1 = (r0 + art.rows).min(w.rows);
+            let chunk = w.submatrix(&(r0..r1).collect::<Vec<_>>(), &(0..d).collect::<Vec<_>>());
+            match run_chunk(rt, &art.name, art.rows, &chunk, hinv) {
+                Ok(mut res) => {
+                    for (i, r) in (r0..r1).enumerate() {
+                        out.row_mut(r).copy_from_slice(res.w.row(i));
+                    }
+                    traces.extend(res.traces.drain(..r1 - r0));
+                }
+                Err(e) => return Some(Err(e)),
+            }
+            r0 = r1;
+        }
+        return Some(Ok(SweepOut { w: out, traces }));
+    }
+    Some(run_chunk(rt, &art.name, art.rows, w, hinv).map(|mut res| {
+        res.traces.truncate(w.rows);
+        let keep: Vec<usize> = (0..w.rows).collect();
+        let all: Vec<usize> = (0..d).collect();
+        SweepOut { w: res.w.submatrix(&keep, &all), traces: res.traces }
+    }))
+}
+
+fn run_chunk(
+    rt: &Runtime,
+    artifact: &str,
+    art_rows: usize,
+    w: &Mat,
+    hinv: &Mat,
+) -> anyhow::Result<SweepOut> {
+    let d = w.cols;
+    // Pad rows with zeros to the artifact shape.
+    let mut win = vec![0.0f32; art_rows * d];
+    for r in 0..w.rows {
+        for c in 0..d {
+            win[r * d + c] = w.at(r, c) as f32;
+        }
+    }
+    let hin: Vec<f32> = hinv.data.iter().map(|&v| v as f32).collect();
+    let outs = rt.run_f32(
+        artifact,
+        &[(&win, &[art_rows as i64, d as i64]), (&hin, &[d as i64, d as i64])],
+    )?;
+    anyhow::ensure!(outs.len() == 3, "obs_sweep artifact returned {} outputs", outs.len());
+    let (wout, order, dloss) = (&outs[0], &outs[1], &outs[2]);
+    let mut out_w = Mat::zeros(art_rows, d);
+    for i in 0..art_rows * d {
+        out_w.data[i] = wout[i] as f64;
+    }
+    let traces = (0..art_rows)
+        .map(|r| {
+            let mut t = RowTrace { order: Vec::new(), dloss: Vec::new() };
+            for c in 0..d {
+                let idx = order[r * d + c];
+                if idx < 0.0 {
+                    break;
+                }
+                t.order.push(idx as usize);
+                t.dloss.push(dloss[r * d + c] as f64);
+            }
+            t
+        })
+        .collect();
+    Ok(SweepOut { w: out_w, traces })
+}
+
+/// OBQ sweep through PJRT (4-bit artifact grid; maxq = 15). `grids` is
+/// rows × 2 (scale, zero). Returns None when no artifact covers the
+/// shape.
+pub fn obq_sweep_pjrt(
+    rt: &Runtime,
+    w: &Mat,
+    hinv: &Mat,
+    grids: &[(f64, f64)],
+) -> Option<anyhow::Result<Mat>> {
+    let d = w.cols;
+    let art = rt.manifest.find_sweep("obq_sweep", w.rows, d)?;
+    if art.rows < w.rows {
+        return None; // chunking analogous to obs; not needed for tests
+    }
+    let mut win = vec![0.0f32; art.rows * d];
+    for r in 0..w.rows {
+        for c in 0..d {
+            win[r * d + c] = w.at(r, c) as f32;
+        }
+    }
+    let mut gin = vec![0.0f32; art.rows * 2];
+    for (r, (s, z)) in grids.iter().enumerate() {
+        gin[r * 2] = *s as f32;
+        gin[r * 2 + 1] = *z as f32;
+    }
+    // Padded rows get a unit grid to avoid 0-scale degeneracy.
+    for r in grids.len()..art.rows {
+        gin[r * 2] = 1.0;
+    }
+    let hin: Vec<f32> = hinv.data.iter().map(|&v| v as f32).collect();
+    let res = rt.run_f32(
+        &art.name,
+        &[
+            (&win, &[art.rows as i64, d as i64]),
+            (&hin, &[d as i64, d as i64]),
+            (&gin, &[art.rows as i64, 2]),
+        ],
+    );
+    Some(res.map(|outs| {
+        let wout = &outs[0];
+        let mut m = Mat::zeros(w.rows, d);
+        for r in 0..w.rows {
+            for c in 0..d {
+                m.data[r * d + c] = wout[r * d + c] as f64;
+            }
+        }
+        m
+    }))
+}
+
+/// Hessian 2XXᵀ through PJRT (shape must match an artifact exactly).
+pub fn hessian_pjrt(rt: &Runtime, x: &Mat) -> Option<anyhow::Result<Mat>> {
+    let art = rt
+        .manifest
+        .kernels
+        .iter()
+        .find(|k| k.kind == "hessian" && k.d == x.rows && k.n == x.cols)?;
+    let xin: Vec<f32> = x.data.iter().map(|&v| v as f32).collect();
+    let res = rt.run_f32(&art.name, &[(&xin, &[x.rows as i64, x.cols as i64])]);
+    Some(res.map(|outs| {
+        let h = &outs[0];
+        let mut m = Mat::zeros(x.rows, x.rows);
+        for i in 0..x.rows * x.rows {
+            m.data[i] = h[i] as f64;
+        }
+        m
+    }))
+}

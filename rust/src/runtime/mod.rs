@@ -1,0 +1,188 @@
+//! PJRT runtime bridge: loads the AOT-compiled HLO artifacts produced by
+//! the build-time JAX/Pallas layer (`python/compile/aot.py`) and executes
+//! them from the Rust hot path, with native fallbacks for shapes outside
+//! the artifact set.
+//!
+//! Interchange format is HLO **text** — the image's xla_extension 0.5.1
+//! rejects jax≥0.5 serialized protos (64-bit instruction ids); the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod dispatch;
+
+use crate::util::io::{artifacts_dir, read_to_string};
+use crate::util::json::{parse, Json};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+/// One artifact as described in `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct KernelArtifact {
+    pub name: String,
+    pub kind: String,
+    pub rows: usize,
+    pub d: usize,
+    pub n: usize,
+    pub file: String,
+}
+
+/// Parsed manifest.
+pub struct Manifest {
+    pub kernels: Vec<KernelArtifact>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load from the artifacts directory; Err if artifacts were not built.
+    pub fn load() -> anyhow::Result<Manifest> {
+        let dir = artifacts_dir();
+        let text = read_to_string(&dir.join("manifest.json"))?;
+        let root = parse(&text)?;
+        let mut kernels = Vec::new();
+        if let Some(arr) = root.get("kernels").and_then(Json::as_arr) {
+            for k in arr {
+                kernels.push(KernelArtifact {
+                    name: k.req_str("name")?.to_string(),
+                    kind: k.req_str("kind")?.to_string(),
+                    rows: k.get("rows").and_then(Json::as_usize).unwrap_or(0),
+                    d: k.get("d").and_then(Json::as_usize).unwrap_or(0),
+                    n: k.get("n").and_then(Json::as_usize).unwrap_or(0),
+                    file: k.req_str("file")?.to_string(),
+                });
+            }
+        }
+        Ok(Manifest { kernels, dir })
+    }
+
+    /// Find the best obs/obq artifact for a (rows, d) problem: exact d
+    /// match with artifact rows ≥ requested rows is required (rows are
+    /// padded up by the dispatcher).
+    pub fn find_sweep(&self, kind: &str, rows: usize, d: usize) -> Option<&KernelArtifact> {
+        self.kernels
+            .iter()
+            .filter(|k| k.kind == kind && k.d == d && k.rows >= rows.min(k.rows))
+            .min_by_key(|k| k.rows)
+            .filter(|k| k.d == d)
+    }
+
+    pub fn find(&self, name: &str) -> Option<&KernelArtifact> {
+        self.kernels.iter().find(|k| k.name == name)
+    }
+}
+
+/// A PJRT CPU client with an executable cache, keyed by artifact name.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create the runtime (loads the manifest, starts the CPU client).
+    pub fn new() -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load()?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Compile an artifact (cached; PjRtLoadedExecutable is not Clone, so
+    /// execution happens under the cache lock — fine on this single-core
+    /// testbed, and compilation dominates anyway).
+    fn with_executable<T>(
+        &self,
+        name: &str,
+        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> anyhow::Result<T>,
+    ) -> anyhow::Result<T> {
+        let mut cache = self.cache.lock().unwrap();
+        if !cache.contains_key(name) {
+            let art = self
+                .manifest
+                .find(name)
+                .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?;
+            let path = self.manifest.dir.join(&art.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("artifact path utf-8"),
+            )
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+            cache.insert(name.to_string(), exe);
+        }
+        f(cache.get(name).unwrap())
+    }
+
+    /// Execute an artifact on f32 inputs with given shapes. Returns the
+    /// flattened f32 outputs of the result tuple.
+    pub fn run_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| anyhow::anyhow!("reshape input: {e}"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let result = self.with_executable(name, |exe| {
+            exe.execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch result: {e}"))
+        })?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                // Outputs may be f32 or s32; convert s32 → f32 via i32 vec.
+                match lit.ty() {
+                    Ok(xla::ElementType::S32) => {
+                        let v = lit
+                            .to_vec::<i32>()
+                            .map_err(|e| anyhow::anyhow!("to_vec<i32>: {e}"))?;
+                        Ok(v.into_iter().map(|x| x as f32).collect())
+                    }
+                    _ => lit
+                        .to_vec::<f32>()
+                        .map_err(|e| anyhow::anyhow!("to_vec<f32>: {e}")),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_shape() {
+        // Build a fake manifest in a temp dir and point OBC_ARTIFACTS at it.
+        let dir = std::env::temp_dir().join("obc_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"kernels": [
+                {"name": "obs_sweep_r8_d16", "kind": "obs_sweep", "rows": 8, "d": 16, "file": "x.hlo.txt"},
+                {"name": "hessian_d32_n128", "kind": "hessian", "d": 32, "n": 128, "file": "y.hlo.txt"}
+            ]}"#,
+        )
+        .unwrap();
+        std::env::set_var("OBC_ARTIFACTS", dir.to_str().unwrap());
+        let m = Manifest::load().unwrap();
+        std::env::remove_var("OBC_ARTIFACTS");
+        assert_eq!(m.kernels.len(), 2);
+        assert!(m.find("obs_sweep_r8_d16").is_some());
+        let k = m.find_sweep("obs_sweep", 4, 16).unwrap();
+        assert_eq!(k.rows, 8);
+        assert!(m.find_sweep("obs_sweep", 4, 99).is_none());
+    }
+}

@@ -1,0 +1,79 @@
+//! Statistics correction orchestration (paper §6 "Experimental Setup" +
+//! Appendix A.4).
+//!
+//! * ResNets: **batchnorm reset** — recompute BN running statistics from
+//!   calibration batches after stitching.
+//! * YOLO/BERT stand-ins: **mean/variance correction** (Eq. 9) — one
+//!   batch, dense reference stats recorded first, corrections applied
+//!   in-flight and merged into the affine parameters.
+
+use crate::nn::models::{batch_slice, task_of, ModelBundle};
+use crate::nn::CompressibleModel;
+
+/// How a model family recovers statistics after compression.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Correction {
+    None,
+    BnReset,
+    MeanVar,
+}
+
+/// Paper defaults per task.
+pub fn default_correction(model: &str) -> Correction {
+    match task_of(model) {
+        "image" => Correction::BnReset,
+        "seq" | "det" => Correction::MeanVar,
+        _ => Correction::None,
+    }
+}
+
+/// Apply the chosen correction to a stitched model. `dense` is the
+/// uncompressed model (reference statistics for MeanVar).
+pub fn apply_with_dense(
+    kind: Correction,
+    model: &mut Box<dyn CompressibleModel>,
+    dense: &dyn CompressibleModel,
+    bundle: &ModelBundle,
+) {
+    match kind {
+        Correction::None => {}
+        Correction::BnReset => {
+            // Paper: "batchnorm statistics are reset using 100 batches of
+            // 128 samples" — our calibration split holds 1024 samples, so
+            // 8 batches of 128 cover it exactly.
+            let (batch, n_batches) = (128usize, 8usize);
+            let n = bundle.calib_x.shape[0];
+            let batches: Vec<_> = (0..n_batches)
+                .filter_map(|i| {
+                    let lo = i * batch;
+                    if lo >= n {
+                        return None;
+                    }
+                    Some(batch_slice(&bundle.calib_x, lo, (lo + batch).min(n)))
+                })
+                .collect();
+            model.reset_bn_stats(&batches);
+        }
+        Correction::MeanVar => {
+            // "a single batch of samples of size 128 (for YOLO) and 512
+            // (for BERT)".
+            let batch = if task_of(dense.name()) == "seq" { 512 } else { 128 };
+            let n = bundle.calib_x.shape[0].min(batch);
+            let xb = batch_slice(&bundle.calib_x, 0, n);
+            let dense_stats = dense.activation_stats(&xb);
+            model.correct_stats(&xb, &dense_stats);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        assert_eq!(default_correction("rneta"), Correction::BnReset);
+        assert_eq!(default_correction("bert6"), Correction::MeanVar);
+        assert_eq!(default_correction("tinydet"), Correction::MeanVar);
+    }
+}

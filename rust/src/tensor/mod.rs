@@ -1,0 +1,195 @@
+//! Minimal dense f32 N-d tensor used by the inference engine.
+//!
+//! Deliberately simple: contiguous row-major storage, shape-checked
+//! constructors, and the handful of views the `nn` layers need (im2col is
+//! implemented in `nn::conv`). Heavy math goes through `linalg::Mat` (f64)
+//! or flat-slice loops.
+
+use crate::util::rng::Pcg;
+
+/// Contiguous row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn randn(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Pcg::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(|_| rng.normal_f32()).collect() }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Reshape (must preserve element count).
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.numel(),
+            "reshape {:?} -> {shape:?}",
+            self.shape
+        );
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Flat index of a multi-index.
+    pub fn flat(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let strides = self.strides();
+        idx.iter().zip(&strides).map(|(i, s)| i * s).sum()
+    }
+
+    #[inline]
+    pub fn at4(&self, a: usize, b: usize, c: usize, d: usize) -> f32 {
+        let (s1, s2, s3) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((a * s1 + b) * s2 + c) * s3 + d]
+    }
+
+    #[inline]
+    pub fn at3(&self, a: usize, b: usize, c: usize) -> f32 {
+        let (s1, s2) = (self.shape[1], self.shape[2]);
+        self.data[(a * s1 + b) * s2 + c]
+    }
+
+    #[inline]
+    pub fn at2(&self, a: usize, b: usize) -> f32 {
+        self.data[a * self.shape[1] + b]
+    }
+
+    /// Slice of the leading dimension: returns tensor with shape[1..].
+    pub fn index0(&self, i: usize) -> Tensor {
+        let inner: usize = self.shape[1..].iter().product();
+        Tensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[i * inner..(i + 1) * inner].to_vec(),
+        }
+    }
+
+    /// Stack tensors of identical shape along a new leading dimension.
+    pub fn stack(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let inner = &parts[0].shape;
+        let mut shape = vec![parts.len()];
+        shape.extend_from_slice(inner);
+        let mut data = Vec::with_capacity(parts.len() * parts[0].numel());
+        for p in parts {
+            assert_eq!(&p.shape, inner, "stack shape mismatch");
+            data.extend_from_slice(&p.data);
+        }
+        Tensor { shape, data }
+    }
+
+    /// Element-wise map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&v| f(v)).collect() }
+    }
+
+    /// Sum of squared differences against another tensor.
+    pub fn sq_err(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    /// argmax over the last dimension, returning indices (flattened batch).
+    pub fn argmax_last(&self) -> Vec<usize> {
+        let last = *self.shape.last().expect("argmax on 0-d tensor");
+        self.data
+            .chunks_exact(last)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_strides() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        assert_eq!(t.flat(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    fn index_helpers() {
+        let t = Tensor::from_vec(&[2, 2, 2], (0..8).map(|i| i as f32).collect());
+        assert_eq!(t.at3(1, 0, 1), 5.0);
+        let s = t.index0(1);
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.data, vec![4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn stack_roundtrip() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2], vec![3.0, 4.0]);
+        let s = Tensor::stack(&[a.clone(), b]);
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.index0(0), a);
+    }
+
+    #[test]
+    fn argmax_last_rows() {
+        let t = Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.5, 2.0, -1.0, 0.0]);
+        assert_eq!(t.argmax_last(), vec![1, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn from_vec_checks_len() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn sq_err_basic() {
+        let a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![1.0, 0.0, 3.0]);
+        assert_eq!(a.sq_err(&b), 4.0);
+    }
+}

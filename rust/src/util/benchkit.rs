@@ -1,0 +1,166 @@
+//! Criterion-style benchmark harness (criterion itself is not in the
+//! offline vendor set).
+//!
+//! Provides warmup + repeated timed runs with mean/stddev/min reporting,
+//! plus table rendering used by the `benches/` binaries that regenerate
+//! the paper's tables and figures.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) {
+        println!(
+            "bench {:<42} {:>10}   ±{:>8}   min {:>10}   ({} iters)",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.std_s),
+            fmt_time(self.min_s),
+            self.iters
+        );
+    }
+}
+
+/// Human-readable time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run `f` with warmup, then time it `iters` times.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = crate::util::mean(&samples);
+    let std = crate::util::stddev(&samples);
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let st = BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean,
+        std_s: std,
+        min_s: min,
+    };
+    st.report();
+    st
+}
+
+/// Time a single run of `f` (for expensive end-to-end cases).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed())
+}
+
+/// Simple fixed-width table renderer for paper-style output.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render to stdout (and return the string for EXPERIMENTS.md capture).
+    pub fn print(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("| ");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("{c:>w$} | ", w = w));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.header, &widths));
+        let sep: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        out.push_str(&format!("{}\n", "-".repeat(sep)));
+        for r in &self.rows {
+            out.push_str(&line(r, &widths));
+        }
+        print!("{out}");
+        out
+    }
+}
+
+/// Filter helper: `cargo bench -- <substring>` style case selection.
+/// Returns true when the case should run under the given argv.
+pub fn selected(case: &str) -> bool {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    args.is_empty() || args.iter().any(|a| case.contains(a.as_str()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let st = bench("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(st.iters, 5);
+        assert!(st.mean_s >= 0.0);
+        assert!(st.min_s <= st.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("demo", &["method", "2x", "3x"]);
+        t.row(vec!["GMP".into(), "74.86".into(), "71.44".into()]);
+        let s = t.print();
+        assert!(s.contains("GMP"));
+        assert!(s.contains("74.86"));
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,181 @@
+//! Hand-rolled CLI argument parsing (no `clap` in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Declarative description of one option for help text.
+#[derive(Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments: options + positionals.
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    specs: Vec<OptSpec>,
+    prog: String,
+    about: &'static str,
+}
+
+impl Args {
+    /// Parse from an explicit arg list (first element must NOT be argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        prog: &str,
+        about: &'static str,
+        specs: Vec<OptSpec>,
+        argv: I,
+    ) -> Args {
+        let mut a = Args {
+            opts: BTreeMap::new(),
+            flags: Vec::new(),
+            positional: Vec::new(),
+            specs,
+            prog: prog.to_string(),
+            about,
+        };
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if rest == "help" {
+                    a.print_help();
+                    std::process::exit(0);
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.opts.insert(rest.to_string(), v);
+                } else {
+                    a.flags.push(rest.to_string());
+                }
+            } else {
+                a.positional.push(arg);
+            }
+        }
+        a
+    }
+
+    /// Parse from the process environment, skipping argv[0].
+    pub fn parse(prog: &str, about: &'static str, specs: Vec<OptSpec>) -> Args {
+        Args::parse_from(prog, about, specs, std::env::args().skip(1))
+    }
+
+    pub fn print_help(&self) {
+        eprintln!("{} — {}\n", self.prog, self.about);
+        eprintln!("USAGE: {} [OPTIONS] [ARGS...]\n\nOPTIONS:", self.prog);
+        for s in &self.specs {
+            let d = s
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            eprintln!("  --{:<20} {}{}", s.name, s.help, d);
+        }
+        eprintln!("  --{:<20} print this help", "help");
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    /// Parse a comma-separated list of floats, e.g. `--targets 2,3,4`.
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad float '{s}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Convenience builder for option specs.
+pub fn opt(name: &'static str, help: &'static str, default: Option<&'static str>) -> OptSpec {
+    OptSpec { name, help, default }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Args {
+        Args::parse_from(
+            "t",
+            "test",
+            vec![],
+            argv.iter().map(|s| s.to_string()),
+        )
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--model", "resnet", "--bits=4", "run"]);
+        assert_eq!(a.get("model"), Some("resnet"));
+        assert_eq!(a.usize_or("bits", 8), 4);
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn flags_and_defaults() {
+        let a = parse(&["--verbose", "--x", "1.5"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.f64_or("x", 0.0), 1.5);
+        assert_eq!(a.f64_or("y", 2.5), 2.5);
+        assert_eq!(a.str_or("name", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn float_list() {
+        let a = parse(&["--targets", "2,3.5,4"]);
+        assert_eq!(a.f64_list_or("targets", &[]), vec![2.0, 3.5, 4.0]);
+        assert_eq!(a.f64_list_or("other", &[1.0]), vec![1.0]);
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // A value may start with '-' as long as it is not '--'.
+        let a = parse(&["--shift", "-3"]);
+        assert_eq!(a.f64_or("shift", 0.0), -3.0);
+    }
+}

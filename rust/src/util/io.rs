@@ -1,0 +1,173 @@
+//! Binary IO helpers: little-endian primitive read/write and the `.obcw`
+//! tensor container used to move trained weights from the build-time JAX
+//! layer into the Rust runtime.
+//!
+//! `.obcw` format (all little-endian):
+//! ```text
+//! magic   : 4 bytes  "OBCW"
+//! version : u32      (1)
+//! count   : u32      number of named tensors
+//! repeat count times:
+//!   name_len : u32 ; name : utf-8 bytes
+//!   ndim     : u32 ; dims : u32 * ndim
+//!   dtype    : u32      (0 = f32)
+//!   data     : f32 * prod(dims)
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// A named tensor loaded from / saved to an `.obcw` file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NamedTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl NamedTensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Ordered map of name → tensor.
+pub type TensorMap = BTreeMap<String, NamedTensor>;
+
+const MAGIC: &[u8; 4] = b"OBCW";
+
+/// Write a tensor map to `path`.
+pub fn save_obcw(path: &Path, tensors: &TensorMap) -> anyhow::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    write_u32(&mut f, 1)?;
+    write_u32(&mut f, tensors.len() as u32)?;
+    for (name, t) in tensors {
+        anyhow::ensure!(
+            t.numel() == t.data.len(),
+            "tensor '{name}' shape/data mismatch"
+        );
+        write_u32(&mut f, name.len() as u32)?;
+        f.write_all(name.as_bytes())?;
+        write_u32(&mut f, t.shape.len() as u32)?;
+        for &d in &t.shape {
+            write_u32(&mut f, d as u32)?;
+        }
+        write_u32(&mut f, 0)?; // dtype f32
+        let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+    }
+    Ok(())
+}
+
+/// Load a tensor map from `path`.
+pub fn load_obcw(path: &Path) -> anyhow::Result<TensorMap> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "bad magic in {}", path.display());
+    let version = read_u32(&mut f)?;
+    anyhow::ensure!(version == 1, "unsupported obcw version {version}");
+    let count = read_u32(&mut f)? as usize;
+    let mut out = TensorMap::new();
+    for _ in 0..count {
+        let name_len = read_u32(&mut f)? as usize;
+        anyhow::ensure!(name_len < 4096, "implausible name length {name_len}");
+        let mut name_bytes = vec![0u8; name_len];
+        f.read_exact(&mut name_bytes)?;
+        let name = String::from_utf8(name_bytes)?;
+        let ndim = read_u32(&mut f)? as usize;
+        anyhow::ensure!(ndim <= 8, "implausible ndim {ndim}");
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut f)? as usize);
+        }
+        let dtype = read_u32(&mut f)?;
+        anyhow::ensure!(dtype == 0, "unsupported dtype {dtype}");
+        let n: usize = shape.iter().product();
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.insert(name, NamedTensor { shape, data });
+    }
+    Ok(out)
+}
+
+fn write_u32<W: Write>(w: &mut W, v: u32) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Read an entire file as a string with a path-qualified error.
+pub fn read_to_string(path: &Path) -> anyhow::Result<String> {
+    std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))
+}
+
+/// Write a string, creating parent directories as needed.
+pub fn write_string(path: &Path, s: &str) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, s).map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
+}
+
+/// Repo-root-relative artifact directory: honours `OBC_ARTIFACTS`, falls
+/// back to `./artifacts` relative to the current directory.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("OBC_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obcw_roundtrip() {
+        let dir = std::env::temp_dir().join("obc_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.obcw");
+        let mut m = TensorMap::new();
+        m.insert(
+            "conv1.weight".into(),
+            NamedTensor { shape: vec![4, 3, 3, 3], data: (0..108).map(|i| i as f32 * 0.5).collect() },
+        );
+        m.insert(
+            "fc.bias".into(),
+            NamedTensor { shape: vec![10], data: vec![-1.5; 10] },
+        );
+        save_obcw(&path, &m).unwrap();
+        let back = load_obcw(&path).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn obcw_rejects_garbage() {
+        let dir = std::env::temp_dir().join("obc_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.obcw");
+        std::fs::write(&path, b"NOPExxxxxxx").unwrap();
+        assert!(load_obcw(&path).is_err());
+    }
+
+    #[test]
+    fn write_string_creates_dirs() {
+        let dir = std::env::temp_dir().join("obc_io_test3/nested/deep");
+        let path = dir.join("f.txt");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_string(&path, "hello").unwrap();
+        assert_eq!(read_to_string(&path).unwrap(), "hello");
+    }
+}

@@ -1,0 +1,115 @@
+//! Lightweight structured logging + progress reporting for the
+//! coordinator. Writes to stderr; level controlled by `OBC_LOG`
+//! (error|warn|info|debug, default info).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, PartialEq, PartialOrd)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+
+fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != 255 {
+        return l;
+    }
+    let v = match std::env::var("OBC_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("warn") => 1,
+        Ok("debug") => 3,
+        _ => 2,
+    };
+    LEVEL.store(v, Ordering::Relaxed);
+    v
+}
+
+/// Override the log level programmatically (tests, quiet benches).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn log(l: Level, module: &str, msg: &str) {
+    if (l as u8) <= level() {
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[{tag}] {module}: {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($mod:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, $mod, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warnlog {
+    ($mod:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, $mod, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debuglog {
+    ($mod:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, $mod, &format!($($arg)*))
+    };
+}
+
+/// Scoped timer that logs elapsed time on drop (debug level).
+pub struct Stopwatch {
+    label: String,
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn new(label: &str) -> Stopwatch {
+        Stopwatch { label: label.to_string(), start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Drop for Stopwatch {
+    fn drop(&mut self) {
+        log(
+            Level::Debug,
+            "timer",
+            &format!("{} took {:.3}s", self.label, self.elapsed_s()),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_measures() {
+        let sw = Stopwatch::new("t");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.elapsed_s() >= 0.004);
+    }
+
+    #[test]
+    fn log_does_not_panic() {
+        set_level(Level::Debug);
+        log(Level::Info, "test", "hello");
+        log(Level::Debug, "test", "debug msg");
+        set_level(Level::Info);
+    }
+}

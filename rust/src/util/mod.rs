@@ -1,0 +1,50 @@
+//! Substrate utilities built in-tree for the offline build: mini-JSON,
+//! deterministic RNG, CLI parsing, thread pool, bench harness, logging,
+//! and a tiny property-testing helper.
+
+pub mod json;
+pub mod rng;
+pub mod cli;
+pub mod pool;
+pub mod benchkit;
+pub mod logging;
+pub mod proptest;
+pub mod io;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Format a float for table output: fixed 2 decimals, right-aligned.
+pub fn fmt2(v: f64) -> String {
+    format!("{v:6.2}")
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation of a slice.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_stddev() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((stddev(&[2.0, 4.0]) - std::f64::consts::SQRT_2).abs() < 1e-12);
+        assert_eq!(stddev(&[1.0]), 0.0);
+    }
+}

@@ -1,0 +1,208 @@
+//! A fixed-size work-stealing-free thread pool with scoped parallel-for.
+//!
+//! The coordinator fans per-layer compression jobs (and per-row batches
+//! inside a layer) across this pool. Built in-tree: no `rayon`/`tokio` in
+//! the offline vendor set.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<std::collections::VecDeque<Job>>,
+    cv: Condvar,
+    shutdown: Mutex<bool>,
+    pending: AtomicUsize,
+    done_cv: Condvar,
+    done_mx: Mutex<()>,
+}
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` worker threads (min 1).
+    pub fn new(n: usize) -> ThreadPool {
+        let n = n.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: Mutex::new(false),
+            pending: AtomicUsize::new(0),
+            done_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("obc-worker-{i}"))
+                    .spawn(move || worker_loop(s))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, size: n }
+    }
+
+    /// Pool sized to the machine (leaving one core for the coordinator).
+    pub fn default_size() -> ThreadPool {
+        let n = thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        ThreadPool::new(n.saturating_sub(1).max(1))
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job; does not block.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.pending.fetch_add(1, Ordering::SeqCst);
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(f));
+        drop(q);
+        self.shared.cv.notify_one();
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait_idle(&self) {
+        let mut g = self.shared.done_mx.lock().unwrap();
+        while self.shared.pending.load(Ordering::SeqCst) != 0 {
+            g = self.shared.done_cv.wait(g).unwrap();
+        }
+    }
+
+    /// Parallel map over `0..n`: runs `f(i)` on the pool, collects results
+    /// in index order. `f` must be cloneable across threads via Arc.
+    pub fn par_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let out: Arc<Mutex<Vec<Option<T>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let out = Arc::clone(&out);
+            self.submit(move || {
+                let v = f(i);
+                out.lock().unwrap()[i] = Some(v);
+            });
+        }
+        self.wait_idle();
+        Arc::try_unwrap(out)
+            .unwrap_or_else(|_| panic!("par_map results still shared"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("par_map job missing result"))
+            .collect()
+    }
+
+    /// Parallel for over chunks of `0..n` with `chunk` items per task.
+    pub fn par_chunks<F>(&self, n: usize, chunk: usize, f: F)
+    where
+        F: Fn(std::ops::Range<usize>) + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let chunk = chunk.max(1);
+        let mut start = 0;
+        while start < n {
+            let end = (start + chunk).min(n);
+            let f = Arc::clone(&f);
+            self.submit(move || f(start..end));
+            start = end;
+        }
+        self.wait_idle();
+    }
+}
+
+fn worker_loop(s: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = s.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                if *s.shutdown.lock().unwrap() {
+                    return;
+                }
+                q = s.cv.wait(q).unwrap();
+            }
+        };
+        job();
+        if s.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _g = s.done_mx.lock().unwrap();
+            s.done_cv.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.wait_idle();
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_map_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.par_map(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn wait_idle_counts_all() {
+        let pool = ThreadPool::new(3);
+        let sum = Arc::new(AtomicU64::new(0));
+        for i in 0..200u64 {
+            let s = Arc::clone(&sum);
+            pool.submit(move || {
+                s.fetch_add(i, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(sum.load(Ordering::SeqCst), (0..200).sum::<u64>());
+    }
+
+    #[test]
+    fn par_chunks_covers_range() {
+        let pool = ThreadPool::new(2);
+        let seen = Arc::new(Mutex::new(vec![false; 57]));
+        let s2 = Arc::clone(&seen);
+        pool.par_chunks(57, 10, move |r| {
+            let mut g = s2.lock().unwrap();
+            for i in r {
+                assert!(!g[i], "index {i} visited twice");
+                g[i] = true;
+            }
+        });
+        assert!(seen.lock().unwrap().iter().all(|&b| b));
+    }
+
+    #[test]
+    fn reuse_after_wait() {
+        let pool = ThreadPool::new(2);
+        let a = pool.par_map(10, |i| i);
+        let b = pool.par_map(10, |i| i + 1);
+        assert_eq!(a[9], 9);
+        assert_eq!(b[9], 10);
+    }
+}

@@ -1,0 +1,116 @@
+//! Tiny property-testing harness (the real `proptest` crate is not in the
+//! offline vendor set).
+//!
+//! `check(seed, cases, |g| { ... })` runs a property `cases` times with a
+//! fresh [`Gen`] each time; on failure the failing case index and seed are
+//! reported so the case can be replayed deterministically.
+
+use crate::util::rng::Pcg;
+
+/// Random input generator handed to properties.
+pub struct Gen {
+    pub rng: Pcg,
+}
+
+impl Gen {
+    /// usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vector of standard normals.
+    pub fn normals(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal_f32()).collect()
+    }
+
+    /// Vector of normals with occasional large outliers (stress numeric
+    /// stability — mirrors quantization-outlier weight distributions).
+    pub fn normals_with_outliers(&mut self, n: usize, p_outlier: f64) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                let v = self.rng.normal_f32();
+                if self.rng.chance(p_outlier) {
+                    v * 20.0
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+}
+
+/// Run `prop` for `cases` random cases. Panics with a replayable report on
+/// the first failure (properties signal failure via Err(msg)).
+pub fn check<F>(seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut master = Pcg::new(seed);
+    for case in 0..cases {
+        let mut g = Gen { rng: master.fork(case as u64) };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Assert two slices are element-wise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f64, rtol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let diff = (x as f64 - y as f64).abs();
+        let tol = atol + rtol * (y as f64).abs().max((x as f64).abs());
+        if diff > tol {
+            return Err(format!("elem {i}: {x} vs {y} (diff {diff:.3e} > tol {tol:.3e})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_good_property() {
+        check(1, 50, |g| {
+            let n = g.usize_in(1, 10);
+            let v = g.normals(n);
+            if v.len() == n {
+                Ok(())
+            } else {
+                Err("len".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failure() {
+        check(2, 10, |g| {
+            if g.usize_in(0, 4) == 3 {
+                Err("hit 3".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn close_detects_mismatch() {
+        assert!(assert_close(&[1.0], &[1.0 + 1e-6], 1e-5, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-5, 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+    }
+}

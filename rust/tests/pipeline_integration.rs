@@ -1,0 +1,88 @@
+//! Integration: the full pipeline on a real trained model (skips until
+//! `make artifacts` has produced rneta).
+
+use obc::coordinator::methods::{PruneMethod, QuantMethod};
+use obc::coordinator::pipeline::{LayerScope, Pipeline};
+use obc::solver::sparsity_grid;
+
+fn pipeline_or_skip() -> Option<Pipeline> {
+    if cfg!(debug_assertions) {
+        // Full-model calibration + evaluation is only practical in
+        // release mode on this single-core testbed; `cargo test
+        // --release` (as `make test` does) exercises these.
+        eprintln!("SKIP pipeline integration in debug build (use --release)");
+        return None;
+    }
+    Pipeline::try_load_for_bench("rneta")
+}
+
+#[test]
+fn dense_model_is_accurate() {
+    let Some(p) = pipeline_or_skip() else { return };
+    let dense = p.dense_metric();
+    assert!(dense > 70.0, "dense rneta should be well-trained, got {dense}");
+}
+
+#[test]
+fn moderate_pruning_keeps_most_accuracy_and_methods_order() {
+    let Some(p) = pipeline_or_skip() else { return };
+    let dense = p.dense_metric();
+    let ex = p.run_uniform_sparsity(PruneMethod::ExactObs, 0.6, LayerScope::All);
+    let gmp = p.run_uniform_sparsity(PruneMethod::Gmp, 0.6, LayerScope::All);
+    assert!(ex > dense - 12.0, "ExactOBS @60% collapsed: {ex} vs dense {dense}");
+    assert!(
+        ex >= gmp - 1.0,
+        "ExactOBS ({ex}) should not lose to GMP ({gmp}) at 60%"
+    );
+}
+
+#[test]
+fn nm_24_pattern_end_to_end() {
+    let Some(p) = pipeline_or_skip() else { return };
+    let dense = p.dense_metric();
+    let m = p.run_nm(PruneMethod::ExactObs, 2, 4, LayerScope::SkipFirstLast);
+    assert!(m > dense - 12.0, "2:4 collapsed: {m} vs dense {dense}");
+}
+
+#[test]
+fn quant_4bit_close_to_dense() {
+    let Some(p) = pipeline_or_skip() else { return };
+    let dense = p.dense_metric();
+    let m = p.run_quant(QuantMethod::Obq, 4, false, LayerScope::All, true);
+    assert!(m > dense - 6.0, "4-bit OBQ too lossy: {m} vs dense {dense}");
+    // Bits ordering: 4 ≥ 2 (allowing small noise).
+    let m2 = p.run_quant(QuantMethod::Obq, 2, false, LayerScope::All, true);
+    assert!(m + 1.0 >= m2, "2-bit ({m2}) beat 4-bit ({m})?");
+}
+
+#[test]
+fn flop_target_pipeline_achieves_reduction() {
+    let Some(p) = pipeline_or_skip() else { return };
+    let grid = sparsity_grid(0.2, 0.92); // coarse grid for test speed
+    let db = p.build_sparsity_db(PruneMethod::ExactObs, &grid, LayerScope::All);
+    let (metric, achieved) = p
+        .eval_flop_target(&db, LayerScope::All, 2.0)
+        .expect("2x must be feasible");
+    assert!(achieved >= 1.95, "achieved only {achieved}x");
+    let dense = p.dense_metric();
+    assert!(metric > dense - 15.0, "2x pruned collapsed: {metric} vs {dense}");
+}
+
+#[test]
+fn bn_reset_recovers_accuracy() {
+    // Statistics correction must help (that is why the paper applies it).
+    let Some(p) = pipeline_or_skip() else { return };
+    let mut model = p.model().clone_box();
+    for l in p.layers(LayerScope::SkipFirstLast) {
+        let w = p.model().get_weight(&l.name);
+        let h = &p.hessians[&l.name];
+        let r = PruneMethod::ExactObs.prune(&w, h, 0.7);
+        model.set_weight(&l.name, &r.w);
+    }
+    let raw = p.eval_raw(model.clone_box());
+    let corrected = p.eval_corrected(model);
+    assert!(
+        corrected >= raw - 0.5,
+        "BN reset hurt: raw {raw} corrected {corrected}"
+    );
+}
