@@ -1,0 +1,26 @@
+# OBC build/test entry points. `make test` mirrors tier-1 verify.
+
+CARGO ?= cargo
+
+.PHONY: build test bench fmt lint clean
+
+build:
+	$(CARGO) build --release
+
+# Tier-1 verify: offline release build + full test suite.
+test:
+	$(CARGO) build --release
+	$(CARGO) test -q
+
+# Perf microbenches (serial vs pooled hot paths, kernel timings).
+bench:
+	$(CARGO) bench --bench perf_kernels
+
+fmt:
+	$(CARGO) fmt --all --check
+
+lint:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+clean:
+	$(CARGO) clean

@@ -1,33 +1,44 @@
 //! §Perf microbenches: the L3 hot paths (Hessian accumulation, ExactOBS
-//! sweep, group reconstruction, OBQ sweep) and the PJRT-vs-native bridge.
+//! sweep, group reconstruction, OBQ sweep), the serial-vs-pooled
+//! parallel speedup of the blocked ExactOBS path, and (with `--features
+//! pjrt`) the PJRT-vs-native bridge.
 //!
 //! Used by the performance pass (EXPERIMENTS.md §Perf) to find and track
 //! bottlenecks; thresholds are not asserted here — numbers are recorded.
+//! The serial-vs-pooled section *does* assert bit-identical outputs: the
+//! parallel fan-out must not change a single ulp.
 
 use obc::compress::hessian::{HessianAccumulator, LayerHessian};
 use obc::compress::{exact_obs, obq};
 use obc::linalg::Mat;
-use obc::util::benchkit::bench;
+use obc::util::benchkit::{bench, selected};
+use obc::util::pool::{self, ThreadPool};
 
 fn main() {
     // Hessian accumulation: d=288 (the largest conv in the zoo), N=1024.
-    let x = Mat::randn(288, 1024, 1);
-    bench("hessian_xxt_d288_n1024", 1, 3, || {
-        let mut acc = HessianAccumulator::new(288);
-        acc.add_batch(&x);
-        std::hint::black_box(acc.raw());
-    });
+    if selected("hessian_xxt_d288_n1024") {
+        let x = Mat::randn(288, 1024, 1);
+        bench("hessian_xxt_d288_n1024", 1, 3, || {
+            let mut acc = HessianAccumulator::new(288);
+            acc.add_batch(&x);
+            std::hint::black_box(acc.raw());
+        });
+    }
 
     // Cholesky inverse at d=288.
-    let h288 = LayerHessian::from_inputs(&Mat::randn(288, 640, 2), 1e-8);
-    bench("cholesky_inverse_d288", 1, 3, || {
-        let mut acc = HessianAccumulator::new(288);
-        acc.add_batch(&Mat::randn(288, 320, 3));
-        std::hint::black_box(acc.finalize(1e-8).unwrap());
-    });
+    if selected("cholesky_inverse_d288") {
+        bench("cholesky_inverse_d288", 1, 3, || {
+            let mut acc = HessianAccumulator::new(288);
+            acc.add_batch(&Mat::randn(288, 320, 3));
+            std::hint::black_box(acc.finalize(1e-8).unwrap());
+        });
+    }
 
     // ExactOBS full-trace sweep, one row, d ∈ {72, 144, 288}.
     for d in [72usize, 144, 288] {
+        if !selected(&format!("obs_sweep_row_d{d}_full")) {
+            continue;
+        }
         let h = LayerHessian::synthetic(d, 4 + d as u64);
         let w = Mat::randn(1, d, 5 + d as u64);
         bench(&format!("obs_sweep_row_d{d}_full"), 1, 3, || {
@@ -38,8 +49,9 @@ fn main() {
     }
 
     // Group-OBS reconstruction at 80% sparsity, d=288.
-    {
+    if selected("group_reconstruct_d288_s80") {
         let d = 288;
+        let h288 = LayerHessian::from_inputs(&Mat::randn(288, 640, 2), 1e-8);
         let w = Mat::randn(1, d, 9);
         let pruned: Vec<usize> = (0..(d * 4 / 5)).collect();
         bench("group_reconstruct_d288_s80", 1, 3, || {
@@ -52,7 +64,7 @@ fn main() {
     }
 
     // OBQ sweep, 4-bit, matrix 32x144.
-    {
+    if selected("obq_quantize_32x144_4bit") {
         let h = LayerHessian::synthetic(144, 11);
         let w = Mat::randn(32, 144, 12);
         bench("obq_quantize_32x144_4bit", 1, 3, || {
@@ -60,7 +72,56 @@ fn main() {
         });
     }
 
+    // Serial vs pooled blocked ExactOBS (§A.5 "essentially perfectly
+    // parallelizable"): same rows, private H⁻¹ per row, deterministic
+    // row→result ordering — outputs must be bit-identical.
+    if selected("prune_unstructured_32x96") {
+        let d = 96;
+        let h = LayerHessian::synthetic(d, 21);
+        let w = Mat::randn(32, d, 22);
+        let opts = exact_obs::ObsOpts::default();
+        let serial_pool = ThreadPool::new(1);
+        let pooled = pool::global();
+        let s = bench("prune_unstructured_32x96_serial", 1, 3, || {
+            std::hint::black_box(exact_obs::prune_unstructured_on(
+                &serial_pool,
+                &w,
+                &h,
+                0.6,
+                &opts,
+            ));
+        });
+        let p = bench(
+            &format!("prune_unstructured_32x96_pool{}", pooled.size()),
+            1,
+            3,
+            || {
+                std::hint::black_box(exact_obs::prune_unstructured_on(
+                    pooled, &w, &h, 0.6, &opts,
+                ));
+            },
+        );
+        let a = exact_obs::prune_unstructured_on(&serial_pool, &w, &h, 0.6, &opts);
+        let b = exact_obs::prune_unstructured_on(pooled, &w, &h, 0.6, &opts);
+        assert_eq!(a.w.data, b.w.data, "pooled output diverged from serial");
+        assert_eq!(a.sq_err, b.sq_err);
+        println!(
+            "serial/pooled({} threads) speedup: {:.2}x (outputs bit-identical)",
+            pooled.size(),
+            s.min_s / p.min_s.max(1e-12)
+        );
+    }
+
     // PJRT bridge vs native on an artifact shape (16 rows x d=32).
+    #[cfg(feature = "pjrt")]
+    pjrt_benches();
+    #[cfg(not(feature = "pjrt"))]
+    eprintln!("SKIP pjrt benches (build with --features pjrt)");
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_benches() {
+    use obc::runtime::dispatch::pjrt;
     match obc::runtime::Runtime::new() {
         Ok(rt) => {
             let d = 32;
@@ -70,15 +131,16 @@ fn main() {
                 for r in 0..16 {
                     let mut wr = w.row(r).to_vec();
                     let mut hinv = h.hinv.clone();
-                    std::hint::black_box(exact_obs::sweep_row(&mut wr, &mut hinv, d, |_, _| true));
+                    std::hint::black_box(exact_obs::sweep_row(&mut wr, &mut hinv, d, |_, _| {
+                        true
+                    }));
                 }
             });
             // First call compiles (cold), subsequent are cached.
-            let _ = obc::runtime::dispatch::obs_sweep_pjrt(&rt, &w, &h.hinv);
+            let _ = pjrt::obs_sweep_pjrt(&rt, &w, &h.hinv);
             bench("obs_sweep_16x32_pjrt_cached", 1, 5, || {
                 std::hint::black_box(
-                    obc::runtime::dispatch::obs_sweep_pjrt(&rt, &w, &h.hinv)
-                        .map(|r| r.ok()),
+                    pjrt::obs_sweep_pjrt(&rt, &w, &h.hinv).map(|r| r.ok()),
                 );
             });
         }

@@ -10,7 +10,7 @@ use obc::util::benchkit::Table;
 use obc::util::cli::{opt, Args};
 use obc::util::io::artifacts_dir;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> obc::util::Result<()> {
     let args = Args::parse(
         "cpu_speedup",
         "block-sparse + int8 latency-constrained compression",

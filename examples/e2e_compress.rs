@@ -20,7 +20,7 @@ use obc::util::cli::{opt, Args};
 use obc::util::io::artifacts_dir;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> obc::util::Result<()> {
     let args = Args::parse(
         "e2e_compress",
         "end-to-end OBC pipeline driver",

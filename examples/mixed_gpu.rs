@@ -12,7 +12,7 @@ use obc::util::benchkit::Table;
 use obc::util::cli::{opt, Args};
 use obc::util::io::artifacts_dir;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> obc::util::Result<()> {
     let args = Args::parse(
         "mixed_gpu",
         "joint quant + 2:4 BOP-constrained compression",

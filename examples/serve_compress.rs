@@ -21,7 +21,7 @@ use std::collections::BTreeMap;
 use std::io::{BufRead, Write};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> obc::util::Result<()> {
     let stdin = std::io::stdin();
     let mut out = std::io::stdout();
     // Pipelines are cached per model: calibration happens once per model
@@ -56,11 +56,11 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn handle(line: &str, pipelines: &mut BTreeMap<String, Pipeline>) -> anyhow::Result<Json> {
+fn handle(line: &str, pipelines: &mut BTreeMap<String, Pipeline>) -> obc::util::Result<Json> {
     let job = parse(line)?;
     let op = job.req_str("op")?;
     if op == "shutdown" {
-        anyhow::bail!("shutdown");
+        obc::bail!("shutdown");
     }
     let model = job.req_str("model")?.to_string();
     if !pipelines.contains_key(&model) {
@@ -104,7 +104,7 @@ fn handle(line: &str, pipelines: &mut BTreeMap<String, Pipeline>) -> anyhow::Res
             let metric = p.run_quant(method, bits, false, LayerScope::All, true);
             reply.set("method", method.name()).set("bits", bits as usize).set("metric", metric);
         }
-        other => anyhow::bail!("unknown op '{other}'"),
+        other => obc::bail!("unknown op '{other}'"),
     }
     Ok(reply)
 }

@@ -1,0 +1,279 @@
+"""Generate the cross-kernel conformance fixtures in rust/tests/fixtures/.
+
+The golden values are produced by float64 mirrors of the numpy oracles in
+`compile/kernels/ref.py` (the same algorithms the pytest suite checks the
+Pallas kernels against), with two deviations that make them *exact*
+references for the native Rust kernels in `rust/src/compress/`:
+
+* rounding is round-half-away-from-zero (Rust `f64::round`), not numpy's
+  banker's rounding — measure-zero difference on random data, but the
+  fixtures are meant to be bit-faithful;
+* the Lemma-1 rank-1 update is evaluated in the same operation order as
+  `linalg::remove_row_col` (`(col_p[r]·(1/diag))·row_p[c]`), so the f64
+  trajectories agree to the last ulp rather than merely to ~1e-12.
+
+Cases whose greedy selection is numerically ambiguous (near-tied scores,
+rounding-boundary weights) are rejected and regenerated from the next
+seed, so the checked-in fixtures are robust to ulp-level reorderings.
+
+Run from the repo root (only needed when regenerating):
+
+    python3 python/compile/gen_fixtures.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures")
+
+REL_GAP = 1e-9  # minimum relative score gap for a selection to count as robust
+
+
+def rust_round(x):
+    """f64::round — round half away from zero."""
+    return np.copysign(np.floor(np.abs(x) + 0.5), x)
+
+
+def grid_quant(w, scale, zero, maxq):
+    if scale == 0.0:
+        return np.zeros_like(w)
+    q = np.clip(rust_round(w / scale + zero), 0.0, maxq)
+    return scale * (q - zero)
+
+
+def remove_row_col(hinv, p):
+    """Mirror of linalg::remove_row_col, same operation order."""
+    d = hinv.shape[0]
+    dpiv = hinv[p, p]
+    colp = hinv[:, p].copy()
+    rowp = hinv[p, :].copy()
+    inv_d = 1.0 / dpiv
+    for r in range(d):
+        if colp[r] == 0.0:
+            continue
+        hinv[r, :] -= (colp[r] * inv_d) * rowp
+    hinv[p, :] = 0.0
+    hinv[:, p] = 0.0
+
+
+def obs_sweep_rust(w0, hinv0, k):
+    """Mirror of compress::exact_obs::sweep_row (unstructured eligibility).
+
+    Returns (w, order, dloss, fragile)."""
+    w = np.asarray(w0, np.float64).copy()
+    hinv = np.asarray(hinv0, np.float64).copy()
+    d = w.shape[0]
+    alive = np.ones(d, bool)
+    order, dloss = [], []
+    fragile = False
+    for _ in range(min(k, d)):
+        diag = np.diag(hinv).copy()
+        scores = np.where(alive, w * w / np.maximum(diag, 1e-300), np.inf)
+        p = int(np.argmin(scores))
+        live = np.sort(scores[alive])
+        if live.size > 1 and live[1] - live[0] < REL_GAP * max(abs(live[1]), 1e-12):
+            fragile = True
+        dp = max(hinv[p, p], 1e-300)
+        f = w[p] / dp
+        hrow = hinv[p, :].copy()
+        w = np.where(alive, w - f * hrow, w)
+        w[p] = 0.0
+        alive[p] = False
+        remove_row_col(hinv, p)
+        order.append(p)
+        dloss.append(0.5 * scores[p])
+    return w, order, dloss, fragile
+
+
+def obq_sweep_rust(w0, hinv0, scale, zero, maxq, outlier):
+    """Mirror of compress::obq::quantize_row. Returns (w, fragile)."""
+    w = np.asarray(w0, np.float64).copy()
+    hinv = np.asarray(hinv0, np.float64).copy()
+    d = w.shape[0]
+    alive = np.ones(d, bool)
+    half_delta = scale / 2.0
+    fragile = False
+    for _ in range(d):
+        q = grid_quant(w, scale, zero, maxq)
+        # No rounding-boundary check: the mirror evaluates w/scale + zero
+        # with the exact same f64 ops as Grid::quant, so even a value that
+        # sits exactly on a .5 boundary rounds identically on both sides
+        # (both use round-half-away-from-zero).
+        p = -1
+        if outlier:
+            err = np.abs(q - w)
+            masked = np.where(alive, err, -np.inf)
+            cand = int(np.argmax(masked))
+            if masked[cand] > half_delta:
+                p = cand
+                if abs(masked[cand] - half_delta) < REL_GAP:
+                    fragile = True
+                top = np.sort(masked[alive])[::-1]
+                if top.size > 1 and top[0] - top[1] < REL_GAP * max(abs(top[0]), 1e-12):
+                    fragile = True
+            elif abs(masked[cand] - half_delta) < REL_GAP:
+                fragile = True
+        if p < 0:
+            diag = np.maximum(np.diag(hinv), 1e-300)
+            scores = np.where(alive, (q - w) ** 2 / diag, np.inf)
+            p = int(np.argmin(scores))
+            live = np.sort(scores[alive])
+            if live.size > 1 and live[1] - live[0] < REL_GAP * max(abs(live[1]), 1e-12):
+                fragile = True
+        qp = q[p]
+        dp = max(hinv[p, p], 1e-300)
+        f = (w[p] - qp) / dp
+        hrow = hinv[p, :].copy()
+        upd = f * hrow
+        mask = alive.copy()
+        mask[p] = False
+        w = np.where(mask, w - upd, w)
+        w[p] = qp
+        alive[p] = False
+        remove_row_col(hinv, p)
+    return w, fragile
+
+
+def make_problem(d, rows, n, seed, damp=1e-5):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(d, n))
+    h = 2.0 * x @ x.T + damp * np.eye(d)
+    hinv = np.linalg.inv(h)
+    w = rng.normal(size=(rows, d))
+    return w, hinv
+
+
+def fit_grid(wr, bits, symmetric):
+    """Mirror of the minmax grid fit used by the kernel tests."""
+    maxq = float(2**bits - 1)
+    lo, hi = min(float(wr.min()), 0.0), max(float(wr.max()), 0.0)
+    if symmetric:
+        a = max(abs(lo), abs(hi))
+        lo, hi = -a, a
+    scale = (hi - lo) / maxq
+    if symmetric:
+        zero = float(np.floor((maxq + 1.0) / 2.0))
+    else:
+        zero = float(np.clip(rust_round(np.array(-lo / scale)), 0.0, maxq))
+    return scale, zero, maxq
+
+
+def gen_obs_cases():
+    cases = []
+    # (name, d, rows, k) — shapes mirroring python/tests/test_obs_kernel.py.
+    for name, d, rows, k in [
+        ("d8_r2_full", 8, 2, 8),
+        ("d12_r3_partial_k7", 12, 3, 7),
+        ("d16_r2_full", 16, 2, 16),
+        ("d32_r1_full", 32, 1, 32),
+    ]:
+        for attempt in range(64):
+            seed = 1000 * d + 17 * rows + attempt
+            w, hinv = make_problem(d, rows, 3 * d + 8, seed)
+            expects = []
+            fragile_any = False
+            for r in range(rows):
+                wr, order, dloss, fragile = obs_sweep_rust(w[r], hinv, k)
+                fragile_any |= fragile
+                expects.append(
+                    {"w": wr.tolist(), "order": order, "dloss": dloss}
+                )
+            if fragile_any:
+                continue
+            cases.append(
+                {
+                    "name": name,
+                    "d": d,
+                    "rows": rows,
+                    "k": k,
+                    "w": w.reshape(-1).tolist(),
+                    "hinv": hinv.reshape(-1).tolist(),
+                    "expect": expects,
+                }
+            )
+            break
+        else:
+            raise RuntimeError(f"no robust seed found for obs case {name}")
+    return {"cases": cases}
+
+
+def gen_obq_cases():
+    cases = []
+    # (name, d, rows, bits, symmetric, outlier, big_outliers)
+    for name, d, rows, bits, sym, outlier, big in [
+        ("d8_r2_4bit_outlier", 8, 2, 4, False, True, False),
+        ("d16_r2_4bit_outlier", 16, 2, 4, False, True, False),
+        ("d12_r2_3bit_sym_plain", 12, 2, 3, True, False, False),
+        ("d16_r1_8bit_heavy_outliers", 16, 1, 8, False, True, True),
+    ]:
+        for attempt in range(128):
+            seed = 2000 * d + 31 * bits + attempt
+            w, hinv = make_problem(d, rows, 3 * d, seed)
+            if big:
+                w[:, 0] *= 15.0
+            grids = []
+            expects = []
+            fragile_any = False
+            for r in range(rows):
+                scale, zero, maxq = fit_grid(w[r], bits, sym)
+                grids.append({"scale": scale, "zero": zero, "maxq": maxq})
+                wq, fragile = obq_sweep_rust(w[r], hinv, scale, zero, maxq, outlier)
+                fragile_any |= fragile
+                expects.append(wq.tolist())
+            if fragile_any:
+                continue
+            cases.append(
+                {
+                    "name": name,
+                    "d": d,
+                    "rows": rows,
+                    "outlier": outlier,
+                    "grids": grids,
+                    "w": w.reshape(-1).tolist(),
+                    "hinv": hinv.reshape(-1).tolist(),
+                    "expect": expects,
+                }
+            )
+            break
+        else:
+            raise RuntimeError(f"no robust seed found for obq case {name}")
+    return {"cases": cases}
+
+
+def gen_hessian_cases():
+    cases = []
+    for name, d, n in [("d8_n24", 8, 24), ("d16_n48", 16, 48)]:
+        rng = np.random.default_rng(3000 + d)
+        x = rng.normal(size=(d, n))
+        h = 2.0 * x @ x.T
+        cases.append(
+            {
+                "name": name,
+                "d": d,
+                "n": n,
+                "x": x.reshape(-1).tolist(),
+                "h": h.reshape(-1).tolist(),
+            }
+        )
+    return {"cases": cases}
+
+
+def main():
+    os.makedirs(OUT_DIR, exist_ok=True)
+    for fname, payload in [
+        ("obs_cases.json", gen_obs_cases()),
+        ("obq_cases.json", gen_obq_cases()),
+        ("hessian_cases.json", gen_hessian_cases()),
+    ]:
+        path = os.path.join(OUT_DIR, fname)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {path} ({os.path.getsize(path)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

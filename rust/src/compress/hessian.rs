@@ -61,7 +61,7 @@ impl HessianAccumulator {
     /// dampening is escalated ×10 up to 1e-1 before giving up — mirroring
     /// the paper's "add a small diagonal dampening term" guidance without
     /// requiring per-layer hyperparameter tuning.
-    pub fn finalize(&self, rel_damp: f64) -> anyhow::Result<LayerHessian> {
+    pub fn finalize(&self, rel_damp: f64) -> crate::util::error::Result<LayerHessian> {
         let mean_diag = self.h.diag_mean().max(1e-12);
         let mut damp = rel_damp.max(1e-12);
         loop {

@@ -15,6 +15,8 @@ use super::hessian::LayerHessian;
 use super::quant::{fit_grids_per_row, Grid, GridSearch};
 use super::CompressResult;
 use crate::linalg::{remove_row_col, Mat};
+use crate::util::pool::{self, ThreadPool};
+use std::sync::Arc;
 
 /// Options for OBQ.
 #[derive(Debug, Clone)]
@@ -106,10 +108,31 @@ pub fn quantize_with_grids(
     grids: &[Grid],
     opts: &ObqOpts,
 ) -> CompressResult {
+    quantize_with_grids_on(pool::global(), w, hess, grids, opts)
+}
+
+/// [`quantize_with_grids`] on an explicit pool: the Algorithm-3 sweep of
+/// each row is an independent job with a private H⁻¹ copy; results are
+/// stitched in row order, so the output is bit-identical for any pool
+/// size.
+pub fn quantize_with_grids_on(
+    pool: &ThreadPool,
+    w: &Mat,
+    hess: &LayerHessian,
+    grids: &[Grid],
+    opts: &ObqOpts,
+) -> CompressResult {
     assert_eq!(grids.len(), w.rows);
+    let rows = w.rows;
+    let wa = Arc::new(w.clone());
+    let hinv = Arc::new(hess.hinv.clone());
+    let grids: Arc<Vec<Grid>> = Arc::new(grids.to_vec());
+    let opts = opts.clone();
+    let new_rows = pool.par_map(rows, move |r| {
+        quantize_row(wa.row(r), &hinv, &grids[r], &opts)
+    });
     let mut out = w.clone();
-    for r in 0..w.rows {
-        let q = quantize_row(w.row(r), &hess.hinv, &grids[r], opts);
+    for (r, q) in new_rows.into_iter().enumerate() {
         out.row_mut(r).copy_from_slice(&q);
     }
     let err = super::layer_sq_err(w, &out, &hess.h);
@@ -122,30 +145,40 @@ pub fn quantize_with_grids(
 /// stay zero; the sweep treats them as pre-eliminated.
 pub fn quantize_sparse(w: &Mat, hess: &LayerHessian, opts: &ObqOpts) -> CompressResult {
     let grids = fit_grids_per_row(w, opts.bits, opts.symmetric, opts.search);
-    let mut out = w.clone();
-    for r in 0..w.rows {
-        let row = w.row(r);
+    let rows = w.rows;
+    let wa = Arc::new(w.clone());
+    let hinv = Arc::new(hess.hinv.clone());
+    let grids = Arc::new(grids);
+    let opts = opts.clone();
+    let new_rows = pool::global().par_map(rows, move |r| {
+        let row = wa.row(r);
         let d = row.len();
-        let mut hinv = hess.hinv.clone();
+        let mut h = (*hinv).clone();
         // Eliminate pruned coordinates from H⁻¹ first so compensations
         // only flow through surviving weights.
         for p in 0..d {
             if row[p] == 0.0 {
-                remove_row_col(&mut hinv, p);
+                remove_row_col(&mut h, p);
             }
         }
         let nz: Vec<usize> = (0..d).filter(|&p| row[p] != 0.0).collect();
         if nz.is_empty() {
-            continue;
+            return None;
         }
         // Dense sub-problem over the non-zeros (cubic in row density —
         // the paper's "already sparse" optimization).
-        let sub_hinv = hinv.submatrix(&nz, &nz);
+        let sub_hinv = h.submatrix(&nz, &nz);
         let sub_w: Vec<f64> = nz.iter().map(|&p| row[p]).collect();
-        let q = quantize_row(&sub_w, &sub_hinv, &grids[r], opts);
-        let out_row = out.row_mut(r);
-        for (k, &p) in nz.iter().enumerate() {
-            out_row[p] = q[k];
+        let q = quantize_row(&sub_w, &sub_hinv, &grids[r], &opts);
+        Some((nz, q))
+    });
+    let mut out = w.clone();
+    for (r, res) in new_rows.into_iter().enumerate() {
+        if let Some((nz, q)) = res {
+            let out_row = out.row_mut(r);
+            for (k, &p) in nz.iter().enumerate() {
+                out_row[p] = q[k];
+            }
         }
     }
     let err = super::layer_sq_err(w, &out, &hess.h);

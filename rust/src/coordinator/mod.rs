@@ -58,7 +58,7 @@ pub fn calibrate(
     model: &dyn CompressibleModel,
     bundle: &ModelBundle,
     opts: &CalibOpts,
-) -> anyhow::Result<LayerHessians> {
+) -> crate::util::error::Result<LayerHessians> {
     let layers = model.layers();
     let mut accs: BTreeMap<String, HessianAccumulator> = layers
         .iter()

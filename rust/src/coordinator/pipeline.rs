@@ -51,7 +51,7 @@ pub struct Pipeline {
 impl Pipeline {
     /// Load a model from the artifacts directory and calibrate it with
     /// paper-default options (1024 samples; 2× augmentation for images).
-    pub fn load(models_dir: &Path, model: &str) -> anyhow::Result<Pipeline> {
+    pub fn load(models_dir: &Path, model: &str) -> crate::util::error::Result<Pipeline> {
         let mut calib = CalibOpts::default();
         if task_of(model) == "image" {
             calib.augment = 2; // flips (the 10× of the paper is overkill here)
@@ -59,7 +59,7 @@ impl Pipeline {
         Pipeline::load_with(models_dir, model, calib)
     }
 
-    pub fn load_with(models_dir: &Path, model: &str, calib: CalibOpts) -> anyhow::Result<Pipeline> {
+    pub fn load_with(models_dir: &Path, model: &str, calib: CalibOpts) -> crate::util::error::Result<Pipeline> {
         let bundle = load_bundle(models_dir, model)?;
         crate::info!("pipeline", "calibrating {model} ({} samples)", calib.n_samples);
         let hessians = calibrate(bundle.model.as_ref(), &bundle, &calib)?;

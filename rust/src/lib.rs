@@ -19,12 +19,24 @@
 //! * [`stats`] — batch-norm reset and mean/variance correction (Eq. 9).
 //! * [`coordinator`] — the L3 orchestration layer: job scheduling across a
 //!   thread pool, experiment pipelines, metrics.
-//! * [`runtime`] — PJRT bridge: loads AOT-compiled HLO artifacts produced
-//!   by the build-time JAX/Pallas layer and executes them from Rust, with
-//!   native fallbacks for shapes outside the artifact set.
-//! * [`util`], [`linalg`], [`tensor`] — substrates (JSON, RNG, CLI,
-//!   thread pool, bench harness, dense linear algebra, tensors) built
-//!   in-tree because the build is fully offline.
+//! * [`runtime`] — kernel dispatch. By default every kernel runs on the
+//!   native Rust implementations, with the per-row ExactOBS/OBQ sweeps
+//!   fanned out over the shared in-tree thread pool (`util::pool`) —
+//!   deterministic, bit-identical to serial. The PJRT path (AOT-compiled
+//!   HLO artifacts from the build-time JAX/Pallas layer) sits behind the
+//!   off-by-default `pjrt` cargo feature and requires a locally-vendored
+//!   `xla` binding (see Cargo.toml).
+//! * [`util`], [`linalg`], [`tensor`] — substrates (error type, JSON,
+//!   RNG, CLI, thread pool, bench harness, dense linear algebra,
+//!   tensors) built in-tree because the build is fully offline: the
+//!   default feature set has **zero** external dependencies.
+//!
+//! The workspace root is the repository root: `cargo build --release &&
+//! cargo test -q` from there is the whole verification story, and
+//! `cargo bench --bench perf_kernels` reports the hot-path numbers
+//! (including the serial-vs-pooled ExactOBS speedup with a bit-identity
+//! assertion). Golden conformance fixtures pin the native kernels to the
+//! Python oracle layer (`rust/tests/kernel_conformance.rs`).
 //!
 //! ## Quickstart
 //!

@@ -9,32 +9,46 @@ use super::Mat;
 
 /// Lower-triangular Cholesky factor L with A = L·Lᵀ.
 /// Returns Err if A is not (numerically) positive definite.
-pub fn cholesky(a: &Mat) -> anyhow::Result<Mat> {
-    anyhow::ensure!(a.rows == a.cols, "cholesky needs a square matrix");
+///
+/// The inner reductions run over contiguous row prefixes of L (row-major
+/// slices, no strided column walks), so the Θ(n³) loop streams through
+/// cache lines instead of jumping a full row width per element.
+pub fn cholesky(a: &Mat) -> crate::util::error::Result<Mat> {
+    crate::ensure!(a.rows == a.cols, "cholesky needs a square matrix");
     let n = a.rows;
     let mut l = Mat::zeros(n, n);
     for i in 0..n {
-        for j in 0..=i {
+        // Split so rows 0..i are readable while row i is written.
+        let (done, cur) = l.data.split_at_mut(i * n);
+        let rowi = &mut cur[..n];
+        for j in 0..i {
+            let rowj = &done[j * n..j * n + n];
             let mut s = a.at(i, j);
             for k in 0..j {
-                s -= l.at(i, k) * l.at(j, k);
+                s -= rowi[k] * rowj[k];
             }
-            if i == j {
-                anyhow::ensure!(
-                    s > 0.0,
-                    "matrix not positive definite at pivot {i} (s={s:.3e}); \
-                     increase Hessian dampening"
-                );
-                *l.at_mut(i, j) = s.sqrt();
-            } else {
-                *l.at_mut(i, j) = s / l.at(j, j);
-            }
+            rowi[j] = s / rowj[j];
         }
+        let mut s = a.at(i, i);
+        for k in 0..i {
+            s -= rowi[k] * rowi[k];
+        }
+        crate::ensure!(
+            s > 0.0,
+            "matrix not positive definite at pivot {i} (s={s:.3e}); \
+             increase Hessian dampening"
+        );
+        rowi[i] = s.sqrt();
     }
     Ok(l)
 }
 
 /// Solve A·x = b given the Cholesky factor L of A.
+///
+/// Both substitution passes read L row-wise (contiguous): the backward
+/// pass is formulated as a rank-update sweep (`x[k] -= L[i][k]·x[i]`
+/// over the prefix of row i) instead of the textbook strided column walk
+/// `L[k][i]`, which would stride by n per element.
 pub fn cholesky_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
     let n = l.rows;
     assert_eq!(b.len(), n);
@@ -48,20 +62,21 @@ pub fn cholesky_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
         }
         y[i] = s / row[i];
     }
-    // Backward: Lᵀ·x = y
-    let mut x = vec![0.0; n];
+    // Backward: Lᵀ·x = y, column-oriented so row i of L is streamed once.
+    let mut x = y;
     for i in (0..n).rev() {
-        let mut s = y[i];
-        for k in i + 1..n {
-            s -= l.at(k, i) * x[k];
+        let row = l.row(i);
+        let xi = x[i] / row[i];
+        x[i] = xi;
+        for k in 0..i {
+            x[k] -= row[k] * xi;
         }
-        x[i] = s / l.at(i, i);
     }
     x
 }
 
 /// Full SPD inverse via Cholesky (A⁻¹ = L⁻ᵀ·L⁻¹).
-pub fn cholesky_inverse(a: &Mat) -> anyhow::Result<Mat> {
+pub fn cholesky_inverse(a: &Mat) -> crate::util::error::Result<Mat> {
     let l = cholesky(a)?;
     let n = a.rows;
     // Invert L (lower triangular) in place.
@@ -143,5 +158,34 @@ mod tests {
         let a = spd(9, 4);
         let inv = cholesky_inverse(&a).unwrap();
         assert!(inv.dist(&inv.transpose()) < 1e-12);
+    }
+
+    /// LLᵀ must reconstruct a *real* layer Hessian (H = 2XXᵀ + λI from
+    /// calibration-style inputs), not just synthetic SPD matrices.
+    #[test]
+    fn factor_reconstructs_layer_hessian() {
+        use crate::compress::hessian::LayerHessian;
+        let h = LayerHessian::from_inputs(&Mat::randn(20, 64, 11), 1e-8);
+        let l = cholesky(&h.h).unwrap();
+        let rec = l.matmul(&l.transpose());
+        let scale = h.h.diag_mean().max(1.0);
+        assert!(rec.dist(&h.h) < 1e-9 * scale, "dist {}", rec.dist(&h.h));
+    }
+
+    /// cholesky_solve must agree with the independent Gauss–Jordan
+    /// inverse route (A⁻¹·b) on a layer Hessian.
+    #[test]
+    fn solve_matches_gauss_jordan_inverse_route() {
+        use crate::compress::hessian::LayerHessian;
+        use crate::linalg::gauss_jordan_inverse;
+        let h = LayerHessian::from_inputs(&Mat::randn(16, 48, 12), 1e-8);
+        let b: Vec<f64> = (0..16).map(|i| ((i * 7) % 5) as f64 - 2.0).collect();
+        let l = cholesky(&h.h).unwrap();
+        let x1 = cholesky_solve(&l, &b);
+        let inv = gauss_jordan_inverse(&h.h).unwrap();
+        let x2 = inv.matvec(&b);
+        for (a, c) in x1.iter().zip(&x2) {
+            assert!((a - c).abs() < 1e-8 * c.abs().max(1.0), "{a} vs {c}");
+        }
     }
 }

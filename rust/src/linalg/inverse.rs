@@ -6,8 +6,8 @@ use super::Mat;
 /// Invert a general square matrix via Gauss–Jordan with partial pivoting.
 /// Used for the small c×c block matrices in block-sparsity (Eq. 5) and as
 /// an independent cross-check of `cholesky_inverse` in tests.
-pub fn gauss_jordan_inverse(a: &Mat) -> anyhow::Result<Mat> {
-    anyhow::ensure!(a.rows == a.cols, "inverse needs a square matrix");
+pub fn gauss_jordan_inverse(a: &Mat) -> crate::util::error::Result<Mat> {
+    crate::ensure!(a.rows == a.cols, "inverse needs a square matrix");
     let n = a.rows;
     let mut m = a.clone();
     let mut inv = Mat::eye(n);
@@ -22,7 +22,7 @@ pub fn gauss_jordan_inverse(a: &Mat) -> anyhow::Result<Mat> {
                 piv = r;
             }
         }
-        anyhow::ensure!(best > 1e-300, "singular matrix at column {col}");
+        crate::ensure!(best > 1e-300, "singular matrix at column {col}");
         if piv != col {
             for c in 0..n {
                 let t = m.at(col, c);
@@ -78,15 +78,16 @@ pub fn remove_row_col(hinv: &mut Mat, p: usize) -> f64 {
     let colp: Vec<f64> = (0..n).map(|r| hinv.at(r, p)).collect();
     let rowp: Vec<f64> = hinv.row(p).to_vec();
     let inv_d = 1.0 / d;
-    for r in 0..n {
-        let cr = colp[r];
+    // The rank-1 subtraction streams the matrix once, row by row, each
+    // row a contiguous slice zipped against the cached pivot row — the
+    // Θ(d²) inner loop of Algorithm 1 is pure unit-stride traffic.
+    for (row, &cr) in hinv.data.chunks_exact_mut(n).zip(&colp) {
         if cr == 0.0 {
-            continue;
+            continue; // already-eliminated row: the update is a no-op
         }
         let f = cr * inv_d;
-        let row = hinv.row_mut(r);
-        for c in 0..n {
-            row[c] -= f * rowp[c];
+        for (x, &rp) in row.iter_mut().zip(&rowp) {
+            *x -= f * rp;
         }
     }
     // Numerical hygiene: force the eliminated row/col to exact zero.
@@ -164,6 +165,25 @@ mod tests {
         let fresh = cholesky_inverse(&h.submatrix(&keep, &keep)).unwrap();
         let upd = hinv.submatrix(&keep, &keep);
         assert!(upd.dist(&fresh) < 1e-6, "dist {}", upd.dist(&fresh));
+    }
+
+    /// Lemma 1 on a *real* layer Hessian inverse (H = 2XXᵀ + λI from
+    /// calibration-style inputs): the in-place elimination must match a
+    /// fresh inverse of the submatrix with the row/col deleted.
+    #[test]
+    fn lemma1_matches_submatrix_rebuild_on_layer_hessian() {
+        use crate::compress::hessian::LayerHessian;
+        let n = 14;
+        let h = LayerHessian::from_inputs(&Mat::randn(n, 44, 31), 1e-8);
+        let mut hinv = h.hinv.clone();
+        for &p in &[2usize, 9, 5] {
+            remove_row_col(&mut hinv, p);
+        }
+        let keep: Vec<usize> = (0..n).filter(|i| ![2usize, 9, 5].contains(i)).collect();
+        let fresh = cholesky_inverse(&h.h.submatrix(&keep, &keep)).unwrap();
+        let upd = hinv.submatrix(&keep, &keep);
+        let scale = fresh.diag_mean().abs().max(1e-12);
+        assert!(upd.dist(&fresh) < 1e-6 * scale.max(1.0), "dist {}", upd.dist(&fresh));
     }
 
     #[test]

@@ -48,7 +48,7 @@ fn load(model: &str) -> Pipeline {
     })
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> obc::util::Result<()> {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
         eprintln!(

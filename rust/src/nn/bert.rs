@@ -79,27 +79,27 @@ impl<'a> Hooks<'a> {
 }
 
 impl BertModel {
-    pub fn from_bundle(name: &str, params: &TensorMap) -> anyhow::Result<BertModel> {
+    pub fn from_bundle(name: &str, params: &TensorMap) -> crate::util::error::Result<BertModel> {
         let n_layers = match name {
             "bert2" => 2,
             "bert4" => 4,
             "bert6" => 6,
-            _ => anyhow::bail!("unknown bert '{name}'"),
+            _ => crate::bail!("unknown bert '{name}'"),
         };
-        let tensor = |key: &str| -> anyhow::Result<Tensor> {
+        let tensor = |key: &str| -> crate::util::error::Result<Tensor> {
             let t = params
                 .get(key)
-                .ok_or_else(|| anyhow::anyhow!("missing '{key}'"))?;
+                .ok_or_else(|| crate::err!("missing '{key}'"))?;
             Ok(Tensor::from_vec(&t.shape, t.data.clone()))
         };
-        let vecf = |key: &str| -> anyhow::Result<Vec<f32>> {
+        let vecf = |key: &str| -> crate::util::error::Result<Vec<f32>> {
             Ok(params
                 .get(key)
-                .ok_or_else(|| anyhow::anyhow!("missing '{key}'"))?
+                .ok_or_else(|| crate::err!("missing '{key}'"))?
                 .data
                 .clone())
         };
-        let lin = |pre: &str| -> anyhow::Result<Lin> {
+        let lin = |pre: &str| -> crate::util::error::Result<Lin> {
             Ok(Lin {
                 name: pre.to_string(),
                 weight: tensor(&format!("{pre}.weight"))?,

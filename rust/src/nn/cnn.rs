@@ -122,12 +122,12 @@ impl CnnModel {
     // ------------------------------------------------------------------
 
     /// Build a MiniResNet ("rneta"/"rnetb"/"rnetc") from a weight bundle.
-    pub fn resnet(name: &str, params: &TensorMap) -> anyhow::Result<CnnModel> {
+    pub fn resnet(name: &str, params: &TensorMap) -> crate::util::error::Result<CnnModel> {
         let (w0, nb) = match name {
             "rneta" => (8, 1),
             "rnetb" => (8, 2),
             "rnetc" => (12, 2),
-            _ => anyhow::bail!("unknown resnet '{name}'"),
+            _ => crate::bail!("unknown resnet '{name}'"),
         };
         let mut m = CnnModel {
             model_name: name.to_string(),
@@ -173,7 +173,7 @@ impl CnnModel {
     }
 
     /// Build TinyDet from a weight bundle.
-    pub fn tinydet(params: &TensorMap) -> anyhow::Result<CnnModel> {
+    pub fn tinydet(params: &TensorMap) -> crate::util::error::Result<CnnModel> {
         let mut m = CnnModel {
             model_name: "tinydet".to_string(),
             nodes: Vec::new(),
@@ -185,7 +185,7 @@ impl CnnModel {
         };
         let head_bias = params
             .get("head.bias")
-            .ok_or_else(|| anyhow::anyhow!("missing head.bias"))?
+            .ok_or_else(|| crate::err!("missing head.bias"))?
             .data
             .clone();
         let nodes = vec![
@@ -205,19 +205,19 @@ impl CnnModel {
         Ok(m)
     }
 
-    fn add_conv(&mut self, p: &TensorMap, name: &str, stride: usize, pad: usize) -> anyhow::Result<Node> {
+    fn add_conv(&mut self, p: &TensorMap, name: &str, stride: usize, pad: usize) -> crate::util::error::Result<Node> {
         let t = p
             .get(&format!("{name}.weight"))
-            .ok_or_else(|| anyhow::anyhow!("missing {name}.weight"))?;
+            .ok_or_else(|| crate::err!("missing {name}.weight"))?;
         let weight = Tensor::from_vec(&t.shape, t.data.clone());
         self.convs.push(ConvLayer { name: name.to_string(), weight, stride, pad });
         Ok(Node::Conv(self.convs.len() - 1))
     }
 
-    fn add_bn(&mut self, p: &TensorMap, name: &str) -> anyhow::Result<Node> {
-        let get = |suffix: &str| -> anyhow::Result<Vec<f32>> {
+    fn add_bn(&mut self, p: &TensorMap, name: &str) -> crate::util::error::Result<Node> {
+        let get = |suffix: &str| -> crate::util::error::Result<Vec<f32>> {
             Ok(p.get(&format!("{name}.{suffix}"))
-                .ok_or_else(|| anyhow::anyhow!("missing {name}.{suffix}"))?
+                .ok_or_else(|| crate::err!("missing {name}.{suffix}"))?
                 .data
                 .clone())
         };
@@ -231,13 +231,13 @@ impl CnnModel {
         Ok(Node::Bn(self.bns.len() - 1))
     }
 
-    fn add_linear(&mut self, p: &TensorMap, name: &str) -> anyhow::Result<Node> {
+    fn add_linear(&mut self, p: &TensorMap, name: &str) -> crate::util::error::Result<Node> {
         let w = p
             .get(&format!("{name}.weight"))
-            .ok_or_else(|| anyhow::anyhow!("missing {name}.weight"))?;
+            .ok_or_else(|| crate::err!("missing {name}.weight"))?;
         let b = p
             .get(&format!("{name}.bias"))
-            .ok_or_else(|| anyhow::anyhow!("missing {name}.bias"))?;
+            .ok_or_else(|| crate::err!("missing {name}.bias"))?;
         self.linears.push(LinLayer {
             name: name.to_string(),
             weight: Tensor::from_vec(&w.shape, w.data.clone()),
@@ -668,6 +668,58 @@ impl CompressibleModel for CnnModel {
     }
 }
 
+/// Build a tiny random rneta-shaped parameter map (He-initialized convs,
+/// identity batch-norms). Used by smoke tests and offline demos that
+/// need a real multi-layer model without any trained artifacts on disk.
+pub fn synthetic_resnet_params(seed: u64) -> TensorMap {
+    use crate::util::io::NamedTensor;
+    let mut rng = Pcg::new(seed);
+    let mut m = TensorMap::new();
+    let mut conv = |m: &mut TensorMap, name: &str, o: usize, i: usize, k: usize| {
+        let n = o * i * k * k;
+        let scale = (2.0 / (i * k * k) as f64).sqrt();
+        m.insert(
+            format!("{name}.weight"),
+            NamedTensor {
+                shape: vec![o, i, k, k],
+                data: (0..n).map(|_| (rng.normal() * scale) as f32).collect(),
+            },
+        );
+    };
+    let bn = |m: &mut TensorMap, name: &str, c: usize| {
+        m.insert(format!("{name}.gamma"), NamedTensor { shape: vec![c], data: vec![1.0; c] });
+        m.insert(format!("{name}.beta"), NamedTensor { shape: vec![c], data: vec![0.0; c] });
+        m.insert(format!("{name}.mean"), NamedTensor { shape: vec![c], data: vec![0.0; c] });
+        m.insert(format!("{name}.var"), NamedTensor { shape: vec![c], data: vec![1.0; c] });
+    };
+    conv(&mut m, "stem.conv", 8, 3, 3);
+    bn(&mut m, "stem.bn", 8);
+    let widths = [8usize, 16, 32];
+    let mut cin = 8;
+    for (si, &w) in widths.iter().enumerate() {
+        let pre = format!("s{si}.b0");
+        conv(&mut m, &format!("{pre}.conv1"), w, cin, 3);
+        bn(&mut m, &format!("{pre}.bn1"), w);
+        conv(&mut m, &format!("{pre}.conv2"), w, w, 3);
+        bn(&mut m, &format!("{pre}.bn2"), w);
+        if si > 0 {
+            conv(&mut m, &format!("{pre}.down.conv"), w, cin, 1);
+            bn(&mut m, &format!("{pre}.down.bn"), w);
+        }
+        cin = w;
+    }
+    let mut rngf = Pcg::new(seed + 1);
+    m.insert(
+        "fc.weight".into(),
+        NamedTensor {
+            shape: vec![16, 32],
+            data: (0..512).map(|_| rngf.normal_f32() * 0.18).collect(),
+        },
+    );
+    m.insert("fc.bias".into(), NamedTensor { shape: vec![16], data: vec![0.0; 16] });
+    m
+}
+
 #[cfg(test)]
 pub mod tests {
     use super::*;
@@ -675,51 +727,7 @@ pub mod tests {
 
     /// Build a tiny random rneta-shaped bundle for engine tests.
     pub fn fake_resnet_bundle(seed: u64) -> TensorMap {
-        let mut rng = Pcg::new(seed);
-        let mut m = TensorMap::new();
-        let mut conv = |m: &mut TensorMap, name: &str, o: usize, i: usize, k: usize| {
-            let n = o * i * k * k;
-            let scale = (2.0 / (i * k * k) as f64).sqrt();
-            m.insert(
-                format!("{name}.weight"),
-                NamedTensor {
-                    shape: vec![o, i, k, k],
-                    data: (0..n).map(|_| (rng.normal() * scale) as f32).collect(),
-                },
-            );
-        };
-        let bn = |m: &mut TensorMap, name: &str, c: usize| {
-            m.insert(format!("{name}.gamma"), NamedTensor { shape: vec![c], data: vec![1.0; c] });
-            m.insert(format!("{name}.beta"), NamedTensor { shape: vec![c], data: vec![0.0; c] });
-            m.insert(format!("{name}.mean"), NamedTensor { shape: vec![c], data: vec![0.0; c] });
-            m.insert(format!("{name}.var"), NamedTensor { shape: vec![c], data: vec![1.0; c] });
-        };
-        conv(&mut m, "stem.conv", 8, 3, 3);
-        bn(&mut m, "stem.bn", 8);
-        let widths = [8usize, 16, 32];
-        let mut cin = 8;
-        for (si, &w) in widths.iter().enumerate() {
-            let pre = format!("s{si}.b0");
-            conv(&mut m, &format!("{pre}.conv1"), w, cin, 3);
-            bn(&mut m, &format!("{pre}.bn1"), w);
-            conv(&mut m, &format!("{pre}.conv2"), w, w, 3);
-            bn(&mut m, &format!("{pre}.bn2"), w);
-            if si > 0 {
-                conv(&mut m, &format!("{pre}.down.conv"), w, cin, 1);
-                bn(&mut m, &format!("{pre}.down.bn"), w);
-            }
-            cin = w;
-        }
-        let mut rngf = Pcg::new(seed + 1);
-        m.insert(
-            "fc.weight".into(),
-            NamedTensor {
-                shape: vec![16, 32],
-                data: (0..512).map(|_| rngf.normal_f32() * 0.18).collect(),
-            },
-        );
-        m.insert("fc.bias".into(), NamedTensor { shape: vec![16], data: vec![0.0; 16] });
-        m
+        synthetic_resnet_params(seed)
     }
 
     #[test]

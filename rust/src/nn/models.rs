@@ -34,7 +34,7 @@ pub struct ModelBundle {
 }
 
 /// Load a model bundle from `dir/<name>.obcw`.
-pub fn load_bundle(dir: &Path, name: &str) -> anyhow::Result<ModelBundle> {
+pub fn load_bundle(dir: &Path, name: &str) -> crate::util::error::Result<ModelBundle> {
     let raw = load_obcw(&dir.join(format!("{name}.obcw")))?;
     // Split into param.* / state.* / data.* namespaces.
     let mut params = TensorMap::new();
@@ -51,10 +51,10 @@ pub fn load_bundle(dir: &Path, name: &str) -> anyhow::Result<ModelBundle> {
         "seq" => Box::new(BertModel::from_bundle(name, &params)?),
         _ => unreachable!(),
     };
-    let t = |key: &str| -> anyhow::Result<Tensor> {
+    let t = |key: &str| -> crate::util::error::Result<Tensor> {
         let nt = raw
             .get(key)
-            .ok_or_else(|| anyhow::anyhow!("bundle missing '{key}'"))?;
+            .ok_or_else(|| crate::err!("bundle missing '{key}'"))?;
         Ok(Tensor::from_vec(&nt.shape, nt.data.clone()))
     };
     let (calib_y, test_y) = if task_of(name) == "seq" {
@@ -74,6 +74,21 @@ pub fn load_bundle(dir: &Path, name: &str) -> anyhow::Result<ModelBundle> {
         test_x: t("data.test.x")?,
         test_y,
     })
+}
+
+/// Build a fully-synthetic rneta-shaped bundle (random weights + random
+/// data splits) that needs no trained artifacts on disk. Used by the
+/// debug-mode pipeline smoke test and offline demos.
+pub fn synthetic_bundle(seed: u64) -> ModelBundle {
+    let params = super::cnn::synthetic_resnet_params(seed);
+    let model = CnnModel::resnet("rneta", &params).expect("synthetic params complete");
+    ModelBundle {
+        model: Box::new(model),
+        calib_x: Tensor::randn(&[64, 3, 16, 16], seed.wrapping_add(101)),
+        calib_y: Tensor::zeros(&[64]),
+        test_x: Tensor::randn(&[32, 3, 16, 16], seed.wrapping_add(202)),
+        test_y: Tensor::zeros(&[32]),
+    }
 }
 
 fn stack_spans(a: &Tensor, b: &Tensor) -> Tensor {

@@ -1,11 +1,18 @@
-//! Kernel dispatch: PJRT-executed AOT artifacts when the problem shape is
-//! covered, native Rust otherwise. The two paths compute the same
-//! algorithm and are cross-checked by integration tests
-//! (`rust/tests/runtime_bridge.rs`).
+//! Kernel dispatch: PJRT-executed AOT artifacts when the `pjrt` feature
+//! is enabled and an artifact covers the problem shape, native Rust
+//! kernels otherwise. Both paths compute the same algorithms; the native
+//! path is the reference and is locked down by the conformance tests
+//! (`rust/tests/kernel_conformance.rs`), the PJRT path is cross-checked
+//! against it by `rust/tests/runtime_bridge.rs`.
 
-use super::Runtime;
-use crate::compress::exact_obs::RowTrace;
+use crate::compress::exact_obs::{self, RowTrace};
+use crate::compress::hessian::HessianAccumulator;
+use crate::compress::obq::{self, ObqOpts};
+use crate::compress::quant::Grid;
 use crate::linalg::Mat;
+use crate::util::error::Result;
+use crate::util::pool;
+use std::sync::Arc;
 
 /// Result of an OBS sweep over a batch of rows.
 pub struct SweepOut {
@@ -13,150 +20,271 @@ pub struct SweepOut {
     pub traces: Vec<RowTrace>,
 }
 
-/// Run the full ExactOBS trace sweep on `w` (rows × d) with shared
-/// initial inverse Hessian through a PJRT artifact. Rows are padded up to
-/// the artifact's row count with zeros (rows are independent, so padding
-/// is sound). Returns None when no artifact covers d.
-pub fn obs_sweep_pjrt(rt: &Runtime, w: &Mat, hinv: &Mat) -> Option<anyhow::Result<SweepOut>> {
+// ----------------------------------------------------------------------
+// Dispatch entry points: artifact-backed when possible, native otherwise.
+// ----------------------------------------------------------------------
+
+/// Full-trace ExactOBS sweep of every row of `w` against the shared
+/// initial H⁻¹. Uses a PJRT artifact when the `pjrt` feature is on and
+/// the manifest covers (rows, d); otherwise runs the native kernels.
+///
+/// Convenience entry point: under `pjrt` it builds a fresh Runtime per
+/// call (client start + artifact compile, no executable-cache reuse)
+/// and silently falls back to native when that fails. Perf-sensitive
+/// callers should hold a `runtime::Runtime` and call
+/// `pjrt::obs_sweep_pjrt` directly to amortize compilation.
+pub fn obs_sweep(w: &Mat, hinv: &Mat) -> Result<SweepOut> {
+    #[cfg(feature = "pjrt")]
+    {
+        if let Ok(rt) = super::Runtime::new() {
+            if let Some(res) = pjrt::obs_sweep_pjrt(&rt, w, hinv) {
+                return res;
+            }
+        }
+    }
+    Ok(obs_sweep_native(w, hinv))
+}
+
+/// OBQ sweep of every row with per-row grids. PJRT artifacts only cover
+/// the 4-bit grid (maxq = 15); anything else goes native directly.
+pub fn obq_sweep(w: &Mat, hinv: &Mat, grids: &[Grid]) -> Result<Mat> {
+    #[cfg(feature = "pjrt")]
+    {
+        if grids.iter().all(|g| g.maxq == 15.0) {
+            if let Ok(rt) = super::Runtime::new() {
+                let pairs: Vec<(f64, f64)> =
+                    grids.iter().map(|g| (g.scale, g.zero)).collect();
+                if let Some(res) = pjrt::obq_sweep_pjrt(&rt, w, hinv, &pairs) {
+                    return res;
+                }
+            }
+        }
+    }
+    Ok(obq_sweep_native(w, hinv, grids))
+}
+
+/// Layer Hessian H = 2XXᵀ for X of shape d × n.
+pub fn hessian(x: &Mat) -> Result<Mat> {
+    #[cfg(feature = "pjrt")]
+    {
+        if let Ok(rt) = super::Runtime::new() {
+            if let Some(res) = pjrt::hessian_pjrt(&rt, x) {
+                return res;
+            }
+        }
+    }
+    Ok(hessian_native(x))
+}
+
+// ----------------------------------------------------------------------
+// Native kernels (always available; the conformance reference).
+// ----------------------------------------------------------------------
+
+/// Native full-trace OBS sweep: one Algorithm-1 job per row on the
+/// shared pool, each with a private H⁻¹ copy, stitched in row order.
+pub fn obs_sweep_native(w: &Mat, hinv: &Mat) -> SweepOut {
     let d = w.cols;
-    let art = rt.manifest.find_sweep("obs_sweep", w.rows, d)?;
-    if art.rows < w.rows {
-        // Run in row-chunks of the artifact size.
-        let mut traces = Vec::with_capacity(w.rows);
-        let mut out = Mat::zeros(w.rows, d);
-        let mut r0 = 0;
-        while r0 < w.rows {
-            let r1 = (r0 + art.rows).min(w.rows);
-            let chunk = w.submatrix(&(r0..r1).collect::<Vec<_>>(), &(0..d).collect::<Vec<_>>());
-            match run_chunk(rt, &art.name, art.rows, &chunk, hinv) {
-                Ok(mut res) => {
-                    for (i, r) in (r0..r1).enumerate() {
-                        out.row_mut(r).copy_from_slice(res.w.row(i));
+    let rows = w.rows;
+    let wa = Arc::new(w.clone());
+    let ha = Arc::new(hinv.clone());
+    let per_row: Vec<(Vec<f64>, RowTrace)> = pool::global().par_map(rows, move |r| {
+        let mut wr = wa.row(r).to_vec();
+        let mut h = (*ha).clone();
+        let t = exact_obs::sweep_row(&mut wr, &mut h, d, |_, _| true);
+        (wr, t)
+    });
+    let mut out = Mat::zeros(rows, d);
+    let mut traces = Vec::with_capacity(rows);
+    for (r, (wr, t)) in per_row.into_iter().enumerate() {
+        out.row_mut(r).copy_from_slice(&wr);
+        traces.push(t);
+    }
+    SweepOut { w: out, traces }
+}
+
+/// Native OBQ sweep (Algorithm 3 with the outlier heuristic, matching
+/// the AOT artifact semantics) over all rows, per-row grids.
+pub fn obq_sweep_native(w: &Mat, hinv: &Mat, grids: &[Grid]) -> Mat {
+    assert_eq!(grids.len(), w.rows);
+    let rows = w.rows;
+    let wa = Arc::new(w.clone());
+    let ha = Arc::new(hinv.clone());
+    let grids = Arc::new(grids.to_vec());
+    let opts = ObqOpts::new(4); // bits/symmetric/search unused by quantize_row
+    let per_row = pool::global().par_map(rows, move |r| {
+        obq::quantize_row(wa.row(r), &ha, &grids[r], &opts)
+    });
+    let mut out = Mat::zeros(rows, w.cols);
+    for (r, q) in per_row.into_iter().enumerate() {
+        out.row_mut(r).copy_from_slice(&q);
+    }
+    out
+}
+
+/// Native Hessian: the streaming accumulator's 2XXᵀ.
+pub fn hessian_native(x: &Mat) -> Mat {
+    let mut acc = HessianAccumulator::new(x.rows);
+    acc.add_batch(x);
+    acc.raw()
+}
+
+// ----------------------------------------------------------------------
+// PJRT-backed execution (feature `pjrt` only).
+// ----------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt {
+    use super::{Result, SweepOut};
+    use crate::compress::exact_obs::RowTrace;
+    use crate::linalg::Mat;
+    use crate::runtime::Runtime;
+
+    /// Run the full ExactOBS trace sweep on `w` (rows × d) with shared
+    /// initial inverse Hessian through a PJRT artifact. Rows are padded up to
+    /// the artifact's row count with zeros (rows are independent, so padding
+    /// is sound). Returns None when no artifact covers d.
+    pub fn obs_sweep_pjrt(rt: &Runtime, w: &Mat, hinv: &Mat) -> Option<Result<SweepOut>> {
+        let d = w.cols;
+        let art = rt.manifest.find_sweep("obs_sweep", w.rows, d)?;
+        if art.rows < w.rows {
+            // Run in row-chunks of the artifact size.
+            let mut traces = Vec::with_capacity(w.rows);
+            let mut out = Mat::zeros(w.rows, d);
+            let mut r0 = 0;
+            while r0 < w.rows {
+                let r1 = (r0 + art.rows).min(w.rows);
+                let chunk =
+                    w.submatrix(&(r0..r1).collect::<Vec<_>>(), &(0..d).collect::<Vec<_>>());
+                match run_chunk(rt, &art.name, art.rows, &chunk, hinv) {
+                    Ok(mut res) => {
+                        for (i, r) in (r0..r1).enumerate() {
+                            out.row_mut(r).copy_from_slice(res.w.row(i));
+                        }
+                        traces.extend(res.traces.drain(..r1 - r0));
                     }
-                    traces.extend(res.traces.drain(..r1 - r0));
+                    Err(e) => return Some(Err(e)),
                 }
-                Err(e) => return Some(Err(e)),
+                r0 = r1;
             }
-            r0 = r1;
+            return Some(Ok(SweepOut { w: out, traces }));
         }
-        return Some(Ok(SweepOut { w: out, traces }));
+        Some(run_chunk(rt, &art.name, art.rows, w, hinv).map(|mut res| {
+            res.traces.truncate(w.rows);
+            let keep: Vec<usize> = (0..w.rows).collect();
+            let all: Vec<usize> = (0..d).collect();
+            SweepOut { w: res.w.submatrix(&keep, &all), traces: res.traces }
+        }))
     }
-    Some(run_chunk(rt, &art.name, art.rows, w, hinv).map(|mut res| {
-        res.traces.truncate(w.rows);
-        let keep: Vec<usize> = (0..w.rows).collect();
-        let all: Vec<usize> = (0..d).collect();
-        SweepOut { w: res.w.submatrix(&keep, &all), traces: res.traces }
-    }))
-}
 
-fn run_chunk(
-    rt: &Runtime,
-    artifact: &str,
-    art_rows: usize,
-    w: &Mat,
-    hinv: &Mat,
-) -> anyhow::Result<SweepOut> {
-    let d = w.cols;
-    // Pad rows with zeros to the artifact shape.
-    let mut win = vec![0.0f32; art_rows * d];
-    for r in 0..w.rows {
-        for c in 0..d {
-            win[r * d + c] = w.at(r, c) as f32;
-        }
-    }
-    let hin: Vec<f32> = hinv.data.iter().map(|&v| v as f32).collect();
-    let outs = rt.run_f32(
-        artifact,
-        &[(&win, &[art_rows as i64, d as i64]), (&hin, &[d as i64, d as i64])],
-    )?;
-    anyhow::ensure!(outs.len() == 3, "obs_sweep artifact returned {} outputs", outs.len());
-    let (wout, order, dloss) = (&outs[0], &outs[1], &outs[2]);
-    let mut out_w = Mat::zeros(art_rows, d);
-    for i in 0..art_rows * d {
-        out_w.data[i] = wout[i] as f64;
-    }
-    let traces = (0..art_rows)
-        .map(|r| {
-            let mut t = RowTrace { order: Vec::new(), dloss: Vec::new() };
-            for c in 0..d {
-                let idx = order[r * d + c];
-                if idx < 0.0 {
-                    break;
-                }
-                t.order.push(idx as usize);
-                t.dloss.push(dloss[r * d + c] as f64);
-            }
-            t
-        })
-        .collect();
-    Ok(SweepOut { w: out_w, traces })
-}
-
-/// OBQ sweep through PJRT (4-bit artifact grid; maxq = 15). `grids` is
-/// rows × 2 (scale, zero). Returns None when no artifact covers the
-/// shape.
-pub fn obq_sweep_pjrt(
-    rt: &Runtime,
-    w: &Mat,
-    hinv: &Mat,
-    grids: &[(f64, f64)],
-) -> Option<anyhow::Result<Mat>> {
-    let d = w.cols;
-    let art = rt.manifest.find_sweep("obq_sweep", w.rows, d)?;
-    if art.rows < w.rows {
-        return None; // chunking analogous to obs; not needed for tests
-    }
-    let mut win = vec![0.0f32; art.rows * d];
-    for r in 0..w.rows {
-        for c in 0..d {
-            win[r * d + c] = w.at(r, c) as f32;
-        }
-    }
-    let mut gin = vec![0.0f32; art.rows * 2];
-    for (r, (s, z)) in grids.iter().enumerate() {
-        gin[r * 2] = *s as f32;
-        gin[r * 2 + 1] = *z as f32;
-    }
-    // Padded rows get a unit grid to avoid 0-scale degeneracy.
-    for r in grids.len()..art.rows {
-        gin[r * 2] = 1.0;
-    }
-    let hin: Vec<f32> = hinv.data.iter().map(|&v| v as f32).collect();
-    let res = rt.run_f32(
-        &art.name,
-        &[
-            (&win, &[art.rows as i64, d as i64]),
-            (&hin, &[d as i64, d as i64]),
-            (&gin, &[art.rows as i64, 2]),
-        ],
-    );
-    Some(res.map(|outs| {
-        let wout = &outs[0];
-        let mut m = Mat::zeros(w.rows, d);
+    fn run_chunk(
+        rt: &Runtime,
+        artifact: &str,
+        art_rows: usize,
+        w: &Mat,
+        hinv: &Mat,
+    ) -> Result<SweepOut> {
+        let d = w.cols;
+        // Pad rows with zeros to the artifact shape.
+        let mut win = vec![0.0f32; art_rows * d];
         for r in 0..w.rows {
             for c in 0..d {
-                m.data[r * d + c] = wout[r * d + c] as f64;
+                win[r * d + c] = w.at(r, c) as f32;
             }
         }
-        m
-    }))
-}
-
-/// Hessian 2XXᵀ through PJRT (shape must match an artifact exactly).
-pub fn hessian_pjrt(rt: &Runtime, x: &Mat) -> Option<anyhow::Result<Mat>> {
-    let art = rt
-        .manifest
-        .kernels
-        .iter()
-        .find(|k| k.kind == "hessian" && k.d == x.rows && k.n == x.cols)?;
-    let xin: Vec<f32> = x.data.iter().map(|&v| v as f32).collect();
-    let res = rt.run_f32(&art.name, &[(&xin, &[x.rows as i64, x.cols as i64])]);
-    Some(res.map(|outs| {
-        let h = &outs[0];
-        let mut m = Mat::zeros(x.rows, x.rows);
-        for i in 0..x.rows * x.rows {
-            m.data[i] = h[i] as f64;
+        let hin: Vec<f32> = hinv.data.iter().map(|&v| v as f32).collect();
+        let outs = rt.run_f32(
+            artifact,
+            &[(&win, &[art_rows as i64, d as i64]), (&hin, &[d as i64, d as i64])],
+        )?;
+        crate::ensure!(outs.len() == 3, "obs_sweep artifact returned {} outputs", outs.len());
+        let (wout, order, dloss) = (&outs[0], &outs[1], &outs[2]);
+        let mut out_w = Mat::zeros(art_rows, d);
+        for i in 0..art_rows * d {
+            out_w.data[i] = wout[i] as f64;
         }
-        m
-    }))
+        let traces = (0..art_rows)
+            .map(|r| {
+                let mut t = RowTrace { order: Vec::new(), dloss: Vec::new() };
+                for c in 0..d {
+                    let idx = order[r * d + c];
+                    if idx < 0.0 {
+                        break;
+                    }
+                    t.order.push(idx as usize);
+                    t.dloss.push(dloss[r * d + c] as f64);
+                }
+                t
+            })
+            .collect();
+        Ok(SweepOut { w: out_w, traces })
+    }
+
+    /// OBQ sweep through PJRT (4-bit artifact grid; maxq = 15). `grids` is
+    /// rows × 2 (scale, zero). Returns None when no artifact covers the
+    /// shape.
+    pub fn obq_sweep_pjrt(
+        rt: &Runtime,
+        w: &Mat,
+        hinv: &Mat,
+        grids: &[(f64, f64)],
+    ) -> Option<Result<Mat>> {
+        let d = w.cols;
+        let art = rt.manifest.find_sweep("obq_sweep", w.rows, d)?;
+        if art.rows < w.rows {
+            return None; // chunking analogous to obs; not needed for tests
+        }
+        let mut win = vec![0.0f32; art.rows * d];
+        for r in 0..w.rows {
+            for c in 0..d {
+                win[r * d + c] = w.at(r, c) as f32;
+            }
+        }
+        let mut gin = vec![0.0f32; art.rows * 2];
+        for (r, (s, z)) in grids.iter().enumerate() {
+            gin[r * 2] = *s as f32;
+            gin[r * 2 + 1] = *z as f32;
+        }
+        // Padded rows get a unit grid to avoid 0-scale degeneracy.
+        for r in grids.len()..art.rows {
+            gin[r * 2] = 1.0;
+        }
+        let hin: Vec<f32> = hinv.data.iter().map(|&v| v as f32).collect();
+        let res = rt.run_f32(
+            &art.name,
+            &[
+                (&win, &[art.rows as i64, d as i64]),
+                (&hin, &[d as i64, d as i64]),
+                (&gin, &[art.rows as i64, 2]),
+            ],
+        );
+        Some(res.map(|outs| {
+            let wout = &outs[0];
+            let mut m = Mat::zeros(w.rows, d);
+            for r in 0..w.rows {
+                for c in 0..d {
+                    m.data[r * d + c] = wout[r * d + c] as f64;
+                }
+            }
+            m
+        }))
+    }
+
+    /// Hessian 2XXᵀ through PJRT (shape must match an artifact exactly).
+    pub fn hessian_pjrt(rt: &Runtime, x: &Mat) -> Option<Result<Mat>> {
+        let art = rt
+            .manifest
+            .kernels
+            .iter()
+            .find(|k| k.kind == "hessian" && k.d == x.rows && k.n == x.cols)?;
+        let xin: Vec<f32> = x.data.iter().map(|&v| v as f32).collect();
+        let res = rt.run_f32(&art.name, &[(&xin, &[x.rows as i64, x.cols as i64])]);
+        Some(res.map(|outs| {
+            let h = &outs[0];
+            let mut m = Mat::zeros(x.rows, x.rows);
+            for i in 0..x.rows * x.rows {
+                m.data[i] = h[i] as f64;
+            }
+            m
+        }))
+    }
 }

@@ -1,19 +1,24 @@
-//! PJRT runtime bridge: loads the AOT-compiled HLO artifacts produced by
-//! the build-time JAX/Pallas layer (`python/compile/aot.py`) and executes
-//! them from the Rust hot path, with native fallbacks for shapes outside
-//! the artifact set.
+//! Kernel runtime: the artifact manifest plus the PJRT bridge.
 //!
-//! Interchange format is HLO **text** — the image's xla_extension 0.5.1
+//! The manifest (`artifacts/manifest.json`, produced by the build-time
+//! JAX/Pallas layer `python/compile/aot.py`) parses with the in-tree
+//! JSON substrate and is available in every build. The PJRT execution
+//! path — loading AOT-compiled HLO **text** artifacts and running them
+//! through an `xla` binding — is compiled only with the off-by-default
+//! `pjrt` cargo feature; without it, [`dispatch`] falls through to the
+//! native Rust kernels (same algorithms, cross-checked by the
+//! conformance tests in `rust/tests/`).
+//!
+//! Interchange format is HLO text — the image's xla_extension 0.5.1
 //! rejects jax≥0.5 serialized protos (64-bit instruction ids); the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
 
 pub mod dispatch;
 
+use crate::util::error::Result;
 use crate::util::io::{artifacts_dir, read_to_string};
 use crate::util::json::{parse, Json};
-use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::Mutex;
 
 /// One artifact as described in `artifacts/manifest.json`.
 #[derive(Debug, Clone)]
@@ -34,7 +39,7 @@ pub struct Manifest {
 
 impl Manifest {
     /// Load from the artifacts directory; Err if artifacts were not built.
-    pub fn load() -> anyhow::Result<Manifest> {
+    pub fn load() -> Result<Manifest> {
         let dir = artifacts_dir();
         let text = read_to_string(&dir.join("manifest.json"))?;
         let root = parse(&text)?;
@@ -70,92 +75,105 @@ impl Manifest {
     }
 }
 
-/// A PJRT CPU client with an executable cache, keyed by artifact name.
-pub struct Runtime {
-    pub client: xla::PjRtClient,
-    pub manifest: Manifest,
-    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::Runtime;
 
-impl Runtime {
-    /// Create the runtime (loads the manifest, starts the CPU client).
-    pub fn new() -> anyhow::Result<Runtime> {
-        let manifest = Manifest::load()?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
-        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+/// PJRT CPU execution of AOT artifacts. Requires a locally-vendored
+/// `xla` binding crate (see the `pjrt` feature notes in Cargo.toml).
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    use super::Manifest;
+    use crate::util::error::Result;
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+
+    /// A PJRT CPU client with an executable cache, keyed by artifact name.
+    pub struct Runtime {
+        pub client: xla::PjRtClient,
+        pub manifest: Manifest,
+        cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
     }
 
-    /// Compile an artifact (cached; PjRtLoadedExecutable is not Clone, so
-    /// execution happens under the cache lock — fine on this single-core
-    /// testbed, and compilation dominates anyway).
-    fn with_executable<T>(
-        &self,
-        name: &str,
-        f: impl FnOnce(&xla::PjRtLoadedExecutable) -> anyhow::Result<T>,
-    ) -> anyhow::Result<T> {
-        let mut cache = self.cache.lock().unwrap();
-        if !cache.contains_key(name) {
-            let art = self
-                .manifest
-                .find(name)
-                .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?;
-            let path = self.manifest.dir.join(&art.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().expect("artifact path utf-8"),
-            )
-            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
-            cache.insert(name.to_string(), exe);
+    impl Runtime {
+        /// Create the runtime (loads the manifest, starts the CPU client).
+        pub fn new() -> Result<Runtime> {
+            let manifest = Manifest::load()?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| crate::err!("PJRT CPU client: {e}"))?;
+            Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
         }
-        f(cache.get(name).unwrap())
-    }
 
-    /// Execute an artifact on f32 inputs with given shapes. Returns the
-    /// flattened f32 outputs of the result tuple.
-    pub fn run_f32(
-        &self,
-        name: &str,
-        inputs: &[(&[f32], &[i64])],
-    ) -> anyhow::Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| {
-                xla::Literal::vec1(data)
-                    .reshape(dims)
-                    .map_err(|e| anyhow::anyhow!("reshape input: {e}"))
-            })
-            .collect::<anyhow::Result<Vec<_>>>()?;
-        let result = self.with_executable(name, |exe| {
-            exe.execute::<xla::Literal>(&literals)
-                .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?[0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow::anyhow!("fetch result: {e}"))
-        })?;
-        let parts = result
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
-        parts
-            .into_iter()
-            .map(|lit| {
-                // Outputs may be f32 or s32; convert s32 → f32 via i32 vec.
-                match lit.ty() {
-                    Ok(xla::ElementType::S32) => {
-                        let v = lit
-                            .to_vec::<i32>()
-                            .map_err(|e| anyhow::anyhow!("to_vec<i32>: {e}"))?;
-                        Ok(v.into_iter().map(|x| x as f32).collect())
+        /// Compile an artifact (cached; PjRtLoadedExecutable is not Clone, so
+        /// execution happens under the cache lock — fine on this single-core
+        /// testbed, and compilation dominates anyway).
+        fn with_executable<T>(
+            &self,
+            name: &str,
+            f: impl FnOnce(&xla::PjRtLoadedExecutable) -> Result<T>,
+        ) -> Result<T> {
+            let mut cache = self.cache.lock().unwrap();
+            if !cache.contains_key(name) {
+                let art = self
+                    .manifest
+                    .find(name)
+                    .ok_or_else(|| crate::err!("artifact '{name}' not in manifest"))?;
+                let path = self.manifest.dir.join(&art.file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().expect("artifact path utf-8"),
+                )
+                .map_err(|e| crate::err!("parse {}: {e}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| crate::err!("compile {name}: {e}"))?;
+                cache.insert(name.to_string(), exe);
+            }
+            f(cache.get(name).unwrap())
+        }
+
+        /// Execute an artifact on f32 inputs with given shapes. Returns the
+        /// flattened f32 outputs of the result tuple.
+        pub fn run_f32(
+            &self,
+            name: &str,
+            inputs: &[(&[f32], &[i64])],
+        ) -> Result<Vec<Vec<f32>>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    xla::Literal::vec1(data)
+                        .reshape(dims)
+                        .map_err(|e| crate::err!("reshape input: {e}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let result = self.with_executable(name, |exe| {
+                exe.execute::<xla::Literal>(&literals)
+                    .map_err(|e| crate::err!("execute {name}: {e}"))?[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| crate::err!("fetch result: {e}"))
+            })?;
+            let parts = result
+                .to_tuple()
+                .map_err(|e| crate::err!("untuple: {e}"))?;
+            parts
+                .into_iter()
+                .map(|lit| {
+                    // Outputs may be f32 or s32; convert s32 → f32 via i32 vec.
+                    match lit.ty() {
+                        Ok(xla::ElementType::S32) => {
+                            let v = lit
+                                .to_vec::<i32>()
+                                .map_err(|e| crate::err!("to_vec<i32>: {e}"))?;
+                            Ok(v.into_iter().map(|x| x as f32).collect())
+                        }
+                        _ => lit
+                            .to_vec::<f32>()
+                            .map_err(|e| crate::err!("to_vec<f32>: {e}")),
                     }
-                    _ => lit
-                        .to_vec::<f32>()
-                        .map_err(|e| anyhow::anyhow!("to_vec<f32>: {e}")),
-                }
-            })
-            .collect()
+                })
+                .collect()
+        }
     }
 }
 

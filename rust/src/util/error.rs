@@ -1,0 +1,126 @@
+//! Crate-wide error type, built in-tree for the fully-offline build (no
+//! `anyhow` in the vendor set).
+//!
+//! [`ObcError`] is a message-carrying error with `anyhow`-style
+//! ergonomics: the [`crate::err!`], [`crate::bail!`] and
+//! [`crate::ensure!`] macros build/return errors from format strings, and
+//! [`ObcError::context`] prepends a caller-side description the way
+//! `anyhow::Context` does. Standard-library error sources convert via
+//! `From`, so `?` keeps working across io/parse boundaries.
+
+use std::fmt;
+
+/// The crate-wide error: a human-readable message (with any context
+/// prepended `"context: cause"`-style).
+pub struct ObcError {
+    msg: String,
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, ObcError>;
+
+impl ObcError {
+    /// Build an error from a plain message.
+    pub fn msg(msg: impl Into<String>) -> ObcError {
+        ObcError { msg: msg.into() }
+    }
+
+    /// Prepend a higher-level description, `anyhow`-style:
+    /// `err.context("loading manifest")` → `"loading manifest: <cause>"`.
+    pub fn context(self, ctx: impl fmt::Display) -> ObcError {
+        ObcError { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for ObcError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for ObcError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // main() exits through Debug; keep it as readable as Display.
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for ObcError {}
+
+macro_rules! impl_from {
+    ($($ty:ty => $what:literal),* $(,)?) => {
+        $(impl From<$ty> for ObcError {
+            fn from(e: $ty) -> ObcError {
+                ObcError::msg(format!(concat!($what, ": {}"), e))
+            }
+        })*
+    };
+}
+
+impl_from! {
+    std::io::Error => "io error",
+    std::string::FromUtf8Error => "invalid utf-8",
+    std::str::Utf8Error => "invalid utf-8",
+    std::num::ParseIntError => "invalid integer",
+    std::num::ParseFloatError => "invalid number",
+}
+
+/// Build an [`ObcError`](crate::util::error::ObcError) from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($t:tt)*) => {
+        $crate::util::error::ObcError::msg(format!($($t)*))
+    };
+}
+
+/// Return early with an [`ObcError`](crate::util::error::ObcError).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::err!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(!flag, "flag was {}", flag);
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = err!("bad value {} at {}", 3, "here");
+        assert_eq!(e.to_string(), "bad value 3 at here");
+        assert_eq!(fails(false).unwrap(), 7);
+        assert_eq!(fails(true).unwrap_err().to_string(), "flag was true");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = err!("cause").context("outer");
+        assert_eq!(e.to_string(), "outer: cause");
+        assert_eq!(format!("{e:?}"), "outer: cause");
+    }
+
+    #[test]
+    fn from_std_errors() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: ObcError = io.into();
+        assert!(e.to_string().contains("nope"));
+        let p: ObcError = "x".parse::<u32>().unwrap_err().into();
+        assert!(p.to_string().contains("invalid integer"));
+    }
+}

@@ -37,13 +37,13 @@ pub type TensorMap = BTreeMap<String, NamedTensor>;
 const MAGIC: &[u8; 4] = b"OBCW";
 
 /// Write a tensor map to `path`.
-pub fn save_obcw(path: &Path, tensors: &TensorMap) -> anyhow::Result<()> {
+pub fn save_obcw(path: &Path, tensors: &TensorMap) -> crate::util::error::Result<()> {
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
     f.write_all(MAGIC)?;
     write_u32(&mut f, 1)?;
     write_u32(&mut f, tensors.len() as u32)?;
     for (name, t) in tensors {
-        anyhow::ensure!(
+        crate::ensure!(
             t.numel() == t.data.len(),
             "tensor '{name}' shape/data mismatch"
         );
@@ -61,32 +61,32 @@ pub fn save_obcw(path: &Path, tensors: &TensorMap) -> anyhow::Result<()> {
 }
 
 /// Load a tensor map from `path`.
-pub fn load_obcw(path: &Path) -> anyhow::Result<TensorMap> {
+pub fn load_obcw(path: &Path) -> crate::util::error::Result<TensorMap> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path)
-            .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?,
+            .map_err(|e| crate::err!("open {}: {e}", path.display()))?,
     );
     let mut magic = [0u8; 4];
     f.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == MAGIC, "bad magic in {}", path.display());
+    crate::ensure!(&magic == MAGIC, "bad magic in {}", path.display());
     let version = read_u32(&mut f)?;
-    anyhow::ensure!(version == 1, "unsupported obcw version {version}");
+    crate::ensure!(version == 1, "unsupported obcw version {version}");
     let count = read_u32(&mut f)? as usize;
     let mut out = TensorMap::new();
     for _ in 0..count {
         let name_len = read_u32(&mut f)? as usize;
-        anyhow::ensure!(name_len < 4096, "implausible name length {name_len}");
+        crate::ensure!(name_len < 4096, "implausible name length {name_len}");
         let mut name_bytes = vec![0u8; name_len];
         f.read_exact(&mut name_bytes)?;
         let name = String::from_utf8(name_bytes)?;
         let ndim = read_u32(&mut f)? as usize;
-        anyhow::ensure!(ndim <= 8, "implausible ndim {ndim}");
+        crate::ensure!(ndim <= 8, "implausible ndim {ndim}");
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
             shape.push(read_u32(&mut f)? as usize);
         }
         let dtype = read_u32(&mut f)?;
-        anyhow::ensure!(dtype == 0, "unsupported dtype {dtype}");
+        crate::ensure!(dtype == 0, "unsupported dtype {dtype}");
         let n: usize = shape.iter().product();
         let mut bytes = vec![0u8; n * 4];
         f.read_exact(&mut bytes)?;
@@ -103,23 +103,23 @@ fn write_u32<W: Write>(w: &mut W, v: u32) -> std::io::Result<()> {
     w.write_all(&v.to_le_bytes())
 }
 
-fn read_u32<R: Read>(r: &mut R) -> anyhow::Result<u32> {
+fn read_u32<R: Read>(r: &mut R) -> crate::util::error::Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
 }
 
 /// Read an entire file as a string with a path-qualified error.
-pub fn read_to_string(path: &Path) -> anyhow::Result<String> {
-    std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))
+pub fn read_to_string(path: &Path) -> crate::util::error::Result<String> {
+    std::fs::read_to_string(path).map_err(|e| crate::err!("read {}: {e}", path.display()))
 }
 
 /// Write a string, creating parent directories as needed.
-pub fn write_string(path: &Path, s: &str) -> anyhow::Result<()> {
+pub fn write_string(path: &Path, s: &str) -> crate::util::error::Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    std::fs::write(path, s).map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
+    std::fs::write(path, s).map_err(|e| crate::err!("write {}: {e}", path.display()))
 }
 
 /// Repo-root-relative artifact directory: honours `OBC_ARTIFACTS`, falls

@@ -84,21 +84,21 @@ impl Json {
     }
 
     /// Required-field accessors that produce a useful error message.
-    pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
+    pub fn req(&self, key: &str) -> crate::util::error::Result<&Json> {
         self.get(key)
-            .ok_or_else(|| anyhow::anyhow!("missing JSON field '{key}'"))
+            .ok_or_else(|| crate::err!("missing JSON field '{key}'"))
     }
 
-    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+    pub fn req_f64(&self, key: &str) -> crate::util::error::Result<f64> {
         self.req(key)?
             .as_f64()
-            .ok_or_else(|| anyhow::anyhow!("JSON field '{key}' is not a number"))
+            .ok_or_else(|| crate::err!("JSON field '{key}' is not a number"))
     }
 
-    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+    pub fn req_str(&self, key: &str) -> crate::util::error::Result<&str> {
         self.req(key)?
             .as_str()
-            .ok_or_else(|| anyhow::anyhow!("JSON field '{key}' is not a string"))
+            .ok_or_else(|| crate::err!("JSON field '{key}' is not a string"))
     }
 
     /// Serialize compactly.
@@ -252,14 +252,14 @@ impl fmt::Display for Json {
 }
 
 /// Parse a JSON document. Returns an error with byte position on failure.
-pub fn parse(input: &str) -> anyhow::Result<Json> {
+pub fn parse(input: &str) -> crate::util::error::Result<Json> {
     let bytes = input.as_bytes();
     let mut p = Parser { b: bytes, i: 0 };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
     if p.i != bytes.len() {
-        anyhow::bail!("trailing characters at byte {}", p.i);
+        crate::bail!("trailing characters at byte {}", p.i);
     }
     Ok(v)
 }
@@ -276,22 +276,22 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn peek(&self) -> anyhow::Result<u8> {
+    fn peek(&self) -> crate::util::error::Result<u8> {
         self.b
             .get(self.i)
             .copied()
-            .ok_or_else(|| anyhow::anyhow!("unexpected end of JSON at byte {}", self.i))
+            .ok_or_else(|| crate::err!("unexpected end of JSON at byte {}", self.i))
     }
 
-    fn expect(&mut self, c: u8) -> anyhow::Result<()> {
+    fn expect(&mut self, c: u8) -> crate::util::error::Result<()> {
         if self.peek()? != c {
-            anyhow::bail!("expected '{}' at byte {}", c as char, self.i);
+            crate::bail!("expected '{}' at byte {}", c as char, self.i);
         }
         self.i += 1;
         Ok(())
     }
 
-    fn value(&mut self) -> anyhow::Result<Json> {
+    fn value(&mut self) -> crate::util::error::Result<Json> {
         match self.peek()? {
             b'{' => self.object(),
             b'[' => self.array(),
@@ -303,16 +303,16 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn lit(&mut self, s: &str, v: Json) -> anyhow::Result<Json> {
+    fn lit(&mut self, s: &str, v: Json) -> crate::util::error::Result<Json> {
         if self.b[self.i..].starts_with(s.as_bytes()) {
             self.i += s.len();
             Ok(v)
         } else {
-            anyhow::bail!("invalid literal at byte {}", self.i)
+            crate::bail!("invalid literal at byte {}", self.i)
         }
     }
 
-    fn object(&mut self) -> anyhow::Result<Json> {
+    fn object(&mut self) -> crate::util::error::Result<Json> {
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
@@ -335,12 +335,12 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Obj(m));
                 }
-                c => anyhow::bail!("expected ',' or '}}' got '{}' at byte {}", c as char, self.i),
+                c => crate::bail!("expected ',' or '}}' got '{}' at byte {}", c as char, self.i),
             }
         }
     }
 
-    fn array(&mut self) -> anyhow::Result<Json> {
+    fn array(&mut self) -> crate::util::error::Result<Json> {
         self.expect(b'[')?;
         let mut v = Vec::new();
         self.skip_ws();
@@ -358,12 +358,12 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Arr(v));
                 }
-                c => anyhow::bail!("expected ',' or ']' got '{}' at byte {}", c as char, self.i),
+                c => crate::bail!("expected ',' or ']' got '{}' at byte {}", c as char, self.i),
             }
         }
     }
 
-    fn string(&mut self) -> anyhow::Result<String> {
+    fn string(&mut self) -> crate::util::error::Result<String> {
         self.expect(b'"')?;
         let mut s = String::new();
         loop {
@@ -390,7 +390,7 @@ impl<'a> Parser<'a> {
                             // Note: no surrogate-pair handling; our payloads are ASCII keys.
                             s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
                         }
-                        _ => anyhow::bail!("bad escape at byte {}", self.i),
+                        _ => crate::bail!("bad escape at byte {}", self.i),
                     }
                 }
                 c => {
@@ -409,7 +409,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn number(&mut self) -> anyhow::Result<Json> {
+    fn number(&mut self) -> crate::util::error::Result<Json> {
         let start = self.i;
         while self.i < self.b.len()
             && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
@@ -419,7 +419,7 @@ impl<'a> Parser<'a> {
         let s = std::str::from_utf8(&self.b[start..self.i])?;
         let n: f64 = s
             .parse()
-            .map_err(|_| anyhow::anyhow!("bad number '{s}' at byte {start}"))?;
+            .map_err(|_| crate::err!("bad number '{s}' at byte {start}"))?;
         Ok(Json::Num(n))
     }
 }

@@ -1,7 +1,8 @@
-//! Substrate utilities built in-tree for the offline build: mini-JSON,
-//! deterministic RNG, CLI parsing, thread pool, bench harness, logging,
-//! and a tiny property-testing helper.
+//! Substrate utilities built in-tree for the offline build: error type,
+//! mini-JSON, deterministic RNG, CLI parsing, thread pool, bench harness,
+//! logging, and a tiny property-testing helper.
 
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod cli;
@@ -11,8 +12,7 @@ pub mod logging;
 pub mod proptest;
 pub mod io;
 
-/// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub use error::{ObcError, Result};
 
 /// Format a float for table output: fixed 2 decimals, right-aligned.
 pub fn fmt2(v: f64) -> String {

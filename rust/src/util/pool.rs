@@ -5,8 +5,31 @@
 //! the offline vendor set.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
+
+/// The process-wide shared pool the compression hot paths fan out on
+/// (per-row ExactOBS/OBQ sweeps). Sized by `OBC_THREADS` if set, else
+/// cores−1 (min 1). Jobs submitted here must never themselves block on
+/// this pool (the coordinator's per-layer pool is a separate instance,
+/// so layer-over-row nesting is safe).
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let n = std::env::var("OBC_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                thread::available_parallelism()
+                    .map(|p| p.get())
+                    .unwrap_or(4)
+                    .saturating_sub(1)
+                    .max(1)
+            });
+        ThreadPool::new(n)
+    })
+}
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -101,7 +124,7 @@ impl ThreadPool {
             .into_inner()
             .unwrap()
             .into_iter()
-            .map(|o| o.expect("par_map job missing result"))
+            .map(|o| o.expect("par_map job missing result (did a job panic?)"))
             .collect()
     }
 
@@ -137,7 +160,19 @@ fn worker_loop(s: Arc<Shared>) {
                 q = s.cv.wait(q).unwrap();
             }
         };
-        job();
+        // A panicking job must still decrement `pending` (else wait_idle
+        // deadlocks every caller) and must not kill the worker (else a
+        // size-1 pool never runs another job). The panic surfaces in the
+        // submitting thread as a missing par_map result.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic payload>");
+            eprintln!("[obc-pool] job panicked: {msg}");
+        }
         if s.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
             let _g = s.done_mx.lock().unwrap();
             s.done_cv.notify_all();
@@ -204,5 +239,24 @@ mod tests {
         let b = pool.par_map(10, |i| i + 1);
         assert_eq!(a[9], 9);
         assert_eq!(b[9], 10);
+    }
+
+    /// A panicking job must neither deadlock wait_idle nor poison the
+    /// pool: the panic surfaces in the caller, later jobs still run.
+    #[test]
+    fn panicking_job_does_not_deadlock_pool() {
+        let pool = ThreadPool::new(1);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.par_map(3, |i| {
+                if i == 1 {
+                    panic!("boom in job {i}");
+                }
+                i
+            })
+        }));
+        assert!(caught.is_err(), "caller must see the lost-result panic");
+        // The size-1 pool must still be fully operational afterwards.
+        let out = pool.par_map(4, |i| i * 2);
+        assert_eq!(out, vec![0, 2, 4, 6]);
     }
 }

@@ -63,6 +63,22 @@ where
     }
 }
 
+/// Assert two f64 slices are element-wise close (the compression math
+/// runs in f64; property tests compare full-precision trajectories).
+pub fn assert_close_f64(a: &[f64], b: &[f64], atol: f64, rtol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let diff = (x - y).abs();
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if diff > tol {
+            return Err(format!("elem {i}: {x} vs {y} (diff {diff:.3e} > tol {tol:.3e})"));
+        }
+    }
+    Ok(())
+}
+
 /// Assert two slices are element-wise close.
 pub fn assert_close(a: &[f32], b: &[f32], atol: f64, rtol: f64) -> Result<(), String> {
     if a.len() != b.len() {

@@ -1,174 +1,231 @@
-//! Integration: the PJRT bridge vs native Rust — the three-way
-//! correctness check closing the loop between L1 (Pallas), L2 (JAX) and
-//! L3 (native Rust):
+//! Integration: runtime dispatch correctness.
+//!
+//! Without the `pjrt` feature (the offline default), `runtime::dispatch`
+//! must fall through to the native Rust kernels and reproduce the
+//! library reference implementations bit-for-bit — no artifacts needed.
+//!
+//! With `--features pjrt`, the original three-way bridge check runs:
 //!
 //!   numpy oracle == Pallas kernel   (pytest, python/tests)
-//!   Pallas-lowered HLO == native    (THIS file, via PJRT)
+//!   Pallas-lowered HLO == native    (the `pjrt_bridge` module, via PJRT)
 //!
-//! All tests skip gracefully when `make artifacts` has not run.
+//! Those tests skip gracefully when `make artifacts` has not run.
 
 use obc::compress::exact_obs;
 use obc::compress::hessian::LayerHessian;
 use obc::compress::obq::{self, ObqOpts};
 use obc::compress::quant::{fit_grids_per_row, GridSearch};
 use obc::linalg::Mat;
-use obc::runtime::{dispatch, Runtime};
-
-fn runtime_or_skip() -> Option<Runtime> {
-    match Runtime::new() {
-        Ok(rt) => Some(rt),
-        Err(e) => {
-            eprintln!("SKIP runtime tests: {e}");
-            None
-        }
-    }
-}
+use obc::runtime::dispatch;
 
 #[test]
-fn obs_sweep_pjrt_matches_native() {
-    let Some(rt) = runtime_or_skip() else { return };
-    let d = 32;
-    let rows = 8;
+fn dispatch_obs_sweep_native_matches_reference() {
+    let (d, rows) = (16, 4);
     let h = LayerHessian::synthetic(d, 1);
     let w = Mat::randn(rows, d, 2);
-    let Some(res) = dispatch::obs_sweep_pjrt(&rt, &w, &h.hinv) else {
-        eprintln!("SKIP: no obs artifact for d={d}");
-        return;
-    };
-    let out = res.expect("pjrt obs sweep");
+    let out = dispatch::obs_sweep(&w, &h.hinv).expect("dispatch obs_sweep");
     assert_eq!(out.traces.len(), rows);
     for r in 0..rows {
-        // Native reference.
         let mut wr = w.row(r).to_vec();
         let mut hinv = h.hinv.clone();
-        let trace = exact_obs::sweep_row(&mut wr, &mut hinv, d, |_, _| true);
-        // Same selection order (f32 kernel vs f64 native can only diverge
-        // on near-ties; require ≥90% prefix agreement and final zeros).
-        let agree = trace
-            .order
-            .iter()
-            .zip(&out.traces[r].order)
-            .take_while(|(a, b)| a == b)
-            .count();
-        assert!(
-            agree * 10 >= d * 9,
-            "row {r}: order agreement only {agree}/{d}"
-        );
-        assert!(out.w.row(r).iter().all(|&v| v == 0.0), "full sweep must zero row");
-        // Loss traces close where orders agree.
-        for i in 0..agree {
-            let a = trace.dloss[i];
-            let b = out.traces[r].dloss[i];
-            assert!(
-                (a - b).abs() <= 1e-3 + 0.02 * a.abs().max(b.abs()),
-                "row {r} step {i}: {a} vs {b}"
-            );
-        }
+        let t = exact_obs::sweep_row(&mut wr, &mut hinv, d, |_, _| true);
+        assert_eq!(t.order, out.traces[r].order, "row {r} order");
+        assert_eq!(t.dloss, out.traces[r].dloss, "row {r} dloss");
+        assert_eq!(wr, out.w.row(r).to_vec(), "row {r} weights");
+        assert!(out.w.row(r).iter().all(|&v| v == 0.0), "full sweep zeroes row {r}");
     }
 }
 
 #[test]
-fn obq_sweep_pjrt_matches_native() {
-    let Some(rt) = runtime_or_skip() else { return };
-    let d = 32;
-    let rows = 8;
+fn dispatch_obq_sweep_native_matches_reference() {
+    let (d, rows) = (16, 3);
     let h = LayerHessian::synthetic(d, 3);
     let w = Mat::randn(rows, d, 4);
     let grids = fit_grids_per_row(&w, 4, false, GridSearch::MinMax);
-    let pairs: Vec<(f64, f64)> = grids.iter().map(|g| (g.scale, g.zero)).collect();
-    let Some(res) = dispatch::obq_sweep_pjrt(&rt, &w, &h.hinv, &pairs) else {
-        eprintln!("SKIP: no obq artifact for d={d}");
-        return;
-    };
-    let got = res.expect("pjrt obq sweep");
-    // Native (outlier heuristic on, same as the artifact).
+    let got = dispatch::obq_sweep(&w, &h.hinv, &grids).expect("dispatch obq_sweep");
     let opts = ObqOpts::new(4);
     for r in 0..rows {
         let native = obq::quantize_row(w.row(r), &h.hinv, &grids[r], &opts);
-        // Quantized outputs live on a coarse grid: require most entries
-        // to match exactly and all to be on-grid.
-        let mut same = 0;
+        assert_eq!(native, got.row(r).to_vec(), "row {r}");
         for c in 0..d {
-            let gv = got.at(r, c);
-            let snapped = grids[r].quant(gv);
-            assert!((gv - snapped).abs() < 1e-5, "({r},{c}) off grid");
-            if (gv - native[c]).abs() < 1e-6 {
-                same += 1;
-            }
+            let v = got.at(r, c);
+            assert!((v - grids[r].quant(v)).abs() < 1e-9, "({r},{c}) off grid");
         }
-        assert!(same * 10 >= d * 8, "row {r}: only {same}/{d} grid points agree");
     }
 }
 
 #[test]
-fn hessian_pjrt_matches_native() {
-    let Some(rt) = runtime_or_skip() else { return };
-    let (d, n) = (32, 128);
+fn dispatch_hessian_native_matches_accumulator() {
+    let (d, n) = (12, 48);
     let x = Mat::randn(d, n, 5);
-    let Some(res) = dispatch::hessian_pjrt(&rt, &x) else {
-        eprintln!("SKIP: no hessian artifact for d={d} n={n}");
-        return;
-    };
-    let got = res.expect("pjrt hessian");
-    let want = {
-        let mut acc = obc::compress::hessian::HessianAccumulator::new(d);
-        acc.add_batch(&x);
-        acc.raw()
-    };
-    let scale = want.diag_mean().max(1.0);
-    assert!(got.dist(&want) < 1e-3 * scale, "dist {}", got.dist(&want));
+    let got = dispatch::hessian(&x).expect("dispatch hessian");
+    let mut acc = obc::compress::hessian::HessianAccumulator::new(d);
+    acc.add_batch(&x);
+    assert_eq!(got.data, acc.raw().data, "2XXᵀ must be bit-identical");
 }
 
-#[test]
-fn model_forward_hlo_matches_native_engine() {
-    // The L2 bridge check: the JAX-lowered forward pass of the trained
-    // rneta, executed via PJRT, must match our native inference engine on
-    // the same inputs (proving the Rust engine implements the same
-    // network the build-time trainer produced).
-    let Some(rt) = runtime_or_skip() else { return };
-    let Some(art) = rt.manifest.find("rneta_fwd_b4") else {
-        eprintln!("SKIP: no rneta_fwd artifact");
-        return;
-    };
-    let dir = obc::util::io::artifacts_dir().join("models");
-    let Ok(bundle) = obc::nn::models::load_bundle(&dir, "rneta") else {
-        eprintln!("SKIP: rneta not trained");
-        return;
-    };
-    let x = obc::nn::models::batch_slice(&bundle.test_x, 0, 4);
-    let native = bundle.model.forward(&x);
-    // The artifact takes (x, params..., state...) sorted by name — the
-    // text printer elides big constants, so weights are arguments.
-    let raw = obc::util::io::load_obcw(&dir.join("rneta.obcw")).expect("load bundle");
-    let mut inputs: Vec<(&[f32], Vec<i64>)> = vec![(&x.data, vec![4, 3, 16, 16])];
-    for prefix in ["param.", "state."] {
-        for (k, t) in &raw {
-            if k.starts_with(prefix) {
-                inputs.push((&t.data, t.shape.iter().map(|&d| d as i64).collect()));
+#[cfg(feature = "pjrt")]
+mod pjrt_bridge {
+    use super::*;
+    use obc::runtime::dispatch::pjrt;
+    use obc::runtime::Runtime;
+
+    fn runtime_or_skip() -> Option<Runtime> {
+        match Runtime::new() {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("SKIP runtime tests: {e}");
+                None
             }
         }
     }
-    let input_refs: Vec<(&[f32], &[i64])> =
-        inputs.iter().map(|(d, s)| (*d, s.as_slice())).collect();
-    let outs = rt.run_f32(&art.name, &input_refs).expect("run fwd artifact");
-    let jax_logits = &outs[0];
-    assert_eq!(jax_logits.len(), native.data.len());
-    for (i, (a, b)) in jax_logits.iter().zip(&native.data).enumerate() {
-        assert!(
-            (a - b).abs() < 1e-2 + 1e-2 * b.abs(),
-            "logit {i}: jax {a} vs native {b}"
-        );
+
+    #[test]
+    fn obs_sweep_pjrt_matches_native() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let d = 32;
+        let rows = 8;
+        let h = LayerHessian::synthetic(d, 1);
+        let w = Mat::randn(rows, d, 2);
+        let Some(res) = pjrt::obs_sweep_pjrt(&rt, &w, &h.hinv) else {
+            eprintln!("SKIP: no obs artifact for d={d}");
+            return;
+        };
+        let out = res.expect("pjrt obs sweep");
+        assert_eq!(out.traces.len(), rows);
+        for r in 0..rows {
+            // Native reference.
+            let mut wr = w.row(r).to_vec();
+            let mut hinv = h.hinv.clone();
+            let trace = exact_obs::sweep_row(&mut wr, &mut hinv, d, |_, _| true);
+            // Same selection order (f32 kernel vs f64 native can only diverge
+            // on near-ties; require ≥90% prefix agreement and final zeros).
+            let agree = trace
+                .order
+                .iter()
+                .zip(&out.traces[r].order)
+                .take_while(|(a, b)| a == b)
+                .count();
+            assert!(
+                agree * 10 >= d * 9,
+                "row {r}: order agreement only {agree}/{d}"
+            );
+            assert!(out.w.row(r).iter().all(|&v| v == 0.0), "full sweep must zero row");
+            // Loss traces close where orders agree.
+            for i in 0..agree {
+                let a = trace.dloss[i];
+                let b = out.traces[r].dloss[i];
+                assert!(
+                    (a - b).abs() <= 1e-3 + 0.02 * a.abs().max(b.abs()),
+                    "row {r} step {i}: {a} vs {b}"
+                );
+            }
+        }
     }
-    // And identical argmax (the metric-relevant property).
-    let native_pred = native.argmax_last();
-    for i in 0..4 {
-        let row = &jax_logits[i * 16..(i + 1) * 16];
-        let jp = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
-        assert_eq!(jp, native_pred[i], "sample {i} argmax differs");
+
+    #[test]
+    fn obq_sweep_pjrt_matches_native() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let d = 32;
+        let rows = 8;
+        let h = LayerHessian::synthetic(d, 3);
+        let w = Mat::randn(rows, d, 4);
+        let grids = fit_grids_per_row(&w, 4, false, GridSearch::MinMax);
+        let pairs: Vec<(f64, f64)> = grids.iter().map(|g| (g.scale, g.zero)).collect();
+        let Some(res) = pjrt::obq_sweep_pjrt(&rt, &w, &h.hinv, &pairs) else {
+            eprintln!("SKIP: no obq artifact for d={d}");
+            return;
+        };
+        let got = res.expect("pjrt obq sweep");
+        // Native (outlier heuristic on, same as the artifact).
+        let opts = ObqOpts::new(4);
+        for r in 0..rows {
+            let native = obq::quantize_row(w.row(r), &h.hinv, &grids[r], &opts);
+            // Quantized outputs live on a coarse grid: require most entries
+            // to match exactly and all to be on-grid.
+            let mut same = 0;
+            for c in 0..d {
+                let gv = got.at(r, c);
+                let snapped = grids[r].quant(gv);
+                assert!((gv - snapped).abs() < 1e-5, "({r},{c}) off grid");
+                if (gv - native[c]).abs() < 1e-6 {
+                    same += 1;
+                }
+            }
+            assert!(same * 10 >= d * 8, "row {r}: only {same}/{d} grid points agree");
+        }
+    }
+
+    #[test]
+    fn hessian_pjrt_matches_native() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let (d, n) = (32, 128);
+        let x = Mat::randn(d, n, 5);
+        let Some(res) = pjrt::hessian_pjrt(&rt, &x) else {
+            eprintln!("SKIP: no hessian artifact for d={d} n={n}");
+            return;
+        };
+        let got = res.expect("pjrt hessian");
+        let want = {
+            let mut acc = obc::compress::hessian::HessianAccumulator::new(d);
+            acc.add_batch(&x);
+            acc.raw()
+        };
+        let scale = want.diag_mean().max(1.0);
+        assert!(got.dist(&want) < 1e-3 * scale, "dist {}", got.dist(&want));
+    }
+
+    #[test]
+    fn model_forward_hlo_matches_native_engine() {
+        // The L2 bridge check: the JAX-lowered forward pass of the trained
+        // rneta, executed via PJRT, must match our native inference engine on
+        // the same inputs (proving the Rust engine implements the same
+        // network the build-time trainer produced).
+        let Some(rt) = runtime_or_skip() else { return };
+        let Some(art) = rt.manifest.find("rneta_fwd_b4") else {
+            eprintln!("SKIP: no rneta_fwd artifact");
+            return;
+        };
+        let dir = obc::util::io::artifacts_dir().join("models");
+        let Ok(bundle) = obc::nn::models::load_bundle(&dir, "rneta") else {
+            eprintln!("SKIP: rneta not trained");
+            return;
+        };
+        let x = obc::nn::models::batch_slice(&bundle.test_x, 0, 4);
+        let native = bundle.model.forward(&x);
+        // The artifact takes (x, params..., state...) sorted by name — the
+        // text printer elides big constants, so weights are arguments.
+        let raw = obc::util::io::load_obcw(&dir.join("rneta.obcw")).expect("load bundle");
+        let mut inputs: Vec<(&[f32], Vec<i64>)> = vec![(&x.data, vec![4, 3, 16, 16])];
+        for prefix in ["param.", "state."] {
+            for (k, t) in &raw {
+                if k.starts_with(prefix) {
+                    inputs.push((&t.data, t.shape.iter().map(|&d| d as i64).collect()));
+                }
+            }
+        }
+        let input_refs: Vec<(&[f32], &[i64])> =
+            inputs.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+        let outs = rt.run_f32(&art.name, &input_refs).expect("run fwd artifact");
+        let jax_logits = &outs[0];
+        assert_eq!(jax_logits.len(), native.data.len());
+        for (i, (a, b)) in jax_logits.iter().zip(&native.data).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-2 + 1e-2 * b.abs(),
+                "logit {i}: jax {a} vs native {b}"
+            );
+        }
+        // And identical argmax (the metric-relevant property).
+        let native_pred = native.argmax_last();
+        for i in 0..4 {
+            let row = &jax_logits[i * 16..(i + 1) * 16];
+            let jp = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(jp, native_pred[i], "sample {i} argmax differs");
+        }
     }
 }
