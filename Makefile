@@ -2,7 +2,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test bench fmt lint clean
+.PHONY: build test bench bench-json bench-smoke fmt lint clean
 
 build:
 	$(CARGO) build --release
@@ -12,9 +12,19 @@ test:
 	$(CARGO) build --release
 	$(CARGO) test -q
 
-# Perf microbenches (serial vs pooled hot paths, kernel timings).
+# Perf microbenches (arena vs reference hot paths, serial vs pooled,
+# kernel timings). Every run writes BENCH_kernels.json at the repo root.
 bench:
 	$(CARGO) bench --bench perf_kernels
+
+# Full-size run that refreshes the committed BENCH_kernels.json
+# (name, ns/iter, alloc bytes/iter, derived speedups).
+bench-json: bench
+
+# Tiny-size release run for CI: same cases, same assertions
+# (bit-identity + zero-alloc), seconds of wall clock.
+bench-smoke:
+	OBC_BENCH_SMOKE=1 $(CARGO) bench --bench perf_kernels
 
 fmt:
 	$(CARGO) fmt --all --check

@@ -1,88 +1,213 @@
 //! §Perf microbenches: the L3 hot paths (Hessian accumulation, ExactOBS
-//! sweep, group reconstruction, OBQ sweep), the serial-vs-pooled
-//! parallel speedup of the blocked ExactOBS path, and (with `--features
-//! pjrt`) the PJRT-vs-native bridge.
+//! sweep, group reconstruction, OBQ sweep) benchmarked **before/after**
+//! the arena rework — the fresh-clone full-width `reference` kernels
+//! (the PR-1 baseline, kept compiled for exactly this purpose) against
+//! the compacted arena engine — plus the serial-vs-pooled speedup and
+//! the dense-vs-masked matmul split.
 //!
-//! Used by the performance pass (EXPERIMENTS.md §Perf) to find and track
-//! bottlenecks; thresholds are not asserted here — numbers are recorded.
-//! The serial-vs-pooled section *does* assert bit-identical outputs: the
-//! parallel fan-out must not change a single ulp.
+//! Every run writes a machine-readable `BENCH_kernels.json` at the repo
+//! root (name, ns/iter, bytes allocated per iter, derived speedups) —
+//! see the "Performance model" section of README.md for how to read it.
+//! `OBC_BENCH_SMOKE=1` shrinks every case to seconds-total sizes; CI
+//! runs that mode in release so the perf kernels can't rot.
+//!
+//! Assertions (both modes): pooled output bit-identical to serial,
+//! arena output bit-identical to the reference kernels, and zero heap
+//! allocations per steady-state arena sweep (counted by the installed
+//! counting allocator).
 
+use obc::compress::exact_obs::{self, reference, ObsOpts};
 use obc::compress::hessian::{HessianAccumulator, LayerHessian};
-use obc::compress::{exact_obs, obq};
+use obc::compress::{obq, sweep};
 use obc::linalg::Mat;
-use obc::util::benchkit::{bench, selected};
+use obc::util::alloc_counter::CountingAlloc;
+use obc::util::benchkit::{bench, selected, JsonReport};
+use obc::util::json::Json;
 use obc::util::pool::{self, ThreadPool};
+use obc::util::scratch::Scratch;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+struct Sizes {
+    smoke: bool,
+    hess_d: usize,
+    hess_n: usize,
+    sweep_ds: Vec<usize>,
+    prune_rows: usize,
+    prune_d: usize,
+    obq_rows: usize,
+    obq_d: usize,
+    mm_n: usize,
+    rec_d: usize,
+    iters: usize,
+}
+
+fn sizes() -> Sizes {
+    if std::env::var("OBC_BENCH_SMOKE").is_ok() {
+        Sizes {
+            smoke: true,
+            hess_d: 48,
+            hess_n: 96,
+            sweep_ds: vec![24],
+            prune_rows: 8,
+            prune_d: 24,
+            obq_rows: 4,
+            obq_d: 24,
+            mm_n: 48,
+            rec_d: 32,
+            iters: 2,
+        }
+    } else {
+        Sizes {
+            smoke: false,
+            hess_d: 288,
+            hess_n: 1024,
+            sweep_ds: vec![72, 144, 288],
+            prune_rows: 512,
+            prune_d: 288,
+            obq_rows: 32,
+            obq_d: 144,
+            mm_n: 192,
+            rec_d: 288,
+            iters: 3,
+        }
+    }
+}
 
 fn main() {
-    // Hessian accumulation: d=288 (the largest conv in the zoo), N=1024.
-    if selected("hessian_xxt_d288_n1024") {
-        let x = Mat::randn(288, 1024, 1);
-        bench("hessian_xxt_d288_n1024", 1, 3, || {
-            let mut acc = HessianAccumulator::new(288);
-            acc.add_batch(&x);
-            std::hint::black_box(acc.raw());
+    let sz = sizes();
+    let mut report = JsonReport::new();
+    let pooled = pool::global();
+
+    // ---- Hessian accumulation: legacy xxt+axpy vs tiled threaded SYRK.
+    if selected("hessian_xxt") {
+        let name = format!("hessian_xxt_d{}_n{}", sz.hess_d, sz.hess_n);
+        let x = Mat::randn(sz.hess_d, sz.hess_n, 1);
+        // Steady-state streaming accumulation in both shapes: the PR-1
+        // path materializes a d×d product per batch and axpy-merges it;
+        // the tiled path accumulates through the reusable SYRK tile.
+        let mut hleg = Mat::zeros(sz.hess_d, sz.hess_d);
+        let legacy = bench(&format!("{name}_ref"), 1, sz.iters, || {
+            hleg.axpy(2.0, &x.xxt());
+            std::hint::black_box(hleg.at(0, 0));
         });
+        let mut acc = HessianAccumulator::new(sz.hess_d);
+        acc.add_batch(&x); // warm the tile
+        let tiled = bench(&name, 1, sz.iters, || {
+            acc.add_batch(&x);
+            std::hint::black_box(acc.n_samples);
+        });
+        // Determinism across the two paths.
+        let mut href = Mat::zeros(sz.hess_d, sz.hess_d);
+        href.axpy(2.0, &x.xxt());
+        let mut acc2 = HessianAccumulator::new(sz.hess_d);
+        acc2.add_batch(&x);
+        assert_eq!(href.data, acc2.raw().data, "threaded SYRK diverged from xxt+axpy");
+        report.case(&legacy);
+        report.case(&tiled);
+        report.derived(&format!("speedup_{name}"), legacy.min_s / tiled.min_s.max(1e-12));
     }
 
-    // Cholesky inverse at d=288.
-    if selected("cholesky_inverse_d288") {
-        bench("cholesky_inverse_d288", 1, 3, || {
-            let mut acc = HessianAccumulator::new(288);
-            acc.add_batch(&Mat::randn(288, 320, 3));
+    // ---- Cholesky inverse (unchanged kernel, tracked for regressions).
+    if selected("cholesky_inverse") {
+        let d = sz.hess_d;
+        let st = bench(&format!("cholesky_inverse_d{d}"), 1, sz.iters, || {
+            let mut acc = HessianAccumulator::new(d);
+            acc.add_batch(&Mat::randn(d, d + 32, 3));
             std::hint::black_box(acc.finalize(1e-8).unwrap());
         });
+        report.case(&st);
     }
 
-    // ExactOBS full-trace sweep, one row, d ∈ {72, 144, 288}.
-    for d in [72usize, 144, 288] {
-        if !selected(&format!("obs_sweep_row_d{d}_full")) {
+    // ---- Single-row full-trace sweep: reference vs arena (zero-alloc).
+    for &d in &sz.sweep_ds {
+        if !selected(&format!("obs_sweep_row_d{d}")) {
             continue;
         }
         let h = LayerHessian::synthetic(d, 4 + d as u64);
         let w = Mat::randn(1, d, 5 + d as u64);
-        bench(&format!("obs_sweep_row_d{d}_full"), 1, 3, || {
+        let rs = bench(&format!("obs_sweep_row_d{d}_ref"), 1, sz.iters, || {
             let mut wr = w.row(0).to_vec();
             let mut hinv = h.hinv.clone();
             std::hint::black_box(exact_obs::sweep_row(&mut wr, &mut hinv, d, |_, _| true));
         });
+        let mut s = Scratch::new();
+        sweep::prune_sweep(&mut s, w.row(0), &h.hinv, d, |_, _| true).unwrap(); // warmup
+        let ar = bench(&format!("obs_sweep_row_d{d}_arena"), 1, sz.iters, || {
+            sweep::prune_sweep(&mut s, w.row(0), &h.hinv, d, |_, _| true).unwrap();
+            std::hint::black_box(s.out()[0]);
+        });
+        if let Some(allocs) = ar.allocs_per_iter {
+            assert_eq!(allocs, 0.0, "steady-state arena sweep must not allocate");
+        }
+        report.case(&rs);
+        report.case(&ar);
+        report.derived(&format!("speedup_obs_sweep_row_d{d}"), rs.min_s / ar.min_s.max(1e-12));
     }
 
-    // Group-OBS reconstruction at 80% sparsity, d=288.
-    if selected("group_reconstruct_d288_s80") {
-        let d = 288;
-        let h288 = LayerHessian::from_inputs(&Mat::randn(288, 640, 2), 1e-8);
+    // ---- Group-OBS reconstruction at 80% sparsity: ref vs arena.
+    if selected("group_reconstruct") {
+        let d = sz.rec_d;
+        let h = LayerHessian::from_inputs(&Mat::randn(d, d * 2 + 64, 2), 1e-8);
         let w = Mat::randn(1, d, 9);
         let pruned: Vec<usize> = (0..(d * 4 / 5)).collect();
-        bench("group_reconstruct_d288_s80", 1, 3, || {
-            std::hint::black_box(exact_obs::group_obs_reconstruct(
-                w.row(0),
-                &h288.hinv,
-                &pruned,
-            ));
+        let rs = bench(&format!("group_reconstruct_d{d}_s80_ref"), 1, sz.iters, || {
+            std::hint::black_box(exact_obs::group_obs_reconstruct(w.row(0), &h.hinv, &pruned));
         });
+        let mut s = Scratch::new();
+        sweep::group_reconstruct(&mut s, w.row(0), &h.hinv, &pruned).unwrap(); // warmup
+        let ar = bench(&format!("group_reconstruct_d{d}_s80_arena"), 1, sz.iters, || {
+            sweep::group_reconstruct(&mut s, w.row(0), &h.hinv, &pruned).unwrap();
+            std::hint::black_box(s.out()[0]);
+        });
+        if let Some(allocs) = ar.allocs_per_iter {
+            assert_eq!(allocs, 0.0, "steady-state reconstruction must not allocate");
+        }
+        let rref = exact_obs::group_obs_reconstruct(w.row(0), &h.hinv, &pruned);
+        sweep::group_reconstruct(&mut s, w.row(0), &h.hinv, &pruned).unwrap();
+        assert_eq!(rref, s.out()[..d].to_vec(), "arena reconstruction diverged");
+        report.case(&rs);
+        report.case(&ar);
+        report.derived(&format!("speedup_group_reconstruct_d{d}"), rs.min_s / ar.min_s.max(1e-12));
     }
 
-    // OBQ sweep, 4-bit, matrix 32x144.
-    if selected("obq_quantize_32x144_4bit") {
-        let h = LayerHessian::synthetic(144, 11);
-        let w = Mat::randn(32, 144, 12);
-        bench("obq_quantize_32x144_4bit", 1, 3, || {
-            std::hint::black_box(obq::quantize(&w, &h, &obq::ObqOpts::new(4)));
+    // ---- OBQ matrix quantization: reference vs arena, pooled.
+    if selected("obq_quantize") {
+        let name = format!("obq_quantize_{}x{}_4bit", sz.obq_rows, sz.obq_d);
+        let h = LayerHessian::synthetic(sz.obq_d, 11);
+        let w = Mat::randn(sz.obq_rows, sz.obq_d, 12);
+        let opts = obq::ObqOpts::new(4);
+        let grids = obc::compress::quant::fit_grids_per_row(&w, 4, false, opts.search);
+        let rs = bench(&format!("{name}_ref"), 1, sz.iters, || {
+            std::hint::black_box(obq::quantize_with_grids_ref_on(pooled, &w, &h, &grids, &opts));
         });
+        let ar = bench(&name, 1, sz.iters, || {
+            std::hint::black_box(obq::quantize_with_grids_on(pooled, &w, &h, &grids, &opts));
+        });
+        let a = obq::quantize_with_grids_on(pooled, &w, &h, &grids, &opts);
+        let b = obq::quantize_with_grids_ref_on(pooled, &w, &h, &grids, &opts);
+        assert_eq!(a.w.data, b.w.data, "arena OBQ diverged from reference");
+        report.case(&rs);
+        report.case(&ar);
+        report.derived(&format!("speedup_{name}"), rs.min_s / ar.min_s.max(1e-12));
     }
 
-    // Serial vs pooled blocked ExactOBS (§A.5 "essentially perfectly
-    // parallelizable"): same rows, private H⁻¹ per row, deterministic
-    // row→result ordering — outputs must be bit-identical.
-    if selected("prune_unstructured_32x96") {
-        let d = 96;
-        let h = LayerHessian::synthetic(d, 21);
-        let w = Mat::randn(32, d, 22);
-        let opts = exact_obs::ObsOpts::default();
+    // ---- The acceptance shape: pooled blocked prune_unstructured,
+    // PR-1 reference vs arena, plus serial for the determinism contract.
+    if selected("prune_unstructured") {
+        let name = format!("prune_unstructured_{}x{}", sz.prune_rows, sz.prune_d);
+        let h = LayerHessian::synthetic(sz.prune_d, 21);
+        let w = Mat::randn(sz.prune_rows, sz.prune_d, 22);
+        let opts = ObsOpts::default();
         let serial_pool = ThreadPool::new(1);
-        let pooled = pool::global();
-        let s = bench("prune_unstructured_32x96_serial", 1, 3, || {
+        let rp = bench(&format!("{name}_ref_pool{}", pooled.size()), 1, sz.iters.min(2), || {
+            std::hint::black_box(reference::prune_unstructured_on(pooled, &w, &h, 0.6, &opts));
+        });
+        let ap = bench(&format!("{name}_arena_pool{}", pooled.size()), 1, sz.iters.min(2), || {
+            std::hint::black_box(exact_obs::prune_unstructured_on(pooled, &w, &h, 0.6, &opts));
+        });
+        let aser = bench(&format!("{name}_arena_serial"), 1, 1, || {
             std::hint::black_box(exact_obs::prune_unstructured_on(
                 &serial_pool,
                 &w,
@@ -91,32 +216,92 @@ fn main() {
                 &opts,
             ));
         });
-        let p = bench(
-            &format!("prune_unstructured_32x96_pool{}", pooled.size()),
-            1,
-            3,
-            || {
-                std::hint::black_box(exact_obs::prune_unstructured_on(
-                    pooled, &w, &h, 0.6, &opts,
-                ));
-            },
-        );
-        let a = exact_obs::prune_unstructured_on(&serial_pool, &w, &h, 0.6, &opts);
-        let b = exact_obs::prune_unstructured_on(pooled, &w, &h, 0.6, &opts);
+        let a = exact_obs::prune_unstructured_on(pooled, &w, &h, 0.6, &opts);
+        let b = exact_obs::prune_unstructured_on(&serial_pool, &w, &h, 0.6, &opts);
+        let c = reference::prune_unstructured_on(pooled, &w, &h, 0.6, &opts);
         assert_eq!(a.w.data, b.w.data, "pooled output diverged from serial");
         assert_eq!(a.sq_err, b.sq_err);
+        assert_eq!(a.w.data, c.w.data, "arena output diverged from reference");
+        assert_eq!(a.sq_err, c.sq_err);
         println!(
-            "serial/pooled({} threads) speedup: {:.2}x (outputs bit-identical)",
+            "arena speedup vs PR-1 reference (pooled, {} threads): {:.2}x; \
+             serial/pooled arena: {:.2}x (outputs bit-identical)",
             pooled.size(),
-            s.min_s / p.min_s.max(1e-12)
+            rp.min_s / ap.min_s.max(1e-12),
+            aser.min_s / ap.min_s.max(1e-12),
+        );
+        report.case(&rp);
+        report.case(&ap);
+        report.case(&aser);
+        report.derived(&format!("speedup_{name}_arena_vs_ref"), rp.min_s / ap.min_s.max(1e-12));
+        report.derived(
+            &format!("speedup_{name}_serial_vs_pool"),
+            aser.min_s / ap.min_s.max(1e-12),
         );
     }
 
-    // PJRT bridge vs native on an artifact shape (16 rows x d=32).
+    // ---- Dense vs masked matmul: the zero-skip branch must pay for
+    // itself only on sparse inputs (the satellite split).
+    if selected("matmul_dense") {
+        let n = sz.mm_n;
+        let a = Mat::randn(n, n, 31);
+        let b = Mat::randn(n, n, 32);
+        let dense = bench(&format!("matmul_dense_{n}"), 1, sz.iters, || {
+            std::hint::black_box(a.matmul(&b));
+        });
+        let masked = bench(&format!("matmul_masked_on_dense_{n}"), 1, sz.iters, || {
+            std::hint::black_box(a.matmul_masked(&b));
+        });
+        let mut sp = a.clone();
+        for (i, v) in sp.data.iter_mut().enumerate() {
+            if i % 4 != 0 {
+                *v = 0.0; // 75% pruned — the masked kernel's target shape
+            }
+        }
+        let masked_sparse = bench(&format!("matmul_masked_on_s75_{n}"), 1, sz.iters, || {
+            std::hint::black_box(sp.matmul_masked(&b));
+        });
+        assert_eq!(a.matmul(&b).data, a.matmul_masked(&b).data);
+        report.case(&dense);
+        report.case(&masked);
+        report.case(&masked_sparse);
+        report.derived(
+            &format!("dense_win_matmul_{n}"),
+            masked.min_s / dense.min_s.max(1e-12),
+        );
+        report.derived(
+            &format!("masked_win_on_s75_{n}"),
+            masked.min_s / masked_sparse.min_s.max(1e-12),
+        );
+    }
+
+    // ---- PJRT bridge vs native on an artifact shape (16 rows x d=32).
     #[cfg(feature = "pjrt")]
     pjrt_benches();
     #[cfg(not(feature = "pjrt"))]
     eprintln!("SKIP pjrt benches (build with --features pjrt)");
+
+    // Only a FULL run may refresh a report file: a `-- <filter>` run
+    // would silently clobber the committed numbers with a partial case
+    // list. Smoke runs get their own (untracked) file so CI can sanity-
+    // check the artifact without touching the committed trajectory.
+    let filtered = std::env::args().skip(1).any(|a| !a.starts_with('-'));
+    if filtered {
+        eprintln!("bench filter active: skipping JSON report (partial run)");
+    } else {
+        let fname = if sz.smoke { "BENCH_kernels.smoke.json" } else { "BENCH_kernels.json" };
+        let path = format!("{}/{fname}", env!("CARGO_MANIFEST_DIR"));
+        report
+            .write(
+                &path,
+                &[
+                    ("smoke", Json::Bool(sz.smoke)),
+                    ("threads", pooled.size().into()),
+                    ("measured", Json::Bool(true)),
+                ],
+            )
+            .expect("write bench report");
+    }
 }
 
 #[cfg(feature = "pjrt")]

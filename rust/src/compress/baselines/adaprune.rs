@@ -233,12 +233,12 @@ mod tests {
         }
         let y_target = w.matmul(&x_comp);
         let before = {
-            let y = pruned.w.matmul(&x_comp);
+            let y = pruned.w.matmul_masked(&x_comp);
             y.data.iter().zip(&y_target.data).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
         };
         let fixed = global_reoptimize_layer(&pruned.w, &x_comp, &y_target, 1e-8);
         let after = {
-            let y = fixed.matmul(&x_comp);
+            let y = fixed.matmul_masked(&x_comp);
             y.data.iter().zip(&y_target.data).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
         };
         assert!(after <= before + 1e-9, "gAP made it worse: {after} vs {before}");

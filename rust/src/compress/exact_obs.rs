@@ -13,11 +13,22 @@
 //! * [`prune_nm`] — N:M semi-structured sparsity (eligibility = block has
 //!   fewer than M−N pruned weights; no global step needed).
 //! * [`prune_block`] — block-sparsity via the group-OBS formulas (Eq. 5).
+//!
+//! The production sweeps run on the compacted, allocation-free arena
+//! engine in [`super::sweep`]: per-worker scratch buffers instead of a
+//! fresh d×d H⁻¹ clone per row, the compensation/downdate/compaction
+//! fused into one pass, and Θ((d−t)²) per step instead of Θ(d²). The
+//! textbook full-width kernels ([`sweep_row`], [`group_obs_reconstruct`]
+//! and the [`reference`] module) are kept as the oracle the fixtures pin
+//! and the arena path is asserted bit-identical against
+//! (`rust/tests/arena_sweeps.rs`).
 
 use super::hessian::LayerHessian;
+use super::sweep::{self, NonSpd};
 use super::CompressResult;
 use crate::linalg::{cholesky, cholesky_solve, remove_row_col, Mat};
 use crate::util::pool::{self, ThreadPool};
+use crate::util::scratch;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::sync::Arc;
@@ -48,9 +59,20 @@ pub struct RowTrace {
 
 /// Algorithm 1: prune `k` weights from `w` (in place) according to OBS.
 ///
+/// This is the textbook full-width **reference** kernel — the conformance
+/// fixtures pin it, and the arena engine is asserted bit-identical to it.
+/// Production sweeps go through [`sweep_all_rows`]/[`prune_unstructured`]
+/// instead, which run the Θ((d−t)²)-per-step compacted path.
+///
 /// `hinv` must be this row's private copy of H⁻¹ (it is consumed by the
 /// Lemma-1 eliminations). `eligible(p)` restricts the candidate set (used
-/// by N:M); pass `|_| true` for unstructured. Returns the trace.
+/// by N:M); pass `|_, _| true` for unstructured. Returns the trace.
+///
+/// A non-positive [H⁻¹]ₚₚ (non-SPD corruption) trips an `assert` in
+/// every build: loud failure instead of the historical silent
+/// `.max(1e-300)` clamp producing garbage compensations. The production
+/// arena path instead surfaces the condition as a `NonSpd` error and
+/// recovers via the damped retry in [`sweep::run_with_redamp`].
 pub fn sweep_row(
     w: &mut [f64],
     hinv: &mut Mat,
@@ -71,7 +93,16 @@ pub fn sweep_row(
                 continue;
             }
             let diag = hinv.at(p, p);
-            let score = w[p] * w[p] / diag.max(1e-300);
+            // Loud in every build: a negative diagonal would otherwise
+            // produce a negative score that WINS the argmin and sprays
+            // garbage compensations (the historical 1e-300 clamp hid
+            // this). The production arena path recovers via the damped
+            // retry instead; this reference kernel stops hard.
+            assert!(
+                diag > 0.0 && diag.is_finite(),
+                "non-SPD H⁻¹: diag[{p}] = {diag:e} — Hessian dampening too small"
+            );
+            let score = w[p] * w[p] / diag;
             if score < best_score {
                 best_score = score;
                 best = p;
@@ -81,7 +112,7 @@ pub fn sweep_row(
             break; // no eligible weight left (N:M saturated)
         }
         let p = best;
-        let diag = hinv.at(p, p).max(1e-300);
+        let diag = hinv.at(p, p);
         let f = w[p] / diag;
         // Optimal compensation δ = −(w_p/[H⁻¹]ₚₚ)·H⁻¹:,ₚ on the survivors.
         let hrow = hinv.row(p).to_vec();
@@ -110,6 +141,8 @@ pub fn sweep_row(
 ///
 /// For the quadratic layer objective this equals the result of iterating
 /// Algorithm 1 over exactly that set (verified by property test below).
+/// Reference implementation; the pooled reconstruction path uses the
+/// arena edition [`sweep::group_reconstruct`].
 pub fn group_obs_reconstruct(w: &[f64], hinv: &Mat, pruned: &[usize]) -> Vec<f64> {
     let d = w.len();
     if pruned.is_empty() {
@@ -142,9 +175,10 @@ pub fn group_obs_reconstruct(w: &[f64], hinv: &Mat, pruned: &[usize]) -> Vec<f64
 /// all rows with a min-heap. Step 3: group-OBS reconstruction per row
 /// from the original dense weights.
 ///
-/// Rows are independent with private H⁻¹ copies (the paper's §A.5
-/// parallelism argument) and results are collected in row order, so the
-/// output is **bit-identical** for any pool size — asserted by tests.
+/// Rows are independent jobs on the pool's per-worker scratch arenas
+/// (the paper's §A.5 parallelism argument, minus the per-row clone) and
+/// results are collected in row order, so the output is **bit-identical**
+/// for any pool size — asserted by tests.
 pub fn prune_unstructured(
     w: &Mat,
     hess: &LayerHessian,
@@ -177,8 +211,10 @@ pub fn sweep_all_rows(w: &Mat, hess: &LayerHessian, opts: &ObsOpts) -> Vec<RowTr
     sweep_all_rows_on(pool::global(), w, hess, opts)
 }
 
-/// [`sweep_all_rows`] on an explicit pool. Each row job takes a private
-/// copy of H⁻¹ and `par_map` returns results in row order.
+/// [`sweep_all_rows`] on an explicit pool. Each row job runs the arena
+/// sweep on its worker's scratch (zero steady-state allocation) and
+/// `par_map` returns results in row order. Non-SPD corruption triggers
+/// the layer-level damped retry.
 pub fn sweep_all_rows_on(
     pool: &ThreadPool,
     w: &Mat,
@@ -188,12 +224,18 @@ pub fn sweep_all_rows_on(
     let d = w.cols;
     let cap = (((d as f64) * opts.trace_cap).ceil() as usize).min(d);
     let rows = w.rows;
-    let w = Arc::new(w.clone());
-    let hinv = Arc::new(hess.hinv.clone());
-    pool.par_map(rows, move |r| {
-        let mut wr = w.row(r).to_vec();
-        let mut h = (*hinv).clone();
-        sweep_row(&mut wr, &mut h, cap, |_, _| true)
+    let wa = Arc::new(w.clone());
+    sweep::run_with_redamp(hess, "ExactOBS row sweeps", move |h| {
+        let wa = Arc::clone(&wa);
+        let hinv = Arc::new(h.hinv.clone());
+        pool.par_map(rows, move |r| {
+            scratch::with(|s| {
+                sweep::prune_sweep(s, wa.row(r), &hinv, cap, |_, _| true)?;
+                Ok(RowTrace { order: s.trace_order.clone(), dloss: s.trace_dloss.clone() })
+            })
+        })
+        .into_iter()
+        .collect::<Result<Vec<_>, NonSpd>>()
     })
 }
 
@@ -248,7 +290,8 @@ pub fn reconstruct_from_traces(
 }
 
 /// [`reconstruct_from_traces`] on an explicit pool: one group-OBS solve
-/// per row, fanned out, stitched back in row order.
+/// per row (arena edition — the k×k gather/Cholesky run in the worker's
+/// scratch), fanned out, stitched back in row order.
 pub fn reconstruct_from_traces_on(
     pool: &ThreadPool,
     w: &Mat,
@@ -256,21 +299,42 @@ pub fn reconstruct_from_traces_on(
     traces: &[RowTrace],
     counts: &[usize],
 ) -> CompressResult {
+    let pruned_sets: Vec<Vec<usize>> = traces
+        .iter()
+        .zip(counts)
+        .map(|(t, &k)| t.order[..k].to_vec())
+        .collect();
+    reconstruct_rows_on(pool, w, hess, pruned_sets)
+}
+
+/// Shared fan-out behind every group-OBS reconstruction: one arena job
+/// per row with a non-empty pruned set, damped retry on NonSpd, rows
+/// stitched back in order.
+fn reconstruct_rows_on(
+    pool: &ThreadPool,
+    w: &Mat,
+    hess: &LayerHessian,
+    pruned_sets: Vec<Vec<usize>>,
+) -> CompressResult {
     let rows = w.rows;
+    let d = w.cols;
     let wa = Arc::new(w.clone());
-    let hinv = Arc::new(hess.hinv.clone());
-    let pruned_sets: Arc<Vec<Vec<usize>>> = Arc::new(
-        traces
-            .iter()
-            .zip(counts)
-            .map(|(t, &k)| t.order[..k].to_vec())
-            .collect(),
-    );
-    let new_rows = pool.par_map(rows, move |r| {
-        if pruned_sets[r].is_empty() {
-            return None;
-        }
-        Some(group_obs_reconstruct(wa.row(r), &hinv, &pruned_sets[r]))
+    let pruned_sets = Arc::new(pruned_sets);
+    let new_rows = sweep::run_with_redamp(hess, "group-OBS reconstruction", move |h| {
+        let wa = Arc::clone(&wa);
+        let pruned_sets = Arc::clone(&pruned_sets);
+        let hinv = Arc::new(h.hinv.clone());
+        pool.par_map(rows, move |r| {
+            if pruned_sets[r].is_empty() {
+                return Ok(None);
+            }
+            scratch::with(|s| {
+                sweep::group_reconstruct(s, wa.row(r), &hinv, &pruned_sets[r])?;
+                Ok(Some(s.out()[..d].to_vec()))
+            })
+        })
+        .into_iter()
+        .collect::<Result<Vec<_>, NonSpd>>()
     });
     let mut out = w.clone();
     for (r, row) in new_rows.into_iter().enumerate() {
@@ -291,7 +355,7 @@ pub fn prune_nm(w: &Mat, hess: &LayerHessian, n_keep: usize, m: usize) -> Compre
 }
 
 /// [`prune_nm`] on an explicit pool: every row's Algorithm-1 sweep (with
-/// the block-eligibility rule) is an independent job with a private H⁻¹.
+/// the block-eligibility rule) is an independent arena job.
 pub fn prune_nm_on(
     pool: &ThreadPool,
     w: &Mat,
@@ -304,25 +368,31 @@ pub fn prune_nm_on(
     let prune_per_block = m - n_keep;
     let rows = w.rows;
     let wa = Arc::new(w.clone());
-    let hinv = Arc::new(hess.hinv.clone());
-    let new_rows = pool.par_map(rows, move |r| {
-        let mut wr = wa.row(r).to_vec();
-        let mut h = (*hinv).clone();
-        // Total to prune in this row (partial tail block prunes
-        // proportionally, rounded down).
-        let full = d / m;
-        let tail = d % m;
-        let k = full * prune_per_block + (tail * prune_per_block) / m;
-        // Eligibility reads the live `alive` mask: a weight may be pruned
-        // only while its block still has fewer than M−N dead weights.
-        let trace = sweep_row(&mut wr, &mut h, k, |p, alive| {
-            let b = p / m;
-            let end = ((b + 1) * m).min(d);
-            let dead = (b * m..end).filter(|&i| !alive[i]).count();
-            dead < prune_per_block
-        });
-        debug_assert_eq!(trace.order.len(), k);
-        wr
+    let new_rows = sweep::run_with_redamp(hess, "N:M row sweeps", move |h| {
+        let wa = Arc::clone(&wa);
+        let hinv = Arc::new(h.hinv.clone());
+        pool.par_map(rows, move |r| {
+            scratch::with(|s| {
+                // Total to prune in this row (partial tail block prunes
+                // proportionally, rounded down).
+                let full = d / m;
+                let tail = d % m;
+                let k = full * prune_per_block + (tail * prune_per_block) / m;
+                // Eligibility reads the live `alive` mask: a weight may be
+                // pruned only while its block still has fewer than M−N
+                // dead weights.
+                sweep::prune_sweep(s, wa.row(r), &hinv, k, |p, alive| {
+                    let b = p / m;
+                    let end = ((b + 1) * m).min(d);
+                    let dead = (b * m..end).filter(|&i| !alive[i]).count();
+                    dead < prune_per_block
+                })?;
+                debug_assert_eq!(s.trace_len(), k);
+                Ok(s.out()[..d].to_vec())
+            })
+        })
+        .into_iter()
+        .collect::<Result<Vec<_>, NonSpd>>()
     });
     let mut out = w.clone();
     for (r, wr) in new_rows.into_iter().enumerate() {
@@ -343,32 +413,54 @@ pub fn prune_block(
     sparsity: f64,
     c: usize,
 ) -> CompressResult {
-    let traces = sweep_all_rows_block(w, hess, c, 1.0);
+    prune_block_on(pool::global(), w, hess, sparsity, c)
+}
+
+/// [`prune_block`] on an explicit pool: block sweeps and the group-OBS
+/// reconstruction both fan out as arena jobs.
+pub fn prune_block_on(
+    pool: &ThreadPool,
+    w: &Mat,
+    hess: &LayerHessian,
+    sparsity: f64,
+    c: usize,
+) -> CompressResult {
+    let traces = sweep_all_rows_block_on(pool, w, hess, c, 1.0);
     let total_blocks = ((w.rows * w.cols) as f64 * sparsity / c as f64).round() as usize;
     let counts = global_select(&traces, total_blocks);
-    // Reconstruct: union of pruned indices per row, group formula.
-    let mut out = w.clone();
-    for r in 0..w.rows {
-        let kb = counts[r];
-        if kb == 0 {
-            continue;
-        }
-        let mut pruned: Vec<usize> = Vec::with_capacity(kb * c);
-        for &b in &traces[r].order[..kb] {
-            let start = b * c;
-            let end = (start + c).min(w.cols);
-            pruned.extend(start..end);
-        }
-        let new_row = group_obs_reconstruct(w.row(r), &hess.hinv, &pruned);
-        out.row_mut(r).copy_from_slice(&new_row);
-    }
-    let err = super::layer_sq_err(w, &out, &hess.h);
-    CompressResult::new(out, err)
+    // Union of pruned indices per row, then the shared group-formula
+    // reconstruction fan-out.
+    let d = w.cols;
+    let pruned_sets: Vec<Vec<usize>> = traces
+        .iter()
+        .zip(&counts)
+        .map(|(t, &kb)| {
+            let mut pruned: Vec<usize> = Vec::with_capacity(kb * c);
+            for &b in &t.order[..kb] {
+                let start = b * c;
+                let end = (start + c).min(d);
+                pruned.extend(start..end);
+            }
+            pruned
+        })
+        .collect();
+    reconstruct_rows_on(pool, w, hess, pruned_sets)
 }
 
 /// Per-row block sweep returning block-granularity traces
 /// (order = block indices, dloss = group loss increase per block).
 pub fn sweep_all_rows_block(
+    w: &Mat,
+    hess: &LayerHessian,
+    c: usize,
+    trace_cap: f64,
+) -> Vec<RowTrace> {
+    sweep_all_rows_block_on(pool::global(), w, hess, c, trace_cap)
+}
+
+/// [`sweep_all_rows_block`] on an explicit pool, one arena job per row.
+pub fn sweep_all_rows_block_on(
+    pool: &ThreadPool,
     w: &Mat,
     hess: &LayerHessian,
     c: usize,
@@ -380,14 +472,16 @@ pub fn sweep_all_rows_block(
     let rows = w.rows;
     let wa = Arc::new(w.clone());
     let hinv = Arc::new(hess.hinv.clone());
-    pool::global().par_map(rows, move |r| {
-        let mut wr = wa.row(r).to_vec();
-        let mut h = (*hinv).clone();
-        sweep_row_blocks(&mut wr, &mut h, c, cap)
+    pool.par_map(rows, move |r| {
+        scratch::with(|s| {
+            sweep::block_sweep(s, wa.row(r), &hinv, c, cap);
+            RowTrace { order: s.trace_order.clone(), dloss: s.trace_dloss.clone() }
+        })
     })
 }
 
-/// Block variant of Algorithm 1 on one row.
+/// Block variant of Algorithm 1 on one row (full-width reference kernel;
+/// see [`sweep::block_sweep`] for the production arena edition).
 fn sweep_row_blocks(w: &mut [f64], hinv: &mut Mat, c: usize, k_blocks: usize) -> RowTrace {
     let d = w.len();
     let n_blocks = d / c;
@@ -436,6 +530,166 @@ fn sweep_row_blocks(w: &mut [f64], hinv: &mut Mat, c: usize, k_blocks: usize) ->
         dloss.push(0.5 * best_score.max(0.0));
     }
     RowTrace { order, dloss }
+}
+
+/// Fresh-clone, full-width reference implementations of the pooled
+/// solvers — the exact pre-arena hot path. Kept compiled (not
+/// test-gated) so the bit-identity property suite and the before/after
+/// perf bench (`benches/perf_kernels.rs`) can pit the arena engine
+/// against them at any scale.
+pub mod reference {
+    use super::*;
+
+    /// Pre-arena [`super::sweep_all_rows_on`]: private d×d H⁻¹ clone per
+    /// row job.
+    pub fn sweep_all_rows_on(
+        pool: &ThreadPool,
+        w: &Mat,
+        hess: &LayerHessian,
+        opts: &ObsOpts,
+    ) -> Vec<RowTrace> {
+        let d = w.cols;
+        let cap = (((d as f64) * opts.trace_cap).ceil() as usize).min(d);
+        let rows = w.rows;
+        let w = Arc::new(w.clone());
+        let hinv = Arc::new(hess.hinv.clone());
+        pool.par_map(rows, move |r| {
+            let mut wr = w.row(r).to_vec();
+            let mut h = (*hinv).clone();
+            sweep_row(&mut wr, &mut h, cap, |_, _| true)
+        })
+    }
+
+    /// Pre-arena [`super::reconstruct_from_traces_on`]: allocating
+    /// [`group_obs_reconstruct`] per row.
+    pub fn reconstruct_from_traces_on(
+        pool: &ThreadPool,
+        w: &Mat,
+        hess: &LayerHessian,
+        traces: &[RowTrace],
+        counts: &[usize],
+    ) -> CompressResult {
+        let rows = w.rows;
+        let wa = Arc::new(w.clone());
+        let hinv = Arc::new(hess.hinv.clone());
+        let pruned_sets: Arc<Vec<Vec<usize>>> = Arc::new(
+            traces
+                .iter()
+                .zip(counts)
+                .map(|(t, &k)| t.order[..k].to_vec())
+                .collect(),
+        );
+        let new_rows = pool.par_map(rows, move |r| {
+            if pruned_sets[r].is_empty() {
+                return None;
+            }
+            Some(group_obs_reconstruct(wa.row(r), &hinv, &pruned_sets[r]))
+        });
+        let mut out = w.clone();
+        for (r, row) in new_rows.into_iter().enumerate() {
+            if let Some(row) = row {
+                out.row_mut(r).copy_from_slice(&row);
+            }
+        }
+        let err = crate::compress::layer_sq_err(w, &out, &hess.h);
+        CompressResult::new(out, err)
+    }
+
+    /// Pre-arena [`super::prune_unstructured_on`].
+    pub fn prune_unstructured_on(
+        pool: &ThreadPool,
+        w: &Mat,
+        hess: &LayerHessian,
+        sparsity: f64,
+        opts: &ObsOpts,
+    ) -> CompressResult {
+        let traces = sweep_all_rows_on(pool, w, hess, opts);
+        let k_total = ((w.rows * w.cols) as f64 * sparsity).round() as usize;
+        let counts = global_select(&traces, k_total);
+        reconstruct_from_traces_on(pool, w, hess, &traces, &counts)
+    }
+
+    /// Pre-arena [`super::prune_nm_on`].
+    pub fn prune_nm_on(
+        pool: &ThreadPool,
+        w: &Mat,
+        hess: &LayerHessian,
+        n_keep: usize,
+        m: usize,
+    ) -> CompressResult {
+        assert!(n_keep < m && n_keep > 0, "need 0 < N < M");
+        let d = w.cols;
+        let prune_per_block = m - n_keep;
+        let rows = w.rows;
+        let wa = Arc::new(w.clone());
+        let hinv = Arc::new(hess.hinv.clone());
+        let new_rows = pool.par_map(rows, move |r| {
+            let mut wr = wa.row(r).to_vec();
+            let mut h = (*hinv).clone();
+            let full = d / m;
+            let tail = d % m;
+            let k = full * prune_per_block + (tail * prune_per_block) / m;
+            let trace = sweep_row(&mut wr, &mut h, k, |p, alive| {
+                let b = p / m;
+                let end = ((b + 1) * m).min(d);
+                let dead = (b * m..end).filter(|&i| !alive[i]).count();
+                dead < prune_per_block
+            });
+            debug_assert_eq!(trace.order.len(), k);
+            wr
+        });
+        let mut out = w.clone();
+        for (r, wr) in new_rows.into_iter().enumerate() {
+            out.row_mut(r).copy_from_slice(&wr);
+        }
+        let err = crate::compress::layer_sq_err(w, &out, &hess.h);
+        CompressResult::new(out, err)
+    }
+
+    /// Pre-arena [`super::prune_block`] (serial reconstruction, exactly
+    /// as the original).
+    pub fn prune_block(w: &Mat, hess: &LayerHessian, sparsity: f64, c: usize) -> CompressResult {
+        let traces = sweep_all_rows_block_ref(w, hess, c, 1.0);
+        let total_blocks = ((w.rows * w.cols) as f64 * sparsity / c as f64).round() as usize;
+        let counts = global_select(&traces, total_blocks);
+        let mut out = w.clone();
+        for r in 0..w.rows {
+            let kb = counts[r];
+            if kb == 0 {
+                continue;
+            }
+            let mut pruned: Vec<usize> = Vec::with_capacity(kb * c);
+            for &b in &traces[r].order[..kb] {
+                let start = b * c;
+                let end = (start + c).min(w.cols);
+                pruned.extend(start..end);
+            }
+            let new_row = group_obs_reconstruct(w.row(r), &hess.hinv, &pruned);
+            out.row_mut(r).copy_from_slice(&new_row);
+        }
+        let err = crate::compress::layer_sq_err(w, &out, &hess.h);
+        CompressResult::new(out, err)
+    }
+
+    /// Pre-arena [`super::sweep_all_rows_block`].
+    pub fn sweep_all_rows_block_ref(
+        w: &Mat,
+        hess: &LayerHessian,
+        c: usize,
+        trace_cap: f64,
+    ) -> Vec<RowTrace> {
+        let d = w.cols;
+        let n_blocks = d / c;
+        let cap = ((n_blocks as f64) * trace_cap).ceil() as usize;
+        let rows = w.rows;
+        let wa = Arc::new(w.clone());
+        let hinv = Arc::new(hess.hinv.clone());
+        pool::global().par_map(rows, move |r| {
+            let mut wr = wa.row(r).to_vec();
+            let mut h = (*hinv).clone();
+            sweep_row_blocks(&mut wr, &mut h, c, cap)
+        })
+    }
 }
 
 #[cfg(test)]
@@ -741,5 +995,26 @@ mod tests {
         let bn = prune_nm_on(&pooled, &w, &h, 2, 4);
         assert_eq!(an.w.data, bn.w.data);
         assert_eq!(an.sq_err, bn.sq_err);
+    }
+
+    /// The arena hot path must be bit-identical to the fresh-clone
+    /// reference implementations (deep coverage in
+    /// `rust/tests/arena_sweeps.rs`; this is the in-module smoke).
+    #[test]
+    fn arena_matches_reference_smoke() {
+        let (w, h) = setup(7, 20, 91);
+        let pool = ThreadPool::new(2);
+        let opts = ObsOpts::default();
+        let a = prune_unstructured_on(&pool, &w, &h, 0.6, &opts);
+        let b = reference::prune_unstructured_on(&pool, &w, &h, 0.6, &opts);
+        assert_eq!(a.w.data, b.w.data, "arena diverged from reference");
+        assert_eq!(a.sq_err, b.sq_err);
+        let an = prune_nm_on(&pool, &w, &h, 2, 4);
+        let bn = reference::prune_nm_on(&pool, &w, &h, 2, 4);
+        assert_eq!(an.w.data, bn.w.data);
+        let ab = prune_block_on(&pool, &w, &h, 0.5, 4);
+        let bb = reference::prune_block(&w, &h, 0.5, 4);
+        assert_eq!(ab.w.data, bb.w.data);
+        assert_eq!(ab.sq_err, bb.sq_err);
     }
 }

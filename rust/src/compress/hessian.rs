@@ -13,40 +13,65 @@
 use crate::linalg::{cholesky_inverse, Mat};
 
 /// Streaming accumulator for H = 2·Σ_batches X·Xᵀ.
+///
+/// The SYRK is cache-tiled and fanned over scoped worker threads in row
+/// bands (`Mat::xxt_acc_threads`), writing through a reusable
+/// upper-triangle tile — no intermediate d×d product matrix is ever
+/// allocated per batch, and the result is bit-identical to the serial
+/// `xxt` + `axpy` path for any thread count.
 pub struct HessianAccumulator {
     d_col: usize,
     h: Mat,
+    /// Reusable upper-triangle SYRK workspace (grown once to d², then
+    /// steady-state accumulation is allocation-free).
+    syrk_tile: Vec<f64>,
     pub n_samples: usize,
 }
 
 impl HessianAccumulator {
     pub fn new(d_col: usize) -> HessianAccumulator {
-        HessianAccumulator { d_col, h: Mat::zeros(d_col, d_col), n_samples: 0 }
+        HessianAccumulator {
+            d_col,
+            h: Mat::zeros(d_col, d_col),
+            syrk_tile: Vec::new(),
+            n_samples: 0,
+        }
     }
 
     /// Accumulate a batch X of shape d_col × n.
     pub fn add_batch(&mut self, x: &Mat) {
         assert_eq!(x.rows, self.d_col, "batch row dim != d_col");
-        let xxt = x.xxt();
-        self.h.axpy(2.0, &xxt);
+        let threads = crate::util::pool::configured_threads();
+        x.xxt_acc_threads(&mut self.h, 2.0, threads, &mut self.syrk_tile);
         self.n_samples += x.cols;
     }
 
     /// Accumulate from an f32 column-sample layout: `samples[i]` is one
     /// input vector of length d_col (the calibration-capture format).
+    ///
+    /// Samples are packed into bounded column chunks (≤1024, ~8·d_col KB)
+    /// and fed through the tiled SYRK — memory stays Θ(d_col·1024) no
+    /// matter how large the calibration capture is, instead of
+    /// materializing one transposed d_col×N matrix of every sample. The
+    /// chunk is sized so the per-chunk scoped-thread spawn cost of the
+    /// threaded SYRK stays negligible against the chunk's d²·1024/2 madds.
     pub fn add_samples(&mut self, samples: &[Vec<f32>]) {
-        if samples.is_empty() {
-            return;
-        }
-        let n = samples.len();
-        let mut x = Mat::zeros(self.d_col, n);
-        for (j, s) in samples.iter().enumerate() {
-            assert_eq!(s.len(), self.d_col);
-            for i in 0..self.d_col {
-                x.data[i * n + j] = s[i] as f64;
+        const CHUNK: usize = 1024;
+        let d = self.d_col;
+        let mut start = 0;
+        while start < samples.len() {
+            let end = (start + CHUNK).min(samples.len());
+            let n = end - start;
+            let mut x = Mat::zeros(d, n);
+            for (j, s) in samples[start..end].iter().enumerate() {
+                assert_eq!(s.len(), d, "sample dim != d_col");
+                for i in 0..d {
+                    x.data[i * n + j] = s[i] as f64;
+                }
             }
+            self.add_batch(&x);
+            start = end;
         }
-        self.add_batch(&x);
     }
 
     /// The raw accumulated H (2XXᵀ), without dampening.
@@ -103,6 +128,16 @@ impl LayerHessian {
         self.h.rows
     }
 
+    /// Re-dampened copy: H + extra·I, re-inverted. The recovery step of
+    /// the non-SPD damped-retry path (`compress::sweep::run_with_redamp`)
+    /// when a sweep detects a numerically corrupted H⁻¹.
+    pub fn redamped(&self, extra: f64) -> crate::util::error::Result<LayerHessian> {
+        let mut h = self.h.clone();
+        h.add_diag(extra);
+        let hinv = cholesky_inverse(&h)?;
+        Ok(LayerHessian { h, hinv, damp: self.damp + extra, n_samples: self.n_samples })
+    }
+
     /// Synthetic well-conditioned Hessian for tests/benches.
     pub fn synthetic(d_col: usize, seed: u64) -> LayerHessian {
         let x = Mat::randn(d_col, d_col * 2 + 8, seed);
@@ -156,6 +191,55 @@ mod tests {
         assert!(h.damp > 0.0);
         let prod = h.h.matmul(&h.hinv);
         assert!(prod.dist(&Mat::eye(16)) < 1e-4);
+    }
+
+    /// Chunked `add_samples` (bounded packing) must agree with a single
+    /// monolithic batch across a chunk boundary (>1024 samples).
+    #[test]
+    fn add_samples_chunking_matches_one_batch() {
+        let d = 5;
+        let n = 1100; // crosses the 1024-sample chunk boundary
+        let big = Mat::randn(d, n, 21);
+        let samples: Vec<Vec<f32>> =
+            (0..n).map(|j| (0..d).map(|i| big.at(i, j) as f32).collect()).collect();
+        let mut chunked = HessianAccumulator::new(d);
+        chunked.add_samples(&samples);
+        // Reference: one batch from the same f32-rounded values.
+        let mut xf = Mat::zeros(d, n);
+        for j in 0..n {
+            for i in 0..d {
+                xf.data[i * n + j] = samples[j][i] as f64;
+            }
+        }
+        let mut whole = HessianAccumulator::new(d);
+        whole.add_batch(&xf);
+        assert_eq!(chunked.n_samples, n);
+        let scale = whole.raw().diag_mean().abs().max(1.0);
+        assert!(
+            chunked.raw().dist(&whole.raw()) < 1e-9 * scale,
+            "dist {}",
+            chunked.raw().dist(&whole.raw())
+        );
+        // Empty input is a no-op.
+        let mut empty = HessianAccumulator::new(d);
+        empty.add_samples(&[]);
+        assert_eq!(empty.n_samples, 0);
+    }
+
+    /// `redamped` must add exactly `extra` to the diagonal and stay an
+    /// exact inverse pair.
+    #[test]
+    fn redamped_shifts_diagonal_and_reinverts() {
+        let x = Mat::randn(6, 30, 22);
+        let h = LayerHessian::from_inputs(&x, 1e-8);
+        let extra = 0.5;
+        let h2 = h.redamped(extra).unwrap();
+        for i in 0..6 {
+            assert!((h2.h.at(i, i) - h.h.at(i, i) - extra).abs() < 1e-12);
+        }
+        assert_eq!(h2.damp, h.damp + extra);
+        let prod = h2.h.matmul(&h2.hinv);
+        assert!(prod.dist(&Mat::eye(6)) < 1e-6);
     }
 
     #[test]

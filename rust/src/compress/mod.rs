@@ -1,7 +1,12 @@
 //! The paper's contribution: exact layer-wise compression.
 //!
-//! * [`hessian`] — layer Hessian H = 2·X·Xᵀ accumulation + dampening +
-//!   SPD inversion (shared across all rows of a layer).
+//! * [`hessian`] — layer Hessian H = 2·X·Xᵀ accumulation (tiled,
+//!   multi-threaded SYRK) + dampening + SPD inversion (shared across all
+//!   rows of a layer).
+//! * [`sweep`] — the allocation-free compacted sweep engine every hot
+//!   path runs on: per-worker scratch arenas, fused
+//!   compensation/downdate/compaction steps, non-SPD detection with
+//!   damped retry.
 //! * [`exact_obs`] — **ExactOBS** (Section 4): Algorithm 1 row sweeps with
 //!   Lemma-1 inverse updates, the Algorithm-2 global mask step, group-OBS
 //!   reconstruction, N:M and block-sparsity variants.
@@ -15,6 +20,7 @@
 
 pub mod hessian;
 pub mod quant;
+pub mod sweep;
 pub mod exact_obs;
 pub mod obq;
 pub mod baselines;

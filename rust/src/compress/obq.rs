@@ -13,9 +13,11 @@
 
 use super::hessian::LayerHessian;
 use super::quant::{fit_grids_per_row, Grid, GridSearch};
+use super::sweep::{self, NonSpd};
 use super::CompressResult;
 use crate::linalg::{remove_row_col, Mat};
 use crate::util::pool::{self, ThreadPool};
+use crate::util::scratch;
 use std::sync::Arc;
 
 /// Options for OBQ.
@@ -40,6 +42,14 @@ impl ObqOpts {
 
 /// Algorithm 3 on a single row: quantize ALL weights, one per step.
 /// Returns the quantized row; every value lies exactly on `grid`.
+///
+/// This is the textbook full-width **reference** kernel pinned by the
+/// conformance fixtures; production sweeps go through [`quantize`] /
+/// [`quantize_with_grids_on`], which run the compacted arena path
+/// ([`sweep::quant_sweep`]) asserted bit-identical to this one. A
+/// non-positive [H⁻¹]ₚₚ trips an `assert` in every build (loud failure)
+/// instead of the historical silent `.max(1e-300)` clamp; the arena path
+/// instead surfaces a `NonSpd` error and recovers via the damped retry.
 pub fn quantize_row(w: &[f64], hinv_src: &Mat, grid: &Grid, opts: &ObqOpts) -> Vec<f64> {
     let d = w.len();
     let mut w = w.to_vec();
@@ -69,8 +79,15 @@ pub fn quantize_row(w: &[f64], hinv_src: &Mat, grid: &Grid, opts: &ObqOpts) -> V
                 if !alive[j] {
                     continue;
                 }
+                let diag = hinv.at(j, j);
+                // Loud in every build — see `sweep_row` for why a clamp
+                // (or a compiled-out check) is worse than a panic here.
+                assert!(
+                    diag > 0.0 && diag.is_finite(),
+                    "non-SPD H⁻¹: diag[{j}] = {diag:e} — Hessian dampening too small"
+                );
                 let e = grid.quant(w[j]) - w[j];
-                let score = e * e / hinv.at(j, j).max(1e-300);
+                let score = e * e / diag;
                 if score < best {
                     best = score;
                     p = j;
@@ -79,7 +96,11 @@ pub fn quantize_row(w: &[f64], hinv_src: &Mat, grid: &Grid, opts: &ObqOpts) -> V
         }
         debug_assert!(p != usize::MAX);
         let q = grid.quant(w[p]);
-        let diag = hinv.at(p, p).max(1e-300);
+        let diag = hinv.at(p, p);
+        assert!(
+            diag > 0.0 && diag.is_finite(),
+            "non-SPD H⁻¹: diag[{p}] = {diag:e} — Hessian dampening too small"
+        );
         let f = (w[p] - q) / diag;
         let hrow = hinv.row(p).to_vec();
         for j in 0..d {
@@ -112,10 +133,48 @@ pub fn quantize_with_grids(
 }
 
 /// [`quantize_with_grids`] on an explicit pool: the Algorithm-3 sweep of
-/// each row is an independent job with a private H⁻¹ copy; results are
-/// stitched in row order, so the output is bit-identical for any pool
-/// size.
+/// each row is an independent arena job on the worker's scratch (zero
+/// steady-state allocation); results are stitched in row order, so the
+/// output is bit-identical for any pool size. Non-SPD corruption
+/// triggers the layer-level damped retry.
 pub fn quantize_with_grids_on(
+    pool: &ThreadPool,
+    w: &Mat,
+    hess: &LayerHessian,
+    grids: &[Grid],
+    opts: &ObqOpts,
+) -> CompressResult {
+    assert_eq!(grids.len(), w.rows);
+    let rows = w.rows;
+    let d = w.cols;
+    let wa = Arc::new(w.clone());
+    let grids: Arc<Vec<Grid>> = Arc::new(grids.to_vec());
+    let outlier = opts.outlier_heuristic;
+    let new_rows = sweep::run_with_redamp(hess, "OBQ quantization sweeps", move |h| {
+        let wa = Arc::clone(&wa);
+        let grids = Arc::clone(&grids);
+        let hinv = Arc::new(h.hinv.clone());
+        pool.par_map(rows, move |r| {
+            scratch::with(|s| {
+                sweep::quant_sweep(s, wa.row(r), &hinv, &grids[r], outlier)?;
+                Ok(s.out()[..d].to_vec())
+            })
+        })
+        .into_iter()
+        .collect::<Result<Vec<_>, NonSpd>>()
+    });
+    let mut out = w.clone();
+    for (r, q) in new_rows.into_iter().enumerate() {
+        out.row_mut(r).copy_from_slice(&q);
+    }
+    let err = super::layer_sq_err(w, &out, &hess.h);
+    CompressResult::new(out, err)
+}
+
+/// Pre-arena reference of [`quantize_with_grids_on`] (private H⁻¹ clone
+/// per row, full-width [`quantize_row`]) — kept for the bit-identity
+/// property suite and the before/after perf bench.
+pub fn quantize_with_grids_ref_on(
     pool: &ThreadPool,
     w: &Mat,
     hess: &LayerHessian,
@@ -142,8 +201,51 @@ pub fn quantize_with_grids_on(
 /// Quantize only the non-zero weights of an already-pruned matrix (the
 /// paper's joint sparse+quant database: "sparsify layers first and then
 /// apply quantization to the remaining weights"). Pruned (zero) weights
-/// stay zero; the sweep treats them as pre-eliminated.
+/// stay zero; the sweep treats them as pre-eliminated. Arena path: the
+/// zero positions are eliminated from the compacted H⁻¹ in place — no
+/// submatrix extraction, no private clone.
 pub fn quantize_sparse(w: &Mat, hess: &LayerHessian, opts: &ObqOpts) -> CompressResult {
+    quantize_sparse_on(pool::global(), w, hess, opts)
+}
+
+/// [`quantize_sparse`] on an explicit pool.
+pub fn quantize_sparse_on(
+    pool: &ThreadPool,
+    w: &Mat,
+    hess: &LayerHessian,
+    opts: &ObqOpts,
+) -> CompressResult {
+    let grids = fit_grids_per_row(w, opts.bits, opts.symmetric, opts.search);
+    let rows = w.rows;
+    let d = w.cols;
+    let wa = Arc::new(w.clone());
+    let grids = Arc::new(grids);
+    let outlier = opts.outlier_heuristic;
+    let new_rows = sweep::run_with_redamp(hess, "sparse OBQ sweeps", move |h| {
+        let wa = Arc::clone(&wa);
+        let grids = Arc::clone(&grids);
+        let hinv = Arc::new(h.hinv.clone());
+        pool.par_map(rows, move |r| {
+            scratch::with(|s| {
+                sweep::quant_sweep_sparse(s, wa.row(r), &hinv, &grids[r], outlier)?;
+                Ok(s.out()[..d].to_vec())
+            })
+        })
+        .into_iter()
+        .collect::<Result<Vec<_>, NonSpd>>()
+    });
+    let mut out = w.clone();
+    for (r, q) in new_rows.into_iter().enumerate() {
+        out.row_mut(r).copy_from_slice(&q);
+    }
+    let err = super::layer_sq_err(w, &out, &hess.h);
+    CompressResult::new(out, err)
+}
+
+/// Pre-arena reference of [`quantize_sparse`] (clone, full-width
+/// eliminations, submatrix extraction) — kept for the bit-identity
+/// property suite.
+pub fn quantize_sparse_ref(w: &Mat, hess: &LayerHessian, opts: &ObqOpts) -> CompressResult {
     let grids = fit_grids_per_row(w, opts.bits, opts.symmetric, opts.search);
     let rows = w.rows;
     let wa = Arc::new(w.clone());
@@ -155,10 +257,12 @@ pub fn quantize_sparse(w: &Mat, hess: &LayerHessian, opts: &ObqOpts) -> Compress
         let d = row.len();
         let mut h = (*hinv).clone();
         // Eliminate pruned coordinates from H⁻¹ first so compensations
-        // only flow through surviving weights.
+        // only flow through surviving weights (one pivot buffer reused
+        // across the many per-row eliminations).
+        let mut rowbuf = Vec::new();
         for p in 0..d {
             if row[p] == 0.0 {
-                remove_row_col(&mut h, p);
+                crate::linalg::remove_row_col_into(&mut h, p, &mut rowbuf);
             }
         }
         let nz: Vec<usize> = (0..d).filter(|&p| row[p] != 0.0).collect();

@@ -1,0 +1,628 @@
+//! The allocation-free, compacted ExactOBS/OBQ sweep engine.
+//!
+//! The textbook kernels in [`super::exact_obs`] and [`super::obq`] spend
+//! Θ(d²) per Lemma-1 step on a *full-width* H⁻¹ whose eliminated rows
+//! and columns are zero — dead traffic that grows as the sweep deepens —
+//! and heap-allocate a fresh d×d H⁻¹ clone plus per-step pivot rows for
+//! every row job. This module reworks the per-step kernel three ways,
+//! while staying **bit-identical** to the reference implementations
+//! (asserted by `rust/tests/arena_sweeps.rs` and the perf bench):
+//!
+//! 1. **Scratch arenas** ([`crate::util::scratch`]): every buffer a row
+//!    sweep needs is checked out of the worker's persistent arena and
+//!    reset with `copy_from_slice` — zero heap allocation in steady
+//!    state.
+//! 2. **Fused streaming step**: the OBS weight compensation, the Lemma-1
+//!    rank-1 downdate, and the live-set compaction are one pass over
+//!    H⁻¹ — each surviving row is read once and written once.
+//! 3. **Physical compaction**: after eliminating live position `q`, row
+//!    and column `q` are *removed* (not zeroed), so step `t` of a sweep
+//!    touches (d−t)² entries instead of d². A full-depth sweep does
+//!    Σ(d−t)² ≈ d³/3 work instead of d³. The live-index list stays
+//!    sorted, so argmin scan order — and therefore tie-breaking — is
+//!    identical to the full-width reference scan.
+//!
+//! Bit-identity argument: every arithmetic expression (`w[j] − f·p[j]`,
+//! `h[r][j] − (c_r/p_q)·p[j]`, score `w²/diag`, the small-Cholesky
+//! recurrences) is evaluated on the same values in the same order as the
+//! reference; compaction only *relocates* results. IEEE-754 ops don't
+//! depend on storage location, so outputs match to the last ulp.
+//!
+//! **Non-SPD handling**: the reference kernels' silent `.max(1e-300)`
+//! diagonal clamp is gone. A non-positive or non-finite [H⁻¹]ₚₚ — the
+//! signature of a numerically corrupted (non-SPD) inverse — trips a
+//! `debug_assert!` in debug builds (tests fail loudly) and surfaces as a
+//! [`NonSpd`] error in release builds, which [`run_with_redamp`] handles
+//! by re-dampening H (×10 escalation, mirroring
+//! `HessianAccumulator::finalize`) and re-running the layer, instead of
+//! silently emitting garbage compensations.
+
+use super::hessian::LayerHessian;
+use super::quant::Grid;
+use crate::linalg::Mat;
+use crate::util::logging::{self, Level};
+use crate::util::scratch::Scratch;
+
+/// A sweep step found a non-positive (or non-finite) [H⁻¹]ₚₚ: the
+/// working inverse is no longer numerically SPD. `diag` is NaN when a
+/// group-formula Cholesky failed instead of a scalar diagonal.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NonSpd {
+    /// Original column index at which corruption was detected.
+    pub index: usize,
+    /// The offending diagonal value.
+    pub diag: f64,
+}
+
+impl std::fmt::Display for NonSpd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "non-SPD H⁻¹ at column {} (diag {:e})", self.index, self.diag)
+    }
+}
+
+/// Check a pivot diagonal. Debug builds fail loudly; release builds
+/// return the [`NonSpd`] error that drives the damped-retry path.
+#[inline]
+fn spd_diag(diag: f64, orig_index: usize) -> Result<f64, NonSpd> {
+    if diag > 0.0 && diag.is_finite() {
+        Ok(diag)
+    } else {
+        debug_assert!(
+            diag > 0.0 && diag.is_finite(),
+            "non-SPD H⁻¹: diag[{orig_index}] = {diag:e} — Hessian dampening too small"
+        );
+        Err(NonSpd { index: orig_index, diag })
+    }
+}
+
+/// Load row state into the arena: compacted H⁻¹ copy, live weights,
+/// sorted live-index list, alive mask, cleared trace. Returns d.
+fn begin(s: &mut Scratch, w: &[f64], hinv: &Mat) -> usize {
+    let d = w.len();
+    debug_assert_eq!(hinv.rows, d, "H⁻¹ rows != row width");
+    debug_assert_eq!(hinv.cols, d, "H⁻¹ not square");
+    s.ensure(d);
+    s.hinv[..d * d].copy_from_slice(&hinv.data);
+    s.w[..d].copy_from_slice(w);
+    s.out[..d].copy_from_slice(w);
+    s.live.clear();
+    s.live.reserve(d);
+    s.live.extend(0..d);
+    for a in s.alive[..d].iter_mut() {
+        *a = true;
+    }
+    s.trace_order.clear();
+    s.trace_order.reserve(d);
+    s.trace_dloss.clear();
+    s.trace_dloss.reserve(d);
+    d
+}
+
+/// Eliminate live position `q` from the compacted state (`m` live):
+/// one streaming pass fusing the OBS weight compensation
+/// (`w[r] −= f·p[r]`, skipped when `compensate` is false), the Lemma-1
+/// rank-1 downdate (`h[r][j] −= (c_r/p_q)·p[j]`), and the removal of
+/// row/column `q`. Returns the new live count `m − 1`.
+///
+/// The in-place compaction is safe because destinations never pass
+/// sources: compacted row `dr·(m−1)` ends strictly before source row
+/// `r·m` for `r > q`, and within a row the shifted tail writes `j−1`
+/// after reading `j`.
+fn eliminate(s: &mut Scratch, m: usize, q: usize, f: f64, compensate: bool) -> usize {
+    debug_assert!(q < m);
+    debug_assert_eq!(s.live.len(), m);
+    let nm = m - 1;
+    s.pivot[..m].copy_from_slice(&s.hinv[q * m..(q + 1) * m]);
+    {
+        let pivot = &s.pivot[..m];
+        let inv_d = 1.0 / pivot[q];
+        let h = &mut s.hinv;
+        let w = &mut s.w;
+        let mut dr = 0usize;
+        for r in 0..m {
+            if r == q {
+                continue;
+            }
+            if compensate {
+                w[dr] = w[r] - f * pivot[r];
+            } else {
+                w[dr] = w[r];
+            }
+            let src = r * m;
+            let dst = dr * nm;
+            let cr = h[src + q];
+            if r > q {
+                // Compacted row ends strictly before the source row
+                // starts ((r−1)·(m−1)+(m−1) ≤ r·(m−1) < r·m): disjoint
+                // slices, one fused downdate+compact pass.
+                let (dpart, spart) = h.split_at_mut(src);
+                let drow = &mut dpart[dst..dst + nm];
+                let srow = &spart[..m];
+                if cr == 0.0 {
+                    // Zero column entry: the reference kernel skips the
+                    // rank-1 update for this row — compact only.
+                    drow[..q].copy_from_slice(&srow[..q]);
+                    drow[q..].copy_from_slice(&srow[q + 1..]);
+                } else {
+                    let fr = cr * inv_d;
+                    for j in 0..q {
+                        drow[j] = srow[j] - fr * pivot[j];
+                    }
+                    for j in q + 1..m {
+                        drow[j - 1] = srow[j] - fr * pivot[j];
+                    }
+                }
+            } else {
+                // r < q: destination r·(m−1) overlaps the source row.
+                // Downdate in place at full width (the column-q value is
+                // discarded by the compaction), then memmove-compact.
+                if cr != 0.0 {
+                    let fr = cr * inv_d;
+                    let row = &mut h[src..src + m];
+                    for (x, pv) in row.iter_mut().zip(pivot) {
+                        *x -= fr * pv;
+                    }
+                }
+                h.copy_within(src..src + q, dst);
+                h.copy_within(src + q + 1..src + m, dst + q);
+            }
+            dr += 1;
+        }
+    }
+    let p = s.live.remove(q);
+    s.alive[p] = false;
+    nm
+}
+
+/// Scatter the surviving compacted weights back into `s.out` (original
+/// indexing). Eliminated positions were assigned as they were removed.
+fn scatter(s: &mut Scratch, m: usize) {
+    for i in 0..m {
+        s.out[s.live[i]] = s.w[i];
+    }
+}
+
+/// Algorithm 1 on one row, arena edition: prune `k` weights. The final
+/// row is left in `s.out()[..d]`, the trace in `s.trace_order` /
+/// `s.trace_dloss`. Bit-identical to [`super::exact_obs::sweep_row`].
+pub fn prune_sweep(
+    s: &mut Scratch,
+    w_in: &[f64],
+    hinv: &Mat,
+    k: usize,
+    mut eligible: impl FnMut(usize, &[bool]) -> bool,
+) -> Result<(), NonSpd> {
+    let d = begin(s, w_in, hinv);
+    let mut m = d;
+    for _ in 0..k.min(d) {
+        let mut best = usize::MAX;
+        let mut best_score = f64::INFINITY;
+        {
+            let alive = &s.alive[..d];
+            for (i, &p) in s.live.iter().enumerate() {
+                if !eligible(p, alive) {
+                    continue;
+                }
+                let diag = spd_diag(s.hinv[i * m + i], p)?;
+                let score = s.w[i] * s.w[i] / diag;
+                if score < best_score {
+                    best_score = score;
+                    best = i;
+                }
+            }
+        }
+        if best == usize::MAX {
+            break; // no eligible weight left (N:M saturated)
+        }
+        let q = best;
+        let p = s.live[q];
+        let f = s.w[q] / s.hinv[q * m + q];
+        s.trace_order.push(p);
+        // δL = ½·w_p²/[H⁻¹]ₚₚ — see `sweep_row` for why the ½ is kept.
+        s.trace_dloss.push(0.5 * best_score);
+        s.out[p] = 0.0;
+        m = eliminate(s, m, q, f, true);
+    }
+    scatter(s, m);
+    Ok(())
+}
+
+/// Algorithm 3 on one row, arena edition: quantize every weight onto
+/// `grid`. The quantized row is left in `s.out()[..d]`. Bit-identical
+/// to [`super::obq::quantize_row`].
+pub fn quant_sweep(
+    s: &mut Scratch,
+    w_in: &[f64],
+    hinv: &Mat,
+    grid: &Grid,
+    outlier_heuristic: bool,
+) -> Result<(), NonSpd> {
+    let d = begin(s, w_in, hinv);
+    quant_sweep_core(s, d, grid, outlier_heuristic)
+}
+
+/// [`quant_sweep`] restricted to the non-zero weights of an
+/// already-pruned row (the paper's joint sparse+quant path): the zero
+/// positions are pre-eliminated from the compacted H⁻¹ (pure Lemma-1
+/// downdates, no compensation) and stay exactly zero in the output.
+/// Bit-identical to [`super::obq::quantize_sparse`]'s per-row job.
+pub fn quant_sweep_sparse(
+    s: &mut Scratch,
+    w_in: &[f64],
+    hinv: &Mat,
+    grid: &Grid,
+    outlier_heuristic: bool,
+) -> Result<(), NonSpd> {
+    let d = begin(s, w_in, hinv);
+    let mut m = d;
+    let mut removed = 0usize;
+    for p in 0..d {
+        if w_in[p] == 0.0 {
+            // Ascending originals: compacted position is p minus the
+            // zeros already removed before it. `begin` copied the zero
+            // into `out`, so the position stays bitwise untouched.
+            m = eliminate(s, m, p - removed, 0.0, false);
+            removed += 1;
+        }
+    }
+    quant_sweep_core(s, m, grid, outlier_heuristic)
+}
+
+/// The OBQ per-step loop on an already-prepared compacted state.
+fn quant_sweep_core(
+    s: &mut Scratch,
+    mut m: usize,
+    grid: &Grid,
+    outlier_heuristic: bool,
+) -> Result<(), NonSpd> {
+    let half_delta = grid.delta() / 2.0;
+    while m > 0 {
+        let mut q = usize::MAX;
+        if outlier_heuristic {
+            // Quantize any weight pushed further than Δ/2 off the grid
+            // by earlier compensations immediately (worst first).
+            let mut worst = half_delta;
+            for (i, wi) in s.w[..m].iter().enumerate() {
+                let e = (grid.quant(*wi) - wi).abs();
+                if e > worst {
+                    worst = e;
+                    q = i;
+                }
+            }
+        }
+        if q == usize::MAX {
+            // Normal selection: argmin (quant(w_p)−w_p)²/[H⁻¹]ₚₚ.
+            let mut best = f64::INFINITY;
+            for i in 0..m {
+                let wi = s.w[i];
+                let e = grid.quant(wi) - wi;
+                let diag = spd_diag(s.hinv[i * m + i], s.live[i])?;
+                let score = e * e / diag;
+                if score < best {
+                    best = score;
+                    q = i;
+                }
+            }
+        }
+        debug_assert!(q != usize::MAX);
+        let wq = s.w[q];
+        let qv = grid.quant(wq);
+        let diag = spd_diag(s.hinv[q * m + q], s.live[q])?;
+        let f = (wq - qv) / diag;
+        s.out[s.live[q]] = qv;
+        m = eliminate(s, m, q, f, true);
+    }
+    Ok(())
+}
+
+/// In-place Cholesky on an n×n row-major slice, mirroring
+/// [`crate::linalg::cholesky`]'s reduction order exactly (bit-identical
+/// L in the lower triangle; the strict upper triangle is left stale and
+/// never read). Returns false when the matrix is not numerically SPD.
+fn chol_in_place(a: &mut [f64], n: usize) -> bool {
+    for i in 0..n {
+        for j in 0..i {
+            let mut acc = a[i * n + j];
+            for k in 0..j {
+                acc -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] = acc / a[j * n + j];
+        }
+        let mut acc = a[i * n + i];
+        for k in 0..i {
+            acc -= a[i * n + k] * a[i * n + k];
+        }
+        if !(acc > 0.0) {
+            return false;
+        }
+        a[i * n + i] = acc.sqrt();
+    }
+    true
+}
+
+/// In-place SPD solve given the in-place factor from [`chol_in_place`],
+/// mirroring [`crate::linalg::cholesky_solve`]'s two passes exactly.
+fn chol_solve_in_place(l: &[f64], n: usize, b: &mut [f64]) {
+    for i in 0..n {
+        let mut acc = b[i];
+        for k in 0..i {
+            acc -= l[i * n + k] * b[k];
+        }
+        b[i] = acc / l[i * n + i];
+    }
+    for i in (0..n).rev() {
+        let xi = b[i] / l[i * n + i];
+        b[i] = xi;
+        for k in 0..i {
+            b[k] -= l[i * n + k] * xi;
+        }
+    }
+}
+
+/// Block-granular Algorithm 1 on one row (Eq. 5 group formulas), arena
+/// edition: greedily eliminate `k_blocks` aligned blocks of `c`
+/// consecutive weights. Trace order holds *block* indices. The Cholesky
+/// and solve run in the arena's group workspace; a non-SPD block is
+/// skipped, exactly like the reference. Bit-identical to the private
+/// reference kernel behind [`super::exact_obs::sweep_all_rows_block`].
+pub fn block_sweep(s: &mut Scratch, w_in: &[f64], hinv: &Mat, c: usize, k_blocks: usize) {
+    let d = begin(s, w_in, hinv);
+    s.ensure_group(c);
+    let mut m = d;
+    let tail = d % c; // trailing partial block stays dense forever
+    let n_blocks = d / c;
+    for _ in 0..k_blocks.min(n_blocks) {
+        let live_blocks = (m - tail) / c;
+        let mut best = usize::MAX;
+        let mut best_score = f64::INFINITY;
+        for bi in 0..live_blocks {
+            let base = bi * c;
+            // Gather the c×c live-block submatrix of the compacted H⁻¹.
+            for ri in 0..c {
+                for ci in 0..c {
+                    s.ga[ri * c + ci] = s.hinv[(base + ri) * m + base + ci];
+                }
+            }
+            if !chol_in_place(&mut s.ga, c) {
+                continue; // non-SPD block: ineligible this step
+            }
+            for ri in 0..c {
+                s.gb[ri] = s.w[base + ri];
+            }
+            s.gy[..c].copy_from_slice(&s.gb[..c]);
+            chol_solve_in_place(&s.ga, c, &mut s.gy);
+            // Group score w_Pᵀ((H⁻¹)_P)⁻¹w_P, ascending-index reduction.
+            let mut score = 0.0;
+            for ri in 0..c {
+                score += s.gb[ri] * s.gy[ri];
+            }
+            if score < best_score {
+                best_score = score;
+                best = bi;
+                s.gz[..c].copy_from_slice(&s.gy[..c]);
+            }
+        }
+        if best == usize::MAX {
+            break;
+        }
+        let base = best * c;
+        let block_id = s.live[base] / c;
+        // Group update δ = −H⁻¹[:,P]·y over the live weights.
+        for r in 0..m {
+            let mut acc = 0.0;
+            for (bi, yb) in s.gz[..c].iter().enumerate() {
+                acc += s.hinv[r * m + base + bi] * yb;
+            }
+            s.w[r] -= acc;
+        }
+        // Successive Lemma-1 eliminations of the block's c positions
+        // (each shifts the next one into compacted position `base`).
+        for _ in 0..c {
+            s.out[s.live[base]] = 0.0;
+            m = eliminate(s, m, base, 0.0, false);
+        }
+        s.trace_order.push(block_id);
+        s.trace_dloss.push(0.5 * best_score.max(0.0));
+    }
+    scatter(s, m);
+}
+
+/// Group-OBS closed-form reconstruction (remove `pruned` from the
+/// original dense row in one shot), arena edition: the k×k gather,
+/// Cholesky and solve all run in the group workspace. The result is
+/// left in `s.out()[..d]`. Bit-identical to
+/// [`super::exact_obs::group_obs_reconstruct`], except that a non-SPD
+/// (H⁻¹)_P surfaces as [`NonSpd`] (driving the damped retry) instead of
+/// panicking.
+pub fn group_reconstruct(
+    s: &mut Scratch,
+    w: &[f64],
+    hinv: &Mat,
+    pruned: &[usize],
+) -> Result<(), NonSpd> {
+    let d = w.len();
+    s.ensure(d);
+    s.out[..d].copy_from_slice(w);
+    if pruned.is_empty() {
+        return Ok(());
+    }
+    let kp = pruned.len();
+    s.ensure_group(kp);
+    for (bi, &pi) in pruned.iter().enumerate() {
+        for (bj, &pj) in pruned.iter().enumerate() {
+            s.ga[bi * kp + bj] = hinv.at(pi, pj);
+        }
+        s.gy[bi] = w[pi];
+    }
+    let spd = chol_in_place(&mut s.ga, kp);
+    debug_assert!(spd, "(H⁻¹)_P not SPD — Hessian dampening too small");
+    if !spd {
+        return Err(NonSpd { index: pruned[0], diag: f64::NAN });
+    }
+    chol_solve_in_place(&s.ga, kp, &mut s.gy);
+    // δ = −H⁻¹[:, P] · y on every coordinate, then zero the pruned set.
+    for j in 0..d {
+        let mut acc = 0.0;
+        for (bi, &p) in pruned.iter().enumerate() {
+            acc += hinv.at(j, p) * s.gy[bi];
+        }
+        s.out[j] -= acc;
+    }
+    for &p in pruned {
+        s.out[p] = 0.0;
+    }
+    Ok(())
+}
+
+/// Number of ×10 dampening escalations attempted before giving up.
+const REDAMP_ATTEMPTS: usize = 8;
+
+/// Run a layer-level sweep, recovering from [`NonSpd`] corruption by
+/// re-dampening H (×10 escalation from max(10·damp, 1e-10·mean(diag)),
+/// [`REDAMP_ATTEMPTS`] rounds — a fixed count, so even layers whose
+/// `finalize` already escalated to heavy dampening still get retries)
+/// and re-running. The healthy path costs one closure call; the retry
+/// path is rare enough that its re-inversion cost is irrelevant.
+/// Panics — loudly, with the layer context — when even the strongest
+/// dampening cannot restore SPD.
+pub fn run_with_redamp<T>(
+    hess: &LayerHessian,
+    what: &str,
+    f: impl Fn(&LayerHessian) -> Result<T, NonSpd>,
+) -> T {
+    match f(hess) {
+        Ok(t) => return t,
+        Err(e) => {
+            let msg = format!("{what}: {e}; re-dampening H and retrying");
+            logging::log(Level::Warn, "sweep", &msg);
+        }
+    }
+    let mean_diag = hess.h.diag_mean().abs().max(1e-12);
+    let mut extra = (hess.damp * 10.0).max(mean_diag * 1e-10);
+    for _ in 0..REDAMP_ATTEMPTS {
+        if let Ok(redamped) = hess.redamped(extra) {
+            match f(&redamped) {
+                Ok(t) => return t,
+                Err(e) => logging::log(
+                    Level::Warn,
+                    "sweep",
+                    &format!("{what}: still {e} at extra damp {extra:e}"),
+                ),
+            }
+        }
+        extra *= 10.0;
+    }
+    panic!(
+        "{what}: H⁻¹ not SPD even after re-dampening ({REDAMP_ATTEMPTS} ×10 escalations) — \
+         calibration data degenerate"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{cholesky, cholesky_solve, remove_row_col};
+
+    fn layer(d: usize, seed: u64) -> LayerHessian {
+        LayerHessian::from_inputs(&Mat::randn(d, d * 2 + 8, seed), 1e-8)
+    }
+
+    /// `eliminate` must reproduce `remove_row_col` exactly on the live
+    /// submatrix, step after step.
+    #[test]
+    fn eliminate_matches_remove_row_col() {
+        let d = 9;
+        let h = layer(d, 3);
+        let mut s = Scratch::new();
+        let w: Vec<f64> = (0..d).map(|i| i as f64 * 0.3 - 1.0).collect();
+        begin(&mut s, &w, &h.hinv);
+        let mut reference = h.hinv.clone();
+        let mut m = d;
+        for &p in &[4usize, 7, 0] {
+            let q = s.live.iter().position(|&x| x == p).unwrap();
+            m = eliminate(&mut s, m, q, 0.0, false);
+            remove_row_col(&mut reference, p);
+            for (i, &oi) in s.live.iter().enumerate() {
+                for (j, &oj) in s.live.iter().enumerate() {
+                    assert_eq!(
+                        s.hinv[i * m + j],
+                        reference.at(oi, oj),
+                        "after removing {p}: ({oi},{oj})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The in-place small Cholesky + solve must be bit-identical to the
+    /// Mat-based routines they mirror.
+    #[test]
+    fn in_place_cholesky_matches_mat_version() {
+        let d = 7;
+        let h = layer(d, 5);
+        let mut a: Vec<f64> = h.h.data.clone();
+        assert!(chol_in_place(&mut a, d));
+        let l = cholesky(&h.h).unwrap();
+        for i in 0..d {
+            for j in 0..=i {
+                assert_eq!(a[i * d + j], l.at(i, j), "L[{i}][{j}]");
+            }
+        }
+        let b: Vec<f64> = (0..d).map(|i| (i as f64) - 2.0).collect();
+        let mut x = b.clone();
+        chol_solve_in_place(&a, d, &mut x);
+        let want = cholesky_solve(&l, &b);
+        assert_eq!(x, want);
+    }
+
+    #[test]
+    fn chol_in_place_rejects_indefinite() {
+        let mut a = vec![1.0, 0.0, 0.0, -1.0];
+        assert!(!chol_in_place(&mut a, 2));
+        let mut nan = vec![f64::NAN; 4];
+        assert!(!chol_in_place(&mut nan, 2));
+    }
+
+    /// The damped-retry driver: first attempt fails, a re-dampened
+    /// Hessian succeeds, the result flows through.
+    #[test]
+    fn redamp_retry_recovers() {
+        let h = layer(6, 11);
+        let out = run_with_redamp(&h, "test", |hh| {
+            if hh.damp > h.damp {
+                Ok(hh.damp)
+            } else {
+                Err(NonSpd { index: 0, diag: -1.0 })
+            }
+        });
+        assert!(out > h.damp);
+    }
+
+    #[test]
+    #[should_panic(expected = "not SPD even after re-dampening")]
+    fn redamp_retry_gives_up_loudly() {
+        let h = layer(4, 13);
+        run_with_redamp::<()>(&h, "test", |_| Err(NonSpd { index: 0, diag: 0.0 }));
+    }
+
+    /// Sparse pre-elimination must leave exactly the non-zero positions
+    /// live, in ascending order.
+    #[test]
+    fn sparse_pre_elimination_tracks_nonzeros() {
+        let d = 8;
+        let h = layer(d, 17);
+        let mut w: Vec<f64> = (0..d).map(|i| i as f64 + 1.0).collect();
+        w[2] = 0.0;
+        w[5] = 0.0;
+        let mut s = Scratch::new();
+        let grid = Grid { scale: 0.5, zero: 0.0, maxq: 15.0 };
+        quant_sweep_sparse(&mut s, &w, &h.hinv, &grid, false).unwrap();
+        assert_eq!(s.out()[2], 0.0);
+        assert_eq!(s.out()[5], 0.0);
+        for (i, &v) in s.out()[..d].iter().enumerate() {
+            if i != 2 && i != 5 {
+                assert_eq!(v, grid.quant(v), "position {i} off grid");
+            }
+        }
+    }
+}

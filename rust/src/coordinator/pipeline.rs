@@ -646,7 +646,9 @@ fn act_quant_penalty(w_hat: &Mat, x: &Mat, bits: u32) -> f64 {
     for v in dx.data.iter_mut() {
         *v -= grid.quant(*v);
     }
-    let y = w_hat.matmul(&dx);
+    // w_hat is post-compression (often heavily pruned): the masked
+    // kernel skips a whole X-row stream per zeroed weight.
+    let y = w_hat.matmul_masked(&dx);
     y.data.iter().map(|v| v * v).sum()
 }
 

@@ -70,23 +70,40 @@ pub fn gauss_jordan_inverse(a: &Mat) -> crate::util::error::Result<Mat> {
 ///
 /// Returns the pivot value [H⁻¹]ₚₚ that was eliminated.
 pub fn remove_row_col(hinv: &mut Mat, p: usize) -> f64 {
+    let mut rowbuf = Vec::new();
+    remove_row_col_into(hinv, p, &mut rowbuf)
+}
+
+/// [`remove_row_col`] with a caller-owned pivot-row buffer, for loops
+/// that eliminate many indices on a full-width matrix (e.g. the sparse
+/// OBQ pre-elimination): `rowbuf` is grown once and reused, so
+/// steady-state eliminations perform zero heap allocation. The
+/// compacted arena engine has its own fused elimination
+/// (`compress::sweep`); this is the full-width form. The column-p entry of
+/// each row is read *in place* immediately before that row's update
+/// (rows are processed top-down, so the value is still pristine) —
+/// the historical separate column copy was pure waste.
+pub fn remove_row_col_into(hinv: &mut Mat, p: usize, rowbuf: &mut Vec<f64>) -> f64 {
     let n = hinv.rows;
     debug_assert_eq!(n, hinv.cols);
     let d = hinv.at(p, p);
     debug_assert!(d != 0.0, "eliminating an already-eliminated index");
-    // Copy column p (== row p by symmetry, but we keep generality).
-    let colp: Vec<f64> = (0..n).map(|r| hinv.at(r, p)).collect();
-    let rowp: Vec<f64> = hinv.row(p).to_vec();
+    if rowbuf.len() < n {
+        rowbuf.resize(n, 0.0);
+    }
+    rowbuf[..n].copy_from_slice(hinv.row(p));
+    let rowp = &rowbuf[..n];
     let inv_d = 1.0 / d;
     // The rank-1 subtraction streams the matrix once, row by row, each
     // row a contiguous slice zipped against the cached pivot row — the
     // Θ(d²) inner loop of Algorithm 1 is pure unit-stride traffic.
-    for (row, &cr) in hinv.data.chunks_exact_mut(n).zip(&colp) {
+    for row in hinv.data.chunks_exact_mut(n) {
+        let cr = row[p];
         if cr == 0.0 {
             continue; // already-eliminated row: the update is a no-op
         }
         let f = cr * inv_d;
-        for (x, &rp) in row.iter_mut().zip(&rowp) {
+        for (x, &rp) in row.iter_mut().zip(rowp) {
             *x -= f * rp;
         }
     }

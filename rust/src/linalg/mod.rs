@@ -11,5 +11,5 @@ mod chol;
 mod inverse;
 
 pub use chol::{cholesky, cholesky_inverse, cholesky_solve};
-pub use inverse::{gauss_jordan_inverse, remove_row_col};
+pub use inverse::{gauss_jordan_inverse, remove_row_col, remove_row_col_into};
 pub use mat::Mat;

@@ -5,13 +5,14 @@
 //! (`rust/tests/kernel_conformance.rs`), the PJRT path is cross-checked
 //! against it by `rust/tests/runtime_bridge.rs`.
 
-use crate::compress::exact_obs::{self, RowTrace};
+use crate::compress::exact_obs::RowTrace;
 use crate::compress::hessian::HessianAccumulator;
-use crate::compress::obq::{self, ObqOpts};
 use crate::compress::quant::Grid;
+use crate::compress::sweep::{self, NonSpd};
 use crate::linalg::Mat;
 use crate::util::error::Result;
 use crate::util::pool;
+use crate::util::scratch;
 use std::sync::Arc;
 
 /// Result of an OBS sweep over a batch of rows.
@@ -80,22 +81,32 @@ pub fn hessian(x: &Mat) -> Result<Mat> {
 // Native kernels (always available; the conformance reference).
 // ----------------------------------------------------------------------
 
-/// Native full-trace OBS sweep: one Algorithm-1 job per row on the
-/// shared pool, each with a private H⁻¹ copy, stitched in row order.
+/// Native full-trace OBS sweep: one Algorithm-1 arena job per row on
+/// the shared pool (worker scratch, zero steady-state allocation),
+/// stitched in row order. Only the raw H⁻¹ is available here — there is
+/// no layer H to re-damp — so non-SPD corruption panics on the CALLING
+/// thread with the diag context (callers own the dampening policy),
+/// instead of dying inside a pool worker.
 pub fn obs_sweep_native(w: &Mat, hinv: &Mat) -> SweepOut {
     let d = w.cols;
     let rows = w.rows;
     let wa = Arc::new(w.clone());
     let ha = Arc::new(hinv.clone());
-    let per_row: Vec<(Vec<f64>, RowTrace)> = pool::global().par_map(rows, move |r| {
-        let mut wr = wa.row(r).to_vec();
-        let mut h = (*ha).clone();
-        let t = exact_obs::sweep_row(&mut wr, &mut h, d, |_, _| true);
-        (wr, t)
-    });
+    let per_row: Vec<std::result::Result<(Vec<f64>, RowTrace), NonSpd>> =
+        pool::global().par_map(rows, move |r| {
+            scratch::with(|s| {
+                sweep::prune_sweep(s, wa.row(r), &ha, d, |_, _| true)?;
+                let t =
+                    RowTrace { order: s.trace_order.clone(), dloss: s.trace_dloss.clone() };
+                Ok((s.out()[..d].to_vec(), t))
+            })
+        });
     let mut out = Mat::zeros(rows, d);
     let mut traces = Vec::with_capacity(rows);
-    for (r, (wr, t)) in per_row.into_iter().enumerate() {
+    for (r, res) in per_row.into_iter().enumerate() {
+        let (wr, t) = res.unwrap_or_else(|e| {
+            panic!("obs_sweep_native row {r}: {e}; re-finalize the Hessian with more dampening")
+        });
         out.row_mut(r).copy_from_slice(&wr);
         traces.push(t);
     }
@@ -103,19 +114,27 @@ pub fn obs_sweep_native(w: &Mat, hinv: &Mat) -> SweepOut {
 }
 
 /// Native OBQ sweep (Algorithm 3 with the outlier heuristic, matching
-/// the AOT artifact semantics) over all rows, per-row grids.
+/// the AOT artifact semantics) over all rows, per-row grids. Same
+/// arena + loud-on-calling-thread non-SPD policy as [`obs_sweep_native`].
 pub fn obq_sweep_native(w: &Mat, hinv: &Mat, grids: &[Grid]) -> Mat {
     assert_eq!(grids.len(), w.rows);
+    let d = w.cols;
     let rows = w.rows;
     let wa = Arc::new(w.clone());
     let ha = Arc::new(hinv.clone());
     let grids = Arc::new(grids.to_vec());
-    let opts = ObqOpts::new(4); // bits/symmetric/search unused by quantize_row
-    let per_row = pool::global().par_map(rows, move |r| {
-        obq::quantize_row(wa.row(r), &ha, &grids[r], &opts)
-    });
-    let mut out = Mat::zeros(rows, w.cols);
-    for (r, q) in per_row.into_iter().enumerate() {
+    let per_row: Vec<std::result::Result<Vec<f64>, NonSpd>> =
+        pool::global().par_map(rows, move |r| {
+            scratch::with(|s| {
+                sweep::quant_sweep(s, wa.row(r), &ha, &grids[r], true)?;
+                Ok(s.out()[..d].to_vec())
+            })
+        });
+    let mut out = Mat::zeros(rows, d);
+    for (r, res) in per_row.into_iter().enumerate() {
+        let q = res.unwrap_or_else(|e| {
+            panic!("obq_sweep_native row {r}: {e}; re-finalize the Hessian with more dampening")
+        });
         out.row_mut(r).copy_from_slice(&q);
     }
     out

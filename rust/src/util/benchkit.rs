@@ -2,9 +2,14 @@
 //! offline vendor set).
 //!
 //! Provides warmup + repeated timed runs with mean/stddev/min reporting,
-//! plus table rendering used by the `benches/` binaries that regenerate
-//! the paper's tables and figures.
+//! allocation accounting (when the binary installs
+//! [`crate::util::alloc_counter::CountingAlloc`] as its global
+//! allocator), machine-readable JSON reports ([`JsonReport`], consumed
+//! by `make bench-json` / CI), plus table rendering used by the
+//! `benches/` binaries that regenerate the paper's tables and figures.
 
+use crate::util::alloc_counter;
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark case.
@@ -15,18 +20,33 @@ pub struct BenchStats {
     pub mean_s: f64,
     pub std_s: f64,
     pub min_s: f64,
+    /// Heap bytes allocated per iteration (averaged over the timed
+    /// iters). `None` when the binary did not install the counting
+    /// allocator, so absence is distinguishable from a true zero.
+    pub alloc_bytes_per_iter: Option<f64>,
+    /// Allocation calls per iteration (same caveat).
+    pub allocs_per_iter: Option<f64>,
 }
 
 impl BenchStats {
     pub fn report(&self) {
+        let alloc = match self.alloc_bytes_per_iter {
+            Some(b) => format!("   {:>10.0} B/iter", b),
+            None => String::new(),
+        };
         println!(
-            "bench {:<42} {:>10}   ±{:>8}   min {:>10}   ({} iters)",
+            "bench {:<42} {:>10}   ±{:>8}   min {:>10}   ({} iters){alloc}",
             self.name,
             fmt_time(self.mean_s),
             fmt_time(self.std_s),
             fmt_time(self.min_s),
             self.iters
         );
+    }
+
+    /// Mean nanoseconds per iteration.
+    pub fn ns_per_iter(&self) -> f64 {
+        self.mean_s * 1e9
     }
 }
 
@@ -43,26 +63,36 @@ pub fn fmt_time(s: f64) -> String {
     }
 }
 
-/// Run `f` with warmup, then time it `iters` times.
+/// Run `f` with warmup, then time it `iters` times. When the binary has
+/// installed the counting global allocator, per-iteration allocation
+/// stats are recorded alongside the timings.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
     for _ in 0..warmup {
         f();
     }
+    // The harness itself allocates long before any bench runs, so a zero
+    // total means no counting allocator is installed.
+    let counting = alloc_counter::snapshot().allocs > 0;
     let mut samples = Vec::with_capacity(iters);
+    let alloc_start = alloc_counter::snapshot();
     for _ in 0..iters.max(1) {
         let t0 = Instant::now();
         f();
         samples.push(t0.elapsed().as_secs_f64());
     }
+    let alloc_delta = alloc_counter::since(alloc_start);
     let mean = crate::util::mean(&samples);
     let std = crate::util::stddev(&samples);
     let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let n = samples.len() as f64;
     let st = BenchStats {
         name: name.to_string(),
         iters: samples.len(),
         mean_s: mean,
         std_s: std,
         min_s: min,
+        alloc_bytes_per_iter: counting.then(|| alloc_delta.bytes as f64 / n),
+        allocs_per_iter: counting.then(|| alloc_delta.allocs as f64 / n),
     };
     st.report();
     st
@@ -73,6 +103,62 @@ pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
     let t0 = Instant::now();
     let v = f();
     (v, t0.elapsed())
+}
+
+/// Machine-readable benchmark report (`BENCH_kernels.json` et al.):
+/// one entry per [`BenchStats`] plus derived scalars (speedups), built
+/// on the in-tree [`Json`] model so escaping/validity are structural
+/// and guaranteed to round-trip through `util::json::parse`.
+#[derive(Default)]
+pub struct JsonReport {
+    cases: Vec<Json>,
+    derived: Vec<Json>,
+}
+
+impl JsonReport {
+    pub fn new() -> JsonReport {
+        JsonReport::default()
+    }
+
+    /// Record one benchmark case.
+    pub fn case(&mut self, st: &BenchStats) {
+        let mut e = Json::obj();
+        e.set("name", st.name.as_str())
+            .set("iters", st.iters)
+            .set("ns_per_iter", st.ns_per_iter())
+            .set("min_ns", st.min_s * 1e9)
+            .set("std_ns", st.std_s * 1e9);
+        if let (Some(b), Some(a)) = (st.alloc_bytes_per_iter, st.allocs_per_iter) {
+            e.set("alloc_bytes_per_iter", b).set("allocs_per_iter", a);
+        }
+        self.cases.push(e);
+    }
+
+    /// Record a derived scalar (e.g. a speedup ratio between two cases).
+    pub fn derived(&mut self, name: &str, value: f64) {
+        let mut e = Json::obj();
+        e.set("name", name).set("value", value);
+        self.derived.push(e);
+    }
+
+    /// Render the report document with extra top-level context fields.
+    pub fn render(&self, context: &[(&str, Json)]) -> String {
+        let mut doc = Json::obj();
+        doc.set("schema", "obc-bench-kernels/v1");
+        for (k, v) in context {
+            doc.set(k, v.clone());
+        }
+        doc.set("cases", self.cases.clone());
+        doc.set("derived", self.derived.clone());
+        doc.to_string_pretty()
+    }
+
+    /// Write the report to `path` (and echo the location).
+    pub fn write(&self, path: &str, context: &[(&str, Json)]) -> std::io::Result<()> {
+        std::fs::write(path, self.render(context))?;
+        println!("bench report written to {path}");
+        Ok(())
+    }
 }
 
 /// Simple fixed-width table renderer for paper-style output.
@@ -154,6 +240,24 @@ mod tests {
         let s = t.print();
         assert!(s.contains("GMP"));
         assert!(s.contains("74.86"));
+    }
+
+    /// The JSON report must round-trip through the in-tree parser.
+    #[test]
+    fn json_report_is_parseable() {
+        let mut r = JsonReport::new();
+        let st = bench("noop_json", 0, 2, || {
+            std::hint::black_box(1 + 1);
+        });
+        r.case(&st);
+        r.derived("speedup_demo", 1.5);
+        let doc = r.render(&[("smoke", Json::Bool(true)), ("threads", 4u32.into())]);
+        let parsed = crate::util::json::parse(&doc).expect("report must be valid JSON");
+        let cases = parsed.get("cases").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(cases.len(), 1);
+        assert!(cases[0].get("ns_per_iter").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+        let derived = parsed.get("derived").and_then(|d| d.as_arr()).unwrap();
+        assert_eq!(derived[0].get("value").and_then(|v| v.as_f64()).unwrap(), 1.5);
     }
 
     #[test]

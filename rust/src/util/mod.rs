@@ -7,6 +7,8 @@ pub mod json;
 pub mod rng;
 pub mod cli;
 pub mod pool;
+pub mod scratch;
+pub mod alloc_counter;
 pub mod benchkit;
 pub mod logging;
 pub mod proptest;

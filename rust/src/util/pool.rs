@@ -13,10 +13,25 @@ use std::thread;
 /// cores−1 (min 1). Jobs submitted here must never themselves block on
 /// this pool (the coordinator's per-layer pool is a separate instance,
 /// so layer-over-row nesting is safe).
+///
+/// Workers are persistent threads: each one keeps a warm per-worker
+/// scratch arena ([`crate::util::scratch::with`]) that the arena sweep
+/// kernels check out per job — the mechanism behind the zero-allocation
+/// steady state of the compression hot path.
 pub fn global() -> &'static ThreadPool {
     static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
-    GLOBAL.get_or_init(|| {
-        let n = std::env::var("OBC_THREADS")
+    GLOBAL.get_or_init(|| ThreadPool::new(configured_threads()))
+}
+
+/// The configured worker count (`OBC_THREADS` if set, else cores−1, min
+/// 1) *without* instantiating the global pool — used by kernels that
+/// spawn scoped threads themselves (e.g. the Hessian SYRK bands).
+/// Resolved once: callers sit in streaming loops (one call per
+/// calibration batch) and the env var cannot change meaningfully.
+pub fn configured_threads() -> usize {
+    static THREADS: OnceLock<usize> = OnceLock::new();
+    *THREADS.get_or_init(|| {
+        std::env::var("OBC_THREADS")
             .ok()
             .and_then(|s| s.parse::<usize>().ok())
             .filter(|&n| n > 0)
@@ -26,8 +41,7 @@ pub fn global() -> &'static ThreadPool {
                     .unwrap_or(4)
                     .saturating_sub(1)
                     .max(1)
-            });
-        ThreadPool::new(n)
+            })
     })
 }
 

@@ -1,0 +1,146 @@
+//! Per-worker scratch arenas for the allocation-free compression hot
+//! path.
+//!
+//! The ExactOBS/OBQ sweeps need, per row job: a private working copy of
+//! H⁻¹ (d×d), a cached pivot row, a live-weight buffer, a live-index
+//! list, an eligibility mask, trace storage, and (for group formulas) a
+//! gather + Cholesky workspace. Before this module existed every row
+//! sweep heap-allocated all of that from scratch — ~d² fresh `Vec`
+//! traffic per row, hundreds of MB of transient allocation per layer.
+//!
+//! A [`Scratch`] owns those buffers and is *reused*: buffers only ever
+//! grow (`ensure`), and every sweep fully re-initialises the state it
+//! reads via `copy_from_slice`/`clear`, so a dirty arena left over from
+//! a previous row — or a previous *layer* of a different shape — can
+//! never leak into results (asserted by the bit-identity property tests
+//! in `rust/tests/arena_sweeps.rs`).
+//!
+//! [`with`] hands out the calling thread's arena: the compression pool
+//! workers (`util::pool`) are persistent threads, so each worker keeps
+//! one warm arena for the lifetime of the process — checkout is a
+//! thread-local borrow, not an allocation.
+
+use std::cell::RefCell;
+
+/// Reusable buffers for one worker's row sweeps. All fields only grow.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Compacted working copy of H⁻¹: `m×m`, row-major, stride `m`
+    /// (where `m` is the current live count of the sweep using it).
+    pub(crate) hinv: Vec<f64>,
+    /// Cached pivot row of the current Lemma-1 elimination.
+    pub(crate) pivot: Vec<f64>,
+    /// Compacted live weights (parallel to `live`).
+    pub(crate) w: Vec<f64>,
+    /// `live[i]` = original column index of compacted position `i`,
+    /// always kept in ascending order so tie-breaking in argmin scans is
+    /// identical to a full-width scan.
+    pub(crate) live: Vec<usize>,
+    /// Original-index alive mask, kept for eligibility closures.
+    pub(crate) alive: Vec<bool>,
+    /// Finished output row (original indexing, length d).
+    pub(crate) out: Vec<f64>,
+    /// Pruning/quantization order (original indices; block indices for
+    /// block sweeps) of the current trace.
+    pub trace_order: Vec<usize>,
+    /// Per-step loss increases of the current trace.
+    pub trace_dloss: Vec<f64>,
+    /// Gather + in-place Cholesky workspace for group formulas (k×k).
+    pub(crate) ga: Vec<f64>,
+    /// Right-hand-side / solution buffer for group formulas.
+    pub(crate) gy: Vec<f64>,
+    /// Small per-block weight buffer for block sweeps.
+    pub(crate) gb: Vec<f64>,
+    /// Best-candidate solution buffer for block sweeps.
+    pub(crate) gz: Vec<f64>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Grow every buffer to cover dimension `d` (never shrinks).
+    pub(crate) fn ensure(&mut self, d: usize) {
+        if self.hinv.len() < d * d {
+            self.hinv.resize(d * d, 0.0);
+        }
+        if self.pivot.len() < d {
+            self.pivot.resize(d, 0.0);
+        }
+        if self.w.len() < d {
+            self.w.resize(d, 0.0);
+        }
+        if self.out.len() < d {
+            self.out.resize(d, 0.0);
+        }
+        if self.alive.len() < d {
+            self.alive.resize(d, true);
+        }
+    }
+
+    /// Grow the group-formula workspace to cover a k×k gather.
+    pub(crate) fn ensure_group(&mut self, k: usize) {
+        if self.ga.len() < k * k {
+            self.ga.resize(k * k, 0.0);
+        }
+        if self.gy.len() < k {
+            self.gy.resize(k, 0.0);
+        }
+        if self.gb.len() < k {
+            self.gb.resize(k, 0.0);
+        }
+        if self.gz.len() < k {
+            self.gz.resize(k, 0.0);
+        }
+    }
+
+    /// The finished output row of the last sweep (original indexing).
+    pub fn out(&self) -> &[f64] {
+        &self.out
+    }
+
+    /// Length of the last recorded trace.
+    pub fn trace_len(&self) -> usize {
+        self.trace_order.len()
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::new());
+}
+
+/// Borrow the calling thread's scratch arena. Pool workers are
+/// persistent threads, so in steady state this is a warm, fully-grown
+/// arena and the sweep inside `f` performs zero heap allocations.
+pub fn with<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_grow_and_persist() {
+        with(|s| {
+            s.ensure(16);
+            assert!(s.hinv.len() >= 256);
+            s.ensure(8); // never shrinks
+            assert!(s.hinv.len() >= 256);
+            s.ensure_group(12);
+            assert!(s.ga.len() >= 144);
+        });
+    }
+
+    #[test]
+    fn with_reuses_same_arena_per_thread() {
+        let cap0 = with(|s| {
+            s.ensure(32);
+            s.hinv.capacity()
+        });
+        let cap1 = with(|s| s.hinv.capacity());
+        assert_eq!(cap0, cap1);
+        assert!(cap1 >= 32 * 32);
+    }
+}

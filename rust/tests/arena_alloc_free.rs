@@ -1,0 +1,45 @@
+//! The acceptance criterion of the arena rework: after warmup, a row
+//! sweep performs **zero** heap allocations — no H⁻¹ clone, no pivot-row
+//! `to_vec`, no trace growth, nothing.
+//!
+//! Lives in its own test binary: the counting allocator's totals are
+//! process-wide, so the measured region must be the only thing running.
+
+use obc::compress::hessian::LayerHessian;
+use obc::compress::quant::Grid;
+use obc::compress::sweep;
+use obc::linalg::Mat;
+use obc::util::alloc_counter::{self, CountingAlloc};
+use obc::util::scratch::Scratch;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_sweeps_are_allocation_free() {
+    let d = 32;
+    let w = Mat::randn(2, d, 950);
+    let h = LayerHessian::from_inputs(&Mat::randn(d, d * 2 + 8, 951), 1e-8);
+    let grid = Grid { scale: 0.125, zero: 16.0, maxq: 31.0 };
+    let mut s = Scratch::new();
+
+    // Warmup: grows every buffer the kernels will touch.
+    sweep::prune_sweep(&mut s, w.row(0), &h.hinv, d, |_, _| true).unwrap();
+    sweep::quant_sweep(&mut s, w.row(0), &h.hinv, &grid, true).unwrap();
+    sweep::block_sweep(&mut s, w.row(0), &h.hinv, 4, 3);
+    sweep::group_reconstruct(&mut s, w.row(0), &h.hinv, &[1, 4, 9, 17]).unwrap();
+
+    let start = alloc_counter::snapshot();
+    for _ in 0..5 {
+        sweep::prune_sweep(&mut s, w.row(1), &h.hinv, d, |_, _| true).unwrap();
+        sweep::quant_sweep(&mut s, w.row(1), &h.hinv, &grid, true).unwrap();
+        sweep::block_sweep(&mut s, w.row(1), &h.hinv, 4, 3);
+        sweep::group_reconstruct(&mut s, w.row(1), &h.hinv, &[0, 3, 11, 20]).unwrap();
+    }
+    let delta = alloc_counter::since(start);
+    assert_eq!(
+        delta.allocs, 0,
+        "steady-state sweeps allocated {} times ({} bytes)",
+        delta.allocs, delta.bytes
+    );
+}

@@ -1,0 +1,141 @@
+//! The arena sweep engine's contract: **bit-identical** to the
+//! fresh-clone reference implementations on every path (unstructured,
+//! N:M, block, OBQ dense/sparse), robust to dirty arena reuse across
+//! layers of different shapes, and **allocation-free** in steady state
+//! (verified with a counting global allocator).
+
+//! (The zero-allocation steady-state assertion lives in its own binary,
+//! `rust/tests/arena_alloc_free.rs`, because its process-wide allocation
+//! counters must not race other tests' threads.)
+
+use obc::compress::exact_obs::{self, reference, ObsOpts};
+use obc::compress::hessian::LayerHessian;
+use obc::compress::obq::{self, ObqOpts};
+use obc::compress::quant::Grid;
+use obc::compress::sweep;
+use obc::linalg::Mat;
+use obc::util::pool::ThreadPool;
+use obc::util::proptest as pt;
+use obc::util::scratch::Scratch;
+
+fn setup(d_row: usize, d_col: usize, seed: u64) -> (Mat, LayerHessian) {
+    let w = Mat::randn(d_row, d_col, seed);
+    let x = Mat::randn(d_col, d_col * 2 + 8, seed + 5000);
+    (w, LayerHessian::from_inputs(&x, 1e-8))
+}
+
+/// Randomized configs: the arena pipeline must equal the reference
+/// pipeline to the last ulp — weights, error, sparsity — including when
+/// the same worker arenas are reused (dirty) across consecutive cases of
+/// different dimensions.
+#[test]
+fn arena_bit_identical_to_reference_across_configs() {
+    let pool = ThreadPool::new(3);
+    pt::check(0xa7e4a, 18, |g| {
+        let d_row = g.usize_in(1, 6);
+        let d = g.usize_in(4, 6) * 4; // multiple of 4 for N:M and blocks
+        let seed = g.rng.next_u64();
+        let (w, h) = setup(d_row, d, seed);
+
+        // Unstructured at a random sparsity and trace cap.
+        let sparsity = g.f64_in(0.2, 0.9);
+        let opts = ObsOpts { trace_cap: if g.bool() { 1.0 } else { 0.75 } };
+        let a = exact_obs::prune_unstructured_on(&pool, &w, &h, sparsity, &opts);
+        let r = reference::prune_unstructured_on(&pool, &w, &h, sparsity, &opts);
+        if a.w.data != r.w.data {
+            return Err(format!("unstructured weights diverged (d={d}, s={sparsity})"));
+        }
+        if a.sq_err != r.sq_err || a.sparsity != r.sparsity {
+            return Err("unstructured err/sparsity diverged".into());
+        }
+
+        // N:M.
+        let (n_keep, m) = if g.bool() { (2, 4) } else { (4, 8) };
+        let an = exact_obs::prune_nm_on(&pool, &w, &h, n_keep, m);
+        let rn = reference::prune_nm_on(&pool, &w, &h, n_keep, m);
+        if an.w.data != rn.w.data {
+            return Err(format!("{n_keep}:{m} weights diverged (d={d})"));
+        }
+
+        // Block sparsity.
+        let c = [1usize, 2, 4][g.usize_in(0, 2)];
+        let ab = exact_obs::prune_block_on(&pool, &w, &h, 0.5, c);
+        let rb = reference::prune_block(&w, &h, 0.5, c);
+        if ab.w.data != rb.w.data {
+            return Err(format!("block c={c} weights diverged (d={d})"));
+        }
+        if ab.sq_err != rb.sq_err {
+            return Err(format!("block c={c} err diverged"));
+        }
+
+        // OBQ dense.
+        let bits = g.usize_in(2, 4) as u32;
+        let grids =
+            obc::compress::quant::fit_grids_per_row(&w, bits, false, Default::default());
+        let oq = ObqOpts::new(bits);
+        let aq = obq::quantize_with_grids_on(&pool, &w, &h, &grids, &oq);
+        let rq = obq::quantize_with_grids_ref_on(&pool, &w, &h, &grids, &oq);
+        if aq.w.data != rq.w.data {
+            return Err(format!("OBQ weights diverged (d={d}, bits={bits})"));
+        }
+
+        // OBQ on the pruned matrix (sparse pre-elimination path).
+        let asq = obq::quantize_sparse_on(&pool, &a.w, &h, &oq);
+        let rsq = obq::quantize_sparse_ref(&a.w, &h, &oq);
+        if asq.w.data != rsq.w.data {
+            return Err(format!("sparse OBQ weights diverged (d={d})"));
+        }
+        Ok(())
+    });
+}
+
+/// Deliberately dirty a private arena with a large layer, then sweep a
+/// smaller layer: results must equal a fresh arena's bit-for-bit. This
+/// pins the `begin()` reset contract (nothing read before initialized).
+#[test]
+fn dirty_arena_across_layers_matches_fresh() {
+    let (w_big, h_big) = setup(1, 24, 900);
+    let (w_small, h_small) = setup(1, 9, 901);
+
+    let mut dirty = Scratch::new();
+    // Dirty it: full sweep of the big layer, then a block sweep.
+    sweep::prune_sweep(&mut dirty, w_big.row(0), &h_big.hinv, 24, |_, _| true).unwrap();
+    sweep::block_sweep(&mut dirty, w_big.row(0), &h_big.hinv, 4, 3);
+
+    // Now the small layer on the dirty arena vs a fresh one.
+    let mut fresh = Scratch::new();
+    sweep::prune_sweep(&mut dirty, w_small.row(0), &h_small.hinv, 5, |_, _| true).unwrap();
+    let dirty_out = dirty.out()[..9].to_vec();
+    let dirty_order = dirty.trace_order.clone();
+    sweep::prune_sweep(&mut fresh, w_small.row(0), &h_small.hinv, 5, |_, _| true).unwrap();
+    assert_eq!(dirty_out, fresh.out()[..9].to_vec());
+    assert_eq!(dirty_order, fresh.trace_order);
+
+    // Same for the OBQ sweep.
+    let grid = Grid { scale: 0.25, zero: 8.0, maxq: 15.0 };
+    sweep::quant_sweep(&mut dirty, w_small.row(0), &h_small.hinv, &grid, true).unwrap();
+    let dirty_q = dirty.out()[..9].to_vec();
+    sweep::quant_sweep(&mut fresh, w_small.row(0), &h_small.hinv, &grid, true).unwrap();
+    assert_eq!(dirty_q, fresh.out()[..9].to_vec());
+}
+
+/// Serial vs pooled arena runs stay bit-identical (the PR-1 determinism
+/// contract carried over to the arena engine), and the N:M pattern stays
+/// valid through the arena path.
+#[test]
+fn pooled_arena_still_deterministic_and_valid() {
+    let (w, h) = setup(9, 20, 960);
+    let serial = ThreadPool::new(1);
+    let pooled = ThreadPool::new(4);
+    let a = exact_obs::prune_unstructured_on(&serial, &w, &h, 0.6, &ObsOpts::default());
+    let b = exact_obs::prune_unstructured_on(&pooled, &w, &h, 0.6, &ObsOpts::default());
+    assert_eq!(a.w.data, b.w.data);
+
+    let nm = exact_obs::prune_nm_on(&pooled, &w, &h, 2, 4);
+    for row in 0..9 {
+        for blk in 0..5 {
+            let nz = (0..4).filter(|i| nm.w.at(row, blk * 4 + i) != 0.0).count();
+            assert_eq!(nz, 2, "row {row} block {blk}");
+        }
+    }
+}
