@@ -2,7 +2,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test bench bench-json bench-smoke fmt lint clean
+.PHONY: build test bench bench-json bench-smoke bench-serve serve-smoke fmt lint clean
 
 build:
 	$(CARGO) build --release
@@ -25,6 +25,30 @@ bench-json: bench
 # (bit-identity + zero-alloc), seconds of wall clock.
 bench-smoke:
 	OBC_BENCH_SMOKE=1 $(CARGO) bench --bench perf_kernels
+
+# Serving throughput report (jobs/sec, single-flight calibration count)
+# on the synthetic model — writes BENCH_serve.json at the repo root.
+bench-serve:
+	$(CARGO) bench --bench serve_throughput
+
+# Scripted job batch — four good jobs (incl. an exact duplicate pair),
+# a malformed op, a refused model, metrics, shutdown — piped through the
+# line-protocol server on the synthetic tiny pipeline (no artifacts),
+# then validated line by line.
+serve-smoke:
+	@mkdir -p target
+	printf '%s\n' \
+	  '{"op":"health"}' \
+	  '{"id":"p1","model":"synthetic","op":"prune","method":"exactobs","sparsity":0.5}' \
+	  '{"id":"p2","model":"synthetic","op":"prune","method":"exactobs","sparsity":0.5}' \
+	  '{"id":"q1","model":"synthetic","op":"quant","method":"obq","bits":4}' \
+	  '{"id":"s1","model":"synthetic","op":"solve","target":"flop","value":1.5,"grid":[0,0.5,0.9]}' \
+	  '{"id":"bad","model":"synthetic","op":"frobnicate"}' \
+	  '{"id":"nomodel","model":"missing","op":"dense"}' \
+	  '{"op":"metrics"}' \
+	  '{"op":"shutdown"}' \
+	| $(CARGO) run --release --example serve_compress -- --synthetic > target/serve_smoke.out
+	python3 scripts/check_serve_smoke.py target/serve_smoke.out
 
 fmt:
 	$(CARGO) fmt --all --check

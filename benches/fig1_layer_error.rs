@@ -13,7 +13,7 @@ fn main() {
     // "the first layer of a ResNet18" — our first in-scope conv.
     let layer = &p.layers(LayerScope::SkipFirstLast)[0];
     let w = p.model().get_weight(&layer.name);
-    let h = &p.hessians[&layer.name];
+    let h = &p.hessians()[&layer.name];
     println!(
         "fig1: layer {} ({}x{}), {} calib samples",
         layer.name, layer.d_row, layer.d_col, h.n_samples

@@ -1,0 +1,121 @@
+//! §Serving throughput: the concurrent compression server on the
+//! synthetic tiny pipeline — no `make artifacts` dependency.
+//!
+//! Pushes a mixed job batch (uniform prune/quant, duplicates that
+//! exercise coalescing, two solver targets sharing one database build)
+//! through `server::CompressionServer` and reports jobs/sec alongside
+//! the single-flight counters. Every run writes `BENCH_serve.json`
+//! (`BENCH_serve.smoke.json` under `OBC_BENCH_SMOKE=1`, the CI mode)
+//! with schema `obc-bench-serve/v1`.
+//!
+//! Assertions (both modes): every job succeeds, calibration ran exactly
+//! once, and the shared database was built exactly once.
+
+use obc::coordinator::engine::LayerScope;
+use obc::coordinator::jobs::{DbKind, DbSpec, JobSpec, TargetKind};
+use obc::coordinator::methods::{PruneMethod, QuantMethod};
+use obc::server::registry::SYNTHETIC_MODEL;
+use obc::server::{CompressionServer, Response, ServerConfig};
+use obc::util::benchkit::JsonReport;
+use obc::util::json::Json;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Instant;
+
+fn batch(rounds: usize) -> Vec<JobSpec> {
+    let db = DbSpec {
+        kind: DbKind::Sparsity,
+        method: PruneMethod::ExactObs,
+        grid: vec![0.0, 0.5, 0.9],
+        scope: LayerScope::All,
+    };
+    let template = vec![
+        JobSpec::Dense,
+        JobSpec::Prune { method: PruneMethod::ExactObs, sparsity: 0.5, scope: LayerScope::All },
+        // Exact duplicate of the previous job: coalescing fodder.
+        JobSpec::Prune { method: PruneMethod::ExactObs, sparsity: 0.5, scope: LayerScope::All },
+        JobSpec::Prune { method: PruneMethod::Gmp, sparsity: 0.7, scope: LayerScope::All },
+        JobSpec::Quant {
+            method: QuantMethod::Obq,
+            bits: 4,
+            symmetric: false,
+            scope: LayerScope::All,
+            corrected: true,
+        },
+        JobSpec::Solve { db: db.clone(), target: TargetKind::Flop, value: 1.5 },
+        JobSpec::Solve { db, target: TargetKind::Flop, value: 2.0 },
+    ];
+    let mut jobs = Vec::with_capacity(rounds * template.len());
+    for _ in 0..rounds {
+        jobs.extend(template.iter().cloned());
+    }
+    jobs
+}
+
+fn main() {
+    let smoke = std::env::var("OBC_BENCH_SMOKE").is_ok();
+    let workers = 4;
+    let rounds = if smoke { 1 } else { 6 };
+    let jobs = batch(rounds);
+    let n_jobs = jobs.len();
+
+    let server = CompressionServer::start(ServerConfig {
+        workers,
+        queue_cap: n_jobs.max(8),
+        models_dir: PathBuf::from("/nonexistent"),
+        synthetic_only: true,
+    });
+    let (tx, rx) = mpsc::channel();
+    let t0 = Instant::now();
+    for (i, spec) in jobs.into_iter().enumerate() {
+        server
+            .submit(SYNTHETIC_MODEL, spec, Some(format!("b{i}")), tx.clone())
+            .expect("submit");
+    }
+    drop(tx);
+    let responses: Vec<Response> = rx.iter().collect();
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    assert_eq!(responses.len(), n_jobs, "every job answered");
+    for r in &responses {
+        if let Err(e) = &r.outcome {
+            panic!("job {:?} failed: {e}", r.client_id);
+        }
+    }
+    let metrics = server.metrics_json();
+    let get = |k: &str| metrics.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    assert_eq!(get("calibrations"), 1.0, "single-flight calibration: {metrics}");
+    assert_eq!(get("db_cache_misses"), 1.0, "one shared db build: {metrics}");
+    server.shutdown();
+
+    let jobs_per_sec = n_jobs as f64 / elapsed;
+    println!(
+        "serve_throughput: {n_jobs} jobs in {elapsed:.3}s → {jobs_per_sec:.1} jobs/s \
+         ({workers} workers, {} coalesced, {} db-cache hits, 1 calibration)",
+        get("jobs_coalesced"),
+        get("db_cache_hits"),
+    );
+
+    let mut report = JsonReport::with_schema("obc-bench-serve/v1");
+    report.derived("jobs_per_sec", jobs_per_sec);
+    report.derived("jobs_total", n_jobs as f64);
+    report.derived("elapsed_seconds", elapsed);
+    report.derived("workers", workers as f64);
+    report.derived("calibrations", get("calibrations"));
+    report.derived("jobs_coalesced", get("jobs_coalesced"));
+    report.derived("db_cache_hits", get("db_cache_hits"));
+    report.derived("db_cache_misses", get("db_cache_misses"));
+    report.derived("queue_depth_peak", get("queue_depth_peak"));
+    report.derived("queue_seconds_total", get("queue_seconds_total"));
+    report.derived("exec_seconds_total", get("exec_seconds_total"));
+    let fname = if smoke { "BENCH_serve.smoke.json" } else { "BENCH_serve.json" };
+    report
+        .write(
+            fname,
+            &[
+                ("smoke", Json::Bool(smoke)),
+                ("model", Json::Str(SYNTHETIC_MODEL.to_string())),
+            ],
+        )
+        .expect("write serve bench report");
+}

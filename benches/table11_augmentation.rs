@@ -15,8 +15,8 @@ fn main() {
     let load = |augment: usize| -> Option<Pipeline> {
         let calib = CalibOpts { augment, ..Default::default() };
         match Pipeline::load_with(&dir, model, calib) {
-            Ok(mut p) => {
-                p.eval_samples = 512;
+            Ok(p) => {
+                p.set_eval_samples(512);
                 Some(p)
             }
             Err(e) => {

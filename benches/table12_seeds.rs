@@ -18,11 +18,11 @@ fn main() {
     let mut nm = Vec::new();
     for seed in 0..5u64 {
         let calib = CalibOpts { seed, augment: 2, ..Default::default() };
-        let Ok(mut p) = Pipeline::load_with(&dir, model, calib) else {
+        let Ok(p) = Pipeline::load_with(&dir, model, calib) else {
             eprintln!("SKIP: run `make artifacts`");
             return;
         };
-        p.eval_samples = 512;
+        p.set_eval_samples(512);
         let q = p.run_quant(QuantMethod::Obq, 4, true, LayerScope::All, true);
         let s = p.run_nm(PruneMethod::ExactObs, 2, 4, LayerScope::SkipFirstLast);
         println!("seed {seed}: 4bit {q:.2}  2:4 {s:.2}");

@@ -19,7 +19,7 @@ fn main() {
         let layers = p.layers(LayerScope::All);
         let mats: Vec<_> = layers
             .iter()
-            .map(|l| (p.model().get_weight(&l.name), p.hessians[&l.name].clone()))
+            .map(|l| (p.model().get_weight(&l.name), p.hessians()[&l.name].clone()))
             .collect();
         let time_it = |f: &dyn Fn()| -> String {
             let t0 = Instant::now();

@@ -1,110 +1,56 @@
-//! Compression-as-a-service: the coordinator as a long-running process.
+//! Compression-as-a-service: a thin line-protocol frontend over
+//! [`obc::server`].
 //!
-//! Reads JSON job specs from stdin (one per line), schedules per-layer
-//! compression jobs, and writes JSON results to stdout — the deployment
-//! shape of the paper's pipeline inside a model-production system.
+//! Reads JSON requests from stdin (one per line), schedules them on the
+//! concurrent compression server (bounded queue, per-model engines with
+//! single-flight calibration, job coalescing), and writes one JSON
+//! response per line to stdout in **completion order** — responses carry
+//! `seq` and echo the client's `id` for correlation.
 //!
-//! Job spec:    {"model": "rneta", "op": "prune", "method": "exactobs",
-//!               "sparsity": 0.6}
-//!              {"model": "rneta", "op": "quant", "method": "obq", "bits": 4}
-//!              {"op": "shutdown"}
-//! Result line: {"ok": true, "model": ..., "metric": ..., "seconds": ...}
+//! Jobs:     {"model":"rneta","op":"prune","method":"exactobs","sparsity":0.6}
+//!           {"model":"rneta","op":"quant","method":"obq","bits":4}
+//!           {"model":"rneta","op":"joint","n":2,"m":4,"bits":8}
+//!           {"model":"rneta","op":"solve","target":"flop","value":2}
+//! Control:  {"op":"health"}   {"op":"metrics"}   {"op":"shutdown"}
 //!
-//! Try: echo '{"model":"rneta","op":"prune","method":"exactobs","sparsity":0.5}' \
-//!        | cargo run --release --example serve_compress
+//! Flags: --synthetic (serve only the deterministic synthetic model; no
+//! artifacts needed), --workers N, --queue-cap N.
+//!
+//! Try: echo '{"model":"synthetic","op":"prune","method":"exactobs","sparsity":0.5}' \
+//!        | cargo run --release --example serve_compress -- --synthetic
 
-use obc::coordinator::methods::{PruneMethod, QuantMethod};
-use obc::coordinator::pipeline::{LayerScope, Pipeline};
-use obc::util::io::artifacts_dir;
-use obc::util::json::{parse, Json};
-use std::collections::BTreeMap;
-use std::io::{BufRead, Write};
-use std::time::Instant;
+use obc::server::{run_line_protocol, ServerConfig};
 
-fn main() -> obc::util::Result<()> {
-    let stdin = std::io::stdin();
-    let mut out = std::io::stdout();
-    // Pipelines are cached per model: calibration happens once per model
-    // per server lifetime, then every job stitches from the same state.
-    let mut pipelines: BTreeMap<String, Pipeline> = BTreeMap::new();
-    eprintln!("serve_compress: ready (one JSON job per line; op=shutdown to exit)");
-
-    for line in stdin.lock().lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+fn req_count(v: Option<&String>, flag: &str) -> usize {
+    match v.and_then(|s| s.parse().ok()) {
+        Some(n) if n > 0 => n,
+        _ => {
+            eprintln!("serve_compress: {flag} requires a positive integer value");
+            std::process::exit(2);
         }
-        let t0 = Instant::now();
-        let reply = match handle(&line, &mut pipelines) {
-            Ok(mut obj) => {
-                obj.set("ok", true).set("seconds", t0.elapsed().as_secs_f64());
-                obj
-            }
-            Err(e) => {
-                if e.to_string() == "shutdown" {
-                    break;
-                }
-                let mut obj = Json::obj();
-                obj.set("ok", false).set("error", e.to_string());
-                obj
-            }
-        };
-        writeln!(out, "{}", reply.to_string_compact())?;
-        out.flush()?;
     }
-    eprintln!("serve_compress: bye");
-    Ok(())
 }
 
-fn handle(line: &str, pipelines: &mut BTreeMap<String, Pipeline>) -> obc::util::Result<Json> {
-    let job = parse(line)?;
-    let op = job.req_str("op")?;
-    if op == "shutdown" {
-        obc::bail!("shutdown");
+fn main() -> obc::util::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = ServerConfig::default();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--synthetic" => cfg.synthetic_only = true,
+            "--workers" => cfg.workers = req_count(it.next(), "--workers"),
+            "--queue-cap" => cfg.queue_cap = req_count(it.next(), "--queue-cap"),
+            other => {
+                eprintln!("serve_compress: unknown flag '{other}'");
+                std::process::exit(2);
+            }
+        }
     }
-    let model = job.req_str("model")?.to_string();
-    if !pipelines.contains_key(&model) {
-        eprintln!("serve_compress: calibrating {model} ...");
-        let p = Pipeline::load(&artifacts_dir().join("models"), &model)?;
-        pipelines.insert(model.clone(), p);
-    }
-    let p = &pipelines[&model];
-    let mut reply = Json::obj();
-    reply.set("model", model.as_str()).set("op", op);
-    match op {
-        "dense" => {
-            reply.set("metric", p.dense_metric());
-        }
-        "prune" => {
-            let method = match job.req_str("method")? {
-                "gmp" => PruneMethod::Gmp,
-                "lobs" => PruneMethod::Lobs,
-                "adaprune" => PruneMethod::AdaPrune,
-                _ => PruneMethod::ExactObs,
-            };
-            let sparsity = job.req_f64("sparsity")?;
-            let metric = p.run_uniform_sparsity(method, sparsity, LayerScope::All);
-            reply.set("method", method.name()).set("sparsity", sparsity).set("metric", metric);
-        }
-        "nm" => {
-            let n = job.req_f64("n")? as usize;
-            let m = job.req_f64("m")? as usize;
-            let metric = p.run_nm(PruneMethod::ExactObs, n, m, LayerScope::SkipFirstLast);
-            reply.set("pattern", format!("{n}:{m}")).set("metric", metric);
-        }
-        "quant" => {
-            let method = match job.req_str("method")? {
-                "rtn" => QuantMethod::Rtn,
-                "bitsplit" => QuantMethod::BitSplit,
-                "adaquant" => QuantMethod::AdaQuant,
-                "adaround" => QuantMethod::AdaRound,
-                _ => QuantMethod::Obq,
-            };
-            let bits = job.req_f64("bits")? as u32;
-            let metric = p.run_quant(method, bits, false, LayerScope::All, true);
-            reply.set("method", method.name()).set("bits", bits as usize).set("metric", metric);
-        }
-        other => obc::bail!("unknown op '{other}'"),
-    }
-    Ok(reply)
+    eprintln!(
+        "serve_compress: ready ({} workers, queue {}; one JSON request per line; op=shutdown to exit)",
+        cfg.workers, cfg.queue_cap
+    );
+    run_line_protocol(cfg, std::io::stdin().lock(), std::io::stdout())?;
+    eprintln!("serve_compress: bye");
+    Ok(())
 }

@@ -1,0 +1,957 @@
+//! The typed job layer: every compression request the coordinator can
+//! serve, as data.
+//!
+//! [`JobSpec`] (what to do) and [`JobResult`] (what happened) are plain
+//! enums with `util::json` codecs — the single wire vocabulary shared by
+//! the CLI (`obc <cmd>`), the line-protocol server
+//! (`examples/serve_compress.rs`, `obc serve`), and tests. This replaces
+//! the stringly-typed dispatch that used to be duplicated between
+//! `serve_compress.rs` and `main.rs`, and gives compound prune→quant
+//! requests one entry point ([`JobSpec::JointNmQuant`]).
+//!
+//! Control operations ([`ControlOp`]: `shutdown`/`health`/`metrics`) are
+//! a separate type from jobs — shutdown is a typed signal, not a
+//! sentinel error string.
+
+use super::engine::{CompressionEngine, LayerScope};
+use super::methods::{PruneMethod, QuantMethod};
+use crate::db::ModelDb;
+use crate::util::error::Result;
+use crate::util::json::{parse, Json};
+use std::sync::Arc;
+
+// ----------------------------------------------------------------------
+// Method tokens (stable wire names)
+// ----------------------------------------------------------------------
+
+/// Wire token of a pruning method (lowercase, stable).
+pub fn prune_method_token(m: PruneMethod) -> String {
+    match m {
+        PruneMethod::Gmp => "gmp".into(),
+        PruneMethod::Lobs => "lobs".into(),
+        PruneMethod::AdaPrune => "adaprune".into(),
+        PruneMethod::AdaPruneIter(k) => format!("adaprune:{k}"),
+        PruneMethod::ExactObs => "exactobs".into(),
+    }
+}
+
+pub fn parse_prune_method(s: &str) -> Result<PruneMethod> {
+    match s.to_lowercase().as_str() {
+        "gmp" => Ok(PruneMethod::Gmp),
+        "lobs" | "l-obs" => Ok(PruneMethod::Lobs),
+        "adaprune" => Ok(PruneMethod::AdaPrune),
+        "exactobs" | "obs" => Ok(PruneMethod::ExactObs),
+        other => {
+            if let Some(k) = other.strip_prefix("adaprune:") {
+                let k: usize = k
+                    .parse()
+                    .map_err(|_| crate::err!("bad adaprune iteration count '{k}'"))?;
+                return Ok(PruneMethod::AdaPruneIter(k));
+            }
+            Err(crate::err!(
+                "unknown prune method '{other}' (gmp|lobs|adaprune|adaprune:<k>|exactobs)"
+            ))
+        }
+    }
+}
+
+/// Wire token of a quantization method (lowercase, stable).
+pub fn quant_method_token(m: QuantMethod) -> &'static str {
+    match m {
+        QuantMethod::Rtn => "rtn",
+        QuantMethod::BitSplit => "bitsplit",
+        QuantMethod::AdaQuant => "adaquant",
+        QuantMethod::AdaRound => "adaround",
+        QuantMethod::Obq => "obq",
+    }
+}
+
+pub fn parse_quant_method(s: &str) -> Result<QuantMethod> {
+    match s.to_lowercase().as_str() {
+        "rtn" => Ok(QuantMethod::Rtn),
+        "bitsplit" => Ok(QuantMethod::BitSplit),
+        "adaquant" => Ok(QuantMethod::AdaQuant),
+        "adaround" => Ok(QuantMethod::AdaRound),
+        "obq" => Ok(QuantMethod::Obq),
+        other => Err(crate::err!(
+            "unknown quant method '{other}' (rtn|bitsplit|adaquant|adaround|obq)"
+        )),
+    }
+}
+
+// ----------------------------------------------------------------------
+// Database + target specs
+// ----------------------------------------------------------------------
+
+/// Which kind of compression database a job references.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DbKind {
+    /// Unstructured sparsity over a grid (Eq. 10).
+    Sparsity,
+    /// {8w8a, 4w4a} × {dense, 2:4} GPU scenario (Fig. 2).
+    MixedGpu,
+    /// AdaPrune+AdaQuant baseline variant of the GPU DB (App. A.11).
+    MixedGpuBaseline,
+    /// 4-block sparsity × int8 CPU scenario (Fig. 2d).
+    Cpu,
+}
+
+impl DbKind {
+    pub fn token(&self) -> &'static str {
+        match self {
+            DbKind::Sparsity => "sparsity",
+            DbKind::MixedGpu => "mixed_gpu",
+            DbKind::MixedGpuBaseline => "mixed_gpu_baseline",
+            DbKind::Cpu => "cpu",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DbKind> {
+        match s {
+            "sparsity" => Ok(DbKind::Sparsity),
+            "mixed_gpu" => Ok(DbKind::MixedGpu),
+            "mixed_gpu_baseline" => Ok(DbKind::MixedGpuBaseline),
+            "cpu" => Ok(DbKind::Cpu),
+            other => Err(crate::err!(
+                "unknown db kind '{other}' (sparsity|mixed_gpu|mixed_gpu_baseline|cpu)"
+            )),
+        }
+    }
+}
+
+/// A database request: enough to build it — and to cache it, via
+/// [`DbSpec::cache_key`]. Grid is ignored by the mixed-GPU kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DbSpec {
+    pub kind: DbKind,
+    pub method: PruneMethod,
+    pub grid: Vec<f64>,
+    pub scope: LayerScope,
+}
+
+impl DbSpec {
+    /// Engine-cache key. Fields a kind hardwires are normalized out so
+    /// the cache (and single-flight) cannot fragment across spellings
+    /// of irrelevant fields: the mixed-GPU kinds ignore method AND grid
+    /// (their levels are fixed by the paper's Fig. 2 setup), the CPU
+    /// kind ignores method (always block-ExactOBS + int8).
+    pub fn cache_key(&self) -> String {
+        let token = prune_method_token(self.method);
+        let (method, grid): (&str, &[f64]) = match self.kind {
+            DbKind::Sparsity => (token.as_str(), &self.grid),
+            DbKind::Cpu => ("fixed", &self.grid),
+            DbKind::MixedGpu | DbKind::MixedGpuBaseline => ("fixed", &[]),
+        };
+        CompressionEngine::db_key(self.kind.token(), method, self.scope, grid)
+    }
+}
+
+/// The constrained-resource axis of a solve job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TargetKind {
+    /// FLOP-reduction factor over a sparsity DB.
+    Flop,
+    /// BOP-reduction factor over the mixed GPU DB.
+    Bop,
+    /// CPU latency speedup over the CPU DB.
+    CpuTime,
+}
+
+impl TargetKind {
+    pub fn token(&self) -> &'static str {
+        match self {
+            TargetKind::Flop => "flop",
+            TargetKind::Bop => "bop",
+            TargetKind::CpuTime => "cputime",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<TargetKind> {
+        match s {
+            "flop" | "flops" => Ok(TargetKind::Flop),
+            "bop" | "bops" => Ok(TargetKind::Bop),
+            "cputime" | "latency" => Ok(TargetKind::CpuTime),
+            other => Err(crate::err!("unknown target '{other}' (flop|bop|cputime)")),
+        }
+    }
+
+    /// The database kind this target solves over by default.
+    pub fn default_db(&self) -> DbKind {
+        match self {
+            TargetKind::Flop => DbKind::Sparsity,
+            TargetKind::Bop => DbKind::MixedGpu,
+            TargetKind::CpuTime => DbKind::Cpu,
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// JobSpec
+// ----------------------------------------------------------------------
+
+/// One compression job against a calibrated engine.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobSpec {
+    /// Dense reference metric.
+    Dense,
+    /// Uniform unstructured pruning at one sparsity.
+    Prune { method: PruneMethod, sparsity: f64, scope: LayerScope },
+    /// N:M semi-structured pruning.
+    Nm { method: PruneMethod, n: usize, m: usize, scope: LayerScope },
+    /// Uniform weight quantization.
+    Quant {
+        method: QuantMethod,
+        bits: u32,
+        symmetric: bool,
+        scope: LayerScope,
+        corrected: bool,
+    },
+    /// Compound prune→quant: N:M prune then OBQ-quantize survivors.
+    JointNmQuant { n: usize, m: usize, bits: u32, scope: LayerScope },
+    /// Build (or warm) a compression database.
+    BuildDb(DbSpec),
+    /// Solve a resource target over a (cached) database and evaluate.
+    Solve { db: DbSpec, target: TargetKind, value: f64 },
+}
+
+impl JobSpec {
+    /// Wire op name.
+    pub fn op(&self) -> &'static str {
+        match self {
+            JobSpec::Dense => "dense",
+            JobSpec::Prune { .. } => "prune",
+            JobSpec::Nm { .. } => "nm",
+            JobSpec::Quant { .. } => "quant",
+            JobSpec::JointNmQuant { .. } => "joint",
+            JobSpec::BuildDb(_) => "db",
+            JobSpec::Solve { .. } => "solve",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("op", self.op());
+        match self {
+            JobSpec::Dense => {}
+            JobSpec::Prune { method, sparsity, scope } => {
+                o.set("method", prune_method_token(*method))
+                    .set("sparsity", *sparsity)
+                    .set("scope", scope.as_str());
+            }
+            JobSpec::Nm { method, n, m, scope } => {
+                o.set("method", prune_method_token(*method))
+                    .set("n", *n)
+                    .set("m", *m)
+                    .set("scope", scope.as_str());
+            }
+            JobSpec::Quant { method, bits, symmetric, scope, corrected } => {
+                o.set("method", quant_method_token(*method))
+                    .set("bits", *bits)
+                    .set("symmetric", *symmetric)
+                    .set("corrected", *corrected)
+                    .set("scope", scope.as_str());
+            }
+            JobSpec::JointNmQuant { n, m, bits, scope } => {
+                o.set("n", *n).set("m", *m).set("bits", *bits).set("scope", scope.as_str());
+            }
+            JobSpec::BuildDb(db) => {
+                set_db_fields(&mut o, db);
+            }
+            JobSpec::Solve { db, target, value } => {
+                o.set("target", target.token()).set("value", *value);
+                set_db_fields(&mut o, db);
+            }
+        }
+        o
+    }
+
+    /// Decode from a parsed JSON object (the `op` field selects the
+    /// variant; optional fields fall back to the CLI defaults).
+    ///
+    /// Numeric fields are **validated**, not `as`-cast: a fractional or
+    /// out-of-range `n`/`m`/`bits`/`sparsity` is a typed parse error at
+    /// the wire boundary instead of a kernel panic mid-job.
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        let op = j.req_str("op")?;
+        let scope_or = |default: LayerScope| -> Result<LayerScope> {
+            match j.get("scope").and_then(|s| s.as_str()) {
+                Some(s) => LayerScope::parse(s),
+                None => Ok(default),
+            }
+        };
+        match op {
+            "dense" => Ok(JobSpec::Dense),
+            "prune" => Ok(JobSpec::Prune {
+                method: parse_prune_method(j.req_str("method")?)?,
+                sparsity: req_sparsity(j)?,
+                scope: scope_or(LayerScope::All)?,
+            }),
+            "nm" => {
+                let (n, m) = req_nm(j)?;
+                Ok(JobSpec::Nm {
+                    method: match j.get("method").and_then(|v| v.as_str()) {
+                        Some(v) => parse_prune_method(v)?,
+                        None => PruneMethod::ExactObs,
+                    },
+                    n,
+                    m,
+                    scope: scope_or(LayerScope::SkipFirstLast)?,
+                })
+            }
+            "quant" => Ok(JobSpec::Quant {
+                method: parse_quant_method(j.req_str("method")?)?,
+                bits: req_bits(j)?,
+                symmetric: j.get("symmetric").and_then(|b| b.as_bool()).unwrap_or(false),
+                corrected: j.get("corrected").and_then(|b| b.as_bool()).unwrap_or(true),
+                scope: scope_or(LayerScope::All)?,
+            }),
+            "joint" => {
+                let (n, m) = req_nm(j)?;
+                Ok(JobSpec::JointNmQuant {
+                    n,
+                    m,
+                    bits: req_bits(j)?,
+                    scope: scope_or(LayerScope::SkipFirstLast)?,
+                })
+            }
+            "db" => Ok(JobSpec::BuildDb(db_spec_from_json(j, DbKind::Sparsity)?)),
+            "solve" => {
+                let target = TargetKind::parse(j.req_str("target")?)?;
+                let value = j.req_f64("value")?;
+                if !value.is_finite() || value < 1.0 {
+                    crate::bail!("solve 'value' must be a finite factor >= 1, got {value}");
+                }
+                Ok(JobSpec::Solve {
+                    db: db_spec_from_json(j, target.default_db())?,
+                    target,
+                    value,
+                })
+            }
+            other => Err(crate::err!("unknown job op '{other}'")),
+        }
+    }
+
+    /// Canonical identity of a (model, spec) pair — the server's
+    /// coalescing key. Deterministic: object keys serialize sorted.
+    pub fn coalesce_key(&self, model: &str) -> String {
+        format!("{model}|{}", self.to_json().to_string_compact())
+    }
+}
+
+/// A required non-negative integer field (rejects fractional, negative,
+/// non-finite and absurdly large values instead of saturating).
+fn req_count(j: &Json, key: &str, min: usize) -> Result<usize> {
+    let v = j.req_f64(key)?;
+    if !v.is_finite() || v.fract() != 0.0 || v < min as f64 || v > 1e9 {
+        crate::bail!("field '{key}' must be an integer >= {min}, got {v}");
+    }
+    Ok(v as usize)
+}
+
+fn req_nm(j: &Json) -> Result<(usize, usize)> {
+    let n = req_count(j, "n", 1)?;
+    let m = req_count(j, "m", 1)?;
+    if n > m {
+        crate::bail!("N:M pattern requires n <= m, got {n}:{m}");
+    }
+    Ok((n, m))
+}
+
+fn req_bits(j: &Json) -> Result<u32> {
+    let b = req_count(j, "bits", 1)?;
+    if b > 32 {
+        crate::bail!("field 'bits' must be in 1..=32, got {b}");
+    }
+    Ok(b as u32)
+}
+
+fn req_sparsity(j: &Json) -> Result<f64> {
+    let s = j.req_f64("sparsity")?;
+    if !(0.0..=1.0).contains(&s) {
+        crate::bail!("field 'sparsity' must be in [0, 1], got {s}");
+    }
+    Ok(s)
+}
+
+fn set_db_fields(o: &mut Json, db: &DbSpec) {
+    o.set("kind", db.kind.token())
+        .set("method", prune_method_token(db.method))
+        .set("grid", db.grid.as_slice())
+        .set("scope", db.scope.as_str());
+}
+
+fn db_spec_from_json(j: &Json, default_kind: DbKind) -> Result<DbSpec> {
+    let kind = match j.get("kind").and_then(|k| k.as_str()) {
+        Some(k) => DbKind::parse(k)?,
+        None => default_kind,
+    };
+    let method = match j.get("method").and_then(|m| m.as_str()) {
+        Some(m) => parse_prune_method(m)?,
+        None => PruneMethod::ExactObs,
+    };
+    let grid = match j.get("grid").and_then(|g| g.as_arr()) {
+        Some(arr) => {
+            let mut grid = Vec::with_capacity(arr.len());
+            for v in arr {
+                let s = v.as_f64().ok_or_else(|| crate::err!("grid entries must be numbers"))?;
+                if !(0.0..=1.0).contains(&s) {
+                    crate::bail!("grid sparsities must be in [0, 1], got {s}");
+                }
+                grid.push(s);
+            }
+            grid
+        }
+        // Paper default: the Eq. 10 grid. Mixed-GPU kinds ignore it.
+        None => crate::solver::sparsity_grid(0.1, 0.95),
+    };
+    let scope = match j.get("scope").and_then(|s| s.as_str()) {
+        Some(s) => LayerScope::parse(s)?,
+        None => match kind {
+            DbKind::Sparsity => LayerScope::All,
+            _ => LayerScope::SkipFirstLast,
+        },
+    };
+    Ok(DbSpec { kind, method, grid, scope })
+}
+
+// ----------------------------------------------------------------------
+// JobResult
+// ----------------------------------------------------------------------
+
+/// Outcome of a successfully executed job.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobResult {
+    Dense { metric: f64 },
+    Prune { method: String, sparsity: f64, metric: f64 },
+    Nm { n: usize, m: usize, metric: f64 },
+    Quant { method: String, bits: u32, metric: f64 },
+    JointNmQuant { n: usize, m: usize, bits: u32, metric: f64 },
+    /// `cached` is true when the database came from the engine cache.
+    DbBuilt { kind: String, entries: usize, cached: bool },
+    Solved { target: String, requested: f64, achieved: f64, metric: f64, cached_db: bool },
+    Infeasible { target: String, requested: f64 },
+}
+
+impl JobResult {
+    pub fn op(&self) -> &'static str {
+        match self {
+            JobResult::Dense { .. } => "dense",
+            JobResult::Prune { .. } => "prune",
+            JobResult::Nm { .. } => "nm",
+            JobResult::Quant { .. } => "quant",
+            JobResult::JointNmQuant { .. } => "joint",
+            JobResult::DbBuilt { .. } => "db",
+            JobResult::Solved { .. } | JobResult::Infeasible { .. } => "solve",
+        }
+    }
+
+    /// The headline metric, when the job produced one.
+    pub fn metric(&self) -> Option<f64> {
+        match self {
+            JobResult::Dense { metric }
+            | JobResult::Prune { metric, .. }
+            | JobResult::Nm { metric, .. }
+            | JobResult::Quant { metric, .. }
+            | JobResult::JointNmQuant { metric, .. }
+            | JobResult::Solved { metric, .. } => Some(*metric),
+            JobResult::DbBuilt { .. } | JobResult::Infeasible { .. } => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("op", self.op());
+        match self {
+            JobResult::Dense { metric } => {
+                o.set("metric", *metric);
+            }
+            JobResult::Prune { method, sparsity, metric } => {
+                o.set("method", method.as_str())
+                    .set("sparsity", *sparsity)
+                    .set("metric", *metric);
+            }
+            JobResult::Nm { n, m, metric } => {
+                o.set("n", *n).set("m", *m).set("metric", *metric);
+            }
+            JobResult::Quant { method, bits, metric } => {
+                o.set("method", method.as_str()).set("bits", *bits).set("metric", *metric);
+            }
+            JobResult::JointNmQuant { n, m, bits, metric } => {
+                o.set("n", *n).set("m", *m).set("bits", *bits).set("metric", *metric);
+            }
+            JobResult::DbBuilt { kind, entries, cached } => {
+                o.set("kind", kind.as_str()).set("entries", *entries).set("cached", *cached);
+            }
+            JobResult::Solved { target, requested, achieved, metric, cached_db } => {
+                o.set("target", target.as_str())
+                    .set("requested", *requested)
+                    .set("achieved", *achieved)
+                    .set("metric", *metric)
+                    .set("cached_db", *cached_db);
+            }
+            JobResult::Infeasible { target, requested } => {
+                o.set("target", target.as_str())
+                    .set("requested", *requested)
+                    .set("infeasible", true);
+            }
+        }
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobResult> {
+        let op = j.req_str("op")?;
+        match op {
+            "dense" => Ok(JobResult::Dense { metric: j.req_f64("metric")? }),
+            "prune" => Ok(JobResult::Prune {
+                method: j.req_str("method")?.to_string(),
+                sparsity: j.req_f64("sparsity")?,
+                metric: j.req_f64("metric")?,
+            }),
+            "nm" => Ok(JobResult::Nm {
+                n: req_count(j, "n", 1)?,
+                m: req_count(j, "m", 1)?,
+                metric: j.req_f64("metric")?,
+            }),
+            "quant" => Ok(JobResult::Quant {
+                method: j.req_str("method")?.to_string(),
+                bits: req_bits(j)?,
+                metric: j.req_f64("metric")?,
+            }),
+            "joint" => Ok(JobResult::JointNmQuant {
+                n: req_count(j, "n", 1)?,
+                m: req_count(j, "m", 1)?,
+                bits: req_bits(j)?,
+                metric: j.req_f64("metric")?,
+            }),
+            "db" => Ok(JobResult::DbBuilt {
+                kind: j.req_str("kind")?.to_string(),
+                entries: req_count(j, "entries", 0)?,
+                cached: j.get("cached").and_then(|b| b.as_bool()).unwrap_or(false),
+            }),
+            "solve" => {
+                if j.get("infeasible").and_then(|b| b.as_bool()).unwrap_or(false) {
+                    Ok(JobResult::Infeasible {
+                        target: j.req_str("target")?.to_string(),
+                        requested: j.req_f64("requested")?,
+                    })
+                } else {
+                    Ok(JobResult::Solved {
+                        target: j.req_str("target")?.to_string(),
+                        requested: j.req_f64("requested")?,
+                        achieved: j.req_f64("achieved")?,
+                        metric: j.req_f64("metric")?,
+                        cached_db: j.get("cached_db").and_then(|b| b.as_bool()).unwrap_or(false),
+                    })
+                }
+            }
+            other => Err(crate::err!("unknown result op '{other}'")),
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Requests (jobs + control ops) — the line-protocol vocabulary
+// ----------------------------------------------------------------------
+
+/// Server control operations. Shutdown is a typed signal — the old
+/// implementation abused an `ObcError` with the message "shutdown" as
+/// control flow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlOp {
+    /// Drain the queue, then stop.
+    Shutdown,
+    /// Liveness + registry summary.
+    Health,
+    /// Counter snapshot.
+    Metrics,
+}
+
+/// One parsed request line.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Job {
+        /// Client-supplied correlation id, echoed in the response.
+        id: Option<String>,
+        model: String,
+        spec: JobSpec,
+    },
+    Control(ControlOp),
+}
+
+impl Request {
+    pub fn parse_line(line: &str) -> Result<Request> {
+        let j = parse(line)?;
+        let op = j.req_str("op")?;
+        match op {
+            "shutdown" => Ok(Request::Control(ControlOp::Shutdown)),
+            "health" => Ok(Request::Control(ControlOp::Health)),
+            "metrics" => Ok(Request::Control(ControlOp::Metrics)),
+            _ => Ok(Request::Job {
+                id: j.get("id").and_then(|v| v.as_str()).map(|s| s.to_string()),
+                model: j.req_str("model")?.to_string(),
+                spec: JobSpec::from_json(&j)?,
+            }),
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Execution
+// ----------------------------------------------------------------------
+
+/// Resolve a database spec through the engine's single-flight cache.
+pub fn db_for_spec(engine: &CompressionEngine, spec: &DbSpec) -> Result<(Arc<ModelDb>, bool)> {
+    engine.db_cached(&spec.cache_key(), || match spec.kind {
+        DbKind::Sparsity => engine.build_sparsity_db(spec.method, &spec.grid, spec.scope),
+        DbKind::MixedGpu => engine.build_mixed_gpu_db(spec.scope),
+        DbKind::MixedGpuBaseline => engine.build_mixed_gpu_db_baseline(spec.scope),
+        DbKind::Cpu => engine.build_cpu_db(&spec.grid, spec.scope),
+    })
+}
+
+/// Execute one job against an engine. Pure with respect to the engine's
+/// model state (jobs clone-and-stitch; they never mutate the dense
+/// model), which is what makes concurrent execution and coalescing safe.
+pub fn execute(engine: &CompressionEngine, spec: &JobSpec) -> Result<JobResult> {
+    match spec {
+        JobSpec::Dense => Ok(JobResult::Dense { metric: engine.dense_metric() }),
+        JobSpec::Prune { method, sparsity, scope } => {
+            let metric = engine.run_uniform_sparsity(*method, *sparsity, *scope)?;
+            Ok(JobResult::Prune {
+                method: prune_method_token(*method),
+                sparsity: *sparsity,
+                metric,
+            })
+        }
+        JobSpec::Nm { method, n, m, scope } => {
+            let metric = engine.run_nm(*method, *n, *m, *scope)?;
+            Ok(JobResult::Nm { n: *n, m: *m, metric })
+        }
+        JobSpec::Quant { method, bits, symmetric, scope, corrected } => {
+            let metric = engine.run_quant(*method, *bits, *symmetric, *scope, *corrected)?;
+            Ok(JobResult::Quant {
+                method: quant_method_token(*method).to_string(),
+                bits: *bits,
+                metric,
+            })
+        }
+        JobSpec::JointNmQuant { n, m, bits, scope } => {
+            let metric = engine.run_joint_nm_quant(*n, *m, *bits, *scope)?;
+            Ok(JobResult::JointNmQuant { n: *n, m: *m, bits: *bits, metric })
+        }
+        JobSpec::BuildDb(db) => {
+            let (built, cached) = db_for_spec(engine, db)?;
+            Ok(JobResult::DbBuilt {
+                kind: db.kind.token().to_string(),
+                entries: built.len(),
+                cached,
+            })
+        }
+        JobSpec::Solve { db, target, value } => {
+            // GMP has no per-layer solver — that is the point of the
+            // baseline; it binary-searches a global threshold instead.
+            // Only for the sparsity DB: an explicit cpu/mixed kind must
+            // solve over its requested database (gmp is a no-op
+            // spelling of `method` there), not silently switch paths.
+            if *target == TargetKind::Flop
+                && db.kind == DbKind::Sparsity
+                && db.method == PruneMethod::Gmp
+            {
+                let (metric, achieved) = engine.eval_gmp_flop_target(db.scope, *value)?;
+                return Ok(JobResult::Solved {
+                    target: target.token().to_string(),
+                    requested: *value,
+                    achieved,
+                    metric,
+                    cached_db: false,
+                });
+            }
+            let (built, cached) = db_for_spec(engine, db)?;
+            let solved = match target {
+                TargetKind::Flop => engine.eval_flop_target(&built, db.scope, *value),
+                TargetKind::Bop => engine.eval_bop_target(&built, db.scope, *value),
+                TargetKind::CpuTime => engine.eval_time_target(&built, db.scope, *value),
+            };
+            Ok(match solved {
+                Some((metric, achieved)) => JobResult::Solved {
+                    target: target.token().to_string(),
+                    requested: *value,
+                    achieved,
+                    metric,
+                    cached_db: cached,
+                },
+                None => JobResult::Infeasible {
+                    target: target.token().to_string(),
+                    requested: *value,
+                },
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_specs() -> Vec<JobSpec> {
+        vec![
+            JobSpec::Dense,
+            JobSpec::Prune {
+                method: PruneMethod::ExactObs,
+                sparsity: 0.6,
+                scope: LayerScope::All,
+            },
+            JobSpec::Prune {
+                method: PruneMethod::AdaPruneIter(4),
+                sparsity: 0.5,
+                scope: LayerScope::SkipFirstLast,
+            },
+            JobSpec::Nm {
+                method: PruneMethod::ExactObs,
+                n: 2,
+                m: 4,
+                scope: LayerScope::SkipFirstLast,
+            },
+            JobSpec::Quant {
+                method: QuantMethod::Obq,
+                bits: 4,
+                symmetric: true,
+                scope: LayerScope::All,
+                corrected: false,
+            },
+            JobSpec::JointNmQuant { n: 2, m: 4, bits: 8, scope: LayerScope::SkipFirstLast },
+            JobSpec::BuildDb(DbSpec {
+                kind: DbKind::Sparsity,
+                method: PruneMethod::ExactObs,
+                grid: vec![0.0, 0.5, 0.75],
+                scope: LayerScope::All,
+            }),
+            JobSpec::BuildDb(DbSpec {
+                kind: DbKind::MixedGpu,
+                method: PruneMethod::ExactObs,
+                grid: vec![],
+                scope: LayerScope::SkipFirstLast,
+            }),
+            JobSpec::Solve {
+                db: DbSpec {
+                    kind: DbKind::Cpu,
+                    method: PruneMethod::ExactObs,
+                    grid: vec![0.0, 0.5],
+                    scope: LayerScope::SkipFirstLast,
+                },
+                target: TargetKind::CpuTime,
+                value: 3.0,
+            },
+            JobSpec::Solve {
+                db: DbSpec {
+                    kind: DbKind::MixedGpuBaseline,
+                    method: PruneMethod::AdaPrune,
+                    grid: vec![],
+                    scope: LayerScope::SkipFirstLast,
+                },
+                target: TargetKind::Bop,
+                value: 8.0,
+            },
+        ]
+    }
+
+    fn all_results() -> Vec<JobResult> {
+        vec![
+            JobResult::Dense { metric: 82.5 },
+            JobResult::Prune { method: "exactobs".into(), sparsity: 0.6, metric: 80.1 },
+            JobResult::Nm { n: 2, m: 4, metric: 79.25 },
+            JobResult::Quant { method: "obq".into(), bits: 4, metric: 81.0 },
+            JobResult::JointNmQuant { n: 2, m: 4, bits: 8, metric: 78.5 },
+            JobResult::DbBuilt { kind: "sparsity".into(), entries: 40, cached: true },
+            JobResult::Solved {
+                target: "flop".into(),
+                requested: 2.0,
+                achieved: 2.07,
+                metric: 74.9,
+                cached_db: true,
+            },
+            JobResult::Infeasible { target: "bop".into(), requested: 64.0 },
+        ]
+    }
+
+    /// Every JobSpec variant round-trips through the wire codec.
+    #[test]
+    fn spec_roundtrip_all_variants() {
+        for spec in all_specs() {
+            let j = spec.to_json();
+            let line = j.to_string_compact();
+            let back = JobSpec::from_json(&parse(&line).unwrap())
+                .unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(spec, back, "wire line: {line}");
+        }
+    }
+
+    /// Every JobResult variant round-trips through the wire codec.
+    #[test]
+    fn result_roundtrip_all_variants() {
+        for res in all_results() {
+            let line = res.to_json().to_string_compact();
+            let back = JobResult::from_json(&parse(&line).unwrap())
+                .unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(res, back, "wire line: {line}");
+        }
+    }
+
+    #[test]
+    fn request_parses_jobs_and_control_ops() {
+        let r = Request::parse_line(
+            r#"{"id":"j1","model":"rneta","op":"prune","method":"exactobs","sparsity":0.5}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Job { id, model, spec } => {
+                assert_eq!(id.as_deref(), Some("j1"));
+                assert_eq!(model, "rneta");
+                assert_eq!(spec.op(), "prune");
+            }
+            _ => panic!("expected a job"),
+        }
+        assert_eq!(
+            Request::parse_line(r#"{"op":"shutdown"}"#).unwrap(),
+            Request::Control(ControlOp::Shutdown)
+        );
+        assert_eq!(
+            Request::parse_line(r#"{"op":"health"}"#).unwrap(),
+            Request::Control(ControlOp::Health)
+        );
+        assert_eq!(
+            Request::parse_line(r#"{"op":"metrics"}"#).unwrap(),
+            Request::Control(ControlOp::Metrics)
+        );
+    }
+
+    /// Malformed numeric fields fail at the wire boundary with a typed
+    /// error — they never reach a kernel as a saturated cast.
+    #[test]
+    fn numeric_fields_are_validated_not_cast() {
+        for bad in [
+            r#"{"op":"nm","n":2,"m":0}"#,                     // m=0 → div-by-zero downstream
+            r#"{"op":"nm","n":4,"m":2}"#,                     // n > m
+            r#"{"op":"nm","n":1.5,"m":4}"#,                   // fractional
+            r#"{"op":"joint","n":-2,"m":4,"bits":8}"#,        // negative
+            r#"{"op":"quant","method":"obq","bits":-4}"#,     // negative bits
+            r#"{"op":"quant","method":"obq","bits":64}"#,     // > 32
+            r#"{"op":"prune","method":"gmp","sparsity":1.5}"#, // > 1
+            r#"{"op":"solve","target":"flop","value":0.5}"#,  // factor < 1
+            r#"{"op":"db","grid":[0.5,2.0]}"#,                // grid out of range
+        ] {
+            let j = parse(bad).unwrap();
+            assert!(JobSpec::from_json(&j).is_err(), "'{bad}' must be rejected");
+        }
+        // The boundary values stay legal.
+        for good in [
+            r#"{"op":"nm","n":4,"m":4}"#,
+            r#"{"op":"prune","method":"gmp","sparsity":1}"#,
+            r#"{"op":"quant","method":"obq","bits":32}"#,
+            r#"{"op":"solve","target":"flop","value":1}"#,
+        ] {
+            let j = parse(good).unwrap();
+            assert!(JobSpec::from_json(&j).is_ok(), "'{good}' must parse");
+        }
+    }
+
+    #[test]
+    fn cache_key_normalizes_irrelevant_fields() {
+        // The mixed-GPU kinds ignore method and grid: different
+        // spellings must share one cache entry (and one build).
+        let a = DbSpec {
+            kind: DbKind::MixedGpu,
+            method: PruneMethod::ExactObs,
+            grid: vec![],
+            scope: LayerScope::SkipFirstLast,
+        };
+        let b = DbSpec {
+            kind: DbKind::MixedGpu,
+            method: PruneMethod::Gmp,
+            grid: vec![0.0, 0.5, 0.9],
+            scope: LayerScope::SkipFirstLast,
+        };
+        assert_eq!(a.cache_key(), b.cache_key());
+        // The CPU kind ignores method but NOT the grid.
+        let cpu = |method, grid| DbSpec {
+            kind: DbKind::Cpu,
+            method,
+            grid,
+            scope: LayerScope::All,
+        };
+        let c1 = cpu(PruneMethod::ExactObs, vec![0.5]);
+        let c2 = cpu(PruneMethod::Gmp, vec![0.5]);
+        let c3 = cpu(PruneMethod::Gmp, vec![0.9]);
+        assert_eq!(c1.cache_key(), c2.cache_key());
+        assert_ne!(c2.cache_key(), c3.cache_key());
+        // Sparsity keys on everything.
+        let sp = |method| DbSpec {
+            kind: DbKind::Sparsity,
+            method,
+            grid: vec![0.5],
+            scope: LayerScope::All,
+        };
+        assert_ne!(sp(PruneMethod::ExactObs).cache_key(), sp(PruneMethod::Gmp).cache_key());
+    }
+
+    #[test]
+    fn request_errors_are_typed_not_sentinel() {
+        // Unknown ops and missing fields are plain errors; nothing
+        // string-matches on the message for control flow anymore.
+        assert!(Request::parse_line(r#"{"op":"explode","model":"x"}"#).is_err());
+        assert!(Request::parse_line(r#"{"op":"prune"}"#).is_err()); // no model
+        assert!(Request::parse_line("not json").is_err());
+    }
+
+    #[test]
+    fn coalesce_key_is_canonical() {
+        // Same logical job, different field order on the wire → same key.
+        let a = JobSpec::from_json(
+            &parse(r#"{"op":"prune","method":"exactobs","sparsity":0.5}"#).unwrap(),
+        )
+        .unwrap();
+        let b = JobSpec::from_json(
+            &parse(r#"{"sparsity":0.5,"method":"exactobs","op":"prune"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(a.coalesce_key("m"), b.coalesce_key("m"));
+        assert_ne!(a.coalesce_key("m"), a.coalesce_key("other-model"));
+    }
+
+    #[test]
+    fn execute_runs_against_synthetic_engine() {
+        let e = CompressionEngine::synthetic(7).unwrap();
+        let r = execute(&e, &JobSpec::Dense).unwrap();
+        assert!(matches!(r, JobResult::Dense { metric } if metric.is_finite()));
+        let r = execute(
+            &e,
+            &JobSpec::Prune {
+                method: PruneMethod::Gmp,
+                sparsity: 0.5,
+                scope: LayerScope::All,
+            },
+        )
+        .unwrap();
+        assert!(r.metric().unwrap().is_finite());
+        // Solve twice over the same DB spec: second run hits the cache.
+        let solve = JobSpec::Solve {
+            db: DbSpec {
+                kind: DbKind::Sparsity,
+                method: PruneMethod::Gmp,
+                grid: vec![0.0, 0.5, 0.9],
+                scope: LayerScope::All,
+            },
+            target: TargetKind::Flop,
+            value: 1.5,
+        };
+        let first = execute(&e, &solve).unwrap();
+        let second = execute(&e, &solve).unwrap();
+        match (&first, &second) {
+            (JobResult::Solved { cached_db: c1, .. }, JobResult::Solved { cached_db: c2, .. }) => {
+                assert!(!c1, "first solve builds");
+                assert!(c2, "second solve must hit the engine cache");
+            }
+            other => panic!("expected two Solved results, got {other:?}"),
+        }
+    }
+}

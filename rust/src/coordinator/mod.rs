@@ -8,6 +8,8 @@
 //! the same one that scales linearly with cores/GPUs (paper §A.5:
 //! "ExactOBS is essentially perfectly parallelizable").
 
+pub mod engine;
+pub mod jobs;
 pub mod methods;
 pub mod pipeline;
 

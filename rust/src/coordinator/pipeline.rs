@@ -1,75 +1,61 @@
-//! End-to-end experiment pipeline.
+//! Compatibility facade over [`CompressionEngine`].
 //!
-//! A [`Pipeline`] owns a loaded model bundle, its calibration Hessians
-//! (computed once and shared), and a thread pool, and exposes the
-//! experiment primitives every table/figure bench is built from:
-//!
-//! * uniform N:M / quantization runs,
-//! * sparsity / quantization / joint **databases** (ExactOBS traces are
-//!   computed once per layer and reused across all levels — the paper's
-//!   "entire database in approximately the time of one run"),
-//! * SPDY-solved non-uniform FLOP/BOP/latency-constrained models,
-//! * stitch → statistics-correct → evaluate.
+//! [`Pipeline`] is the historical single-owner entry point the
+//! benches/examples were written against. It now simply wraps a shared
+//! [`CompressionEngine`] (where all the experiment logic lives — see
+//! `engine.rs`) and preserves the old panicking signatures: facade
+//! methods `expect` the engine's typed errors, which is the right
+//! behavior for a bench driving a model it just loaded. Long-running
+//! multi-model services should use [`crate::server`] / the engine
+//! directly instead.
+
+pub use super::engine::{CompressionEngine, LayerScope};
 
 use super::methods::{PruneMethod, QuantMethod};
-use super::{calibrate, CalibOpts, LayerHessians};
-use crate::compress::exact_obs::{self, ObsOpts};
-use crate::compress::obq::{self, ObqOpts};
-use crate::compress::{baselines::gmp, layer_sq_err, CompressResult};
-use crate::cost::{self, Level};
-use crate::db::{Entry, ModelDb};
-use crate::eval;
-use crate::linalg::Mat;
-use crate::nn::models::{load_bundle, task_of, ModelBundle};
+use super::{CalibOpts, LayerHessians};
+use crate::db::ModelDb;
+use crate::nn::models::ModelBundle;
 use crate::nn::{CompressibleModel, LayerInfo};
-use crate::solver::{self, Choice};
-use crate::stats;
-use crate::util::pool::ThreadPool;
 use std::path::Path;
 use std::sync::Arc;
 
-/// Which layers participate in compression.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum LayerScope {
-    /// Every compressible layer.
-    All,
-    /// Skip the first and last layers (paper Tables 2, Fig. 2 keep the
-    /// first conv / classifier dense).
-    SkipFirstLast,
-}
-
-/// The pipeline state for one model.
+/// The pipeline facade for one model.
 pub struct Pipeline {
-    pub bundle: ModelBundle,
-    pub hessians: LayerHessians,
-    pub pool: ThreadPool,
-    pub calib: CalibOpts,
-    /// Evaluation subset size (test split cap for cheap sweeps).
-    pub eval_samples: usize,
+    engine: Arc<CompressionEngine>,
 }
 
 impl Pipeline {
     /// Load a model from the artifacts directory and calibrate it with
     /// paper-default options (1024 samples; 2× augmentation for images).
     pub fn load(models_dir: &Path, model: &str) -> crate::util::error::Result<Pipeline> {
-        let mut calib = CalibOpts::default();
-        if task_of(model) == "image" {
-            calib.augment = 2; // flips (the 10× of the paper is overkill here)
-        }
-        Pipeline::load_with(models_dir, model, calib)
+        Ok(Pipeline { engine: Arc::new(CompressionEngine::load(models_dir, model)?) })
     }
 
-    pub fn load_with(models_dir: &Path, model: &str, calib: CalibOpts) -> crate::util::error::Result<Pipeline> {
-        let bundle = load_bundle(models_dir, model)?;
-        crate::info!("pipeline", "calibrating {model} ({} samples)", calib.n_samples);
-        let hessians = calibrate(bundle.model.as_ref(), &bundle, &calib)?;
-        Ok(Pipeline {
-            bundle,
-            hessians,
-            pool: ThreadPool::default_size(),
-            calib,
-            eval_samples: 1024,
-        })
+    pub fn load_with(
+        models_dir: &Path,
+        model: &str,
+        calib: CalibOpts,
+    ) -> crate::util::error::Result<Pipeline> {
+        Ok(Pipeline { engine: Arc::new(CompressionEngine::load_with(models_dir, model, calib)?) })
+    }
+
+    /// Wrap pre-built state (tests construct tiny synthetic pipelines
+    /// this way; the old struct-literal construction moved here when the
+    /// state was extracted into the engine).
+    pub fn from_parts(
+        bundle: ModelBundle,
+        hessians: LayerHessians,
+        calib: CalibOpts,
+        eval_samples: usize,
+    ) -> Pipeline {
+        Pipeline {
+            engine: Arc::new(CompressionEngine::new(bundle, hessians, calib, eval_samples)),
+        }
+    }
+
+    /// Wrap an existing shared engine.
+    pub fn from_engine(engine: Arc<CompressionEngine>) -> Pipeline {
+        Pipeline { engine }
     }
 
     /// Bench/example convenience: load from the default artifacts dir
@@ -78,8 +64,8 @@ impl Pipeline {
     pub fn try_load_for_bench(model: &str) -> Option<Pipeline> {
         let dir = crate::util::io::artifacts_dir().join("models");
         match Pipeline::load(&dir, model) {
-            Ok(mut p) => {
-                p.eval_samples = 512;
+            Ok(p) => {
+                p.set_eval_samples(512);
                 Some(p)
             }
             Err(e) => {
@@ -89,69 +75,59 @@ impl Pipeline {
         }
     }
 
+    /// The shared engine (for spawning concurrent jobs off this state).
+    pub fn engine(&self) -> &Arc<CompressionEngine> {
+        &self.engine
+    }
+
     pub fn model(&self) -> &dyn CompressibleModel {
-        self.bundle.model.as_ref()
+        self.engine.model()
+    }
+
+    pub fn bundle(&self) -> &ModelBundle {
+        self.engine.bundle()
+    }
+
+    pub fn hessians(&self) -> &LayerHessians {
+        self.engine.hessians()
+    }
+
+    pub fn calib(&self) -> &CalibOpts {
+        self.engine.calib()
+    }
+
+    pub fn eval_samples(&self) -> usize {
+        self.engine.eval_samples()
+    }
+
+    pub fn set_eval_samples(&self, n: usize) {
+        self.engine.set_eval_samples(n);
     }
 
     /// Dense reference metric on the test split.
     pub fn dense_metric(&self) -> f64 {
-        eval::evaluate_bundle(&self.bundle, self.model(), self.eval_samples)
+        self.engine.dense_metric()
     }
 
     /// Layers in scope, in forward order.
     pub fn layers(&self, scope: LayerScope) -> Vec<LayerInfo> {
-        let all = self.model().layers();
-        match scope {
-            LayerScope::All => all,
-            LayerScope::SkipFirstLast => {
-                let n = all.len();
-                all.into_iter()
-                    .enumerate()
-                    .filter(|(i, _)| *i != 0 && *i + 1 != n)
-                    .map(|(_, l)| l)
-                    .collect()
-            }
-        }
-    }
-
-    fn hessian(&self, layer: &str) -> Arc<crate::compress::hessian::LayerHessian> {
-        Arc::clone(
-            self.hessians
-                .get(layer)
-                .unwrap_or_else(|| panic!("no Hessian for layer '{layer}'")),
-        )
+        self.engine.layers(scope)
     }
 
     /// Evaluate a stitched model with the task-default statistics
     /// correction applied.
-    pub fn eval_corrected(&self, mut model: Box<dyn CompressibleModel>) -> f64 {
-        let kind = stats::default_correction(self.model().name());
-        stats::apply_with_dense(kind, &mut model, self.model(), &self.bundle);
-        eval::evaluate_bundle(&self.bundle, model.as_ref(), self.eval_samples)
+    pub fn eval_corrected(&self, model: Box<dyn CompressibleModel>) -> f64 {
+        self.engine.eval_corrected(model)
     }
 
     /// Evaluate without any statistics correction (Table 9's "raw" mode).
     pub fn eval_raw(&self, model: Box<dyn CompressibleModel>) -> f64 {
-        eval::evaluate_bundle(&self.bundle, model.as_ref(), self.eval_samples)
+        self.engine.eval_raw(model)
     }
-
-    // ------------------------------------------------------------------
-    // Uniform experiments
-    // ------------------------------------------------------------------
 
     /// Uniform N:M pruning of all in-scope layers → corrected metric.
     pub fn run_nm(&self, method: PruneMethod, n: usize, m: usize, scope: LayerScope) -> f64 {
-        let mut model = self.model().clone_box();
-        for l in self.layers(scope) {
-            if l.d_col % m != 0 {
-                continue; // first conv (d_col 27) cannot hold the pattern
-            }
-            let w = self.model().get_weight(&l.name);
-            let h = self.hessian(&l.name);
-            let r = method.prune_nm(&w, &h, n, m);
-            model.set_weight(&l.name, &r.w);
-        }
-        self.eval_corrected(model)
+        self.engine.run_nm(method, n, m, scope).expect("run_nm")
     }
 
     /// Uniform weight quantization of all in-scope layers.
@@ -163,200 +139,44 @@ impl Pipeline {
         scope: LayerScope,
         corrected: bool,
     ) -> f64 {
-        let mut model = self.model().clone_box();
-        for l in self.layers(scope) {
-            let w = self.model().get_weight(&l.name);
-            let h = self.hessian(&l.name);
-            let r = method.quantize(&w, &h, bits, symmetric);
-            model.set_weight(&l.name, &r.w);
-        }
-        if corrected {
-            self.eval_corrected(model)
-        } else {
-            self.eval_raw(model)
-        }
+        self.engine
+            .run_quant(method, bits, symmetric, scope, corrected)
+            .expect("run_quant")
     }
 
     /// Uniform unstructured pruning at one sparsity (Appendix A.6 setup).
     pub fn run_uniform_sparsity(&self, method: PruneMethod, sparsity: f64, scope: LayerScope) -> f64 {
-        let mut model = self.model().clone_box();
-        for l in self.layers(scope) {
-            let w = self.model().get_weight(&l.name);
-            let h = self.hessian(&l.name);
-            let r = method.prune(&w, &h, sparsity);
-            model.set_weight(&l.name, &r.w);
-        }
-        self.eval_corrected(model)
+        self.engine
+            .run_uniform_sparsity(method, sparsity, scope)
+            .expect("run_uniform_sparsity")
     }
 
-    // ------------------------------------------------------------------
-    // Databases
-    // ------------------------------------------------------------------
-
     /// Unstructured-sparsity database over the Eq. 10 grid.
-    ///
-    /// For ExactOBS the per-layer traces are computed ONCE and
-    /// reconstructed per level; baselines recompute per level.
     pub fn build_sparsity_db(
         &self,
         method: PruneMethod,
         grid: &[f64],
         scope: LayerScope,
     ) -> ModelDb {
-        let mut db = ModelDb::new(self.model().name());
-        for l in self.layers(scope) {
-            let w = self.model().get_weight(&l.name);
-            let h = self.hessian(&l.name);
-            match method {
-                PruneMethod::ExactObs => {
-                    let max_s = grid.iter().cloned().fold(0.0, f64::max);
-                    let opts = ObsOpts { trace_cap: (max_s + 0.05).min(1.0) };
-                    let traces = exact_obs::sweep_all_rows(&w, &h, &opts);
-                    for &s in grid {
-                        let k = ((w.rows * w.cols) as f64 * s).round() as usize;
-                        let counts = exact_obs::global_select(&traces, k);
-                        let res = exact_obs::reconstruct_from_traces(&w, &h, &traces, &counts);
-                        db.insert(Entry::from_mat(
-                            &l.name,
-                            Level { sparsity: s, ..Level::dense() },
-                            &res.w,
-                            res.sq_err,
-                        ));
-                    }
-                }
-                _ => {
-                    for &s in grid {
-                        let res = method.prune(&w, &h, s);
-                        db.insert(Entry::from_mat(
-                            &l.name,
-                            Level { sparsity: s, ..Level::dense() },
-                            &res.w,
-                            res.sq_err,
-                        ));
-                    }
-                }
-            }
-        }
-        db
+        self.engine.build_sparsity_db(method, grid, scope).expect("build_sparsity_db")
     }
 
     /// Joint GPU database (Fig. 2): {8w8a, 4w4a} × {dense, 2:4} per layer.
-    /// Sparsify first, then OBQ-quantize the survivors (paper §6). The
-    /// level loss includes the activation-quantization penalty
-    /// ‖Ŵ·(X − q(X))‖² measured on a captured input sample, so the
-    /// solver sees the true cost of 4-bit activations.
     pub fn build_mixed_gpu_db(&self, scope: LayerScope) -> ModelDb {
-        let mut db = ModelDb::new(self.model().name());
-        let xs = self.capture_small_inputs(scope, 64);
-        for l in self.layers(scope) {
-            let w = self.model().get_weight(&l.name);
-            let h = self.hessian(&l.name);
-            let variants: Vec<(bool, Mat)> = vec![
-                (false, w.clone()),
-                (true, {
-                    if l.d_col % 4 == 0 {
-                        exact_obs::prune_nm(&w, &h, 2, 4).w
-                    } else {
-                        w.clone() // pattern-incompatible layer stays dense
-                    }
-                }),
-            ];
-            for (is_24, base) in variants {
-                for bits in [8u32, 4] {
-                    let o = ObqOpts::symmetric(bits); // symmetric per-channel (HW support)
-                    let res = if is_24 {
-                        obq::quantize_sparse(&base, &h, &o)
-                    } else {
-                        obq::quantize(&base, &h, &o)
-                    };
-                    // Loss vs the DENSE weights (res.sq_err is relative
-                    // to the pruned base and would hide the 2:4 error),
-                    // plus the activation-quantization penalty.
-                    let w_err = layer_sq_err(&w, &res.w, &h.h);
-                    let act_pen = act_quant_penalty(&res.w, &xs[&l.name], bits);
-                    db.insert(Entry::from_mat(
-                        &l.name,
-                        Level { sparsity: 0.0, w_bits: bits, a_bits: bits, is_24 },
-                        &res.w,
-                        w_err + act_pen,
-                    ));
-                }
-            }
-        }
-        db
-    }
-
-    /// Capture a small per-layer input sample (d_col × n) for activation
-    /// penalty estimation.
-    fn capture_small_inputs(
-        &self,
-        scope: LayerScope,
-        n: usize,
-    ) -> std::collections::BTreeMap<String, Mat> {
-        let xb = crate::nn::models::batch_slice(
-            &self.bundle.calib_x,
-            0,
-            self.bundle.calib_x.shape[0].min(n),
-        );
-        self.layers(scope)
-            .iter()
-            .map(|l| (l.name.clone(), self.model().capture_layer_input(&xb, &l.name)))
-            .collect()
+        self.engine.build_mixed_gpu_db(scope).expect("build_mixed_gpu_db")
     }
 
     /// CPU database (Fig. 2d): 4-block sparsity grid × int8 quantization.
-    /// Block-pruning traces are computed once per layer and reused across
-    /// all grid levels (same trick as the unstructured DB).
     pub fn build_cpu_db(&self, grid: &[f64], scope: LayerScope) -> ModelDb {
-        const C: usize = 4;
-        let mut db = ModelDb::new(self.model().name());
-        for l in self.layers(scope) {
-            let w = self.model().get_weight(&l.name);
-            let h = self.hessian(&l.name);
-            let max_s = grid.iter().cloned().fold(0.0, f64::max);
-            let traces =
-                exact_obs::sweep_all_rows_block(&w, &h, C, (max_s + 0.05).min(1.0));
-            for &s in grid {
-                let pruned = if s > 0.0 {
-                    let kb = ((w.rows * w.cols) as f64 * s / C as f64).round() as usize;
-                    let counts = exact_obs::global_select(&traces, kb);
-                    let mut out = w.clone();
-                    for r in 0..w.rows {
-                        if counts[r] == 0 {
-                            continue;
-                        }
-                        let mut pruned_idx = Vec::with_capacity(counts[r] * C);
-                        for &b in &traces[r].order[..counts[r]] {
-                            pruned_idx.extend(b * C..((b + 1) * C).min(w.cols));
-                        }
-                        let row =
-                            exact_obs::group_obs_reconstruct(w.row(r), &h.hinv, &pruned_idx);
-                        out.row_mut(r).copy_from_slice(&row);
-                    }
-                    let err = layer_sq_err(&w, &out, &h.h);
-                    CompressResult::new(out, err)
-                } else {
-                    CompressResult::new(w.clone(), 0.0)
-                };
-                let res = obq::quantize_sparse(&pruned.w, &h, &ObqOpts::symmetric(8));
-                // Total loss vs DENSE weights: pruning + quantization
-                // (res.sq_err alone is relative to the pruned weights and
-                // would make high sparsity look free to the solver).
-                let w_err = layer_sq_err(&w, &res.w, &h.h);
-                db.insert(Entry::from_mat(
-                    &l.name,
-                    Level { sparsity: s, w_bits: 8, a_bits: 8, is_24: false },
-                    &res.w,
-                    w_err,
-                ));
-            }
-        }
-        db
+        self.engine.build_cpu_db(grid, scope).expect("build_cpu_db")
     }
 
-    // ------------------------------------------------------------------
-    // Non-uniform (solver-driven) experiments
-    // ------------------------------------------------------------------
+    /// Baseline mixed GPU database (Appendix A.11).
+    pub fn build_mixed_gpu_db_baseline(&self, scope: LayerScope) -> ModelDb {
+        self.engine
+            .build_mixed_gpu_db_baseline(scope)
+            .expect("build_mixed_gpu_db_baseline")
+    }
 
     /// Solve a FLOP-reduction target over a sparsity DB and return the
     /// stitched (uncorrected) model plus the achieved reduction.
@@ -366,42 +186,7 @@ impl Pipeline {
         scope: LayerScope,
         reduction: f64,
     ) -> Option<(Box<dyn CompressibleModel>, f64)> {
-        let layers = self.layers(scope);
-        let dense_flops: f64 =
-            layers.iter().map(|l| cost::layer_flops(l, &Level::dense())).sum();
-        let budget = dense_flops / reduction;
-        let mut level_lists: Vec<Vec<Level>> = Vec::new();
-        let per_layer: Vec<Vec<Choice>> = layers
-            .iter()
-            .map(|l| {
-                let mut v: Vec<(Level, f64)> = db
-                    .levels_for(&l.name)
-                    .into_iter()
-                    .map(|(lv, e)| (*lv, e))
-                    .collect();
-                v.sort_by(|a, b| a.0.sparsity.partial_cmp(&b.0.sparsity).unwrap());
-                let choices = v
-                    .iter()
-                    .enumerate()
-                    .map(|(i, (lv, loss))| Choice {
-                        level: i,
-                        cost: cost::layer_flops(l, lv),
-                        loss: *loss,
-                    })
-                    .collect();
-                level_lists.push(v.into_iter().map(|(lv, _)| lv).collect());
-                choices
-            })
-            .collect();
-        let sol = solver::solve_dp(&per_layer, budget, 8192)?;
-        let mut assignment = Vec::new();
-        let mut used = 0.0;
-        for (li, l) in layers.iter().enumerate() {
-            let level = level_lists[li][sol[li]];
-            used += cost::layer_flops(l, &level);
-            assignment.push((l.name.clone(), level));
-        }
-        Some((db.stitch(self.model(), &assignment), dense_flops / used))
+        self.engine.flop_target_model(db, scope, reduction)
     }
 
     /// Solve a FLOP-reduction target over a sparsity DB, stitch, correct,
@@ -412,250 +197,58 @@ impl Pipeline {
         scope: LayerScope,
         reduction: f64,
     ) -> Option<(f64, f64)> {
-        // Budget accounts only in-scope layers (paper: "relative to the
-        // compute in compressible layers").
-        let (model, achieved) = self.flop_target_model(db, scope, reduction)?;
-        Some((self.eval_corrected(model), achieved))
+        self.engine.eval_flop_target(db, scope, reduction)
     }
 
-    /// GMP at a FLOP-reduction target: binary-search the global magnitude
-    /// threshold (GMP has no per-layer solver — that is the point of the
-    /// baseline).
+    /// GMP at a FLOP-reduction target (no per-layer solver).
     pub fn eval_gmp_flop_target(&self, scope: LayerScope, reduction: f64) -> f64 {
-        let layers = self.layers(scope);
-        let mats: Vec<Mat> = layers
-            .iter()
-            .map(|l| self.model().get_weight(&l.name))
-            .collect();
-        let dense_flops: f64 =
-            layers.iter().map(|l| cost::layer_flops(l, &Level::dense())).sum();
-        let budget = dense_flops / reduction;
-        // Binary search over the global sparsity fraction.
-        let (mut lo, mut hi) = (0.0f64, 1.0f64);
-        for _ in 0..40 {
-            let mid = 0.5 * (lo + hi);
-            let refs: Vec<&Mat> = mats.iter().collect();
-            let th = gmp::global_threshold(&refs, mid);
-            let flops: f64 = layers
-                .iter()
-                .zip(&mats)
-                .map(|(l, w)| {
-                    let s = w.data.iter().filter(|v| v.abs() < th).count() as f64
-                        / w.data.len() as f64;
-                    cost::layer_flops(l, &Level { sparsity: s, ..Level::dense() })
-                })
-                .sum();
-            if flops > budget {
-                lo = mid;
-            } else {
-                hi = mid;
-            }
-        }
-        let refs: Vec<&Mat> = mats.iter().collect();
-        let th = gmp::global_threshold(&refs, hi);
-        let mut model = self.model().clone_box();
-        for (l, w) in layers.iter().zip(&mats) {
-            let h = self.hessian(&l.name);
-            let r = gmp::prune_by_threshold(w, &h, th);
-            model.set_weight(&l.name, &r.w);
-        }
-        self.eval_corrected(model)
+        self.engine
+            .eval_gmp_flop_target(scope, reduction)
+            .expect("eval_gmp_flop_target")
+            .0
     }
 
     /// Mixed-precision BOP target (Fig. 2a-c): solve over the GPU DB.
-    /// Returns (metric, achieved BOP reduction).
     pub fn eval_bop_target(
         &self,
         db: &ModelDb,
         scope: LayerScope,
         reduction: f64,
     ) -> Option<(f64, f64)> {
-        let layers = self.layers(scope);
-        let dense_bops: f64 =
-            layers.iter().map(|l| cost::layer_bops(l, &Level::dense())).sum();
-        let budget = dense_bops / reduction;
-        self.solve_generic(db, &layers, budget, |l, lv| cost::layer_bops(l, lv))
-            .map(|(metric, used)| (metric, dense_bops / used))
+        self.engine.eval_bop_target(db, scope, reduction)
     }
 
-    /// CPU latency target (Fig. 2d). Returns (metric, achieved speedup
-    /// over the fp32 dense model).
+    /// CPU latency target (Fig. 2d).
     pub fn eval_time_target(
         &self,
         db: &ModelDb,
         scope: LayerScope,
         speedup: f64,
     ) -> Option<(f64, f64)> {
-        let layers = self.layers(scope);
-        let dense_t: f64 = layers.iter().map(|l| cost::layer_cpu_time(l, 0.0, false)).sum();
-        let budget = dense_t / speedup;
-        self.solve_generic(db, &layers, budget, |l, lv| {
-            cost::layer_cpu_time(l, lv.sparsity, lv.w_bits <= 8)
-        })
-        .map(|(metric, used)| (metric, dense_t / used))
+        self.engine.eval_time_target(db, scope, speedup)
     }
 
-    // ------------------------------------------------------------------
-    // Post-processing / sequential variants (appendix experiments)
-    // ------------------------------------------------------------------
-
-    /// Global AdaPrune (Table 5): given an already-pruned model, walk the
-    /// layers in forward order; for each, capture the inputs it sees
-    /// INSIDE the compressed model, and re-solve its surviving weights by
-    /// ridge regression against what the dense layer would output on
-    /// those same inputs — compensating error accumulated upstream.
+    /// Global AdaPrune (Table 5).
     pub fn global_adaprune(
         &self,
-        mut compressed: Box<dyn CompressibleModel>,
+        compressed: Box<dyn CompressibleModel>,
         scope: LayerScope,
         n_samples: usize,
     ) -> Box<dyn CompressibleModel> {
-        use crate::compress::baselines::adaprune::global_reoptimize_layer;
-        let n = self.bundle.calib_x.shape[0].min(n_samples);
-        let xb = crate::nn::models::batch_slice(&self.bundle.calib_x, 0, n);
-        for l in self.layers(scope) {
-            let x_comp = compressed.capture_layer_input(&xb, &l.name);
-            let w_dense = self.model().get_weight(&l.name);
-            let y_target = w_dense.matmul(&x_comp);
-            let w_pruned = compressed.get_weight(&l.name);
-            let fixed = global_reoptimize_layer(&w_pruned, &x_comp, &y_target, 1e-6);
-            compressed.set_weight(&l.name, &fixed);
-        }
-        compressed
+        self.engine.global_adaprune(compressed, scope, n_samples)
     }
 
-    /// Sequential OBQ (Appendix A.8): quantize layers in forward order;
-    /// each layer's Hessian comes from inputs propagated through the
-    /// already-quantized prefix, with the least-squares re-centering that
-    /// restores the zero-gradient assumption.
+    /// Sequential OBQ (Appendix A.8).
     pub fn run_quant_sequential(&self, bits: u32, scope: LayerScope, n_samples: usize) -> f64 {
-        let n = self.bundle.calib_x.shape[0].min(n_samples);
-        let xb = crate::nn::models::batch_slice(&self.bundle.calib_x, 0, n);
-        let mut model = self.model().clone_box();
-        for l in self.layers(scope) {
-            let x_comp = model.capture_layer_input(&xb, &l.name);
-            let w_dense = self.model().get_weight(&l.name);
-            let y_target = w_dense.matmul(&x_comp);
-            let res = obq::requantize_sequential(
-                &w_dense,
-                &y_target,
-                &x_comp,
-                self.calib.rel_damp,
-                &ObqOpts::new(bits),
-            );
-            model.set_weight(&l.name, &res.w);
-        }
-        self.eval_corrected(model)
+        self.engine.run_quant_sequential(bits, scope, n_samples)
     }
-
-    /// Baseline mixed GPU database (Appendix A.11): AdaPrune for the 2:4
-    /// mask + AdaQuant for the quantization — the strongest combination
-    /// of existing independent layer-wise methods.
-    pub fn build_mixed_gpu_db_baseline(&self, scope: LayerScope) -> ModelDb {
-        use crate::compress::baselines::{adaprune, adaquant};
-        let mut db = ModelDb::new(self.model().name());
-        let xs = self.capture_small_inputs(scope, 64);
-        for l in self.layers(scope) {
-            let w = self.model().get_weight(&l.name);
-            let h = self.hessian(&l.name);
-            for is_24 in [false, true] {
-                let base = if is_24 && l.d_col % 4 == 0 {
-                    adaprune::prune_nm(&w, &h, 2, 4).w
-                } else {
-                    w.clone()
-                };
-                for bits in [8u32, 4] {
-                    let mut o = adaquant::AdaQuantOpts::new(bits);
-                    o.symmetric = true;
-                    let res = adaquant::quantize(&base, &h, &o);
-                    // AdaQuant does not preserve zeros by construction;
-                    // re-zero the mask (quantized grids include 0).
-                    let mut wq = res.w;
-                    for i in 0..wq.data.len() {
-                        if base.data[i] == 0.0 {
-                            wq.data[i] = 0.0;
-                        }
-                    }
-                    let err = layer_sq_err(&w, &wq, &h.h)
-                        + act_quant_penalty(&wq, &xs[&l.name], bits);
-                    db.insert(Entry::from_mat(
-                        &l.name,
-                        Level { sparsity: 0.0, w_bits: bits, a_bits: bits, is_24 },
-                        &wq,
-                        err,
-                    ));
-                }
-            }
-        }
-        db
-    }
-
-    fn solve_generic(
-        &self,
-        db: &ModelDb,
-        layers: &[LayerInfo],
-        budget: f64,
-        cost_fn: impl Fn(&LayerInfo, &Level) -> f64,
-    ) -> Option<(f64, f64)> {
-        let mut level_lists: Vec<Vec<Level>> = Vec::new();
-        let per_layer: Vec<Vec<Choice>> = layers
-            .iter()
-            .map(|l| {
-                let mut v: Vec<(Level, f64)> = db
-                    .levels_for(&l.name)
-                    .into_iter()
-                    .map(|(lv, e)| (*lv, e))
-                    .collect();
-                v.sort_by(|a, b| a.0.key().cmp(&b.0.key()));
-                let choices = v
-                    .iter()
-                    .enumerate()
-                    .map(|(i, (lv, loss))| Choice { level: i, cost: cost_fn(l, lv), loss: *loss })
-                    .collect();
-                level_lists.push(v.into_iter().map(|(lv, _)| lv).collect());
-                choices
-            })
-            .collect();
-        let sol = solver::solve_dp(&per_layer, budget, 8192)?;
-        let mut assignment = Vec::new();
-        let mut used = 0.0;
-        for (li, l) in layers.iter().enumerate() {
-            let level = level_lists[li][sol[li]];
-            used += cost_fn(l, &level);
-            assignment.push((l.name.clone(), level));
-        }
-        let model = db.stitch(self.model(), &assignment);
-        let metric = self.eval_corrected(model);
-        Some((metric, used))
-    }
-}
-
-/// Activation-quantization penalty: ‖Ŵ·(X − q(X))‖² with a per-tensor
-/// asymmetric grid at `bits` on the captured inputs X.
-fn act_quant_penalty(w_hat: &Mat, x: &Mat, bits: u32) -> f64 {
-    if bits >= 16 {
-        return 0.0;
-    }
-    let grid = crate::compress::quant::fit_grid_per_tensor(
-        &x.data,
-        bits,
-        false,
-        crate::compress::quant::GridSearch::MinMax,
-    );
-    let mut dx = x.clone();
-    for v in dx.data.iter_mut() {
-        *v -= grid.quant(*v);
-    }
-    // w_hat is post-compression (often heavily pruned): the masked
-    // kernel skips a whole X-row stream per zeroed weight.
-    let y = w_hat.matmul_masked(&dx);
-    y.data.iter().map(|v| v * v).sum()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::compress::hessian::LayerHessian;
+    use crate::coordinator::calibrate;
     use crate::nn::cnn::tests::fake_resnet_bundle;
     use crate::nn::cnn::CnnModel;
     use crate::tensor::Tensor;
@@ -671,13 +264,7 @@ mod tests {
         };
         let calib = CalibOpts { n_samples: 96, batch: 48, ..Default::default() };
         let hessians = calibrate(bundle.model.as_ref(), &bundle, &calib).unwrap();
-        Pipeline {
-            bundle,
-            hessians,
-            pool: ThreadPool::new(1),
-            calib,
-            eval_samples: 64,
-        }
+        Pipeline::from_parts(bundle, hessians, calib, 64)
     }
 
     #[test]
@@ -721,17 +308,22 @@ mod tests {
     }
 
     #[test]
-    fn hessian_lookup_panics_on_unknown() {
+    fn unknown_layer_surfaces_as_engine_error() {
         let p = tiny_pipeline();
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            p.hessian("nonexistent.layer")
-        }));
-        assert!(result.is_err());
+        let err = p.engine().hessian("nonexistent.layer").unwrap_err();
+        assert!(err.to_string().contains("nonexistent.layer"));
     }
 
     #[test]
     fn synthetic_hessian_helper_matches_dims() {
         let h = LayerHessian::synthetic(24, 9);
         assert_eq!(h.d_col(), 24);
+    }
+
+    #[test]
+    fn eval_samples_setter_shared_with_engine() {
+        let p = tiny_pipeline();
+        p.set_eval_samples(32);
+        assert_eq!(p.engine().eval_samples(), 32);
     }
 }

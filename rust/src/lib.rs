@@ -17,8 +17,14 @@
 //! * [`db`] + [`solver`] + [`cost`] — the non-uniform compression pipeline:
 //!   model database, SPDY-style DP solver, FLOP/BOP/CPU-latency models.
 //! * [`stats`] — batch-norm reset and mean/variance correction (Eq. 9).
-//! * [`coordinator`] — the L3 orchestration layer: job scheduling across a
-//!   thread pool, experiment pipelines, metrics.
+//! * [`coordinator`] — the L3 orchestration layer: the shared
+//!   [`coordinator::engine::CompressionEngine`] (bundle + Hessians +
+//!   memoized databases behind `Arc`), the typed job vocabulary
+//!   ([`coordinator::jobs`]), and the `Pipeline` compatibility facade.
+//! * [`server`] — the concurrent compression service: bounded request
+//!   queue, per-model registry with single-flight calibration, job
+//!   coalescing, metrics, and the line protocol behind
+//!   `examples/serve_compress.rs` / `obc serve`.
 //! * [`runtime`] — kernel dispatch. By default every kernel runs on the
 //!   native Rust implementations, with the per-row ExactOBS/OBQ sweeps
 //!   fanned out over the shared in-tree thread pool (`util::pool`) —
@@ -65,3 +71,4 @@ pub mod stats;
 pub mod eval;
 pub mod coordinator;
 pub mod runtime;
+pub mod server;

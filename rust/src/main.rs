@@ -6,53 +6,78 @@
 //!   prune    — uniform unstructured pruning (any method) + eval
 //!   nm       — N:M semi-structured pruning + eval
 //!   quant    — uniform weight quantization (any method) + eval
+//!   joint    — compound N:M prune → OBQ quant + eval
 //!   flop     — non-uniform FLOP-target compression via DB + SPDY solver
 //!   mixed    — joint quant + 2:4 for a BOP-reduction target (GPU scenario)
 //!   cputime  — block-sparse + int8 for a CPU speedup target
+//!   serve    — the concurrent compression service on stdin/stdout
 //!
-//! All state comes from `artifacts/` (built by `make artifacts`); no
-//! Python runs at any point in this binary.
+//! Every experiment command builds a typed [`JobSpec`] and runs it
+//! through the same `coordinator::jobs` layer the server executes — the
+//! CLI is one more frontend, not a second dispatch path. All state
+//! comes from `artifacts/` (built by `make artifacts`); no Python runs
+//! at any point in this binary.
 
-use obc::coordinator::methods::{PruneMethod, QuantMethod};
-use obc::coordinator::pipeline::{LayerScope, Pipeline};
+use obc::coordinator::engine::{CompressionEngine, LayerScope};
+use obc::coordinator::jobs::{
+    self, parse_prune_method, parse_quant_method, DbKind, DbSpec, JobResult, JobSpec, TargetKind,
+};
+use obc::coordinator::methods::PruneMethod;
 use obc::solver::sparsity_grid;
 use obc::util::cli::{opt, Args};
 use obc::util::io::artifacts_dir;
 
-fn parse_prune_method(s: &str) -> PruneMethod {
-    match s.to_lowercase().as_str() {
-        "gmp" => PruneMethod::Gmp,
-        "lobs" | "l-obs" => PruneMethod::Lobs,
-        "adaprune" => PruneMethod::AdaPrune,
-        "exactobs" | "obs" => PruneMethod::ExactObs,
-        other => panic!("unknown prune method '{other}' (gmp|lobs|adaprune|exactobs)"),
-    }
-}
-
-fn parse_quant_method(s: &str) -> QuantMethod {
-    match s.to_lowercase().as_str() {
-        "rtn" => QuantMethod::Rtn,
-        "bitsplit" => QuantMethod::BitSplit,
-        "adaquant" => QuantMethod::AdaQuant,
-        "adaround" => QuantMethod::AdaRound,
-        "obq" => QuantMethod::Obq,
-        other => panic!("unknown quant method '{other}' (rtn|bitsplit|adaquant|adaround|obq)"),
-    }
-}
-
-fn load(model: &str) -> Pipeline {
+fn load(model: &str) -> CompressionEngine {
     let dir = artifacts_dir().join("models");
-    Pipeline::load(&dir, model).unwrap_or_else(|e| {
+    CompressionEngine::load(&dir, model).unwrap_or_else(|e| {
         eprintln!("failed to load '{model}': {e}\nDid you run `make artifacts`?");
         std::process::exit(1);
     })
+}
+
+/// Run one typed job and print its result the CLI way.
+fn run_and_print(engine: &CompressionEngine, model: &str, spec: JobSpec) {
+    match jobs::execute(engine, &spec) {
+        Ok(res) => print_result(model, &res),
+        Err(e) => {
+            eprintln!("{model} {} failed: {e}", spec.op());
+            std::process::exit(1);
+        }
+    }
+}
+
+fn print_result(model: &str, res: &JobResult) {
+    match res {
+        JobResult::Dense { metric } => println!("{model} dense metric: {metric:.2}"),
+        JobResult::Prune { method, sparsity, metric } => println!(
+            "{model} {method} @ {:.0}% sparsity: {metric:.2}",
+            sparsity * 100.0
+        ),
+        JobResult::Nm { n, m, metric } => println!("{model} {n}:{m}: {metric:.2}"),
+        JobResult::Quant { method, bits, metric } => {
+            println!("{model} {method} {bits}bit: {metric:.2}")
+        }
+        JobResult::JointNmQuant { n, m, bits, metric } => {
+            println!("{model} {n}:{m} + {bits}bit: {metric:.2}")
+        }
+        JobResult::DbBuilt { kind, entries, cached } => println!(
+            "{model} {kind} db: {entries} entries{}",
+            if *cached { " (cached)" } else { "" }
+        ),
+        JobResult::Solved { target, requested, achieved, metric, .. } => println!(
+            "{model} {requested}x {target}: {metric:.2} (achieved {achieved:.2}x)"
+        ),
+        JobResult::Infeasible { target, requested } => {
+            println!("{model} {requested}x {target}: infeasible")
+        }
+    }
 }
 
 fn main() -> obc::util::Result<()> {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
         eprintln!(
-            "usage: obc <info|dense|prune|nm|quant|flop|mixed|cputime> [options]\n\
+            "usage: obc <info|dense|prune|nm|quant|joint|flop|mixed|cputime|serve> [options]\n\
              e.g.:  obc prune --model rneta --method exactobs --sparsity 0.5"
         );
         std::process::exit(2);
@@ -68,6 +93,9 @@ fn main() -> obc::util::Result<()> {
         opt("targets", "comma-separated reduction/speedup targets", Some("2,3,4")),
         opt("symmetric", "symmetric quantization grids", None),
         opt("all-layers", "include first/last layers", None),
+        opt("workers", "serve: concurrent job workers", Some("2")),
+        opt("queue-cap", "serve: bounded queue capacity", Some("64")),
+        opt("synthetic", "serve: only the synthetic model (no artifacts)", None),
     ];
     let args = Args::parse_from(&format!("obc {cmd}"), "OBC coordinator", specs, argv);
     let model = args.str_or("model", "rneta");
@@ -94,92 +122,124 @@ fn main() -> obc::util::Result<()> {
                 );
             }
         }
+        "serve" => {
+            let cfg = obc::server::ServerConfig {
+                workers: args.usize_or("workers", 2),
+                queue_cap: args.usize_or("queue-cap", 64),
+                models_dir: artifacts_dir().join("models"),
+                synthetic_only: args.flag("synthetic"),
+            };
+            eprintln!(
+                "obc serve: ready ({} workers, queue {}; one JSON request per line)",
+                cfg.workers, cfg.queue_cap
+            );
+            obc::server::run_line_protocol(cfg, std::io::stdin().lock(), std::io::stdout())?;
+            eprintln!("obc serve: bye");
+        }
         "dense" => {
-            let p = load(&model);
-            println!("{model} dense metric: {:.2}", p.dense_metric());
+            let engine = load(&model);
+            run_and_print(&engine, &model, JobSpec::Dense);
         }
         "prune" => {
-            let p = load(&model);
-            let m = parse_prune_method(&args.str_or("method", "exactobs"));
-            let s = args.f64_or("sparsity", 0.5);
-            let metric = p.run_uniform_sparsity(m, s, LayerScope::All);
-            println!(
-                "{model} {} @ {:.0}% sparsity: {:.2} (dense {:.2})",
-                m.name(),
-                s * 100.0,
-                metric,
-                p.dense_metric()
-            );
+            let engine = load(&model);
+            let spec = JobSpec::Prune {
+                method: parse_prune_method(&args.str_or("method", "exactobs"))?,
+                sparsity: args.f64_or("sparsity", 0.5),
+                scope: LayerScope::All,
+            };
+            run_and_print(&engine, &model, spec);
         }
         "nm" => {
-            let p = load(&model);
-            let m = parse_prune_method(&args.str_or("method", "exactobs"));
-            let (n, mm) = (args.usize_or("n", 2), args.usize_or("m", 4));
-            let scope = if args.flag("all-layers") {
-                LayerScope::All
-            } else {
-                LayerScope::SkipFirstLast
+            let engine = load(&model);
+            let spec = JobSpec::Nm {
+                method: parse_prune_method(&args.str_or("method", "exactobs"))?,
+                n: args.usize_or("n", 2),
+                m: args.usize_or("m", 4),
+                scope: if args.flag("all-layers") {
+                    LayerScope::All
+                } else {
+                    LayerScope::SkipFirstLast
+                },
             };
-            let metric = p.run_nm(m, n, mm, scope);
-            println!("{model} {} {n}:{mm}: {:.2} (dense {:.2})", m.name(), metric, p.dense_metric());
+            run_and_print(&engine, &model, spec);
         }
         "quant" => {
-            let p = load(&model);
-            let m = parse_quant_method(&args.str_or("method", "obq"));
-            let bits = args.usize_or("bits", 4) as u32;
-            let metric = p.run_quant(m, bits, args.flag("symmetric"), LayerScope::All, true);
-            println!("{model} {} {bits}bit: {:.2} (dense {:.2})", m.name(), metric, p.dense_metric());
+            let engine = load(&model);
+            let spec = JobSpec::Quant {
+                method: parse_quant_method(&args.str_or("method", "obq"))?,
+                bits: args.usize_or("bits", 4) as u32,
+                symmetric: args.flag("symmetric"),
+                scope: LayerScope::All,
+                corrected: true,
+            };
+            run_and_print(&engine, &model, spec);
+        }
+        "joint" => {
+            let engine = load(&model);
+            let spec = JobSpec::JointNmQuant {
+                n: args.usize_or("n", 2),
+                m: args.usize_or("m", 4),
+                bits: args.usize_or("bits", 8) as u32,
+                scope: LayerScope::SkipFirstLast,
+            };
+            run_and_print(&engine, &model, spec);
         }
         "flop" => {
-            let p = load(&model);
-            let m = parse_prune_method(&args.str_or("method", "exactobs"));
-            let targets = args.f64_list_or("targets", &[2.0, 3.0, 4.0]);
+            let engine = load(&model);
+            let method = parse_prune_method(&args.str_or("method", "exactobs"))?;
             let grid = sparsity_grid(0.1, 0.95);
-            println!("building {} sparsity DB ({} levels/layer)...", m.name(), grid.len());
-            let db = p.build_sparsity_db(m, &grid, LayerScope::All);
-            for t in targets {
-                match m {
-                    PruneMethod::Gmp => {
-                        let metric = p.eval_gmp_flop_target(LayerScope::All, t);
-                        println!("{model} GMP {t}x FLOPs: {metric:.2}");
-                    }
-                    _ => match p.eval_flop_target(&db, LayerScope::All, t) {
-                        Some((metric, achieved)) => println!(
-                            "{model} {} {t}x FLOPs: {metric:.2} (achieved {achieved:.2}x)",
-                            m.name()
-                        ),
-                        None => println!("{model} {} {t}x FLOPs: infeasible", m.name()),
+            if method != PruneMethod::Gmp {
+                println!("building {} sparsity DB ({} levels/layer)...", method.name(), grid.len());
+            }
+            for t in args.f64_list_or("targets", &[2.0, 3.0, 4.0]) {
+                // The first target builds the database; later targets hit
+                // the engine cache (the paper's whole-DB-for-one-run).
+                let spec = JobSpec::Solve {
+                    db: DbSpec {
+                        kind: DbKind::Sparsity,
+                        method,
+                        grid: grid.clone(),
+                        scope: LayerScope::All,
                     },
-                }
+                    target: TargetKind::Flop,
+                    value: t,
+                };
+                run_and_print(&engine, &model, spec);
             }
         }
         "mixed" => {
-            let p = load(&model);
-            let targets = args.f64_list_or("targets", &[4.0, 8.0, 12.0]);
+            let engine = load(&model);
             println!("building mixed GPU DB (8w8a/4w4a × dense/2:4)...");
-            let db = p.build_mixed_gpu_db(LayerScope::SkipFirstLast);
-            for t in targets {
-                match p.eval_bop_target(&db, LayerScope::SkipFirstLast, t) {
-                    Some((metric, red)) => {
-                        println!("{model} {t}x BOPs: {metric:.2} (achieved {red:.1}x)")
-                    }
-                    None => println!("{model} {t}x BOPs: infeasible"),
-                }
+            for t in args.f64_list_or("targets", &[4.0, 8.0, 12.0]) {
+                let spec = JobSpec::Solve {
+                    db: DbSpec {
+                        kind: DbKind::MixedGpu,
+                        method: PruneMethod::ExactObs,
+                        grid: vec![],
+                        scope: LayerScope::SkipFirstLast,
+                    },
+                    target: TargetKind::Bop,
+                    value: t,
+                };
+                run_and_print(&engine, &model, spec);
             }
         }
         "cputime" => {
-            let p = load(&model);
-            let targets = args.f64_list_or("targets", &[3.0, 4.0, 5.0]);
+            let engine = load(&model);
             let grid = sparsity_grid(0.1, 0.95);
             println!("building CPU DB (4-block × int8, {} levels)...", grid.len());
-            let db = p.build_cpu_db(&grid, LayerScope::SkipFirstLast);
-            for t in targets {
-                match p.eval_time_target(&db, LayerScope::SkipFirstLast, t) {
-                    Some((metric, sp)) => {
-                        println!("{model} {t}x speedup: {metric:.2} (achieved {sp:.1}x)")
-                    }
-                    None => println!("{model} {t}x speedup: infeasible"),
-                }
+            for t in args.f64_list_or("targets", &[3.0, 4.0, 5.0]) {
+                let spec = JobSpec::Solve {
+                    db: DbSpec {
+                        kind: DbKind::Cpu,
+                        method: PruneMethod::ExactObs,
+                        grid: grid.clone(),
+                        scope: LayerScope::SkipFirstLast,
+                    },
+                    target: TargetKind::CpuTime,
+                    value: t,
+                };
+                run_and_print(&engine, &model, spec);
             }
         }
         other => {

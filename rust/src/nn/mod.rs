@@ -39,7 +39,11 @@ impl LayerInfo {
 }
 
 /// A model whose layers can be calibrated, compressed and stitched.
-pub trait CompressibleModel: Send {
+///
+/// `Send + Sync` because the coordinator shares one immutable dense
+/// model across concurrent compression jobs (`Arc<CompressionEngine>`);
+/// implementations are plain data (no interior mutability).
+pub trait CompressibleModel: Send + Sync {
     /// Model identifier ("rneta", "bert6", ...).
     fn name(&self) -> &str;
 

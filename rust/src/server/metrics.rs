@@ -1,0 +1,83 @@
+//! Server counters: per-job timing, queue depth, outcome counts.
+//!
+//! All fields are relaxed atomics — metrics reads race job completion by
+//! design (a snapshot, not a transaction). Durations accumulate as
+//! nanoseconds so the counters stay lock-free.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Default)]
+pub struct Metrics {
+    /// Jobs accepted into the queue.
+    pub submitted: AtomicU64,
+    /// Jobs that produced an ok result.
+    pub completed: AtomicU64,
+    /// Jobs that produced an error result.
+    pub failed: AtomicU64,
+    /// Jobs absorbed by an identical in-flight job (no re-execution).
+    pub coalesced: AtomicU64,
+    /// Jobs refused because the queue was closed (shutdown).
+    pub rejected: AtomicU64,
+    /// High-water mark of the queue depth.
+    pub queue_depth_peak: AtomicU64,
+    queue_ns: AtomicU64,
+    exec_ns: AtomicU64,
+}
+
+impl Metrics {
+    /// Record an observed queue depth (updates the high-water mark).
+    pub fn observe_depth(&self, depth: usize) {
+        self.queue_depth_peak.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// Record one finished job (including coalesced deliveries: their
+    /// queue wait is real even though they never executed).
+    pub fn observe_job(&self, queue_s: f64, exec_s: f64, ok: bool) {
+        if ok {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.queue_ns.fetch_add((queue_s * 1e9) as u64, Ordering::Relaxed);
+        self.exec_ns.fetch_add((exec_s * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("jobs_submitted", self.submitted.load(Ordering::Relaxed) as f64)
+            .set("jobs_completed", self.completed.load(Ordering::Relaxed) as f64)
+            .set("jobs_failed", self.failed.load(Ordering::Relaxed) as f64)
+            .set("jobs_coalesced", self.coalesced.load(Ordering::Relaxed) as f64)
+            .set("jobs_rejected", self.rejected.load(Ordering::Relaxed) as f64)
+            .set("queue_depth_peak", self.queue_depth_peak.load(Ordering::Relaxed) as f64)
+            .set("queue_seconds_total", self.queue_ns.load(Ordering::Relaxed) as f64 / 1e9)
+            .set("exec_seconds_total", self.exec_ns.load(Ordering::Relaxed) as f64 / 1e9);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_render() {
+        let m = Metrics::default();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.observe_depth(2);
+        m.observe_depth(5);
+        m.observe_depth(1);
+        m.observe_job(0.25, 1.5, true);
+        m.observe_job(0.75, 0.5, false);
+        let j = m.to_json();
+        assert_eq!(j.get("jobs_submitted").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get("jobs_completed").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.get("jobs_failed").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.get("queue_depth_peak").unwrap().as_f64().unwrap(), 5.0);
+        let qs = j.get("queue_seconds_total").unwrap().as_f64().unwrap();
+        assert!((qs - 1.0).abs() < 1e-6, "{qs}");
+        let es = j.get("exec_seconds_total").unwrap().as_f64().unwrap();
+        assert!((es - 2.0).abs() < 1e-6, "{es}");
+    }
+}

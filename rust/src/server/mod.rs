@@ -1,0 +1,556 @@
+//! The concurrent compression service.
+//!
+//! This subsystem turns the coordinator into a long-running server on
+//! top of the shared [`CompressionEngine`]:
+//!
+//! * a **bounded request queue** ([`queue::Bounded`]) feeding a fixed
+//!   worker pool — backpressure instead of unbounded buffering;
+//! * a **per-model engine registry** ([`registry::EngineRegistry`]) with
+//!   single-flight calibration: N concurrent jobs on one model wait on
+//!   ONE calibration instead of serializing the whole loop;
+//! * **job coalescing**: a request identical to one currently executing
+//!   (same model, same [`JobSpec`]) attaches to it and receives the same
+//!   result — jobs are pure functions of the shared engine state;
+//! * per-job **timing / queue-depth metrics** ([`metrics::Metrics`]) and
+//!   typed `health` / `metrics` / graceful-`shutdown` control ops;
+//! * a line-protocol frontend ([`run_line_protocol`]) shared by
+//!   `examples/serve_compress.rs` and `obc serve`.
+
+pub mod metrics;
+pub mod queue;
+pub mod registry;
+
+use crate::coordinator::jobs::{self, ControlOp, JobResult, JobSpec, Request};
+use crate::util::json::Json;
+use metrics::Metrics;
+use queue::Bounded;
+use registry::EngineRegistry;
+use std::collections::BTreeMap;
+use std::io::{BufRead, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+/// Server tuning.
+pub struct ServerConfig {
+    /// Worker threads executing jobs (each job additionally fans its
+    /// per-row sweeps over the shared `util::pool`).
+    pub workers: usize,
+    /// Bounded queue capacity (producers block when full).
+    pub queue_cap: usize,
+    /// Where `<model>.obcw` bundles live.
+    pub models_dir: PathBuf,
+    /// Serve only the synthetic model; refuse disk loads (hermetic CI).
+    pub synthetic_only: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            workers: 2,
+            queue_cap: 64,
+            models_dir: crate::util::io::artifacts_dir().join("models"),
+            synthetic_only: false,
+        }
+    }
+}
+
+/// One finished job, delivered on the submitter's channel.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Server-assigned sequence number.
+    pub seq: u64,
+    /// Client correlation id (echoed from the request).
+    pub client_id: Option<String>,
+    pub model: String,
+    pub outcome: Result<JobResult, String>,
+    /// Seconds spent queued before a worker picked the job up.
+    pub queue_s: f64,
+    /// Seconds executing (0 for coalesced deliveries).
+    pub exec_s: f64,
+    /// True when this response was served by an identical in-flight job.
+    pub coalesced: bool,
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        let mut o = match &self.outcome {
+            Ok(result) => {
+                let mut o = result.to_json();
+                o.set("ok", true);
+                o
+            }
+            Err(msg) => {
+                let mut o = Json::obj();
+                o.set("ok", false).set("error", msg.as_str());
+                o
+            }
+        };
+        o.set("seq", self.seq as f64)
+            .set("model", self.model.as_str())
+            .set("queue_seconds", self.queue_s)
+            .set("seconds", self.exec_s);
+        if let Some(id) = &self.client_id {
+            o.set("id", id.as_str());
+        }
+        if self.coalesced {
+            o.set("coalesced", true);
+        }
+        o
+    }
+}
+
+struct QueuedJob {
+    seq: u64,
+    client_id: Option<String>,
+    model: String,
+    spec: JobSpec,
+    reply: mpsc::Sender<Response>,
+    enqueued: Instant,
+}
+
+struct Inner {
+    queue: Bounded<QueuedJob>,
+    registry: EngineRegistry,
+    metrics: Metrics,
+    /// Coalescing table: coalesce-key → waiters parked behind the
+    /// currently-executing identical job.
+    inflight: Mutex<BTreeMap<String, Vec<QueuedJob>>>,
+    seq: AtomicU64,
+}
+
+/// The running service: worker threads over a bounded queue.
+pub struct CompressionServer {
+    inner: Arc<Inner>,
+    workers: Mutex<Vec<thread::JoinHandle<()>>>,
+}
+
+impl CompressionServer {
+    pub fn start(cfg: ServerConfig) -> CompressionServer {
+        let inner = Arc::new(Inner {
+            queue: Bounded::new(cfg.queue_cap),
+            registry: EngineRegistry::new(cfg.models_dir, cfg.synthetic_only),
+            metrics: Metrics::default(),
+            inflight: Mutex::new(BTreeMap::new()),
+            seq: AtomicU64::new(0),
+        });
+        let workers = (0..cfg.workers.max(1))
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                thread::Builder::new()
+                    .name(format!("obc-serve-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn server worker")
+            })
+            .collect();
+        CompressionServer { inner, workers: Mutex::new(workers) }
+    }
+
+    /// Enqueue a job; its [`Response`] arrives on `reply` when done.
+    /// Blocks when the queue is full; fails once shutdown has begun.
+    pub fn submit(
+        &self,
+        model: &str,
+        spec: JobSpec,
+        client_id: Option<String>,
+        reply: mpsc::Sender<Response>,
+    ) -> crate::util::error::Result<u64> {
+        let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed);
+        let job = QueuedJob {
+            seq,
+            client_id,
+            model: model.to_string(),
+            spec,
+            reply,
+            enqueued: Instant::now(),
+        };
+        match self.inner.queue.push(job) {
+            Ok(depth) => {
+                self.inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                self.inner.metrics.observe_depth(depth);
+                Ok(seq)
+            }
+            Err(_) => {
+                self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(crate::err!("server is shutting down (job rejected)"))
+            }
+        }
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.inner.queue.len()
+    }
+
+    /// Liveness + registry summary (`{"op":"health"}`).
+    pub fn health_json(&self) -> Json {
+        let mut o = Json::obj();
+        let models: Vec<Json> = self
+            .inner
+            .registry
+            .ready_models()
+            .into_iter()
+            .map(Json::Str)
+            .collect();
+        let status = if !self.inner.queue.is_closed() {
+            "serving"
+        } else if self.queue_depth() > 0 {
+            "draining"
+        } else {
+            "stopped"
+        };
+        o.set("ok", true)
+            .set("op", "health")
+            .set("status", status)
+            .set("queue_depth", self.queue_depth() as f64)
+            .set("queue_capacity", self.inner.queue.capacity() as f64)
+            .set("models", models);
+        o
+    }
+
+    /// Counter snapshot (`{"op":"metrics"}`).
+    pub fn metrics_json(&self) -> Json {
+        let mut o = self.inner.metrics.to_json();
+        let (hits, misses) = self.inner.registry.db_cache_stats();
+        o.set("ok", true)
+            .set("op", "metrics")
+            .set("calibrations", self.inner.registry.calibrations() as f64)
+            .set("db_cache_hits", hits as f64)
+            .set("db_cache_misses", misses as f64)
+            .set("queue_depth", self.queue_depth() as f64);
+        o
+    }
+
+    /// Graceful shutdown: refuse new jobs, drain accepted ones, join the
+    /// workers. Every accepted job gets its response before this returns.
+    pub fn shutdown(&self) {
+        self.inner.queue.close();
+        let mut workers = self.workers.lock().unwrap();
+        for w in workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for CompressionServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    while let Some(job) = inner.queue.pop() {
+        let key = job.spec.coalesce_key(&job.model);
+        // Coalescing: identical to a job currently executing → park
+        // behind it and receive its result (jobs are pure).
+        {
+            let mut fl = inner.inflight.lock().unwrap();
+            if let Some(waiters) = fl.get_mut(&key) {
+                waiters.push(job);
+                inner.metrics.coalesced.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            fl.insert(key.clone(), Vec::new());
+        }
+        let queue_s = job.enqueued.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        // A panicking kernel (e.g. an unsupported method/pattern combo)
+        // must become an error response, not a dead worker.
+        let outcome: Result<JobResult, String> =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                inner
+                    .registry
+                    .get(&job.model)
+                    .and_then(|engine| jobs::execute(&engine, &job.spec))
+            }))
+            .unwrap_or_else(|p| {
+                let msg = p
+                    .downcast_ref::<String>()
+                    .map(String::as_str)
+                    .or_else(|| p.downcast_ref::<&str>().copied())
+                    .unwrap_or("<non-string panic payload>");
+                Err(crate::err!("job panicked: {msg}"))
+            })
+            .map_err(|e| e.to_string());
+        let exec_s = t0.elapsed().as_secs_f64();
+        let waiters = inner.inflight.lock().unwrap().remove(&key).unwrap_or_default();
+        deliver(inner, job, &outcome, queue_s, exec_s, false);
+        for w in waiters {
+            let wq = w.enqueued.elapsed().as_secs_f64();
+            deliver(inner, w, &outcome, wq, 0.0, true);
+        }
+    }
+}
+
+fn deliver(
+    inner: &Inner,
+    job: QueuedJob,
+    outcome: &Result<JobResult, String>,
+    queue_s: f64,
+    exec_s: f64,
+    coalesced: bool,
+) {
+    inner.metrics.observe_job(queue_s, exec_s, outcome.is_ok());
+    // A dropped receiver just means the client went away; nothing to do.
+    let _ = job.reply.send(Response {
+        seq: job.seq,
+        client_id: job.client_id,
+        model: job.model,
+        outcome: outcome.clone(),
+        queue_s,
+        exec_s,
+        coalesced,
+    });
+}
+
+// ----------------------------------------------------------------------
+// Line-protocol frontend
+// ----------------------------------------------------------------------
+
+/// Drive a server over a newline-delimited JSON protocol: one request
+/// per input line (see [`Request`]), one JSON response per line on
+/// `out`. Job responses are written in **completion order**, tagged with
+/// `seq` and the client's `id`; control ops (`health`, `metrics`) are
+/// answered inline; `shutdown` drains the queue, writes an ack and
+/// returns. Shared by `examples/serve_compress.rs` and `obc serve`.
+pub fn run_line_protocol<R, W>(
+    cfg: ServerConfig,
+    input: R,
+    out: W,
+) -> crate::util::error::Result<()>
+where
+    R: BufRead,
+    W: Write + Send + 'static,
+{
+    let server = CompressionServer::start(cfg);
+    let out = Arc::new(Mutex::new(out));
+    let (tx, rx) = mpsc::channel::<Response>();
+    let writer = {
+        let out = Arc::clone(&out);
+        thread::spawn(move || {
+            for resp in rx {
+                let mut o = out.lock().unwrap();
+                let _ = writeln!(o, "{}", resp.to_json().to_string_compact());
+                let _ = o.flush();
+            }
+        })
+    };
+
+    let write_line = |j: &Json| -> crate::util::error::Result<()> {
+        let mut o = out.lock().unwrap();
+        writeln!(o, "{}", j.to_string_compact())?;
+        o.flush()?;
+        Ok(())
+    };
+
+    let mut explicit_shutdown = false;
+    for line in input.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Request::parse_line(&line) {
+            Ok(Request::Control(ControlOp::Shutdown)) => {
+                explicit_shutdown = true;
+                break;
+            }
+            Ok(Request::Control(ControlOp::Health)) => write_line(&server.health_json())?,
+            Ok(Request::Control(ControlOp::Metrics)) => write_line(&server.metrics_json())?,
+            Ok(Request::Job { id, model, spec }) => {
+                if let Err(e) = server.submit(&model, spec, id.clone(), tx.clone()) {
+                    let mut o = Json::obj();
+                    o.set("ok", false).set("error", e.to_string()).set("model", model.as_str());
+                    if let Some(id) = &id {
+                        o.set("id", id.as_str());
+                    }
+                    write_line(&o)?;
+                }
+            }
+            Err(e) => {
+                let mut o = Json::obj();
+                o.set("ok", false).set("error", e.to_string());
+                write_line(&o)?;
+            }
+        }
+    }
+
+    // Graceful drain: stop accepting, finish accepted jobs (their
+    // responses flow through the writer), then ack.
+    drop(tx);
+    server.shutdown();
+    let _ = writer.join();
+    if explicit_shutdown {
+        // The ack is a post-drain metrics snapshot: by now every
+        // accepted job has completed, so the counters (calibrations,
+        // coalescing, cache hits) are final.
+        let mut ack = server.metrics_json();
+        ack.set("op", "shutdown");
+        write_line(&ack)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::LayerScope;
+    use crate::coordinator::methods::PruneMethod;
+
+    fn synthetic_server(workers: usize) -> CompressionServer {
+        CompressionServer::start(ServerConfig {
+            workers,
+            queue_cap: 16,
+            models_dir: PathBuf::from("/nonexistent"),
+            synthetic_only: true,
+        })
+    }
+
+    #[test]
+    fn submit_executes_and_replies() {
+        let server = synthetic_server(2);
+        let (tx, rx) = mpsc::channel();
+        server
+            .submit(registry::SYNTHETIC_MODEL, JobSpec::Dense, Some("a".into()), tx)
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.client_id.as_deref(), Some("a"));
+        let metric = resp.outcome.unwrap().metric().unwrap();
+        assert!(metric.is_finite());
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_model_is_an_error_response_not_a_crash() {
+        let server = synthetic_server(1);
+        let (tx, rx) = mpsc::channel();
+        server.submit("rneta", JobSpec::Dense, None, tx.clone()).unwrap();
+        let resp = rx.recv().unwrap();
+        assert!(resp.outcome.is_err());
+        // Worker survives: a good job still completes afterwards.
+        server.submit(registry::SYNTHETIC_MODEL, JobSpec::Dense, None, tx).unwrap();
+        assert!(rx.recv().unwrap().outcome.is_ok());
+        server.shutdown();
+    }
+
+    #[test]
+    fn panicking_job_becomes_error_response() {
+        let server = synthetic_server(1);
+        let (tx, rx) = mpsc::channel();
+        // GMP does not support N:M — the kernel panics; the server must
+        // answer with an error and keep serving.
+        server
+            .submit(
+                registry::SYNTHETIC_MODEL,
+                JobSpec::Nm { method: PruneMethod::Gmp, n: 2, m: 4, scope: LayerScope::All },
+                None,
+                tx.clone(),
+            )
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        let err = resp.outcome.unwrap_err();
+        assert!(err.contains("panic"), "{err}");
+        server.submit(registry::SYNTHETIC_MODEL, JobSpec::Dense, None, tx).unwrap();
+        assert!(rx.recv().unwrap().outcome.is_ok());
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_rejects_new_jobs_with_typed_error() {
+        let server = synthetic_server(1);
+        server.shutdown();
+        let (tx, _rx) = mpsc::channel();
+        let err = server
+            .submit(registry::SYNTHETIC_MODEL, JobSpec::Dense, None, tx)
+            .unwrap_err();
+        assert!(err.to_string().contains("shutting down"), "{err}");
+        assert_eq!(server.inner.metrics.rejected.load(Ordering::Relaxed), 1);
+    }
+
+    /// Identical concurrent jobs coalesce: one execution, N responses.
+    #[test]
+    fn identical_jobs_coalesce() {
+        let server = synthetic_server(4);
+        let (tx, rx) = mpsc::channel();
+        let spec = JobSpec::Prune {
+            method: PruneMethod::Gmp,
+            sparsity: 0.5,
+            scope: LayerScope::All,
+        };
+        for i in 0..4 {
+            server
+                .submit(
+                    registry::SYNTHETIC_MODEL,
+                    spec.clone(),
+                    Some(format!("c{i}")),
+                    tx.clone(),
+                )
+                .unwrap();
+        }
+        drop(tx);
+        let resps: Vec<Response> = rx.iter().collect();
+        assert_eq!(resps.len(), 4, "every request gets a response");
+        let metrics: Vec<u64> = resps
+            .iter()
+            .map(|r| r.outcome.as_ref().unwrap().metric().unwrap().to_bits())
+            .collect();
+        assert!(metrics.windows(2).all(|w| w[0] == w[1]), "identical results");
+        // At least the requests that arrived while the first executed
+        // were absorbed (timing-dependent how many — often all 3).
+        let coalesced = server.inner.metrics.coalesced.load(Ordering::Relaxed);
+        let executed = resps.iter().filter(|r| !r.coalesced).count() as u64;
+        assert_eq!(coalesced + executed, 4);
+        server.shutdown();
+    }
+
+    #[test]
+    fn line_protocol_end_to_end() {
+        #[derive(Clone, Default)]
+        struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+        impl Write for SharedBuf {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let input = concat!(
+            "{\"op\":\"health\"}\n",
+            "{\"id\":\"d1\",\"op\":\"dense\",\"model\":\"synthetic\"}\n",
+            "{\"op\":\"metrics\"}\n",
+            "not json at all\n",
+            "{\"op\":\"shutdown\"}\n",
+        );
+        let buf = SharedBuf::default();
+        run_line_protocol(
+            ServerConfig {
+                workers: 2,
+                queue_cap: 8,
+                models_dir: PathBuf::from("/nonexistent"),
+                synthetic_only: true,
+            },
+            input.as_bytes(),
+            buf.clone(),
+        )
+        .unwrap();
+        let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.iter().any(|l| l.contains("\"op\":\"health\"")), "{text}");
+        assert!(
+            lines.iter().any(|l| l.contains("\"id\":\"d1\"") && l.contains("\"ok\":true")),
+            "{text}"
+        );
+        assert!(lines.iter().any(|l| l.contains("\"op\":\"metrics\"")), "{text}");
+        assert!(lines.iter().any(|l| l.contains("\"ok\":false")), "{text}");
+        assert!(
+            lines.last().unwrap().contains("\"op\":\"shutdown\""),
+            "shutdown ack must be the final line: {text}"
+        );
+        // Every line of the protocol is valid JSON.
+        for l in &lines {
+            crate::util::json::parse(l).unwrap_or_else(|e| panic!("bad line {l}: {e}"));
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Bounded MPMC request queue (condvar-based, in-tree — no crossbeam in
+//! the offline vendor set).
+//!
+//! Producers block in [`Bounded::push`] when the queue is full
+//! (backpressure toward the frontend), consumers block in
+//! [`Bounded::pop`] when it is empty. [`Bounded::close`] starts graceful
+//! shutdown: new pushes are refused, pops drain what was accepted and
+//! then return `None`, so every accepted job gets a response before the
+//! workers exit.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct State<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+pub struct Bounded<T> {
+    cap: usize,
+    state: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+impl<T> Bounded<T> {
+    pub fn new(cap: usize) -> Bounded<T> {
+        Bounded {
+            cap: cap.max(1),
+            state: Mutex::new(State { q: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue, blocking while the queue is full. Returns the item back
+    /// when the queue has been closed (caller reports the rejection).
+    pub fn push(&self, item: T) -> Result<usize, T> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.q.len() < self.cap {
+                g.q.push_back(item);
+                let depth = g.q.len();
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(depth);
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Dequeue, blocking while empty. `None` once the queue is closed
+    /// AND drained — the worker-exit signal.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Whether [`Bounded::close`] has been called (new pushes refused).
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Refuse new work; wake every blocked producer and consumer.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_and_drain_after_close() {
+        let q = Bounded::new(8);
+        for i in 0..5 {
+            q.push(i).map_err(|_| ()).unwrap();
+        }
+        q.close();
+        assert!(q.push(99).is_err(), "closed queue must refuse work");
+        let drained: Vec<i32> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(drained, vec![0, 1, 2, 3, 4], "accepted jobs drain in order");
+    }
+
+    #[test]
+    fn push_blocks_until_pop_frees_a_slot() {
+        let q = Arc::new(Bounded::new(1));
+        q.push(1).map_err(|_| ()).unwrap();
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || q2.push(2).is_ok());
+        // Give the producer a moment to block on the full queue.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(1));
+        assert!(producer.join().unwrap(), "blocked producer completes after pop");
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn pop_blocks_until_push() {
+        let q = Arc::new(Bounded::<u32>::new(4));
+        let q2 = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.push(7).map_err(|_| ()).unwrap();
+        assert_eq!(consumer.join().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumers() {
+        let q = Arc::new(Bounded::<u32>::new(4));
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || q.pop())
+            })
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), None);
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Per-model engine registry with single-flight calibration.
+//!
+//! Calibration is the expensive admission step (a full forward pass over
+//! the calibration split, accumulating per-layer Hessians). When N
+//! concurrent jobs name the same model, exactly ONE calibrates; the
+//! other N−1 block on the shared [`SingleFlight`] cell and receive the
+//! same [`CompressionEngine`] — instead of the old serial stdin loop
+//! where every queued job waited behind every calibration. Failed (or
+//! panicking) loads retract the slot so a later request retries — e.g.
+//! the artifacts may appear on disk meanwhile.
+
+use crate::coordinator::engine::CompressionEngine;
+use crate::util::single_flight::SingleFlight;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// The reserved model name that builds a deterministic synthetic engine
+/// (no artifacts on disk) — CI, smoke tests and benches run against it.
+pub const SYNTHETIC_MODEL: &str = "synthetic";
+
+/// Seed of the registry's synthetic engine (fixed so concurrent-vs-
+/// sequential comparisons can rebuild the identical engine).
+pub const SYNTHETIC_SEED: u64 = 1;
+
+pub struct EngineRegistry {
+    models_dir: PathBuf,
+    /// Refuse disk loads — only the synthetic model is served (hermetic
+    /// CI / smoke mode).
+    synthetic_only: bool,
+    slots: SingleFlight<Arc<CompressionEngine>>,
+    calibrations: AtomicU64,
+}
+
+impl EngineRegistry {
+    pub fn new(models_dir: PathBuf, synthetic_only: bool) -> EngineRegistry {
+        EngineRegistry {
+            models_dir,
+            synthetic_only,
+            slots: SingleFlight::new(),
+            calibrations: AtomicU64::new(0),
+        }
+    }
+
+    /// How many calibrations actually ran (the single-flight invariant:
+    /// N concurrent jobs on one model bump this exactly once).
+    pub fn calibrations(&self) -> u64 {
+        self.calibrations.load(Ordering::Relaxed)
+    }
+
+    /// Models currently resolved (ready engines only).
+    pub fn ready_models(&self) -> Vec<String> {
+        self.slots.ready().into_iter().map(|(name, _)| name).collect()
+    }
+
+    /// Aggregate (hits, misses) of the database caches of every ready
+    /// engine.
+    pub fn db_cache_stats(&self) -> (u64, u64) {
+        let mut hits = 0;
+        let mut misses = 0;
+        for (_, engine) in self.slots.ready() {
+            let (h, m) = engine.cache_stats();
+            hits += h;
+            misses += m;
+        }
+        (hits, misses)
+    }
+
+    /// Resolve a model to its shared engine, calibrating at most once
+    /// per model regardless of how many jobs arrive concurrently.
+    pub fn get(&self, model: &str) -> crate::util::error::Result<Arc<CompressionEngine>> {
+        let (engine, _shared) = self
+            .slots
+            .get_or_build(model, || {
+                let engine = self.build(model)?;
+                self.calibrations.fetch_add(1, Ordering::Relaxed);
+                Ok(Arc::new(engine))
+            })
+            .map_err(|e| e.context(format!("loading model '{model}'")))?;
+        Ok(engine)
+    }
+
+    fn build(&self, model: &str) -> crate::util::error::Result<CompressionEngine> {
+        if model == SYNTHETIC_MODEL {
+            return CompressionEngine::synthetic(SYNTHETIC_SEED);
+        }
+        if self.synthetic_only {
+            crate::bail!(
+                "model loading from disk is disabled (--synthetic); only '{SYNTHETIC_MODEL}' is served"
+            );
+        }
+        CompressionEngine::load(&self.models_dir, model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_registry() -> Arc<EngineRegistry> {
+        Arc::new(EngineRegistry::new(PathBuf::from("/nonexistent"), true))
+    }
+
+    #[test]
+    fn concurrent_gets_calibrate_once_and_share_the_engine() {
+        let reg = synthetic_registry();
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let reg = Arc::clone(&reg);
+                std::thread::spawn(move || reg.get(SYNTHETIC_MODEL).unwrap())
+            })
+            .collect();
+        let engines: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(reg.calibrations(), 1, "single-flight calibration");
+        for e in &engines[1..] {
+            assert!(Arc::ptr_eq(&engines[0], e), "all jobs share one engine");
+        }
+        assert_eq!(reg.ready_models(), vec![SYNTHETIC_MODEL.to_string()]);
+    }
+
+    #[test]
+    fn unknown_model_fails_typed_and_is_retryable() {
+        let reg = synthetic_registry();
+        let err = reg.get("rneta").unwrap_err();
+        assert!(err.to_string().contains("rneta"), "{err}");
+        // The failed slot must not wedge the registry.
+        let err2 = reg.get("rneta").unwrap_err();
+        assert!(err2.to_string().contains("disabled"), "{err2}");
+        assert!(reg.get(SYNTHETIC_MODEL).is_ok());
+        assert_eq!(reg.calibrations(), 1, "failed loads are not calibrations");
+    }
+}

@@ -109,15 +109,27 @@ pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
 /// one entry per [`BenchStats`] plus derived scalars (speedups), built
 /// on the in-tree [`Json`] model so escaping/validity are structural
 /// and guaranteed to round-trip through `util::json::parse`.
-#[derive(Default)]
 pub struct JsonReport {
+    schema: &'static str,
     cases: Vec<Json>,
     derived: Vec<Json>,
 }
 
+impl Default for JsonReport {
+    fn default() -> JsonReport {
+        JsonReport::new()
+    }
+}
+
 impl JsonReport {
     pub fn new() -> JsonReport {
-        JsonReport::default()
+        JsonReport::with_schema("obc-bench-kernels/v1")
+    }
+
+    /// A report under a different schema tag (e.g. the serving
+    /// throughput report `obc-bench-serve/v1`).
+    pub fn with_schema(schema: &'static str) -> JsonReport {
+        JsonReport { schema, cases: Vec::new(), derived: Vec::new() }
     }
 
     /// Record one benchmark case.
@@ -144,7 +156,7 @@ impl JsonReport {
     /// Render the report document with extra top-level context fields.
     pub fn render(&self, context: &[(&str, Json)]) -> String {
         let mut doc = Json::obj();
-        doc.set("schema", "obc-bench-kernels/v1");
+        doc.set("schema", self.schema);
         for (k, v) in context {
             doc.set(k, v.clone());
         }

@@ -251,10 +251,15 @@ impl fmt::Display for Json {
     }
 }
 
+/// Maximum container nesting the parser accepts. The wire protocol and
+/// the model database never come close; the bound turns adversarially
+/// deep input (`[[[[…`) into a typed error instead of a stack overflow.
+const MAX_DEPTH: usize = 128;
+
 /// Parse a JSON document. Returns an error with byte position on failure.
 pub fn parse(input: &str) -> crate::util::error::Result<Json> {
     let bytes = input.as_bytes();
-    let mut p = Parser { b: bytes, i: 0 };
+    let mut p = Parser { b: bytes, i: 0, depth: 0 };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
@@ -267,6 +272,7 @@ pub fn parse(input: &str) -> crate::util::error::Result<Json> {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -293,14 +299,29 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> crate::util::error::Result<Json> {
         match self.peek()? {
-            b'{' => self.object(),
-            b'[' => self.array(),
+            b'{' => self.nested(Parser::object),
+            b'[' => self.nested(Parser::array),
             b'"' => Ok(Json::Str(self.string()?)),
             b't' => self.lit("true", Json::Bool(true)),
             b'f' => self.lit("false", Json::Bool(false)),
             b'n' => self.lit("null", Json::Null),
             _ => self.number(),
         }
+    }
+
+    /// Run a container parser one nesting level down, enforcing
+    /// [`MAX_DEPTH`].
+    fn nested(
+        &mut self,
+        f: fn(&mut Parser<'a>) -> crate::util::error::Result<Json>,
+    ) -> crate::util::error::Result<Json> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            crate::bail!("JSON nested deeper than {MAX_DEPTH} at byte {}", self.i);
+        }
+        let v = f(self);
+        self.depth -= 1;
+        v
     }
 
     fn lit(&mut self, s: &str, v: Json) -> crate::util::error::Result<Json> {
@@ -384,11 +405,39 @@ impl<'a> Parser<'a> {
                         b'b' => s.push('\u{8}'),
                         b'f' => s.push('\u{c}'),
                         b'u' => {
-                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
-                            let code = u32::from_str_radix(hex, 16)?;
-                            self.i += 4;
-                            // Note: no surrogate-pair handling; our payloads are ASCII keys.
-                            s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            // Decode surrogate chains: each high
+                            // surrogate pairs with the NEXT \u escape
+                            // when that is a low surrogate; otherwise
+                            // the orphan becomes U+FFFD and the next
+                            // escape is re-examined on its own (it may
+                            // itself start a valid pair).
+                            let mut code = self.hex4()?;
+                            loop {
+                                if !(0xD800..0xDC00).contains(&code) {
+                                    // Not a high surrogate: lone lows
+                                    // fall out via from_u32 → None.
+                                    s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                                    break;
+                                }
+                                if self.b.get(self.i) == Some(&b'\\')
+                                    && self.b.get(self.i + 1) == Some(&b'u')
+                                {
+                                    self.i += 2;
+                                    let next = self.hex4()?;
+                                    if (0xDC00..0xE000).contains(&next) {
+                                        let c = 0x10000
+                                            + ((code - 0xD800) << 10)
+                                            + (next - 0xDC00);
+                                        s.push(char::from_u32(c).unwrap_or('\u{fffd}'));
+                                        break;
+                                    }
+                                    s.push('\u{fffd}'); // orphan high
+                                    code = next; // re-examine the next escape
+                                } else {
+                                    s.push('\u{fffd}'); // lone trailing high
+                                    break;
+                                }
+                            }
                         }
                         _ => crate::bail!("bad escape at byte {}", self.i),
                     }
@@ -400,6 +449,11 @@ impl<'a> Parser<'a> {
                     } else {
                         let start = self.i - 1;
                         let len = utf8_len(c);
+                        // The input is a &str, so a whole sequence must
+                        // be present — but stay panic-free regardless.
+                        if start + len > self.b.len() {
+                            crate::bail!("truncated UTF-8 sequence at byte {start}");
+                        }
                         let chunk = std::str::from_utf8(&self.b[start..start + len])?;
                         s.push_str(chunk);
                         self.i = start + len;
@@ -407,6 +461,19 @@ impl<'a> Parser<'a> {
                 }
             }
         }
+    }
+
+    /// Read 4 hex digits of a `\u` escape (bounds-checked: a truncated
+    /// escape is a parse error, not a slice panic).
+    fn hex4(&mut self) -> crate::util::error::Result<u32> {
+        if self.i + 4 > self.b.len() {
+            crate::bail!("truncated \\u escape at byte {}", self.i);
+        }
+        let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+        let code = u32::from_str_radix(hex, 16)
+            .map_err(|_| crate::err!("bad \\u escape '{hex}' at byte {}", self.i))?;
+        self.i += 4;
+        Ok(code)
     }
 
     fn number(&mut self) -> crate::util::error::Result<Json> {
@@ -485,6 +552,70 @@ mod tests {
         let a = v.as_arr().unwrap();
         assert_eq!(a[0].as_f64().unwrap(), -1500.0);
         assert_eq!(a[2].as_usize().unwrap(), 7);
+    }
+
+    /// Wire-protocol hardening: truncated/malformed input must be a
+    /// typed error, never a panic or a stack overflow.
+    #[test]
+    fn truncated_unicode_escape_is_error_not_panic() {
+        assert!(parse("\"\\u").is_err());
+        assert!(parse("\"\\u12").is_err());
+        assert!(parse("\"\\uzzzz\"").is_err());
+        assert!(parse("\"\\").is_err());
+        assert!(parse("\"abc").is_err()); // unterminated string
+    }
+
+    #[test]
+    fn surrogate_pairs_decode() {
+        let v = parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "😀");
+        // Lone / mismatched surrogates degrade to the replacement char.
+        let lone = parse("\"\\ud83d\"").unwrap();
+        assert_eq!(lone.as_str().unwrap(), "\u{fffd}");
+        let mismatched = parse("\"\\ud83d\\u0041\"").unwrap();
+        assert_eq!(mismatched.as_str().unwrap(), "\u{fffd}A");
+        // An orphan high followed by a VALID pair must not eat the pair.
+        let chain = parse("\"\\ud83d\\ud83d\\ude00\"").unwrap();
+        assert_eq!(chain.as_str().unwrap(), "\u{fffd}😀");
+        let lows = parse("\"\\ude00\\ude00\"").unwrap();
+        assert_eq!(lows.as_str().unwrap(), "\u{fffd}\u{fffd}");
+        // A truncated pair tail is still a typed error.
+        assert!(parse("\"\\ud83d\\u12").is_err());
+    }
+
+    #[test]
+    fn unicode_escapes_roundtrip_with_raw_utf8() {
+        let v = parse(r#"{"héllo":"wörld 😀","\u00e9":3}"#).unwrap();
+        assert_eq!(v.get("héllo").unwrap().as_str().unwrap(), "wörld 😀");
+        assert_eq!(v.get("é").unwrap().as_f64().unwrap(), 3.0);
+        let back = parse(&v.to_string_compact()).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn deep_nesting_is_depth_limited_not_stack_overflow() {
+        // Within the limit: fine.
+        let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(parse(&ok).is_ok());
+        // Past the limit (including absurd depths that would otherwise
+        // blow the stack): typed error.
+        for depth in [200usize, 100_000] {
+            let deep = "[".repeat(depth);
+            let e = parse(&deep).unwrap_err();
+            assert!(e.to_string().contains("deep"), "{e}");
+        }
+        let deep_obj = "{\"a\":".repeat(500);
+        assert!(parse(&deep_obj).is_err());
+    }
+
+    #[test]
+    fn malformed_documents_are_errors() {
+        for bad in [
+            "{", "}", "[", "]", "{\"a\"}", "{\"a\":}", "{:1}", "[1,]", "[,1]",
+            "{\"a\":1,}", "nul", "+", "1e", "\"\\x\"", "",
+        ] {
+            assert!(parse(bad).is_err(), "'{bad}' must not parse");
+        }
     }
 
     #[test]

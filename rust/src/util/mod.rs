@@ -13,6 +13,7 @@ pub mod benchkit;
 pub mod logging;
 pub mod proptest;
 pub mod io;
+pub mod single_flight;
 
 pub use error::{ObcError, Result};
 

@@ -1,0 +1,232 @@
+//! Keyed single-flight cells: N concurrent requests for the same key
+//! run ONE build; the rest wait on a condvar and share the result.
+//!
+//! This is the one concurrency pattern both coordinator caches need —
+//! the engine registry's once-per-model calibration and the compression
+//! engine's once-per-spec database builds — extracted here so the
+//! subtle parts live in exactly one place:
+//!
+//! * **Failure retracts the key** (later callers retry — e.g. artifacts
+//!   may appear on disk meanwhile) while waiters already parked on the
+//!   cell receive the real error message.
+//! * **Panic-safe**: if the builder panics, a drop guard fails the cell
+//!   and wakes every waiter before the unwind continues — without it, a
+//!   panicking build would strand the cell in `Building` and every
+//!   later request for that key would block forever.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+enum State<T> {
+    /// One thread is building; everyone else waits on the condvar.
+    Building,
+    Ready(T),
+    Failed(String),
+}
+
+struct Cell<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+/// A keyed map of single-flight cells. `T` is the shared result and
+/// must be cheap to clone (use `Arc` for anything heavy).
+pub struct SingleFlight<T: Clone> {
+    cells: Mutex<BTreeMap<String, Arc<Cell<T>>>>,
+}
+
+impl<T: Clone> Default for SingleFlight<T> {
+    fn default() -> SingleFlight<T> {
+        SingleFlight::new()
+    }
+}
+
+/// Fails `cell` and retracts `key` if the builder unwinds (panics)
+/// before the guard is disarmed.
+struct BuildGuard<'a, T: Clone> {
+    flight: &'a SingleFlight<T>,
+    key: &'a str,
+    cell: &'a Cell<T>,
+    armed: bool,
+}
+
+impl<T: Clone> Drop for BuildGuard<'_, T> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        // Unwinding through a panic: avoid unwrap (a second panic here
+        // would abort the process). These mutexes are never poisoned by
+        // our own code — no lock is held across user code.
+        if let Ok(mut cells) = self.flight.cells.lock() {
+            cells.remove(self.key);
+        }
+        if let Ok(mut g) = self.cell.state.lock() {
+            *g = State::Failed("builder panicked".to_string());
+        }
+        self.cell.cv.notify_all();
+    }
+}
+
+impl<T: Clone> SingleFlight<T> {
+    pub fn new() -> SingleFlight<T> {
+        SingleFlight { cells: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Get the value under `key`, building it if this is the first
+    /// request. Returns `(value, shared)` — `shared` is false for the
+    /// caller that actually built (or rebuilt after a failure), true
+    /// for callers served from the cell (including those that waited
+    /// out the build).
+    pub fn get_or_build(
+        &self,
+        key: &str,
+        build: impl FnOnce() -> crate::util::error::Result<T>,
+    ) -> crate::util::error::Result<(T, bool)> {
+        let (cell, owner) = {
+            let mut cells = self.cells.lock().unwrap();
+            match cells.get(key) {
+                Some(c) => (Arc::clone(c), false),
+                None => {
+                    let c = Arc::new(Cell {
+                        state: Mutex::new(State::Building),
+                        cv: Condvar::new(),
+                    });
+                    cells.insert(key.to_string(), Arc::clone(&c));
+                    (c, true)
+                }
+            }
+        };
+        if owner {
+            let mut guard = BuildGuard { flight: self, key, cell: &cell, armed: true };
+            let result = build(); // a panic here trips the guard
+            guard.armed = false;
+            drop(guard);
+            match result {
+                Ok(v) => {
+                    *cell.state.lock().unwrap() = State::Ready(v.clone());
+                    cell.cv.notify_all();
+                    Ok((v, false))
+                }
+                Err(e) => {
+                    // Retract first so later callers retry, then fail
+                    // the cell for waiters already parked on it.
+                    self.cells.lock().unwrap().remove(key);
+                    *cell.state.lock().unwrap() = State::Failed(e.to_string());
+                    cell.cv.notify_all();
+                    Err(e)
+                }
+            }
+        } else {
+            let mut g = cell.state.lock().unwrap();
+            while matches!(*g, State::Building) {
+                g = cell.cv.wait(g).unwrap();
+            }
+            match &*g {
+                State::Ready(v) => Ok((v.clone(), true)),
+                State::Failed(msg) => {
+                    Err(crate::err!("concurrent build of '{key}' failed: {msg}"))
+                }
+                State::Building => unreachable!("loop above waits out Building"),
+            }
+        }
+    }
+
+    /// Snapshot of every ready (key, value) pair.
+    pub fn ready(&self) -> Vec<(String, T)> {
+        let cells = self.cells.lock().unwrap();
+        cells
+            .iter()
+            .filter_map(|(k, c)| match &*c.state.lock().unwrap() {
+                State::Ready(v) => Some((k.clone(), v.clone())),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn concurrent_callers_build_once_and_share() {
+        let sf = Arc::new(SingleFlight::<u32>::new());
+        let builds = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let sf = Arc::clone(&sf);
+                let builds = Arc::clone(&builds);
+                thread::spawn(move || {
+                    sf.get_or_build("k", || {
+                        builds.fetch_add(1, Ordering::SeqCst);
+                        thread::sleep(Duration::from_millis(5));
+                        Ok(42)
+                    })
+                    .unwrap()
+                })
+            })
+            .collect();
+        let results: Vec<(u32, bool)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "exactly one build");
+        assert!(results.iter().all(|(v, _)| *v == 42));
+        assert_eq!(results.iter().filter(|(_, shared)| !shared).count(), 1);
+        assert_eq!(sf.ready().len(), 1);
+    }
+
+    #[test]
+    fn failure_retracts_key_and_reports_to_later_callers() {
+        let sf = SingleFlight::<u32>::new();
+        let err = sf.get_or_build("k", || Err(crate::err!("boom"))).unwrap_err();
+        assert_eq!(err.to_string(), "boom");
+        assert!(sf.ready().is_empty());
+        // The key is retracted: the next caller rebuilds.
+        let (v, shared) = sf.get_or_build("k", || Ok(7)).unwrap();
+        assert_eq!(v, 7);
+        assert!(!shared);
+    }
+
+    /// The panic-safety guarantee: a panicking builder must not strand
+    /// the cell in Building (which would hang every later caller).
+    #[test]
+    fn panicking_builder_does_not_wedge_the_key() {
+        let sf = SingleFlight::<u32>::new();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sf.get_or_build("k", || -> crate::util::error::Result<u32> { panic!("kernel panic") })
+        }));
+        assert!(r.is_err(), "panic propagates to the owner");
+        // The key was retracted by the drop guard: a later caller
+        // rebuilds successfully instead of blocking forever.
+        let (v, shared) = sf.get_or_build("k", || Ok(9)).unwrap();
+        assert_eq!(v, 9);
+        assert!(!shared);
+    }
+
+    /// A waiter parked during a build that panics must be woken with an
+    /// error, not left blocked.
+    #[test]
+    fn waiter_is_unblocked_when_builder_panics() {
+        let sf = Arc::new(SingleFlight::<u32>::new());
+        let sf2 = Arc::clone(&sf);
+        let owner = thread::spawn(move || {
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                sf2.get_or_build("k", || -> crate::util::error::Result<u32> {
+                    thread::sleep(Duration::from_millis(40));
+                    panic!("mid-build panic")
+                })
+            }));
+        });
+        thread::sleep(Duration::from_millis(10)); // let the owner claim the key
+        // Depending on timing this call either parks on the owner's cell
+        // (→ typed failure) or arrives after retraction (→ builds fresh).
+        match sf.get_or_build("k", || Ok(5)) {
+            Ok((5, false)) => {}
+            Err(e) => assert!(e.to_string().contains("panicked"), "{e}"),
+            other => panic!("unexpected outcome: {other:?}"),
+        }
+        owner.join().unwrap();
+    }
+}

@@ -7,7 +7,6 @@ use obc::coordinator::methods::{PruneMethod, QuantMethod};
 use obc::coordinator::pipeline::{LayerScope, Pipeline};
 use obc::coordinator::{calibrate, CalibOpts};
 use obc::solver::sparsity_grid;
-use obc::util::pool::ThreadPool;
 
 fn pipeline_or_skip() -> Option<Pipeline> {
     if cfg!(debug_assertions) {
@@ -31,14 +30,14 @@ fn debug_smoke_tiny_pipeline() {
     let bundle = obc::nn::models::synthetic_bundle(1);
     let calib = CalibOpts { n_samples: 32, batch: 16, ..Default::default() };
     let hessians = calibrate(bundle.model.as_ref(), &bundle, &calib).expect("calibrate");
-    let p = Pipeline { bundle, hessians, pool: ThreadPool::new(2), calib, eval_samples: 32 };
+    let p = Pipeline::from_parts(bundle, hessians, calib, 32);
     let dense = p.dense_metric();
     assert!(dense.is_finite());
     // Compress just two inner layers (keeps the debug-mode smoke fast).
     let mut model = p.model().clone_box();
     for l in p.layers(LayerScope::SkipFirstLast).into_iter().take(2) {
         let w = p.model().get_weight(&l.name);
-        let h = &p.hessians[&l.name];
+        let h = &p.hessians()[&l.name];
         let r = PruneMethod::ExactObs.prune(&w, h, 0.5);
         assert!(r.sq_err.is_finite() && r.sq_err >= 0.0);
         assert!((r.sparsity - 0.5).abs() < 0.02, "sparsity {}", r.sparsity);
@@ -107,7 +106,7 @@ fn bn_reset_recovers_accuracy() {
     let mut model = p.model().clone_box();
     for l in p.layers(LayerScope::SkipFirstLast) {
         let w = p.model().get_weight(&l.name);
-        let h = &p.hessians[&l.name];
+        let h = &p.hessians()[&l.name];
         let r = PruneMethod::ExactObs.prune(&w, h, 0.7);
         model.set_weight(&l.name, &r.w);
     }

@@ -1,0 +1,186 @@
+//! The serving-layer acceptance test: N simultaneous jobs against one
+//! model must
+//!
+//! 1. calibrate exactly ONCE (single-flight registry),
+//! 2. share the engine's database cache (one build, observed hits), and
+//! 3. return results **bit-identical** to the same jobs run sequentially
+//!    through the old `Pipeline` path.
+//!
+//! Everything runs on the synthetic tiny pipeline — no `make artifacts`
+//! dependency, debug-mode friendly.
+
+use obc::coordinator::engine::{CompressionEngine, LayerScope};
+use obc::coordinator::jobs::{DbKind, DbSpec, JobResult, JobSpec, TargetKind};
+use obc::coordinator::methods::{PruneMethod, QuantMethod};
+use obc::coordinator::pipeline::Pipeline;
+use obc::server::registry::{SYNTHETIC_MODEL, SYNTHETIC_SEED};
+use obc::server::{CompressionServer, Response, ServerConfig};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc};
+
+fn sparsity_db_spec() -> DbSpec {
+    DbSpec {
+        kind: DbKind::Sparsity,
+        method: PruneMethod::ExactObs,
+        grid: vec![0.0, 0.5, 0.9],
+        scope: LayerScope::All,
+    }
+}
+
+/// The job batch: duplicates (j1a/j1b) test coalescing-or-recompute
+/// identity, j3/j4 share one database build through the engine cache.
+fn job_batch() -> Vec<(&'static str, JobSpec)> {
+    vec![
+        (
+            "j1a",
+            JobSpec::Prune {
+                method: PruneMethod::ExactObs,
+                sparsity: 0.5,
+                scope: LayerScope::All,
+            },
+        ),
+        (
+            "j1b",
+            JobSpec::Prune {
+                method: PruneMethod::ExactObs,
+                sparsity: 0.5,
+                scope: LayerScope::All,
+            },
+        ),
+        (
+            "j2",
+            JobSpec::Quant {
+                method: QuantMethod::Obq,
+                bits: 4,
+                symmetric: false,
+                scope: LayerScope::All,
+                corrected: true,
+            },
+        ),
+        (
+            "j3",
+            JobSpec::Solve { db: sparsity_db_spec(), target: TargetKind::Flop, value: 1.5 },
+        ),
+        (
+            "j4",
+            JobSpec::Solve { db: sparsity_db_spec(), target: TargetKind::Flop, value: 2.0 },
+        ),
+    ]
+}
+
+#[test]
+fn concurrent_jobs_calibrate_once_share_db_cache_and_match_sequential() {
+    // --- concurrent: all jobs queued up-front, 4 workers race ---------
+    let server = CompressionServer::start(ServerConfig {
+        workers: 4,
+        queue_cap: 16,
+        models_dir: PathBuf::from("/nonexistent"),
+        synthetic_only: true,
+    });
+    let (tx, rx) = mpsc::channel();
+    for (id, spec) in job_batch() {
+        server
+            .submit(SYNTHETIC_MODEL, spec, Some(id.to_string()), tx.clone())
+            .unwrap();
+    }
+    drop(tx);
+    let responses: BTreeMap<String, Response> = rx
+        .iter()
+        .map(|r| (r.client_id.clone().unwrap(), r))
+        .collect();
+    assert_eq!(responses.len(), 5, "every job answered");
+
+    // (1) Exactly one calibration despite 5 simultaneous jobs.
+    let metrics = server.metrics_json();
+    assert_eq!(
+        metrics.get("calibrations").unwrap().as_f64().unwrap(),
+        1.0,
+        "single-flight calibration: {metrics}"
+    );
+
+    // (2) One database build shared by j3 and j4 (the build is a miss;
+    // the other solve either hits the cache or coalesces — both count
+    // as exactly one build).
+    let misses = metrics.get("db_cache_misses").unwrap().as_f64().unwrap();
+    assert_eq!(misses, 1.0, "one db build: {metrics}");
+    let hits = metrics.get("db_cache_hits").unwrap().as_f64().unwrap();
+    assert!(hits >= 1.0, "second solve must reuse the db: {metrics}");
+
+    // Duplicate jobs agree bit-for-bit however they were scheduled.
+    let bits = |id: &str| -> u64 {
+        responses[id]
+            .outcome
+            .as_ref()
+            .unwrap_or_else(|e| panic!("{id} failed: {e}"))
+            .metric()
+            .unwrap()
+            .to_bits()
+    };
+    assert_eq!(bits("j1a"), bits("j1b"), "duplicate jobs identical");
+
+    // --- sequential: the old Pipeline path on an identically-seeded
+    // engine (fresh calibration, fresh caches, no server) --------------
+    let p = Pipeline::from_engine(Arc::new(CompressionEngine::synthetic(SYNTHETIC_SEED).unwrap()));
+    let seq_prune = p.run_uniform_sparsity(PruneMethod::ExactObs, 0.5, LayerScope::All);
+    let seq_quant = p.run_quant(QuantMethod::Obq, 4, false, LayerScope::All, true);
+    let db = p.build_sparsity_db(PruneMethod::ExactObs, &[0.0, 0.5, 0.9], LayerScope::All);
+    let seq_solve_15 = p.eval_flop_target(&db, LayerScope::All, 1.5).unwrap();
+    let seq_solve_20 = p.eval_flop_target(&db, LayerScope::All, 2.0).unwrap();
+
+    // (3) Bit-identical results, concurrent vs sequential.
+    assert_eq!(bits("j1a"), seq_prune.to_bits(), "prune differs from Pipeline path");
+    assert_eq!(bits("j2"), seq_quant.to_bits(), "quant differs from Pipeline path");
+    for (id, (seq_metric, seq_achieved)) in [("j3", seq_solve_15), ("j4", seq_solve_20)] {
+        match responses[id].outcome.as_ref().unwrap() {
+            JobResult::Solved { metric, achieved, .. } => {
+                assert_eq!(metric.to_bits(), seq_metric.to_bits(), "{id} metric differs");
+                assert_eq!(achieved.to_bits(), seq_achieved.to_bits(), "{id} achieved differs");
+            }
+            other => panic!("{id}: expected Solved, got {other:?}"),
+        }
+    }
+
+    // Graceful shutdown still works after the batch.
+    server.shutdown();
+    let health = server.health_json();
+    assert_eq!(health.get("queue_depth").unwrap().as_f64().unwrap(), 0.0);
+}
+
+/// Queue-depth metrics see the burst; per-job timing fields are recorded.
+#[test]
+fn metrics_record_queue_depth_and_timings() {
+    let server = CompressionServer::start(ServerConfig {
+        workers: 1, // one worker → jobs pile up in the queue
+        queue_cap: 8,
+        models_dir: PathBuf::from("/nonexistent"),
+        synthetic_only: true,
+    });
+    let (tx, rx) = mpsc::channel();
+    for i in 0..3 {
+        server
+            .submit(SYNTHETIC_MODEL, JobSpec::Dense, Some(format!("d{i}")), tx.clone())
+            .unwrap();
+    }
+    drop(tx);
+    let responses: Vec<Response> = rx.iter().collect();
+    assert_eq!(responses.len(), 3);
+    // Coalesced or not, all three carry timing fields and one executed.
+    assert!(responses.iter().all(|r| r.queue_s >= 0.0 && r.exec_s >= 0.0));
+    assert!(responses.iter().any(|r| !r.coalesced && r.exec_s > 0.0));
+    let m = server.metrics_json();
+    // Peak depth is scheduling-dependent (the single worker may pop a
+    // job between two pushes), but the high-water mark must have seen
+    // at least one queued job.
+    assert!(m.get("queue_depth_peak").unwrap().as_f64().unwrap() >= 1.0, "{m}");
+    assert_eq!(
+        m.get("jobs_submitted").unwrap().as_f64().unwrap(),
+        3.0
+    );
+    assert_eq!(
+        m.get("jobs_completed").unwrap().as_f64().unwrap(),
+        3.0
+    );
+    assert!(m.get("exec_seconds_total").unwrap().as_f64().unwrap() > 0.0);
+    server.shutdown();
+}

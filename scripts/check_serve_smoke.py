@@ -1,0 +1,55 @@
+#!/usr/bin/env python3
+"""Validate the serve-smoke transcript (see `make serve-smoke`).
+
+The batch pipes health + four good jobs (including an exact duplicate
+pair) + two bad jobs + metrics + shutdown through the line-protocol
+server in --synthetic mode. Every output line must be valid JSON; the
+post-drain shutdown ack must show exactly one calibration, four
+completed jobs and one failed job.
+"""
+import json
+import sys
+
+path = sys.argv[1] if len(sys.argv) > 1 else "target/serve_smoke.out"
+lines = [l for l in open(path).read().splitlines() if l.strip()]
+assert lines, f"{path} is empty"
+docs = []
+for l in lines:
+    try:
+        docs.append(json.loads(l))
+    except json.JSONDecodeError as e:
+        raise SystemExit(f"invalid JSON line: {l!r}: {e}")
+
+by_id = {d["id"]: d for d in docs if "id" in d}
+
+# Health answered inline.
+assert any(d.get("op") == "health" and d.get("status") == "serving" for d in docs), docs
+
+# The four good jobs completed with finite metrics...
+for jid in ("p1", "p2", "q1", "s1"):
+    d = by_id.get(jid)
+    assert d is not None, f"no response for {jid}: {lines}"
+    assert d["ok"] is True, f"{jid} failed: {d}"
+assert isinstance(by_id["p1"]["metric"], float) or isinstance(by_id["p1"]["metric"], int)
+# ...and the duplicate pair agrees exactly (coalesced or recomputed).
+assert by_id["p1"]["metric"] == by_id["p2"]["metric"], (by_id["p1"], by_id["p2"])
+assert by_id["s1"].get("achieved", 0) >= 1.0, by_id["s1"]
+
+# Both bad requests produced error responses, not crashes.
+errors = [d for d in docs if d.get("ok") is False]
+assert len(errors) == 2, f"expected 2 error lines, got {errors}"
+assert all("error" in d for d in errors), errors
+
+# The shutdown ack is last and carries the post-drain counters:
+# single-flight calibration, 4 ok jobs, 1 failed job.
+ack = docs[-1]
+assert ack.get("op") == "shutdown" and ack.get("ok") is True, ack
+assert ack["calibrations"] == 1, ack
+assert ack["jobs_completed"] == 4, ack
+assert ack["jobs_failed"] == 1, ack
+assert ack["jobs_submitted"] == 5, ack
+
+print(f"serve-smoke OK: {len(docs)} lines, "
+      f"{ack['jobs_completed']} jobs ok, {ack['jobs_failed']} failed, "
+      f"{ack['calibrations']} calibration, "
+      f"{ack['jobs_coalesced']} coalesced")
