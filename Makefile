@@ -2,7 +2,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test bench bench-json bench-smoke bench-serve serve-smoke fmt lint clean
+.PHONY: build test bench bench-json bench-smoke bench-serve bench-db serve-smoke fmt lint clean
 
 build:
 	$(CARGO) build --release
@@ -30,6 +30,13 @@ bench-smoke:
 # on the synthetic model — writes BENCH_serve.json at the repo root.
 bench-serve:
 	$(CARGO) bench --bench serve_throughput
+
+# Database-build report: incremental trace-prefix builder vs the
+# per-level reference vs a single full-depth run, with the < 2x-of-one-
+# run assertion and per-level bit-identity checks — writes BENCH_db.json
+# at the repo root (OBC_BENCH_SMOKE=1 writes BENCH_db.smoke.json).
+bench-db:
+	$(CARGO) bench --bench db_build
 
 # Scripted job batch — four good jobs (incl. an exact duplicate pair),
 # a malformed op, a refused model, metrics, shutdown — piped through the

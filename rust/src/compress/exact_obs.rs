@@ -242,7 +242,34 @@ pub fn sweep_all_rows_on(
 /// Algorithm 2: given per-row traces, pick the global number of weights to
 /// prune per row for a total budget of `k_total`, via a min-heap on the
 /// next loss increase of each row.
+///
+/// Delegates to [`global_select_multi`] with a single target — ONE heap
+/// loop exists, so the multi variant's "identical counts and tie-breaks"
+/// contract holds by construction rather than by keeping two copies of
+/// the float-ordering struct and pop/push step in lockstep.
 pub fn global_select(traces: &[RowTrace], k_total: usize) -> Vec<usize> {
+    global_select_multi(traces, &[k_total])
+        .pop()
+        .expect("one target in, one count vector out")
+}
+
+/// Multi-level Algorithm 2: one heap sweep over the traces that emits
+/// the per-row counts at **every** requested total budget, by
+/// snapshotting the counts whenever `taken` crosses a target.
+///
+/// The heap's evolution is a deterministic function of the traces alone
+/// — running to budget k passes through the exact state any shorter run
+/// ends in — so `out[ℓ]` is identical (same counts, same tie-breaks) to
+/// an independent `global_select(traces, k_totals[ℓ])`, at the cost of
+/// ONE sweep to `max(k_totals)` instead of one rebuild per level. This
+/// is the selection half of the incremental database builder
+/// ([`crate::compress::trace_db`]); the reconstruction half lives in
+/// [`sweep::prefix_reconstruct_multi`].
+///
+/// `k_totals` may be unsorted and may repeat; results are returned in
+/// the given order. Budgets beyond the combined trace length saturate at
+/// trace exhaustion, exactly as [`global_select`] does.
+pub fn global_select_multi(traces: &[RowTrace], k_totals: &[usize]) -> Vec<Vec<usize>> {
     #[derive(PartialEq)]
     struct Cand(f64, usize);
     impl Eq for Cand {}
@@ -256,6 +283,10 @@ pub fn global_select(traces: &[RowTrace], k_total: usize) -> Vec<usize> {
             self.0.partial_cmp(&o.0).unwrap_or(std::cmp::Ordering::Equal)
         }
     }
+    // Targets ascending; duplicates share one snapshot.
+    let mut by_k: Vec<usize> = (0..k_totals.len()).collect();
+    by_k.sort_by_key(|&i| k_totals[i]);
+    let mut out: Vec<Vec<usize>> = vec![Vec::new(); k_totals.len()];
     let mut counts = vec![0usize; traces.len()];
     let mut heap: BinaryHeap<Reverse<Cand>> = traces
         .iter()
@@ -263,19 +294,23 @@ pub fn global_select(traces: &[RowTrace], k_total: usize) -> Vec<usize> {
         .filter(|(_, t)| !t.dloss.is_empty())
         .map(|(i, t)| Reverse(Cand(t.dloss[0], i)))
         .collect();
-    let mut taken = 0;
-    while taken < k_total {
-        let Some(Reverse(Cand(_, i))) = heap.pop() else {
-            break; // traces exhausted (trace_cap shorter than requested k)
-        };
-        counts[i] += 1;
-        taken += 1;
-        let next = counts[i];
-        if next < traces[i].dloss.len() {
-            heap.push(Reverse(Cand(traces[i].dloss[next], i)));
+    let mut taken = 0usize;
+    for &li in &by_k {
+        let k = k_totals[li];
+        while taken < k {
+            let Some(Reverse(Cand(_, i))) = heap.pop() else {
+                break; // traces exhausted — saturate like global_select
+            };
+            counts[i] += 1;
+            taken += 1;
+            let next = counts[i];
+            if next < traces[i].dloss.len() {
+                heap.push(Reverse(Cand(traces[i].dloss[next], i)));
+            }
         }
+        out[li] = counts.clone();
     }
-    counts
+    out
 }
 
 /// Step 3: rebuild each compressed row from the dense weights, given how
@@ -886,6 +921,43 @@ mod tests {
         ];
         let counts = global_select(&traces, 2);
         assert_eq!(counts, vec![2, 0]);
+    }
+
+    /// One multi-target heap sweep must equal an independent
+    /// `global_select` per target — unsorted targets, duplicates,
+    /// budgets past trace exhaustion included.
+    #[test]
+    fn global_select_multi_matches_per_k_select() {
+        pt::check(0x5e1ec7, 20, |g| {
+            let rows = g.usize_in(1, 6);
+            let traces: Vec<RowTrace> = (0..rows)
+                .map(|_| {
+                    let len = g.usize_in(0, 8);
+                    let mut dloss: Vec<f64> =
+                        (0..len).map(|_| g.f64_in(0.0, 4.0)).collect();
+                    // Traces are monotone nondecreasing in practice.
+                    dloss.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    RowTrace { order: (0..len).collect(), dloss }
+                })
+                .collect();
+            let total: usize = traces.iter().map(|t| t.dloss.len()).sum();
+            let mut ks: Vec<usize> =
+                (0..g.usize_in(1, 7)).map(|_| g.usize_in(0, total + 3)).collect();
+            if g.bool() {
+                ks.push(ks[0]); // duplicate target
+            }
+            let multi = global_select_multi(&traces, &ks);
+            for (i, &k) in ks.iter().enumerate() {
+                let single = global_select(&traces, k);
+                if multi[i] != single {
+                    return Err(format!(
+                        "k={k}: multi {:?} vs single {:?}",
+                        multi[i], single
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

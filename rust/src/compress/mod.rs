@@ -24,8 +24,10 @@ pub mod sweep;
 pub mod exact_obs;
 pub mod obq;
 pub mod baselines;
+pub mod trace_db;
 
 use crate::linalg::Mat;
+use crate::util::pool::ThreadPool;
 
 /// Layer-wise squared error ‖W·X − Ŵ·X‖² computed through the Hessian:
 /// for each row, ΔwᵀXXᵀΔw = Δwᵀ(H/2)Δw (H carries the factor 2).
@@ -44,6 +46,55 @@ pub fn layer_sq_err(w: &Mat, w_hat: &Mat, h: &Mat) -> f64 {
         let hv = h.matvec(&dw);
         let q: f64 = dw.iter().zip(&hv).map(|(a, b)| a * b).sum();
         total += 0.5 * q;
+    }
+    total.max(0.0)
+}
+
+/// [`layer_sq_err`] with the per-row quadratic forms fanned over a
+/// thread pool. Each row job evaluates the exact expression of the
+/// serial loop body (same difference, matvec and reduction order); the
+/// per-row terms are then folded in row order on the caller, so the
+/// total is **bit-identical** to the serial version for any pool size
+/// (asserted by `parallel_layer_sq_err_is_bit_identical`).
+pub fn layer_sq_err_on(pool: &ThreadPool, w: &Mat, w_hat: &Mat, h: &Mat) -> f64 {
+    layer_sq_err_shared(
+        pool,
+        &std::sync::Arc::new(w.clone()),
+        &std::sync::Arc::new(w_hat.clone()),
+        &std::sync::Arc::new(h.clone()),
+    )
+}
+
+/// [`layer_sq_err_on`] against already-shared matrices: callers that
+/// score many candidate matrices against one `(w, h)` pair (the
+/// multi-level database builders) wrap them in `Arc` ONCE instead of
+/// deep-cloning the d×d Hessian per evaluation.
+pub fn layer_sq_err_shared(
+    pool: &ThreadPool,
+    w: &std::sync::Arc<Mat>,
+    w_hat: &std::sync::Arc<Mat>,
+    h: &std::sync::Arc<Mat>,
+) -> f64 {
+    assert_eq!(w.rows, w_hat.rows);
+    assert_eq!(w.cols, w_hat.cols);
+    assert_eq!(h.rows, w.cols);
+    let wa = std::sync::Arc::clone(w);
+    let wh = std::sync::Arc::clone(w_hat);
+    let ha = std::sync::Arc::clone(h);
+    let terms = pool.par_map(w.rows, move |r| {
+        let dw: Vec<f64> = wa
+            .row(r)
+            .iter()
+            .zip(wh.row(r))
+            .map(|(a, b)| a - b)
+            .collect();
+        let hv = ha.matvec(&dw);
+        let q: f64 = dw.iter().zip(&hv).map(|(a, b)| a * b).sum();
+        0.5 * q
+    });
+    let mut total = 0.0;
+    for t in terms {
+        total += t;
     }
     total.max(0.0)
 }
@@ -106,5 +157,28 @@ mod tests {
         let w = Mat::randn(3, 5, 3);
         let h = Mat::eye(5);
         assert_eq!(layer_sq_err(&w, &w, &h), 0.0);
+    }
+
+    /// The pooled layer error must equal the serial loop to the last
+    /// ulp, for any pool size: same per-row terms, same fold order.
+    #[test]
+    fn parallel_layer_sq_err_is_bit_identical() {
+        let d_col = 12;
+        let w = Mat::randn(7, d_col, 4);
+        let mut what = w.clone();
+        for (i, v) in what.data.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = 0.0;
+            }
+        }
+        let mut acc = HessianAccumulator::new(d_col);
+        acc.add_batch(&Mat::randn(d_col, 40, 5));
+        let h = acc.raw();
+        let serial = layer_sq_err(&w, &what, &h);
+        for threads in [1usize, 2, 5] {
+            let pool = ThreadPool::new(threads);
+            let par = layer_sq_err_on(&pool, &w, &what, &h);
+            assert_eq!(par.to_bits(), serial.to_bits(), "{threads} threads");
+        }
     }
 }

@@ -39,7 +39,7 @@
 
 use super::hessian::LayerHessian;
 use super::quant::Grid;
-use crate::linalg::Mat;
+use crate::linalg::{cholesky_append, cholesky_backward_strided, cholesky_forward_strided, Mat};
 use crate::util::logging::{self, Level};
 use crate::util::scratch::Scratch;
 
@@ -474,6 +474,82 @@ pub fn group_reconstruct(
     Ok(())
 }
 
+/// Multi-level group-OBS reconstruction of one row over **nested prefix**
+/// pruned sets (the incremental trace-prefix database path): `order` is
+/// the row's elimination order (weight indices, trace order), `ks` the
+/// ascending, deduplicated prefix lengths requested (all > 0, ≤
+/// `order.len()`). For each `k` in `ks`, the closed form
+///
+///   δ = −H⁻¹[:,P]·((H⁻¹)_P)⁻¹·w_P,  P = order[..k]
+///
+/// is evaluated from the *original* dense row and handed to
+/// `emit(k, row)` — exactly what [`group_reconstruct`] produces for
+/// `pruned = &order[..k]`, bit for bit.
+///
+/// The speedup: the Cholesky factor of `(H⁻¹)_P` lives in the arena's
+/// group workspace **in trace order** and is *extended* by
+/// [`cholesky_append`] as `k` grows — appending performs the identical
+/// arithmetic to a from-scratch factorization (row `i` of L reads only
+/// rows `< i`), so producing all levels costs one `k_max³/3`
+/// factorization instead of `Σ_ℓ k_ℓ³/3`, while staying bit-identical to
+/// the per-level reference path (asserted by `rust/tests/db_incremental.rs`).
+///
+/// A non-SPD pivot at append row `i` surfaces as [`NonSpd`] (the levels
+/// with `k ≤ i` have already been emitted) — the same condition on which
+/// the per-level reference fails its first affected level.
+pub fn prefix_reconstruct_multi(
+    s: &mut Scratch,
+    w: &[f64],
+    hinv: &Mat,
+    order: &[usize],
+    ks: &[usize],
+    mut emit: impl FnMut(usize, &[f64]),
+) -> Result<(), NonSpd> {
+    let d = w.len();
+    s.ensure(d);
+    let Some(&kmax) = ks.last() else {
+        return Ok(()); // no non-empty prefix requested
+    };
+    debug_assert!(kmax <= order.len());
+    debug_assert!(ks.windows(2).all(|p| p[0] < p[1]) && ks[0] > 0, "ks must be ascending, > 0");
+    s.ensure_group(kmax);
+    let mut done = 0usize; // factored prefix rows so far
+    for &k in ks {
+        let spd = cholesky_append(&mut s.ga, kmax, done, k, |i, j| {
+            hinv.at(order[i], order[j])
+        });
+        debug_assert!(spd, "(H⁻¹)_P not SPD — Hessian dampening too small");
+        if !spd {
+            return Err(NonSpd { index: order[0], diag: f64::NAN });
+        }
+        // Extend the forward solution z (prefix-stable, carried in gb)
+        // over the new rows, then run only the Θ(k²) backward half on a
+        // copy — together bit-identical to a full solve at width k.
+        for (bi, &p) in order[done..k].iter().enumerate() {
+            s.gb[done + bi] = w[p];
+        }
+        cholesky_forward_strided(&s.ga, kmax, done, k, &mut s.gb[..k]);
+        done = k;
+        s.gy[..k].copy_from_slice(&s.gb[..k]);
+        cholesky_backward_strided(&s.ga, kmax, k, &mut s.gy[..k]);
+        // δ = −H⁻¹[:,P]·y from the original dense row, then zero P —
+        // the same loop shape as `group_reconstruct`.
+        s.out[..d].copy_from_slice(w);
+        for j in 0..d {
+            let mut acc = 0.0;
+            for (bi, &p) in order[..k].iter().enumerate() {
+                acc += hinv.at(j, p) * s.gy[bi];
+            }
+            s.out[j] -= acc;
+        }
+        for &p in &order[..k] {
+            s.out[p] = 0.0;
+        }
+        emit(k, &s.out[..d]);
+    }
+    Ok(())
+}
+
 /// Number of ×10 dampening escalations attempted before giving up.
 const REDAMP_ATTEMPTS: usize = 8;
 
@@ -603,6 +679,36 @@ mod tests {
     fn redamp_retry_gives_up_loudly() {
         let h = layer(4, 13);
         run_with_redamp::<()>(&h, "test", |_| Err(NonSpd { index: 0, diag: 0.0 }));
+    }
+
+    /// Each level emitted by the prefix reconstructor must be bit-equal
+    /// to a from-scratch `group_reconstruct` of that prefix — including
+    /// when the arena is dirty from a previous, larger problem.
+    #[test]
+    fn prefix_reconstruct_matches_group_reconstruct_per_level() {
+        let d = 14;
+        let h = layer(d, 23);
+        let w: Vec<f64> = (0..d).map(|i| (i as f64) * 0.37 - 2.1).collect();
+        // An elimination order (as a trace would produce): not sorted.
+        let order: Vec<usize> = vec![5, 2, 9, 0, 13, 7, 3, 11, 1, 8];
+        let ks = vec![1usize, 3, 4, 8, 10];
+        let mut s = Scratch::new();
+        s.ensure(40); // dirty, oversized arena from a "previous layer"
+        s.ensure_group(25);
+        for v in s.ga.iter_mut() {
+            *v = f64::NAN;
+        }
+        let mut got: Vec<(usize, Vec<f64>)> = Vec::new();
+        prefix_reconstruct_multi(&mut s, &w, &h.hinv, &order, &ks, |k, row| {
+            got.push((k, row.to_vec()));
+        })
+        .unwrap();
+        assert_eq!(got.len(), ks.len());
+        let mut s2 = Scratch::new();
+        for (k, row) in got {
+            group_reconstruct(&mut s2, &w, &h.hinv, &order[..k]).unwrap();
+            assert_eq!(row, s2.out()[..d].to_vec(), "level k={k} diverged");
+        }
     }
 
     /// Sparse pre-elimination must leave exactly the non-zero positions

@@ -1,0 +1,303 @@
+//! The incremental trace-prefix database builder.
+//!
+//! The paper's flexibility argument (§6) is that the *entire* model
+//! database — every layer at every grid level — costs "approximately the
+//! time of one run". The per-level path only got halfway there: it
+//! reused the row **sweeps** across levels, but re-ran Algorithm 2's
+//! heap selection from scratch and a full `|P_ℓ|³/3` group-OBS Cholesky
+//! per row for every Eq. 10 level — 29 levels on this repo's δ=0.1 grid
+//! to 0.95 (~44 at the paper's 0.99 cap). Since per-row pruned sets are
+//! **nested prefixes of one trace**, almost all of that work is
+//! redundant. This module removes it:
+//!
+//! * **Selection** — [`super::exact_obs::global_select_multi`]: one heap sweep
+//!   to the deepest budget, snapshotting the per-row counts whenever a
+//!   requested level's budget is crossed. Identical counts (including
+//!   tie-breaks) to an independent `global_select` per level, because a
+//!   shorter run is a prefix of the longer run's heap evolution.
+//! * **Reconstruction** — [`sweep::prefix_reconstruct_multi`]: the
+//!   Cholesky factor of `(H⁻¹)_P` is kept **in trace order** in the
+//!   worker's scratch arena and *extended* by
+//!   [`crate::linalg::cholesky_append`] as the pruned prefix grows —
+//!   appending performs the identical arithmetic to a from-scratch
+//!   factorization of each prefix, so every level's output is
+//!   bit-identical to the per-level reference path while all levels
+//!   together cost ~one factorization of the largest set
+//!   (`k_max³/3` instead of `Σ_ℓ k_ℓ³/3`).
+//! * **Parallelism** — rows are independent arena jobs on the shared
+//!   [`crate::util::pool`], collected in row order; each row job also
+//!   computes its per-level layer-error term (once per *distinct*
+//!   prefix depth), and the per-level totals are folded in row order on
+//!   the caller — bit-identical to [`super::layer_sq_err`] on the
+//!   assembled matrix, for any pool size.
+//!
+//! Bit-identity against the per-level reference path — across
+//! unstructured and block grids, dirty arena reuse and pool sizes — is
+//! asserted by `rust/tests/db_incremental.rs`; the before/after cost is
+//! tracked by `benches/db_build.rs` (`BENCH_db.json`).
+//!
+//! Edge case: a [`NonSpd`] Hessian triggers ONE damped retry of the
+//! whole multi-level batch, where the per-level path would retry only
+//! the failing level. Both paths recover; they may then differ on that
+//! (degenerate, logged) layer.
+
+use super::exact_obs::RowTrace;
+use super::hessian::LayerHessian;
+use super::sweep::{self, NonSpd};
+use super::CompressResult;
+use crate::linalg::Mat;
+use crate::util::pool::ThreadPool;
+use crate::util::scratch;
+use std::sync::Arc;
+
+/// Reconstruct every unstructured grid level in one pass.
+///
+/// `level_counts[ℓ][r]` is the number of trace entries of row `r`
+/// pruned at level ℓ (the output of
+/// [`exact_obs::global_select_multi`](super::exact_obs::global_select_multi)).
+/// Returns one [`CompressResult`] per level, in `level_counts` order —
+/// bit-identical to calling
+/// [`reconstruct_from_traces_on`](super::exact_obs::reconstruct_from_traces_on)
+/// once per level.
+pub fn unstructured_levels_on(
+    pool: &ThreadPool,
+    w: &Mat,
+    hess: &LayerHessian,
+    traces: &[RowTrace],
+    level_counts: &[Vec<usize>],
+) -> Vec<CompressResult> {
+    let orders: Vec<Vec<usize>> = traces.iter().map(|t| t.order.clone()).collect();
+    prefix_levels_on(pool, w, hess, orders, level_counts, 1, true)
+}
+
+/// Reconstruct every block-sparsity grid level in one pass.
+///
+/// `traces` hold **block** indices (from
+/// [`sweep_all_rows_block_on`](super::exact_obs::sweep_all_rows_block_on))
+/// and `level_counts[ℓ][r]` counts pruned *blocks*; each block expands
+/// to its `c` consecutive weight indices in trace order, so block
+/// prefixes are weight-index prefixes and the same factor-extension
+/// applies. Bit-identical to a per-level
+/// [`group_obs_reconstruct`](super::exact_obs::group_obs_reconstruct)
+/// over the expanded sets.
+///
+/// `compute_err` gates the per-level layer-error fold: the CPU database
+/// builder discards the pruned-stage error (it re-scores after int8
+/// quantization), so it passes `false` and every result carries
+/// `sq_err == 0.0` instead of paying rows·d² per level for a number
+/// nobody reads.
+pub fn block_levels_on(
+    pool: &ThreadPool,
+    w: &Mat,
+    hess: &LayerHessian,
+    traces: &[RowTrace],
+    c: usize,
+    level_counts: &[Vec<usize>],
+    compute_err: bool,
+) -> Vec<CompressResult> {
+    let d = w.cols;
+    let orders: Vec<Vec<usize>> = traces
+        .iter()
+        .map(|t| {
+            let mut o = Vec::with_capacity(t.order.len() * c);
+            for &b in &t.order {
+                let start = b * c;
+                o.extend(start..(start + c).min(d));
+            }
+            o
+        })
+        .collect();
+    prefix_levels_on(pool, w, hess, orders, level_counts, c, compute_err)
+}
+
+/// Shared core: per-row prefix reconstruction at every distinct depth,
+/// then per-level assembly. `unit` converts a level count into a prefix
+/// length of the expanded order (1 for unstructured, block width for
+/// block grids).
+///
+/// Error bit-identity: each row job evaluates, per distinct depth, the
+/// exact per-row expression of [`super::layer_sq_err`] (difference,
+/// `matvec`, dot, `0.5·q`) on the row it just reconstructed, against
+/// the ORIGINAL (never re-dampened) Hessian. The caller folds the terms
+/// in row order; untouched rows contribute a literal `+0.0`, which is
+/// what the reference computes for a zero difference row, so the fold
+/// and the final `.max(0.0)` land on the identical bits.
+fn prefix_levels_on(
+    pool: &ThreadPool,
+    w: &Mat,
+    hess: &LayerHessian,
+    orders: Vec<Vec<usize>>,
+    level_counts: &[Vec<usize>],
+    unit: usize,
+    compute_err: bool,
+) -> Vec<CompressResult> {
+    let rows = w.rows;
+    assert_eq!(orders.len(), rows, "one trace per row");
+    for counts in level_counts {
+        assert_eq!(counts.len(), rows, "one count per row per level");
+    }
+    // Per-row ascending distinct prefix depths across all levels: rows
+    // shared by many levels are factored once, solved once per depth.
+    let lens: Vec<Vec<usize>> = (0..rows)
+        .map(|r| {
+            let mut ks: Vec<usize> = level_counts
+                .iter()
+                .map(|counts| counts[r] * unit)
+                .filter(|&k| k > 0)
+                .collect();
+            ks.sort_unstable();
+            ks.dedup();
+            ks
+        })
+        .collect();
+    let wa = Arc::new(w.clone());
+    // The error terms always score against the ORIGINAL H, even when a
+    // NonSpd retry re-dampens the hinv used for reconstruction — the
+    // same asymmetry as the per-level reference path.
+    let h_orig = Arc::new(hess.h.clone());
+    let orders = Arc::new(orders);
+    let lens = Arc::new(lens);
+    // One arena job per row; NonSpd corruption triggers the layer-level
+    // damped retry, like every other reconstruction fan-out.
+    let rows_by_k: Vec<Vec<(usize, Vec<f64>, f64)>> =
+        sweep::run_with_redamp(hess, "incremental multi-level reconstruction", move |h| {
+            let wa = Arc::clone(&wa);
+            let h_orig = Arc::clone(&h_orig);
+            let orders = Arc::clone(&orders);
+            let lens = Arc::clone(&lens);
+            let hinv = Arc::new(h.hinv.clone());
+            pool.par_map(rows, move |r| {
+                if lens[r].is_empty() {
+                    return Ok(Vec::new());
+                }
+                let mut got: Vec<(usize, Vec<f64>, f64)> =
+                    Vec::with_capacity(lens[r].len());
+                scratch::with(|s| {
+                    sweep::prefix_reconstruct_multi(
+                        s,
+                        wa.row(r),
+                        &hinv,
+                        &orders[r],
+                        &lens[r],
+                        |k, row| {
+                            // Per-row error term at this depth: the
+                            // reference layer_sq_err loop body, verbatim.
+                            let term = if compute_err {
+                                let dw: Vec<f64> = wa
+                                    .row(r)
+                                    .iter()
+                                    .zip(row)
+                                    .map(|(a, b)| a - b)
+                                    .collect();
+                                let hv = h_orig.matvec(&dw);
+                                let q: f64 =
+                                    dw.iter().zip(&hv).map(|(a, b)| a * b).sum();
+                                0.5 * q
+                            } else {
+                                0.0
+                            };
+                            got.push((k, row.to_vec(), term));
+                        },
+                    )
+                })?;
+                Ok(got)
+            })
+            .into_iter()
+            .collect::<Result<Vec<_>, NonSpd>>()
+        });
+    // Per-level assembly: clone of the dense weights + reconstructed
+    // rows; the error is the row-order fold of the per-row terms.
+    level_counts
+        .iter()
+        .map(|counts| {
+            let mut out = w.clone();
+            let mut total = 0.0;
+            for (r, rows_k) in rows_by_k.iter().enumerate() {
+                let k = counts[r] * unit;
+                if k == 0 {
+                    continue; // untouched row: the reference adds +0.0
+                }
+                let (_, row, term) = rows_k
+                    .iter()
+                    .find(|(kk, _, _)| *kk == k)
+                    .expect("prefix depth reconstructed for its level");
+                out.row_mut(r).copy_from_slice(row);
+                total += *term;
+            }
+            let err = if compute_err { total.max(0.0) } else { 0.0 };
+            CompressResult::new(out, err)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::exact_obs::{self, ObsOpts};
+
+    fn setup(d_row: usize, d_col: usize, seed: u64) -> (Mat, LayerHessian) {
+        let w = Mat::randn(d_row, d_col, seed);
+        let x = Mat::randn(d_col, d_col * 2 + 8, seed + 9000);
+        (w, LayerHessian::from_inputs(&x, 1e-8))
+    }
+
+    /// In-module smoke: every unstructured level from the one-pass
+    /// builder equals the per-level reference reconstruction bitwise
+    /// (deep randomized coverage lives in rust/tests/db_incremental.rs).
+    #[test]
+    fn incremental_levels_match_per_level_reference_smoke() {
+        let (w, h) = setup(5, 16, 41);
+        let pool = ThreadPool::new(2);
+        let traces = exact_obs::sweep_all_rows_on(&pool, &w, &h, &ObsOpts::default());
+        let total = w.rows * w.cols;
+        let k_totals: Vec<usize> = [0.0f64, 0.25, 0.5, 0.75]
+            .iter()
+            .map(|s| ((total as f64) * s).round() as usize)
+            .collect();
+        let counts = exact_obs::global_select_multi(&traces, &k_totals);
+        let levels = unstructured_levels_on(&pool, &w, &h, &traces, &counts);
+        assert_eq!(levels.len(), k_totals.len());
+        for (l, res) in levels.iter().enumerate() {
+            let reference =
+                exact_obs::reconstruct_from_traces_on(&pool, &w, &h, &traces, &counts[l]);
+            assert_eq!(res.w.data, reference.w.data, "level {l} weights diverged");
+            assert_eq!(res.sq_err.to_bits(), reference.sq_err.to_bits(), "level {l} err");
+            assert_eq!(res.sparsity, reference.sparsity, "level {l} sparsity");
+        }
+    }
+
+    /// Block grids: the expanded-prefix path must equal the per-level
+    /// group reconstruction of the expanded sets.
+    #[test]
+    fn incremental_block_levels_match_reference_smoke() {
+        let (w, h) = setup(4, 16, 43);
+        let pool = ThreadPool::new(2);
+        const C: usize = 4;
+        let traces = exact_obs::sweep_all_rows_block_on(&pool, &w, &h, C, 1.0);
+        let total = w.rows * w.cols;
+        let kb_totals: Vec<usize> = [0.0f64, 0.25, 0.5]
+            .iter()
+            .map(|s| ((total as f64) * s / C as f64).round() as usize)
+            .collect();
+        let counts = exact_obs::global_select_multi(&traces, &kb_totals);
+        let levels = block_levels_on(&pool, &w, &h, &traces, C, &counts, true);
+        for (l, res) in levels.iter().enumerate() {
+            let mut out = w.clone();
+            for r in 0..w.rows {
+                let kb = counts[l][r];
+                if kb == 0 {
+                    continue;
+                }
+                let mut pruned = Vec::with_capacity(kb * C);
+                for &b in &traces[r].order[..kb] {
+                    pruned.extend(b * C..((b + 1) * C).min(w.cols));
+                }
+                let row = exact_obs::group_obs_reconstruct(w.row(r), &h.hinv, &pruned);
+                out.row_mut(r).copy_from_slice(&row);
+            }
+            let err = crate::compress::layer_sq_err(&w, &out, &h.h);
+            assert_eq!(res.w.data, out.data, "block level {l} weights diverged");
+            assert_eq!(res.sq_err.to_bits(), err.to_bits(), "block level {l} err");
+        }
+    }
+}

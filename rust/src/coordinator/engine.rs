@@ -14,12 +14,22 @@
 //! concurrent jobs that need the same database wait on one build instead
 //! of recomputing it — the paper's "entire database in approximately the
 //! time of one run", now also true across requests of a serving process.
+//! The cache is **byte-bounded** with LRU eviction
+//! ([`DEFAULT_DB_CACHE_BYTES`], `OBC_DB_CACHE_BYTES`,
+//! [`CompressionEngine::set_db_cache_capacity`]); hit/miss/eviction
+//! counters surface in the server metrics. The builds themselves run the
+//! **incremental trace-prefix path** ([`crate::compress::trace_db`]):
+//! one multi-target heap selection + one Cholesky-extension
+//! reconstruction pass per layer instead of per-level recomputation,
+//! with layer work items fanned across a coarse scoped-thread tier.
 
 use super::methods::{PruneMethod, QuantMethod};
 use super::{calibrate, CalibOpts, LayerHessians};
 use crate::compress::exact_obs::{self, ObsOpts};
 use crate::compress::obq::{self, ObqOpts};
-use crate::compress::{baselines::gmp, layer_sq_err, CompressResult};
+use crate::compress::{
+    baselines::gmp, layer_sq_err, layer_sq_err_shared, trace_db, CompressResult,
+};
 use crate::cost::{self, Level};
 use crate::db::{Entry, ModelDb};
 use crate::eval;
@@ -28,11 +38,12 @@ use crate::nn::models::{load_bundle, synthetic_bundle, task_of, ModelBundle};
 use crate::nn::{CompressibleModel, LayerInfo};
 use crate::solver::{self, Choice};
 use crate::stats;
+use crate::util::pool;
 use crate::util::single_flight::SingleFlight;
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Which layers participate in compression.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -64,6 +75,19 @@ impl LayerScope {
     }
 }
 
+/// Default byte budget of the per-engine database cache (overridable
+/// per engine via [`CompressionEngine::set_db_cache_capacity`] or
+/// process-wide via `OBC_DB_CACHE_BYTES`).
+pub const DEFAULT_DB_CACHE_BYTES: usize = 512 << 20;
+
+/// LRU bookkeeping of the database cache: key → (last-use tick, bytes).
+#[derive(Default)]
+struct DbLru {
+    tick: u64,
+    entries: BTreeMap<String, (u64, usize)>,
+    total_bytes: usize,
+}
+
 /// The shared per-model compression service state.
 pub struct CompressionEngine {
     bundle: ModelBundle,
@@ -72,10 +96,13 @@ pub struct CompressionEngine {
     /// Evaluation subset size (test split cap for cheap sweeps).
     eval_samples: AtomicUsize,
     /// Database memo: key → single-flight build (panic-safe; see
-    /// [`crate::util::single_flight`]).
+    /// [`crate::util::single_flight`]), bounded by [`DbLru`] eviction.
     db_cache: SingleFlight<Arc<ModelDb>>,
+    db_lru: Mutex<DbLru>,
+    db_cache_cap: AtomicUsize,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
+    cache_evictions: AtomicU64,
 }
 
 impl CompressionEngine {
@@ -85,14 +112,21 @@ impl CompressionEngine {
         calib: CalibOpts,
         eval_samples: usize,
     ) -> CompressionEngine {
+        let cap = std::env::var("OBC_DB_CACHE_BYTES")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_DB_CACHE_BYTES);
         CompressionEngine {
             bundle,
             hessians,
             calib,
             eval_samples: AtomicUsize::new(eval_samples),
             db_cache: SingleFlight::new(),
+            db_lru: Mutex::new(DbLru::default()),
+            db_cache_cap: AtomicUsize::new(cap.max(1)),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
+            cache_evictions: AtomicU64::new(0),
         }
     }
 
@@ -156,12 +190,24 @@ impl CompressionEngine {
         self.eval_samples.store(n, Ordering::Relaxed);
     }
 
-    /// (hits, misses) of the interior database cache.
-    pub fn cache_stats(&self) -> (u64, u64) {
+    /// (hits, misses, evictions) of the interior database cache.
+    pub fn cache_stats(&self) -> (u64, u64, u64) {
         (
             self.cache_hits.load(Ordering::Relaxed),
             self.cache_misses.load(Ordering::Relaxed),
+            self.cache_evictions.load(Ordering::Relaxed),
         )
+    }
+
+    /// Bytes currently charged against the database cache budget.
+    pub fn db_cache_bytes(&self) -> usize {
+        self.db_lru.lock().unwrap().total_bytes
+    }
+
+    /// Set the database cache byte budget. Takes effect on the next
+    /// cache access (an over-budget cache is trimmed then, not eagerly).
+    pub fn set_db_cache_capacity(&self, bytes: usize) {
+        self.db_cache_cap.store(bytes.max(1), Ordering::Relaxed);
     }
 
     /// Layer Hessian lookup as a typed error (a mistyped layer name in a
@@ -309,6 +355,13 @@ impl CompressionEngine {
     /// until the build finishes, later callers hit the cache. Returns
     /// `(db, was_cached)`. Build failures (and panics) retract the key
     /// so later callers retry.
+    ///
+    /// The cache is **bounded**: every access charges the database's
+    /// byte size against the engine's budget
+    /// ([`set_db_cache_capacity`](Self::set_db_cache_capacity)) and
+    /// evicts least-recently-used entries until it fits — the returned
+    /// database itself is never the victim, so one over-budget database
+    /// still serves (and is dropped on the next foreign access).
     pub fn db_cached(
         &self,
         key: &str,
@@ -320,7 +373,50 @@ impl CompressionEngine {
         } else {
             self.cache_misses.fetch_add(1, Ordering::Relaxed);
         }
+        self.lru_touch_and_evict(key, &db, shared);
         Ok((db, shared))
+    }
+
+    /// Bump `key`'s recency (registering it when this access *built* the
+    /// database), then evict LRU entries while the cache exceeds its
+    /// byte budget. `key` itself is exempt from this round's eviction.
+    ///
+    /// A cache **hit** never registers: if a concurrent eviction removed
+    /// the key between `get_or_build` and this call, re-inserting it
+    /// would charge bytes for a database no longer resident in the
+    /// single-flight map (phantom accounting that evicts real entries).
+    /// The hitting caller still holds its `Arc`, and the next access
+    /// simply rebuilds and re-registers.
+    fn lru_touch_and_evict(&self, key: &str, db: &ModelDb, was_hit: bool) {
+        let cap = self.db_cache_cap.load(Ordering::Relaxed);
+        let mut lru = self.db_lru.lock().unwrap();
+        lru.tick += 1;
+        let tick = lru.tick;
+        match lru.entries.get_mut(key) {
+            Some(e) => e.0 = tick,
+            None if !was_hit => {
+                let bytes = db.bytes();
+                lru.entries.insert(key.to_string(), (tick, bytes));
+                lru.total_bytes += bytes;
+            }
+            None => {} // hit raced an eviction: key is no longer resident
+        }
+        while lru.total_bytes > cap {
+            let victim = lru
+                .entries
+                .iter()
+                .filter(|(k, _)| k.as_str() != key)
+                .min_by_key(|(_, &(t, _))| t)
+                .map(|(k, _)| String::from(k.as_str()));
+            let Some(victim) = victim else {
+                break; // only the just-served key remains: keep serving it
+            };
+            if let Some((_, bytes)) = lru.entries.remove(&victim) {
+                lru.total_bytes -= bytes;
+            }
+            self.db_cache.remove_ready(&victim);
+            self.cache_evictions.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Stable cache key for a database request. Grid values use the
@@ -334,11 +430,129 @@ impl CompressionEngine {
         key
     }
 
+    /// Fan independent per-layer database work items across scoped
+    /// worker threads (one coarse tier above the row-level
+    /// `util::pool`). Each item may itself fan row jobs onto the shared
+    /// pool — since `par_map` completion is a per-call latch, a small
+    /// layer returns as soon as *its* rows are done instead of
+    /// serializing the whole build behind the largest layer. Results are
+    /// stitched in layer order, so the database is identical for any
+    /// worker count; the first per-layer error (in layer order) wins.
+    fn par_layer_entries(
+        &self,
+        layers: &[LayerInfo],
+        build: impl Fn(&LayerInfo) -> crate::util::error::Result<Vec<Entry>> + Sync,
+    ) -> crate::util::error::Result<Vec<Entry>> {
+        type LayerSlot = Option<crate::util::error::Result<Vec<Entry>>>;
+        let n = layers.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let workers = pool::configured_threads().min(n).max(1);
+        let slots: Mutex<Vec<LayerSlot>> = Mutex::new((0..n).map(|_| None).collect());
+        if workers == 1 {
+            let mut s = slots.lock().unwrap();
+            for (i, l) in layers.iter().enumerate() {
+                s[i] = Some(build(l));
+            }
+        } else {
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|sc| {
+                for _ in 0..workers {
+                    sc.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let r = build(&layers[i]);
+                        slots.lock().unwrap()[i] = Some(r);
+                    });
+                }
+            });
+        }
+        let mut out = Vec::new();
+        for slot in slots.into_inner().unwrap() {
+            out.extend(slot.expect("every layer item ran")?);
+        }
+        Ok(out)
+    }
+
     /// Unstructured-sparsity database over the Eq. 10 grid.
     ///
-    /// For ExactOBS the per-layer traces are computed ONCE and
-    /// reconstructed per level; baselines recompute per level.
+    /// For ExactOBS this is the **incremental trace-prefix path**: per
+    /// layer, ONE set of row traces, ONE multi-target heap selection
+    /// ([`exact_obs::global_select_multi`]) and ONE factor-extending
+    /// reconstruction pass ([`trace_db::unstructured_levels_on`])
+    /// produce every level — bit-identical to
+    /// [`reference_build_sparsity_db`](Self::reference_build_sparsity_db)
+    /// (asserted by `rust/tests/db_incremental.rs`, timed by
+    /// `benches/db_build.rs`) at ~1/levels of its selection +
+    /// reconstruction cost. Baselines recompute per level; all layer
+    /// items fan across the coarse worker tier.
     pub fn build_sparsity_db(
+        &self,
+        method: PruneMethod,
+        grid: &[f64],
+        scope: LayerScope,
+    ) -> crate::util::error::Result<ModelDb> {
+        let layers = self.layers(scope);
+        let entries = self.par_layer_entries(&layers, |l| {
+            let w = self.model().get_weight(&l.name);
+            let h = self.hessian(&l.name)?;
+            let mut out = Vec::with_capacity(grid.len());
+            match method {
+                PruneMethod::ExactObs => {
+                    let max_s = grid.iter().cloned().fold(0.0, f64::max);
+                    let opts = ObsOpts { trace_cap: (max_s + 0.05).min(1.0) };
+                    let traces = exact_obs::sweep_all_rows(&w, &h, &opts);
+                    let k_totals: Vec<usize> = grid
+                        .iter()
+                        .map(|&s| ((w.rows * w.cols) as f64 * s).round() as usize)
+                        .collect();
+                    let counts = exact_obs::global_select_multi(&traces, &k_totals);
+                    let levels = trace_db::unstructured_levels_on(
+                        pool::global(),
+                        &w,
+                        &h,
+                        &traces,
+                        &counts,
+                    );
+                    for (&s, res) in grid.iter().zip(&levels) {
+                        out.push(Entry::from_mat(
+                            &l.name,
+                            Level { sparsity: s, ..Level::dense() },
+                            &res.w,
+                            res.sq_err,
+                        ));
+                    }
+                }
+                _ => {
+                    for &s in grid {
+                        let res = method.prune(&w, &h, s);
+                        out.push(Entry::from_mat(
+                            &l.name,
+                            Level { sparsity: s, ..Level::dense() },
+                            &res.w,
+                            res.sq_err,
+                        ));
+                    }
+                }
+            }
+            Ok(out)
+        })?;
+        let mut db = ModelDb::new(self.model().name());
+        for e in entries {
+            db.insert(e);
+        }
+        Ok(db)
+    }
+
+    /// The historical per-level sparsity-database path: serial layer
+    /// loop, heap selection rebuilt and a full group-OBS solve run for
+    /// EVERY grid level. Kept compiled as the bit-identity oracle and
+    /// the before/after baseline of `benches/db_build.rs` — production
+    /// goes through [`build_sparsity_db`](Self::build_sparsity_db).
+    pub fn reference_build_sparsity_db(
         &self,
         method: PruneMethod,
         grid: &[f64],
@@ -387,9 +601,9 @@ impl CompressionEngine {
     /// ‖Ŵ·(X − q(X))‖² measured on a captured input sample, so the
     /// solver sees the true cost of 4-bit activations.
     pub fn build_mixed_gpu_db(&self, scope: LayerScope) -> crate::util::error::Result<ModelDb> {
-        let mut db = ModelDb::new(self.model().name());
         let xs = self.capture_small_inputs(scope, 64);
-        for l in self.layers(scope) {
+        let layers = self.layers(scope);
+        let entries = self.par_layer_entries(&layers, |l| {
             let w = self.model().get_weight(&l.name);
             let h = self.hessian(&l.name)?;
             let variants: Vec<(bool, Mat)> = vec![
@@ -402,6 +616,7 @@ impl CompressionEngine {
                     }
                 }),
             ];
+            let mut out = Vec::with_capacity(4);
             for (is_24, base) in variants {
                 for bits in [8u32, 4] {
                     let o = ObqOpts::symmetric(bits); // symmetric per-channel (HW support)
@@ -415,7 +630,7 @@ impl CompressionEngine {
                     // plus the activation-quantization penalty.
                     let w_err = layer_sq_err(&w, &res.w, &h.h);
                     let act_pen = act_quant_penalty(&res.w, &xs[&l.name], bits);
-                    db.insert(Entry::from_mat(
+                    out.push(Entry::from_mat(
                         &l.name,
                         Level { sparsity: 0.0, w_bits: bits, a_bits: bits, is_24 },
                         &res.w,
@@ -423,6 +638,11 @@ impl CompressionEngine {
                     ));
                 }
             }
+            Ok(out)
+        })?;
+        let mut db = ModelDb::new(self.model().name());
+        for e in entries {
+            db.insert(e);
         }
         Ok(db)
     }
@@ -442,9 +662,69 @@ impl CompressionEngine {
     }
 
     /// CPU database (Fig. 2d): 4-block sparsity grid × int8 quantization.
-    /// Block-pruning traces are computed once per layer and reused across
-    /// all grid levels (same trick as the unstructured DB).
+    ///
+    /// Incremental path: block traces computed once per layer, ONE
+    /// multi-target selection and ONE factor-extending reconstruction
+    /// pass produce the pruned matrix of every grid level with the row
+    /// work fanned over `util::pool` (the historical path additionally
+    /// ran the serial reference `group_obs_reconstruct` per row on the
+    /// calling thread — see
+    /// [`reference_build_cpu_db`](Self::reference_build_cpu_db)). The
+    /// per-level int8 OBQ pass is inherently per level and stays so.
     pub fn build_cpu_db(
+        &self,
+        grid: &[f64],
+        scope: LayerScope,
+    ) -> crate::util::error::Result<ModelDb> {
+        const C: usize = 4;
+        let layers = self.layers(scope);
+        let entries = self.par_layer_entries(&layers, |l| {
+            let w = self.model().get_weight(&l.name);
+            let h = self.hessian(&l.name)?;
+            let max_s = grid.iter().cloned().fold(0.0, f64::max);
+            let traces = exact_obs::sweep_all_rows_block(&w, &h, C, (max_s + 0.05).min(1.0));
+            let kb_totals: Vec<usize> = grid
+                .iter()
+                .map(|&s| ((w.rows * w.cols) as f64 * s / C as f64).round() as usize)
+                .collect();
+            let counts = exact_obs::global_select_multi(&traces, &kb_totals);
+            // compute_err=false: the pruned-stage error is discarded here
+            // (levels are re-scored below, after quantization).
+            let pruned_levels =
+                trace_db::block_levels_on(pool::global(), &w, &h, &traces, C, &counts, false);
+            // Shared once across all levels' error folds (not per level).
+            let wa = Arc::new(w.clone());
+            let ha = Arc::new(h.h.clone());
+            let mut out = Vec::with_capacity(grid.len());
+            for (&s, pruned) in grid.iter().zip(&pruned_levels) {
+                let res = obq::quantize_sparse(&pruned.w, &h, &ObqOpts::symmetric(8));
+                // Total loss vs DENSE weights: pruning + quantization
+                // (res.sq_err alone is relative to the pruned weights and
+                // would make high sparsity look free to the solver).
+                let what = Arc::new(res.w);
+                let w_err = layer_sq_err_shared(pool::global(), &wa, &what, &ha);
+                out.push(Entry::from_mat(
+                    &l.name,
+                    Level { sparsity: s, w_bits: 8, a_bits: 8, is_24: false },
+                    &what,
+                    w_err,
+                ));
+            }
+            Ok(out)
+        })?;
+        let mut db = ModelDb::new(self.model().name());
+        for e in entries {
+            db.insert(e);
+        }
+        Ok(db)
+    }
+
+    /// The historical per-level CPU-database path (serial layer loop,
+    /// per-level heap selection, serial per-row reference
+    /// reconstruction on the calling thread). Kept compiled as the
+    /// bit-identity oracle and bench baseline — production goes through
+    /// [`build_cpu_db`](Self::build_cpu_db).
+    pub fn reference_build_cpu_db(
         &self,
         grid: &[f64],
         scope: LayerScope,
@@ -479,9 +759,6 @@ impl CompressionEngine {
                     CompressResult::new(w.clone(), 0.0)
                 };
                 let res = obq::quantize_sparse(&pruned.w, &h, &ObqOpts::symmetric(8));
-                // Total loss vs DENSE weights: pruning + quantization
-                // (res.sq_err alone is relative to the pruned weights and
-                // would make high sparsity look free to the solver).
                 let w_err = layer_sq_err(&w, &res.w, &h.h);
                 db.insert(Entry::from_mat(
                     &l.name,
@@ -502,11 +779,12 @@ impl CompressionEngine {
         scope: LayerScope,
     ) -> crate::util::error::Result<ModelDb> {
         use crate::compress::baselines::{adaprune, adaquant};
-        let mut db = ModelDb::new(self.model().name());
         let xs = self.capture_small_inputs(scope, 64);
-        for l in self.layers(scope) {
+        let layers = self.layers(scope);
+        let entries = self.par_layer_entries(&layers, |l| {
             let w = self.model().get_weight(&l.name);
             let h = self.hessian(&l.name)?;
+            let mut out = Vec::with_capacity(4);
             for is_24 in [false, true] {
                 let base = if is_24 && l.d_col % 4 == 0 {
                     adaprune::prune_nm(&w, &h, 2, 4).w
@@ -527,7 +805,7 @@ impl CompressionEngine {
                     }
                     let err = layer_sq_err(&w, &wq, &h.h)
                         + act_quant_penalty(&wq, &xs[&l.name], bits);
-                    db.insert(Entry::from_mat(
+                    out.push(Entry::from_mat(
                         &l.name,
                         Level { sparsity: 0.0, w_bits: bits, a_bits: bits, is_24 },
                         &wq,
@@ -535,6 +813,11 @@ impl CompressionEngine {
                     ));
                 }
             }
+            Ok(out)
+        })?;
+        let mut db = ModelDb::new(self.model().name());
+        for e in entries {
+            db.insert(e);
         }
         Ok(db)
     }
@@ -852,9 +1135,64 @@ mod tests {
         let lens: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         assert_eq!(builds.load(Ordering::SeqCst), 1, "exactly one build");
         assert!(lens.iter().all(|&l| l == lens[0]));
-        let (hits, misses) = e.cache_stats();
+        let (hits, misses, evictions) = e.cache_stats();
         assert_eq!(misses, 1);
         assert_eq!(hits, 3);
+        assert_eq!(evictions, 0, "default budget fits the tiny db");
+    }
+
+    /// LRU eviction: over-budget inserts evict the least-recently-used
+    /// key; a recent hit protects a key; evicted keys rebuild (miss).
+    #[test]
+    fn db_cache_lru_evicts_least_recent_by_bytes() {
+        let e = tiny_engine();
+        let gmp = |e: &CompressionEngine, s: f64| {
+            e.build_sparsity_db(PruneMethod::Gmp, &[s], LayerScope::All)
+        };
+        let (d1, _) = e.db_cached("k1", || gmp(&e, 0.25)).unwrap();
+        let (d2, _) = e.db_cached("k2", || gmp(&e, 0.5)).unwrap();
+        assert_eq!(e.db_cache_bytes(), d1.bytes() + d2.bytes());
+        // Room for exactly two of these (same shapes → same bytes).
+        e.set_db_cache_capacity(d1.bytes() + d2.bytes() + 1);
+        let (_, hit1) = e.db_cached("k1", || gmp(&e, 0.25)).unwrap();
+        assert!(hit1, "k1 still cached; recency bumped past k2");
+        let (_, hit3) = e.db_cached("k3", || gmp(&e, 0.75)).unwrap();
+        assert!(!hit3);
+        let (_, _, evictions) = e.cache_stats();
+        assert_eq!(evictions, 1, "k3 pushed out exactly one entry");
+        let (_, k1_cached) = e.db_cached("k1", || gmp(&e, 0.25)).unwrap();
+        assert!(k1_cached, "recently-used k1 survived");
+        let (_, k2_cached) = e.db_cached("k2", || gmp(&e, 0.5)).unwrap();
+        assert!(!k2_cached, "LRU k2 was evicted and rebuilds");
+    }
+
+    /// A single database larger than the whole budget still serves (it
+    /// is never its own victim) and is dropped on the next foreign
+    /// access.
+    #[test]
+    fn db_cache_oversize_entry_serves_then_yields() {
+        let e = tiny_engine();
+        e.set_db_cache_capacity(1);
+        let (_, c0) =
+            e.db_cached("big", || e.build_sparsity_db(PruneMethod::Gmp, &[0.5], LayerScope::All))
+                .unwrap();
+        assert!(!c0);
+        let (_, c1) =
+            e.db_cached("big", || e.build_sparsity_db(PruneMethod::Gmp, &[0.5], LayerScope::All))
+                .unwrap();
+        assert!(c1, "sole over-budget entry keeps serving");
+        let (_, _, ev0) = e.cache_stats();
+        assert_eq!(ev0, 0);
+        let (_, c2) =
+            e.db_cached("other", || e.build_sparsity_db(PruneMethod::Gmp, &[0.9], LayerScope::All))
+                .unwrap();
+        assert!(!c2);
+        let (_, _, ev1) = e.cache_stats();
+        assert!(ev1 >= 1, "foreign access evicts the over-budget entry");
+        let (_, c3) =
+            e.db_cached("big", || e.build_sparsity_db(PruneMethod::Gmp, &[0.5], LayerScope::All))
+                .unwrap();
+        assert!(!c3, "evicted key rebuilds");
     }
 
     #[test]

@@ -46,43 +46,112 @@ impl Entry {
     pub fn to_mat(&self) -> Mat {
         Mat::from_f32(self.rows, self.cols, &self.w)
     }
+
+    /// Approximate resident size of this entry (weights dominate) —
+    /// the unit of the engine's LRU database-cache accounting.
+    pub fn bytes(&self) -> usize {
+        std::mem::size_of::<Entry>() + self.layer.len() + self.w.len() * 4
+    }
 }
 
-/// The database: (layer, level-key) → entry.
+/// Renders `Level::key()` into a stack buffer so lookups can borrow the
+/// key as `&str` without a heap allocation. Identity is the *exact*
+/// legacy string (same `{:.3}` formatting, same rounding), so level
+/// dedup behaves bit-for-bit as the old flat string-keyed map did.
+struct StackKey {
+    buf: [u8; 48],
+    len: usize,
+}
+
+impl StackKey {
+    fn of(level: &Level) -> StackKey {
+        use std::fmt::Write;
+        let mut k = StackKey { buf: [0u8; 48], len: 0 };
+        write!(
+            k,
+            "s{:.3}_w{}a{}{}",
+            level.sparsity,
+            level.w_bits,
+            level.a_bits,
+            if level.is_24 { "_24" } else { "" }
+        )
+        .expect("level key fits the stack buffer");
+        k
+    }
+
+    fn as_str(&self) -> &str {
+        // Only ASCII from the fmt above.
+        std::str::from_utf8(&self.buf[..self.len]).expect("ascii key")
+    }
+}
+
+impl std::fmt::Write for StackKey {
+    fn write_str(&mut self, s: &str) -> std::fmt::Result {
+        let end = self.len + s.len();
+        if end > self.buf.len() {
+            return Err(std::fmt::Error);
+        }
+        self.buf[self.len..end].copy_from_slice(s.as_bytes());
+        self.len = end;
+        Ok(())
+    }
+}
+
+/// The database: layer → (level-key → entry).
+///
+/// The nesting is the lookup hot path: `get` is two map probes with
+/// **zero allocation** (the old flat `(String, String)` key forced a
+/// fresh `String` pair per probe; the level key is now rendered into a
+/// [`StackKey`] and borrowed), and `levels_for` walks one layer's
+/// subtree instead of string-comparing every entry in the database.
 #[derive(Default)]
 pub struct ModelDb {
     pub model: String,
-    entries: BTreeMap<(String, String), Entry>,
+    layers: BTreeMap<String, BTreeMap<String, Entry>>,
 }
 
 impl ModelDb {
     pub fn new(model: &str) -> ModelDb {
-        ModelDb { model: model.to_string(), entries: BTreeMap::new() }
+        ModelDb { model: model.to_string(), layers: BTreeMap::new() }
     }
 
     pub fn insert(&mut self, e: Entry) {
-        self.entries.insert((e.layer.clone(), e.level.key()), e);
+        self.layers
+            .entry(e.layer.clone())
+            .or_default()
+            .insert(e.level.key(), e);
     }
 
     pub fn get(&self, layer: &str, level: &Level) -> Option<&Entry> {
-        self.entries.get(&(layer.to_string(), level.key()))
+        self.layers.get(layer)?.get(StackKey::of(level).as_str())
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.layers.values().map(|m| m.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.layers.values().all(|m| m.is_empty())
     }
 
-    /// Levels available for a layer, with losses (solver input).
+    /// Approximate resident size (entry weights dominate) — what the
+    /// engine's LRU cache charges a cached database against its budget.
+    pub fn bytes(&self) -> usize {
+        self.model.len()
+            + self
+                .layers
+                .iter()
+                .map(|(l, m)| l.len() + m.values().map(Entry::bytes).sum::<usize>())
+                .sum::<usize>()
+    }
+
+    /// Levels available for a layer, with losses (solver input). One
+    /// subtree walk; no per-entry string compares.
     pub fn levels_for(&self, layer: &str) -> Vec<(&Level, f64)> {
-        self.entries
-            .iter()
-            .filter(|((l, _), _)| l == layer)
-            .map(|(_, e)| (&e.level, e.sq_err))
-            .collect()
+        self.layers
+            .get(layer)
+            .map(|m| m.values().map(|e| (&e.level, e.sq_err)).collect())
+            .unwrap_or_default()
     }
 
     /// Stitch a model: write each layer's chosen level into a clone of
@@ -106,20 +175,21 @@ impl ModelDb {
     /// Summary (losses only — weights stay in memory) as JSON, for the
     /// experiment logs.
     pub fn summary_json(&self) -> Json {
-        let mut layers: BTreeMap<String, Vec<Json>> = BTreeMap::new();
-        for ((layer, key), e) in &self.entries {
-            let mut o = Json::obj();
-            o.set("level", key.as_str()).set("sq_err", e.sq_err).set(
-                "sparsity",
-                e.level.sparsity,
-            );
-            layers.entry(layer.clone()).or_default().push(o);
-        }
         let mut root = Json::obj();
         root.set("model", self.model.as_str());
         let mut obj = Json::obj();
-        for (l, v) in layers {
-            obj.set(&l, Json::Arr(v));
+        for (layer, levels) in &self.layers {
+            let v: Vec<Json> = levels
+                .values()
+                .map(|e| {
+                    let mut o = Json::obj();
+                    o.set("level", e.level.key().as_str())
+                        .set("sq_err", e.sq_err)
+                        .set("sparsity", e.level.sparsity);
+                    o
+                })
+                .collect();
+            obj.set(layer, Json::Arr(v));
         }
         root.set("layers", obj);
         root
@@ -160,6 +230,56 @@ mod tests {
         assert!(stitched.get_weight(name).data.iter().all(|&v| v == 0.0));
         // Dense model untouched.
         assert!(dense.get_weight(name).data.iter().any(|&v| v != 0.0));
+    }
+
+    /// The nested map must collapse level spellings at the same
+    /// granularity as the legacy string key ("s{:.3}...") — same-key
+    /// inserts overwrite, distinct grid levels stay distinct.
+    #[test]
+    fn level_key_granularity_matches_legacy_string_key() {
+        let mut db = ModelDb::new("m");
+        db.insert(Entry::from_mat("a", level(0.5), &Mat::zeros(1, 1), 1.0));
+        // Same millisparsity → same key → overwrite, like "s0.500".
+        db.insert(Entry::from_mat("a", level(0.5000004), &Mat::zeros(1, 1), 2.0));
+        assert_eq!(db.len(), 1);
+        assert_eq!(db.get("a", &level(0.5)).unwrap().sq_err, 2.0);
+        // Adjacent Eq. 10 grid levels resolve to distinct keys.
+        let grid = crate::solver::sparsity_grid(0.1, 0.95);
+        let mut db2 = ModelDb::new("m");
+        for &s in &grid {
+            db2.insert(Entry::from_mat("a", level(s), &Mat::zeros(1, 1), s));
+        }
+        assert_eq!(db2.len(), grid.len());
+        for &s in &grid {
+            assert_eq!(db2.get("a", &level(s)).unwrap().sq_err, s);
+        }
+    }
+
+    #[test]
+    fn levels_for_scoped_to_one_layer() {
+        let mut db = ModelDb::new("m");
+        db.insert(Entry::from_mat("a", level(0.5), &Mat::zeros(2, 2), 1.0));
+        db.insert(Entry::from_mat("ab", level(0.5), &Mat::zeros(2, 2), 2.0));
+        db.insert(Entry::from_mat("b", level(0.5), &Mat::zeros(2, 2), 3.0));
+        let ls = db.levels_for("a");
+        assert_eq!(ls.len(), 1);
+        assert_eq!(ls[0].1, 1.0);
+        assert!(db.levels_for("nope").is_empty());
+    }
+
+    #[test]
+    fn bytes_tracks_entry_payload() {
+        let mut db = ModelDb::new("m");
+        assert_eq!(db.bytes(), 1);
+        db.insert(Entry::from_mat("a", level(0.5), &Mat::zeros(8, 8), 1.0));
+        let one = db.bytes();
+        assert!(one >= 8 * 8 * 4, "weights accounted: {one}");
+        db.insert(Entry::from_mat("b", level(0.5), &Mat::zeros(8, 8), 1.0));
+        assert!(db.bytes() > one, "second entry adds bytes");
+        // Overwriting the same (layer, level) must not double-count.
+        let two = db.bytes();
+        db.insert(Entry::from_mat("b", level(0.5), &Mat::zeros(8, 8), 2.0));
+        assert_eq!(db.bytes(), two);
     }
 
     #[test]

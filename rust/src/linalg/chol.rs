@@ -75,6 +75,96 @@ pub fn cholesky_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
     x
 }
 
+/// Extend a lower-triangular Cholesky factor **in place** from `k0`
+/// factored rows to `k1`, inside a row-major buffer of row stride
+/// `stride` (≥ `k1`). `a(i, j)` supplies the source-matrix entries on
+/// demand (only the lower triangle `j ≤ i` of the new rows is read).
+/// Returns `false` when a new pivot is not (numerically) positive.
+///
+/// This is the primitive behind the incremental trace-prefix database
+/// builder: the pruned sets of one row trace are **nested prefixes**, so
+/// the factor of `(H⁻¹)_P` at level ℓ is the leading `k_ℓ×k_ℓ` block of
+/// the factor at every deeper level. Appending rows performs the *exact*
+/// arithmetic — same values, same reduction order — that a from-scratch
+/// factorization of the larger prefix would (row `i` of L only ever
+/// reads rows `< i`), so `cholesky_append(0→k0)` then `(k0→k1)` is
+/// bit-identical to one `cholesky_append(0→k1)`, which is itself
+/// bit-identical to [`cholesky`] / the arena `chol_in_place` on the
+/// gathered prefix (asserted by tests). Cost of producing all nested
+/// levels collapses from Σ_ℓ k_ℓ³/3 to k_max³/3.
+pub fn cholesky_append(
+    l: &mut [f64],
+    stride: usize,
+    k0: usize,
+    k1: usize,
+    a: impl Fn(usize, usize) -> f64,
+) -> bool {
+    debug_assert!(k0 <= k1 && stride >= k1);
+    debug_assert!(l.len() >= k1.saturating_sub(1) * stride + k1);
+    for i in k0..k1 {
+        for j in 0..i {
+            let mut acc = a(i, j);
+            for t in 0..j {
+                acc -= l[i * stride + t] * l[j * stride + t];
+            }
+            l[i * stride + j] = acc / l[j * stride + j];
+        }
+        let mut acc = a(i, i);
+        for t in 0..i {
+            acc -= l[i * stride + t] * l[i * stride + t];
+        }
+        if !(acc > 0.0) {
+            return false;
+        }
+        l[i * stride + i] = acc.sqrt();
+    }
+    true
+}
+
+/// Forward substitution `L·z = b` restricted to rows `k0..k1`, in place
+/// on `b`, against a strided factor (the layout written by
+/// [`cholesky_append`]). Like the factor itself, the forward solution is
+/// **prefix-stable**: `z[i]` reads only `z[< i]`, so extending an
+/// already-solved prefix performs the identical arithmetic a full
+/// forward pass would — the incremental database builder carries `z`
+/// across nested levels and only ever pays for the new rows.
+pub fn cholesky_forward_strided(l: &[f64], stride: usize, k0: usize, k1: usize, b: &mut [f64]) {
+    debug_assert!(k0 <= k1 && b.len() >= k1 && stride >= k1);
+    for i in k0..k1 {
+        let mut acc = b[i];
+        for k in 0..i {
+            acc -= l[i * stride + k] * b[k];
+        }
+        b[i] = acc / l[i * stride + i];
+    }
+}
+
+/// Backward substitution `Lᵀ·x = z` in place on `b` (which holds `z`),
+/// against `n` rows of a strided factor — the rank-update sweep over row
+/// prefixes of [`cholesky_solve`]'s second pass. NOT prefix-stable
+/// (row `i` updates every `x[< i]`): the incremental builder re-runs
+/// only this Θ(n²) half per level.
+pub fn cholesky_backward_strided(l: &[f64], stride: usize, n: usize, b: &mut [f64]) {
+    debug_assert!(b.len() >= n && stride >= n);
+    for i in (0..n).rev() {
+        let xi = b[i] / l[i * stride + i];
+        b[i] = xi;
+        for k in 0..i {
+            b[k] -= l[i * stride + k] * xi;
+        }
+    }
+}
+
+/// SPD solve `A·x = b` in place on `b`, given `n` factored rows of L in
+/// a row-major buffer of row stride `stride` (the layout written by
+/// [`cholesky_append`]). Arithmetic mirrors [`cholesky_solve`] exactly —
+/// identical values in identical order, the stride only changes where
+/// they live — so results are bit-identical for the same factor.
+pub fn cholesky_solve_strided(l: &[f64], stride: usize, n: usize, b: &mut [f64]) {
+    cholesky_forward_strided(l, stride, 0, n, b);
+    cholesky_backward_strided(l, stride, n, b);
+}
+
 /// Full SPD inverse via Cholesky (A⁻¹ = L⁻ᵀ·L⁻¹).
 pub fn cholesky_inverse(a: &Mat) -> crate::util::error::Result<Mat> {
     let l = cholesky(a)?;
@@ -170,6 +260,108 @@ mod tests {
         let rec = l.matmul(&l.transpose());
         let scale = h.h.diag_mean().max(1.0);
         assert!(rec.dist(&h.h) < 1e-9 * scale, "dist {}", rec.dist(&h.h));
+    }
+
+    /// The append primitive must be bit-identical to the full factor:
+    /// growing 0→k0→k1 in chunks equals one 0→k1 pass equals the
+    /// Mat-based [`cholesky`] of the leading k1×k1 block, entry by
+    /// entry — and every leading prefix of the grown factor IS the
+    /// factor of that prefix.
+    #[test]
+    fn append_matches_full_factor_bitwise() {
+        let n = 13;
+        let a = spd(n, 7);
+        let stride = n + 3; // deliberately over-wide buffer
+        for split in [0usize, 1, 5, 12, 13] {
+            let mut l = vec![f64::NAN; stride * n]; // dirty buffer
+            assert!(cholesky_append(&mut l, stride, 0, split, |i, j| a.at(i, j)));
+            assert!(cholesky_append(&mut l, stride, split, n, |i, j| a.at(i, j)));
+            let full = cholesky(&a).unwrap();
+            for i in 0..n {
+                for j in 0..=i {
+                    assert_eq!(
+                        l[i * stride + j].to_bits(),
+                        full.at(i, j).to_bits(),
+                        "split {split}: L[{i}][{j}]"
+                    );
+                }
+            }
+        }
+        // Prefix property: rows 0..k of the grown factor are the factor
+        // of the leading k×k block.
+        let mut l = vec![0.0; stride * n];
+        assert!(cholesky_append(&mut l, stride, 0, n, |i, j| a.at(i, j)));
+        let k = 6;
+        let idx: Vec<usize> = (0..k).collect();
+        let prefix = cholesky(&a.submatrix(&idx, &idx)).unwrap();
+        for i in 0..k {
+            for j in 0..=i {
+                assert_eq!(l[i * stride + j].to_bits(), prefix.at(i, j).to_bits());
+            }
+        }
+    }
+
+    /// The strided solve must be bit-identical to [`cholesky_solve`] on
+    /// the same factor, and appending rows must not perturb solves
+    /// against the shorter prefix.
+    #[test]
+    fn strided_solve_matches_mat_solve_bitwise() {
+        let n = 11;
+        let a = spd(n, 8);
+        let stride = n + 2;
+        let mut l = vec![0.0; stride * n];
+        assert!(cholesky_append(&mut l, stride, 0, n, |i, j| a.at(i, j)));
+        let lm = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..n).map(|i| (i as f64) * 0.7 - 2.0).collect();
+        let mut x = b.clone();
+        cholesky_solve_strided(&l, stride, n, &mut x);
+        let want = cholesky_solve(&lm, &b);
+        assert_eq!(x, want);
+        // Solve against the k=5 prefix: identical to factoring the 5×5
+        // block from scratch and solving there.
+        let k = 5;
+        let idx: Vec<usize> = (0..k).collect();
+        let lp = cholesky(&a.submatrix(&idx, &idx)).unwrap();
+        let mut xp = b[..k].to_vec();
+        cholesky_solve_strided(&l, stride, k, &mut xp);
+        assert_eq!(xp, cholesky_solve(&lp, &b[..k]));
+    }
+
+    /// The forward solution is prefix-stable: extending rows k0→k1 on a
+    /// carried z equals a full forward pass, bitwise; forward+backward
+    /// composed equals the one-shot strided solve.
+    #[test]
+    fn forward_extension_is_prefix_stable_bitwise() {
+        let n = 10;
+        let a = spd(n, 9);
+        let stride = n + 1;
+        let mut l = vec![0.0; stride * n];
+        assert!(cholesky_append(&mut l, stride, 0, n, |i, j| a.at(i, j)));
+        let b: Vec<f64> = (0..n).map(|i| (i as f64) * 1.3 - 4.0).collect();
+        // Extended in three chunks...
+        let mut z = b.clone();
+        cholesky_forward_strided(&l, stride, 0, 4, &mut z);
+        cholesky_forward_strided(&l, stride, 4, 7, &mut z);
+        cholesky_forward_strided(&l, stride, 7, n, &mut z);
+        // ...equals one pass...
+        let mut z1 = b.clone();
+        cholesky_forward_strided(&l, stride, 0, n, &mut z1);
+        assert_eq!(z, z1);
+        // ...and backward on the carried z equals the one-shot solve.
+        let mut x = z;
+        cholesky_backward_strided(&l, stride, n, &mut x);
+        let mut x1 = b.clone();
+        cholesky_solve_strided(&l, stride, n, &mut x1);
+        assert_eq!(x, x1);
+    }
+
+    #[test]
+    fn append_rejects_indefinite_pivot() {
+        let mut a = Mat::eye(3);
+        *a.at_mut(2, 2) = -1.0;
+        let mut l = vec![0.0; 9];
+        assert!(cholesky_append(&mut l, 3, 0, 2, |i, j| a.at(i, j)));
+        assert!(!cholesky_append(&mut l, 3, 2, 3, |i, j| a.at(i, j)));
     }
 
     /// cholesky_solve must agree with the independent Gauss–Jordan

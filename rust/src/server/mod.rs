@@ -212,12 +212,14 @@ impl CompressionServer {
     /// Counter snapshot (`{"op":"metrics"}`).
     pub fn metrics_json(&self) -> Json {
         let mut o = self.inner.metrics.to_json();
-        let (hits, misses) = self.inner.registry.db_cache_stats();
+        let (hits, misses, evictions) = self.inner.registry.db_cache_stats();
         o.set("ok", true)
             .set("op", "metrics")
             .set("calibrations", self.inner.registry.calibrations() as f64)
             .set("db_cache_hits", hits as f64)
             .set("db_cache_misses", misses as f64)
+            .set("db_cache_evictions", evictions as f64)
+            .set("db_cache_bytes", self.inner.registry.db_cache_bytes() as f64)
             .set("queue_depth", self.queue_depth() as f64);
         o
     }

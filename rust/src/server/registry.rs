@@ -53,17 +53,24 @@ impl EngineRegistry {
         self.slots.ready().into_iter().map(|(name, _)| name).collect()
     }
 
-    /// Aggregate (hits, misses) of the database caches of every ready
-    /// engine.
-    pub fn db_cache_stats(&self) -> (u64, u64) {
+    /// Aggregate (hits, misses, evictions) of the database caches of
+    /// every ready engine.
+    pub fn db_cache_stats(&self) -> (u64, u64, u64) {
         let mut hits = 0;
         let mut misses = 0;
+        let mut evictions = 0;
         for (_, engine) in self.slots.ready() {
-            let (h, m) = engine.cache_stats();
+            let (h, m, e) = engine.cache_stats();
             hits += h;
             misses += m;
+            evictions += e;
         }
-        (hits, misses)
+        (hits, misses, evictions)
+    }
+
+    /// Total bytes resident in the database caches of every ready engine.
+    pub fn db_cache_bytes(&self) -> usize {
+        self.slots.ready().iter().map(|(_, e)| e.db_cache_bytes()).sum()
     }
 
     /// Resolve a model to its shared engine, calibrating at most once

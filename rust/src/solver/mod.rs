@@ -33,68 +33,17 @@ pub fn solve_dp(per_layer: &[Vec<Choice>], budget: f64, bins: usize) -> Option<V
     let to_bin = |c: f64| -> usize { (c * scale).ceil() as usize };
 
     const INF: f64 = f64::INFINITY;
-    let mut dp = vec![INF; bins + 1];
-    let mut parent: Vec<Vec<u32>> = Vec::with_capacity(n);
-    // Layer 0.
-    let mut choice0 = vec![u32::MAX; bins + 1];
-    for (ci, c) in per_layer[0].iter().enumerate() {
-        let b = to_bin(c.cost);
-        if b <= bins && c.loss < dp[b] {
-            dp[b] = c.loss;
-            choice0[b] = ci as u32;
-        }
-    }
-    parent.push(choice0);
-    // Prefix-min not applied: keep exact bin so backtrack recovers costs;
-    // transitions scan all previous bins via a running minimum instead.
-    for layer in per_layer.iter().skip(1) {
-        let mut ndp = vec![INF; bins + 1];
-        let mut nchoice = vec![u32::MAX; bins + 1];
-        // best dp over bins ≤ b, computed on the fly.
-        let mut best_prefix = vec![(INF, 0usize); bins + 1];
-        let mut run = (INF, 0usize);
-        for b in 0..=bins {
-            if dp[b] < run.0 {
-                run = (dp[b], b);
-            }
-            best_prefix[b] = run;
-        }
-        for (ci, c) in layer.iter().enumerate() {
-            let cb = to_bin(c.cost);
-            if cb > bins || !c.loss.is_finite() {
-                continue;
-            }
-            for b in cb..=bins {
-                let (prev, _) = best_prefix[b - cb];
-                if prev.is_finite() {
-                    let v = prev + c.loss;
-                    if v < ndp[b] {
-                        ndp[b] = v;
-                        nchoice[b] = ci as u32;
-                    }
-                }
-            }
-        }
-        dp = ndp;
-        parent.push(nchoice);
-    }
-    // Best final bin.
-    let (mut best_b, mut best_v) = (usize::MAX, INF);
-    for b in 0..=bins {
-        if dp[b] < best_v {
-            best_v = dp[b];
-            best_b = b;
-        }
-    }
-    if best_b == usize::MAX {
-        return None;
-    }
-    // Backtrack: recompute dp per layer (memory-light two-pass would be
-    // heavy; instead re-run forward storing full tables). For our sizes
-    // (≤ 64 layers × 10k bins) storing all tables is fine.
-    // -- re-run with stored tables --
+    // ONE forward pass, storing every layer's table and choice row as it
+    // goes (the backtrack reads them). The sizes are small (≤ 64 layers
+    // × 10k bins), so storing the tables costs less than the historical
+    // second forward pass that rebuilt them.
+    //
+    // Prefix-min is not applied to the stored tables: keep exact bins so
+    // backtrack recovers costs; transitions scan all previous bins via a
+    // running minimum instead.
     let mut tables: Vec<Vec<f64>> = Vec::with_capacity(n);
     let mut choices: Vec<Vec<u32>> = Vec::with_capacity(n);
+    // Layer 0.
     let mut cur = vec![INF; bins + 1];
     let mut cch = vec![u32::MAX; bins + 1];
     for (ci, c) in per_layer[0].iter().enumerate() {
@@ -104,10 +53,11 @@ pub fn solve_dp(per_layer: &[Vec<Choice>], budget: f64, bins: usize) -> Option<V
             cch[b] = ci as u32;
         }
     }
-    tables.push(cur.clone());
+    tables.push(cur);
     choices.push(cch);
     for layer in per_layer.iter().skip(1) {
-        let prev = tables.last().unwrap().clone();
+        let prev = tables.last().unwrap();
+        // best prev over bins ≤ b, computed on the fly.
         let mut best_prefix = vec![(INF, 0usize); bins + 1];
         let mut run = (INF, 0usize);
         for b in 0..=bins {
@@ -133,6 +83,18 @@ pub fn solve_dp(per_layer: &[Vec<Choice>], budget: f64, bins: usize) -> Option<V
         }
         tables.push(ndp);
         choices.push(nch);
+    }
+    // Best final bin.
+    let last = tables.last().unwrap();
+    let (mut best_b, mut best_v) = (usize::MAX, INF);
+    for b in 0..=bins {
+        if last[b] < best_v {
+            best_v = last[b];
+            best_b = b;
+        }
+    }
+    if best_b == usize::MAX {
+        return None;
     }
     let mut out = vec![0usize; n];
     let mut b = best_b;

@@ -116,23 +116,38 @@ impl ThreadPool {
 
     /// Parallel map over `0..n`: runs `f(i)` on the pool, collects results
     /// in index order. `f` must be cloneable across threads via Arc.
+    ///
+    /// Completion is tracked by a **per-call latch**, not the pool-wide
+    /// `pending` counter: a caller wakes as soon as *its own* n jobs are
+    /// done, even while other threads keep the pool busy. Without this,
+    /// the concurrent layer-tier fan-outs of the database builders would
+    /// all park until the *global* queue drained — every layer would
+    /// finish only when the whole build did.
     pub fn par_map<T, F>(&self, n: usize, f: F) -> Vec<T>
     where
         T: Send + 'static,
         F: Fn(usize) -> T + Send + Sync + 'static,
     {
+        if n == 0 {
+            return Vec::new();
+        }
         let f = Arc::new(f);
         let out: Arc<Mutex<Vec<Option<T>>>> =
             Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let latch = Arc::new(Latch::new(n));
         for i in 0..n {
             let f = Arc::clone(&f);
-            let out = Arc::clone(&out);
-            self.submit(move || {
-                let v = f(i);
-                out.lock().unwrap()[i] = Some(v);
-            });
+            // The guard counts the latch down even if f(i) panics (its
+            // drop runs during unwind): a lost result surfaces as the
+            // "missing result" panic below, never as a deadlocked
+            // caller. It releases its `out` clone BEFORE counting down,
+            // so once the caller wakes it holds the only remaining
+            // reference and try_unwrap cannot race a worker that is
+            // still tearing its job down.
+            let guard = JobGuard { latch: Arc::clone(&latch), out: Some(Arc::clone(&out)) };
+            self.submit(move || guard.store(i, f(i)));
         }
-        self.wait_idle();
+        latch.wait();
         Arc::try_unwrap(out)
             .unwrap_or_else(|_| panic!("par_map results still shared"))
             .into_inner()
@@ -157,6 +172,62 @@ impl ThreadPool {
             start = end;
         }
         self.wait_idle();
+    }
+}
+
+/// One-shot countdown latch: `wait` returns once `done` has been called
+/// `n` times. Backs the per-call completion tracking of [`ThreadPool::par_map`].
+struct Latch {
+    remaining: AtomicUsize,
+    mx: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { remaining: AtomicUsize::new(n), mx: Mutex::new(()), cv: Condvar::new() }
+    }
+
+    fn done(&self) {
+        if self.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _g = self.mx.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.mx.lock().unwrap();
+        while self.remaining.load(Ordering::SeqCst) != 0 {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Per-job completion guard: on drop (normal return OR panic unwind) it
+/// first releases its clone of the shared results vector, then counts
+/// the latch down. The ordering is load-bearing — the caller's
+/// `Arc::try_unwrap` runs as soon as the last count lands, so every
+/// foreign reference must already be gone by then.
+struct JobGuard<T> {
+    latch: Arc<Latch>,
+    out: Option<Arc<Mutex<Vec<Option<T>>>>>,
+}
+
+impl<T> JobGuard<T> {
+    /// Record job `i`'s result. Separated into a method so the job
+    /// closure captures the whole guard (drop still runs on panic).
+    fn store(&self, i: usize, v: T) {
+        if let Some(out) = self.out.as_ref() {
+            out.lock().unwrap()[i] = Some(v);
+        }
+    }
+}
+
+impl<T> Drop for JobGuard<T> {
+    fn drop(&mut self) {
+        // Release the results Arc BEFORE waking the caller.
+        drop(self.out.take());
+        self.latch.done();
     }
 }
 
@@ -253,6 +324,45 @@ mod tests {
         let b = pool.par_map(10, |i| i + 1);
         assert_eq!(a[9], 9);
         assert_eq!(b[9], 10);
+    }
+
+    /// Concurrent par_map calls on one pool must each return when THEIR
+    /// jobs are done — the per-call latch, not the global pending
+    /// counter. A caller whose jobs finish first must not be held
+    /// hostage by another caller's long tail.
+    #[test]
+    fn concurrent_par_maps_complete_independently() {
+        use std::time::Duration;
+        let pool = Arc::new(ThreadPool::new(4));
+        let slow = {
+            let pool = Arc::clone(&pool);
+            thread::spawn(move || {
+                pool.par_map(4, |i| {
+                    thread::sleep(Duration::from_millis(60));
+                    i
+                })
+            })
+        };
+        thread::sleep(Duration::from_millis(5)); // let the slow jobs start
+        let t0 = std::time::Instant::now();
+        let fast = pool.par_map(2, |i| i + 100);
+        let fast_elapsed = t0.elapsed();
+        assert_eq!(fast, vec![100, 101]);
+        assert_eq!(slow.join().unwrap(), vec![0, 1, 2, 3]);
+        // With 4 workers and 4 slow jobs the fast jobs queue behind one
+        // 60ms wave at worst; under the old global wait_idle they would
+        // also wait out the remaining slow jobs.
+        assert!(
+            fast_elapsed < Duration::from_millis(500),
+            "fast par_map waited on foreign jobs: {fast_elapsed:?}"
+        );
+    }
+
+    #[test]
+    fn par_map_zero_jobs_returns_immediately() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.par_map(0, |i| i);
+        assert!(out.is_empty());
     }
 
     /// A panicking job must neither deadlock wait_idle nor poison the

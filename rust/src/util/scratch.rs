@@ -46,10 +46,15 @@ pub struct Scratch {
     /// Per-step loss increases of the current trace.
     pub trace_dloss: Vec<f64>,
     /// Gather + in-place Cholesky workspace for group formulas (k×k).
+    /// The incremental database builder's `prefix_reconstruct_multi`
+    /// keeps the trace-order factor of `(H⁻¹)_P` here across nested
+    /// levels (stride k_max) and extends it via `cholesky_append`.
     pub(crate) ga: Vec<f64>,
     /// Right-hand-side / solution buffer for group formulas.
     pub(crate) gy: Vec<f64>,
-    /// Small per-block weight buffer for block sweeps.
+    /// Small per-block weight buffer for block sweeps; carries the
+    /// prefix-stable forward solution across levels in the incremental
+    /// database builder.
     pub(crate) gb: Vec<f64>,
     /// Best-candidate solution buffer for block sweeps.
     pub(crate) gz: Vec<f64>,

@@ -132,6 +132,25 @@ impl<T: Clone> SingleFlight<T> {
         }
     }
 
+    /// Remove `key` **iff** its build has completed (cache eviction).
+    /// A `Building` cell is left alone — evicting it would detach the
+    /// in-flight build from the waiters parked on it — and the next
+    /// `get_or_build` of a removed key rebuilds. Waiters already holding
+    /// the removed cell's `Arc` still receive its value. Returns whether
+    /// an entry was removed.
+    pub fn remove_ready(&self, key: &str) -> bool {
+        let mut cells = self.cells.lock().unwrap();
+        let ready = match cells.get(key) {
+            // Same cells→state lock nesting as `ready()`.
+            Some(c) => matches!(&*c.state.lock().unwrap(), State::Ready(_)),
+            None => false,
+        };
+        if ready {
+            cells.remove(key);
+        }
+        ready
+    }
+
     /// Snapshot of every ready (key, value) pair.
     pub fn ready(&self) -> Vec<(String, T)> {
         let cells = self.cells.lock().unwrap();
@@ -186,6 +205,20 @@ mod tests {
         // The key is retracted: the next caller rebuilds.
         let (v, shared) = sf.get_or_build("k", || Ok(7)).unwrap();
         assert_eq!(v, 7);
+        assert!(!shared);
+    }
+
+    /// Eviction removes ready cells only; the next caller rebuilds.
+    #[test]
+    fn remove_ready_evicts_and_next_caller_rebuilds() {
+        let sf = SingleFlight::<u32>::new();
+        assert!(!sf.remove_ready("k"), "nothing to evict yet");
+        let (v, _) = sf.get_or_build("k", || Ok(1)).unwrap();
+        assert_eq!(v, 1);
+        assert!(sf.remove_ready("k"));
+        assert!(sf.ready().is_empty());
+        let (v2, shared) = sf.get_or_build("k", || Ok(2)).unwrap();
+        assert_eq!(v2, 2, "evicted key rebuilds");
         assert!(!shared);
     }
 

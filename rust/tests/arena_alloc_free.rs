@@ -28,6 +28,8 @@ fn steady_state_sweeps_are_allocation_free() {
     sweep::quant_sweep(&mut s, w.row(0), &h.hinv, &grid, true).unwrap();
     sweep::block_sweep(&mut s, w.row(0), &h.hinv, 4, 3);
     sweep::group_reconstruct(&mut s, w.row(0), &h.hinv, &[1, 4, 9, 17]).unwrap();
+    sweep::prefix_reconstruct_multi(&mut s, w.row(0), &h.hinv, &[2, 7, 1, 12, 5], &[1, 3, 5], |_, _| {})
+        .unwrap();
 
     let start = alloc_counter::snapshot();
     for _ in 0..5 {
@@ -35,6 +37,19 @@ fn steady_state_sweeps_are_allocation_free() {
         sweep::quant_sweep(&mut s, w.row(1), &h.hinv, &grid, true).unwrap();
         sweep::block_sweep(&mut s, w.row(1), &h.hinv, 4, 3);
         sweep::group_reconstruct(&mut s, w.row(1), &h.hinv, &[0, 3, 11, 20]).unwrap();
+        // The multi-level prefix reconstructor: factor extension, carried
+        // forward solve and per-level output all live in the arena.
+        sweep::prefix_reconstruct_multi(
+            &mut s,
+            w.row(1),
+            &h.hinv,
+            &[2, 7, 1, 12, 5],
+            &[1, 3, 5],
+            |k, row| {
+                std::hint::black_box((k, row[0]));
+            },
+        )
+        .unwrap();
     }
     let delta = alloc_counter::since(start);
     assert_eq!(

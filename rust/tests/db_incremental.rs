@@ -1,0 +1,194 @@
+//! The incremental trace-prefix database builder's contract:
+//! **bit-identical** to the per-level reference path on every grid shape
+//! — unstructured and block grids, any pool size, dirty arena reuse
+//! across consecutive layers of different dimensions — at a fraction of
+//! the selection + reconstruction cost (timed by `benches/db_build.rs`).
+
+use obc::compress::exact_obs::{self, ObsOpts};
+use obc::compress::hessian::LayerHessian;
+use obc::compress::trace_db;
+use obc::coordinator::engine::{CompressionEngine, LayerScope};
+use obc::coordinator::methods::PruneMethod;
+use obc::linalg::Mat;
+use obc::util::pool::ThreadPool;
+use obc::util::proptest as pt;
+
+fn setup(d_row: usize, d_col: usize, seed: u64) -> (Mat, LayerHessian) {
+    let w = Mat::randn(d_row, d_col, seed);
+    let x = Mat::randn(d_col, d_col * 2 + 8, seed + 7000);
+    (w, LayerHessian::from_inputs(&x, 1e-8))
+}
+
+/// Randomized unstructured grids: the one-pass multi-level selection +
+/// factor-extension reconstruction must equal the per-level reference
+/// (independent `global_select` + `reconstruct_from_traces_on` per
+/// level) to the last ulp — weights, error, sparsity — on every level,
+/// for every pool size, with worker arenas left dirty by previous cases
+/// of other shapes.
+#[test]
+fn incremental_unstructured_levels_bit_identical_to_reference() {
+    let pools = [ThreadPool::new(1), ThreadPool::new(2), ThreadPool::new(4)];
+    pt::check(0xdb1c4e, 12, |g| {
+        let d_row = g.usize_in(1, 6);
+        let d = g.usize_in(8, 24);
+        let (w, h) = setup(d_row, d, g.rng.next_u64());
+        let pool = &pools[g.usize_in(0, pools.len() - 1)];
+        let cap = if g.bool() { 1.0 } else { 0.8 };
+        let traces = exact_obs::sweep_all_rows_on(pool, &w, &h, &ObsOpts { trace_cap: cap });
+        // Random grid: unsorted levels, duplicates, extremes included.
+        let total = d_row * d;
+        let n_levels = g.usize_in(1, 7);
+        let mut k_totals: Vec<usize> =
+            (0..n_levels).map(|_| g.usize_in(0, total)).collect();
+        if g.bool() {
+            k_totals.push(k_totals[0]); // duplicate level
+        }
+        let counts = exact_obs::global_select_multi(&traces, &k_totals);
+        for (l, &k) in k_totals.iter().enumerate() {
+            if counts[l] != exact_obs::global_select(&traces, k) {
+                return Err(format!("selection diverged at level {l} (k={k})"));
+            }
+        }
+        let levels = trace_db::unstructured_levels_on(pool, &w, &h, &traces, &counts);
+        for (l, res) in levels.iter().enumerate() {
+            let reference =
+                exact_obs::reconstruct_from_traces_on(pool, &w, &h, &traces, &counts[l]);
+            if res.w.data != reference.w.data {
+                return Err(format!(
+                    "weights diverged at level {l} (d_row={d_row}, d={d}, k={})",
+                    k_totals[l]
+                ));
+            }
+            if res.sq_err.to_bits() != reference.sq_err.to_bits()
+                || res.sparsity != reference.sparsity
+            {
+                return Err(format!("err/sparsity diverged at level {l}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Randomized block grids: block traces expand to weight prefixes; every
+/// level must match a per-level group-OBS reconstruction of exactly the
+/// expanded sets (the historical CPU-database inner loop).
+#[test]
+fn incremental_block_levels_bit_identical_to_reference() {
+    let pools = [ThreadPool::new(1), ThreadPool::new(3)];
+    pt::check(0xb10cdb, 10, |g| {
+        let d_row = g.usize_in(1, 5);
+        let c = if g.bool() { 2 } else { 4 };
+        let d = g.usize_in(2, 6) * c + if g.bool() { 1 } else { 0 }; // tail weights too
+        let (w, h) = setup(d_row, d, g.rng.next_u64());
+        let pool = &pools[g.usize_in(0, pools.len() - 1)];
+        let traces = exact_obs::sweep_all_rows_block_on(pool, &w, &h, c, 1.0);
+        let max_blocks: usize = traces.iter().map(|t| t.order.len()).sum();
+        let n_levels = g.usize_in(1, 5);
+        let kb_totals: Vec<usize> =
+            (0..n_levels).map(|_| g.usize_in(0, max_blocks)).collect();
+        let counts = exact_obs::global_select_multi(&traces, &kb_totals);
+        let levels = trace_db::block_levels_on(pool, &w, &h, &traces, c, &counts, true);
+        for (l, res) in levels.iter().enumerate() {
+            let mut out = w.clone();
+            for r in 0..d_row {
+                let kb = counts[l][r];
+                if kb == 0 {
+                    continue;
+                }
+                let mut pruned = Vec::with_capacity(kb * c);
+                for &b in &traces[r].order[..kb] {
+                    pruned.extend(b * c..((b + 1) * c).min(d));
+                }
+                let row = exact_obs::group_obs_reconstruct(w.row(r), &h.hinv, &pruned);
+                out.row_mut(r).copy_from_slice(&row);
+            }
+            if res.w.data != out.data {
+                return Err(format!(
+                    "block weights diverged at level {l} (c={c}, d={d}, kb={})",
+                    kb_totals[l]
+                ));
+            }
+            let err = obc::compress::layer_sq_err(&w, &out, &h.h);
+            if res.sq_err.to_bits() != err.to_bits() {
+                return Err(format!("block err diverged at level {l}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+fn assert_dbs_identical(
+    a: &obc::db::ModelDb,
+    b: &obc::db::ModelDb,
+    layers: &[String],
+    what: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{what}: entry counts");
+    let mut seen = 0usize;
+    for layer in layers {
+        let la = a.levels_for(layer);
+        assert!(!la.is_empty(), "{what}: no levels for {layer}");
+        for (level, sq_err) in la {
+            let ea = a.get(layer, level).expect("entry listed by levels_for");
+            assert_eq!(ea.sq_err, sq_err);
+            let eb = b
+                .get(layer, level)
+                .unwrap_or_else(|| panic!("{what}: missing ({layer}, {})", level.key()));
+            assert_eq!(ea.w, eb.w, "{what}: weights ({layer}, {})", level.key());
+            assert_eq!(
+                ea.sq_err.to_bits(),
+                eb.sq_err.to_bits(),
+                "{what}: sq_err ({layer}, {})",
+                level.key()
+            );
+            seen += 1;
+        }
+    }
+    assert_eq!(seen, a.len(), "{what}: every entry visited");
+}
+
+fn layer_names(e: &CompressionEngine, scope: LayerScope) -> Vec<String> {
+    e.layers(scope).into_iter().map(|l| l.name).collect()
+}
+
+/// Engine-level acceptance: the production sparsity-database builder
+/// (incremental, layer items fanned across the coarse tier) must be
+/// bit-identical to the kept per-level reference path — every layer,
+/// every Eq. 10 level, weights and losses.
+#[test]
+fn engine_sparsity_db_incremental_matches_reference() {
+    let e = CompressionEngine::synthetic(7).unwrap();
+    let grid = [0.0, 0.3, 0.5, 0.7, 0.9];
+    let inc = e
+        .build_sparsity_db(PruneMethod::ExactObs, &grid, LayerScope::All)
+        .unwrap();
+    let reference = e
+        .reference_build_sparsity_db(PruneMethod::ExactObs, &grid, LayerScope::All)
+        .unwrap();
+    assert!(!inc.is_empty());
+    assert_dbs_identical(&inc, &reference, &layer_names(&e, LayerScope::All), "sparsity db");
+}
+
+/// Same for the CPU database (block sparsity × int8): the incremental
+/// pooled path must equal the historical serial per-row reference loop.
+#[test]
+fn engine_cpu_db_incremental_matches_reference() {
+    let e = CompressionEngine::synthetic(9).unwrap();
+    let grid = [0.0, 0.4, 0.8];
+    let inc = e.build_cpu_db(&grid, LayerScope::All).unwrap();
+    let reference = e.reference_build_cpu_db(&grid, LayerScope::All).unwrap();
+    assert!(!inc.is_empty());
+    assert_dbs_identical(&inc, &reference, &layer_names(&e, LayerScope::All), "cpu db");
+}
+
+/// Baseline methods keep their per-level behavior through the new layer
+/// fan-out: entries identical to a serial reference build.
+#[test]
+fn engine_baseline_sparsity_db_unchanged_by_layer_fanout() {
+    let e = CompressionEngine::synthetic(11).unwrap();
+    let grid = [0.0, 0.5, 0.9];
+    let inc = e.build_sparsity_db(PruneMethod::Gmp, &grid, LayerScope::All).unwrap();
+    let reference =
+        e.reference_build_sparsity_db(PruneMethod::Gmp, &grid, LayerScope::All).unwrap();
+    assert_dbs_identical(&inc, &reference, &layer_names(&e, LayerScope::All), "gmp sparsity db");
+}
