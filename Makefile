@@ -2,7 +2,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test bench bench-json bench-smoke bench-serve bench-db serve-smoke fmt lint clean
+.PHONY: build test bench bench-json bench-smoke bench-serve bench-db serve-smoke store-smoke fmt lint clean
 
 build:
 	$(CARGO) build --release
@@ -56,6 +56,31 @@ serve-smoke:
 	  '{"op":"shutdown"}' \
 	| $(CARGO) run --release --example serve_compress -- --synthetic > target/serve_smoke.out
 	python3 scripts/check_serve_smoke.py target/serve_smoke.out
+
+# Durable-serving smoke: (1) a cold serve with a snapshot store builds
+# a database and writes it through; (2) `obc db export` hands the
+# snapshot off as a file (warm — no rebuild); (3) `obc db import`
+# validates it into a fresh store; (4) a "restarted" serve over the
+# imported store answers the same db job plus a solve WARM (store hit,
+# zero live builds) — checked line by line by check_store_smoke.py.
+store-smoke:
+	@mkdir -p target
+	rm -rf target/store_smoke
+	mkdir -p target/store_smoke
+	printf '%s\n' \
+	  '{"id":"b1","model":"synthetic","op":"db","kind":"sparsity","grid":[0,0.5,0.9]}' \
+	  '{"op":"shutdown"}' \
+	| $(CARGO) run --release --bin obc -- serve --synthetic --store target/store_smoke/built > target/store_smoke/cold.out
+	$(CARGO) run --release --bin obc -- db export --model synthetic --kind sparsity \
+	  --grid 0,0.5,0.9 --store target/store_smoke/built --out target/store_smoke/export.obcdb
+	$(CARGO) run --release --bin obc -- db import --file target/store_smoke/export.obcdb \
+	  --store target/store_smoke/imported
+	printf '%s\n' \
+	  '{"id":"b2","model":"synthetic","op":"db","kind":"sparsity","grid":[0,0.5,0.9]}' \
+	  '{"id":"s1","model":"synthetic","op":"solve","target":"flop","value":1.5,"grid":[0,0.5,0.9]}' \
+	  '{"op":"shutdown"}' \
+	| $(CARGO) run --release --bin obc -- serve --synthetic --store target/store_smoke/imported > target/store_smoke/warm.out
+	python3 scripts/check_store_smoke.py target/store_smoke/cold.out target/store_smoke/warm.out
 
 fmt:
 	$(CARGO) fmt --all --check

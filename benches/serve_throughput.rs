@@ -10,6 +10,13 @@
 //!
 //! Assertions (both modes): every job succeeds, calibration ran exactly
 //! once, and the shared database was built exactly once.
+//!
+//! A second phase measures **cold-start vs warm-start** serving against
+//! a snapshot store (`store_dir`): the same db-build job is timed on a
+//! fresh server with an empty store (live build + write-through) and
+//! again on a "restarted" server over the same directory (snapshot
+//! load, no build) — `db_build_cold_seconds` / `db_build_warm_seconds`
+//! in the report, with the store counters asserted both ways.
 
 use obc::coordinator::engine::LayerScope;
 use obc::coordinator::jobs::{DbKind, DbSpec, JobSpec, TargetKind};
@@ -64,6 +71,7 @@ fn main() {
         queue_cap: n_jobs.max(8),
         models_dir: PathBuf::from("/nonexistent"),
         synthetic_only: true,
+        store_dir: None,
     });
     let (tx, rx) = mpsc::channel();
     let t0 = Instant::now();
@@ -96,7 +104,53 @@ fn main() {
         get("db_cache_hits"),
     );
 
+    // ---- cold vs warm start against the snapshot store --------------
+    let store_dir =
+        std::env::temp_dir().join(format!("obc_serve_bench_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let db_spec = DbSpec {
+        kind: DbKind::Sparsity,
+        method: PruneMethod::ExactObs,
+        grid: vec![0.0, 0.5, 0.9],
+        scope: LayerScope::All,
+    };
+    // One db-build job against a fresh server over `store_dir`; returns
+    // (exec seconds, store_hits, db_builds) from the post-job metrics.
+    let store_phase = |label: &str| -> (f64, f64, f64) {
+        let server = CompressionServer::start(ServerConfig {
+            workers: 1,
+            queue_cap: 4,
+            models_dir: PathBuf::from("/nonexistent"),
+            synthetic_only: true,
+            store_dir: Some(store_dir.clone()),
+        });
+        let (tx, rx) = mpsc::channel();
+        server
+            .submit(SYNTHETIC_MODEL, JobSpec::BuildDb(db_spec.clone()), Some(label.to_string()), tx)
+            .expect("submit store-phase job");
+        let resp = rx.recv().expect("store-phase response");
+        let _ = resp.outcome.unwrap_or_else(|e| panic!("{label} db job failed: {e}"));
+        let m = server.metrics_json();
+        let g = |k: &str| m.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let out = (resp.exec_s, g("store_hits"), g("db_builds"));
+        server.shutdown();
+        out
+    };
+    let (cold_s, cold_hits, cold_builds) = store_phase("cold");
+    assert_eq!(cold_builds, 1.0, "cold start builds live");
+    assert_eq!(cold_hits, 0.0, "cold start has nothing to load");
+    let (warm_s, warm_hits, warm_builds) = store_phase("warm");
+    assert_eq!(warm_hits, 1.0, "warm start serves from the snapshot");
+    assert_eq!(warm_builds, 0.0, "warm start never rebuilds");
+    let _ = std::fs::remove_dir_all(&store_dir);
+    println!(
+        "serve_throughput: db build cold {cold_s:.3}s vs warm {warm_s:.3}s \
+         (snapshot store round trip)"
+    );
+
     let mut report = JsonReport::with_schema("obc-bench-serve/v1");
+    report.derived("db_build_cold_seconds", cold_s);
+    report.derived("db_build_warm_seconds", warm_s);
     report.derived("jobs_per_sec", jobs_per_sec);
     report.derived("jobs_total", n_jobs as f64);
     report.derived("elapsed_seconds", elapsed);

@@ -14,7 +14,9 @@
 //! Control:  {"op":"health"}   {"op":"metrics"}   {"op":"shutdown"}
 //!
 //! Flags: --synthetic (serve only the deterministic synthetic model; no
-//! artifacts needed), --workers N, --queue-cap N.
+//! artifacts needed), --workers N, --queue-cap N, --store DIR (durable
+//! trace databases: builds write through, restarts warm-start),
+//! --listen ADDR (serve the same protocol over TCP instead of stdin).
 //!
 //! Try: echo '{"model":"synthetic","op":"prune","method":"exactobs","sparsity":0.5}' \
 //!        | cargo run --release --example serve_compress -- --synthetic
@@ -34,23 +36,50 @@ fn req_count(v: Option<&String>, flag: &str) -> usize {
 fn main() -> obc::util::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut cfg = ServerConfig::default();
+    let mut listen: Option<String> = None;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         match a.as_str() {
             "--synthetic" => cfg.synthetic_only = true,
             "--workers" => cfg.workers = req_count(it.next(), "--workers"),
             "--queue-cap" => cfg.queue_cap = req_count(it.next(), "--queue-cap"),
+            "--store" => match it.next() {
+                Some(dir) => cfg.store_dir = Some(std::path::PathBuf::from(dir)),
+                None => {
+                    eprintln!("serve_compress: --store requires a directory");
+                    std::process::exit(2);
+                }
+            },
+            "--listen" => match it.next() {
+                Some(addr) => listen = Some(addr.clone()),
+                None => {
+                    eprintln!("serve_compress: --listen requires an address");
+                    std::process::exit(2);
+                }
+            },
             other => {
                 eprintln!("serve_compress: unknown flag '{other}'");
                 std::process::exit(2);
             }
         }
     }
-    eprintln!(
-        "serve_compress: ready ({} workers, queue {}; one JSON request per line; op=shutdown to exit)",
-        cfg.workers, cfg.queue_cap
-    );
-    run_line_protocol(cfg, std::io::stdin().lock(), std::io::stdout())?;
+    if let Some(addr) = listen {
+        let listener = std::net::TcpListener::bind(&addr)
+            .map_err(|e| obc::err!("binding {addr}: {e}"))?;
+        eprintln!(
+            "serve_compress: listening on {} ({} workers, queue {}; op=shutdown to exit)",
+            listener.local_addr()?,
+            cfg.workers,
+            cfg.queue_cap
+        );
+        obc::server::net::serve_tcp(cfg, listener)?;
+    } else {
+        eprintln!(
+            "serve_compress: ready ({} workers, queue {}; one JSON request per line; op=shutdown to exit)",
+            cfg.workers, cfg.queue_cap
+        );
+        run_line_protocol(cfg, std::io::stdin().lock(), std::io::stdout())?;
+    }
     eprintln!("serve_compress: bye");
     Ok(())
 }

@@ -70,6 +70,27 @@ pub fn unstructured_levels_on(
     prefix_levels_on(pool, w, hess, orders, level_counts, 1, true)
 }
 
+/// Streaming edition of [`unstructured_levels_on`]: instead of
+/// materializing one f64 weight matrix **per level** and returning them
+/// all at once, each level is assembled into ONE reusable buffer and
+/// handed to `emit(level_index, weights, sq_err)` — the database
+/// builder converts it straight to its f32 entry, so peak transient
+/// memory is one matrix instead of `levels × rows × d × 8` bytes.
+/// Identical arithmetic (the buffer is reset to the dense weights
+/// before every level), so emitted levels are bit-identical to the
+/// returned ones.
+pub fn unstructured_levels_stream_on(
+    pool: &ThreadPool,
+    w: &Mat,
+    hess: &LayerHessian,
+    traces: &[RowTrace],
+    level_counts: &[Vec<usize>],
+    emit: impl FnMut(usize, &Mat, f64),
+) {
+    let orders: Vec<Vec<usize>> = traces.iter().map(|t| t.order.clone()).collect();
+    prefix_levels_stream_on(pool, w, hess, orders, level_counts, 1, true, emit)
+}
+
 /// Reconstruct every block-sparsity grid level in one pass.
 ///
 /// `traces` hold **block** indices (from
@@ -95,8 +116,33 @@ pub fn block_levels_on(
     level_counts: &[Vec<usize>],
     compute_err: bool,
 ) -> Vec<CompressResult> {
-    let d = w.cols;
-    let orders: Vec<Vec<usize>> = traces
+    let orders = expand_block_orders(traces, c, w.cols);
+    prefix_levels_on(pool, w, hess, orders, level_counts, c, compute_err)
+}
+
+/// Streaming edition of [`block_levels_on`] — see
+/// [`unstructured_levels_stream_on`] for the memory argument. The CPU
+/// database builder quantizes each pruned level inside `emit` and keeps
+/// only the f32 entry.
+#[allow(clippy::too_many_arguments)]
+pub fn block_levels_stream_on(
+    pool: &ThreadPool,
+    w: &Mat,
+    hess: &LayerHessian,
+    traces: &[RowTrace],
+    c: usize,
+    level_counts: &[Vec<usize>],
+    compute_err: bool,
+    emit: impl FnMut(usize, &Mat, f64),
+) {
+    let orders = expand_block_orders(traces, c, w.cols);
+    prefix_levels_stream_on(pool, w, hess, orders, level_counts, c, compute_err, emit)
+}
+
+/// Expand block traces into weight-index trace order (each block is `c`
+/// consecutive columns, clipped at the row width).
+fn expand_block_orders(traces: &[RowTrace], c: usize, d: usize) -> Vec<Vec<usize>> {
+    traces
         .iter()
         .map(|t| {
             let mut o = Vec::with_capacity(t.order.len() * c);
@@ -106,14 +152,13 @@ pub fn block_levels_on(
             }
             o
         })
-        .collect();
-    prefix_levels_on(pool, w, hess, orders, level_counts, c, compute_err)
+        .collect()
 }
 
-/// Shared core: per-row prefix reconstruction at every distinct depth,
-/// then per-level assembly. `unit` converts a level count into a prefix
-/// length of the expanded order (1 for unstructured, block width for
-/// block grids).
+/// Collecting wrapper over [`prefix_levels_stream_on`]: clones each
+/// emitted level into an owned [`CompressResult`] (the historical API,
+/// kept for the reference comparisons in tests/benches — production
+/// database builds stream).
 ///
 /// Error bit-identity: each row job evaluates, per distinct depth, the
 /// exact per-row expression of [`super::layer_sq_err`] (difference,
@@ -131,6 +176,37 @@ fn prefix_levels_on(
     unit: usize,
     compute_err: bool,
 ) -> Vec<CompressResult> {
+    let mut out = Vec::with_capacity(level_counts.len());
+    prefix_levels_stream_on(
+        pool,
+        w,
+        hess,
+        orders,
+        level_counts,
+        unit,
+        compute_err,
+        |_, m, err| out.push(CompressResult::new(m.clone(), err)),
+    );
+    out
+}
+
+/// Streaming core: per-row prefix reconstruction at every distinct
+/// depth on the pool, then per-level assembly into ONE reusable buffer
+/// handed to `emit` (reset to the dense weights before each level, so
+/// every emitted matrix is bit-identical to an independently-assembled
+/// clone). `unit` converts a level count into a prefix length of the
+/// expanded order (1 for unstructured, block width for block grids).
+#[allow(clippy::too_many_arguments)]
+fn prefix_levels_stream_on(
+    pool: &ThreadPool,
+    w: &Mat,
+    hess: &LayerHessian,
+    orders: Vec<Vec<usize>>,
+    level_counts: &[Vec<usize>],
+    unit: usize,
+    compute_err: bool,
+    mut emit: impl FnMut(usize, &Mat, f64),
+) {
     let rows = w.rows;
     assert_eq!(orders.len(), rows, "one trace per row");
     for counts in level_counts {
@@ -205,29 +281,30 @@ fn prefix_levels_on(
             .into_iter()
             .collect::<Result<Vec<_>, NonSpd>>()
         });
-    // Per-level assembly: clone of the dense weights + reconstructed
-    // rows; the error is the row-order fold of the per-row terms.
-    level_counts
-        .iter()
-        .map(|counts| {
-            let mut out = w.clone();
-            let mut total = 0.0;
-            for (r, rows_k) in rows_by_k.iter().enumerate() {
-                let k = counts[r] * unit;
-                if k == 0 {
-                    continue; // untouched row: the reference adds +0.0
-                }
-                let (_, row, term) = rows_k
-                    .iter()
-                    .find(|(kk, _, _)| *kk == k)
-                    .expect("prefix depth reconstructed for its level");
-                out.row_mut(r).copy_from_slice(row);
-                total += *term;
+    // Per-level assembly: ONE buffer reset to the dense weights, then
+    // the level's reconstructed rows; the error is the row-order fold
+    // of the per-row terms. Streaming the buffer to `emit` (instead of
+    // collecting a matrix per level) keeps the transient footprint at
+    // one f64 matrix for the whole grid.
+    let mut out = w.clone();
+    for (li, counts) in level_counts.iter().enumerate() {
+        out.data.copy_from_slice(&w.data);
+        let mut total = 0.0;
+        for (r, rows_k) in rows_by_k.iter().enumerate() {
+            let k = counts[r] * unit;
+            if k == 0 {
+                continue; // untouched row: the reference adds +0.0
             }
-            let err = if compute_err { total.max(0.0) } else { 0.0 };
-            CompressResult::new(out, err)
-        })
-        .collect()
+            let (_, row, term) = rows_k
+                .iter()
+                .find(|(kk, _, _)| *kk == k)
+                .expect("prefix depth reconstructed for its level");
+            out.row_mut(r).copy_from_slice(row);
+            total += *term;
+        }
+        let err = if compute_err { total.max(0.0) } else { 0.0 };
+        emit(li, &out, err);
+    }
 }
 
 #[cfg(test)]
@@ -264,6 +341,51 @@ mod tests {
             assert_eq!(res.sq_err.to_bits(), reference.sq_err.to_bits(), "level {l} err");
             assert_eq!(res.sparsity, reference.sparsity, "level {l} sparsity");
         }
+    }
+
+    /// The streaming seam must emit exactly what the collecting API
+    /// returns — same order, bit-identical weights and errors — even
+    /// though it reuses one assembly buffer across levels.
+    #[test]
+    fn streaming_levels_match_collected_levels_bitwise() {
+        let (w, h) = setup(6, 20, 47);
+        let pool = ThreadPool::new(2);
+        let traces = exact_obs::sweep_all_rows_on(&pool, &w, &h, &ObsOpts::default());
+        let total = w.rows * w.cols;
+        let k_totals: Vec<usize> = [0.0f64, 0.3, 0.6, 0.8]
+            .iter()
+            .map(|s| ((total as f64) * s).round() as usize)
+            .collect();
+        let counts = exact_obs::global_select_multi(&traces, &k_totals);
+        let collected = unstructured_levels_on(&pool, &w, &h, &traces, &counts);
+        let mut streamed: Vec<(usize, Vec<u64>, u64)> = Vec::new();
+        unstructured_levels_stream_on(&pool, &w, &h, &traces, &counts, |li, m, err| {
+            streamed.push((li, m.data.iter().map(|v| v.to_bits()).collect(), err.to_bits()));
+        });
+        assert_eq!(streamed.len(), collected.len());
+        for (pos, ((li, bits, err), reference)) in streamed.iter().zip(&collected).enumerate() {
+            assert_eq!(*li, pos, "levels emitted in grid order");
+            let ref_bits: Vec<u64> = reference.w.data.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(*bits, ref_bits, "level {li} weights diverged");
+            assert_eq!(*err, reference.sq_err.to_bits(), "level {li} err diverged");
+        }
+        // Block edition too (with the error fold enabled).
+        const C: usize = 4;
+        let btraces = exact_obs::sweep_all_rows_block_on(&pool, &w, &h, C, 1.0);
+        let kb: Vec<usize> = [0.0f64, 0.25, 0.5]
+            .iter()
+            .map(|s| ((total as f64) * s / C as f64).round() as usize)
+            .collect();
+        let bcounts = exact_obs::global_select_multi(&btraces, &kb);
+        let bcollected = block_levels_on(&pool, &w, &h, &btraces, C, &bcounts, true);
+        let mut bi = 0;
+        block_levels_stream_on(&pool, &w, &h, &btraces, C, &bcounts, true, |li, m, err| {
+            assert_eq!(li, bi);
+            assert_eq!(m.data, bcollected[li].w.data, "block level {li} weights");
+            assert_eq!(err.to_bits(), bcollected[li].sq_err.to_bits(), "block level {li} err");
+            bi += 1;
+        });
+        assert_eq!(bi, bcollected.len());
     }
 
     /// Block grids: the expanded-prefix path must equal the per-level

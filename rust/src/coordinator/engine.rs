@@ -38,6 +38,8 @@ use crate::nn::models::{load_bundle, synthetic_bundle, task_of, ModelBundle};
 use crate::nn::{CompressibleModel, LayerInfo};
 use crate::solver::{self, Choice};
 use crate::stats;
+use crate::store::SnapshotStore;
+use crate::util::io::Fnv64;
 use crate::util::pool;
 use crate::util::single_flight::SingleFlight;
 use std::collections::BTreeMap;
@@ -103,6 +105,38 @@ pub struct CompressionEngine {
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
     cache_evictions: AtomicU64,
+    /// Live database builds actually executed (a snapshot warm start is
+    /// NOT a build — the restart acceptance test pins this distinction).
+    db_builds: AtomicU64,
+    /// FNV-1a fingerprint of the calibration state (model name + every
+    /// layer Hessian, bit-exact). Stamped into snapshots; a snapshot
+    /// whose fingerprint differs is stale and is rejected on load.
+    calib_fp: u64,
+    /// Optional disk-backed snapshot store: databases are written
+    /// through on build and warm-started on the next process.
+    store: Mutex<Option<Arc<SnapshotStore>>>,
+}
+
+/// Fingerprint of everything a database build reads from calibration:
+/// the model name plus, per layer (sorted), the Hessian's sample count,
+/// dampening and full matrix bits. Engines with equal fingerprints
+/// produce bit-identical databases for equal specs, so a matching
+/// snapshot can stand in for a live build.
+fn calibration_fingerprint(model: &str, hessians: &LayerHessians) -> u64 {
+    let mut f = Fnv64::new();
+    f.write(model.as_bytes());
+    f.write_u64(hessians.len() as u64);
+    for (name, h) in hessians {
+        f.write(name.as_bytes());
+        f.write_u64(h.n_samples as u64);
+        f.write_u64(h.damp.to_bits());
+        f.write_u64(h.h.rows as u64);
+        f.write_u64(h.h.cols as u64);
+        for v in &h.h.data {
+            f.write_u64(v.to_bits());
+        }
+    }
+    f.finish()
 }
 
 impl CompressionEngine {
@@ -116,6 +150,7 @@ impl CompressionEngine {
             .ok()
             .and_then(|s| s.parse::<usize>().ok())
             .unwrap_or(DEFAULT_DB_CACHE_BYTES);
+        let calib_fp = calibration_fingerprint(bundle.model.name(), &hessians);
         CompressionEngine {
             bundle,
             hessians,
@@ -127,6 +162,9 @@ impl CompressionEngine {
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             cache_evictions: AtomicU64::new(0),
+            db_builds: AtomicU64::new(0),
+            calib_fp,
+            store: Mutex::new(None),
         }
     }
 
@@ -202,6 +240,35 @@ impl CompressionEngine {
     /// Bytes currently charged against the database cache budget.
     pub fn db_cache_bytes(&self) -> usize {
         self.db_lru.lock().unwrap().total_bytes
+    }
+
+    /// Live database builds executed by this engine (snapshot warm
+    /// starts excluded).
+    pub fn db_builds(&self) -> u64 {
+        self.db_builds.load(Ordering::Relaxed)
+    }
+
+    /// The calibration fingerprint stamped into (and demanded of)
+    /// snapshots — see [`calibration_fingerprint`].
+    pub fn calib_fingerprint(&self) -> u64 {
+        self.calib_fp
+    }
+
+    /// Attach a snapshot store: subsequent database builds write
+    /// through to it and later requests warm-start from it.
+    pub fn attach_store(&self, store: Arc<SnapshotStore>) {
+        *self.store.lock().unwrap() = Some(store);
+    }
+
+    fn snapshot_store(&self) -> Option<Arc<SnapshotStore>> {
+        self.store.lock().unwrap().clone()
+    }
+
+    /// The store key of an engine-cache key: the cache key is per-engine
+    /// (model-agnostic), the store directory is shared — so the model
+    /// name is prefixed to keep two models' identical specs apart.
+    pub fn snapshot_key(&self, cache_key: &str) -> String {
+        format!("{}|{cache_key}", self.model().name())
     }
 
     /// Set the database cache byte budget. Takes effect on the next
@@ -362,12 +429,37 @@ impl CompressionEngine {
     /// evicts least-recently-used entries until it fits — the returned
     /// database itself is never the victim, so one over-budget database
     /// still serves (and is dropped on the next foreign access).
+    ///
+    /// With a snapshot store attached
+    /// ([`attach_store`](Self::attach_store)), the owner path first
+    /// tries a **warm start** from disk — a matching snapshot stands in
+    /// for the build (concurrent callers wait on the load exactly as on
+    /// a build; a corrupt or stale snapshot is quarantined and the live
+    /// build runs) — and a live build **writes through** so the next
+    /// process warm-starts. A failed write-through only logs: the build
+    /// result is good regardless of the disk.
     pub fn db_cached(
         &self,
         key: &str,
         build: impl FnOnce() -> crate::util::error::Result<ModelDb>,
     ) -> crate::util::error::Result<(Arc<ModelDb>, bool)> {
-        let (db, shared) = self.db_cache.get_or_build(key, || build().map(Arc::new))?;
+        let (db, shared) = self.db_cache.get_or_build(key, || {
+            let store = self.snapshot_store();
+            let skey = self.snapshot_key(key);
+            if let Some(s) = &store {
+                if let Some(db) = s.load(&skey, self.calib_fp) {
+                    return Ok(Arc::new(db));
+                }
+            }
+            let db = build()?;
+            self.db_builds.fetch_add(1, Ordering::Relaxed);
+            if let Some(s) = &store {
+                if let Err(e) = s.save(&skey, self.calib_fp, &db) {
+                    crate::warnlog!("engine", "snapshot write-through failed for '{skey}': {e}");
+                }
+            }
+            Ok(Arc::new(db))
+        })?;
         if shared {
             self.cache_hits.fetch_add(1, Ordering::Relaxed);
         } else {
@@ -510,21 +602,25 @@ impl CompressionEngine {
                         .map(|&s| ((w.rows * w.cols) as f64 * s).round() as usize)
                         .collect();
                     let counts = exact_obs::global_select_multi(&traces, &k_totals);
-                    let levels = trace_db::unstructured_levels_on(
+                    // Streaming seam: each level is assembled into one
+                    // reusable f64 buffer and converted straight to its
+                    // f32 entry — no per-level f64 matrix outlives its
+                    // callback (ROADMAP "stream levels to the solver").
+                    trace_db::unstructured_levels_stream_on(
                         pool::global(),
                         &w,
                         &h,
                         &traces,
                         &counts,
+                        |li, wl, sq_err| {
+                            out.push(Entry::from_mat(
+                                &l.name,
+                                Level { sparsity: grid[li], ..Level::dense() },
+                                wl,
+                                sq_err,
+                            ));
+                        },
                     );
-                    for (&s, res) in grid.iter().zip(&levels) {
-                        out.push(Entry::from_mat(
-                            &l.name,
-                            Level { sparsity: s, ..Level::dense() },
-                            &res.w,
-                            res.sq_err,
-                        ));
-                    }
                 }
                 _ => {
                     for &s in grid {
@@ -688,28 +784,38 @@ impl CompressionEngine {
                 .map(|&s| ((w.rows * w.cols) as f64 * s / C as f64).round() as usize)
                 .collect();
             let counts = exact_obs::global_select_multi(&traces, &kb_totals);
-            // compute_err=false: the pruned-stage error is discarded here
-            // (levels are re-scored below, after quantization).
-            let pruned_levels =
-                trace_db::block_levels_on(pool::global(), &w, &h, &traces, C, &counts, false);
             // Shared once across all levels' error folds (not per level).
             let wa = Arc::new(w.clone());
             let ha = Arc::new(h.h.clone());
             let mut out = Vec::with_capacity(grid.len());
-            for (&s, pruned) in grid.iter().zip(&pruned_levels) {
-                let res = obq::quantize_sparse(&pruned.w, &h, &ObqOpts::symmetric(8));
-                // Total loss vs DENSE weights: pruning + quantization
-                // (res.sq_err alone is relative to the pruned weights and
-                // would make high sparsity look free to the solver).
-                let what = Arc::new(res.w);
-                let w_err = layer_sq_err_shared(pool::global(), &wa, &what, &ha);
-                out.push(Entry::from_mat(
-                    &l.name,
-                    Level { sparsity: s, w_bits: 8, a_bits: 8, is_24: false },
-                    &what,
-                    w_err,
-                ));
-            }
+            // Streaming seam (compute_err=false: the pruned-stage error
+            // is discarded — levels are re-scored after quantization).
+            // Each pruned level is quantized inside the callback; only
+            // its f32 entry survives the iteration.
+            trace_db::block_levels_stream_on(
+                pool::global(),
+                &w,
+                &h,
+                &traces,
+                C,
+                &counts,
+                false,
+                |li, pruned, _| {
+                    let res = obq::quantize_sparse(pruned, &h, &ObqOpts::symmetric(8));
+                    // Total loss vs DENSE weights: pruning + quantization
+                    // (res.sq_err alone is relative to the pruned weights
+                    // and would make high sparsity look free to the
+                    // solver).
+                    let what = Arc::new(res.w);
+                    let w_err = layer_sq_err_shared(pool::global(), &wa, &what, &ha);
+                    out.push(Entry::from_mat(
+                        &l.name,
+                        Level { sparsity: grid[li], w_bits: 8, a_bits: 8, is_24: false },
+                        &what,
+                        w_err,
+                    ));
+                },
+            );
             Ok(out)
         })?;
         let mut db = ModelDb::new(self.model().name());

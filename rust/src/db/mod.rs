@@ -145,6 +145,13 @@ impl ModelDb {
                 .sum::<usize>()
     }
 
+    /// Every entry in deterministic (layer, level-key) order — the
+    /// iteration order of the snapshot format (`crate::store`), so two
+    /// databases with identical contents serialize byte-identically.
+    pub fn entries(&self) -> impl Iterator<Item = &Entry> + '_ {
+        self.layers.values().flat_map(|m| m.values())
+    }
+
     /// Levels available for a layer, with losses (solver input). One
     /// subtree walk; no per-entry string compares.
     pub fn levels_for(&self, layer: &str) -> Vec<(&Level, f64)> {
@@ -217,6 +224,15 @@ mod tests {
         assert_eq!(ls.len(), 2);
         assert!(db.get("a", &level(0.75)).is_some());
         assert!(db.get("a", &level(0.9)).is_none());
+        // entries() walks every (layer, level) in deterministic order.
+        let keys: Vec<(String, String)> = db
+            .entries()
+            .map(|e| (e.layer.clone(), e.level.key()))
+            .collect();
+        assert_eq!(keys.len(), 3);
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted, "entries() is sorted by (layer, level key)");
     }
 
     #[test]

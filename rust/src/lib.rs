@@ -16,6 +16,9 @@
 //!   models (see DESIGN.md §2 for the substitution argument).
 //! * [`db`] + [`solver`] + [`cost`] — the non-uniform compression pipeline:
 //!   model database, SPDY-style DP solver, FLOP/BOP/CPU-latency models.
+//! * [`store`] — the disk-backed snapshot store: versioned, checksummed
+//!   binary snapshots of built trace databases (write-through on build,
+//!   fingerprint-validated warm start on restart, quarantine-on-corrupt).
 //! * [`stats`] — batch-norm reset and mean/variance correction (Eq. 9).
 //! * [`coordinator`] — the L3 orchestration layer: the shared
 //!   [`coordinator::engine::CompressionEngine`] (bundle + Hessians +
@@ -65,6 +68,7 @@ pub mod nn;
 pub mod data;
 pub mod compress;
 pub mod db;
+pub mod store;
 pub mod solver;
 pub mod cost;
 pub mod stats;

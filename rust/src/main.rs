@@ -10,7 +10,11 @@
 //!   flop     — non-uniform FLOP-target compression via DB + SPDY solver
 //!   mixed    — joint quant + 2:4 for a BOP-reduction target (GPU scenario)
 //!   cputime  — block-sparse + int8 for a CPU speedup target
-//!   serve    — the concurrent compression service on stdin/stdout
+//!   serve    — the concurrent compression service (stdin/stdout, or
+//!              --listen ADDR for TCP; --store DIR for durable databases)
+//!   db       — snapshot plumbing: `db export` builds a database and
+//!              writes a checksummed .obcdb snapshot, `db import`
+//!              validates one into a store directory
 //!
 //! Every experiment command builds a typed [`JobSpec`] and runs it
 //! through the same `coordinator::jobs` layer the server executes — the
@@ -24,8 +28,11 @@ use obc::coordinator::jobs::{
 };
 use obc::coordinator::methods::PruneMethod;
 use obc::solver::sparsity_grid;
+use obc::store::SnapshotStore;
 use obc::util::cli::{opt, Args};
 use obc::util::io::artifacts_dir;
+use std::path::Path;
+use std::sync::Arc;
 
 fn load(model: &str) -> CompressionEngine {
     let dir = artifacts_dir().join("models");
@@ -84,7 +91,7 @@ fn main() -> obc::util::Result<()> {
     }
     let cmd = argv.remove(0);
     let specs = vec![
-        opt("model", "model name (rneta|rnetb|rnetc|bert2|bert4|bert6|tinydet)", Some("rneta")),
+        opt("model", "model (rneta|rnetb|rnetc|bert2|bert4|bert6|tinydet|synthetic)", Some("rneta")),
         opt("method", "compression method", Some("exactobs")),
         opt("sparsity", "target sparsity", Some("0.5")),
         opt("bits", "weight bits", Some("4")),
@@ -96,6 +103,12 @@ fn main() -> obc::util::Result<()> {
         opt("workers", "serve: concurrent job workers", Some("2")),
         opt("queue-cap", "serve: bounded queue capacity", Some("64")),
         opt("synthetic", "serve: only the synthetic model (no artifacts)", None),
+        opt("listen", "serve: TCP listen address (e.g. 127.0.0.1:7700; default stdin)", None),
+        opt("store", "serve/db: snapshot directory for durable databases", None),
+        opt("kind", "db kind (sparsity|mixed_gpu|mixed_gpu_baseline|cpu)", Some("sparsity")),
+        opt("grid", "db: comma-separated sparsity grid (default Eq. 10)", None),
+        opt("out", "db export: output snapshot file", None),
+        opt("file", "db import: snapshot file to import", None),
     ];
     let args = Args::parse_from(&format!("obc {cmd}"), "OBC coordinator", specs, argv);
     let model = args.str_or("model", "rneta");
@@ -128,13 +141,99 @@ fn main() -> obc::util::Result<()> {
                 queue_cap: args.usize_or("queue-cap", 64),
                 models_dir: artifacts_dir().join("models"),
                 synthetic_only: args.flag("synthetic"),
+                store_dir: args.get("store").map(std::path::PathBuf::from),
             };
-            eprintln!(
-                "obc serve: ready ({} workers, queue {}; one JSON request per line)",
-                cfg.workers, cfg.queue_cap
-            );
-            obc::server::run_line_protocol(cfg, std::io::stdin().lock(), std::io::stdout())?;
+            if let Some(dir) = &cfg.store_dir {
+                eprintln!("obc serve: durable databases in {}", dir.display());
+            }
+            match args.get("listen") {
+                Some(addr) => {
+                    let listener = std::net::TcpListener::bind(addr)
+                        .map_err(|e| obc::err!("binding {addr}: {e}"))?;
+                    eprintln!(
+                        "obc serve: listening on {} ({} workers, queue {}; one JSON request per line)",
+                        listener.local_addr()?,
+                        cfg.workers,
+                        cfg.queue_cap
+                    );
+                    obc::server::net::serve_tcp(cfg, listener)?;
+                }
+                None => {
+                    eprintln!(
+                        "obc serve: ready ({} workers, queue {}; one JSON request per line)",
+                        cfg.workers, cfg.queue_cap
+                    );
+                    obc::server::run_line_protocol(
+                        cfg,
+                        std::io::stdin().lock(),
+                        std::io::stdout(),
+                    )?;
+                }
+            }
             eprintln!("obc serve: bye");
+        }
+        "db" => {
+            let action = args.positional.first().map(String::as_str).unwrap_or("");
+            match action {
+                "export" => {
+                    // Validate the cheap part before loading/calibrating.
+                    let Some(out) = args.get("out") else {
+                        eprintln!("obc db export: --out FILE is required");
+                        std::process::exit(2);
+                    };
+                    let engine = if model == "synthetic" {
+                        CompressionEngine::synthetic(obc::server::registry::SYNTHETIC_SEED)?
+                    } else {
+                        load(&model)
+                    };
+                    // An existing store warms the build (and receives the
+                    // write-through) — export after `serve --store` costs
+                    // one snapshot load, not a rebuild.
+                    if let Some(dir) = args.get("store") {
+                        engine.attach_store(Arc::new(SnapshotStore::open(Path::new(dir))?));
+                    }
+                    let kind = DbKind::parse(&args.str_or("kind", "sparsity"))?;
+                    let spec = DbSpec {
+                        kind,
+                        method: parse_prune_method(&args.str_or("method", "exactobs"))?,
+                        grid: args.f64_list_or("grid", &sparsity_grid(0.1, 0.95)),
+                        scope: if args.flag("all-layers") {
+                            LayerScope::All
+                        } else {
+                            match kind {
+                                DbKind::Sparsity => LayerScope::All,
+                                _ => LayerScope::SkipFirstLast,
+                            }
+                        },
+                    };
+                    let (db, cached) = jobs::db_for_spec(&engine, &spec)?;
+                    let key = engine.snapshot_key(&spec.cache_key());
+                    obc::store::format::write_snapshot_file(
+                        Path::new(out),
+                        &key,
+                        engine.calib_fingerprint(),
+                        &db,
+                    )?;
+                    println!(
+                        "exported {} entries (key '{key}'{}) to {out}",
+                        db.len(),
+                        if cached { ", warm" } else { ", built" }
+                    );
+                }
+                "import" => {
+                    let (Some(file), Some(dir)) = (args.get("file"), args.get("store")) else {
+                        eprintln!("obc db import: --file FILE and --store DIR are required");
+                        std::process::exit(2);
+                    };
+                    let store = SnapshotStore::open(Path::new(dir))?;
+                    let (key, entries) = store.import(Path::new(file))?;
+                    println!("imported {entries} entries under key '{key}' into {dir}");
+                }
+                other => {
+                    eprintln!("usage: obc db <export|import> [options] (got '{other}')");
+                    std::process::exit(2);
+                }
+            }
         }
         "dense" => {
             let engine = load(&model);

@@ -13,10 +13,18 @@
 //!   result — jobs are pure functions of the shared engine state;
 //! * per-job **timing / queue-depth metrics** ([`metrics::Metrics`]) and
 //!   typed `health` / `metrics` / graceful-`shutdown` control ops;
+//! * optional **durable databases** ([`ServerConfig::store_dir`] →
+//!   [`crate::store::SnapshotStore`]): builds write through to disk and
+//!   a restarted server answers db-backed jobs from the snapshot
+//!   without rebuilding;
 //! * a line-protocol frontend ([`run_line_protocol`]) shared by
-//!   `examples/serve_compress.rs` and `obc serve`.
+//!   `examples/serve_compress.rs` and `obc serve`, plus a TCP edition
+//!   ([`net::serve_tcp`], `obc serve --listen ADDR`) running the same
+//!   protocol over per-connection reader threads into the one shared
+//!   queue.
 
 pub mod metrics;
+pub mod net;
 pub mod queue;
 pub mod registry;
 
@@ -44,6 +52,9 @@ pub struct ServerConfig {
     pub models_dir: PathBuf,
     /// Serve only the synthetic model; refuse disk loads (hermetic CI).
     pub synthetic_only: bool,
+    /// Snapshot directory for durable trace databases (`None` = no
+    /// persistence): builds write through, restarts warm-start.
+    pub store_dir: Option<PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -53,6 +64,7 @@ impl Default for ServerConfig {
             queue_cap: 64,
             models_dir: crate::util::io::artifacts_dir().join("models"),
             synthetic_only: false,
+            store_dir: None,
         }
     }
 }
@@ -129,9 +141,21 @@ pub struct CompressionServer {
 
 impl CompressionServer {
     pub fn start(cfg: ServerConfig) -> CompressionServer {
+        // Persistence is best-effort at startup: an unopenable snapshot
+        // directory downgrades to a memory-only server (logged), it
+        // does not take serving down.
+        let store = cfg.store_dir.as_ref().and_then(|dir| {
+            match crate::store::SnapshotStore::open(dir) {
+                Ok(s) => Some(Arc::new(s)),
+                Err(e) => {
+                    crate::warnlog!("server", "snapshot store disabled: {e}");
+                    None
+                }
+            }
+        });
         let inner = Arc::new(Inner {
             queue: Bounded::new(cfg.queue_cap),
-            registry: EngineRegistry::new(cfg.models_dir, cfg.synthetic_only),
+            registry: EngineRegistry::new(cfg.models_dir, cfg.synthetic_only, store),
             metrics: Metrics::default(),
             inflight: Mutex::new(BTreeMap::new()),
             seq: AtomicU64::new(0),
@@ -213,6 +237,7 @@ impl CompressionServer {
     pub fn metrics_json(&self) -> Json {
         let mut o = self.inner.metrics.to_json();
         let (hits, misses, evictions) = self.inner.registry.db_cache_stats();
+        let st = self.inner.registry.store_stats();
         o.set("ok", true)
             .set("op", "metrics")
             .set("calibrations", self.inner.registry.calibrations() as f64)
@@ -220,6 +245,12 @@ impl CompressionServer {
             .set("db_cache_misses", misses as f64)
             .set("db_cache_evictions", evictions as f64)
             .set("db_cache_bytes", self.inner.registry.db_cache_bytes() as f64)
+            .set("db_builds", self.inner.registry.db_builds() as f64)
+            .set("store_hits", st.hits as f64)
+            .set("store_misses", st.misses as f64)
+            .set("store_stale_rejected", st.stale_rejected as f64)
+            .set("store_saves", st.saves as f64)
+            .set("store_load_seconds_total", st.load_seconds)
             .set("queue_depth", self.queue_depth() as f64);
         o
     }
@@ -405,6 +436,7 @@ mod tests {
             queue_cap: 16,
             models_dir: PathBuf::from("/nonexistent"),
             synthetic_only: true,
+            store_dir: None,
         })
     }
 
@@ -532,6 +564,7 @@ mod tests {
                 queue_cap: 8,
                 models_dir: PathBuf::from("/nonexistent"),
                 synthetic_only: true,
+                store_dir: None,
             },
             input.as_bytes(),
             buf.clone(),

@@ -1,0 +1,302 @@
+//! TCP transport for the line protocol.
+//!
+//! [`serve_tcp`] runs ONE [`CompressionServer`] (one warm engine
+//! registry, one bounded queue, one worker pool — and, with
+//! [`super::ServerConfig::store_dir`], one persistent snapshot store)
+//! behind a TCP listener. Each accepted connection gets:
+//!
+//! * a **reader thread** parsing newline-delimited JSON requests and
+//!   submitting them to the shared queue (backpressure applies: a full
+//!   queue blocks the reader, not the worker pool), and
+//! * a **writer thread** streaming that connection's responses back in
+//!   completion order — responses never cross connections because every
+//!   job carries its own reply channel.
+//!
+//! `health`/`metrics` are answered inline per connection; `metrics`
+//! (and the shutdown ack) additionally carry the transport counters
+//! ([`NetStats`]: connections opened/closed/active, bytes in/out).
+//!
+//! **Graceful drain**: a `shutdown` request from ANY connection stops
+//! the accept loop and closes the queue — every job accepted before the
+//! close still executes and its response is flushed to its own
+//! connection; submissions after the close receive typed rejections —
+//! then the initiating connection gets the post-drain metrics snapshot
+//! as its ack, exactly like the stdin protocol. Connections that stay
+//! idle observe the drain via their read timeout and close. Asserted by
+//! `rust/tests/server_concurrency.rs`.
+
+use super::{CompressionServer, Response, ServerConfig};
+use crate::coordinator::jobs::{ControlOp, Request};
+use crate::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// How often an idle connection (and the accept loop) re-checks the
+/// shutdown flag.
+const POLL: Duration = Duration::from_millis(50);
+
+/// Largest accepted request line. A client streaming bytes with no
+/// newline past this is cut off with an error response instead of
+/// growing the reassembly buffer without bound (the snapshot reader
+/// caps its length fields for the same reason).
+const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Transport-level counters, shared by every connection of one
+/// [`serve_tcp`] front-end.
+#[derive(Default)]
+pub struct NetStats {
+    pub connections_opened: AtomicU64,
+    pub connections_closed: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+}
+
+impl NetStats {
+    /// Merge the transport counters into a metrics/ack object.
+    pub fn augment(&self, j: &mut Json) {
+        let opened = self.connections_opened.load(Ordering::Relaxed);
+        let closed = self.connections_closed.load(Ordering::Relaxed);
+        j.set("net_connections_opened", opened as f64)
+            .set("net_connections_closed", closed as f64)
+            .set("net_connections_active", opened.saturating_sub(closed) as f64)
+            .set("net_bytes_in", self.bytes_in.load(Ordering::Relaxed) as f64)
+            .set("net_bytes_out", self.bytes_out.load(Ordering::Relaxed) as f64);
+    }
+}
+
+/// Write one JSON line to a connection (shared between the writer
+/// thread and inline control responses), counting bytes out.
+fn write_json(out: &Mutex<TcpStream>, stats: &NetStats, j: &Json) -> std::io::Result<()> {
+    let line = j.to_string_compact();
+    let mut o = out.lock().unwrap();
+    o.write_all(line.as_bytes())?;
+    o.write_all(b"\n")?;
+    o.flush()?;
+    stats
+        .bytes_out
+        .fetch_add(line.len() as u64 + 1, Ordering::Relaxed);
+    Ok(())
+}
+
+enum LineOutcome {
+    Continue,
+    Shutdown,
+}
+
+fn process_line(
+    server: &CompressionServer,
+    stats: &NetStats,
+    out: &Mutex<TcpStream>,
+    tx: &mpsc::Sender<Response>,
+    line: &str,
+) -> LineOutcome {
+    match Request::parse_line(line) {
+        Ok(Request::Control(ControlOp::Shutdown)) => return LineOutcome::Shutdown,
+        Ok(Request::Control(ControlOp::Health)) => {
+            let _ = write_json(out, stats, &server.health_json());
+        }
+        Ok(Request::Control(ControlOp::Metrics)) => {
+            let mut m = server.metrics_json();
+            stats.augment(&mut m);
+            let _ = write_json(out, stats, &m);
+        }
+        Ok(Request::Job { id, model, spec }) => {
+            if let Err(e) = server.submit(&model, spec, id.clone(), tx.clone()) {
+                let mut o = Json::obj();
+                o.set("ok", false)
+                    .set("error", e.to_string())
+                    .set("model", model.as_str());
+                if let Some(id) = &id {
+                    o.set("id", id.as_str());
+                }
+                let _ = write_json(out, stats, &o);
+            }
+        }
+        Err(e) => {
+            let mut o = Json::obj();
+            o.set("ok", false).set("error", e.to_string());
+            let _ = write_json(out, stats, &o);
+        }
+    }
+    LineOutcome::Continue
+}
+
+/// Serve one connection: read loop + dedicated response writer. Returns
+/// after EOF, a socket error, the global shutdown (observed via the
+/// read timeout), or a `shutdown` request from this connection — in the
+/// last case this thread also drives the global drain and writes the
+/// post-drain ack.
+fn handle_connection(
+    server: &Arc<CompressionServer>,
+    stats: &Arc<NetStats>,
+    shutdown: &Arc<AtomicBool>,
+    mut stream: TcpStream,
+) {
+    // The read timeout doubles as the shutdown poll for idle
+    // connections; request bytes already in flight always win the race
+    // because a readable socket returns data, not a timeout.
+    let _ = stream.set_read_timeout(Some(POLL));
+    // Bounded writes: a client that stops reading (full receive window)
+    // must stall only its own responses, never the server's shutdown
+    // drain — a timed-out write errors, the writer keeps draining its
+    // channel, and the stalled connection's output is abandoned.
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let out = match stream.try_clone() {
+        Ok(s) => Arc::new(Mutex::new(s)),
+        Err(_) => return,
+    };
+    let (tx, rx) = mpsc::channel::<Response>();
+    let writer = {
+        let out = Arc::clone(&out);
+        let stats = Arc::clone(stats);
+        thread::spawn(move || {
+            for resp in rx {
+                // First failed/timed-out write abandons this
+                // connection's output: a half-written line must not be
+                // followed by more frames (garbled framing), and a dead
+                // client must not stall the shutdown drain per response.
+                if write_json(&out, &stats, &resp.to_json()).is_err() {
+                    break;
+                }
+            }
+        })
+    };
+
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut initiated_shutdown = false;
+    'read: loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                // Client EOF. Like `BufRead::lines` on the stdin path, a
+                // final request without a trailing newline still counts.
+                let tail = String::from_utf8_lossy(&buf).into_owned();
+                if !tail.trim().is_empty() {
+                    if let LineOutcome::Shutdown =
+                        process_line(server, stats, &out, &tx, tail.trim())
+                    {
+                        initiated_shutdown = true;
+                    }
+                }
+                break;
+            }
+            Ok(n) => {
+                stats.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.len() > MAX_LINE_BYTES && !buf.contains(&b'\n') {
+                    let mut o = Json::obj();
+                    o.set("ok", false)
+                        .set("error", format!("request line exceeds {MAX_LINE_BYTES} bytes"));
+                    let _ = write_json(&out, stats, &o);
+                    break;
+                }
+                // Process every complete line (bytes are split on '\n'
+                // so a request spanning reads — or non-ASCII JSON — is
+                // reassembled before UTF-8 decoding).
+                while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+                    let raw: Vec<u8> = buf.drain(..=pos).collect();
+                    let line = String::from_utf8_lossy(&raw[..raw.len() - 1]);
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    match process_line(server, stats, &out, &tx, line.trim()) {
+                        LineOutcome::Continue => {}
+                        LineOutcome::Shutdown => {
+                            initiated_shutdown = true;
+                            break 'read;
+                        }
+                    }
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if shutdown.load(Ordering::SeqCst) {
+                    break; // drained elsewhere; flush our jobs and close
+                }
+            }
+            Err(_) => break, // connection reset etc.
+        }
+    }
+
+    // Close our submission side; the writer exits once every job this
+    // connection submitted has delivered its response (each queued job
+    // holds a sender clone until delivery).
+    drop(tx);
+    if initiated_shutdown {
+        shutdown.store(true, Ordering::SeqCst);
+        // Global graceful drain: refuse new jobs, finish accepted ones
+        // (their responses flow through every connection's writer),
+        // then ack with the final counters — mirroring the stdin
+        // protocol's post-drain shutdown ack.
+        server.shutdown();
+        let _ = writer.join();
+        let mut ack = server.metrics_json();
+        stats.augment(&mut ack);
+        ack.set("op", "shutdown");
+        let _ = write_json(&out, stats, &ack);
+    } else {
+        let _ = writer.join();
+    }
+}
+
+/// Run the line protocol over TCP: accept connections until a client
+/// sends `{"op":"shutdown"}`, then drain and return. Bind the listener
+/// yourself (`TcpListener::bind("127.0.0.1:0")` gives an ephemeral
+/// test port; `local_addr()` tells you where it landed).
+pub fn serve_tcp(cfg: ServerConfig, listener: TcpListener) -> crate::util::error::Result<()> {
+    let server = Arc::new(CompressionServer::start(cfg));
+    let stats = Arc::new(NetStats::default());
+    let shutdown = Arc::new(AtomicBool::new(false));
+    // Non-blocking accept so the loop can observe the shutdown flag;
+    // accepted streams are switched back to blocking (with the read
+    // timeout as the poll).
+    listener.set_nonblocking(true)?;
+    let mut handlers: Vec<thread::JoinHandle<()>> = Vec::new();
+    loop {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let _ = stream.set_nonblocking(false);
+                stats.connections_opened.fetch_add(1, Ordering::Relaxed);
+                crate::debuglog!("net", "connection from {peer}");
+                let server = Arc::clone(&server);
+                let stats = Arc::clone(&stats);
+                let shutdown = Arc::clone(&shutdown);
+                handlers.push(
+                    thread::Builder::new()
+                        .name("obc-conn".into())
+                        .spawn(move || {
+                            handle_connection(&server, &stats, &shutdown, stream);
+                            stats.connections_closed.fetch_add(1, Ordering::Relaxed);
+                        })
+                        .expect("spawn connection handler"),
+                );
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                // Reap finished connections so the handle list stays
+                // O(active connections) in a long-lived server, not
+                // O(every connection ever accepted).
+                handlers.retain(|h| !h.is_finished());
+                thread::sleep(POLL);
+            }
+            Err(e) => return Err(crate::err!("tcp accept failed: {e}")),
+        }
+    }
+    // The initiating connection already drove the drain and wrote its
+    // ack; remaining handlers observe the flag, flush and exit.
+    for h in handlers {
+        let _ = h.join();
+    }
+    server.shutdown(); // idempotent (covers a listener error path)
+    Ok(())
+}

@@ -10,6 +10,7 @@
 //! the artifacts may appear on disk meanwhile.
 
 use crate::coordinator::engine::CompressionEngine;
+use crate::store::{SnapshotStore, StoreStats};
 use crate::util::single_flight::SingleFlight;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -28,15 +29,25 @@ pub struct EngineRegistry {
     /// Refuse disk loads — only the synthetic model is served (hermetic
     /// CI / smoke mode).
     synthetic_only: bool,
+    /// Shared snapshot store, attached to every engine this registry
+    /// builds: database builds write through, restarts warm-start —
+    /// under the engine's existing single-flight db cell, so a loading
+    /// snapshot counts as a build and concurrent jobs wait on it.
+    store: Option<Arc<SnapshotStore>>,
     slots: SingleFlight<Arc<CompressionEngine>>,
     calibrations: AtomicU64,
 }
 
 impl EngineRegistry {
-    pub fn new(models_dir: PathBuf, synthetic_only: bool) -> EngineRegistry {
+    pub fn new(
+        models_dir: PathBuf,
+        synthetic_only: bool,
+        store: Option<Arc<SnapshotStore>>,
+    ) -> EngineRegistry {
         EngineRegistry {
             models_dir,
             synthetic_only,
+            store,
             slots: SingleFlight::new(),
             calibrations: AtomicU64::new(0),
         }
@@ -73,6 +84,18 @@ impl EngineRegistry {
         self.slots.ready().iter().map(|(_, e)| e.db_cache_bytes()).sum()
     }
 
+    /// Live database builds across every ready engine (snapshot warm
+    /// starts excluded — the restart acceptance test pins this).
+    pub fn db_builds(&self) -> u64 {
+        self.slots.ready().iter().map(|(_, e)| e.db_builds()).sum()
+    }
+
+    /// Counter snapshot of the shared snapshot store (zeros when no
+    /// store is configured, keeping the metrics schema stable).
+    pub fn store_stats(&self) -> StoreStats {
+        self.store.as_ref().map(|s| s.stats()).unwrap_or_default()
+    }
+
     /// Resolve a model to its shared engine, calibrating at most once
     /// per model regardless of how many jobs arrive concurrently.
     pub fn get(&self, model: &str) -> crate::util::error::Result<Arc<CompressionEngine>> {
@@ -80,6 +103,9 @@ impl EngineRegistry {
             .slots
             .get_or_build(model, || {
                 let engine = self.build(model)?;
+                if let Some(store) = &self.store {
+                    engine.attach_store(Arc::clone(store));
+                }
                 self.calibrations.fetch_add(1, Ordering::Relaxed);
                 Ok(Arc::new(engine))
             })
@@ -105,7 +131,7 @@ mod tests {
     use super::*;
 
     fn synthetic_registry() -> Arc<EngineRegistry> {
-        Arc::new(EngineRegistry::new(PathBuf::from("/nonexistent"), true))
+        Arc::new(EngineRegistry::new(PathBuf::from("/nonexistent"), true, None))
     }
 
     #[test]

@@ -1,0 +1,328 @@
+//! The `.obcdb` snapshot wire format: a versioned, checksummed binary
+//! container for one [`ModelDb`] (every compressed layer × level entry
+//! plus its calibration loss), written with the `util::io` binary
+//! writer — no serde, the workspace stays offline-buildable.
+//!
+//! Layout (all little-endian):
+//! ```text
+//! magic    : 4 bytes  "OBCS"
+//! version  : u32      (1)
+//! meta section:
+//!   key          : str   store key ("<model>|<kind>/<method>/<scope>/<grid…>")
+//!   fingerprint  : u64   calibration fingerprint (FNV-1a over the Hessians)
+//!   model        : str   model name recorded in the database
+//!   entry_count  : u64
+//! entry section × entry_count:
+//!   layer    : str
+//!   sparsity : f64 ; w_bits : u32 ; a_bits : u32 ; is_24 : u8
+//!   rows     : u64 ; cols : u64 ; sq_err : f64
+//!   w        : f32 × rows·cols
+//! ```
+//! Every **section** is length-prefixed (`u64`) and followed by the
+//! CRC-32 of its payload — a flipped byte, a truncated tail or a stale
+//! length all surface as a typed error at read time, never as a
+//! silently-wrong database. Weights round-trip bit-exactly (f32 LE).
+
+use crate::cost::Level;
+use crate::db::{Entry, ModelDb};
+use crate::util::io::{crc32, BinReader, BinWriter};
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 4] = b"OBCS";
+pub const VERSION: u32 = 1;
+
+/// Caps applied while reading (corrupt length fields must fail fast,
+/// not allocate): strings ≤ 64 KiB, one section ≤ 1 GiB, one entry's
+/// weight matrix ≤ 2^28 elements (1 GiB of f32).
+const STR_CAP: usize = 64 << 10;
+const SECTION_CAP: u64 = 1 << 30;
+const WEIGHTS_CAP: usize = 1 << 28;
+
+/// Everything a snapshot records besides the entries themselves.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SnapshotMeta {
+    /// Full store key: model name + the engine's `(kind, method, scope,
+    /// grid)` cache key.
+    pub key: String,
+    /// Calibration fingerprint of the engine that built the database.
+    pub fingerprint: u64,
+    /// Model name recorded in the [`ModelDb`].
+    pub model: String,
+}
+
+/// Write one section: `len u64 | payload | crc32(payload) u32`.
+fn write_section<W: Write>(w: &mut W, payload: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.write_all(&crc32(payload).to_le_bytes())?;
+    Ok(())
+}
+
+/// Read one section back, verifying length plausibility and CRC.
+fn read_section<R: Read>(r: &mut R, what: &str) -> crate::util::error::Result<Vec<u8>> {
+    let mut len8 = [0u8; 8];
+    r.read_exact(&mut len8)
+        .map_err(|e| crate::err!("truncated {what} section length: {e}"))?;
+    let len = u64::from_le_bytes(len8);
+    crate::ensure!(len <= SECTION_CAP, "implausible {what} section length {len}");
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)
+        .map_err(|e| crate::err!("truncated {what} section payload: {e}"))?;
+    let mut crc4 = [0u8; 4];
+    r.read_exact(&mut crc4)
+        .map_err(|e| crate::err!("truncated {what} section checksum: {e}"))?;
+    let want = u32::from_le_bytes(crc4);
+    let got = crc32(&payload);
+    crate::ensure!(
+        got == want,
+        "{what} section checksum mismatch (stored {want:#010x}, computed {got:#010x})"
+    );
+    Ok(payload)
+}
+
+/// Serialize a snapshot to any sink.
+pub fn write_snapshot<W: Write>(
+    out: &mut W,
+    key: &str,
+    fingerprint: u64,
+    db: &ModelDb,
+) -> crate::util::error::Result<()> {
+    out.write_all(MAGIC)?;
+    out.write_all(&VERSION.to_le_bytes())?;
+
+    let entry_count = db.len() as u64;
+    let mut meta = Vec::new();
+    {
+        let mut w = BinWriter::new(&mut meta);
+        w.str(key)?;
+        w.u64(fingerprint)?;
+        w.str(&db.model)?;
+        w.u64(entry_count)?;
+    }
+    write_section(out, &meta)?;
+
+    for e in db.entries() {
+        crate::ensure!(
+            e.w.len() == e.rows * e.cols,
+            "entry '{}' shape/data mismatch ({}x{} vs {} weights)",
+            e.layer,
+            e.rows,
+            e.cols,
+            e.w.len()
+        );
+        // Enforce the read-side caps at write time: a database the
+        // reader would reject must fail the save (one logged warning at
+        // build time) instead of being written through on every build
+        // and quarantined on every restart. The section payload is the
+        // entry header (strings + scalars) plus 4 bytes per weight.
+        let payload_len = 4 + e.layer.len() + 8 + 4 + 4 + 1 + 8 + 8 + 8 + 4 * e.w.len();
+        crate::ensure!(
+            e.w.len() <= WEIGHTS_CAP && payload_len as u64 <= SECTION_CAP,
+            "entry '{}' exceeds the snapshot caps ({} weights, {payload_len} payload bytes)",
+            e.layer,
+            e.w.len()
+        );
+        let mut payload = Vec::with_capacity(64 + e.w.len() * 4);
+        {
+            let mut w = BinWriter::new(&mut payload);
+            w.str(&e.layer)?;
+            w.f64(e.level.sparsity)?;
+            w.u32(e.level.w_bits)?;
+            w.u32(e.level.a_bits)?;
+            w.u8(e.level.is_24 as u8)?;
+            w.u64(e.rows as u64)?;
+            w.u64(e.cols as u64)?;
+            w.f64(e.sq_err)?;
+            w.f32_slice(&e.w)?;
+        }
+        write_section(out, &payload)?;
+    }
+    Ok(())
+}
+
+/// Deserialize a snapshot from any source, verifying magic, version and
+/// every section CRC. Returns the meta alongside the rebuilt database —
+/// stale/mismatch policy (key, fingerprint) is the caller's
+/// ([`crate::store::SnapshotStore`] rejects and quarantines).
+pub fn read_snapshot<R: Read>(
+    input: &mut R,
+) -> crate::util::error::Result<(SnapshotMeta, ModelDb)> {
+    let mut magic = [0u8; 4];
+    input
+        .read_exact(&mut magic)
+        .map_err(|e| crate::err!("truncated snapshot magic: {e}"))?;
+    crate::ensure!(&magic == MAGIC, "bad snapshot magic {magic:?}");
+    let mut v4 = [0u8; 4];
+    input
+        .read_exact(&mut v4)
+        .map_err(|e| crate::err!("truncated snapshot version: {e}"))?;
+    let version = u32::from_le_bytes(v4);
+    crate::ensure!(version == VERSION, "unsupported snapshot format version {version}");
+
+    let meta_payload = read_section(input, "meta")?;
+    let mut m = BinReader::new(&meta_payload[..]);
+    let key = m.str(STR_CAP)?;
+    let fingerprint = m.u64()?;
+    let model = m.str(STR_CAP)?;
+    let entry_count = m.u64()?;
+    crate::ensure!(
+        entry_count <= 1 << 24,
+        "implausible snapshot entry count {entry_count}"
+    );
+
+    let mut db = ModelDb::new(&model);
+    for i in 0..entry_count {
+        let payload = read_section(input, "entry")?;
+        let mut r = BinReader::new(&payload[..]);
+        let layer = r.str(STR_CAP)?;
+        let sparsity = r.f64()?;
+        let w_bits = r.u32()?;
+        let a_bits = r.u32()?;
+        let is_24 = r.u8()? != 0;
+        let rows = r.u64()? as usize;
+        let cols = r.u64()? as usize;
+        let sq_err = r.f64()?;
+        let numel = rows
+            .checked_mul(cols)
+            .ok_or_else(|| crate::err!("entry {i} ('{layer}') dimension overflow"))?;
+        let w = r.f32_vec(numel, WEIGHTS_CAP)?;
+        db.insert(Entry {
+            layer,
+            level: Level { sparsity, w_bits, a_bits, is_24 },
+            w,
+            rows,
+            cols,
+            sq_err,
+        });
+    }
+    Ok((SnapshotMeta { key, fingerprint, model }, db))
+}
+
+/// Write a snapshot file via a temp-file + rename so a crashed writer
+/// never leaves a half-written snapshot under the final name.
+pub fn write_snapshot_file(
+    path: &Path,
+    key: &str,
+    fingerprint: u64,
+    db: &ModelDb,
+) -> crate::util::error::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+    let result = (|| -> crate::util::error::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        write_snapshot(&mut f, key, fingerprint, db)?;
+        f.flush()?;
+        Ok(())
+    })();
+    if let Err(e) = result {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e.context(format!("writing snapshot {}", path.display())));
+    }
+    std::fs::rename(&tmp, path)
+        .map_err(|e| crate::err!("publishing snapshot {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Read and fully validate a snapshot file.
+pub fn read_snapshot_file(path: &Path) -> crate::util::error::Result<(SnapshotMeta, ModelDb)> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).map_err(|e| crate::err!("open {}: {e}", path.display()))?,
+    );
+    read_snapshot(&mut f).map_err(|e| e.context(format!("snapshot {}", path.display())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn sample_db() -> ModelDb {
+        let mut db = ModelDb::new("m");
+        let l0 = Level { sparsity: 0.5, ..Level::dense() };
+        let l1 = Level { sparsity: 0.0, w_bits: 8, a_bits: 8, is_24: true };
+        db.insert(Entry::from_mat("a", l0, &Mat::randn(3, 4, 7), 1.25));
+        db.insert(Entry::from_mat("b", l1, &Mat::randn(2, 2, 9), 1e-9));
+        db
+    }
+
+    fn bits(db: &ModelDb) -> Vec<(String, String, Vec<u32>, u64)> {
+        db.entries()
+            .map(|e| {
+                (
+                    e.layer.clone(),
+                    e.level.key(),
+                    e.w.iter().map(|v| v.to_bits()).collect(),
+                    e.sq_err.to_bits(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn snapshot_roundtrips_bit_exactly() {
+        let db = sample_db();
+        let mut buf = Vec::new();
+        write_snapshot(&mut buf, "m|sparsity/exactobs/all/0.5", 0xabcd, &db).unwrap();
+        let (meta, back) = read_snapshot(&mut &buf[..]).unwrap();
+        assert_eq!(meta.key, "m|sparsity/exactobs/all/0.5");
+        assert_eq!(meta.fingerprint, 0xabcd);
+        assert_eq!(meta.model, "m");
+        assert_eq!(bits(&db), bits(&back));
+        // Serialization is deterministic: same db → same bytes.
+        let mut buf2 = Vec::new();
+        write_snapshot(&mut buf2, "m|sparsity/exactobs/all/0.5", 0xabcd, &db).unwrap();
+        assert_eq!(buf, buf2);
+    }
+
+    #[test]
+    fn every_corruption_is_a_typed_error() {
+        let db = sample_db();
+        let mut buf = Vec::new();
+        write_snapshot(&mut buf, "k", 1, &db).unwrap();
+
+        // Truncation at any point past the magic.
+        for cut in [3, 6, 12, buf.len() / 2, buf.len() - 1] {
+            assert!(
+                read_snapshot(&mut &buf[..cut]).is_err(),
+                "truncation at {cut} must fail"
+            );
+        }
+        // Bad magic.
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(read_snapshot(&mut &bad[..]).is_err());
+        // Unsupported version.
+        let mut bad = buf.clone();
+        bad[4] = 99;
+        let e = read_snapshot(&mut &bad[..]).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
+        // Single flipped payload byte → CRC mismatch (flip a byte in the
+        // last entry's weight data, well inside its section payload).
+        let mut bad = buf.clone();
+        let at = buf.len() - 8; // before the final 4-byte crc
+        bad[at] ^= 0x40;
+        let e = read_snapshot(&mut &bad[..]).unwrap_err();
+        assert!(e.to_string().contains("checksum"), "{e}");
+    }
+
+    #[test]
+    fn snapshot_file_roundtrip_via_tmp_rename() {
+        let dir = std::env::temp_dir().join("obc_store_format_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("snap.obcdb");
+        let db = sample_db();
+        write_snapshot_file(&path, "k", 42, &db).unwrap();
+        let (meta, back) = read_snapshot_file(&path).unwrap();
+        assert_eq!(meta.fingerprint, 42);
+        assert_eq!(bits(&db), bits(&back));
+        // No temp droppings left behind.
+        let others: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name())
+            .collect();
+        assert_eq!(others.len(), 1, "{others:?}");
+    }
+}

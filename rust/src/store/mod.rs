@@ -1,0 +1,262 @@
+//! Disk-backed snapshot store for trace databases.
+//!
+//! The ExactOBS trace database (Eq. 10: every layer × every grid level)
+//! is the paper's central serving artifact — and the most expensive
+//! thing a serving process builds. This subsystem makes built databases
+//! **durable**: the engine writes a snapshot through on every build
+//! (keyed by the existing `(kind, method, scope, grid)` cache key plus a
+//! **calibration fingerprint** hashed from the Hessian inputs), and a
+//! restarted server warm-starts from disk instead of rebuilding —
+//! loading happens under the same single-flight cell as a build, so
+//! concurrent jobs wait on one load exactly as they wait on one build.
+//!
+//! Trust model: a snapshot is advisory, never authoritative. Anything
+//! wrong with it — truncation, a flipped byte (per-section CRC-32), a
+//! wrong format version, a foreign key hashed to the same file name, or
+//! a calibration fingerprint that no longer matches the engine — is
+//! **rejected**: the file is quarantined (renamed aside for post-mortem)
+//! and the caller falls back to a live build that is bit-identical to
+//! the no-store path. See `rust/tests/store_roundtrip.rs`.
+
+pub mod format;
+
+use crate::db::ModelDb;
+use crate::util::io::fnv64;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Counter snapshot of one store (surfaced in the server metrics).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StoreStats {
+    /// Snapshots served (key + fingerprint matched, CRCs valid).
+    pub hits: u64,
+    /// Keys with no snapshot on disk (a live build follows).
+    pub misses: u64,
+    /// Snapshots rejected — corrupt, wrong version, key collision or
+    /// stale fingerprint — and quarantined (a live build follows).
+    pub stale_rejected: u64,
+    /// Snapshots written through on build (or imported).
+    pub saves: u64,
+    /// Total wall-clock seconds spent loading snapshots (hits only).
+    pub load_seconds: f64,
+}
+
+/// A directory of `.obcdb` snapshots, one per store key. File names are
+/// the FNV-1a hash of the key (keys contain `/` and `|`); the full key
+/// is recorded inside the snapshot and verified on load, so a hash
+/// collision degrades to a rejected load, never a wrong database.
+pub struct SnapshotStore {
+    dir: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    stale_rejected: AtomicU64,
+    saves: AtomicU64,
+    load_ns: AtomicU64,
+}
+
+impl SnapshotStore {
+    /// Open (creating if needed) a snapshot directory.
+    pub fn open(dir: &Path) -> crate::util::error::Result<SnapshotStore> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| crate::err!("creating snapshot dir {}: {e}", dir.display()))?;
+        Ok(SnapshotStore {
+            dir: dir.to_path_buf(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            stale_rejected: AtomicU64::new(0),
+            saves: AtomicU64::new(0),
+            load_ns: AtomicU64::new(0),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Canonical on-disk location of a key's snapshot.
+    pub fn snapshot_path(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{:016x}.obcdb", fnv64(key.as_bytes())))
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            stale_rejected: self.stale_rejected.load(Ordering::Relaxed),
+            saves: self.saves.load(Ordering::Relaxed),
+            load_seconds: self.load_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+
+    /// Load the snapshot for `key`, accepting it only if the recorded
+    /// key AND calibration fingerprint match. `None` means "build live":
+    /// either no snapshot exists (miss) or it was rejected and
+    /// quarantined (corrupt / stale — never silently served).
+    pub fn load(&self, key: &str, fingerprint: u64) -> Option<ModelDb> {
+        let path = self.snapshot_path(key);
+        if !path.exists() {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let t0 = Instant::now();
+        match format::read_snapshot_file(&path) {
+            Ok((meta, db)) if meta.key == key && meta.fingerprint == fingerprint => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.load_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                crate::info!(
+                    "store",
+                    "warm start: {} entries for '{key}' from {}",
+                    db.len(),
+                    path.display()
+                );
+                Some(db)
+            }
+            Ok((meta, _)) => {
+                let reason = if meta.key != key {
+                    format!("key mismatch (snapshot holds '{}')", meta.key)
+                } else {
+                    format!(
+                        "calibration fingerprint mismatch (snapshot {:#018x}, engine {:#018x})",
+                        meta.fingerprint, fingerprint
+                    )
+                };
+                self.reject(&path, key, &reason);
+                None
+            }
+            Err(e) => {
+                self.reject(&path, key, &e.to_string());
+                None
+            }
+        }
+    }
+
+    /// Quarantine a rejected snapshot: rename it aside so the next load
+    /// is a clean miss, keeping the bytes for post-mortem.
+    fn reject(&self, path: &Path, key: &str, reason: &str) {
+        self.stale_rejected.fetch_add(1, Ordering::Relaxed);
+        let quarantined = path.with_extension("obcdb.quarantined");
+        let moved = std::fs::rename(path, &quarantined).is_ok();
+        crate::warnlog!(
+            "store",
+            "rejected snapshot for '{key}': {reason} ({})",
+            if moved {
+                format!("quarantined to {}", quarantined.display())
+            } else {
+                let _ = std::fs::remove_file(path);
+                "removed".to_string()
+            }
+        );
+    }
+
+    /// Write-through after a live build (crash-safe: temp file +
+    /// rename). Returns the published path.
+    pub fn save(
+        &self,
+        key: &str,
+        fingerprint: u64,
+        db: &ModelDb,
+    ) -> crate::util::error::Result<PathBuf> {
+        let path = self.snapshot_path(key);
+        format::write_snapshot_file(&path, key, fingerprint, db)?;
+        self.saves.fetch_add(1, Ordering::Relaxed);
+        Ok(path)
+    }
+
+    /// Import an exported snapshot file (`obc db export` output) into
+    /// this store under its canonical name. The file is fully parsed —
+    /// every CRC verified — and re-serialized, so a corrupt export can
+    /// never enter the store. Returns `(key, entry_count)`.
+    pub fn import(&self, file: &Path) -> crate::util::error::Result<(String, usize)> {
+        let (meta, db) = format::read_snapshot_file(file)?;
+        let path = self.snapshot_path(&meta.key);
+        format::write_snapshot_file(&path, &meta.key, meta.fingerprint, &db)?;
+        self.saves.fetch_add(1, Ordering::Relaxed);
+        Ok((meta.key, db.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::Level;
+    use crate::db::Entry;
+    use crate::linalg::Mat;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("obc_store_mod_{name}"));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn tiny_db() -> ModelDb {
+        let mut db = ModelDb::new("m");
+        let level = Level { sparsity: 0.5, ..Level::dense() };
+        db.insert(Entry::from_mat("a", level, &Mat::randn(2, 3, 5), 0.75));
+        db
+    }
+
+    #[test]
+    fn save_load_hit_counts_and_roundtrips() {
+        let store = SnapshotStore::open(&tmp("hit")).unwrap();
+        assert!(store.load("k", 7).is_none(), "empty store misses");
+        assert_eq!(store.stats().misses, 1);
+        let db = tiny_db();
+        store.save("k", 7, &db).unwrap();
+        let back = store.load("k", 7).expect("snapshot hit");
+        assert_eq!(back.len(), db.len());
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.stale_rejected, s.saves), (1, 1, 0, 1));
+        assert!(s.load_seconds >= 0.0);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_rejects_and_quarantines() {
+        let store = SnapshotStore::open(&tmp("fp")).unwrap();
+        store.save("k", 7, &tiny_db()).unwrap();
+        assert!(store.load("k", 8).is_none(), "stale fingerprint rejected");
+        assert_eq!(store.stats().stale_rejected, 1);
+        // The file was quarantined: the next load is a clean miss.
+        assert!(store.load("k", 7).is_none());
+        assert_eq!(store.stats().misses, 1);
+        // …and the quarantined bytes are still on disk for post-mortem.
+        let q = store.snapshot_path("k").with_extension("obcdb.quarantined");
+        assert!(q.exists(), "quarantined file kept at {}", q.display());
+    }
+
+    #[test]
+    fn corrupt_file_rejects_and_quarantines() {
+        let store = SnapshotStore::open(&tmp("corrupt")).unwrap();
+        store.save("k", 7, &tiny_db()).unwrap();
+        let path = store.snapshot_path("k");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let at = bytes.len() - 8;
+        bytes[at] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(store.load("k", 7).is_none(), "flipped byte rejected");
+        assert_eq!(store.stats().stale_rejected, 1);
+        assert!(!path.exists(), "rejected snapshot moved aside");
+    }
+
+    #[test]
+    fn import_revalidates_and_lands_under_canonical_name() {
+        let export_dir = tmp("import_src");
+        std::fs::create_dir_all(&export_dir).unwrap();
+        let exported = export_dir.join("handoff.obcdb");
+        let db = tiny_db();
+        format::write_snapshot_file(&exported, "k2", 99, &db).unwrap();
+
+        let store = SnapshotStore::open(&tmp("import_dst")).unwrap();
+        let (key, n) = store.import(&exported).unwrap();
+        assert_eq!(key, "k2");
+        assert_eq!(n, db.len());
+        assert!(store.load("k2", 99).is_some(), "imported snapshot serves");
+        // A corrupt export is refused outright.
+        let mut bytes = std::fs::read(&exported).unwrap();
+        bytes[5] ^= 0xff; // version field
+        let bad = export_dir.join("bad.obcdb");
+        std::fs::write(&bad, &bytes).unwrap();
+        assert!(store.import(&bad).is_err());
+    }
+}

@@ -1,6 +1,9 @@
-//! Binary IO helpers: little-endian primitive read/write and the `.obcw`
-//! tensor container used to move trained weights from the build-time JAX
-//! layer into the Rust runtime.
+//! Binary IO helpers: little-endian primitive read/write, the CRC-32 /
+//! FNV-1a checksums and the [`BinWriter`]/[`BinReader`] pair used by the
+//! snapshot store (`crate::store`), plus the `.obcw` tensor container
+//! used to move trained weights from the build-time JAX layer into the
+//! Rust runtime. All of it is in-tree — the offline vendor set has no
+//! serde/byteorder/crc crates.
 //!
 //! `.obcw` format (all little-endian):
 //! ```text
@@ -109,6 +112,211 @@ fn read_u32<R: Read>(r: &mut R) -> crate::util::error::Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
+// ----------------------------------------------------------------------
+// Checksums
+// ----------------------------------------------------------------------
+
+const fn crc32_build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = crc32_build_table();
+
+/// CRC-32 (IEEE 802.3 polynomial, the zlib/PNG variant) of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xffff_ffffu32;
+    for &b in data {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    c ^ 0xffff_ffff
+}
+
+/// Streaming 64-bit FNV-1a hash — cheap, deterministic, in-tree. Used
+/// for snapshot file names and the engine's calibration fingerprint
+/// (collision resistance at the "reject a stale snapshot" level, not a
+/// cryptographic guarantee).
+pub struct Fnv64 {
+    state: u64,
+}
+
+impl Default for Fnv64 {
+    fn default() -> Fnv64 {
+        Fnv64::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64 { state: 0xcbf2_9ce4_8422_2325 }
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        self
+    }
+
+    pub fn write_u64(&mut self, v: u64) -> &mut Self {
+        self.write(&v.to_le_bytes())
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// One-shot FNV-1a of a byte slice.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut f = Fnv64::new();
+    f.write(bytes);
+    f.finish()
+}
+
+// ----------------------------------------------------------------------
+// Little-endian binary writer/reader (the snapshot substrate)
+// ----------------------------------------------------------------------
+
+/// Little-endian primitive writer over any `Write` sink. Strings are
+/// u32-length-prefixed UTF-8; f32 slices are written in bounded chunks
+/// (no whole-matrix byte buffer).
+pub struct BinWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> BinWriter<W> {
+    pub fn new(w: W) -> BinWriter<W> {
+        BinWriter { w }
+    }
+
+    pub fn into_inner(self) -> W {
+        self.w
+    }
+
+    pub fn u8(&mut self, v: u8) -> std::io::Result<()> {
+        self.w.write_all(&[v])
+    }
+
+    pub fn u32(&mut self, v: u32) -> std::io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+
+    pub fn u64(&mut self, v: u64) -> std::io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+
+    pub fn f64(&mut self, v: f64) -> std::io::Result<()> {
+        self.w.write_all(&v.to_le_bytes())
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) -> std::io::Result<()> {
+        self.w.write_all(b)
+    }
+
+    pub fn str(&mut self, s: &str) -> crate::util::error::Result<()> {
+        crate::ensure!(s.len() <= u32::MAX as usize, "string too long for wire format");
+        self.u32(s.len() as u32)?;
+        self.w.write_all(s.as_bytes())?;
+        Ok(())
+    }
+
+    pub fn f32_slice(&mut self, xs: &[f32]) -> std::io::Result<()> {
+        const CHUNK: usize = 16 * 1024;
+        let mut buf = Vec::with_capacity(xs.len().min(CHUNK) * 4);
+        for chunk in xs.chunks(CHUNK) {
+            buf.clear();
+            for v in chunk {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            self.w.write_all(&buf)?;
+        }
+        Ok(())
+    }
+}
+
+/// Little-endian primitive reader mirroring [`BinWriter`]. Every
+/// variable-length read takes an explicit cap so a corrupt length field
+/// fails with a typed error instead of a giant allocation.
+pub struct BinReader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> BinReader<R> {
+    pub fn new(r: R) -> BinReader<R> {
+        BinReader { r }
+    }
+
+    pub fn u8(&mut self) -> crate::util::error::Result<u8> {
+        let mut b = [0u8; 1];
+        self.r.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+
+    pub fn u32(&mut self) -> crate::util::error::Result<u32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn u64(&mut self) -> crate::util::error::Result<u64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub fn f64(&mut self) -> crate::util::error::Result<f64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(f64::from_le_bytes(b))
+    }
+
+    pub fn exact(&mut self, n: usize, cap: usize) -> crate::util::error::Result<Vec<u8>> {
+        crate::ensure!(n <= cap, "implausible field length {n} (cap {cap})");
+        let mut buf = vec![0u8; n];
+        self.r.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    pub fn str(&mut self, cap: usize) -> crate::util::error::Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.exact(n, cap)?;
+        Ok(String::from_utf8(bytes)?)
+    }
+
+    pub fn f32_vec(&mut self, n: usize, cap: usize) -> crate::util::error::Result<Vec<f32>> {
+        crate::ensure!(n <= cap, "implausible f32 count {n} (cap {cap})");
+        const CHUNK: usize = 16 * 1024;
+        let mut out = Vec::with_capacity(n);
+        let mut buf = vec![0u8; n.min(CHUNK) * 4];
+        let mut left = n;
+        while left > 0 {
+            let take = left.min(CHUNK);
+            let bytes = &mut buf[..take * 4];
+            self.r.read_exact(bytes)?;
+            out.extend(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+            );
+            left -= take;
+        }
+        Ok(out)
+    }
+}
+
 /// Read an entire file as a string with a path-qualified error.
 pub fn read_to_string(path: &Path) -> crate::util::error::Result<String> {
     std::fs::read_to_string(path).map_err(|e| crate::err!("read {}: {e}", path.display()))
@@ -160,6 +368,60 @@ mod tests {
         let path = dir.join("bad.obcw");
         std::fs::write(&path, b"NOPExxxxxxx").unwrap();
         assert!(load_obcw(&path).is_err());
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // The zlib/PNG CRC-32 of "123456789" is the classic check value.
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"abc"), crc32(b"abd"), "single-byte flips change the crc");
+    }
+
+    #[test]
+    fn fnv64_is_deterministic_and_sensitive() {
+        assert_eq!(fnv64(b"obc"), fnv64(b"obc"));
+        assert_ne!(fnv64(b"obc"), fnv64(b"obd"));
+        let mut f = Fnv64::new();
+        f.write(b"ob").write(b"c");
+        assert_eq!(f.finish(), fnv64(b"obc"), "streaming == one-shot");
+    }
+
+    #[test]
+    fn bin_writer_reader_roundtrip() {
+        let mut buf = Vec::new();
+        {
+            let mut w = BinWriter::new(&mut buf);
+            w.u8(7).unwrap();
+            w.u32(0xdead_beef).unwrap();
+            w.u64(u64::MAX - 3).unwrap();
+            w.f64(-0.125).unwrap();
+            w.str("layer.name").unwrap();
+            w.f32_slice(&[1.5, -2.25, 0.0, f32::MIN_POSITIVE]).unwrap();
+        }
+        let mut r = BinReader::new(&buf[..]);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.125f64).to_bits());
+        assert_eq!(r.str(64).unwrap(), "layer.name");
+        let xs = r.f32_vec(4, 16).unwrap();
+        assert_eq!(
+            xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            [1.5f32, -2.25, 0.0, f32::MIN_POSITIVE].iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // Truncated stream: reading past the end is a typed error.
+        assert!(r.u8().is_err());
+    }
+
+    #[test]
+    fn bin_reader_rejects_implausible_lengths() {
+        let mut buf = Vec::new();
+        BinWriter::new(&mut buf).u32(1_000_000).unwrap();
+        let mut r = BinReader::new(&buf[..]);
+        assert!(r.str(4096).is_err(), "length above cap must be rejected");
+        let mut r2 = BinReader::new(&[][..]);
+        assert!(r2.f32_vec(10, 4).is_err(), "count above cap rejected before reading");
     }
 
     #[test]

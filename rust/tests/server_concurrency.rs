@@ -6,6 +6,12 @@
 //! 3. return results **bit-identical** to the same jobs run sequentially
 //!    through the old `Pipeline` path.
 //!
+//! The TCP transport rides the same suite (`tcp` module below): N
+//! concurrent localhost clients must see responses identical to the
+//! stdin line protocol (modulo per-run timing/scheduling fields), and a
+//! mid-batch `shutdown` must drain — one response per accepted job —
+//! before the ack.
+//!
 //! Everything runs on the synthetic tiny pipeline — no `make artifacts`
 //! dependency, debug-mode friendly.
 
@@ -77,6 +83,7 @@ fn concurrent_jobs_calibrate_once_share_db_cache_and_match_sequential() {
         queue_cap: 16,
         models_dir: PathBuf::from("/nonexistent"),
         synthetic_only: true,
+        store_dir: None,
     });
     let (tx, rx) = mpsc::channel();
     for (id, spec) in job_batch() {
@@ -155,6 +162,7 @@ fn metrics_record_queue_depth_and_timings() {
         queue_cap: 8,
         models_dir: PathBuf::from("/nonexistent"),
         synthetic_only: true,
+        store_dir: None,
     });
     let (tx, rx) = mpsc::channel();
     for i in 0..3 {
@@ -183,4 +191,221 @@ fn metrics_record_queue_depth_and_timings() {
     );
     assert!(m.get("exec_seconds_total").unwrap().as_f64().unwrap() > 0.0);
     server.shutdown();
+}
+
+mod tcp {
+    use super::*;
+    use obc::server::net::serve_tcp;
+    use obc::server::run_line_protocol;
+    use obc::util::json::Json;
+    use std::io::{BufRead, BufReader, Write as IoWrite};
+    use std::net::{TcpListener, TcpStream};
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    fn cfg() -> ServerConfig {
+        ServerConfig {
+            workers: 4,
+            queue_cap: 32,
+            models_dir: PathBuf::from("/nonexistent"),
+            synthetic_only: true,
+            store_dir: None,
+        }
+    }
+
+    /// The job batch every client sends (same shape as the smoke batch:
+    /// dense, prune, quant, and a solver target over a shared db).
+    fn job_lines() -> Vec<String> {
+        vec![
+            r#"{"id":"d1","model":"synthetic","op":"dense"}"#.into(),
+            r#"{"id":"p1","model":"synthetic","op":"prune","method":"exactobs","sparsity":0.5}"#
+                .into(),
+            r#"{"id":"q1","model":"synthetic","op":"quant","method":"obq","bits":4}"#.into(),
+            r#"{"id":"s1","model":"synthetic","op":"solve","target":"flop","value":1.5,"grid":[0,0.5,0.9]}"#
+                .into(),
+        ]
+    }
+
+    /// Strip the fields that legitimately differ between runs and
+    /// schedules — sequence numbers, timings, and the cache/coalescing
+    /// provenance flags (a coalesced response is the SAME result by
+    /// construction; which request built the shared db is a race). The
+    /// payload that remains (op, id, metrics, achieved, entries, …)
+    /// must be byte-identical, f64 bits included: `Json` objects
+    /// serialize with sorted keys and shortest-roundtrip floats.
+    fn normalize(line: &str) -> String {
+        match obc::util::json::parse(line).unwrap_or_else(|e| panic!("bad line {line}: {e}")) {
+            Json::Obj(mut m) => {
+                let volatile =
+                    ["seq", "queue_seconds", "seconds", "coalesced", "cached", "cached_db"];
+                for key in volatile {
+                    m.remove(key);
+                }
+                Json::Obj(m).to_string_compact()
+            }
+            other => other.to_string_compact(),
+        }
+    }
+
+    /// Run the reference batch through the in-process stdin protocol and
+    /// return its normalized, sorted job responses.
+    fn stdin_reference() -> Vec<String> {
+        #[derive(Clone, Default)]
+        struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+        impl std::io::Write for SharedBuf {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut input = job_lines().join("\n");
+        input.push_str("\n{\"op\":\"shutdown\"}\n");
+        let buf = SharedBuf::default();
+        run_line_protocol(cfg(), input.as_bytes(), buf.clone()).unwrap();
+        let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        let mut out: Vec<String> = text
+            .lines()
+            .filter(|l| l.contains("\"id\":")) // job responses only
+            .map(normalize)
+            .collect();
+        out.sort();
+        assert_eq!(out.len(), job_lines().len(), "reference run answered everything: {text}");
+        out
+    }
+
+    /// ≥ 8 concurrent TCP clients, each sending the full batch, must
+    /// all receive exactly the stdin protocol's responses.
+    #[test]
+    fn eight_concurrent_tcp_clients_match_stdin_protocol() {
+        let reference = stdin_reference();
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || serve_tcp(cfg(), listener).unwrap());
+
+        let clients: Vec<_> = (0..8)
+            .map(|c| {
+                let lines = job_lines();
+                std::thread::spawn(move || {
+                    let mut s = TcpStream::connect(addr).unwrap();
+                    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+                    for l in &lines {
+                        writeln!(s, "{l}").unwrap();
+                    }
+                    s.flush().unwrap();
+                    let mut r = BufReader::new(s);
+                    let mut got = Vec::new();
+                    for _ in 0..lines.len() {
+                        let mut line = String::new();
+                        r.read_line(&mut line)
+                            .unwrap_or_else(|e| panic!("client {c} read: {e}"));
+                        assert!(!line.is_empty(), "client {c}: connection closed early");
+                        got.push(normalize(line.trim()));
+                    }
+                    got.sort();
+                    got
+                })
+            })
+            .collect();
+        for (c, h) in clients.into_iter().enumerate() {
+            let got = h.join().unwrap();
+            assert_eq!(got, reference, "client {c} diverged from the stdin protocol");
+        }
+
+        // Metrics over TCP carry the transport counters.
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        writeln!(s, "{{\"op\":\"metrics\"}}").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut m = String::new();
+        r.read_line(&mut m).unwrap();
+        let mj = obc::util::json::parse(m.trim()).unwrap();
+        assert!(mj.get("net_connections_opened").unwrap().as_f64().unwrap() >= 8.0, "{m}");
+        assert!(mj.get("net_bytes_in").unwrap().as_f64().unwrap() > 0.0, "{m}");
+        assert!(mj.get("net_bytes_out").unwrap().as_f64().unwrap() > 0.0, "{m}");
+        assert_eq!(
+            mj.get("calibrations").unwrap().as_f64().unwrap(),
+            1.0,
+            "8 TCP clients share one single-flight calibration: {m}"
+        );
+
+        // Shutdown from this connection: drained ack is the final word.
+        writeln!(s, "{{\"op\":\"shutdown\"}}").unwrap();
+        let mut ack = String::new();
+        r.read_line(&mut ack).unwrap();
+        let aj = obc::util::json::parse(ack.trim()).unwrap();
+        assert_eq!(aj.get("op").unwrap().as_str().unwrap(), "shutdown", "{ack}");
+        assert!(aj.get("net_connections_opened").is_some(), "{ack}");
+        server.join().unwrap();
+    }
+
+    /// Mid-batch shutdown: jobs accepted before the drain still get
+    /// their responses on their own connection — exactly one line per
+    /// request, each either a result or a typed rejection.
+    #[test]
+    fn mid_batch_shutdown_drains_every_accepted_job() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || serve_tcp(cfg(), listener).unwrap());
+
+        let mut a = TcpStream::connect(addr).unwrap();
+        a.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        let n = 6;
+        for i in 0..n {
+            // Distinct sparsities: six genuinely distinct jobs in flight.
+            writeln!(
+                a,
+                "{{\"id\":\"a{i}\",\"model\":\"synthetic\",\"op\":\"prune\",\"method\":\"gmp\",\"sparsity\":0.{}}}",
+                3 + i
+            )
+            .unwrap();
+        }
+        a.flush().unwrap();
+        // Let the reader thread ingest the batch, then pull the plug
+        // from a second connection.
+        std::thread::sleep(Duration::from_millis(200));
+        let mut b = TcpStream::connect(addr).unwrap();
+        b.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        writeln!(b, "{{\"op\":\"shutdown\"}}").unwrap();
+
+        // A: one response per request, drained before its connection
+        // closes; accepted jobs succeed, post-close submissions are
+        // typed rejections (never silence).
+        let mut ra = BufReader::new(a.try_clone().unwrap());
+        let mut ok = 0;
+        let mut rejected = 0;
+        for i in 0..n {
+            let mut line = String::new();
+            ra.read_line(&mut line).unwrap();
+            assert!(!line.is_empty(), "response {i} missing: connection closed before drain");
+            let j = obc::util::json::parse(line.trim()).unwrap();
+            if j.get("ok").unwrap().as_bool().unwrap() {
+                ok += 1;
+            } else {
+                let err = j.get("error").unwrap().as_str().unwrap().to_string();
+                assert!(err.contains("shutting down"), "unexpected error: {err}");
+                rejected += 1;
+            }
+        }
+        assert_eq!(ok + rejected, n, "every request answered exactly once");
+        assert!(ok >= 1, "at least the in-flight work completed during the drain");
+
+        // B: the post-drain ack arrives after A's drain finished.
+        let mut rb = BufReader::new(b);
+        let mut ack = String::new();
+        rb.read_line(&mut ack).unwrap();
+        let aj = obc::util::json::parse(ack.trim()).unwrap();
+        assert_eq!(aj.get("op").unwrap().as_str().unwrap(), "shutdown", "{ack}");
+        let answered = aj.get("jobs_completed").unwrap().as_f64().unwrap() as usize;
+        let refused = aj.get("jobs_rejected").unwrap().as_f64().unwrap() as usize;
+        assert_eq!(answered + refused, n, "ack counters account for the whole batch: {ack}");
+
+        // A's connection reaches EOF once the server wound down.
+        let mut tail = String::new();
+        while ra.read_line(&mut tail).unwrap_or(0) > 0 {}
+        server.join().unwrap();
+    }
 }

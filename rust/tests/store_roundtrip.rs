@@ -1,0 +1,271 @@
+//! Snapshot-store acceptance suite.
+//!
+//! Pins the durability contract of `obc::store`:
+//!
+//! 1. a database build **writes through** to disk and a fresh engine
+//!    (same seed → same calibration fingerprint) **warm-starts** from
+//!    the snapshot without rebuilding, bit-identically to a live build;
+//! 2. every way a snapshot can be wrong — truncated file, flipped
+//!    payload byte, wrong format version, foreign key, stale
+//!    calibration fingerprint — is **rejected** (counted, quarantined)
+//!    and degrades to a live build that is bit-identical to the
+//!    no-store path, including the solver result computed over it;
+//! 3. `db export` / `db import` hand a snapshot between stores with
+//!    full revalidation;
+//! 4. a **restarted server** answers a db-backed job from the store:
+//!    the store-hit counter increments and the build counter does not.
+//!
+//! Everything runs on the synthetic tiny pipeline — no artifacts.
+
+use obc::coordinator::engine::{CompressionEngine, LayerScope};
+use obc::coordinator::jobs::{self, DbKind, DbSpec, JobResult, JobSpec, TargetKind};
+use obc::coordinator::methods::PruneMethod;
+use obc::db::ModelDb;
+use obc::server::registry::{SYNTHETIC_MODEL, SYNTHETIC_SEED};
+use obc::server::{CompressionServer, ServerConfig};
+use obc::store::{format as snapfmt, SnapshotStore};
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("obc_store_rt_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn spec() -> DbSpec {
+    DbSpec {
+        kind: DbKind::Sparsity,
+        method: PruneMethod::ExactObs,
+        grid: vec![0.0, 0.5, 0.9],
+        scope: LayerScope::All,
+    }
+}
+
+fn engine_with_store(dir: &Path) -> (CompressionEngine, Arc<SnapshotStore>) {
+    let engine = CompressionEngine::synthetic(SYNTHETIC_SEED).unwrap();
+    let store = Arc::new(SnapshotStore::open(dir).unwrap());
+    engine.attach_store(Arc::clone(&store));
+    (engine, store)
+}
+
+/// Full bit-level identity of a database: (layer, level-key, weight
+/// bits, sq_err bits) in iteration order.
+fn db_bits(db: &ModelDb) -> Vec<(String, String, Vec<u32>, u64)> {
+    db.entries()
+        .map(|e| {
+            (
+                e.layer.clone(),
+                e.level.key(),
+                e.w.iter().map(|v| v.to_bits()).collect(),
+                e.sq_err.to_bits(),
+            )
+        })
+        .collect()
+}
+
+/// The no-store reference: a fresh identically-seeded engine building
+/// live. Every degraded path must land on exactly these bits.
+fn reference_db() -> Vec<(String, String, Vec<u32>, u64)> {
+    let engine = CompressionEngine::synthetic(SYNTHETIC_SEED).unwrap();
+    let (db, _) = jobs::db_for_spec(&engine, &spec()).unwrap();
+    db_bits(&db)
+}
+
+#[test]
+fn write_through_then_warm_start_bit_identical() {
+    let dir = tmp_dir("warm");
+    // Build live (write-through).
+    let (e1, s1) = engine_with_store(&dir);
+    let (db1, cached) = jobs::db_for_spec(&e1, &spec()).unwrap();
+    assert!(!cached);
+    assert_eq!(e1.db_builds(), 1, "live build counted");
+    let st = s1.stats();
+    assert_eq!((st.hits, st.misses, st.saves), (0, 1, 1), "{st:?}");
+
+    // "Restart": fresh engine, fresh store handle, same directory.
+    let (e2, s2) = engine_with_store(&dir);
+    let (db2, _) = jobs::db_for_spec(&e2, &spec()).unwrap();
+    assert_eq!(e2.db_builds(), 0, "warm start is NOT a build");
+    let st2 = s2.stats();
+    assert_eq!((st2.hits, st2.misses, st2.stale_rejected), (1, 0, 0), "{st2:?}");
+    assert!(st2.load_seconds >= 0.0);
+
+    // Snapshot == live build == no-store reference, bit for bit.
+    assert_eq!(db_bits(&db1), db_bits(&db2), "warm-started db diverged");
+    assert_eq!(db_bits(&db2), reference_db(), "snapshot path diverged from no-store path");
+
+    // And the solver over the warm-started db answers identically too.
+    let solve = |e: &CompressionEngine| {
+        let r = jobs::execute(
+            e,
+            &JobSpec::Solve { db: spec(), target: TargetKind::Flop, value: 1.5 },
+        )
+        .unwrap();
+        match r {
+            JobResult::Solved { metric, achieved, .. } => (metric.to_bits(), achieved.to_bits()),
+            other => panic!("expected Solved, got {other:?}"),
+        }
+    };
+    let fresh = CompressionEngine::synthetic(SYNTHETIC_SEED).unwrap();
+    assert_eq!(solve(&e2), solve(&fresh), "solve over snapshot differs from live");
+}
+
+/// Every corruption mode falls back to a live build that is
+/// bit-identical to the no-store path, with the file quarantined and
+/// the stale-rejected counter bumped.
+#[test]
+fn corrupt_snapshots_degrade_to_bit_identical_live_builds() {
+    // Build one pristine snapshot to mutate.
+    let pristine_dir = tmp_dir("corrupt_pristine");
+    let (e0, s0) = engine_with_store(&pristine_dir);
+    jobs::db_for_spec(&e0, &spec()).unwrap();
+    let pristine_path = s0.snapshot_path(&e0.snapshot_key(&spec().cache_key()));
+    let pristine = std::fs::read(&pristine_path).unwrap();
+    let reference = reference_db();
+
+    let cases: Vec<(&str, Vec<u8>)> = vec![
+        ("truncated", pristine[..pristine.len() / 2].to_vec()),
+        ("crc_flip", {
+            let mut b = pristine.clone();
+            let at = b.len() - 8; // inside the last entry's payload
+            b[at] ^= 0x40;
+            b
+        }),
+        ("bad_version", {
+            let mut b = pristine.clone();
+            b[4] = 99;
+            b
+        }),
+        ("bad_magic", {
+            let mut b = pristine.clone();
+            b[0] = b'X';
+            b
+        }),
+    ];
+    for (name, bytes) in cases {
+        let dir = tmp_dir(&format!("corrupt_{name}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join(pristine_path.file_name().unwrap());
+        std::fs::write(&file, &bytes).unwrap();
+
+        let (engine, store) = engine_with_store(&dir);
+        let (db, _) = jobs::db_for_spec(&engine, &spec()).unwrap();
+        let st = store.stats();
+        assert_eq!(st.stale_rejected, 1, "{name}: rejection counted ({st:?})");
+        assert_eq!(st.hits, 0, "{name}: corrupt snapshot must not hit");
+        assert_eq!(engine.db_builds(), 1, "{name}: live build ran");
+        // The bad bytes were moved aside for post-mortem; the canonical
+        // path now holds the fresh write-through from the live build.
+        let quarantined = file.with_extension("obcdb.quarantined");
+        assert!(quarantined.exists(), "{name}: rejected snapshot quarantined");
+        assert_eq!(st.saves, 1, "{name}: live build wrote a fresh snapshot through");
+        assert_eq!(db_bits(&db), reference, "{name}: degraded build diverged");
+        // The live build wrote a fresh snapshot through; a re-run on the
+        // same directory now warm-starts.
+        let (e2, s2) = engine_with_store(&dir);
+        jobs::db_for_spec(&e2, &spec()).unwrap();
+        assert_eq!(s2.stats().hits, 1, "{name}: repaired store serves");
+        assert_eq!(e2.db_builds(), 0, "{name}");
+    }
+}
+
+/// A snapshot built under a different calibration (different synthetic
+/// seed → different Hessians → different fingerprint) is stale: it must
+/// be rejected, never served.
+#[test]
+fn stale_calibration_fingerprint_is_rejected() {
+    let dir = tmp_dir("stale_fp");
+    let seed9 = CompressionEngine::synthetic(9).unwrap();
+    let store = Arc::new(SnapshotStore::open(&dir).unwrap());
+    seed9.attach_store(Arc::clone(&store));
+    jobs::db_for_spec(&seed9, &spec()).unwrap();
+
+    // Same model name, same spec → same store key and file name; only
+    // the fingerprint distinguishes the calibrations.
+    let (e1, s1) = engine_with_store(&dir);
+    assert_ne!(
+        e1.calib_fingerprint(),
+        seed9.calib_fingerprint(),
+        "different seeds must fingerprint differently"
+    );
+    let (db, _) = jobs::db_for_spec(&e1, &spec()).unwrap();
+    let st = s1.stats();
+    assert_eq!(st.stale_rejected, 1, "stale snapshot rejected: {st:?}");
+    assert_eq!(st.hits, 0);
+    assert_eq!(e1.db_builds(), 1, "live build replaced the stale snapshot");
+    assert_eq!(db_bits(&db), reference_db(), "fallback bit-identical to no-store");
+}
+
+#[test]
+fn export_import_hands_snapshot_between_stores() {
+    let export_dir = tmp_dir("export");
+    std::fs::create_dir_all(&export_dir).unwrap();
+    let exported = export_dir.join("handoff.obcdb");
+
+    // Export from a store-less engine (what `obc db export` does).
+    let engine = CompressionEngine::synthetic(SYNTHETIC_SEED).unwrap();
+    let (db, _) = jobs::db_for_spec(&engine, &spec()).unwrap();
+    let key = engine.snapshot_key(&spec().cache_key());
+    snapfmt::write_snapshot_file(&exported, &key, engine.calib_fingerprint(), &db).unwrap();
+
+    // Import into a fresh store (what `obc db import` does), then
+    // warm-start a fresh engine from it.
+    let import_dir = tmp_dir("import");
+    let store = SnapshotStore::open(&import_dir).unwrap();
+    let (got_key, entries) = store.import(&exported).unwrap();
+    assert_eq!(got_key, key);
+    assert_eq!(entries, db.len());
+
+    let (e2, s2) = engine_with_store(&import_dir);
+    let (db2, _) = jobs::db_for_spec(&e2, &spec()).unwrap();
+    assert_eq!(e2.db_builds(), 0, "imported snapshot serves without a build");
+    assert_eq!(s2.stats().hits, 1);
+    assert_eq!(db_bits(&db2), db_bits(&db), "imported db bit-identical to exported");
+}
+
+/// The ISSUE acceptance: a server restarted against an existing
+/// snapshot directory answers a db-backed job without rebuilding.
+#[test]
+fn restarted_server_answers_db_job_from_snapshot() {
+    let dir = tmp_dir("server_restart");
+    let cfg = || ServerConfig {
+        workers: 2,
+        queue_cap: 8,
+        models_dir: PathBuf::from("/nonexistent"),
+        synthetic_only: true,
+        store_dir: Some(dir.clone()),
+    };
+    let submit_db_job = |server: &CompressionServer| -> JobResult {
+        let (tx, rx) = mpsc::channel();
+        server
+            .submit(SYNTHETIC_MODEL, JobSpec::BuildDb(spec()), Some("db".into()), tx)
+            .unwrap();
+        rx.recv().unwrap().outcome.unwrap()
+    };
+    let metric = |server: &CompressionServer, k: &str| -> f64 {
+        server.metrics_json().get(k).unwrap().as_f64().unwrap()
+    };
+
+    // Cold process: builds and writes through.
+    let server1 = CompressionServer::start(cfg());
+    let r1 = submit_db_job(&server1);
+    assert!(matches!(r1, JobResult::DbBuilt { cached: false, .. }), "{r1:?}");
+    assert_eq!(metric(&server1, "db_builds"), 1.0);
+    assert_eq!(metric(&server1, "store_saves"), 1.0);
+    assert_eq!(metric(&server1, "store_hits"), 0.0);
+    server1.shutdown();
+
+    // Restarted process: same directory, fresh registry and caches.
+    let server2 = CompressionServer::start(cfg());
+    let r2 = submit_db_job(&server2);
+    let (e1, e2) = match (&r1, &r2) {
+        (JobResult::DbBuilt { entries: a, .. }, JobResult::DbBuilt { entries: b, .. }) => (*a, *b),
+        other => panic!("expected DbBuilt pair, got {other:?}"),
+    };
+    assert_eq!(e1, e2, "same database either way");
+    assert_eq!(metric(&server2, "store_hits"), 1.0, "answered from the snapshot");
+    assert_eq!(metric(&server2, "db_builds"), 0.0, "no rebuild after restart");
+    assert_eq!(metric(&server2, "store_stale_rejected"), 0.0);
+    server2.shutdown();
+}

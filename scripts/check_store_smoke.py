@@ -1,0 +1,68 @@
+#!/usr/bin/env python3
+"""Validate the store-smoke transcripts (see `make store-smoke`).
+
+Two serve runs over a snapshot store bracket an export/import handoff:
+
+* cold.out — fresh store: the db job must BUILD live (db_builds=1) and
+  write the snapshot through (store_saves=1, store_hits=0);
+* warm.out — restarted over the imported store: the same db job (and a
+  solve over the same spec) must be answered WARM — store_hits=1 and
+  db_builds=0, proving the restart never rebuilt.
+
+Every line must be valid JSON; the final line of each run is the
+post-drain shutdown ack carrying the counters.
+"""
+import json
+import sys
+
+cold_path = sys.argv[1] if len(sys.argv) > 1 else "target/store_smoke/cold.out"
+warm_path = sys.argv[2] if len(sys.argv) > 2 else "target/store_smoke/warm.out"
+
+
+def load(path):
+    lines = [l for l in open(path).read().splitlines() if l.strip()]
+    assert lines, f"{path} is empty"
+    docs = []
+    for l in lines:
+        try:
+            docs.append(json.loads(l))
+        except json.JSONDecodeError as e:
+            raise SystemExit(f"{path}: invalid JSON line {l!r}: {e}")
+    ack = docs[-1]
+    assert ack.get("op") == "shutdown" and ack.get("ok") is True, (path, ack)
+    return docs, ack
+
+
+cold, cold_ack = load(cold_path)
+warm, warm_ack = load(warm_path)
+cold_by_id = {d["id"]: d for d in cold if "id" in d}
+warm_by_id = {d["id"]: d for d in warm if "id" in d}
+
+# Cold: the db job built live and wrote through.
+b1 = cold_by_id.get("b1")
+assert b1 is not None and b1["ok"] is True, cold
+assert b1["entries"] > 0, b1
+assert cold_ack["db_builds"] == 1, cold_ack
+assert cold_ack["store_saves"] == 1, cold_ack
+assert cold_ack["store_hits"] == 0, cold_ack
+assert cold_ack["store_stale_rejected"] == 0, cold_ack
+
+# Warm: restarted over the imported store — answered from the snapshot.
+b2 = warm_by_id.get("b2")
+s1 = warm_by_id.get("s1")
+assert b2 is not None and b2["ok"] is True, warm
+assert s1 is not None and s1["ok"] is True, warm
+assert b2["entries"] == b1["entries"], (b1, b2)
+assert s1.get("achieved", 0) >= 1.0, s1
+assert warm_ack["store_hits"] == 1, warm_ack
+assert warm_ack["db_builds"] == 0, warm_ack
+assert warm_ack["store_stale_rejected"] == 0, warm_ack
+assert warm_ack["store_load_seconds_total"] >= 0.0, warm_ack
+
+print(
+    f"store-smoke OK: cold built {b1['entries']} entries "
+    f"({cold_ack['store_saves']} snapshot saved), warm served "
+    f"{b2['entries']} entries from the store "
+    f"(hits={warm_ack['store_hits']}, builds={warm_ack['db_builds']}, "
+    f"load={warm_ack['store_load_seconds_total']:.3f}s)"
+)
