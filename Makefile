@@ -22,9 +22,12 @@ bench:
 bench-json: bench
 
 # Tiny-size release run for CI: same cases, same assertions
-# (bit-identity + zero-alloc), seconds of wall clock.
+# (bit-identity + zero-alloc), seconds of wall clock — then validate
+# both the committed placeholder/trajectory JSON and the smoke artifact
+# (rank-B cases present + measured, blocked sweep beats/ties rank-1).
 bench-smoke:
 	OBC_BENCH_SMOKE=1 $(CARGO) bench --bench perf_kernels
+	python3 scripts/check_bench_kernels.py BENCH_kernels.json BENCH_kernels.smoke.json
 
 # Serving throughput report (jobs/sec, single-flight calibration count)
 # on the synthetic model — writes BENCH_serve.json at the repo root.

@@ -34,6 +34,7 @@ struct Sizes {
     hess_d: usize,
     hess_n: usize,
     sweep_ds: Vec<usize>,
+    rankb_d: usize,
     prune_rows: usize,
     prune_d: usize,
     obq_rows: usize,
@@ -50,6 +51,7 @@ fn sizes() -> Sizes {
             hess_d: 48,
             hess_n: 96,
             sweep_ds: vec![24],
+            rankb_d: 96,
             prune_rows: 8,
             prune_d: 24,
             obq_rows: 4,
@@ -64,6 +66,7 @@ fn sizes() -> Sizes {
             hess_d: 288,
             hess_n: 1024,
             sweep_ds: vec![72, 144, 288],
+            rankb_d: 288,
             prune_rows: 512,
             prune_d: 288,
             obq_rows: 32,
@@ -144,6 +147,56 @@ fn main() {
         report.case(&rs);
         report.case(&ar);
         report.derived(&format!("speedup_obs_sweep_row_d{d}"), rs.min_s / ar.min_s.max(1e-12));
+    }
+
+    // ---- Rank-B lazy-batch sweep: the rank-1 arena engine vs B ∈ {8, 32}
+    // on the same full-depth row sweep. The rank-1 downdate streams H⁻¹
+    // once per step at ~2 flops per 8 loaded bytes; the rank-B flush
+    // reuses each H⁻¹ row across B panel rows (GEMM-shaped), so the win
+    // grows with B until the panel falls out of L1 (README "Performance
+    // model" records the measured crossover).
+    if selected(&format!("obs_sweep_row_d{}_rankb", sz.rankb_d)) {
+        let d = sz.rankb_d;
+        let h = LayerHessian::synthetic(d, 4 + d as u64);
+        let w = Mat::randn(1, d, 5 + d as u64);
+        let mut s = Scratch::new();
+        sweep::prune_sweep(&mut s, w.row(0), &h.hinv, d, |_, _| true).unwrap(); // warmup
+        let base = bench(&format!("obs_sweep_row_d{d}_rank1base"), 1, sz.iters, || {
+            sweep::prune_sweep(&mut s, w.row(0), &h.hinv, d, |_, _| true).unwrap();
+            std::hint::black_box(s.out()[0]);
+        });
+        if let Some(allocs) = base.allocs_per_iter {
+            assert_eq!(allocs, 0.0, "steady-state rank-1 sweep must not allocate");
+        }
+        report.case(&base);
+        let order1 = s.trace_order.clone();
+        let dloss1 = s.trace_dloss.clone();
+        for b in [8usize, 32] {
+            // Warmup grows the panel buffers (ensure_batch).
+            sweep::prune_sweep_batched(&mut s, w.row(0), &h.hinv, d, b, |_, _| true).unwrap();
+            let st = bench(&format!("obs_sweep_row_d{d}_rankB{b}"), 1, sz.iters, || {
+                sweep::prune_sweep_batched(&mut s, w.row(0), &h.hinv, d, b, |_, _| true)
+                    .unwrap();
+                std::hint::black_box(s.out()[0]);
+            });
+            if let Some(allocs) = st.allocs_per_iter {
+                assert_eq!(allocs, 0.0, "steady-state rank-{b} sweep must not allocate");
+            }
+            // Batching reorders arithmetic, never selection: identical
+            // elimination order, per-step losses within tolerance.
+            assert_eq!(s.trace_order, order1, "rank-{b} changed the elimination order");
+            for (i, (&a, &r)) in s.trace_dloss.iter().zip(&dloss1).enumerate() {
+                assert!(
+                    (a - r).abs() <= 1e-9 * (1.0 + r.abs()),
+                    "rank-{b} dloss {i} drifted: {a} vs {r}"
+                );
+            }
+            report.case(&st);
+            report.derived(
+                &format!("speedup_obs_sweep_row_d{d}_rankB{b}"),
+                base.min_s / st.min_s.max(1e-12),
+            );
+        }
     }
 
     // ---- Group-OBS reconstruction at 80% sparsity: ref vs arena.

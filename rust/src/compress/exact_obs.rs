@@ -41,11 +41,18 @@ pub struct ObsOpts {
     /// losses grow monotonically; capping saves ~(1-cap)·d_row·d_col³ work.
     /// 1.0 reproduces the textbook full sweep.
     pub trace_cap: f64,
+    /// Rank-B lazy-batch size for the per-row sweeps
+    /// ([`sweep::prune_sweep_batched`]). 1 (the default) is the exact
+    /// rank-1 path, bit-identical to the reference kernels; larger
+    /// values batch B eliminations per H⁻¹ pass (tolerance-pinned, see
+    /// the sweep module docs). The engine wires this to
+    /// [`sweep::configured_batch`] (`OBC_SWEEP_BATCH`).
+    pub batch: usize,
 }
 
 impl Default for ObsOpts {
     fn default() -> ObsOpts {
-        ObsOpts { trace_cap: 1.0 }
+        ObsOpts { trace_cap: 1.0, batch: 1 }
     }
 }
 
@@ -224,13 +231,14 @@ pub fn sweep_all_rows_on(
     let d = w.cols;
     let cap = (((d as f64) * opts.trace_cap).ceil() as usize).min(d);
     let rows = w.rows;
+    let batch = opts.batch;
     let wa = Arc::new(w.clone());
     sweep::run_with_redamp(hess, "ExactOBS row sweeps", move |h| {
         let wa = Arc::clone(&wa);
         let hinv = Arc::new(h.hinv.clone());
         pool.par_map(rows, move |r| {
             scratch::with(|s| {
-                sweep::prune_sweep(s, wa.row(r), &hinv, cap, |_, _| true)?;
+                sweep::prune_sweep_batched(s, wa.row(r), &hinv, cap, batch, |_, _| true)?;
                 Ok(RowTrace { order: s.trace_order.clone(), dloss: s.trace_dloss.clone() })
             })
         })
@@ -386,17 +394,32 @@ fn reconstruct_rows_on(
 /// to blocks that still have fewer than M−N pruned weights; every row
 /// reaches sparsity (M−N)/M, so no global step is needed (Section 4).
 pub fn prune_nm(w: &Mat, hess: &LayerHessian, n_keep: usize, m: usize) -> CompressResult {
-    prune_nm_on(pool::global(), w, hess, n_keep, m)
+    prune_nm_batched_on(pool::global(), w, hess, n_keep, m, sweep::configured_batch())
 }
 
 /// [`prune_nm`] on an explicit pool: every row's Algorithm-1 sweep (with
-/// the block-eligibility rule) is an independent arena job.
+/// the block-eligibility rule) is an independent arena job. Exact
+/// rank-1 path (batch = 1).
 pub fn prune_nm_on(
     pool: &ThreadPool,
     w: &Mat,
     hess: &LayerHessian,
     n_keep: usize,
     m: usize,
+) -> CompressResult {
+    prune_nm_batched_on(pool, w, hess, n_keep, m, 1)
+}
+
+/// [`prune_nm_on`] with an explicit rank-B batch size (1 = exact rank-1
+/// path; >1 = lazy-batched, tolerance-pinned). The engine passes
+/// [`sweep::configured_batch`] here.
+pub fn prune_nm_batched_on(
+    pool: &ThreadPool,
+    w: &Mat,
+    hess: &LayerHessian,
+    n_keep: usize,
+    m: usize,
+    batch: usize,
 ) -> CompressResult {
     assert!(n_keep < m && n_keep > 0, "need 0 < N < M");
     let d = w.cols;
@@ -415,8 +438,9 @@ pub fn prune_nm_on(
                 let k = full * prune_per_block + (tail * prune_per_block) / m;
                 // Eligibility reads the live `alive` mask: a weight may be
                 // pruned only while its block still has fewer than M−N
-                // dead weights.
-                sweep::prune_sweep(s, wa.row(r), &hinv, k, |p, alive| {
+                // dead weights (staged-dead counts immediately, so the
+                // rule holds within a rank-B batch too).
+                sweep::prune_sweep_batched(s, wa.row(r), &hinv, k, batch, |p, alive| {
                     let b = p / m;
                     let end = ((b + 1) * m).min(d);
                     let dead = (b * m..end).filter(|&i| !alive[i]).count();
@@ -963,7 +987,7 @@ mod tests {
     #[test]
     fn trace_cap_limits_depth() {
         let (w, h) = setup(2, 16, 23);
-        let traces = sweep_all_rows(&w, &h, &ObsOpts { trace_cap: 0.5 });
+        let traces = sweep_all_rows(&w, &h, &ObsOpts { trace_cap: 0.5, batch: 1 });
         assert!(traces.iter().all(|t| t.order.len() == 8));
     }
 

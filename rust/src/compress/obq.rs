@@ -28,11 +28,22 @@ pub struct ObqOpts {
     pub search: GridSearch,
     /// Enable the Δ/2 outlier heuristic (paper default: on).
     pub outlier_heuristic: bool,
+    /// Lazy-batch width for the elimination sweep. `1` (the default when
+    /// `OBC_SWEEP_BATCH` is unset) runs the bit-pinned rank-1 path; larger
+    /// values stage up to `batch` eliminations and apply them to H⁻¹ as one
+    /// rank-B update (tolerance-pinned, same elimination order).
+    pub batch: usize,
 }
 
 impl ObqOpts {
     pub fn new(bits: u32) -> ObqOpts {
-        ObqOpts { bits, symmetric: false, search: GridSearch::default(), outlier_heuristic: true }
+        ObqOpts {
+            bits,
+            symmetric: false,
+            search: GridSearch::default(),
+            outlier_heuristic: true,
+            batch: sweep::configured_batch(),
+        }
     }
 
     pub fn symmetric(bits: u32) -> ObqOpts {
@@ -150,13 +161,14 @@ pub fn quantize_with_grids_on(
     let wa = Arc::new(w.clone());
     let grids: Arc<Vec<Grid>> = Arc::new(grids.to_vec());
     let outlier = opts.outlier_heuristic;
+    let batch = opts.batch;
     let new_rows = sweep::run_with_redamp(hess, "OBQ quantization sweeps", move |h| {
         let wa = Arc::clone(&wa);
         let grids = Arc::clone(&grids);
         let hinv = Arc::new(h.hinv.clone());
         pool.par_map(rows, move |r| {
             scratch::with(|s| {
-                sweep::quant_sweep(s, wa.row(r), &hinv, &grids[r], outlier)?;
+                sweep::quant_sweep_batched(s, wa.row(r), &hinv, &grids[r], outlier, batch)?;
                 Ok(s.out()[..d].to_vec())
             })
         })
@@ -221,13 +233,14 @@ pub fn quantize_sparse_on(
     let wa = Arc::new(w.clone());
     let grids = Arc::new(grids);
     let outlier = opts.outlier_heuristic;
+    let batch = opts.batch;
     let new_rows = sweep::run_with_redamp(hess, "sparse OBQ sweeps", move |h| {
         let wa = Arc::clone(&wa);
         let grids = Arc::clone(&grids);
         let hinv = Arc::new(h.hinv.clone());
         pool.par_map(rows, move |r| {
             scratch::with(|s| {
-                sweep::quant_sweep_sparse(s, wa.row(r), &hinv, &grids[r], outlier)?;
+                sweep::quant_sweep_sparse_batched(s, wa.row(r), &hinv, &grids[r], outlier, batch)?;
                 Ok(s.out()[..d].to_vec())
             })
         })
@@ -367,8 +380,13 @@ mod tests {
         let (w, h) = setup(1, 10, 2);
         let zero_grid = Grid { scale: 1e30, zero: 0.0, maxq: 0.0 };
         // quant(w) = scale*(clamp(round(w/scale)+0,0,0)-0) = 0 for all w.
-        let opts =
-            ObqOpts { bits: 1, symmetric: false, search: GridSearch::MinMax, outlier_heuristic: false };
+        let opts = ObqOpts {
+            bits: 1,
+            symmetric: false,
+            search: GridSearch::MinMax,
+            outlier_heuristic: false,
+            batch: 1,
+        };
         let q = quantize_row(w.row(0), &h.hinv, &zero_grid, &opts);
         assert!(q.iter().all(|&v| v == 0.0));
         // Pruning everything also gives all-zeros; more interestingly, the

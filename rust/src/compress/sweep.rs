@@ -36,6 +36,31 @@
 //! by re-dampening H (×10 escalation, mirroring
 //! `HessianAccumulator::finalize`) and re-running the layer, instead of
 //! silently emitting garbage compensations.
+//!
+//! ## Rank-B lazy batching
+//!
+//! The rank-1 step streams all of the live H⁻¹ once per elimination —
+//! ~2 flops per 8 loaded bytes, memory-bound as soon as the compacted
+//! inverse falls out of cache. The `*_batched` sweeps instead **stage**
+//! up to B eliminations against one frozen compacted state: each staged
+//! step computes its *effective* pivot row
+//!
+//! ```text
+//! p_s = H⁻¹[q_s,:] − Σ_{r<s} (p_r[q_s]/d_r)·p_r      (panel recurrence)
+//! ```
+//!
+//! into a scratch panel, applies the weight compensation eagerly
+//! (selection needs live weights) and maintains the live diagonal
+//! lazily — but defers the O(m²) trailing downdate. A **flush** then
+//! applies all B downdates as one rank-B pass (`h[r,:] −= Σ_s
+//! (p_s[r]/d_s)·p_s[:]` — GEMM-shaped: every H⁻¹ row is read once per
+//! *batch* instead of once per *step*, and the B panel rows stay
+//! cache-hot) fused with a single row/column compaction. `batch ≤ 1`
+//! delegates to the rank-1 functions above, so the exactness contract
+//! (bit-identity with the reference kernels) is preserved at B=1; B>1
+//! legitimately reassociates the update arithmetic and is pinned to the
+//! golden fixtures / python f64 mirror at 1e-6 instead
+//! (`rust/tests/arena_sweeps.rs`, `tests/kernel_conformance.rs`).
 
 use super::hessian::LayerHessian;
 use super::quant::Grid;
@@ -44,8 +69,12 @@ use crate::util::logging::{self, Level};
 use crate::util::scratch::Scratch;
 
 /// A sweep step found a non-positive (or non-finite) [H⁻¹]ₚₚ: the
-/// working inverse is no longer numerically SPD. `diag` is NaN when a
-/// group-formula Cholesky failed instead of a scalar diagonal.
+/// working inverse is no longer numerically SPD. For group-formula
+/// failures `index` is the original column gathered into the Cholesky
+/// row that went non-positive, and `diag` its reduced diagonal
+/// (`a(i,i) − Σ l²`, finite-negative for an indefinite gather, NaN only
+/// when the inputs themselves were NaN) — so redamp warning logs name
+/// the real culprit, not just the first member of the group.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NonSpd {
     /// Original column index at which corruption was detected.
@@ -315,11 +344,343 @@ fn quant_sweep_core(
     Ok(())
 }
 
+/// Rank-B batch size for engine-level sweeps, read once from the
+/// `OBC_SWEEP_BATCH` environment variable. Unset, unparsable or zero
+/// values all mean 1 — the exact rank-1 path, bit-identical to the
+/// reference kernels — so batching is a strictly opt-in throughput knob
+/// for production serving, never a silent accuracy change.
+pub fn configured_batch() -> usize {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static BATCH: AtomicUsize = AtomicUsize::new(0);
+    let b = BATCH.load(Ordering::Relaxed);
+    if b != 0 {
+        return b;
+    }
+    let v = std::env::var("OBC_SWEEP_BATCH")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&b| b >= 1)
+        .unwrap_or(1);
+    BATCH.store(v, Ordering::Relaxed);
+    v
+}
+
+/// Start a rank-B batch against the current compacted state (`m` live):
+/// snapshot the live diagonal — maintained lazily while steps are
+/// staged — and clear the staged-position list. The compacted H⁻¹,
+/// `live` list and stride `m` are all frozen until [`batch_flush`].
+/// Caller must have sized the workspace with `Scratch::ensure_batch`.
+fn batch_begin(s: &mut Scratch, m: usize) {
+    for i in 0..m {
+        s.bdiag[i] = s.hinv[i * m + i];
+    }
+    s.bq.clear();
+}
+
+/// Stage one elimination of compacted position `q` into the current
+/// batch: materialize its *effective* pivot row under the already-staged
+/// panel (`p_s = H⁻¹[q,:] − Σ_{r<s} (p_r[q]/d_r)·p_r`), apply the OBS
+/// weight compensation eagerly (`w −= f·p_s`, skipped when `compensate`
+/// is false), update the lazy diagonal (`diag[j] −= p_s[j]²/d_s`), and
+/// mark `q` dead for this batch. The O(m²) trailing downdate of H⁻¹ is
+/// deferred to [`batch_flush`].
+fn batch_stage(s: &mut Scratch, m: usize, q: usize, f: f64, compensate: bool) {
+    let blen = s.bq.len();
+    debug_assert!(q < m && s.alive[s.live[q]]);
+    {
+        let (head, cur) = s.panel.split_at_mut(blen * m);
+        let prow = &mut cur[..m];
+        prow.copy_from_slice(&s.hinv[q * m..(q + 1) * m]);
+        for (r, &inv_d) in s.pfac[..blen].iter().enumerate() {
+            let pr = &head[r * m..(r + 1) * m];
+            let c = pr[q];
+            if c != 0.0 {
+                let fr = c * inv_d;
+                for (x, &pv) in prow.iter_mut().zip(pr.iter()) {
+                    *x -= fr * pv;
+                }
+            }
+        }
+    }
+    // d_s is the lazily-maintained diagonal — the exact value selection
+    // scored with (prow[q] equals it only up to rounding).
+    let inv_d = 1.0 / s.bdiag[q];
+    let prow = &s.panel[blen * m..(blen + 1) * m];
+    if compensate {
+        for (wj, &pj) in s.w[..m].iter_mut().zip(prow.iter()) {
+            *wj -= f * pj;
+        }
+    }
+    for (dj, &pj) in s.bdiag[..m].iter_mut().zip(prow.iter()) {
+        *dj -= (pj * inv_d) * pj;
+    }
+    s.pfac[blen] = inv_d;
+    let p = s.live[q];
+    s.alive[p] = false;
+    s.bq.push(q);
+}
+
+/// Apply every staged downdate to the compacted H⁻¹ as **one rank-B
+/// pass** fused with the row/column compaction, then rebuild the live
+/// list. Per surviving row `r`: accumulate `delta[j] = Σ_s
+/// (p_s[r]/d_s)·p_s[j]` (panel rows walked pairwise — contiguous axpys
+/// the compiler maps onto f64x4 lanes; this is the tolerance-pinned B>1
+/// path, so the pairwise reassociation is deliberate), then write the
+/// compacted row `h'[dr] = h[r] − delta` over surviving columns only.
+/// In place is safe: destination `dr·nm + jc` never exceeds source
+/// `r·m + j` (`dr ≤ r`, `nm < m`, `jc ≤ j`). Returns the new live count.
+fn batch_flush(s: &mut Scratch, m: usize) -> usize {
+    let blen = s.bq.len();
+    debug_assert!(blen > 0 && blen <= m);
+    let nm = m - blen;
+    s.bq.sort_unstable();
+    {
+        let Scratch { hinv, panel, pfac, pdelta, w, bq, .. } = s;
+        let mut dr = 0usize;
+        let mut rdead = 0usize;
+        for r in 0..m {
+            if rdead < blen && bq[rdead] == r {
+                rdead += 1;
+                continue;
+            }
+            for v in pdelta[..m].iter_mut() {
+                *v = 0.0;
+            }
+            let mut sx = 0usize;
+            while sx + 2 <= blen {
+                let (p0, rest) = panel[sx * m..].split_at(m);
+                let p1 = &rest[..m];
+                let f0 = p0[r] * pfac[sx];
+                let f1 = p1[r] * pfac[sx + 1];
+                for ((v, &a), &b) in pdelta[..m].iter_mut().zip(p0.iter()).zip(p1.iter()) {
+                    *v += f0 * a + f1 * b;
+                }
+                sx += 2;
+            }
+            if sx < blen {
+                let p0 = &panel[sx * m..sx * m + m];
+                let f0 = p0[r] * pfac[sx];
+                for (v, &a) in pdelta[..m].iter_mut().zip(p0.iter()) {
+                    *v += f0 * a;
+                }
+            }
+            let src = r * m;
+            let dst = dr * nm;
+            let mut jc = 0usize;
+            let mut jdead = 0usize;
+            for j in 0..m {
+                if jdead < blen && bq[jdead] == j {
+                    jdead += 1;
+                    continue;
+                }
+                hinv[dst + jc] = hinv[src + j] - pdelta[j];
+                jc += 1;
+            }
+            w[dr] = w[r];
+            dr += 1;
+        }
+        debug_assert_eq!(dr, nm);
+    }
+    // Drop the batch's positions from the live list (descending keeps
+    // the remaining ascending indices valid).
+    for i in (0..s.bq.len()).rev() {
+        s.live.remove(s.bq[i]);
+    }
+    s.bq.clear();
+    nm
+}
+
+/// [`prune_sweep`] with rank-B lazy batching: stage up to `batch`
+/// eliminations per [`batch_flush`]. `batch ≤ 1` delegates to the exact
+/// rank-1 path (bit-identical to the reference kernels); `batch > 1`
+/// reassociates the downdate arithmetic and is tolerance-pinned against
+/// the golden fixtures instead. Selection semantics (argmin order,
+/// eligibility, N:M saturation) are unchanged: staged-dead positions
+/// are excluded exactly as physically-removed ones are in the rank-1
+/// path.
+pub fn prune_sweep_batched(
+    s: &mut Scratch,
+    w_in: &[f64],
+    hinv: &Mat,
+    k: usize,
+    batch: usize,
+    mut eligible: impl FnMut(usize, &[bool]) -> bool,
+) -> Result<(), NonSpd> {
+    if batch <= 1 {
+        return prune_sweep(s, w_in, hinv, k, eligible);
+    }
+    let d = begin(s, w_in, hinv);
+    s.ensure_batch(batch.min(d), d);
+    let mut m = d;
+    let mut remaining = k.min(d);
+    while remaining > 0 && m > 0 {
+        batch_begin(s, m);
+        let bcap = batch.min(remaining).min(m);
+        let mut exhausted = false;
+        while s.bq.len() < bcap {
+            let mut best = usize::MAX;
+            let mut best_score = f64::INFINITY;
+            {
+                let alive = &s.alive[..d];
+                for (i, &p) in s.live.iter().enumerate() {
+                    if !alive[p] || !eligible(p, alive) {
+                        continue;
+                    }
+                    let diag = spd_diag(s.bdiag[i], p)?;
+                    let score = s.w[i] * s.w[i] / diag;
+                    if score < best_score {
+                        best_score = score;
+                        best = i;
+                    }
+                }
+            }
+            if best == usize::MAX {
+                exhausted = true; // no eligible weight left (N:M saturated)
+                break;
+            }
+            let q = best;
+            let p = s.live[q];
+            let f = s.w[q] / s.bdiag[q];
+            s.trace_order.push(p);
+            s.trace_dloss.push(0.5 * best_score);
+            s.out[p] = 0.0;
+            batch_stage(s, m, q, f, true);
+            remaining -= 1;
+        }
+        if !s.bq.is_empty() {
+            m = batch_flush(s, m);
+        }
+        if exhausted {
+            break;
+        }
+    }
+    scatter(s, m);
+    Ok(())
+}
+
+/// [`quant_sweep`] with rank-B lazy batching (see
+/// [`prune_sweep_batched`] for the exactness contract).
+pub fn quant_sweep_batched(
+    s: &mut Scratch,
+    w_in: &[f64],
+    hinv: &Mat,
+    grid: &Grid,
+    outlier_heuristic: bool,
+    batch: usize,
+) -> Result<(), NonSpd> {
+    if batch <= 1 {
+        return quant_sweep(s, w_in, hinv, grid, outlier_heuristic);
+    }
+    let d = begin(s, w_in, hinv);
+    s.ensure_batch(batch.min(d), d);
+    quant_sweep_core_batched(s, d, grid, outlier_heuristic, batch)
+}
+
+/// [`quant_sweep_sparse`] with rank-B lazy batching: the zero positions
+/// are pre-eliminated in rank-B batches too (pure downdates, no
+/// compensation) before the batched quantization loop runs.
+pub fn quant_sweep_sparse_batched(
+    s: &mut Scratch,
+    w_in: &[f64],
+    hinv: &Mat,
+    grid: &Grid,
+    outlier_heuristic: bool,
+    batch: usize,
+) -> Result<(), NonSpd> {
+    if batch <= 1 {
+        return quant_sweep_sparse(s, w_in, hinv, grid, outlier_heuristic);
+    }
+    let d = begin(s, w_in, hinv);
+    s.ensure_batch(batch.min(d), d);
+    let mut m = d;
+    let mut p = 0usize;
+    while p < d {
+        batch_begin(s, m);
+        let bcap = batch.min(m.max(1));
+        while p < d && s.bq.len() < bcap {
+            if w_in[p] == 0.0 {
+                // `live` is ascending originals and frozen during a
+                // batch, so the compacted position is a binary search
+                // away. `begin` copied the zero into `out` already.
+                let q = s.live.binary_search(&p).expect("zero position must be live");
+                batch_stage(s, m, q, 0.0, false);
+            }
+            p += 1;
+        }
+        if !s.bq.is_empty() {
+            m = batch_flush(s, m);
+        }
+    }
+    quant_sweep_core_batched(s, m, grid, outlier_heuristic, batch)
+}
+
+/// The OBQ per-step loop with rank-B staging on an already-prepared
+/// compacted state: same selection rules as [`quant_sweep_core`]
+/// (outlier-Δ/2 worst-first, then argmin e²/diag), with staged-dead
+/// positions excluded from both scans.
+fn quant_sweep_core_batched(
+    s: &mut Scratch,
+    mut m: usize,
+    grid: &Grid,
+    outlier_heuristic: bool,
+    batch: usize,
+) -> Result<(), NonSpd> {
+    let half_delta = grid.delta() / 2.0;
+    while m > 0 {
+        batch_begin(s, m);
+        let bcap = batch.min(m);
+        while s.bq.len() < bcap {
+            let mut q = usize::MAX;
+            if outlier_heuristic {
+                let mut worst = half_delta;
+                for i in 0..m {
+                    if !s.alive[s.live[i]] {
+                        continue;
+                    }
+                    let wi = s.w[i];
+                    let e = (grid.quant(wi) - wi).abs();
+                    if e > worst {
+                        worst = e;
+                        q = i;
+                    }
+                }
+            }
+            if q == usize::MAX {
+                let mut best = f64::INFINITY;
+                for i in 0..m {
+                    if !s.alive[s.live[i]] {
+                        continue;
+                    }
+                    let wi = s.w[i];
+                    let e = grid.quant(wi) - wi;
+                    let diag = spd_diag(s.bdiag[i], s.live[i])?;
+                    let score = e * e / diag;
+                    if score < best {
+                        best = score;
+                        q = i;
+                    }
+                }
+            }
+            debug_assert!(q != usize::MAX);
+            let wq = s.w[q];
+            let qv = grid.quant(wq);
+            let diag = spd_diag(s.bdiag[q], s.live[q])?;
+            let f = (wq - qv) / diag;
+            s.out[s.live[q]] = qv;
+            batch_stage(s, m, q, f, true);
+        }
+        m = batch_flush(s, m);
+    }
+    Ok(())
+}
+
 /// In-place Cholesky on an n×n row-major slice, mirroring
 /// [`crate::linalg::cholesky`]'s reduction order exactly (bit-identical
 /// L in the lower triangle; the strict upper triangle is left stale and
-/// never read). Returns false when the matrix is not numerically SPD.
-fn chol_in_place(a: &mut [f64], n: usize) -> bool {
+/// never read). On a non-positive pivot returns `Err((row, diag))` —
+/// the failing row and its offending reduced diagonal — so callers
+/// factoring gathered submatrices can name the true culprit column.
+fn chol_in_place(a: &mut [f64], n: usize) -> Result<(), (usize, f64)> {
     for i in 0..n {
         for j in 0..i {
             let mut acc = a[i * n + j];
@@ -333,11 +694,11 @@ fn chol_in_place(a: &mut [f64], n: usize) -> bool {
             acc -= a[i * n + k] * a[i * n + k];
         }
         if !(acc > 0.0) {
-            return false;
+            return Err((i, acc));
         }
         a[i * n + i] = acc.sqrt();
     }
-    true
+    Ok(())
 }
 
 /// In-place SPD solve given the in-place factor from [`chol_in_place`],
@@ -383,7 +744,7 @@ pub fn block_sweep(s: &mut Scratch, w_in: &[f64], hinv: &Mat, c: usize, k_blocks
                     s.ga[ri * c + ci] = s.hinv[(base + ri) * m + base + ci];
                 }
             }
-            if !chol_in_place(&mut s.ga, c) {
+            if chol_in_place(&mut s.ga, c).is_err() {
                 continue; // non-SPD block: ineligible this step
             }
             for ri in 0..c {
@@ -454,10 +815,11 @@ pub fn group_reconstruct(
         }
         s.gy[bi] = w[pi];
     }
-    let spd = chol_in_place(&mut s.ga, kp);
-    debug_assert!(spd, "(H⁻¹)_P not SPD — Hessian dampening too small");
-    if !spd {
-        return Err(NonSpd { index: pruned[0], diag: f64::NAN });
+    // Row `row` of the gathered factor corresponds to `pruned[row]`: a
+    // recoverable condition (run_with_redamp retries), so no
+    // debug_assert here — the error must be constructible in tests.
+    if let Err((row, diag)) = chol_in_place(&mut s.ga, kp) {
+        return Err(NonSpd { index: pruned[row], diag });
     }
     chol_solve_in_place(&s.ga, kp, &mut s.gy);
     // δ = −H⁻¹[:, P] · y on every coordinate, then zero the pruned set.
@@ -515,12 +877,12 @@ pub fn prefix_reconstruct_multi(
     s.ensure_group(kmax);
     let mut done = 0usize; // factored prefix rows so far
     for &k in ks {
-        let spd = cholesky_append(&mut s.ga, kmax, done, k, |i, j| {
-            hinv.at(order[i], order[j])
-        });
-        debug_assert!(spd, "(H⁻¹)_P not SPD — Hessian dampening too small");
-        if !spd {
-            return Err(NonSpd { index: order[0], diag: f64::NAN });
+        // Append row `i` gathers from `order[i]` — report that original
+        // index (with the reduced diagonal) if the pivot fails.
+        if let Err(fail) =
+            cholesky_append(&mut s.ga, kmax, done, k, |i, j| hinv.at(order[i], order[j]))
+        {
+            return Err(NonSpd { index: order[fail.row], diag: fail.diag });
         }
         // Extend the forward solution z (prefix-stable, carried in gb)
         // over the new rows, then run only the Θ(k²) backward half on a
@@ -575,22 +937,31 @@ pub fn run_with_redamp<T>(
     }
     let mean_diag = hess.h.diag_mean().abs().max(1e-12);
     let mut extra = (hess.damp * 10.0).max(mean_diag * 1e-10);
+    let mut last_extra = extra;
     for _ in 0..REDAMP_ATTEMPTS {
-        if let Ok(redamped) = hess.redamped(extra) {
-            match f(&redamped) {
+        last_extra = extra;
+        match hess.redamped(extra) {
+            Ok(redamped) => match f(&redamped) {
                 Ok(t) => return t,
                 Err(e) => logging::log(
                     Level::Warn,
                     "sweep",
                     &format!("{what}: still {e} at extra damp {extra:e}"),
                 ),
-            }
+            },
+            // Even re-inverting H + extra·I failed: this escalation
+            // round is burned — say so instead of skipping silently.
+            Err(err) => logging::log(
+                Level::Warn,
+                "sweep",
+                &format!("{what}: re-dampening with extra {extra:e} failed to re-invert: {err}"),
+            ),
         }
         extra *= 10.0;
     }
     panic!(
-        "{what}: H⁻¹ not SPD even after re-dampening ({REDAMP_ATTEMPTS} ×10 escalations) — \
-         calibration data degenerate"
+        "{what}: H⁻¹ not SPD even after re-dampening ({REDAMP_ATTEMPTS} ×10 escalations, final \
+         extra damp {last_extra:e}) — calibration data degenerate"
     );
 }
 
@@ -637,7 +1008,7 @@ mod tests {
         let d = 7;
         let h = layer(d, 5);
         let mut a: Vec<f64> = h.h.data.clone();
-        assert!(chol_in_place(&mut a, d));
+        assert!(chol_in_place(&mut a, d).is_ok());
         let l = cholesky(&h.h).unwrap();
         for i in 0..d {
             for j in 0..=i {
@@ -651,12 +1022,44 @@ mod tests {
         assert_eq!(x, want);
     }
 
+    /// Rejection reports the true failing row and its reduced diagonal.
     #[test]
     fn chol_in_place_rejects_indefinite() {
         let mut a = vec![1.0, 0.0, 0.0, -1.0];
-        assert!(!chol_in_place(&mut a, 2));
+        let (row, diag) = chol_in_place(&mut a, 2).unwrap_err();
+        assert_eq!(row, 1);
+        assert!(diag < 0.0 && diag.is_finite());
         let mut nan = vec![f64::NAN; 4];
-        assert!(!chol_in_place(&mut nan, 2));
+        let (row, diag) = chol_in_place(&mut nan, 2).unwrap_err();
+        assert_eq!(row, 0);
+        assert!(diag.is_nan());
+    }
+
+    /// The `NonSpd` from a failed group Cholesky must name the original
+    /// index actually gathered into the failing row — not the first
+    /// member of the group (the old bug).
+    #[test]
+    fn non_spd_names_true_failing_pivot() {
+        let d = 8;
+        let h = layer(d, 31);
+        let w: Vec<f64> = (0..d).map(|i| i as f64 * 0.4 - 1.3).collect();
+        let mut hinv = h.hinv.clone();
+        *hinv.at_mut(6, 6) = -0.5; // corrupt one diagonal
+        let mut s = Scratch::new();
+        // group_reconstruct: pruned[2] = 6 gathers the corrupt column
+        // into Cholesky row 2; rows 0..1 (indices 1, 4) factor fine.
+        let err = group_reconstruct(&mut s, &w, &hinv, &[1, 4, 6]).unwrap_err();
+        assert_eq!(err.index, 6, "group_reconstruct misattributed: {err}");
+        assert!(err.diag < 0.0 && err.diag.is_finite(), "diag {}", err.diag);
+        // prefix_reconstruct_multi: order[1] = 6 fails the second append
+        // row; level k=1 has already been emitted by then.
+        let mut emitted = Vec::new();
+        let err = prefix_reconstruct_multi(&mut s, &w, &hinv, &[2, 6, 3], &[1, 3], |k, _| {
+            emitted.push(k);
+        })
+        .unwrap_err();
+        assert_eq!(err.index, 6, "prefix_reconstruct_multi misattributed: {err}");
+        assert_eq!(emitted, vec![1]);
     }
 
     /// The damped-retry driver: first attempt fails, a re-dampened
@@ -677,6 +1080,15 @@ mod tests {
     #[test]
     #[should_panic(expected = "not SPD even after re-dampening")]
     fn redamp_retry_gives_up_loudly() {
+        let h = layer(4, 13);
+        run_with_redamp::<()>(&h, "test", |_| Err(NonSpd { index: 0, diag: 0.0 }));
+    }
+
+    /// The give-up panic names the final dampening reached, so the log
+    /// shows how far the escalation actually went before surrendering.
+    #[test]
+    #[should_panic(expected = "final extra damp")]
+    fn redamp_give_up_reports_final_extra() {
         let h = layer(4, 13);
         run_with_redamp::<()>(&h, "test", |_| Err(NonSpd { index: 0, diag: 0.0 }));
     }
@@ -708,6 +1120,95 @@ mod tests {
         for (k, row) in got {
             group_reconstruct(&mut s2, &w, &h.hinv, &order[..k]).unwrap();
             assert_eq!(row, s2.out()[..d].to_vec(), "level k={k} diverged");
+        }
+    }
+
+    /// Rank-B staging + flush must reproduce the rank-1 sweep: identical
+    /// selection order, weights within reassociation tolerance — and the
+    /// B=1 delegation must be bitwise.
+    #[test]
+    fn rank_b_matches_rank1_on_prune_and_quant() {
+        let d = 16;
+        let h = layer(d, 41);
+        let w: Vec<f64> = (0..d).map(|i| ((i * 13 % 7) as f64) * 0.31 - 0.9).collect();
+        let mut s1 = Scratch::new();
+        prune_sweep(&mut s1, &w, &h.hinv, 10, |_, _| true).unwrap();
+        let ref_out = s1.out()[..d].to_vec();
+        let ref_order = s1.trace_order.clone();
+        for b in [2usize, 5, d] {
+            let mut sb = Scratch::new();
+            prune_sweep_batched(&mut sb, &w, &h.hinv, 10, b, |_, _| true).unwrap();
+            assert_eq!(sb.trace_order, ref_order, "B={b} order");
+            for (i, (g, r)) in sb.out()[..d].iter().zip(&ref_out).enumerate() {
+                assert!((g - r).abs() <= 1e-9 * (1.0 + r.abs()), "B={b} w[{i}]: {g} vs {r}");
+            }
+        }
+        let mut sb = Scratch::new();
+        prune_sweep_batched(&mut sb, &w, &h.hinv, 10, 1, |_, _| true).unwrap();
+        assert_eq!(sb.out()[..d], ref_out[..], "B=1 must be bit-identical");
+        assert_eq!(sb.trace_order, ref_order);
+
+        let grid = Grid { scale: 0.21, zero: 7.0, maxq: 15.0 };
+        let mut q1 = Scratch::new();
+        quant_sweep(&mut q1, &w, &h.hinv, &grid, true).unwrap();
+        let qref = q1.out()[..d].to_vec();
+        for b in [2usize, 5, d] {
+            let mut qb = Scratch::new();
+            quant_sweep_batched(&mut qb, &w, &h.hinv, &grid, true, b).unwrap();
+            for (i, (g, r)) in qb.out()[..d].iter().zip(&qref).enumerate() {
+                assert!((g - r).abs() <= 1e-9 * (1.0 + r.abs()), "B={b} q[{i}]: {g} vs {r}");
+            }
+        }
+    }
+
+    /// Sparse rank-B: zeros stay exactly zero, the quantized survivors
+    /// match the rank-1 sparse path.
+    #[test]
+    fn rank_b_sparse_keeps_zeros_and_matches() {
+        let d = 12;
+        let h = layer(d, 43);
+        let mut w: Vec<f64> = (0..d).map(|i| (i as f64) * 0.27 + 0.4).collect();
+        for &z in &[1usize, 4, 5, 9] {
+            w[z] = 0.0;
+        }
+        let grid = Grid { scale: 0.4, zero: 0.0, maxq: 15.0 };
+        let mut s1 = Scratch::new();
+        quant_sweep_sparse(&mut s1, &w, &h.hinv, &grid, false).unwrap();
+        let refq = s1.out()[..d].to_vec();
+        for b in [2usize, 3, d] {
+            let mut sb = Scratch::new();
+            quant_sweep_sparse_batched(&mut sb, &w, &h.hinv, &grid, false, b).unwrap();
+            for &z in &[1usize, 4, 5, 9] {
+                assert_eq!(sb.out()[z], 0.0, "B={b} zero at {z}");
+            }
+            for (i, (g, r)) in sb.out()[..d].iter().zip(&refq).enumerate() {
+                assert!((g - r).abs() <= 1e-9 * (1.0 + r.abs()), "B={b} [{i}]: {g} vs {r}");
+            }
+        }
+    }
+
+    /// N:M eligibility interacts with staging: staged-dead weights count
+    /// against their block within the same batch, so the 2:4 pattern
+    /// holds for any B.
+    #[test]
+    fn rank_b_respects_nm_eligibility() {
+        let d = 16;
+        let h = layer(d, 47);
+        let w: Vec<f64> = (0..d).map(|i| ((i as f64) - 7.3) * 0.21).collect();
+        let nm_elig = |p: usize, alive: &[bool]| {
+            let blk = p / 4;
+            (blk * 4..blk * 4 + 4).filter(|&i| !alive[i]).count() < 2
+        };
+        let mut s1 = Scratch::new();
+        prune_sweep(&mut s1, &w, &h.hinv, d, nm_elig).unwrap();
+        for b in [3usize, 4, d] {
+            let mut sb = Scratch::new();
+            prune_sweep_batched(&mut sb, &w, &h.hinv, d, b, nm_elig).unwrap();
+            assert_eq!(sb.trace_order, s1.trace_order, "B={b}");
+            for blk in 0..4 {
+                let nz = (0..4).filter(|i| sb.out()[blk * 4 + i] != 0.0).count();
+                assert_eq!(nz, 2, "B={b} block {blk}");
+            }
         }
     }
 

@@ -40,6 +40,19 @@
 //! whole multi-level batch, where the per-level path would retry only
 //! the failing level. Both paths recover; they may then differ on that
 //! (degenerate, logged) layer.
+//!
+//! ## Rank-B traces
+//!
+//! The sweeps that *produce* the traces consumed here may run the
+//! lazy-batch engine ([`sweep::prune_sweep_batched`], `OBC_SWEEP_BATCH`
+//! > 1). Batching changes how H⁻¹ downdates are *applied* (one rank-B
+//! update per flush instead of B rank-1 updates), not what is selected:
+//! scores are computed against the lazily-maintained live diagonal, so
+//! the recorded elimination **order** matches the rank-1 sweep and the
+//! trace `scores` differ only by the reassociation tolerance. Prefix
+//! selection and reconstruction below are therefore unchanged — they
+//! see the same nested-prefix structure either way, and reconstruction
+//! re-solves from the exact H⁻¹, not from sweep-time state.
 
 use super::exact_obs::RowTrace;
 use super::hessian::LayerHessian;

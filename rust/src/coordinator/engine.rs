@@ -28,7 +28,7 @@ use super::{calibrate, CalibOpts, LayerHessians};
 use crate::compress::exact_obs::{self, ObsOpts};
 use crate::compress::obq::{self, ObqOpts};
 use crate::compress::{
-    baselines::gmp, layer_sq_err, layer_sq_err_shared, trace_db, CompressResult,
+    baselines::gmp, layer_sq_err, layer_sq_err_shared, sweep, trace_db, CompressResult,
 };
 use crate::cost::{self, Level};
 use crate::db::{Entry, ModelDb};
@@ -595,7 +595,10 @@ impl CompressionEngine {
             match method {
                 PruneMethod::ExactObs => {
                     let max_s = grid.iter().cloned().fold(0.0, f64::max);
-                    let opts = ObsOpts { trace_cap: (max_s + 0.05).min(1.0) };
+                    let opts = ObsOpts {
+                        trace_cap: (max_s + 0.05).min(1.0),
+                        batch: sweep::configured_batch(),
+                    };
                     let traces = exact_obs::sweep_all_rows(&w, &h, &opts);
                     let k_totals: Vec<usize> = grid
                         .iter()
@@ -661,7 +664,8 @@ impl CompressionEngine {
             match method {
                 PruneMethod::ExactObs => {
                     let max_s = grid.iter().cloned().fold(0.0, f64::max);
-                    let opts = ObsOpts { trace_cap: (max_s + 0.05).min(1.0) };
+                    // Reference oracle: always the exact rank-1 path.
+                    let opts = ObsOpts { trace_cap: (max_s + 0.05).min(1.0), batch: 1 };
                     let traces = exact_obs::sweep_all_rows(&w, &h, &opts);
                     for &s in grid {
                         let k = ((w.rows * w.cols) as f64 * s).round() as usize;

@@ -3,9 +3,10 @@
 
 use crate::compress::baselines::{adaprune, adaquant, adaround, bitsplit, gmp, lobs};
 use crate::compress::hessian::LayerHessian;
+use crate::compress::exact_obs::ObsOpts;
 use crate::compress::obq::{self, ObqOpts};
 use crate::compress::quant::GridSearch;
-use crate::compress::{exact_obs, CompressResult};
+use crate::compress::{exact_obs, sweep, CompressResult};
 use crate::linalg::Mat;
 
 /// Pruning method selector.
@@ -41,7 +42,8 @@ impl PruneMethod {
             PruneMethod::AdaPrune => adaprune::prune(w, h, sparsity),
             PruneMethod::AdaPruneIter(k) => adaprune::prune_iterative(w, h, sparsity, *k),
             PruneMethod::ExactObs => {
-                exact_obs::prune_unstructured(w, h, sparsity, &Default::default())
+                let opts = ObsOpts { batch: sweep::configured_batch(), ..Default::default() };
+                exact_obs::prune_unstructured(w, h, sparsity, &opts)
             }
         }
     }

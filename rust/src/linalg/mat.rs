@@ -235,15 +235,40 @@ impl Mat {
         }
     }
 
-    /// Matrix–vector product.
+    /// Matrix–vector product. Rows are processed four at a time with
+    /// independent accumulators (one per output) so the loads of `v`
+    /// are shared and the four dots vectorize; each row's reduction
+    /// still runs in its own left-to-right order, so every output is
+    /// bit-identical to the one-row-at-a-time version.
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(self.cols, v.len());
-        (0..self.rows)
-            .map(|r| {
-                let row = self.row(r);
-                row.iter().zip(v).map(|(a, b)| a * b).sum()
-            })
-            .collect()
+        let (m, k) = (self.rows, self.cols);
+        let mut out = vec![0.0; m];
+        let mut r = 0usize;
+        while r + 4 <= m {
+            let r0 = &self.data[r * k..(r + 1) * k];
+            let r1 = &self.data[(r + 1) * k..(r + 2) * k];
+            let r2 = &self.data[(r + 2) * k..(r + 3) * k];
+            let r3 = &self.data[(r + 3) * k..(r + 4) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            for t in 0..k {
+                let x = v[t];
+                s0 += r0[t] * x;
+                s1 += r1[t] * x;
+                s2 += r2[t] * x;
+                s3 += r3[t] * x;
+            }
+            out[r] = s0;
+            out[r + 1] = s1;
+            out[r + 2] = s2;
+            out[r + 3] = s3;
+            r += 4;
+        }
+        for i in r..m {
+            let row = self.row(i);
+            out[i] = row.iter().zip(v).map(|(a, b)| a * b).sum();
+        }
+        out
     }
 
     /// Frobenius norm of (self - other).
@@ -298,17 +323,44 @@ impl Mat {
 /// j ≥ i, written at `out[(i−r0)·m + j]` (pass the full m×m buffer with
 /// `r0 = 0`, or a band slice starting at row r0). One full-length dot
 /// per entry — the reduction order `Mat::xxt` has always used.
+///
+/// Four j-columns are produced per pass with independent accumulators
+/// (the loads of rowᵢ amortize 4×, and the four dots map onto f64x4
+/// lanes); each (i,j) reduction is still one sequential sweep over t, so
+/// every entry is bit-identical to the one-dot-at-a-time version — the
+/// unroll is across *outputs*, never within a reduction.
 fn syrk_upper_rows(data: &[f64], m: usize, k: usize, r0: usize, r1: usize, out: &mut [f64]) {
     for i in r0..r1 {
         let ri = &data[i * k..(i + 1) * k];
         let orow = &mut out[(i - r0) * m..(i - r0 + 1) * m];
-        for j in i..m {
+        let mut j = i;
+        while j + 4 <= m {
+            let rj0 = &data[j * k..(j + 1) * k];
+            let rj1 = &data[(j + 1) * k..(j + 2) * k];
+            let rj2 = &data[(j + 2) * k..(j + 3) * k];
+            let rj3 = &data[(j + 3) * k..(j + 4) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            for t in 0..k {
+                let a = ri[t];
+                s0 += a * rj0[t];
+                s1 += a * rj1[t];
+                s2 += a * rj2[t];
+                s3 += a * rj3[t];
+            }
+            orow[j] = s0;
+            orow[j + 1] = s1;
+            orow[j + 2] = s2;
+            orow[j + 3] = s3;
+            j += 4;
+        }
+        while j < m {
             let rj = &data[j * k..(j + 1) * k];
             let mut s = 0.0;
             for t in 0..k {
                 s += ri[t] * rj[t];
             }
             orow[j] = s;
+            j += 1;
         }
     }
 }
@@ -423,6 +475,31 @@ mod tests {
             assert_eq!(*b.last().unwrap(), m);
             assert!(b.windows(2).all(|w| w[0] < w[1]), "{b:?}");
             assert!(b.len() - 1 <= nt, "{b:?} has more than {nt} bands");
+        }
+    }
+
+    /// The 4-wide output unrolls must not change a single bit: each
+    /// output's reduction is still one sequential t-sweep.
+    #[test]
+    fn unrolled_kernels_bit_identical_to_scalar() {
+        let x = Mat::randn(11, 37, 31); // odd sizes exercise the tails
+        let (m, k) = (x.rows, x.cols);
+        let mut out = vec![f64::NAN; m * m];
+        syrk_upper_rows(&x.data, m, k, 0, m, &mut out);
+        for i in 0..m {
+            for j in i..m {
+                let mut s = 0.0;
+                for t in 0..k {
+                    s += x.at(i, t) * x.at(j, t);
+                }
+                assert_eq!(out[i * m + j].to_bits(), s.to_bits(), "syrk ({i},{j})");
+            }
+        }
+        let v: Vec<f64> = (0..k).map(|t| (t as f64) * 0.19 - 3.0).collect();
+        let mv = x.matvec(&v);
+        for i in 0..m {
+            let s: f64 = x.row(i).iter().zip(&v).map(|(a, b)| a * b).sum();
+            assert_eq!(mv[i].to_bits(), s.to_bits(), "matvec row {i}");
         }
     }
 

@@ -11,8 +11,8 @@ mod chol;
 mod inverse;
 
 pub use chol::{
-    cholesky, cholesky_append, cholesky_backward_strided, cholesky_forward_strided,
-    cholesky_inverse, cholesky_solve, cholesky_solve_strided,
+    cholesky, cholesky_append, cholesky_backward_strided, cholesky_blocked,
+    cholesky_forward_strided, cholesky_inverse, cholesky_solve, cholesky_solve_strided, CholFail,
 };
 pub use inverse::{gauss_jordan_inverse, remove_row_col, remove_row_col_into};
 pub use mat::Mat;

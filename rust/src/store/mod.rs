@@ -95,12 +95,27 @@ impl SnapshotStore {
     /// quarantined (corrupt / stale — never silently served).
     pub fn load(&self, key: &str, fingerprint: u64) -> Option<ModelDb> {
         let path = self.snapshot_path(key);
-        if !path.exists() {
-            self.misses.fetch_add(1, Ordering::Relaxed);
-            return None;
-        }
         let t0 = Instant::now();
-        match format::read_snapshot_file(&path) {
+        // Open first and branch on the error, instead of a separate
+        // `exists()` probe followed by a path-based read: a snapshot
+        // deleted (or quarantined by another process) between the probe
+        // and the read must count as a clean miss, not as a rejection
+        // that quarantines a path with no file behind it.
+        let file = match std::fs::File::open(&path) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            Err(e) => {
+                self.reject(&path, key, &format!("open {}: {e}", path.display()));
+                return None;
+            }
+        };
+        let mut reader = std::io::BufReader::new(file);
+        match format::read_snapshot(&mut reader)
+            .map_err(|e| e.context(format!("snapshot {}", path.display())))
+        {
             Ok((meta, db)) if meta.key == key && meta.fingerprint == fingerprint => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 self.load_ns
@@ -237,6 +252,27 @@ mod tests {
         assert!(store.load("k", 7).is_none(), "flipped byte rejected");
         assert_eq!(store.stats().stale_rejected, 1);
         assert!(!path.exists(), "rejected snapshot moved aside");
+    }
+
+    /// A snapshot deleted after `snapshot_path` resolution (the moment
+    /// a pre-open `exists()` probe would have said yes) must be a clean
+    /// miss — not a `stale_rejected` that quarantines a nonexistent
+    /// path. Regression test for the probe/read race.
+    #[test]
+    fn file_deleted_before_read_is_a_miss_not_a_rejection() {
+        let store = SnapshotStore::open(&tmp("race")).unwrap();
+        store.save("k", 7, &tiny_db()).unwrap();
+        let path = store.snapshot_path("k");
+        assert!(path.exists());
+        // Simulate the race: the file vanishes between path resolution
+        // and the read (another process quarantined or GC'd it).
+        std::fs::remove_file(&path).unwrap();
+        assert!(store.load("k", 7).is_none());
+        let s = store.stats();
+        assert_eq!(s.misses, 1, "deleted file counts as a miss");
+        assert_eq!(s.stale_rejected, 0, "no rejection for a missing file");
+        let q = path.with_extension("obcdb.quarantined");
+        assert!(!q.exists(), "nothing to quarantine: {}", q.display());
     }
 
     #[test]

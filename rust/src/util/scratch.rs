@@ -58,6 +58,20 @@ pub struct Scratch {
     pub(crate) gb: Vec<f64>,
     /// Best-candidate solution buffer for block sweeps.
     pub(crate) gz: Vec<f64>,
+    /// Rank-B lazy-batch panel: up to B staged pivot rows (each of the
+    /// batch's fixed stride `m`), the deferred Lemma-1 downdates of one
+    /// batch. Applied to `hinv` as a single rank-B pass at flush.
+    pub(crate) panel: Vec<f64>,
+    /// `1/[H⁻¹]_{q_s q_s}` factor per staged panel row.
+    pub(crate) pfac: Vec<f64>,
+    /// Accumulated rank-B delta for one surviving row during flush.
+    pub(crate) pdelta: Vec<f64>,
+    /// Lazily-maintained live diagonal of the *virtual* (panel-applied)
+    /// H⁻¹ during a batch, stride-m compacted indexing.
+    pub(crate) bdiag: Vec<f64>,
+    /// Compacted positions eliminated in the current batch (staged
+    /// order; sorted ascending at flush).
+    pub(crate) bq: Vec<usize>,
 }
 
 impl Scratch {
@@ -100,6 +114,26 @@ impl Scratch {
         }
     }
 
+    /// Grow the rank-B batch workspace: a `b`-row panel at stride `d`
+    /// plus the per-batch factor/diag/delta/position buffers.
+    pub(crate) fn ensure_batch(&mut self, b: usize, d: usize) {
+        if self.panel.len() < b * d {
+            self.panel.resize(b * d, 0.0);
+        }
+        if self.pfac.len() < b {
+            self.pfac.resize(b, 0.0);
+        }
+        if self.pdelta.len() < d {
+            self.pdelta.resize(d, 0.0);
+        }
+        if self.bdiag.len() < d {
+            self.bdiag.resize(d, 0.0);
+        }
+        // `bq` is used via clear+push: reserve once so pushes within a
+        // batch never allocate in steady state.
+        self.bq.reserve(b);
+    }
+
     /// The finished output row of the last sweep (original indexing).
     pub fn out(&self) -> &[f64] {
         &self.out
@@ -135,6 +169,10 @@ mod tests {
             assert!(s.hinv.len() >= 256);
             s.ensure_group(12);
             assert!(s.ga.len() >= 144);
+            s.ensure_batch(8, 16);
+            assert!(s.panel.len() >= 128);
+            assert!(s.pfac.len() >= 8 && s.bdiag.len() >= 16);
+            assert!(s.bq.capacity() >= 8);
         });
     }
 

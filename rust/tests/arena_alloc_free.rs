@@ -23,9 +23,12 @@ fn steady_state_sweeps_are_allocation_free() {
     let grid = Grid { scale: 0.125, zero: 16.0, maxq: 31.0 };
     let mut s = Scratch::new();
 
-    // Warmup: grows every buffer the kernels will touch.
+    // Warmup: grows every buffer the kernels will touch — including the
+    // rank-B panel buffers (`ensure_batch`).
     sweep::prune_sweep(&mut s, w.row(0), &h.hinv, d, |_, _| true).unwrap();
     sweep::quant_sweep(&mut s, w.row(0), &h.hinv, &grid, true).unwrap();
+    sweep::prune_sweep_batched(&mut s, w.row(0), &h.hinv, d, 8, |_, _| true).unwrap();
+    sweep::quant_sweep_batched(&mut s, w.row(0), &h.hinv, &grid, true, 8).unwrap();
     sweep::block_sweep(&mut s, w.row(0), &h.hinv, 4, 3);
     sweep::group_reconstruct(&mut s, w.row(0), &h.hinv, &[1, 4, 9, 17]).unwrap();
     sweep::prefix_reconstruct_multi(&mut s, w.row(0), &h.hinv, &[2, 7, 1, 12, 5], &[1, 3, 5], |_, _| {})
@@ -35,6 +38,10 @@ fn steady_state_sweeps_are_allocation_free() {
     for _ in 0..5 {
         sweep::prune_sweep(&mut s, w.row(1), &h.hinv, d, |_, _| true).unwrap();
         sweep::quant_sweep(&mut s, w.row(1), &h.hinv, &grid, true).unwrap();
+        // Rank-B lazy batching: panel staging, flush and live-list
+        // compaction all reuse the warmed arena buffers.
+        sweep::prune_sweep_batched(&mut s, w.row(1), &h.hinv, d, 8, |_, _| true).unwrap();
+        sweep::quant_sweep_batched(&mut s, w.row(1), &h.hinv, &grid, true, 8).unwrap();
         sweep::block_sweep(&mut s, w.row(1), &h.hinv, 4, 3);
         sweep::group_reconstruct(&mut s, w.row(1), &h.hinv, &[0, 3, 11, 20]).unwrap();
         // The multi-level prefix reconstructor: factor extension, carried

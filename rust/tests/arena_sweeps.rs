@@ -39,7 +39,7 @@ fn arena_bit_identical_to_reference_across_configs() {
 
         // Unstructured at a random sparsity and trace cap.
         let sparsity = g.f64_in(0.2, 0.9);
-        let opts = ObsOpts { trace_cap: if g.bool() { 1.0 } else { 0.75 } };
+        let opts = ObsOpts { trace_cap: if g.bool() { 1.0 } else { 0.75 }, batch: 1 };
         let a = exact_obs::prune_unstructured_on(&pool, &w, &h, sparsity, &opts);
         let r = reference::prune_unstructured_on(&pool, &w, &h, sparsity, &opts);
         if a.w.data != r.w.data {
@@ -84,6 +84,94 @@ fn arena_bit_identical_to_reference_across_configs() {
         let rsq = obq::quantize_sparse_ref(&a.w, &h, &oq);
         if asq.w.data != rsq.w.data {
             return Err(format!("sparse OBQ weights diverged (d={d})"));
+        }
+        Ok(())
+    });
+}
+
+/// Rank-B lazy batching property: for every sweep kind, `batch = 1` is
+/// **bit-identical** to the rank-1 engine (it *is* the rank-1 engine),
+/// and `batch > 1` — including B = d, one flush for the whole sweep —
+/// eliminates in the **same order** with weights within the
+/// reassociation tolerance. N:M block validity must survive batching.
+#[test]
+fn rank_b_batches_match_rank1_across_configs() {
+    let pool = ThreadPool::new(3);
+    let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * (1.0 + b.abs());
+    pt::check(0xb47c8, 14, |g| {
+        let d_row = g.usize_in(1, 5);
+        let d = g.usize_in(3, 7) * 4;
+        let seed = g.rng.next_u64();
+        let (w, h) = setup(d_row, d, seed);
+        let sparsity = g.f64_in(0.3, 0.8);
+        let batches = [1usize, 2, 8, d];
+        let b = batches[g.usize_in(0, batches.len() - 1)];
+
+        // Unstructured: opts.batch plumbed through sweep_all_rows.
+        let o1 = ObsOpts { trace_cap: 1.0, batch: 1 };
+        let ob = ObsOpts { trace_cap: 1.0, batch: b };
+        let r1 = exact_obs::prune_unstructured_on(&pool, &w, &h, sparsity, &o1);
+        let rb = exact_obs::prune_unstructured_on(&pool, &w, &h, sparsity, &ob);
+        if b == 1 && rb.w.data != r1.w.data {
+            return Err(format!("B=1 not bit-identical (d={d})"));
+        }
+        for (i, (&a, &r)) in rb.w.data.iter().zip(&r1.w.data).enumerate() {
+            // Same support (same elimination order) …
+            if (a == 0.0) != (r == 0.0) {
+                return Err(format!("B={b}: support diverged at {i} (d={d})"));
+            }
+            // … and surviving weights within tolerance.
+            if !close(a as f64, r as f64) {
+                return Err(format!("B={b}: weight {i} drifted {a} vs {r} (d={d})"));
+            }
+        }
+
+        // N:M through the batched entry point: pattern stays valid and
+        // matches the rank-1 support.
+        let nm1 = exact_obs::prune_nm_batched_on(&pool, &w, &h, 2, 4, 1);
+        let nmb = exact_obs::prune_nm_batched_on(&pool, &w, &h, 2, 4, b);
+        for row in 0..d_row {
+            for blk in 0..d / 4 {
+                let nz = (0..4).filter(|i| nmb.w.at(row, blk * 4 + i) != 0.0).count();
+                if nz != 2 {
+                    return Err(format!("B={b}: row {row} block {blk} has {nz} nz"));
+                }
+            }
+        }
+        for (i, (&a, &r)) in nmb.w.data.iter().zip(&nm1.w.data).enumerate() {
+            if (a == 0.0) != (r == 0.0) {
+                return Err(format!("B={b}: N:M support diverged at {i}"));
+            }
+            if !close(a as f64, r as f64) {
+                return Err(format!("B={b}: N:M weight {i} drifted"));
+            }
+        }
+
+        // OBQ dense + sparse through opts.batch.
+        let bits = g.usize_in(2, 4) as u32;
+        let grids =
+            obc::compress::quant::fit_grids_per_row(&w, bits, false, Default::default());
+        let q1 = ObqOpts { batch: 1, ..ObqOpts::new(bits) };
+        let qb = ObqOpts { batch: b, ..ObqOpts::new(bits) };
+        let a1 = obq::quantize_with_grids_on(&pool, &w, &h, &grids, &q1);
+        let ab = obq::quantize_with_grids_on(&pool, &w, &h, &grids, &qb);
+        if b == 1 && ab.w.data != a1.w.data {
+            return Err(format!("B=1 OBQ not bit-identical (d={d})"));
+        }
+        for (i, (&a, &r)) in ab.w.data.iter().zip(&a1.w.data).enumerate() {
+            if !close(a as f64, r as f64) {
+                return Err(format!("B={b}: OBQ weight {i} drifted {a} vs {r}"));
+            }
+        }
+        let s1 = obq::quantize_sparse_on(&pool, &r1.w, &h, &q1);
+        let sb = obq::quantize_sparse_on(&pool, &r1.w, &h, &qb);
+        for (i, (&a, &r)) in sb.w.data.iter().zip(&s1.w.data).enumerate() {
+            if (a == 0.0) != (r == 0.0) {
+                return Err(format!("B={b}: sparse OBQ support diverged at {i}"));
+            }
+            if !close(a as f64, r as f64) {
+                return Err(format!("B={b}: sparse OBQ weight {i} drifted"));
+            }
         }
         Ok(())
     });

@@ -14,8 +14,10 @@
 use obc::compress::exact_obs;
 use obc::compress::obq::{self, ObqOpts};
 use obc::compress::quant::{Grid, GridSearch};
+use obc::compress::sweep;
 use obc::linalg::Mat;
 use obc::util::json::{parse, Json};
+use obc::util::scratch::Scratch;
 
 fn load_fixture(name: &str) -> Json {
     let path = format!("{}/rust/tests/fixtures/{name}", env!("CARGO_MANIFEST_DIR"));
@@ -110,6 +112,7 @@ fn obq_sweep_matches_python_golden_cases() {
             symmetric: false,
             search: GridSearch::MinMax,
             outlier_heuristic: outlier,
+            batch: 1,
         };
         for r in 0..rows {
             let grid = Grid {
@@ -133,6 +136,97 @@ fn obq_sweep_matches_python_golden_cases() {
                     "{name} row {r} col {c}: {} off grid",
                     got[c]
                 );
+            }
+        }
+    }
+}
+
+/// The rank-B lazy-batch prune engine against the same Python golden
+/// fixtures: for every batch size — including B = d, a single flush for
+/// the entire sweep — the elimination **order** must equal the golden
+/// order exactly (batching reorders arithmetic, not selection), and the
+/// compensated weights stay within the fixtures' 1e-6 contract.
+#[test]
+fn rank_b_obs_sweep_matches_golden_cases() {
+    let fixture = load_fixture("obs_cases.json");
+    let cases = fixture.get("cases").and_then(Json::as_arr).expect("cases");
+    assert!(!cases.is_empty());
+    let mut s = Scratch::new();
+    for case in cases {
+        let name = case.req_str("name").unwrap();
+        let d = case.get("d").and_then(Json::as_usize).unwrap();
+        let rows = case.get("rows").and_then(Json::as_usize).unwrap();
+        let k = case.get("k").and_then(Json::as_usize).unwrap();
+        let w = mat_from(case.get("w").unwrap(), rows, d);
+        let hinv = mat_from(case.get("hinv").unwrap(), d, d);
+        let expects = case.get("expect").and_then(Json::as_arr).unwrap();
+        for r in 0..rows {
+            let exp = &expects[r];
+            let want_order = usize_vec(exp.get("order").unwrap());
+            let want_w = f64_vec(exp.get("w").unwrap());
+            for batch in [2usize, 8, d] {
+                sweep::prune_sweep_batched(&mut s, w.row(r), &hinv, k, batch, |_, _| true)
+                    .unwrap_or_else(|e| panic!("{name} row {r} B={batch}: {e:?}"));
+                assert_eq!(
+                    s.trace_order, want_order,
+                    "{name} row {r} B={batch}: pruning order"
+                );
+                let out = s.out();
+                for c in 0..d {
+                    assert!(
+                        close(out[c], want_w[c], 1e-6),
+                        "{name} row {r} col {c} B={batch}: {} vs golden {}",
+                        out[c],
+                        want_w[c]
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Rank-B OBQ sweeps against the golden quantization fixtures: outputs
+/// within 1e-6 of golden and exactly on the golden grid for every batch
+/// size.
+#[test]
+fn rank_b_obq_sweep_matches_golden_cases() {
+    let fixture = load_fixture("obq_cases.json");
+    let cases = fixture.get("cases").and_then(Json::as_arr).expect("cases");
+    assert!(!cases.is_empty());
+    let mut s = Scratch::new();
+    for case in cases {
+        let name = case.req_str("name").unwrap();
+        let d = case.get("d").and_then(Json::as_usize).unwrap();
+        let rows = case.get("rows").and_then(Json::as_usize).unwrap();
+        let outlier = case.get("outlier").and_then(Json::as_bool).unwrap();
+        let w = mat_from(case.get("w").unwrap(), rows, d);
+        let hinv = mat_from(case.get("hinv").unwrap(), d, d);
+        let grids_j = case.get("grids").and_then(Json::as_arr).unwrap();
+        let expects = case.get("expect").and_then(Json::as_arr).unwrap();
+        for r in 0..rows {
+            let grid = Grid {
+                scale: grids_j[r].req_f64("scale").unwrap(),
+                zero: grids_j[r].req_f64("zero").unwrap(),
+                maxq: grids_j[r].req_f64("maxq").unwrap(),
+            };
+            let want = f64_vec(&expects[r]);
+            for batch in [2usize, 8, d] {
+                sweep::quant_sweep_batched(&mut s, w.row(r), &hinv, &grid, outlier, batch)
+                    .unwrap_or_else(|e| panic!("{name} row {r} B={batch}: {e:?}"));
+                let got = s.out();
+                for c in 0..d {
+                    assert!(
+                        close(got[c], want[c], 1e-6),
+                        "{name} row {r} col {c} B={batch}: {} vs golden {}",
+                        got[c],
+                        want[c]
+                    );
+                    assert!(
+                        (got[c] - grid.quant(got[c])).abs() < 1e-9,
+                        "{name} row {r} col {c} B={batch}: {} off grid",
+                        got[c]
+                    );
+                }
             }
         }
     }

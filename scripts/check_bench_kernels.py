@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Validate BENCH_kernels.json artifacts (see `make bench-smoke`).
+
+Usage: check_bench_kernels.py COMMITTED.json [SMOKE.json]
+
+The committed file may be the placeholder written from a container
+without a Rust toolchain (measured:false, every metric null) — the
+schema, the case list (including the rank-B lazy-batch cases) and the
+model_expectations/derived name linkage are validated either way, so
+unmeasured numbers can never alias measured ones.
+
+When a smoke-run file is given as the second argument it must be a real
+measurement (measured:true): every rank-B case carries numbers, the
+steady-state sweeps allocated nothing, and the best blocked sweep beats
+or ties the rank-1 baseline on the largest smoke shape (1.25x slack —
+smoke sizes are tiny and noisy; the committed full-size trajectory is
+where the real crossover is recorded).
+"""
+import json
+import sys
+
+SCHEMA = "obc-bench-kernels/v1"
+RANKB_SLACK = 1.25
+
+
+def fail(msg):
+    raise SystemExit(f"check_bench_kernels: {msg}")
+
+
+def load(path):
+    try:
+        d = json.load(open(path))
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: {e}")
+    if d.get("schema") != SCHEMA:
+        fail(f"{path}: schema {d.get('schema')!r} != {SCHEMA!r}")
+    if not d.get("cases"):
+        fail(f"{path}: empty case list")
+    return d
+
+
+def rankb_cases(d, path):
+    base = [c for c in d["cases"] if c["name"].endswith("_rank1base")]
+    blocked = [c for c in d["cases"] if "_rankB" in c["name"]]
+    if len(base) != 1:
+        fail(f"{path}: expected exactly one _rank1base case, got "
+             f"{[c['name'] for c in base]}")
+    if not blocked:
+        fail(f"{path}: no _rankB cases")
+    return base[0], blocked
+
+
+committed = load(sys.argv[1])
+base, blocked = rankb_cases(committed, sys.argv[1])
+
+# Every operation-count expectation must point at a derived metric the
+# bench actually emits, or the trajectory tooling dangles.
+derived_names = {e["name"] for e in committed.get("derived", [])}
+for e in committed.get("model_expectations", []):
+    if e["name"] not in derived_names:
+        fail(f"model expectation {e['name']!r} has no derived metric")
+    if not isinstance(e.get("value"), (int, float)):
+        fail(f"model expectation {e['name']!r} has no numeric value")
+    if not e.get("basis"):
+        fail(f"model expectation {e['name']!r} has no basis")
+rankb_expect = [n for n in derived_names if "_rankB" in n]
+if not rankb_expect:
+    fail(f"{sys.argv[1]}: no rank-B derived entries")
+
+if len(sys.argv) > 2:
+    smoke = load(sys.argv[2])
+    if not smoke.get("measured"):
+        fail(f"{sys.argv[2]}: smoke artifact must be a real run (measured:true)")
+    sbase, sblocked = rankb_cases(smoke, sys.argv[2])
+    for c in [sbase] + sblocked:
+        if not isinstance(c.get("min_ns"), (int, float)):
+            fail(f"smoke case {c['name']} has no measured min_ns")
+        if c.get("allocs_per_iter") not in (0, 0.0, None):
+            fail(f"smoke case {c['name']} allocated: {c['allocs_per_iter']}")
+    best = min(c["min_ns"] for c in sblocked)
+    if best > RANKB_SLACK * sbase["min_ns"]:
+        fail(f"blocked sweep lost to rank-1 beyond slack: best rankB "
+             f"{best:.0f} ns vs rank1base {sbase['min_ns']:.0f} ns "
+             f"(limit {RANKB_SLACK}x)")
+    print(f"check_bench_kernels OK: committed schema valid "
+          f"({len(committed['cases'])} cases), smoke rankB best "
+          f"{best:.0f} ns vs rank1 {sbase['min_ns']:.0f} ns")
+else:
+    print(f"check_bench_kernels OK: committed schema valid "
+          f"({len(committed['cases'])} cases, "
+          f"{len(blocked)} rank-B cases, "
+          f"{len(committed.get('model_expectations', []))} model expectations)")
