@@ -2,7 +2,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test bench bench-json bench-smoke bench-serve bench-db serve-smoke store-smoke fmt lint clean
+.PHONY: build test bench bench-json bench-smoke bench-serve bench-db serve-smoke store-smoke chaos-smoke fmt lint clean
 
 build:
 	$(CARGO) build --release
@@ -84,6 +84,32 @@ store-smoke:
 	  '{"op":"shutdown"}' \
 	| $(CARGO) run --release --bin obc -- serve --synthetic --store target/store_smoke/imported > target/store_smoke/warm.out
 	python3 scripts/check_store_smoke.py target/store_smoke/cold.out target/store_smoke/warm.out
+
+# Fault-injection smoke: the same batch (a zero-deadline job + four
+# real jobs) served twice — once under a seeded OBC_FAULTS plan with a
+# snapshot store (store errors, injected NonSpd, layer/queue delays),
+# once clean. The plan is recoverable by construction, so the checker
+# demands exactly-once responses, a typed deadline rejection, exact
+# counter accounting and bit-identical payloads across the two runs.
+chaos-smoke:
+	@mkdir -p target
+	rm -rf target/chaos_smoke
+	mkdir -p target/chaos_smoke
+	printf '%s\n' \
+	  '{"id":"d0","model":"synthetic","op":"dense","deadline_ms":0}' \
+	  '{"id":"b1","model":"synthetic","op":"db","kind":"sparsity","grid":[0,0.5,0.9]}' \
+	  '{"id":"p1","model":"synthetic","op":"prune","method":"exactobs","sparsity":0.5}' \
+	  '{"id":"q1","model":"synthetic","op":"quant","method":"obq","bits":4}' \
+	  '{"id":"s1","model":"synthetic","op":"solve","target":"flop","value":1.5,"grid":[0,0.5,0.9]}' \
+	  '{"op":"shutdown"}' \
+	> target/chaos_smoke/batch.jsonl
+	OBC_FAULTS='store.*=err@0.4,sweep.redamp.nonspd=err@0.3,engine.layer=delay:1ms@0.2,queue.push=delay:1ms@0.5' \
+	OBC_FAULT_SEED=7 \
+	  $(CARGO) run --release --bin obc -- serve --synthetic --workers 1 --store target/chaos_smoke/store \
+	  < target/chaos_smoke/batch.jsonl > target/chaos_smoke/faulted.out
+	$(CARGO) run --release --bin obc -- serve --synthetic --workers 1 \
+	  < target/chaos_smoke/batch.jsonl > target/chaos_smoke/clean.out
+	python3 scripts/check_chaos_smoke.py target/chaos_smoke/faulted.out target/chaos_smoke/clean.out
 
 fmt:
 	$(CARGO) fmt --all --check

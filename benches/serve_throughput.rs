@@ -71,7 +71,7 @@ fn main() {
         queue_cap: n_jobs.max(8),
         models_dir: PathBuf::from("/nonexistent"),
         synthetic_only: true,
-        store_dir: None,
+        ..ServerConfig::default()
     });
     let (tx, rx) = mpsc::channel();
     let t0 = Instant::now();
@@ -123,6 +123,7 @@ fn main() {
             models_dir: PathBuf::from("/nonexistent"),
             synthetic_only: true,
             store_dir: Some(store_dir.clone()),
+            ..ServerConfig::default()
         });
         let (tx, rx) = mpsc::channel();
         server

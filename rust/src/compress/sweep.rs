@@ -65,7 +65,6 @@
 use super::hessian::LayerHessian;
 use super::quant::Grid;
 use crate::linalg::{cholesky_append, cholesky_backward_strided, cholesky_forward_strided, Mat};
-use crate::util::logging::{self, Level};
 use crate::util::scratch::Scratch;
 
 /// A sweep step found a non-positive (or non-finite) [H⁻¹]ₚₚ: the
@@ -919,8 +918,14 @@ const REDAMP_ATTEMPTS: usize = 8;
 /// re-dampening H (×10 escalation from max(10·damp, 1e-10·mean(diag)),
 /// [`REDAMP_ATTEMPTS`] rounds — a fixed count, so even layers whose
 /// `finalize` already escalated to heavy dampening still get retries)
-/// and re-running. The healthy path costs one closure call; the retry
-/// path is rare enough that its re-inversion cost is irrelevant.
+/// and re-running. The escalation is driven through the crate-wide
+/// [`crate::util::retry`] loop with a zero-sleep policy — the "backoff"
+/// here is the ×10 damp escalation itself, not wall clock. The healthy
+/// path costs one closure call; the retry path is rare enough that its
+/// re-inversion cost is irrelevant. The `sweep.redamp.nonspd` fault
+/// site injects a synthetic first-attempt failure whose retry re-runs
+/// the sweep **unchanged** (bit-identical result), so chaos tests can
+/// exercise the recovery loop without perturbing numerics.
 /// Panics — loudly, with the layer context — when even the strongest
 /// dampening cannot restore SPD.
 pub fn run_with_redamp<T>(
@@ -928,41 +933,54 @@ pub fn run_with_redamp<T>(
     what: &str,
     f: impl Fn(&LayerHessian) -> Result<T, NonSpd>,
 ) -> T {
-    match f(hess) {
-        Ok(t) => return t,
-        Err(e) => {
-            let msg = format!("{what}: {e}; re-dampening H and retrying");
-            logging::log(Level::Warn, "sweep", &msg);
-        }
-    }
     let mean_diag = hess.h.diag_mean().abs().max(1e-12);
-    let mut extra = (hess.damp * 10.0).max(mean_diag * 1e-10);
-    let mut last_extra = extra;
-    for _ in 0..REDAMP_ATTEMPTS {
-        last_extra = extra;
-        match hess.redamped(extra) {
-            Ok(redamped) => match f(&redamped) {
-                Ok(t) => return t,
-                Err(e) => logging::log(
-                    Level::Warn,
-                    "sweep",
-                    &format!("{what}: still {e} at extra damp {extra:e}"),
-                ),
-            },
-            // Even re-inverting H + extra·I failed: this escalation
-            // round is burned — say so instead of skipping silently.
-            Err(err) => logging::log(
-                Level::Warn,
-                "sweep",
-                &format!("{what}: re-dampening with extra {extra:e} failed to re-invert: {err}"),
-            ),
-        }
-        extra *= 10.0;
-    }
-    panic!(
-        "{what}: H⁻¹ not SPD even after re-dampening ({REDAMP_ATTEMPTS} ×10 escalations, final \
-         extra damp {last_extra:e}) — calibration data degenerate"
+    let base_extra = (hess.damp * 10.0).max(mean_diag * 1e-10);
+    let mut last_extra = base_extra;
+    // An injected failure consumes one extra attempt so genuinely
+    // degenerate data still gets the plain run + all escalations.
+    let mut pending_injection = crate::util::faultpoint::fires("sweep.redamp.nonspd");
+    let attempts = 1 + pending_injection as u32 + REDAMP_ATTEMPTS as u32;
+    // `stage` tracks real progress: 0 = undamped run, k ≥ 1 = k-th
+    // escalation. Only genuine failures advance it.
+    let mut stage = 0u32;
+    let result = crate::util::retry::retry(
+        &crate::util::retry::Backoff::no_sleep(attempts),
+        what,
+        |_| {
+            if pending_injection {
+                pending_injection = false;
+                return Err("injected NonSpd fault; re-running sweep unchanged".to_string());
+            }
+            let r = if stage == 0 {
+                f(hess).map_err(|e| format!("{e}; re-dampening H and retrying"))
+            } else {
+                let extra = base_extra * 10f64.powi(stage as i32 - 1);
+                last_extra = extra;
+                match hess.redamped(extra) {
+                    Ok(redamped) => {
+                        f(&redamped).map_err(|e| format!("still {e} at extra damp {extra:e}"))
+                    }
+                    // Even re-inverting H + extra·I failed: this
+                    // escalation round is burned — say so instead of
+                    // skipping silently.
+                    Err(err) => Err(format!(
+                        "re-dampening with extra {extra:e} failed to re-invert: {err}"
+                    )),
+                }
+            };
+            if r.is_err() {
+                stage += 1;
+            }
+            r
+        },
     );
+    match result {
+        Ok(t) => t,
+        Err(_) => panic!(
+            "{what}: H⁻¹ not SPD even after re-dampening ({REDAMP_ATTEMPTS} ×10 escalations, \
+             final extra damp {last_extra:e}) — calibration data degenerate"
+        ),
+    }
 }
 
 #[cfg(test)]
@@ -1091,6 +1109,28 @@ mod tests {
     fn redamp_give_up_reports_final_extra() {
         let h = layer(4, 13);
         run_with_redamp::<()>(&h, "test", |_| Err(NonSpd { index: 0, diag: 0.0 }));
+    }
+
+    /// An injected `sweep.redamp.nonspd` fault exercises the retry loop
+    /// but re-runs the sweep **unchanged**: same Hessian, same damp,
+    /// bit-identical output — and degenerate data still gets the full
+    /// escalation budget afterwards.
+    #[test]
+    fn redamp_injected_fault_retries_bit_identically() {
+        let _g = crate::util::faultpoint::test_guard();
+        let h = layer(6, 17);
+        let clean = run_with_redamp(&h, "test", |hh| {
+            Ok::<_, NonSpd>((hh.damp.to_bits(), hh.hinv.at(0, 0).to_bits()))
+        });
+        crate::util::faultpoint::install_from_spec("sweep.redamp.nonspd=err@1", 3).unwrap();
+        let calls = std::cell::Cell::new(0u32);
+        let faulted = run_with_redamp(&h, "test", |hh| {
+            calls.set(calls.get() + 1);
+            Ok::<_, NonSpd>((hh.damp.to_bits(), hh.hinv.at(0, 0).to_bits()))
+        });
+        crate::util::faultpoint::clear();
+        assert_eq!(calls.get(), 1, "injection precedes the sweep; the retry is the only run");
+        assert_eq!(clean, faulted, "retry after injection is bit-identical");
     }
 
     /// Each level emitted by the prefix reconstructor must be bit-equal

@@ -310,6 +310,17 @@ impl CompressionEngine {
         }
     }
 
+    /// Per-layer compute checkpoint: the `engine.layer` fault-injection
+    /// site plus the job's deadline. Called at every layer boundary of
+    /// the uniform runs and database builds, so an expired (or
+    /// chaos-failed) job stops within one layer's work instead of
+    /// running the model to completion.
+    fn layer_checkpoint(layer: &str) -> crate::util::error::Result<()> {
+        crate::faultpoint!("engine.layer")
+            .map_err(|e| crate::err!("layer '{layer}': {e}"))?;
+        crate::util::deadline::check(&format!("layer '{layer}'"))
+    }
+
     /// Evaluate a stitched model with the task-default statistics
     /// correction applied.
     pub fn eval_corrected(&self, mut model: Box<dyn CompressibleModel>) -> f64 {
@@ -340,6 +351,7 @@ impl CompressionEngine {
             if l.d_col % m != 0 {
                 continue; // first conv (d_col 27) cannot hold the pattern
             }
+            Self::layer_checkpoint(&l.name)?;
             let w = self.model().get_weight(&l.name);
             let h = self.hessian(&l.name)?;
             let r = method.prune_nm(&w, &h, n, m);
@@ -359,6 +371,7 @@ impl CompressionEngine {
     ) -> crate::util::error::Result<f64> {
         let mut model = self.model().clone_box();
         for l in self.layers(scope) {
+            Self::layer_checkpoint(&l.name)?;
             let w = self.model().get_weight(&l.name);
             let h = self.hessian(&l.name)?;
             let r = method.quantize(&w, &h, bits, symmetric);
@@ -380,6 +393,7 @@ impl CompressionEngine {
     ) -> crate::util::error::Result<f64> {
         let mut model = self.model().clone_box();
         for l in self.layers(scope) {
+            Self::layer_checkpoint(&l.name)?;
             let w = self.model().get_weight(&l.name);
             let h = self.hessian(&l.name)?;
             let r = method.prune(&w, &h, sparsity);
@@ -400,6 +414,7 @@ impl CompressionEngine {
     ) -> crate::util::error::Result<f64> {
         let mut model = self.model().clone_box();
         for l in self.layers(scope) {
+            Self::layer_checkpoint(&l.name)?;
             let w = self.model().get_weight(&l.name);
             let h = self.hessian(&l.name)?;
             let base = if l.d_col % m == 0 {
@@ -542,22 +557,34 @@ impl CompressionEngine {
         }
         let workers = pool::configured_threads().min(n).max(1);
         let slots: Mutex<Vec<LayerSlot>> = Mutex::new((0..n).map(|_| None).collect());
+        // Checkpoint wrapper: every layer item passes the chaos site and
+        // the job deadline before building.
+        let build_checked = |l: &LayerInfo| -> crate::util::error::Result<Vec<Entry>> {
+            Self::layer_checkpoint(&l.name)?;
+            build(l)
+        };
         if workers == 1 {
             let mut s = slots.lock().unwrap();
             for (i, l) in layers.iter().enumerate() {
-                s[i] = Some(build(l));
+                s[i] = Some(build_checked(l));
             }
         } else {
+            // Thread-locals don't cross `thread::scope`: hand the
+            // caller's deadline to every worker explicitly.
+            let inherited = crate::util::deadline::current();
             let next = AtomicUsize::new(0);
             std::thread::scope(|sc| {
                 for _ in 0..workers {
-                    sc.spawn(|| loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
+                    sc.spawn(|| {
+                        let _g = crate::util::deadline::set(inherited);
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            let r = build_checked(&layers[i]);
+                            slots.lock().unwrap()[i] = Some(r);
                         }
-                        let r = build(&layers[i]);
-                        slots.lock().unwrap()[i] = Some(r);
                     });
                 }
             });

@@ -574,6 +574,10 @@ pub enum Request {
         id: Option<String>,
         model: String,
         spec: JobSpec,
+        /// Wall-clock budget in milliseconds: past it the server answers
+        /// with a typed `"rejected":"deadline"` error instead of (or mid
+        /// way through) executing. `None` = server default.
+        deadline_ms: Option<u64>,
     },
     Control(ControlOp),
 }
@@ -590,6 +594,21 @@ impl Request {
                 id: j.get("id").and_then(|v| v.as_str()).map(|s| s.to_string()),
                 model: j.req_str("model")?.to_string(),
                 spec: JobSpec::from_json(&j)?,
+                deadline_ms: match j.get("deadline_ms") {
+                    None => None,
+                    Some(v) => {
+                        let ms = v.as_f64().ok_or_else(|| {
+                            crate::err!("field 'deadline_ms' must be a number")
+                        })?;
+                        if !ms.is_finite() || ms < 0.0 || ms > 1e12 {
+                            crate::bail!(
+                                "field 'deadline_ms' must be a non-negative \
+                                 number of milliseconds, got {ms}"
+                            );
+                        }
+                        Some(ms as u64)
+                    }
+                },
             }),
         }
     }
@@ -804,12 +823,27 @@ mod tests {
         )
         .unwrap();
         match r {
-            Request::Job { id, model, spec } => {
+            Request::Job { id, model, spec, deadline_ms } => {
                 assert_eq!(id.as_deref(), Some("j1"));
                 assert_eq!(model, "rneta");
                 assert_eq!(spec.op(), "prune");
+                assert_eq!(deadline_ms, None);
             }
             _ => panic!("expected a job"),
+        }
+        match Request::parse_line(
+            r#"{"model":"rneta","op":"dense","deadline_ms":2500}"#,
+        )
+        .unwrap()
+        {
+            Request::Job { deadline_ms, .. } => assert_eq!(deadline_ms, Some(2500)),
+            _ => panic!("expected a job"),
+        }
+        for bad in [
+            r#"{"model":"m","op":"dense","deadline_ms":"soon"}"#,
+            r#"{"model":"m","op":"dense","deadline_ms":-5}"#,
+        ] {
+            assert!(Request::parse_line(bad).is_err(), "'{bad}' must be rejected");
         }
         assert_eq!(
             Request::parse_line(r#"{"op":"shutdown"}"#).unwrap(),

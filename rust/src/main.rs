@@ -105,6 +105,9 @@ fn main() -> obc::util::Result<()> {
         opt("synthetic", "serve: only the synthetic model (no artifacts)", None),
         opt("listen", "serve: TCP listen address (e.g. 127.0.0.1:7700; default stdin)", None),
         opt("store", "serve/db: snapshot directory for durable databases", None),
+        opt("shed-depth", "serve: shed jobs past this queue depth (default: block)", None),
+        opt("shed-bytes", "serve: shed jobs past this many in-flight request bytes", None),
+        opt("deadline-ms", "serve: default per-job deadline in milliseconds", None),
         opt("kind", "db kind (sparsity|mixed_gpu|mixed_gpu_baseline|cpu)", Some("sparsity")),
         opt("grid", "db: comma-separated sparsity grid (default Eq. 10)", None),
         opt("out", "db export: output snapshot file", None),
@@ -142,6 +145,12 @@ fn main() -> obc::util::Result<()> {
                 models_dir: artifacts_dir().join("models"),
                 synthetic_only: args.flag("synthetic"),
                 store_dir: args.get("store").map(std::path::PathBuf::from),
+                shed_depth: args.get("shed-depth").and_then(|v| v.parse().ok()),
+                shed_bytes: args.get("shed-bytes").and_then(|v| v.parse().ok()),
+                default_deadline: args
+                    .get("deadline-ms")
+                    .and_then(|v| v.parse().ok())
+                    .map(std::time::Duration::from_millis),
             };
             if let Some(dir) = &cfg.store_dir {
                 eprintln!("obc serve: durable databases in {}", dir.display());

@@ -19,6 +19,13 @@ pub struct Metrics {
     pub coalesced: AtomicU64,
     /// Jobs refused because the queue was closed (shutdown).
     pub rejected: AtomicU64,
+    /// Jobs shed by admission control (typed `Overloaded` rejections:
+    /// queue depth or in-flight bytes past the configured watermark).
+    pub shed: AtomicU64,
+    /// Accepted jobs answered with a typed `Deadline` rejection (the
+    /// deadline passed while queued, or fired at an execution
+    /// checkpoint).
+    pub deadline_expired: AtomicU64,
     /// High-water mark of the queue depth.
     pub queue_depth_peak: AtomicU64,
     queue_ns: AtomicU64,
@@ -50,6 +57,11 @@ impl Metrics {
             .set("jobs_failed", self.failed.load(Ordering::Relaxed) as f64)
             .set("jobs_coalesced", self.coalesced.load(Ordering::Relaxed) as f64)
             .set("jobs_rejected", self.rejected.load(Ordering::Relaxed) as f64)
+            .set("jobs_shed", self.shed.load(Ordering::Relaxed) as f64)
+            .set(
+                "jobs_deadline_expired",
+                self.deadline_expired.load(Ordering::Relaxed) as f64,
+            )
             .set("queue_depth_peak", self.queue_depth_peak.load(Ordering::Relaxed) as f64)
             .set("queue_seconds_total", self.queue_ns.load(Ordering::Relaxed) as f64 / 1e9)
             .set("exec_seconds_total", self.exec_ns.load(Ordering::Relaxed) as f64 / 1e9);

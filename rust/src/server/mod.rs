@@ -36,10 +36,11 @@ use registry::EngineRegistry;
 use std::collections::BTreeMap;
 use std::io::{BufRead, Write};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::util::deadline;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Server tuning.
 pub struct ServerConfig {
@@ -55,6 +56,18 @@ pub struct ServerConfig {
     /// Snapshot directory for durable trace databases (`None` = no
     /// persistence): builds write through, restarts warm-start.
     pub store_dir: Option<PathBuf>,
+    /// Admission watermark: submissions finding this many jobs already
+    /// queued are shed with a typed [`SubmitError::Overloaded`] instead
+    /// of blocking the producer. `None` (default) keeps the legacy
+    /// behavior — a full queue blocks the frontend (backpressure).
+    pub shed_depth: Option<usize>,
+    /// Admission watermark on in-flight request bytes (the JSON size of
+    /// every accepted-but-unanswered spec): past it, submissions are
+    /// shed. `None` = no byte-based shedding.
+    pub shed_bytes: Option<usize>,
+    /// Deadline applied to jobs that don't carry their own
+    /// `deadline_ms`. `None` = no implicit deadline.
+    pub default_deadline: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -65,9 +78,49 @@ impl Default for ServerConfig {
             models_dir: crate::util::io::artifacts_dir().join("models"),
             synthetic_only: false,
             store_dir: None,
+            shed_depth: None,
+            shed_bytes: None,
+            default_deadline: None,
         }
     }
 }
+
+/// Why [`CompressionServer::submit`] refused a job. Typed so frontends
+/// can tag the rejection (`"rejected":"shutdown"|"overloaded"`) and
+/// clients can tell "retry later" from "the server is going away".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Graceful shutdown has begun; no new work is accepted.
+    Closed,
+    /// Admission control shed the job: a watermark (queue depth or
+    /// in-flight bytes) is exceeded. Retry with backoff.
+    Overloaded { depth: usize, in_flight_bytes: usize },
+}
+
+impl SubmitError {
+    /// Stable wire tag for the `rejected` response field.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SubmitError::Closed => "shutdown",
+            SubmitError::Overloaded { .. } => "overloaded",
+        }
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Closed => write!(f, "server is shutting down (job rejected)"),
+            SubmitError::Overloaded { depth, in_flight_bytes } => write!(
+                f,
+                "server overloaded (queue depth {depth}, {in_flight_bytes} bytes in flight); \
+                 retry later"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// One finished job, delivered on the submitter's channel.
 #[derive(Debug, Clone)]
@@ -97,6 +150,9 @@ impl Response {
             Err(msg) => {
                 let mut o = Json::obj();
                 o.set("ok", false).set("error", msg.as_str());
+                if msg.starts_with(deadline::EXCEEDED) {
+                    o.set("rejected", "deadline");
+                }
                 o
             }
         };
@@ -121,6 +177,12 @@ struct QueuedJob {
     spec: JobSpec,
     reply: mpsc::Sender<Response>,
     enqueued: Instant,
+    /// Absolute wall-clock budget: expired at dequeue → typed Deadline
+    /// rejection; checked again at execution checkpoints.
+    deadline: Option<Instant>,
+    /// Admission-control weight (compact-JSON size of the spec),
+    /// released from `in_flight_bytes` when the response is delivered.
+    cost: usize,
 }
 
 struct Inner {
@@ -131,6 +193,11 @@ struct Inner {
     /// currently-executing identical job.
     inflight: Mutex<BTreeMap<String, Vec<QueuedJob>>>,
     seq: AtomicU64,
+    /// Bytes accepted but not yet answered (admission-control gauge).
+    in_flight_bytes: AtomicUsize,
+    shed_depth: Option<usize>,
+    shed_bytes: Option<usize>,
+    default_deadline: Option<Duration>,
 }
 
 /// The running service: worker threads over a bounded queue.
@@ -159,6 +226,10 @@ impl CompressionServer {
             metrics: Metrics::default(),
             inflight: Mutex::new(BTreeMap::new()),
             seq: AtomicU64::new(0),
+            in_flight_bytes: AtomicUsize::new(0),
+            shed_depth: cfg.shed_depth,
+            shed_bytes: cfg.shed_bytes,
+            default_deadline: cfg.default_deadline,
         });
         let workers = (0..cfg.workers.max(1))
             .map(|i| {
@@ -173,32 +244,77 @@ impl CompressionServer {
     }
 
     /// Enqueue a job; its [`Response`] arrives on `reply` when done.
-    /// Blocks when the queue is full; fails once shutdown has begun.
+    /// Blocks when the queue is full (unless shedding is configured);
+    /// fails typed once shutdown has begun or a watermark is exceeded.
     pub fn submit(
         &self,
         model: &str,
         spec: JobSpec,
         client_id: Option<String>,
         reply: mpsc::Sender<Response>,
-    ) -> crate::util::error::Result<u64> {
+    ) -> Result<u64, SubmitError> {
+        self.submit_with_deadline(model, spec, client_id, None, reply)
+    }
+
+    /// [`CompressionServer::submit`] with a per-job deadline (relative
+    /// to now). `None` falls back to [`ServerConfig::default_deadline`].
+    pub fn submit_with_deadline(
+        &self,
+        model: &str,
+        spec: JobSpec,
+        client_id: Option<String>,
+        deadline: Option<Duration>,
+        reply: mpsc::Sender<Response>,
+    ) -> Result<u64, SubmitError> {
+        let now = Instant::now();
+        let budget = deadline.or(self.inner.default_deadline);
         let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed);
+        let cost = spec.to_json().to_string_compact().len();
         let job = QueuedJob {
             seq,
             client_id,
             model: model.to_string(),
             spec,
             reply,
-            enqueued: Instant::now(),
+            enqueued: now,
+            deadline: budget.and_then(|d| now.checked_add(d)),
+            cost,
         };
-        match self.inner.queue.push(job) {
+        let shed = |inner: &Inner, depth: usize| -> SubmitError {
+            inner.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            SubmitError::Overloaded {
+                depth,
+                in_flight_bytes: inner.in_flight_bytes.load(Ordering::Relaxed),
+            }
+        };
+        // Fault injection: a firing "queue.push" site sheds the job as
+        // if a watermark tripped (the typed-backpressure failure mode).
+        if crate::faultpoint!("queue.push").is_err() {
+            return Err(shed(&self.inner, self.inner.queue.len()));
+        }
+        if let Some(maxb) = self.inner.shed_bytes {
+            if self.inner.in_flight_bytes.load(Ordering::Relaxed) >= maxb {
+                return Err(shed(&self.inner, self.inner.queue.len()));
+            }
+        }
+        let pushed = match self.inner.shed_depth {
+            Some(limit) => self.inner.queue.offer(job, limit).map_err(|e| match e {
+                queue::OfferError::Full(_) => Some(shed(&self.inner, limit)),
+                queue::OfferError::Closed(_) => None,
+            }),
+            None => self.inner.queue.push(job).map_err(|_| None),
+        };
+        match pushed {
             Ok(depth) => {
                 self.inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
                 self.inner.metrics.observe_depth(depth);
+                self.inner.in_flight_bytes.fetch_add(cost, Ordering::Relaxed);
                 Ok(seq)
             }
-            Err(_) => {
+            Err(Some(overloaded)) => Err(overloaded),
+            Err(None) => {
                 self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(crate::err!("server is shutting down (job rejected)"))
+                Err(SubmitError::Closed)
             }
         }
     }
@@ -250,7 +366,10 @@ impl CompressionServer {
             .set("store_misses", st.misses as f64)
             .set("store_stale_rejected", st.stale_rejected as f64)
             .set("store_saves", st.saves as f64)
+            .set("store_quarantine_evictions", st.quarantine_evictions as f64)
+            .set("store_degraded", if st.degraded { 1.0 } else { 0.0 })
             .set("store_load_seconds_total", st.load_seconds)
+            .set("in_flight_bytes", self.inner.in_flight_bytes.load(Ordering::Relaxed) as f64)
             .set("queue_depth", self.queue_depth() as f64);
         o
     }
@@ -274,6 +393,19 @@ impl Drop for CompressionServer {
 
 fn worker_loop(inner: &Inner) {
     while let Some(job) = inner.queue.pop() {
+        // Deadline at dequeue: a job whose budget lapsed while queued is
+        // answered with a typed rejection, never executed (and never
+        // attached to the coalescing table — its waiters deserve fresh
+        // timing anyway).
+        if job.deadline.is_some_and(|d| Instant::now() >= d) {
+            let queue_s = job.enqueued.elapsed().as_secs_f64();
+            let outcome = Err(format!(
+                "{} before execution (spent {queue_s:.3}s queued)",
+                deadline::EXCEEDED
+            ));
+            deliver(inner, job, &outcome, queue_s, 0.0, false);
+            continue;
+        }
         let key = job.spec.coalesce_key(&job.model);
         // Coalescing: identical to a job currently executing → park
         // behind it and receive its result (jobs are pure).
@@ -292,10 +424,14 @@ fn worker_loop(inner: &Inner) {
         // must become an error response, not a dead worker.
         let outcome: Result<JobResult, String> =
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                inner
-                    .registry
-                    .get(&job.model)
-                    .and_then(|engine| jobs::execute(&engine, &job.spec))
+                // Execution checkpoints (registry, per-layer loops) read
+                // the deadline from thread-local scope.
+                deadline::with_deadline(job.deadline, || {
+                    inner
+                        .registry
+                        .get(&job.model)
+                        .and_then(|engine| jobs::execute(&engine, &job.spec))
+                })
             }))
             .unwrap_or_else(|p| {
                 let msg = p
@@ -324,6 +460,14 @@ fn deliver(
     exec_s: f64,
     coalesced: bool,
 ) {
+    inner.in_flight_bytes.fetch_sub(job.cost, Ordering::Relaxed);
+    if !coalesced {
+        if let Err(msg) = outcome {
+            if msg.starts_with(deadline::EXCEEDED) {
+                inner.metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
     inner.metrics.observe_job(queue_s, exec_s, outcome.is_ok());
     // A dropped receiver just means the client went away; nothing to do.
     let _ = job.reply.send(Response {
@@ -390,10 +534,16 @@ where
             }
             Ok(Request::Control(ControlOp::Health)) => write_line(&server.health_json())?,
             Ok(Request::Control(ControlOp::Metrics)) => write_line(&server.metrics_json())?,
-            Ok(Request::Job { id, model, spec }) => {
-                if let Err(e) = server.submit(&model, spec, id.clone(), tx.clone()) {
+            Ok(Request::Job { id, model, spec, deadline_ms }) => {
+                let budget = deadline_ms.map(Duration::from_millis);
+                if let Err(e) =
+                    server.submit_with_deadline(&model, spec, id.clone(), budget, tx.clone())
+                {
                     let mut o = Json::obj();
-                    o.set("ok", false).set("error", e.to_string()).set("model", model.as_str());
+                    o.set("ok", false)
+                        .set("error", e.to_string())
+                        .set("rejected", e.kind())
+                        .set("model", model.as_str());
                     if let Some(id) = &id {
                         o.set("id", id.as_str());
                     }
@@ -436,7 +586,7 @@ mod tests {
             queue_cap: 16,
             models_dir: PathBuf::from("/nonexistent"),
             synthetic_only: true,
-            store_dir: None,
+            ..ServerConfig::default()
         })
     }
 
@@ -487,6 +637,76 @@ mod tests {
         server.submit(registry::SYNTHETIC_MODEL, JobSpec::Dense, None, tx).unwrap();
         assert!(rx.recv().unwrap().outcome.is_ok());
         server.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_is_a_typed_rejection_not_an_execution() {
+        let server = synthetic_server(1);
+        let (tx, rx) = mpsc::channel();
+        // Zero budget: expired by the time a worker dequeues it.
+        server
+            .submit_with_deadline(
+                registry::SYNTHETIC_MODEL,
+                JobSpec::Dense,
+                Some("late".into()),
+                Some(Duration::from_millis(0)),
+                tx,
+            )
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        let err = resp.outcome.unwrap_err();
+        assert!(err.starts_with(deadline::EXCEEDED), "{err}");
+        let j = resp.to_json();
+        assert_eq!(j.get("rejected").and_then(|v| v.as_str()), Some("deadline"));
+        assert_eq!(server.inner.metrics.deadline_expired.load(Ordering::Relaxed), 1);
+        // The gauge drains even for rejected jobs.
+        assert_eq!(server.inner.in_flight_bytes.load(Ordering::Relaxed), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn overload_sheds_with_typed_error() {
+        // No workers draining yet: fill past the watermark synchronously.
+        let server = CompressionServer::start(ServerConfig {
+            workers: 1,
+            queue_cap: 16,
+            models_dir: PathBuf::from("/nonexistent"),
+            synthetic_only: true,
+            shed_depth: Some(2),
+            ..ServerConfig::default()
+        });
+        let (tx, rx) = mpsc::channel();
+        // A slow-ish spec keeps the worker busy while we flood.
+        let spec = JobSpec::Prune {
+            method: PruneMethod::ExactObs,
+            sparsity: 0.5,
+            scope: LayerScope::All,
+        };
+        let mut accepted = 0usize;
+        let mut shed = 0usize;
+        for i in 0..12 {
+            match server.submit(
+                registry::SYNTHETIC_MODEL,
+                if i % 2 == 0 { spec.clone() } else { JobSpec::Dense },
+                None,
+                tx.clone(),
+            ) {
+                Ok(_) => accepted += 1,
+                Err(e @ SubmitError::Overloaded { .. }) => {
+                    assert_eq!(e.kind(), "overloaded");
+                    shed += 1;
+                }
+                Err(SubmitError::Closed) => panic!("not shutting down"),
+            }
+        }
+        drop(tx);
+        assert!(shed > 0, "watermark 2 must shed under a 12-job flood");
+        let resps: Vec<Response> = rx.iter().collect();
+        assert_eq!(resps.len(), accepted, "every accepted job is answered");
+        assert_eq!(server.inner.metrics.shed.load(Ordering::Relaxed), shed as u64);
+        assert_eq!(server.inner.metrics.rejected.load(Ordering::Relaxed), 0);
+        server.shutdown();
+        assert_eq!(server.inner.in_flight_bytes.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -564,7 +784,7 @@ mod tests {
                 queue_cap: 8,
                 models_dir: PathBuf::from("/nonexistent"),
                 synthetic_only: true,
-                store_dir: None,
+                ..ServerConfig::default()
             },
             input.as_bytes(),
             buf.clone(),

@@ -39,11 +39,33 @@ use std::time::Duration;
 /// shutdown flag.
 const POLL: Duration = Duration::from_millis(50);
 
+/// Default cap on one request line: 8 MiB (comfortably above any real
+/// job spec, far below a memory-exhaustion stream).
+const DEFAULT_MAX_LINE_BYTES: usize = 8 << 20;
+
 /// Largest accepted request line. A client streaming bytes with no
-/// newline past this is cut off with an error response instead of
-/// growing the reassembly buffer without bound (the snapshot reader
-/// caps its length fields for the same reason).
-const MAX_LINE_BYTES: usize = 1 << 20;
+/// newline past this is cut off with a typed `"rejected":"oversize"`
+/// error instead of growing the reassembly buffer without bound (the
+/// snapshot reader caps its length fields for the same reason).
+/// Overridable via `OBC_MAX_LINE_BYTES` (cached on first use; a
+/// non-numeric or zero value falls back to the default, logged).
+pub fn max_line_bytes() -> usize {
+    static CAP: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CAP.get_or_init(|| match std::env::var("OBC_MAX_LINE_BYTES") {
+        Err(_) => DEFAULT_MAX_LINE_BYTES,
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n > 0 => n,
+            _ => {
+                crate::warnlog!(
+                    "net",
+                    "ignoring OBC_MAX_LINE_BYTES='{v}' (want a positive integer); \
+                     using {DEFAULT_MAX_LINE_BYTES}"
+                );
+                DEFAULT_MAX_LINE_BYTES
+            }
+        },
+    })
+}
 
 /// Transport-level counters, shared by every connection of one
 /// [`serve_tcp`] front-end.
@@ -71,6 +93,7 @@ impl NetStats {
 /// Write one JSON line to a connection (shared between the writer
 /// thread and inline control responses), counting bytes out.
 fn write_json(out: &Mutex<TcpStream>, stats: &NetStats, j: &Json) -> std::io::Result<()> {
+    crate::faultpoint!("net.write")?;
     let line = j.to_string_compact();
     let mut o = out.lock().unwrap();
     o.write_all(line.as_bytes())?;
@@ -104,11 +127,15 @@ fn process_line(
             stats.augment(&mut m);
             let _ = write_json(out, stats, &m);
         }
-        Ok(Request::Job { id, model, spec }) => {
-            if let Err(e) = server.submit(&model, spec, id.clone(), tx.clone()) {
+        Ok(Request::Job { id, model, spec, deadline_ms }) => {
+            let budget = deadline_ms.map(Duration::from_millis);
+            if let Err(e) =
+                server.submit_with_deadline(&model, spec, id.clone(), budget, tx.clone())
+            {
                 let mut o = Json::obj();
                 o.set("ok", false)
                     .set("error", e.to_string())
+                    .set("rejected", e.kind())
                     .set("model", model.as_str());
                 if let Some(id) = &id {
                     o.set("id", id.as_str());
@@ -139,15 +166,46 @@ fn handle_connection(
     // The read timeout doubles as the shutdown poll for idle
     // connections; request bytes already in flight always win the race
     // because a readable socket returns data, not a timeout.
-    let _ = stream.set_read_timeout(Some(POLL));
+    let read_to = stream.set_read_timeout(Some(POLL));
     // Bounded writes: a client that stops reading (full receive window)
     // must stall only its own responses, never the server's shutdown
     // drain — a timed-out write errors, the writer keeps draining its
     // channel, and the stalled connection's output is abandoned.
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let write_to = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    // Timeouts are load-bearing (shutdown poll, stalled-client bound):
+    // if the socket refuses them, fall back to a watchdog thread that
+    // hard-closes the connection when the server drains — blocking reads
+    // and writes then error out instead of wedging this handler forever.
+    let watchdog_done = Arc::new(AtomicBool::new(false));
+    if read_to.is_err() || write_to.is_err() {
+        crate::warnlog!(
+            "net",
+            "socket timeouts unavailable (read: {read_to:?}, write: {write_to:?}); \
+             falling back to a hard-close shutdown watchdog"
+        );
+        if let Ok(guard) = stream.try_clone() {
+            let done = Arc::clone(&watchdog_done);
+            let shutdown = Arc::clone(shutdown);
+            let _ = thread::Builder::new().name("obc-conn-watchdog".into()).spawn(move || {
+                loop {
+                    if done.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    if shutdown.load(Ordering::SeqCst) {
+                        let _ = guard.shutdown(std::net::Shutdown::Both);
+                        return;
+                    }
+                    thread::sleep(POLL);
+                }
+            });
+        }
+    }
     let out = match stream.try_clone() {
         Ok(s) => Arc::new(Mutex::new(s)),
-        Err(_) => return,
+        Err(_) => {
+            watchdog_done.store(true, Ordering::SeqCst);
+            return;
+        }
     };
     let (tx, rx) = mpsc::channel::<Response>();
     let writer = {
@@ -185,12 +243,21 @@ fn handle_connection(
                 break;
             }
             Ok(n) => {
+                // Injected read fault = the peer vanished mid-request:
+                // drop the partial buffer and close, exactly like a
+                // connection reset (accepted jobs still answer into the
+                // writer, which drains before the handler exits).
+                if crate::faultpoint!("net.read").is_err() {
+                    break;
+                }
                 stats.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
                 buf.extend_from_slice(&chunk[..n]);
-                if buf.len() > MAX_LINE_BYTES && !buf.contains(&b'\n') {
+                let cap = max_line_bytes();
+                if buf.len() > cap && !buf.contains(&b'\n') {
                     let mut o = Json::obj();
                     o.set("ok", false)
-                        .set("error", format!("request line exceeds {MAX_LINE_BYTES} bytes"));
+                        .set("error", format!("request line exceeds {cap} bytes"))
+                        .set("rejected", "oversize");
                     let _ = write_json(&out, stats, &o);
                     break;
                 }
@@ -245,6 +312,7 @@ fn handle_connection(
     } else {
         let _ = writer.join();
     }
+    watchdog_done.store(true, Ordering::SeqCst);
 }
 
 /// Run the line protocol over TCP: accept connections until a client

@@ -7,9 +7,23 @@
 //! shutdown: new pushes are refused, pops drain what was accepted and
 //! then return `None`, so every accepted job gets a response before the
 //! workers exit.
+//!
+//! [`Bounded::offer`] is the non-blocking admission-control variant:
+//! a full queue returns [`OfferError::Full`] immediately instead of
+//! parking the producer, letting the server shed load with a typed
+//! `Overloaded` rejection (see `ServerConfig::shed_depth`).
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+
+/// Why a non-blocking [`Bounded::offer`] refused an item (the item
+/// rides back so the caller can report its rejection).
+pub enum OfferError<T> {
+    /// At (or past) the given capacity limit right now.
+    Full(T),
+    /// [`Bounded::close`] was called (shutdown).
+    Closed(T),
+}
 
 struct State<T> {
     q: VecDeque<T>,
@@ -62,6 +76,26 @@ impl<T> Bounded<T> {
             }
             g = self.not_full.wait(g).unwrap();
         }
+    }
+
+    /// Non-blocking enqueue against `limit` (≤ the queue capacity; the
+    /// admission watermark may sit below it). Never parks: a full queue
+    /// is the caller's signal to shed the job instead of stretching
+    /// latency invisibly.
+    pub fn offer(&self, item: T, limit: usize) -> Result<usize, OfferError<T>> {
+        let limit = limit.min(self.cap).max(1);
+        let mut g = self.state.lock().unwrap();
+        if g.closed {
+            return Err(OfferError::Closed(item));
+        }
+        if g.q.len() >= limit {
+            return Err(OfferError::Full(item));
+        }
+        g.q.push_back(item);
+        let depth = g.q.len();
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(depth)
     }
 
     /// Dequeue, blocking while empty. `None` once the queue is closed
@@ -132,6 +166,27 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(20));
         q.push(7).map_err(|_| ()).unwrap();
         assert_eq!(consumer.join().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn offer_sheds_instead_of_blocking() {
+        let q = Bounded::new(4);
+        // Watermark below capacity: the third offer sheds.
+        assert!(q.offer(1, 2).is_ok());
+        assert!(q.offer(2, 2).is_ok());
+        match q.offer(3, 2) {
+            Err(OfferError::Full(item)) => assert_eq!(item, 3, "item rides back"),
+            _ => panic!("expected Full"),
+        }
+        // A blocking push would still be admitted (capacity is 4).
+        q.push(3).map_err(|_| ()).unwrap();
+        q.close();
+        match q.offer(4, 2) {
+            Err(OfferError::Closed(item)) => assert_eq!(item, 4),
+            _ => panic!("expected Closed"),
+        }
+        let drained: Vec<i32> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(drained, vec![1, 2, 3], "accepted jobs survive shedding");
     }
 
     #[test]

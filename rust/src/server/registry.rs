@@ -99,6 +99,10 @@ impl EngineRegistry {
     /// Resolve a model to its shared engine, calibrating at most once
     /// per model regardless of how many jobs arrive concurrently.
     pub fn get(&self, model: &str) -> crate::util::error::Result<Arc<CompressionEngine>> {
+        // Deadline checkpoint before the (potentially expensive, single
+        // flight) calibration — an already-expired job never warms an
+        // engine it can't use.
+        crate::util::deadline::check("registry.get")?;
         let (engine, _shared) = self
             .slots
             .get_or_build(model, || {

@@ -212,6 +212,7 @@ pub fn write_snapshot_file(
     }
     let tmp = path.with_extension(format!("tmp{}", std::process::id()));
     let result = (|| -> crate::util::error::Result<()> {
+        crate::faultpoint!("store.save.write")?;
         let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
         write_snapshot(&mut f, key, fingerprint, db)?;
         f.flush()?;
@@ -221,8 +222,12 @@ pub fn write_snapshot_file(
         let _ = std::fs::remove_file(&tmp);
         return Err(e.context(format!("writing snapshot {}", path.display())));
     }
-    std::fs::rename(&tmp, path)
-        .map_err(|e| crate::err!("publishing snapshot {}: {e}", path.display()))?;
+    let rename = crate::faultpoint!("store.save.rename")
+        .and_then(|()| std::fs::rename(&tmp, path));
+    if let Err(e) = rename {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(crate::err!("publishing snapshot {}: {e}", path.display()));
+    }
     Ok(())
 }
 
@@ -310,6 +315,7 @@ mod tests {
 
     #[test]
     fn snapshot_file_roundtrip_via_tmp_rename() {
+        let _g = crate::util::faultpoint::test_guard();
         let dir = std::env::temp_dir().join("obc_store_format_test");
         let _ = std::fs::remove_dir_all(&dir);
         let path = dir.join("snap.obcdb");

@@ -14,17 +14,36 @@
 //! wrong with it — truncation, a flipped byte (per-section CRC-32), a
 //! wrong format version, a foreign key hashed to the same file name, or
 //! a calibration fingerprint that no longer matches the engine — is
-//! **rejected**: the file is quarantined (renamed aside for post-mortem)
-//! and the caller falls back to a live build that is bit-identical to
-//! the no-store path. See `rust/tests/store_roundtrip.rs`.
+//! **rejected**: the file is quarantined (renamed aside for post-mortem,
+//! at most [`QUARANTINE_CAP`] kept per key) and the caller falls back to
+//! a live build that is bit-identical to the no-store path. See
+//! `rust/tests/store_roundtrip.rs`.
+//!
+//! Failure model: the store must never take the serving path down with
+//! it. Saves retry with bounded backoff ([`crate::util::retry`]); a dir
+//! that keeps failing saves — or keeps a corrupt snapshot it cannot
+//! quarantine, which would reject-loop on every load — flips the store
+//! **degraded** (memory-only: loads miss, write-throughs are skipped)
+//! with a `store_degraded` metric, rather than failing or re-tripping
+//! every subsequent build. Fault sites (`store.open`, `store.load.*`,
+//! `store.save.*`) let `rust/tests/chaos.rs` force each branch.
 
 pub mod format;
 
 use crate::db::ModelDb;
 use crate::util::io::fnv64;
+use crate::util::retry;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Instant;
+
+/// Quarantined snapshots kept per key (oldest evicted past this).
+pub const QUARANTINE_CAP: usize = 3;
+
+/// Consecutive hard failures (save retries exhausted, or a rejected
+/// snapshot that can be neither renamed aside nor removed) before the
+/// store flips degraded.
+const DEGRADE_AFTER: u64 = 3;
 
 /// Counter snapshot of one store (surfaced in the server metrics).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -38,6 +57,10 @@ pub struct StoreStats {
     pub stale_rejected: u64,
     /// Snapshots written through on build (or imported).
     pub saves: u64,
+    /// Quarantined files evicted to hold [`QUARANTINE_CAP`] per key.
+    pub quarantine_evictions: u64,
+    /// Store flipped to memory-only after persistent dir failures.
+    pub degraded: bool,
     /// Total wall-clock seconds spent loading snapshots (hits only).
     pub load_seconds: f64,
 }
@@ -52,13 +75,20 @@ pub struct SnapshotStore {
     misses: AtomicU64,
     stale_rejected: AtomicU64,
     saves: AtomicU64,
+    quarantine_evictions: AtomicU64,
     load_ns: AtomicU64,
+    degraded: AtomicBool,
+    /// Consecutive save failures / failed quarantines (reset on any
+    /// success); either streak reaching [`DEGRADE_AFTER`] degrades.
+    save_fail_streak: AtomicU64,
+    quarantine_fail_streak: AtomicU64,
 }
 
 impl SnapshotStore {
     /// Open (creating if needed) a snapshot directory.
     pub fn open(dir: &Path) -> crate::util::error::Result<SnapshotStore> {
-        std::fs::create_dir_all(dir)
+        crate::faultpoint!("store.open")
+            .and_then(|()| std::fs::create_dir_all(dir))
             .map_err(|e| crate::err!("creating snapshot dir {}: {e}", dir.display()))?;
         Ok(SnapshotStore {
             dir: dir.to_path_buf(),
@@ -66,7 +96,11 @@ impl SnapshotStore {
             misses: AtomicU64::new(0),
             stale_rejected: AtomicU64::new(0),
             saves: AtomicU64::new(0),
+            quarantine_evictions: AtomicU64::new(0),
             load_ns: AtomicU64::new(0),
+            degraded: AtomicBool::new(false),
+            save_fail_streak: AtomicU64::new(0),
+            quarantine_fail_streak: AtomicU64::new(0),
         })
     }
 
@@ -79,13 +113,33 @@ impl SnapshotStore {
         self.dir.join(format!("{:016x}.obcdb", fnv64(key.as_bytes())))
     }
 
+    /// Memory-only mode: persistent dir failures tripped the breaker.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
     pub fn stats(&self) -> StoreStats {
         StoreStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             stale_rejected: self.stale_rejected.load(Ordering::Relaxed),
             saves: self.saves.load(Ordering::Relaxed),
+            quarantine_evictions: self.quarantine_evictions.load(Ordering::Relaxed),
+            degraded: self.is_degraded(),
             load_seconds: self.load_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+
+    fn bump_streak(&self, streak: &AtomicU64, what: &str) {
+        let n = streak.fetch_add(1, Ordering::Relaxed) + 1;
+        if n >= DEGRADE_AFTER && !self.degraded.swap(true, Ordering::Relaxed) {
+            crate::warnlog!(
+                "store",
+                "{} {what} failures in a row — store {} degraded to memory-only \
+                 (loads miss, write-throughs skipped)",
+                n,
+                self.dir.display()
+            );
         }
     }
 
@@ -94,6 +148,10 @@ impl SnapshotStore {
     /// either no snapshot exists (miss) or it was rejected and
     /// quarantined (corrupt / stale — never silently served).
     pub fn load(&self, key: &str, fingerprint: u64) -> Option<ModelDb> {
+        if self.is_degraded() {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
         let path = self.snapshot_path(key);
         let t0 = Instant::now();
         // Open first and branch on the error, instead of a separate
@@ -101,7 +159,9 @@ impl SnapshotStore {
         // deleted (or quarantined by another process) between the probe
         // and the read must count as a clean miss, not as a rejection
         // that quarantines a path with no file behind it.
-        let file = match std::fs::File::open(&path) {
+        let file = match crate::faultpoint!("store.load.open")
+            .and_then(|()| std::fs::File::open(&path))
+        {
             Ok(f) => f,
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
@@ -112,12 +172,17 @@ impl SnapshotStore {
                 return None;
             }
         };
+        if let Err(e) = crate::faultpoint!("store.load.read") {
+            self.reject(&path, key, &format!("read {}: {e}", path.display()));
+            return None;
+        }
         let mut reader = std::io::BufReader::new(file);
         match format::read_snapshot(&mut reader)
             .map_err(|e| e.context(format!("snapshot {}", path.display())))
         {
             Ok((meta, db)) if meta.key == key && meta.fingerprint == fingerprint => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                self.quarantine_fail_streak.store(0, Ordering::Relaxed);
                 self.load_ns
                     .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 crate::info!(
@@ -147,26 +212,81 @@ impl SnapshotStore {
         }
     }
 
+    /// Pick the quarantine destination for `path`, holding at most
+    /// [`QUARANTINE_CAP`] quarantined files per key: the first free slot
+    /// (`.obcdb.quarantined`, then `.quarantined.1`, `.quarantined.2`),
+    /// or — all full — the oldest slot, whose occupant is evicted.
+    fn quarantine_slot(&self, path: &Path) -> PathBuf {
+        let slot = |i: usize| {
+            if i == 0 {
+                path.with_extension("obcdb.quarantined")
+            } else {
+                path.with_extension(format!("obcdb.quarantined.{i}"))
+            }
+        };
+        let mut oldest: Option<(std::time::SystemTime, PathBuf)> = None;
+        for i in 0..QUARANTINE_CAP {
+            let candidate = slot(i);
+            match std::fs::metadata(&candidate) {
+                Err(_) => return candidate, // free (or unreadable: reuse)
+                Ok(md) => {
+                    let mtime = md.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+                    let older = match &oldest {
+                        None => true,
+                        Some((t, _)) => mtime < *t,
+                    };
+                    if older {
+                        oldest = Some((mtime, candidate));
+                    }
+                }
+            }
+        }
+        let (_, victim) = oldest.expect("QUARANTINE_CAP > 0");
+        if std::fs::remove_file(&victim).is_ok() {
+            self.quarantine_evictions.fetch_add(1, Ordering::Relaxed);
+            crate::warnlog!(
+                "store",
+                "evicted oldest quarantined snapshot {} (cap {QUARANTINE_CAP} per key)",
+                victim.display()
+            );
+        }
+        victim
+    }
+
     /// Quarantine a rejected snapshot: rename it aside so the next load
-    /// is a clean miss, keeping the bytes for post-mortem.
+    /// is a clean miss, keeping the bytes for post-mortem. A snapshot
+    /// that can be neither renamed nor removed would reject-loop on
+    /// every load — count it toward degrading the store.
     fn reject(&self, path: &Path, key: &str, reason: &str) {
         self.stale_rejected.fetch_add(1, Ordering::Relaxed);
-        let quarantined = path.with_extension("obcdb.quarantined");
-        let moved = std::fs::rename(path, &quarantined).is_ok();
-        crate::warnlog!(
-            "store",
-            "rejected snapshot for '{key}': {reason} ({})",
-            if moved {
+        let quarantined = self.quarantine_slot(path);
+        let disposition = match std::fs::rename(path, &quarantined) {
+            Ok(()) => {
+                self.quarantine_fail_streak.store(0, Ordering::Relaxed);
                 format!("quarantined to {}", quarantined.display())
-            } else {
-                let _ = std::fs::remove_file(path);
-                "removed".to_string()
             }
-        );
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                // Nothing on disk behind the rejection (e.g. an injected
+                // open fault on a missing file): nothing to quarantine,
+                // and nothing that could reject-loop.
+                "no file to quarantine".to_string()
+            }
+            Err(rename_err) => {
+                if std::fs::remove_file(path).is_ok() {
+                    self.quarantine_fail_streak.store(0, Ordering::Relaxed);
+                    "removed".to_string()
+                } else {
+                    self.bump_streak(&self.quarantine_fail_streak, "quarantine");
+                    format!("stuck on disk (rename failed: {rename_err})")
+                }
+            }
+        };
+        crate::warnlog!("store", "rejected snapshot for '{key}': {reason} ({disposition})");
     }
 
     /// Write-through after a live build (crash-safe: temp file +
-    /// rename). Returns the published path.
+    /// rename, with bounded retry). Returns the published path — which
+    /// a degraded store skips writing (memory-only mode).
     pub fn save(
         &self,
         key: &str,
@@ -174,9 +294,23 @@ impl SnapshotStore {
         db: &ModelDb,
     ) -> crate::util::error::Result<PathBuf> {
         let path = self.snapshot_path(key);
-        format::write_snapshot_file(&path, key, fingerprint, db)?;
-        self.saves.fetch_add(1, Ordering::Relaxed);
-        Ok(path)
+        if self.is_degraded() {
+            crate::debuglog!("store", "degraded: skipping write-through for '{key}'");
+            return Ok(path);
+        }
+        match retry::retry(&retry::Backoff::disk(), &format!("snapshot save '{key}'"), |_| {
+            format::write_snapshot_file(&path, key, fingerprint, db)
+        }) {
+            Ok(()) => {
+                self.saves.fetch_add(1, Ordering::Relaxed);
+                self.save_fail_streak.store(0, Ordering::Relaxed);
+                Ok(path)
+            }
+            Err(e) => {
+                self.bump_streak(&self.save_fail_streak, "save");
+                Err(e)
+            }
+        }
     }
 
     /// Import an exported snapshot file (`obc db export` output) into
@@ -214,6 +348,7 @@ mod tests {
 
     #[test]
     fn save_load_hit_counts_and_roundtrips() {
+        let _g = crate::util::faultpoint::test_guard();
         let store = SnapshotStore::open(&tmp("hit")).unwrap();
         assert!(store.load("k", 7).is_none(), "empty store misses");
         assert_eq!(store.stats().misses, 1);
@@ -224,10 +359,13 @@ mod tests {
         let s = store.stats();
         assert_eq!((s.hits, s.misses, s.stale_rejected, s.saves), (1, 1, 0, 1));
         assert!(s.load_seconds >= 0.0);
+        assert!(!s.degraded);
+        assert_eq!(s.quarantine_evictions, 0);
     }
 
     #[test]
     fn fingerprint_mismatch_rejects_and_quarantines() {
+        let _g = crate::util::faultpoint::test_guard();
         let store = SnapshotStore::open(&tmp("fp")).unwrap();
         store.save("k", 7, &tiny_db()).unwrap();
         assert!(store.load("k", 8).is_none(), "stale fingerprint rejected");
@@ -242,6 +380,7 @@ mod tests {
 
     #[test]
     fn corrupt_file_rejects_and_quarantines() {
+        let _g = crate::util::faultpoint::test_guard();
         let store = SnapshotStore::open(&tmp("corrupt")).unwrap();
         store.save("k", 7, &tiny_db()).unwrap();
         let path = store.snapshot_path("k");
@@ -260,6 +399,7 @@ mod tests {
     /// path. Regression test for the probe/read race.
     #[test]
     fn file_deleted_before_read_is_a_miss_not_a_rejection() {
+        let _g = crate::util::faultpoint::test_guard();
         let store = SnapshotStore::open(&tmp("race")).unwrap();
         store.save("k", 7, &tiny_db()).unwrap();
         let path = store.snapshot_path("k");
@@ -277,6 +417,7 @@ mod tests {
 
     #[test]
     fn import_revalidates_and_lands_under_canonical_name() {
+        let _g = crate::util::faultpoint::test_guard();
         let export_dir = tmp("import_src");
         std::fs::create_dir_all(&export_dir).unwrap();
         let exported = export_dir.join("handoff.obcdb");
@@ -294,5 +435,71 @@ mod tests {
         let bad = export_dir.join("bad.obcdb");
         std::fs::write(&bad, &bytes).unwrap();
         assert!(store.import(&bad).is_err());
+    }
+
+    /// Quarantine growth is capped per key: the 4th rejection evicts
+    /// the oldest quarantined file instead of adding a 4th.
+    #[test]
+    fn quarantine_cap_evicts_oldest() {
+        let _g = crate::util::faultpoint::test_guard();
+        let store = SnapshotStore::open(&tmp("qcap")).unwrap();
+        let path = store.snapshot_path("k");
+        for round in 0..(QUARANTINE_CAP as u64 + 2) {
+            // A stale fingerprint forces a rejection each round.
+            store.save("k", round, &tiny_db()).unwrap();
+            assert!(store.load("k", 9999).is_none());
+        }
+        let quarantined: Vec<_> = std::fs::read_dir(store.dir())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .filter(|n| n.contains("quarantined"))
+            .collect();
+        assert_eq!(
+            quarantined.len(),
+            QUARANTINE_CAP,
+            "cap holds: {quarantined:?}"
+        );
+        let s = store.stats();
+        assert_eq!(s.stale_rejected, QUARANTINE_CAP as u64 + 2);
+        assert_eq!(s.quarantine_evictions, 2, "two oldest evicted");
+        assert!(!s.degraded, "successful quarantines never degrade");
+    }
+
+    /// Persistent save failures flip the store degraded: loads miss,
+    /// write-throughs are skipped, nothing errors.
+    #[test]
+    fn save_failure_streak_degrades_to_memory_only() {
+        let _g = crate::util::faultpoint::test_guard();
+        let store = SnapshotStore::open(&tmp("degrade")).unwrap();
+        store.save("k", 7, &tiny_db()).unwrap();
+        crate::util::faultpoint::install_from_spec("store.save.write=err@1", 5).unwrap();
+        for i in 0..DEGRADE_AFTER {
+            assert!(store.save("other", i, &tiny_db()).is_err());
+        }
+        crate::util::faultpoint::clear();
+        assert!(store.stats().degraded, "streak of {DEGRADE_AFTER} degrades");
+        // Memory-only: the healthy snapshot is no longer consulted…
+        assert!(store.load("k", 7).is_none());
+        assert_eq!(store.stats().hits, 0);
+        // …and saves succeed as no-ops (callers never see the failure).
+        let saves_before = store.stats().saves;
+        store.save("k3", 1, &tiny_db()).unwrap();
+        assert_eq!(store.stats().saves, saves_before, "degraded save is skipped");
+    }
+
+    /// One transient save failure is retried/absorbed without
+    /// degrading: the streak resets on the next success.
+    #[test]
+    fn single_save_failure_does_not_degrade() {
+        let _g = crate::util::faultpoint::test_guard();
+        let store = SnapshotStore::open(&tmp("transient")).unwrap();
+        crate::util::faultpoint::install_from_spec("store.save.write=err@1", 5).unwrap();
+        assert!(store.save("k", 1, &tiny_db()).is_err());
+        crate::util::faultpoint::clear();
+        store.save("k", 1, &tiny_db()).unwrap();
+        let s = store.stats();
+        assert!(!s.degraded);
+        assert_eq!(s.saves, 1);
+        assert!(store.load("k", 1).is_some(), "store still serves");
     }
 }

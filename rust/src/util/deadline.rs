@@ -1,0 +1,140 @@
+//! Per-job deadline propagation: a thread-local `Instant` checked at
+//! natural compute checkpoints (layer boundaries, sweep setup) so an
+//! expired job stops burning its worker instead of running to
+//! completion for a client that already gave up.
+//!
+//! A deadline is scoped with [`with_deadline`] (or [`set`], whose guard
+//! restores the previous value on drop) and inherited explicitly by
+//! fan-out threads via [`current`] + `set` — thread-locals don't cross
+//! `thread::scope` boundaries on their own. [`check`] errors with a
+//! message starting with [`EXCEEDED`]; the server matches that prefix
+//! to classify the failure as a typed `deadline` rejection rather than
+//! an execution error (see `server/mod.rs`).
+
+use std::cell::Cell;
+use std::time::{Duration, Instant};
+
+/// Prefix of every deadline error message (stable — the serving layer
+/// and tests match on it).
+pub const EXCEEDED: &str = "deadline exceeded";
+
+thread_local! {
+    static DEADLINE: Cell<Option<Instant>> = const { Cell::new(None) };
+}
+
+/// Restores the previous deadline when dropped.
+pub struct DeadlineGuard {
+    prev: Option<Instant>,
+}
+
+impl Drop for DeadlineGuard {
+    fn drop(&mut self) {
+        DEADLINE.with(|d| d.set(self.prev));
+    }
+}
+
+/// Install `deadline` on this thread until the guard drops. `None`
+/// clears it (useful to shield helper work from a caller's deadline).
+#[must_use = "the deadline lasts only while the guard lives"]
+pub fn set(deadline: Option<Instant>) -> DeadlineGuard {
+    DeadlineGuard { prev: DEADLINE.with(|d| d.replace(deadline)) }
+}
+
+/// The deadline in force on this thread, if any. Fan-out code captures
+/// this before spawning and re-`set`s it inside each worker.
+pub fn current() -> Option<Instant> {
+    DEADLINE.with(|d| d.get())
+}
+
+/// True when a deadline is set and already past.
+pub fn expired() -> bool {
+    current().is_some_and(|d| Instant::now() >= d)
+}
+
+/// Time left before the current deadline (`None` if no deadline).
+pub fn remaining() -> Option<Duration> {
+    current().map(|d| d.saturating_duration_since(Instant::now()))
+}
+
+/// Checkpoint: `Err` (message prefixed [`EXCEEDED`], naming `what`)
+/// once the current deadline has passed; `Ok` otherwise.
+pub fn check(what: &str) -> crate::util::error::Result<()> {
+    if let Some(d) = current() {
+        let now = Instant::now();
+        if now >= d {
+            return Err(crate::err!(
+                "{EXCEEDED} at {what} ({:.1}ms over budget)",
+                now.saturating_duration_since(d).as_secs_f64() * 1e3
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Run `f` with `deadline` in force on this thread.
+pub fn with_deadline<T>(deadline: Option<Instant>, f: impl FnOnce() -> T) -> T {
+    let _g = set(deadline);
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_deadline_always_passes() {
+        assert_eq!(current(), None);
+        assert!(!expired());
+        assert!(check("here").is_ok());
+        assert_eq!(remaining(), None);
+    }
+
+    #[test]
+    fn scoped_deadline_checks_and_restores() {
+        let d = Instant::now() + Duration::from_secs(60);
+        with_deadline(Some(d), || {
+            assert_eq!(current(), Some(d));
+            assert!(check("inside").is_ok());
+            assert!(remaining().unwrap() > Duration::from_secs(50));
+            // Nested scope overrides, then restores.
+            let past = Instant::now() - Duration::from_millis(1);
+            with_deadline(Some(past), || {
+                assert!(expired());
+                let e = check("layer fc1").unwrap_err().to_string();
+                assert!(e.starts_with(EXCEEDED), "prefix pinned: {e}");
+                assert!(e.contains("layer fc1"));
+            });
+            assert_eq!(current(), Some(d));
+            assert!(check("after nest").is_ok());
+        });
+        assert_eq!(current(), None);
+    }
+
+    #[test]
+    fn guard_restores_on_drop_and_none_shields() {
+        let d = Instant::now() - Duration::from_millis(1);
+        let g = set(Some(d));
+        assert!(expired());
+        {
+            let _shield = set(None);
+            assert!(check("shielded").is_ok());
+        }
+        assert!(check("back").is_err());
+        drop(g);
+        assert!(check("cleared").is_ok());
+    }
+
+    #[test]
+    fn deadline_is_per_thread_until_inherited() {
+        let d = Instant::now() - Duration::from_millis(1);
+        let _g = set(Some(d));
+        let inherited = current();
+        std::thread::scope(|sc| {
+            sc.spawn(|| {
+                assert!(check("fresh thread").is_ok(), "not inherited implicitly");
+                let _g = set(inherited);
+                assert!(check("after inherit").is_err());
+            });
+        });
+    }
+}

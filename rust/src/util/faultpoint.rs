@@ -1,0 +1,381 @@
+//! Named, seeded-deterministic fault injection for chaos testing.
+//!
+//! Production code marks failure-capable boundaries with
+//! `crate::faultpoint!("store.load.open")?;` — a named **site**. With no
+//! plan installed the check is a single relaxed atomic load (always
+//! `Ok`), so shipping the sites costs nothing. A chaos test (or the
+//! `OBC_FAULTS` env var) installs a **plan**: rules matching sites by
+//! exact name, `prefix.*`, or `*`, each firing an action — an injected
+//! `io::Error`, a delay, or a panic — with a given probability.
+//!
+//! Firing is **seeded-deterministic**: whether hit number `k` of a site
+//! fires depends only on `(seed, site, k)`, never on thread timing, so
+//! a chaos run injects the same multiset of faults every time. The
+//! registry also records every site that checked in while a plan was
+//! active, so tests can assert catalog coverage (every shipped site was
+//! actually exercised — see [`CATALOG`] and `rust/tests/chaos.rs`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::Duration;
+
+/// Every fault site compiled into the crate. Chaos tests assert that a
+/// wildcard plan observes exactly these (coverage = no orphaned docs,
+/// no unregistered sites). Keep sorted.
+pub const CATALOG: &[&str] = &[
+    "engine.layer",
+    "net.read",
+    "net.write",
+    "queue.push",
+    "store.load.open",
+    "store.load.read",
+    "store.open",
+    "store.save.rename",
+    "store.save.write",
+    "sweep.redamp.nonspd",
+];
+
+/// What an armed rule does when it fires.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultAction {
+    /// Return `io::Error` (kind `Other`, message names the site).
+    Error,
+    /// Sleep, then proceed normally.
+    Delay(Duration),
+    /// Panic (exercises the worker panic-isolation path).
+    Panic,
+}
+
+#[derive(Debug, Clone)]
+struct FaultRule {
+    pattern: String,
+    action: FaultAction,
+    prob: f64,
+}
+
+impl FaultRule {
+    fn matches(&self, site: &str) -> bool {
+        if self.pattern == "*" {
+            return true;
+        }
+        if let Some(prefix) = self.pattern.strip_suffix(".*") {
+            return site.starts_with(prefix)
+                && site.len() > prefix.len()
+                && site.as_bytes()[prefix.len()] == b'.';
+        }
+        self.pattern == site
+    }
+}
+
+#[derive(Default)]
+struct Registry {
+    rules: Vec<FaultRule>,
+    seed: u64,
+    /// site -> (checks while armed, fires).
+    counters: BTreeMap<String, (u64, u64)>,
+}
+
+/// Fast path: no plan installed → `check` is one relaxed load.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+
+fn registry() -> &'static Mutex<Registry> {
+    static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Registry::default()))
+}
+
+/// SplitMix64 — the same finalizer the deterministic RNG seeds with.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Deterministic uniform in [0,1) from (seed, site, hit index).
+fn roll(seed: u64, site: &str, hit: u64) -> f64 {
+    let h = mix(seed ^ mix(crate::util::io::fnv64(site.as_bytes()) ^ mix(hit)));
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// Parse one `site=action[@prob]` clause. Actions: `err`, `panic`,
+/// `delay:<N>ms`. Probability defaults to 1.
+fn parse_rule(clause: &str) -> Result<FaultRule, String> {
+    let (pattern, rest) = clause
+        .split_once('=')
+        .ok_or_else(|| format!("fault clause '{clause}': expected site=action[@prob]"))?;
+    let (action_s, prob_s) = match rest.split_once('@') {
+        Some((a, p)) => (a, Some(p)),
+        None => (rest, None),
+    };
+    let action = if action_s == "err" {
+        FaultAction::Error
+    } else if action_s == "panic" {
+        FaultAction::Panic
+    } else if let Some(ms) = action_s.strip_prefix("delay:").and_then(|d| d.strip_suffix("ms")) {
+        let ms: u64 =
+            ms.parse().map_err(|e| format!("fault clause '{clause}': bad delay: {e}"))?;
+        FaultAction::Delay(Duration::from_millis(ms))
+    } else {
+        return Err(format!(
+            "fault clause '{clause}': unknown action '{action_s}' (err|panic|delay:<N>ms)"
+        ));
+    };
+    let prob = match prob_s {
+        Some(p) => {
+            let p: f64 =
+                p.parse().map_err(|e| format!("fault clause '{clause}': bad probability: {e}"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("fault clause '{clause}': probability {p} not in [0,1]"));
+            }
+            p
+        }
+        None => 1.0,
+    };
+    Ok(FaultRule { pattern: pattern.trim().to_string(), action, prob })
+}
+
+/// Install a plan from a spec string, e.g.
+/// `"store.load.open=err@0.5,net.read=delay:5ms@0.25,*=err@0"`.
+/// Replaces any existing plan and resets all counters.
+pub fn install_from_spec(spec: &str, seed: u64) -> Result<(), String> {
+    let mut rules = Vec::new();
+    for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+        rules.push(parse_rule(clause)?);
+    }
+    let mut reg = registry().lock().unwrap();
+    reg.rules = rules;
+    reg.seed = seed;
+    reg.counters.clear();
+    ARMED.store(!reg.rules.is_empty(), Ordering::Release);
+    Ok(())
+}
+
+/// Remove the plan: every site goes back to the one-atomic-load path.
+/// Counters are kept for inspection until the next install.
+pub fn clear() {
+    let mut reg = registry().lock().unwrap();
+    reg.rules.clear();
+    ARMED.store(false, Ordering::Release);
+}
+
+/// Times a site fired (injected a fault) under the current plan.
+pub fn fired(site: &str) -> u64 {
+    registry().lock().unwrap().counters.get(site).map(|c| c.1).unwrap_or(0)
+}
+
+/// Total fires across all sites under the current plan.
+pub fn total_fired() -> u64 {
+    registry().lock().unwrap().counters.values().map(|c| c.1).sum()
+}
+
+/// Every site that called [`check`] while a plan was armed (coverage).
+pub fn seen_sites() -> Vec<String> {
+    registry().lock().unwrap().counters.keys().cloned().collect()
+}
+
+fn init_from_env() {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("OBC_FAULTS") {
+            let seed = std::env::var("OBC_FAULT_SEED")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0xC0FFEE);
+            match install_from_spec(&spec, seed) {
+                Ok(()) => crate::warnlog!(
+                    "faultpoint",
+                    "OBC_FAULTS armed (seed {seed}): {spec}"
+                ),
+                Err(e) => crate::warnlog!("faultpoint", "ignoring OBC_FAULTS: {e}"),
+            }
+        }
+    });
+}
+
+/// The hook every site calls (via [`crate::faultpoint!`]). Disabled:
+/// one relaxed atomic load, always `Ok`. Armed: applies the first
+/// matching rule with a seeded-deterministic roll.
+pub fn check(site: &'static str) -> std::io::Result<()> {
+    init_from_env();
+    if !ARMED.load(Ordering::Acquire) {
+        return Ok(());
+    }
+    let action = {
+        let mut reg = registry().lock().unwrap();
+        let seed = reg.seed;
+        let entry = reg.counters.entry(site.to_string()).or_insert((0, 0));
+        let hit = entry.0;
+        entry.0 += 1;
+        let rules = &reg.rules;
+        let fire = rules.iter().find(|r| r.matches(site)).and_then(|r| {
+            (roll(seed, site, hit) < r.prob).then(|| r.action.clone())
+        });
+        if fire.is_some() {
+            reg.counters.get_mut(site).unwrap().1 += 1;
+        }
+        fire
+    };
+    match action {
+        None => Ok(()),
+        Some(FaultAction::Error) => Err(std::io::Error::other(format!(
+            "injected fault at {site}"
+        ))),
+        Some(FaultAction::Delay(d)) => {
+            std::thread::sleep(d);
+            Ok(())
+        }
+        Some(FaultAction::Panic) => panic!("injected panic at {site}"),
+    }
+}
+
+/// Boolean form for sites that don't thread an `io::Error` (e.g. the
+/// Cholesky re-damp path, where a fire means "pretend NonSpd").
+pub fn fires(site: &'static str) -> bool {
+    check(site).is_err()
+}
+
+/// Mark a failure-capable boundary. Expands to
+/// `util::faultpoint::check(site)` — an `io::Result<()>` the caller
+/// propagates with `?` (ObcError converts via `From<io::Error>`).
+#[macro_export]
+macro_rules! faultpoint {
+    ($site:literal) => {
+        $crate::util::faultpoint::check($site)
+    };
+}
+
+/// Serialize tests that install fault plans: the registry is
+/// process-global, so concurrent tests would clobber each other's
+/// plans. Every test arming faults takes this guard first (and the
+/// guard recovers from poisoning, since panic-action tests panic on
+/// purpose). Not for production use.
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    let guard = GATE.lock().unwrap_or_else(|p| p.into_inner());
+    clear(); // clean slate for the holder
+    guard
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The registry is process-global; serialize tests touching it.
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        test_guard()
+    }
+
+    // Armed tests below use a `t.*` site namespace no production code
+    // checks, so a concurrently-running lib test can never trip over a
+    // plan installed here (the guard serializes plan *writers*, but
+    // innocent tests traverse real sites without taking it).
+
+    #[test]
+    fn disarmed_is_ok_and_costless() {
+        let _g = lock();
+        assert!(check("t.alpha").is_ok());
+        assert!(!fires("t.beta"));
+    }
+
+    #[test]
+    fn exact_rule_fires_deterministically() {
+        let _g = lock();
+        install_from_spec("t.alpha=err@1", 7).unwrap();
+        let e = check("t.alpha").unwrap_err();
+        assert!(e.to_string().contains("injected fault at t.alpha"));
+        assert!(check("t.beta").is_ok(), "unmatched site passes");
+        assert_eq!(fired("t.alpha"), 1);
+        assert_eq!(total_fired(), 1);
+        clear();
+        assert!(check("t.alpha").is_ok());
+    }
+
+    #[test]
+    fn probability_is_seed_stable() {
+        let _g = lock();
+        let run = |seed: u64| -> Vec<bool> {
+            install_from_spec("t.flaky=err@0.5", seed).unwrap();
+            let v = (0..64).map(|_| check("t.flaky").is_err()).collect();
+            clear();
+            v
+        };
+        let a = run(42);
+        let b = run(42);
+        assert_eq!(a, b, "same seed, same fault schedule");
+        let c = run(43);
+        assert_ne!(a, c, "different seed, different schedule");
+        let fires = a.iter().filter(|&&f| f).count();
+        assert!((10..=54).contains(&fires), "p=0.5 over 64 hits: got {fires}");
+    }
+
+    #[test]
+    fn wildcard_and_prefix_patterns() {
+        // Pattern matching is pure — test it unarmed so a production
+        // site can never see these rules.
+        let rule = |pattern: &str| FaultRule {
+            pattern: pattern.to_string(),
+            action: FaultAction::Error,
+            prob: 1.0,
+        };
+        assert!(rule("store.*").matches("store.load.open"));
+        assert!(rule("store.*").matches("store.save.write"));
+        assert!(!rule("store.*").matches("net.read"));
+        assert!(!rule("store.*").matches("storefront.open"), "prefix is dot-delimited");
+        assert!(rule("*").matches("anything.at.all"));
+        assert!(rule("net.read").matches("net.read"));
+        assert!(!rule("net.read").matches("net.write"));
+    }
+
+    #[test]
+    fn zero_probability_wildcard_sees_sites_without_firing() {
+        let _g = lock();
+        // Safe to arm globally: p=0 never injects, it only records
+        // coverage — the same plan chaos tests use for the catalog.
+        install_from_spec("*=err@0", 1).unwrap();
+        assert!(check("t.alpha").is_ok());
+        assert!(check("t.beta").is_ok());
+        assert_eq!(total_fired(), 0);
+        let seen = seen_sites();
+        assert!(seen.contains(&"t.alpha".to_string()));
+        assert!(seen.contains(&"t.beta".to_string()));
+        clear();
+    }
+
+    #[test]
+    fn delay_action_sleeps_then_passes() {
+        let _g = lock();
+        install_from_spec("t.slow=delay:5ms@1", 1).unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(check("t.slow").is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+        clear();
+    }
+
+    #[test]
+    fn panic_action_panics() {
+        let _g = lock();
+        install_from_spec("t.boom=panic@1", 1).unwrap();
+        let r = std::panic::catch_unwind(|| check("t.boom"));
+        clear();
+        assert!(r.is_err(), "panic action must panic");
+    }
+
+    #[test]
+    fn spec_parse_errors_are_reported() {
+        let _g = lock();
+        assert!(install_from_spec("nonsense", 1).is_err());
+        assert!(install_from_spec("a=frob", 1).is_err());
+        assert!(install_from_spec("a=err@1.5", 1).is_err());
+        assert!(install_from_spec("a=delay:xxms", 1).is_err());
+        clear();
+    }
+
+    #[test]
+    fn catalog_is_sorted_and_unique() {
+        let mut sorted = CATALOG.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted, CATALOG, "CATALOG must stay sorted + unique");
+    }
+}

@@ -1,6 +1,7 @@
 //! Substrate utilities built in-tree for the offline build: error type,
 //! mini-JSON, deterministic RNG, CLI parsing, thread pool, bench harness,
-//! logging, and a tiny property-testing helper.
+//! logging, a tiny property-testing helper, and the reliability kit
+//! (fault injection, bounded retry/backoff, per-job deadlines).
 
 pub mod error;
 pub mod json;
@@ -14,6 +15,9 @@ pub mod logging;
 pub mod proptest;
 pub mod io;
 pub mod single_flight;
+pub mod faultpoint;
+pub mod retry;
+pub mod deadline;
 
 pub use error::{ObcError, Result};
 

@@ -1,0 +1,167 @@
+//! Bounded retry with exponential backoff and deterministic jitter.
+//!
+//! One policy type serves every retry loop in the crate — snapshot
+//! store I/O, and the Cholesky re-damp escalation in
+//! `compress::sweep::run_with_redamp` (which uses a zero-sleep policy:
+//! its "backoff" is the ×10 damp escalation itself). Jitter is hashed
+//! from `(seed, attempt)`, not sampled, so a retry schedule is
+//! reproducible run to run — the same property the fault-injection
+//! layer guarantees (see `util::faultpoint`).
+
+use std::time::Duration;
+
+/// Retry policy: total attempt budget plus an exponential backoff
+/// curve. `attempts` counts the first try (so `attempts: 1` means "no
+/// retries"); `base` doubles per retry and is capped at `max`, then
+/// scaled by a deterministic jitter factor in [0.5, 1.0].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Backoff {
+    pub attempts: u32,
+    pub base: Duration,
+    pub max: Duration,
+    pub seed: u64,
+}
+
+impl Backoff {
+    pub const fn new(attempts: u32, base: Duration, max: Duration, seed: u64) -> Backoff {
+        Backoff { attempts, base, max, seed }
+    }
+
+    /// Local-disk policy: 3 attempts, 20ms doubling to a 200ms cap —
+    /// enough to ride out transient EINTR/ENOSPC-race style failures
+    /// without stalling a build worker.
+    pub const fn disk() -> Backoff {
+        Backoff::new(3, Duration::from_millis(20), Duration::from_millis(200), 0x0bc0_d15c)
+    }
+
+    /// No sleeping between attempts (in-memory escalation loops).
+    pub const fn no_sleep(attempts: u32) -> Backoff {
+        Backoff::new(attempts, Duration::ZERO, Duration::ZERO, 0)
+    }
+
+    /// Backoff before retry number `retry` (0-based): exponential,
+    /// capped, jittered deterministically into [0.5, 1.0]·delay.
+    pub fn delay(&self, retry: u32) -> Duration {
+        if self.base.is_zero() {
+            return Duration::ZERO;
+        }
+        let exp = self.base.saturating_mul(1u32 << retry.min(20));
+        let capped = exp.min(self.max);
+        // SplitMix-style hash of (seed, retry) → factor in [0.5, 1.0].
+        let mut z = self.seed ^ (retry as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        let unit = ((z ^ (z >> 31)) >> 11) as f64 / (1u64 << 53) as f64;
+        capped.mul_f64(0.5 + 0.5 * unit)
+    }
+}
+
+/// Run `f` up to `policy.attempts` times, sleeping `policy.delay(k)`
+/// between tries and warn-logging each failure. `f` receives the
+/// 0-based attempt index (retry loops that escalate per attempt — like
+/// re-dampening — key off it). Returns the first `Ok` or the last
+/// `Err`.
+pub fn retry<T, E: std::fmt::Display>(
+    policy: &Backoff,
+    what: &str,
+    mut f: impl FnMut(u32) -> Result<T, E>,
+) -> Result<T, E> {
+    let attempts = policy.attempts.max(1);
+    let mut attempt = 0;
+    loop {
+        match f(attempt) {
+            Ok(t) => return Ok(t),
+            Err(e) if attempt + 1 >= attempts => return Err(e),
+            Err(e) => {
+                let d = policy.delay(attempt);
+                crate::warnlog!(
+                    "retry",
+                    "{what}: attempt {}/{attempts} failed: {e}{}",
+                    attempt + 1,
+                    if d.is_zero() {
+                        "; retrying".to_string()
+                    } else {
+                        format!("; retrying in {:.0}ms", d.as_secs_f64() * 1e3)
+                    }
+                );
+                if !d.is_zero() {
+                    std::thread::sleep(d);
+                }
+                attempt += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_success_returns_immediately() {
+        let mut calls = 0;
+        let r: Result<u32, String> = retry(&Backoff::no_sleep(5), "t", |_| {
+            calls += 1;
+            Ok(7)
+        });
+        assert_eq!(r.unwrap(), 7);
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn retries_until_success_with_attempt_index() {
+        let r: Result<u32, String> = retry(&Backoff::no_sleep(5), "t", |attempt| {
+            if attempt < 3 {
+                Err(format!("fail {attempt}"))
+            } else {
+                Ok(attempt)
+            }
+        });
+        assert_eq!(r.unwrap(), 3);
+    }
+
+    #[test]
+    fn exhaustion_returns_last_error() {
+        let mut calls = 0;
+        let r: Result<(), String> = retry(&Backoff::no_sleep(3), "t", |attempt| {
+            calls += 1;
+            Err(format!("fail {attempt}"))
+        });
+        assert_eq!(r.unwrap_err(), "fail 2");
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn zero_attempts_still_runs_once() {
+        let mut calls = 0;
+        let r: Result<(), String> = retry(&Backoff::no_sleep(0), "t", |_| {
+            calls += 1;
+            Err("nope".to_string())
+        });
+        assert!(r.is_err());
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn delay_is_exponential_capped_and_deterministic() {
+        let p = Backoff::new(5, Duration::from_millis(10), Duration::from_millis(40), 9);
+        assert_eq!(p.delay(0), p.delay(0), "jitter is hashed, not sampled");
+        for k in 0..8 {
+            let d = p.delay(k);
+            let uncapped = Duration::from_millis(10 << k.min(2));
+            assert!(d <= Duration::from_millis(40), "cap holds: {d:?}");
+            assert!(d >= uncapped.min(Duration::from_millis(40)).mul_f64(0.5), "floor: {d:?}");
+        }
+        assert_eq!(Backoff::no_sleep(3).delay(2), Duration::ZERO);
+    }
+
+    #[test]
+    fn disk_policy_sleeps_bounded() {
+        let p = Backoff::disk();
+        let t0 = std::time::Instant::now();
+        let r: Result<(), &str> = retry(&p, "t", |_| Err("disk gone"));
+        assert!(r.is_err());
+        // 2 sleeps of ≤ 200ms each.
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+}

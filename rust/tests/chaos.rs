@@ -1,0 +1,478 @@
+//! Fault-injection chaos harness for the serving stack.
+//!
+//! Every test arms a seeded fault plan (`util::faultpoint`) and drives
+//! the real server — TCP or in-process — asserting the hardening
+//! contracts end to end:
+//!
+//! * **exactly-once**: every accepted job gets exactly one response —
+//!   a result or a typed rejection — under faults at every recoverable
+//!   site, with successful responses **bit-identical** to a fault-free
+//!   run (injected NonSpd re-runs unchanged, store faults fall back to
+//!   bit-identical live builds, delays change nothing);
+//! * **deadlines**: an expired budget is a typed `"rejected":"deadline"`
+//!   response, enforced at dequeue and at per-layer checkpoints;
+//! * **load shedding**: past the admission watermark, submissions get
+//!   typed `"rejected":"overloaded"` responses while accepted jobs all
+//!   complete;
+//! * **degraded store**: a store whose saves keep failing flips to
+//!   memory-only (`store_degraded` metric) and the server keeps
+//!   answering every job;
+//! * **drain hygiene**: a half-written line at shutdown and a client
+//!   that disconnects with a response queued leave no wedged workers
+//!   and exact counter accounting;
+//! * **catalog coverage**: a zero-probability wildcard plan observes
+//!   every site in [`faultpoint::CATALOG`] without firing, and the run
+//!   stays bit-identical to faults-off.
+//!
+//! The fault registry is process-global: every test takes
+//! [`faultpoint::test_guard`] first, serializing the suite.
+
+use obc::server::net::serve_tcp;
+use obc::server::registry::SYNTHETIC_MODEL;
+use obc::server::{run_line_protocol, CompressionServer, Response, ServerConfig};
+use obc::util::faultpoint;
+use obc::util::json::Json;
+use std::io::{BufRead, BufReader, Write as IoWrite};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("obc_chaos_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn cfg() -> ServerConfig {
+    ServerConfig {
+        workers: 2,
+        queue_cap: 32,
+        models_dir: PathBuf::from("/nonexistent"),
+        synthetic_only: true,
+        ..ServerConfig::default()
+    }
+}
+
+/// The mixed batch every client sends: dense, prune, quant, and a
+/// db-backed solve (exercises build + store write-through when a store
+/// is attached).
+fn job_lines() -> Vec<String> {
+    vec![
+        r#"{"id":"d1","model":"synthetic","op":"dense"}"#.into(),
+        r#"{"id":"p1","model":"synthetic","op":"prune","method":"exactobs","sparsity":0.5}"#
+            .into(),
+        r#"{"id":"q1","model":"synthetic","op":"quant","method":"obq","bits":4}"#.into(),
+        r#"{"id":"s1","model":"synthetic","op":"solve","target":"flop","value":1.5,"grid":[0,0.5,0.9]}"#
+            .into(),
+    ]
+}
+
+/// Strip fields that legitimately differ across runs and schedules; the
+/// payload that remains must be byte-identical (sorted keys, shortest
+/// roundtrip floats — see `server_concurrency.rs`).
+fn normalize(line: &str) -> String {
+    match obc::util::json::parse(line).unwrap_or_else(|e| panic!("bad line {line}: {e}")) {
+        Json::Obj(mut m) => {
+            let volatile = ["seq", "queue_seconds", "seconds", "coalesced", "cached", "cached_db"];
+            for key in volatile {
+                m.remove(key);
+            }
+            Json::Obj(m).to_string_compact()
+        }
+        other => other.to_string_compact(),
+    }
+}
+
+#[derive(Clone, Default)]
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+impl std::io::Write for SharedBuf {
+    fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(b);
+        Ok(b.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Run `lines` + shutdown through the in-process stdin protocol and
+/// return (normalized+sorted job responses, shutdown ack).
+fn stdin_run(config: ServerConfig, lines: &[String]) -> (Vec<String>, Json) {
+    let mut input = lines.join("\n");
+    input.push_str("\n{\"op\":\"shutdown\"}\n");
+    let buf = SharedBuf::default();
+    run_line_protocol(config, input.as_bytes(), buf.clone()).unwrap();
+    let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+    let mut jobs: Vec<String> =
+        text.lines().filter(|l| l.contains("\"id\":")).map(normalize).collect();
+    jobs.sort();
+    let ack = obc::util::json::parse(text.lines().last().unwrap()).unwrap();
+    assert_eq!(ack.get("op").and_then(|v| v.as_str()), Some("shutdown"), "{text}");
+    (jobs, ack)
+}
+
+fn counter(j: &Json, key: &str) -> f64 {
+    j.get(key)
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("missing counter {key}: {}", j.to_string_compact()))
+}
+
+/// Tentpole acceptance: concurrent TCP clients under seeded faults at
+/// every *recoverable* site — every request answered exactly once, all
+/// jobs succeed (these faults are survivable by design: store faults
+/// fall back to live builds, the injected NonSpd re-runs unchanged,
+/// delays are just delays), and the payloads are bit-identical to a
+/// fault-free stdin run.
+#[test]
+fn seeded_faults_exactly_once_and_bit_identical() {
+    let _g = faultpoint::test_guard();
+    // Fault-free reference first (guard holds the plan clear).
+    let (reference, _) = stdin_run(cfg(), &job_lines());
+    assert_eq!(reference.len(), job_lines().len());
+
+    faultpoint::install_from_spec(
+        "store.*=err@0.4,sweep.redamp.nonspd=err@0.3,engine.layer=delay:1ms@0.3,queue.push=delay:1ms@0.3",
+        0xC0FFEE,
+    )
+    .unwrap();
+
+    let store_dir = tmp_dir("exactly_once");
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        serve_tcp(ServerConfig { store_dir: Some(store_dir), ..cfg() }, listener).unwrap()
+    });
+
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let lines = job_lines();
+            std::thread::spawn(move || {
+                let mut s = TcpStream::connect(addr).unwrap();
+                s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+                for l in &lines {
+                    writeln!(s, "{l}").unwrap();
+                }
+                s.flush().unwrap();
+                let mut r = BufReader::new(s);
+                let mut got = Vec::new();
+                for i in 0..lines.len() {
+                    let mut line = String::new();
+                    r.read_line(&mut line).unwrap_or_else(|e| panic!("client {c} read: {e}"));
+                    assert!(!line.is_empty(), "client {c}: closed before response {i}");
+                    got.push(normalize(line.trim()));
+                }
+                got.sort();
+                got
+            })
+        })
+        .collect();
+    for (c, h) in clients.into_iter().enumerate() {
+        let got = h.join().unwrap();
+        assert_eq!(got, reference, "client {c}: faulted run diverged from fault-free run");
+    }
+    assert!(faultpoint::total_fired() > 0, "the plan must actually inject faults");
+
+    // Shutdown; the post-drain ack accounts for every accepted job.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    writeln!(s, "{{\"op\":\"shutdown\"}}").unwrap();
+    let mut ack_line = String::new();
+    BufReader::new(s).read_line(&mut ack_line).unwrap();
+    let ack = obc::util::json::parse(ack_line.trim()).unwrap();
+    let submitted = counter(&ack, "jobs_submitted");
+    assert_eq!(submitted, counter(&ack, "jobs_completed"), "{ack_line}");
+    assert_eq!(counter(&ack, "jobs_failed"), 0.0, "{ack_line}");
+    assert_eq!(submitted, 16.0, "4 clients x 4 jobs all accepted: {ack_line}");
+    server.join().unwrap();
+    faultpoint::clear();
+}
+
+/// Deadlines are typed rejections: enforced at per-layer execution
+/// checkpoints (an injected delay burns the budget) while an identical
+/// job without a deadline sails through the same delays.
+#[test]
+fn deadline_is_a_typed_rejection_at_layer_checkpoints() {
+    let _g = faultpoint::test_guard();
+    faultpoint::install_from_spec("engine.layer=delay:50ms@1", 1).unwrap();
+    let lines = vec![
+        r#"{"id":"late","model":"synthetic","op":"prune","method":"exactobs","sparsity":0.4,"deadline_ms":30}"#
+            .to_string(),
+        r#"{"id":"calm","model":"synthetic","op":"prune","method":"exactobs","sparsity":0.5}"#
+            .to_string(),
+    ];
+    let (jobs, ack) = stdin_run(ServerConfig { workers: 1, ..cfg() }, &lines);
+    assert_eq!(jobs.len(), 2, "both requests answered");
+    let by_id = |id: &str| {
+        jobs.iter()
+            .map(|l| obc::util::json::parse(l).unwrap())
+            .find(|j| j.get("id").and_then(|v| v.as_str()) == Some(id))
+            .unwrap_or_else(|| panic!("no response for {id}: {jobs:?}"))
+    };
+    let late = by_id("late");
+    assert_eq!(late.get("ok").and_then(|v| v.as_bool()), Some(false), "{jobs:?}");
+    assert_eq!(late.get("rejected").and_then(|v| v.as_str()), Some("deadline"), "{jobs:?}");
+    let msg = late.get("error").and_then(|v| v.as_str()).unwrap().to_string();
+    assert!(msg.starts_with("deadline exceeded"), "pinned prefix: {msg}");
+    let calm = by_id("calm");
+    assert_eq!(calm.get("ok").and_then(|v| v.as_bool()), Some(true), "{jobs:?}");
+    assert_eq!(counter(&ack, "jobs_deadline_expired"), 1.0);
+    assert_eq!(counter(&ack, "jobs_completed"), 1.0);
+    assert_eq!(counter(&ack, "jobs_failed"), 1.0, "deadline rejection counts as failed");
+    faultpoint::clear();
+}
+
+/// A zero budget expires while queued: rejected at dequeue, before any
+/// execution — db_builds/calibrations stay untouched.
+#[test]
+fn zero_deadline_rejected_at_dequeue_without_executing() {
+    let _g = faultpoint::test_guard();
+    let server = CompressionServer::start(ServerConfig { workers: 1, ..cfg() });
+    let (tx, rx) = mpsc::channel();
+    server
+        .submit_with_deadline(
+            SYNTHETIC_MODEL,
+            obc::coordinator::jobs::JobSpec::Dense,
+            Some("z".into()),
+            Some(Duration::ZERO),
+            tx,
+        )
+        .unwrap();
+    let resp: Response = rx.recv().unwrap();
+    let err = resp.outcome.unwrap_err();
+    assert!(err.starts_with("deadline exceeded"), "{err}");
+    assert!(err.contains("before execution"), "dequeue-time rejection: {err}");
+    let m = server.metrics_json();
+    assert_eq!(counter(&m, "jobs_deadline_expired"), 1.0);
+    assert_eq!(counter(&m, "calibrations"), 0.0, "never reached the registry");
+    server.shutdown();
+}
+
+/// Load shedding over TCP: a one-worker server with a depth-2 watermark
+/// and slowed layers sheds most of a 16-job burst with typed
+/// `overloaded` rejections; every accepted job completes and the
+/// counters reconcile exactly.
+#[test]
+fn overload_sheds_typed_and_accepted_jobs_complete() {
+    let _g = faultpoint::test_guard();
+    faultpoint::install_from_spec("engine.layer=delay:20ms@1", 2).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        serve_tcp(ServerConfig { workers: 1, shed_depth: Some(2), ..cfg() }, listener).unwrap()
+    });
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    let n = 16;
+    for i in 0..n {
+        // Distinct sparsities: no coalescing, every job is real work.
+        writeln!(
+            s,
+            "{{\"id\":\"j{i}\",\"model\":\"synthetic\",\"op\":\"prune\",\"method\":\"exactobs\",\"sparsity\":0.{:02}}}",
+            30 + i
+        )
+        .unwrap();
+    }
+    s.flush().unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    let mut ok = 0u64;
+    let mut shed = 0u64;
+    for i in 0..n {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "response {i} missing");
+        let j = obc::util::json::parse(line.trim()).unwrap();
+        if j.get("ok").unwrap().as_bool().unwrap() {
+            ok += 1;
+        } else {
+            assert_eq!(
+                j.get("rejected").and_then(|v| v.as_str()),
+                Some("overloaded"),
+                "only typed shedding expected: {line}"
+            );
+            let msg = j.get("error").and_then(|v| v.as_str()).unwrap();
+            assert!(msg.contains("overloaded"), "{msg}");
+            shed += 1;
+        }
+    }
+    assert!(shed >= 1, "watermark 2 must shed under a {n}-job burst");
+    assert!(ok >= 1, "accepted jobs must complete");
+    assert_eq!(ok + shed, n as u64, "every request answered exactly once");
+
+    writeln!(s, "{{\"op\":\"shutdown\"}}").unwrap();
+    let mut ack_line = String::new();
+    r.read_line(&mut ack_line).unwrap();
+    let ack = obc::util::json::parse(ack_line.trim()).unwrap();
+    assert_eq!(counter(&ack, "jobs_shed"), shed as f64, "{ack_line}");
+    assert_eq!(counter(&ack, "jobs_submitted"), ok as f64, "{ack_line}");
+    assert_eq!(counter(&ack, "jobs_completed"), ok as f64, "{ack_line}");
+    assert_eq!(counter(&ack, "jobs_failed"), 0.0, "{ack_line}");
+    server.join().unwrap();
+    faultpoint::clear();
+}
+
+/// A store whose every save fails flips to memory-only after the
+/// failure streak: `store_degraded` reports 1, saves become no-ops,
+/// and every job is still answered successfully.
+#[test]
+fn failing_store_degrades_to_memory_only_and_keeps_serving() {
+    let _g = faultpoint::test_guard();
+    faultpoint::install_from_spec("store.save.write=err@1", 3).unwrap();
+    let dir = tmp_dir("degrade");
+    let server = CompressionServer::start(ServerConfig {
+        workers: 1,
+        store_dir: Some(dir.clone()),
+        ..cfg()
+    });
+    let (tx, rx) = mpsc::channel();
+    // Four distinct builds: each save fails (retries exhausted), the
+    // third failure trips the degrade threshold.
+    let grids: [&[f64]; 4] = [&[0.0, 0.5], &[0.0, 0.6], &[0.0, 0.7], &[0.0, 0.8]];
+    for (i, g) in grids.iter().enumerate() {
+        let spec = obc::coordinator::jobs::JobSpec::BuildDb(obc::coordinator::jobs::DbSpec {
+            kind: obc::coordinator::jobs::DbKind::Sparsity,
+            method: obc::coordinator::methods::PruneMethod::ExactObs,
+            grid: g.to_vec(),
+            scope: obc::coordinator::engine::LayerScope::All,
+        });
+        server.submit(SYNTHETIC_MODEL, spec, Some(format!("b{i}")), tx.clone()).unwrap();
+    }
+    drop(tx);
+    let resps: Vec<Response> = rx.iter().collect();
+    assert_eq!(resps.len(), grids.len(), "every job answered");
+    for r in &resps {
+        assert!(r.outcome.is_ok(), "save failures must not fail jobs: {:?}", r.outcome);
+    }
+    let m = server.metrics_json();
+    assert_eq!(counter(&m, "store_degraded"), 1.0, "{}", m.to_string_compact());
+    assert_eq!(counter(&m, "store_saves"), 0.0, "no save ever succeeded");
+    assert_eq!(counter(&m, "db_builds"), grids.len() as f64);
+    server.shutdown();
+    faultpoint::clear();
+}
+
+/// Drain hygiene (satellite d): one client leaves a half-written line
+/// in its buffer at shutdown, another disconnects while its response is
+/// still queued — the drain stays clean, nothing wedges, and the ack
+/// accounts for exactly the accepted jobs.
+#[test]
+fn half_written_line_and_vanished_client_drain_cleanly() {
+    let _g = faultpoint::test_guard();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        serve_tcp(ServerConfig { workers: 1, ..cfg() }, listener).unwrap()
+    });
+
+    // Client A: one complete job, then a half-written line (no newline),
+    // connection kept open across the shutdown.
+    let mut a = TcpStream::connect(addr).unwrap();
+    a.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    writeln!(
+        a,
+        "{{\"id\":\"a1\",\"model\":\"synthetic\",\"op\":\"prune\",\"method\":\"exactobs\",\"sparsity\":0.5}}"
+    )
+    .unwrap();
+    write!(a, "{{\"id\":\"a2\",\"model\":\"synthetic\",\"op\":\"pr").unwrap(); // no '\n'
+    a.flush().unwrap();
+
+    // Client C: submits a job, then vanishes before its response.
+    let mut c = TcpStream::connect(addr).unwrap();
+    writeln!(
+        c,
+        "{{\"id\":\"c1\",\"model\":\"synthetic\",\"op\":\"quant\",\"method\":\"obq\",\"bits\":4}}"
+    )
+    .unwrap();
+    c.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(200)); // let both readers ingest
+    let _ = c.shutdown(std::net::Shutdown::Both);
+    drop(c);
+
+    // Client B pulls the plug.
+    let mut b = TcpStream::connect(addr).unwrap();
+    b.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    writeln!(b, "{{\"op\":\"shutdown\"}}").unwrap();
+
+    // A gets exactly one response (a1); the half-written a2 is dropped
+    // at the drain, never parsed, never answered with garbage.
+    let mut ra = BufReader::new(a.try_clone().unwrap());
+    let mut line = String::new();
+    ra.read_line(&mut line).unwrap();
+    let j = obc::util::json::parse(line.trim()).unwrap();
+    assert_eq!(j.get("id").and_then(|v| v.as_str()), Some("a1"), "{line}");
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true), "{line}");
+    let mut tail = String::new();
+    while ra.read_line(&mut tail).unwrap_or(0) > 0 {}
+    assert!(tail.trim().is_empty(), "no response for a half-written request: {tail:?}");
+
+    // B's ack accounts for exactly the two accepted jobs — including
+    // the one whose client vanished (its response write is abandoned,
+    // its execution and accounting are not).
+    let mut ack_line = String::new();
+    BufReader::new(b).read_line(&mut ack_line).unwrap();
+    let ack = obc::util::json::parse(ack_line.trim()).unwrap();
+    assert_eq!(counter(&ack, "jobs_submitted"), 2.0, "{ack_line}");
+    assert_eq!(counter(&ack, "jobs_completed"), 2.0, "{ack_line}");
+    assert_eq!(counter(&ack, "jobs_failed"), 0.0, "{ack_line}");
+    // No wedged workers/handlers: the accept loop itself wound down.
+    server.join().unwrap();
+}
+
+/// Coverage: a zero-probability wildcard plan records every site in the
+/// shipped catalog across a store-backed cold run + warm restart over
+/// TCP — and, firing nothing, stays bit-identical to faults-off.
+#[test]
+fn zero_probability_plan_covers_catalog_without_firing() {
+    let _g = faultpoint::test_guard();
+    // Fault-free reference before arming.
+    let (reference, _) = stdin_run(cfg(), &job_lines());
+
+    faultpoint::install_from_spec("*=err@0", 1).unwrap();
+    let dir = tmp_dir("coverage");
+    let run_once = |phase: &str| -> Vec<String> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let store_dir = dir.clone();
+        let server = std::thread::spawn(move || {
+            serve_tcp(ServerConfig { store_dir: Some(store_dir), ..cfg() }, listener).unwrap()
+        });
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        for l in job_lines() {
+            writeln!(s, "{l}").unwrap();
+        }
+        s.flush().unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut got = Vec::new();
+        for i in 0..job_lines().len() {
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            assert!(!line.is_empty(), "{phase}: response {i} missing");
+            got.push(normalize(line.trim()));
+        }
+        writeln!(s, "{{\"op\":\"shutdown\"}}").unwrap();
+        let mut ack = String::new();
+        r.read_line(&mut ack).unwrap();
+        server.join().unwrap();
+        got.sort();
+        got
+    };
+
+    // Cold run builds + writes through (store.open/save.*); the warm
+    // restart loads from disk (store.load.*).
+    let cold = run_once("cold");
+    let warm = run_once("warm");
+    assert_eq!(cold, reference, "zero-prob plan must not perturb results");
+    assert_eq!(warm, reference, "warm restart bit-identical");
+
+    assert_eq!(faultpoint::total_fired(), 0, "p=0 never fires");
+    let seen = faultpoint::seen_sites();
+    for site in faultpoint::CATALOG {
+        assert!(
+            seen.iter().any(|s| s == site),
+            "site '{site}' never checked in; seen: {seen:?}"
+        );
+    }
+    faultpoint::clear();
+}

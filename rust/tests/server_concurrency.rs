@@ -83,7 +83,7 @@ fn concurrent_jobs_calibrate_once_share_db_cache_and_match_sequential() {
         queue_cap: 16,
         models_dir: PathBuf::from("/nonexistent"),
         synthetic_only: true,
-        store_dir: None,
+        ..ServerConfig::default()
     });
     let (tx, rx) = mpsc::channel();
     for (id, spec) in job_batch() {
@@ -162,7 +162,7 @@ fn metrics_record_queue_depth_and_timings() {
         queue_cap: 8,
         models_dir: PathBuf::from("/nonexistent"),
         synthetic_only: true,
-        store_dir: None,
+        ..ServerConfig::default()
     });
     let (tx, rx) = mpsc::channel();
     for i in 0..3 {
@@ -209,7 +209,7 @@ mod tcp {
             queue_cap: 32,
             models_dir: PathBuf::from("/nonexistent"),
             synthetic_only: true,
-            store_dir: None,
+            ..ServerConfig::default()
         }
     }
 

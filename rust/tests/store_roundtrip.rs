@@ -197,6 +197,50 @@ fn stale_calibration_fingerprint_is_rejected() {
     assert_eq!(db_bits(&db), reference_db(), "fallback bit-identical to no-store");
 }
 
+/// Quarantine growth is bounded: past [`QUARANTINE_CAP`] rejected
+/// snapshots for one key, the oldest quarantined file is evicted (and
+/// counted) instead of accumulating forever. Churn alone never degrades
+/// the store.
+#[test]
+fn quarantine_growth_is_capped_with_eviction() {
+    let dir = tmp_dir("quarantine_cap");
+    let (e0, s0) = engine_with_store(&dir);
+    jobs::db_for_spec(&e0, &spec()).unwrap();
+    let key = e0.snapshot_key(&spec().cache_key());
+    let canonical = s0.snapshot_path(&key);
+    let pristine = std::fs::read(&canonical).unwrap();
+
+    let store = SnapshotStore::open(&dir).unwrap();
+    let rounds = obc::store::QUARANTINE_CAP + 2;
+    for i in 0..rounds {
+        // Re-plant a (distinctly) corrupted snapshot at the canonical
+        // path; each load must reject and move it aside.
+        let mut bad = pristine.clone();
+        bad[pristine.len() - 9 - (i % 4)] ^= 1;
+        std::fs::write(&canonical, &bad).unwrap();
+        assert!(
+            store.load(&key, e0.calib_fingerprint()).is_none(),
+            "round {i}: corrupt snapshot must not be served"
+        );
+    }
+
+    let st = store.stats();
+    assert_eq!(st.stale_rejected as usize, rounds, "{st:?}");
+    assert_eq!(
+        st.quarantine_evictions as usize,
+        rounds - obc::store::QUARANTINE_CAP,
+        "evictions past the cap: {st:?}"
+    );
+    assert!(!st.degraded, "quarantine churn is not degradation: {st:?}");
+    let quarantined = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref().unwrap().file_name().to_string_lossy().contains("quarantined")
+        })
+        .count();
+    assert_eq!(quarantined, obc::store::QUARANTINE_CAP, "at most CAP files kept per key");
+}
+
 #[test]
 fn export_import_hands_snapshot_between_stores() {
     let export_dir = tmp_dir("export");
@@ -235,6 +279,7 @@ fn restarted_server_answers_db_job_from_snapshot() {
         models_dir: PathBuf::from("/nonexistent"),
         synthetic_only: true,
         store_dir: Some(dir.clone()),
+        ..ServerConfig::default()
     };
     let submit_db_job = |server: &CompressionServer| -> JobResult {
         let (tx, rx) = mpsc::channel();

@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Validate the chaos-smoke transcripts (see `make chaos-smoke`).
+
+Two runs of the same batch through `obc serve --synthetic`:
+
+  faulted.out — with a seeded OBC_FAULTS plan (store errors, an injected
+                NonSpd on the re-damp path, layer/queue delays) and a
+                snapshot store attached;
+  clean.out   — no faults, no store.
+
+The plan injects only *recoverable* faults: store failures fall back to
+bit-identical live builds, the injected NonSpd consumes one retry and
+re-runs unchanged, delays are just delays. So the contract is strict:
+
+  1. every job id is answered exactly once in both runs;
+  2. the zero-deadline job (`d0`) is a typed `"rejected":"deadline"`
+     response in both runs — never executed;
+  3. all other jobs succeed in both runs, and their payloads are
+     bit-identical after stripping volatile fields (timings, seq,
+     cache provenance);
+  4. the shutdown ack's counters reconcile exactly:
+     submitted == completed + failed, exactly one deadline expiry,
+     and the store/degraded gauges are present and sane.
+"""
+import json
+import sys
+
+JOB_IDS = ("d0", "b1", "p1", "q1", "s1")
+OK_IDS = tuple(j for j in JOB_IDS if j != "d0")
+# Fields that legitimately differ across runs/schedules; everything
+# that remains must match bit for bit (the server serializes floats
+# shortest-roundtrip, so text equality == bit equality).
+VOLATILE = ("seq", "queue_seconds", "seconds", "coalesced", "cached", "cached_db")
+
+
+def load(path):
+    lines = [l for l in open(path).read().splitlines() if l.strip()]
+    assert lines, f"{path} is empty"
+    docs = []
+    for l in lines:
+        try:
+            docs.append(json.loads(l))
+        except json.JSONDecodeError as e:
+            raise SystemExit(f"{path}: invalid JSON line {l!r}: {e}")
+    by_id = {}
+    for d in docs:
+        if "id" in d:
+            assert d["id"] not in by_id, f"{path}: duplicate response for {d['id']}"
+            by_id[d["id"]] = d
+    return docs, by_id
+
+
+def normalized(doc):
+    return {k: v for k, v in doc.items() if k not in VOLATILE}
+
+
+faulted_path = sys.argv[1] if len(sys.argv) > 1 else "target/chaos_smoke/faulted.out"
+clean_path = sys.argv[2] if len(sys.argv) > 2 else "target/chaos_smoke/clean.out"
+faulted, f_by_id = load(faulted_path)
+clean, c_by_id = load(clean_path)
+
+for by_id, path in ((f_by_id, faulted_path), (c_by_id, clean_path)):
+    for jid in JOB_IDS:
+        assert jid in by_id, f"{path}: no response for {jid}"
+    # The zero-deadline job is a typed rejection, never an execution.
+    d0 = by_id["d0"]
+    assert d0["ok"] is False, f"{path}: d0 must be rejected: {d0}"
+    assert d0.get("rejected") == "deadline", f"{path}: untyped deadline rejection: {d0}"
+    assert d0["error"].startswith("deadline exceeded"), d0
+    # Everything else survives the fault plan.
+    for jid in OK_IDS:
+        assert by_id[jid]["ok"] is True, f"{path}: {jid} failed: {by_id[jid]}"
+
+# Faults were recoverable ⇒ results are bit-identical to the clean run.
+for jid in OK_IDS:
+    f, c = normalized(f_by_id[jid]), normalized(c_by_id[jid])
+    assert f == c, f"{jid} diverged under faults:\n  faulted: {f}\n  clean:   {c}"
+
+# Exact accounting on the post-drain ack.
+ack = faulted[-1]
+assert ack.get("op") == "shutdown" and ack.get("ok") is True, ack
+assert ack["jobs_submitted"] == ack["jobs_completed"] + ack["jobs_failed"], ack
+assert ack["jobs_submitted"] == len(JOB_IDS), ack
+assert ack["jobs_failed"] == 1, f"only the deadline rejection fails: {ack}"
+assert ack["jobs_deadline_expired"] == 1, ack
+assert ack["jobs_shed"] == 0, f"no watermark configured, nothing shed: {ack}"
+# Store gauges present and sane whatever the seeded plan did to the dir.
+assert ack["store_degraded"] in (0.0, 1.0, 0, 1), ack
+for key in ("store_hits", "store_saves", "store_stale_rejected", "store_quarantine_evictions"):
+    assert key in ack, f"missing {key}: {ack}"
+assert ack["in_flight_bytes"] == 0, f"accepted bytes must drain: {ack}"
+
+print(
+    f"chaos-smoke OK: {len(faulted)} faulted lines, "
+    f"{ack['jobs_completed']} ok / {ack['jobs_failed']} rejected, "
+    f"store_degraded={ack['store_degraded']}, "
+    f"{len(OK_IDS)} payloads bit-identical to the clean run"
+)
