@@ -2,7 +2,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test bench bench-json bench-smoke bench-serve bench-db serve-smoke store-smoke chaos-smoke fmt lint clean
+.PHONY: build test bench bench-json bench-smoke bench-serve bench-db serve-smoke store-smoke chaos-smoke batch-smoke fmt lint clean
 
 build:
 	$(CARGO) build --release
@@ -110,6 +110,25 @@ chaos-smoke:
 	$(CARGO) run --release --bin obc -- serve --synthetic --workers 1 \
 	  < target/chaos_smoke/batch.jsonl > target/chaos_smoke/clean.out
 	python3 scripts/check_chaos_smoke.py target/chaos_smoke/faulted.out target/chaos_smoke/clean.out
+
+# Batched-serving smoke: a streaming db build plus three solver jobs
+# sharing its grid (one scoped, one batch-class) held in a single
+# admission window (--batch-window-ms) on a one-worker server, with an
+# interactive job behind them — the checker demands exactly-once
+# finals, chunk lines strictly before the bd final with ascending
+# per-layer levels over the full grid, and a pooled group build
+# (batch_groups >= 1) in the shutdown ack.
+batch-smoke:
+	@mkdir -p target
+	printf '%s\n' \
+	  '{"id":"bd","model":"synthetic","op":"db","grid":[0,0.25,0.5,0.75,0.9],"stream":true}' \
+	  '{"id":"s1","model":"synthetic","op":"solve","target":"flop","value":1.5,"grid":[0,0.25,0.5,0.75,0.9]}' \
+	  '{"id":"s2","model":"synthetic","op":"solve","target":"flop","value":2.0,"grid":[0,0.25,0.5,0.75,0.9]}' \
+	  '{"id":"s3","model":"synthetic","op":"solve","target":"flop","value":1.8,"grid":[0,0.25,0.5,0.75,0.9],"scope":"inner","priority":"batch"}' \
+	  '{"id":"iq","model":"synthetic","op":"dense"}' \
+	  '{"op":"shutdown"}' \
+	| $(CARGO) run --release --example serve_compress -- --synthetic --workers 1 --batch-window-ms 200 > target/batch_smoke.out
+	python3 scripts/check_batch_smoke.py target/batch_smoke.out
 
 fmt:
 	$(CARGO) fmt --all --check

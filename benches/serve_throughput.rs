@@ -17,17 +17,25 @@
 //! again on a "restarted" server over the same directory (snapshot
 //! load, no build) — `db_build_cold_seconds` / `db_build_warm_seconds`
 //! in the report, with the store counters asserted both ways.
+//!
+//! A third phase drives **saturation**: heavy batch-class prunes queued
+//! ahead of cheap interactive jobs on a two-worker server, recording
+//! p50/p95/p99 completion latency and asserting the fairness contract —
+//! interactive p95 stays at or under batch p95 even though the batch
+//! work was queued first (`latency_p*_ms`, `interactive_p95_ms`,
+//! `batch_p95_ms`, `saturation_jobs` in the report).
 
 use obc::coordinator::engine::LayerScope;
-use obc::coordinator::jobs::{DbKind, DbSpec, JobSpec, TargetKind};
+use obc::coordinator::jobs::{DbKind, DbSpec, JobSpec, Priority, TargetKind};
 use obc::coordinator::methods::{PruneMethod, QuantMethod};
 use obc::server::registry::SYNTHETIC_MODEL;
-use obc::server::{CompressionServer, Response, ServerConfig};
+use obc::server::{CompressionServer, JobOptions, Outbound, Response, ServerConfig, WireReply};
 use obc::util::benchkit::JsonReport;
 use obc::util::json::Json;
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn batch(rounds: usize) -> Vec<JobSpec> {
     let db = DbSpec {
@@ -59,6 +67,15 @@ fn batch(rounds: usize) -> Vec<JobSpec> {
     jobs
 }
 
+/// Nearest-rank percentile over an ascending-sorted sample.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
 fn main() {
     let smoke = std::env::var("OBC_BENCH_SMOKE").is_ok();
     let workers = 4;
@@ -71,6 +88,9 @@ fn main() {
         queue_cap: n_jobs.max(8),
         models_dir: PathBuf::from("/nonexistent"),
         synthetic_only: true,
+        // Hold a short admission window so the compatible solver jobs
+        // group into one pooled database build per window.
+        batch_window: Some(Duration::from_millis(2)),
         ..ServerConfig::default()
     });
     let (tx, rx) = mpsc::channel();
@@ -149,6 +169,84 @@ fn main() {
          (snapshot store round trip)"
     );
 
+    // ---- saturation & fairness: priority classes under load ---------
+    // Heavy batch-class prunes (distinct sparsities, so nothing
+    // coalesces) are queued first; cheap interactive jobs arrive behind
+    // them. The interactive-first dequeue must keep the interactive tail
+    // at or under the batch tail despite the head start.
+    let heavy = if smoke { 5 } else { 12 };
+    let light = heavy;
+    let sat_server = CompressionServer::start(ServerConfig {
+        workers: 2,
+        queue_cap: (heavy + light).max(8),
+        models_dir: PathBuf::from("/nonexistent"),
+        synthetic_only: true,
+        ..ServerConfig::default()
+    });
+    let (otx, orx) = mpsc::channel::<Outbound>();
+    let wire = WireReply::new(otx, sat_server.chunk_outbox());
+    let mut submitted: BTreeMap<u64, (Instant, Priority)> = BTreeMap::new();
+    for i in 0..heavy {
+        let spec = JobSpec::Prune {
+            method: PruneMethod::ExactObs,
+            sparsity: 0.30 + 0.01 * i as f64,
+            scope: LayerScope::All,
+        };
+        let opts = JobOptions {
+            client_id: Some(format!("h{i}")),
+            priority: Priority::Batch,
+            ..JobOptions::default()
+        };
+        let seq = sat_server
+            .submit_wire(SYNTHETIC_MODEL, spec, opts, wire.clone())
+            .expect("submit heavy");
+        submitted.insert(seq, (Instant::now(), Priority::Batch));
+    }
+    for i in 0..light {
+        let opts = JobOptions { client_id: Some(format!("l{i}")), ..JobOptions::default() };
+        let seq = sat_server
+            .submit_wire(SYNTHETIC_MODEL, JobSpec::Dense, opts, wire.clone())
+            .expect("submit light");
+        submitted.insert(seq, (Instant::now(), Priority::Interactive));
+    }
+    drop(wire);
+    let mut lat_all = Vec::new();
+    let mut lat_interactive = Vec::new();
+    let mut lat_batch = Vec::new();
+    for _ in 0..(heavy + light) {
+        let resp = match orx.recv().expect("saturation response") {
+            Outbound::Final(resp) => resp,
+            Outbound::Chunk(_) => unreachable!("no streaming jobs in the saturation phase"),
+        };
+        if let Err(e) = &resp.outcome {
+            panic!("saturation job {:?} failed: {e}", resp.client_id);
+        }
+        let (at, class) = submitted[&resp.seq];
+        let ms = at.elapsed().as_secs_f64() * 1e3;
+        lat_all.push(ms);
+        match class {
+            Priority::Interactive => lat_interactive.push(ms),
+            Priority::Batch => lat_batch.push(ms),
+        }
+    }
+    sat_server.shutdown();
+    lat_all.sort_by(f64::total_cmp);
+    lat_interactive.sort_by(f64::total_cmp);
+    lat_batch.sort_by(f64::total_cmp);
+    let p50 = percentile(&lat_all, 0.50);
+    let p95 = percentile(&lat_all, 0.95);
+    let p99 = percentile(&lat_all, 0.99);
+    let interactive_p95 = percentile(&lat_interactive, 0.95);
+    let batch_p95 = percentile(&lat_batch, 0.95);
+    assert!(
+        interactive_p95 <= batch_p95,
+        "interactive p95 {interactive_p95:.1}ms above batch p95 {batch_p95:.1}ms"
+    );
+    println!(
+        "serve_throughput: saturation p50 {p50:.1}ms p95 {p95:.1}ms p99 {p99:.1}ms \
+         (interactive p95 {interactive_p95:.1}ms vs batch p95 {batch_p95:.1}ms)"
+    );
+
     let mut report = JsonReport::with_schema("obc-bench-serve/v1");
     report.derived("db_build_cold_seconds", cold_s);
     report.derived("db_build_warm_seconds", warm_s);
@@ -163,6 +261,13 @@ fn main() {
     report.derived("queue_depth_peak", get("queue_depth_peak"));
     report.derived("queue_seconds_total", get("queue_seconds_total"));
     report.derived("exec_seconds_total", get("exec_seconds_total"));
+    report.derived("batch_groups", get("batch_groups"));
+    report.derived("saturation_jobs", (heavy + light) as f64);
+    report.derived("latency_p50_ms", p50);
+    report.derived("latency_p95_ms", p95);
+    report.derived("latency_p99_ms", p99);
+    report.derived("interactive_p95_ms", interactive_p95);
+    report.derived("batch_p95_ms", batch_p95);
     let fname = if smoke { "BENCH_serve.smoke.json" } else { "BENCH_serve.json" };
     report
         .write(

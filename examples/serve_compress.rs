@@ -16,7 +16,11 @@
 //! Flags: --synthetic (serve only the deterministic synthetic model; no
 //! artifacts needed), --workers N, --queue-cap N, --store DIR (durable
 //! trace databases: builds write through, restarts warm-start),
-//! --listen ADDR (serve the same protocol over TCP instead of stdin).
+//! --listen ADDR (serve the same protocol over TCP instead of stdin),
+//! --batch-window-ms N (hold an admission window open so compatible
+//! database jobs group into one pooled build), --tenant-cap N (per-tenant
+//! in-flight admission cap), --chunk-outbox N (per-connection streaming
+//! chunk bound for jobs submitted with "stream":true).
 //!
 //! Try: echo '{"model":"synthetic","op":"prune","method":"exactobs","sparsity":0.5}' \
 //!        | cargo run --release --example serve_compress -- --synthetic
@@ -43,6 +47,13 @@ fn main() -> obc::util::Result<()> {
             "--synthetic" => cfg.synthetic_only = true,
             "--workers" => cfg.workers = req_count(it.next(), "--workers"),
             "--queue-cap" => cfg.queue_cap = req_count(it.next(), "--queue-cap"),
+            "--batch-window-ms" => {
+                cfg.batch_window = Some(std::time::Duration::from_millis(
+                    req_count(it.next(), "--batch-window-ms") as u64,
+                ))
+            }
+            "--tenant-cap" => cfg.tenant_max_in_flight = Some(req_count(it.next(), "--tenant-cap")),
+            "--chunk-outbox" => cfg.chunk_outbox = req_count(it.next(), "--chunk-outbox"),
             "--store" => match it.next() {
                 Some(dir) => cfg.store_dir = Some(std::path::PathBuf::from(dir)),
                 None => {

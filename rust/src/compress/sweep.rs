@@ -419,6 +419,9 @@ fn batch_stage(s: &mut Scratch, m: usize, q: usize, f: f64, compensate: bool) {
     s.bq.push(q);
 }
 
+/// Column-tile width of the [`batch_flush`] delta accumulation.
+const FLUSH_COL_TILE: usize = 64;
+
 /// Apply every staged downdate to the compacted H⁻¹ as **one rank-B
 /// pass** fused with the row/column compaction, then rebuild the live
 /// list. Per surviving row `r`: accumulate `delta[j] = Σ_s
@@ -428,6 +431,14 @@ fn batch_stage(s: &mut Scratch, m: usize, q: usize, f: f64, compensate: bool) {
 /// compacted row `h'[dr] = h[r] − delta` over surviving columns only.
 /// In place is safe: destination `dr·nm + jc` never exceeds source
 /// `r·m + j` (`dr ≤ r`, `nm < m`, `jc ≤ j`). Returns the new live count.
+///
+/// The delta accumulation walks j in 64-column **cache tiles** with the
+/// staged-pair loop inside each tile: one pdelta tile stays in L1 (or
+/// registers) across the whole panel walk instead of the full m-length
+/// vector being re-streamed per staged pair. Tiling the j dimension
+/// never touches a reduction: each `pdelta[j]` still accumulates its
+/// staged terms in the identical pairwise `sx` order, so even this
+/// tolerance-pinned path is bitwise unchanged by the tiling.
 fn batch_flush(s: &mut Scratch, m: usize) -> usize {
     let blen = s.bq.len();
     debug_assert!(blen > 0 && blen <= m);
@@ -445,23 +456,32 @@ fn batch_flush(s: &mut Scratch, m: usize) -> usize {
             for v in pdelta[..m].iter_mut() {
                 *v = 0.0;
             }
-            let mut sx = 0usize;
-            while sx + 2 <= blen {
-                let (p0, rest) = panel[sx * m..].split_at(m);
-                let p1 = &rest[..m];
-                let f0 = p0[r] * pfac[sx];
-                let f1 = p1[r] * pfac[sx + 1];
-                for ((v, &a), &b) in pdelta[..m].iter_mut().zip(p0.iter()).zip(p1.iter()) {
-                    *v += f0 * a + f1 * b;
+            let mut jt = 0usize;
+            while jt < m {
+                let jt1 = (jt + FLUSH_COL_TILE).min(m);
+                let mut sx = 0usize;
+                while sx + 2 <= blen {
+                    let (p0, rest) = panel[sx * m..].split_at(m);
+                    let p1 = &rest[..m];
+                    let f0 = p0[r] * pfac[sx];
+                    let f1 = p1[r] * pfac[sx + 1];
+                    for ((v, &a), &b) in pdelta[jt..jt1]
+                        .iter_mut()
+                        .zip(p0[jt..jt1].iter())
+                        .zip(p1[jt..jt1].iter())
+                    {
+                        *v += f0 * a + f1 * b;
+                    }
+                    sx += 2;
                 }
-                sx += 2;
-            }
-            if sx < blen {
-                let p0 = &panel[sx * m..sx * m + m];
-                let f0 = p0[r] * pfac[sx];
-                for (v, &a) in pdelta[..m].iter_mut().zip(p0.iter()) {
-                    *v += f0 * a;
+                if sx < blen {
+                    let p0 = &panel[sx * m..sx * m + m];
+                    let f0 = p0[r] * pfac[sx];
+                    for (v, &a) in pdelta[jt..jt1].iter_mut().zip(p0[jt..jt1].iter()) {
+                        *v += f0 * a;
+                    }
                 }
+                jt = jt1;
             }
             let src = r * m;
             let dst = dr * nm;
@@ -1197,6 +1217,32 @@ mod tests {
             quant_sweep_batched(&mut qb, &w, &h.hinv, &grid, true, b).unwrap();
             for (i, (g, r)) in qb.out()[..d].iter().zip(&qref).enumerate() {
                 assert!((g - r).abs() <= 1e-9 * (1.0 + r.abs()), "B={b} q[{i}]: {g} vs {r}");
+            }
+        }
+    }
+
+    /// The 64-column flush cache tile must not change results when the
+    /// live dimension crosses the tile seam (d > FLUSH_COL_TILE): B=1
+    /// delegation stays bitwise, B>1 stays within the reassociation
+    /// tolerance with an unchanged selection order.
+    #[test]
+    fn rank_b_crosses_the_flush_column_tile() {
+        let d = FLUSH_COL_TILE + 8;
+        let h = layer(d, 53);
+        let w: Vec<f64> = (0..d).map(|i| ((i * 29 % 11) as f64) * 0.17 - 0.8).collect();
+        let k = d / 2;
+        let mut s1 = Scratch::new();
+        prune_sweep(&mut s1, &w, &h.hinv, k, |_, _| true).unwrap();
+        let ref_out = s1.out()[..d].to_vec();
+        let mut sb1 = Scratch::new();
+        prune_sweep_batched(&mut sb1, &w, &h.hinv, k, 1, |_, _| true).unwrap();
+        assert_eq!(sb1.out()[..d], ref_out[..], "B=1 must be bit-identical");
+        for b in [8usize, 24] {
+            let mut sb = Scratch::new();
+            prune_sweep_batched(&mut sb, &w, &h.hinv, k, b, |_, _| true).unwrap();
+            assert_eq!(sb.trace_order, s1.trace_order, "B={b} order");
+            for (i, (g, r)) in sb.out()[..d].iter().zip(&ref_out).enumerate() {
+                assert!((g - r).abs() <= 1e-9 * (1.0 + r.abs()), "B={b} w[{i}]: {g} vs {r}");
             }
         }
     }

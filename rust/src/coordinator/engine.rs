@@ -537,6 +537,23 @@ impl CompressionEngine {
         key
     }
 
+    /// Assemble the `scope` slice of an already-built database. Per-layer
+    /// entries are independent, so the subset is **bit-identical** to
+    /// building that scope directly — the batch scheduler builds one
+    /// union database per admission group and answers narrower-scope
+    /// members from it (`server::run_group`).
+    pub fn db_subset(&self, full: &ModelDb, scope: LayerScope) -> ModelDb {
+        let keep: std::collections::BTreeSet<String> =
+            self.layers(scope).into_iter().map(|l| l.name).collect();
+        let mut db = ModelDb::new(&full.model);
+        for e in full.entries() {
+            if keep.contains(&e.layer) {
+                db.insert(e.clone());
+            }
+        }
+        db
+    }
+
     /// Fan independent per-layer database work items across scoped
     /// worker threads (one coarse tier above the row-level
     /// `util::pool`). Each item may itself fan row jobs onto the shared
@@ -570,13 +587,16 @@ impl CompressionEngine {
             }
         } else {
             // Thread-locals don't cross `thread::scope`: hand the
-            // caller's deadline to every worker explicitly.
+            // caller's deadline (and streaming-progress sink) to every
+            // worker explicitly.
             let inherited = crate::util::deadline::current();
+            let sink = crate::util::progress::current();
             let next = AtomicUsize::new(0);
             std::thread::scope(|sc| {
                 for _ in 0..workers {
                     sc.spawn(|| {
                         let _g = crate::util::deadline::set(inherited);
+                        let _p = crate::util::progress::set(sink.clone());
                         loop {
                             let i = next.fetch_add(1, Ordering::Relaxed);
                             if i >= n {
@@ -649,11 +669,12 @@ impl CompressionEngine {
                                 wl,
                                 sq_err,
                             ));
+                            emit_level_chunk(&l.name, li, grid.len(), grid[li], sq_err);
                         },
                     );
                 }
                 _ => {
-                    for &s in grid {
+                    for (li, &s) in grid.iter().enumerate() {
                         let res = method.prune(&w, &h, s);
                         out.push(Entry::from_mat(
                             &l.name,
@@ -661,6 +682,7 @@ impl CompressionEngine {
                             &res.w,
                             res.sq_err,
                         ));
+                        emit_level_chunk(&l.name, li, grid.len(), s, res.sq_err);
                     }
                 }
             }
@@ -845,6 +867,7 @@ impl CompressionEngine {
                         &what,
                         w_err,
                     ));
+                    emit_level_chunk(&l.name, li, grid.len(), grid[li], w_err);
                 },
             );
             Ok(out)
@@ -1200,6 +1223,22 @@ impl CompressionEngine {
         let metric = self.eval_corrected(model);
         Some((metric, used))
     }
+}
+
+/// Emit one streaming per-level database-build progress chunk (a no-op
+/// unless the serving layer installed a `util::progress` sink for the
+/// current job). `li` indexes `grid`; `levels` is the grid length.
+fn emit_level_chunk(layer: &str, li: usize, levels: usize, sparsity: f64, sq_err: f64) {
+    crate::util::progress::emit(|| {
+        let mut c = crate::util::json::Json::obj();
+        c.set("chunk", "db_level")
+            .set("layer", layer)
+            .set("level", li)
+            .set("levels", levels)
+            .set("sparsity", sparsity)
+            .set("sq_err", sq_err);
+        c
+    });
 }
 
 /// Activation-quantization penalty: ‖Ŵ·(X − q(X))‖² with a per-tensor

@@ -336,6 +336,34 @@ impl JobSpec {
     pub fn coalesce_key(&self, model: &str) -> String {
         format!("{model}|{}", self.to_json().to_string_compact())
     }
+
+    /// The database this job builds or solves over, if any.
+    pub fn db_spec(&self) -> Option<&DbSpec> {
+        match self {
+            JobSpec::BuildDb(db) => Some(db),
+            JobSpec::Solve { db, .. } => Some(db),
+            _ => None,
+        }
+    }
+
+    /// Batch-scheduler admission-group key: database-backed jobs on the
+    /// same (model, kind, method family, grid) can share one pooled
+    /// build, so the layer scope is deliberately normalized OUT — the
+    /// scheduler builds the union of the members' layer sets once and
+    /// fans per-layer results back to each member's scope. `None` for
+    /// jobs with no shareable database work (uniform runs, and the GMP
+    /// flop-target solve, which threshold-searches without a database).
+    pub fn batch_group_key(&self, model: &str) -> Option<String> {
+        let db = self.db_spec()?;
+        if matches!(self, JobSpec::Solve { target: TargetKind::Flop, .. })
+            && db.kind == DbKind::Sparsity
+            && db.method == PruneMethod::Gmp
+        {
+            return None;
+        }
+        let scopeless = DbSpec { scope: LayerScope::All, ..db.clone() };
+        Some(format!("{model}|{}", scopeless.cache_key()))
+    }
 }
 
 /// A required non-negative integer field (rejects fractional, negative,
@@ -566,6 +594,36 @@ pub enum ControlOp {
     Metrics,
 }
 
+/// Admission priority class of a job (wire field `priority`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Latency-sensitive traffic: dequeued ahead of batch work and shed
+    /// only at the full overload watermark.
+    #[default]
+    Interactive,
+    /// Throughput traffic: sheds at half the depth watermark so
+    /// interactive headroom survives saturation.
+    Batch,
+}
+
+impl Priority {
+    /// Stable wire token.
+    pub fn token(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Priority> {
+        match s {
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            other => Err(crate::err!("unknown priority '{other}' (interactive|batch)")),
+        }
+    }
+}
+
 /// One parsed request line.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
@@ -578,6 +636,13 @@ pub enum Request {
         /// with a typed `"rejected":"deadline"` error instead of (or mid
         /// way through) executing. `None` = server default.
         deadline_ms: Option<u64>,
+        /// Admission class (default interactive).
+        priority: Priority,
+        /// Optional tenant label for per-tenant admission counting.
+        tenant: Option<String>,
+        /// Opt-in streaming: per-layer/per-level `{"chunk":...}` progress
+        /// lines ahead of the final response.
+        stream: bool,
     },
     Control(ControlOp),
 }
@@ -608,6 +673,22 @@ impl Request {
                         }
                         Some(ms as u64)
                     }
+                },
+                priority: match j.get("priority") {
+                    None => Priority::Interactive,
+                    Some(v) => {
+                        let s = v.as_str().ok_or_else(|| {
+                            crate::err!("field 'priority' must be a string")
+                        })?;
+                        Priority::parse(s)?
+                    }
+                },
+                tenant: j.get("tenant").and_then(|v| v.as_str()).map(|s| s.to_string()),
+                stream: match j.get("stream") {
+                    None => false,
+                    Some(v) => v
+                        .as_bool()
+                        .ok_or_else(|| crate::err!("field 'stream' must be a boolean"))?,
                 },
             }),
         }
@@ -823,11 +904,14 @@ mod tests {
         )
         .unwrap();
         match r {
-            Request::Job { id, model, spec, deadline_ms } => {
+            Request::Job { id, model, spec, deadline_ms, priority, tenant, stream } => {
                 assert_eq!(id.as_deref(), Some("j1"));
                 assert_eq!(model, "rneta");
                 assert_eq!(spec.op(), "prune");
                 assert_eq!(deadline_ms, None);
+                assert_eq!(priority, Priority::Interactive);
+                assert_eq!(tenant, None);
+                assert!(!stream);
             }
             _ => panic!("expected a job"),
         }
@@ -839,9 +923,24 @@ mod tests {
             Request::Job { deadline_ms, .. } => assert_eq!(deadline_ms, Some(2500)),
             _ => panic!("expected a job"),
         }
+        match Request::parse_line(
+            r#"{"model":"m","op":"dense","priority":"batch","tenant":"t7","stream":true}"#,
+        )
+        .unwrap()
+        {
+            Request::Job { priority, tenant, stream, .. } => {
+                assert_eq!(priority, Priority::Batch);
+                assert_eq!(tenant.as_deref(), Some("t7"));
+                assert!(stream);
+            }
+            _ => panic!("expected a job"),
+        }
         for bad in [
             r#"{"model":"m","op":"dense","deadline_ms":"soon"}"#,
             r#"{"model":"m","op":"dense","deadline_ms":-5}"#,
+            r#"{"model":"m","op":"dense","priority":"urgent"}"#,
+            r#"{"model":"m","op":"dense","priority":7}"#,
+            r#"{"model":"m","op":"dense","stream":"yes"}"#,
         ] {
             assert!(Request::parse_line(bad).is_err(), "'{bad}' must be rejected");
         }
@@ -950,6 +1049,41 @@ mod tests {
         .unwrap();
         assert_eq!(a.coalesce_key("m"), b.coalesce_key("m"));
         assert_ne!(a.coalesce_key("m"), a.coalesce_key("other-model"));
+    }
+
+    #[test]
+    fn batch_group_key_unions_scope_and_excludes_unshareable_jobs() {
+        let db = |scope, method| DbSpec {
+            kind: DbKind::Sparsity,
+            method,
+            grid: vec![0.0, 0.5, 0.9],
+            scope,
+        };
+        // Same pooled build across scopes and across build-vs-solve...
+        let build_all = JobSpec::BuildDb(db(LayerScope::All, PruneMethod::ExactObs));
+        let solve_inner = JobSpec::Solve {
+            db: db(LayerScope::SkipFirstLast, PruneMethod::ExactObs),
+            target: TargetKind::Flop,
+            value: 2.0,
+        };
+        assert_eq!(build_all.batch_group_key("m"), solve_inner.batch_group_key("m"));
+        // ...but never across models, methods, or grids.
+        assert_ne!(build_all.batch_group_key("m"), build_all.batch_group_key("m2"));
+        let lobs = JobSpec::BuildDb(db(LayerScope::All, PruneMethod::Lobs));
+        assert_ne!(build_all.batch_group_key("m"), lobs.batch_group_key("m"));
+        // Jobs with no shareable database work never group: uniform runs
+        // and the GMP flop solve (threshold search, no database).
+        assert_eq!(JobSpec::Dense.batch_group_key("m"), None);
+        let gmp_solve = JobSpec::Solve {
+            db: db(LayerScope::All, PruneMethod::Gmp),
+            target: TargetKind::Flop,
+            value: 2.0,
+        };
+        assert_eq!(gmp_solve.batch_group_key("m"), None);
+        // A GMP db *build* is real work and still groups.
+        assert!(JobSpec::BuildDb(db(LayerScope::All, PruneMethod::Gmp))
+            .batch_group_key("m")
+            .is_some());
     }
 
     #[test]

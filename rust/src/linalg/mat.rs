@@ -329,39 +329,57 @@ impl Mat {
 /// lanes); each (i,j) reduction is still one sequential sweep over t, so
 /// every entry is bit-identical to the one-dot-at-a-time version — the
 /// unroll is across *outputs*, never within a reduction.
+///
+/// The j dimension is additionally walked in 64-column **cache tiles**,
+/// with the band's rows iterated *inside* each tile: one tile's 64 rhs
+/// rows (64·k doubles) stay resident in L2 while every rowᵢ of the band
+/// streams past them, instead of the whole m·k matrix being re-fetched
+/// per i. Tiling only reorders which (i,j) *outputs* are produced when —
+/// every output is still one whole sequential dot, written once — so the
+/// result is bitwise identical to the untiled walk (pinned by
+/// `xxt_acc_threads_bit_identical_any_thread_count` with m > 64).
+const SYRK_COL_TILE: usize = 64;
+
 fn syrk_upper_rows(data: &[f64], m: usize, k: usize, r0: usize, r1: usize, out: &mut [f64]) {
-    for i in r0..r1 {
-        let ri = &data[i * k..(i + 1) * k];
-        let orow = &mut out[(i - r0) * m..(i - r0 + 1) * m];
-        let mut j = i;
-        while j + 4 <= m {
-            let rj0 = &data[j * k..(j + 1) * k];
-            let rj1 = &data[(j + 1) * k..(j + 2) * k];
-            let rj2 = &data[(j + 2) * k..(j + 3) * k];
-            let rj3 = &data[(j + 3) * k..(j + 4) * k];
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-            for t in 0..k {
-                let a = ri[t];
-                s0 += a * rj0[t];
-                s1 += a * rj1[t];
-                s2 += a * rj2[t];
-                s3 += a * rj3[t];
+    let mut jt = r0;
+    while jt < m {
+        let jt1 = (jt + SYRK_COL_TILE).min(m);
+        // Rows above the tile's diagonal block take the whole tile;
+        // rows inside it start at their own diagonal (j ≥ i).
+        for i in r0..r1.min(jt1) {
+            let ri = &data[i * k..(i + 1) * k];
+            let orow = &mut out[(i - r0) * m..(i - r0 + 1) * m];
+            let mut j = jt.max(i);
+            while j + 4 <= jt1 {
+                let rj0 = &data[j * k..(j + 1) * k];
+                let rj1 = &data[(j + 1) * k..(j + 2) * k];
+                let rj2 = &data[(j + 2) * k..(j + 3) * k];
+                let rj3 = &data[(j + 3) * k..(j + 4) * k];
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+                for t in 0..k {
+                    let a = ri[t];
+                    s0 += a * rj0[t];
+                    s1 += a * rj1[t];
+                    s2 += a * rj2[t];
+                    s3 += a * rj3[t];
+                }
+                orow[j] = s0;
+                orow[j + 1] = s1;
+                orow[j + 2] = s2;
+                orow[j + 3] = s3;
+                j += 4;
             }
-            orow[j] = s0;
-            orow[j + 1] = s1;
-            orow[j + 2] = s2;
-            orow[j + 3] = s3;
-            j += 4;
-        }
-        while j < m {
-            let rj = &data[j * k..(j + 1) * k];
-            let mut s = 0.0;
-            for t in 0..k {
-                s += ri[t] * rj[t];
+            while j < jt1 {
+                let rj = &data[j * k..(j + 1) * k];
+                let mut s = 0.0;
+                for t in 0..k {
+                    s += ri[t] * rj[t];
+                }
+                orow[j] = s;
+                j += 1;
             }
-            orow[j] = s;
-            j += 1;
         }
+        jt = jt1;
     }
 }
 
@@ -450,9 +468,11 @@ mod tests {
     /// caller's tile without reallocating.
     #[test]
     fn xxt_acc_threads_bit_identical_any_thread_count() {
-        // Large enough to clear the serial cutoff (m²k/2 ≥ 2²¹).
-        let x = Mat::randn(64, 1100, 9);
-        let mut legacy = Mat::randn(64, 64, 10); // nonzero accumulator
+        // Large enough to clear the serial cutoff (m²k/2 ≥ 2²¹) AND to
+        // cross the 64-column SYRK cache tile (m > SYRK_COL_TILE).
+        let m = SYRK_COL_TILE + 16;
+        let x = Mat::randn(m, 1100, 9);
+        let mut legacy = Mat::randn(m, m, 10); // nonzero accumulator
         let start = legacy.clone();
         legacy.axpy(2.0, &x.xxt());
         let mut tile = Vec::new();
@@ -478,11 +498,15 @@ mod tests {
         }
     }
 
-    /// The 4-wide output unrolls must not change a single bit: each
-    /// output's reduction is still one sequential t-sweep.
+    /// The 4-wide output unrolls and the 64-column cache tiling must not
+    /// change a single bit: each output's reduction is still one
+    /// sequential t-sweep, written exactly once.
     #[test]
     fn unrolled_kernels_bit_identical_to_scalar() {
-        let x = Mat::randn(11, 37, 31); // odd sizes exercise the tails
+        // Odd sizes exercise the unroll tails; m = 71 crosses the
+        // 64-column tile boundary (tile seam at j = 64, partial second
+        // tile of 7 columns).
+        let x = Mat::randn(SYRK_COL_TILE + 7, 37, 31);
         let (m, k) = (x.rows, x.cols);
         let mut out = vec![f64::NAN; m * m];
         syrk_upper_rows(&x.data, m, k, 0, m, &mut out);

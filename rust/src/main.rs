@@ -108,6 +108,17 @@ fn main() -> obc::util::Result<()> {
         opt("shed-depth", "serve: shed jobs past this queue depth (default: block)", None),
         opt("shed-bytes", "serve: shed jobs past this many in-flight request bytes", None),
         opt("deadline-ms", "serve: default per-job deadline in milliseconds", None),
+        opt(
+            "batch-window-ms",
+            "serve: admission window for cross-request batching (default: group only queued jobs)",
+            None,
+        ),
+        opt("tenant-cap", "serve: max accepted-but-unanswered jobs per tenant", None),
+        opt(
+            "chunk-outbox",
+            "serve: per-connection streaming-chunk outbox bound",
+            Some("256"),
+        ),
         opt("kind", "db kind (sparsity|mixed_gpu|mixed_gpu_baseline|cpu)", Some("sparsity")),
         opt("grid", "db: comma-separated sparsity grid (default Eq. 10)", None),
         opt("out", "db export: output snapshot file", None),
@@ -151,6 +162,12 @@ fn main() -> obc::util::Result<()> {
                     .get("deadline-ms")
                     .and_then(|v| v.parse().ok())
                     .map(std::time::Duration::from_millis),
+                batch_window: args
+                    .get("batch-window-ms")
+                    .and_then(|v| v.parse().ok())
+                    .map(std::time::Duration::from_millis),
+                tenant_max_in_flight: args.get("tenant-cap").and_then(|v| v.parse().ok()),
+                chunk_outbox: args.usize_or("chunk-outbox", obc::server::DEFAULT_CHUNK_OUTBOX),
             };
             if let Some(dir) = &cfg.store_dir {
                 eprintln!("obc serve: durable databases in {}", dir.display());

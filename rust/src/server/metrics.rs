@@ -28,6 +28,22 @@ pub struct Metrics {
     pub deadline_expired: AtomicU64,
     /// High-water mark of the queue depth.
     pub queue_depth_peak: AtomicU64,
+    /// Admission-window groups where ≥ 2 jobs shared one pooled
+    /// execution (exact duplicates inside a group count as coalesced,
+    /// not as extra occupancy beyond their membership).
+    pub batch_groups: AtomicU64,
+    /// High-water mark of members in one admission-window group.
+    pub batch_occupancy_peak: AtomicU64,
+    /// Interactive-class jobs shed by admission control.
+    pub shed_interactive: AtomicU64,
+    /// Batch-class jobs shed by admission control (their watermark is
+    /// half the interactive one, so this normally rises first).
+    pub shed_batch: AtomicU64,
+    /// Streaming progress chunks enqueued to client outboxes.
+    pub stream_chunks_sent: AtomicU64,
+    /// Streaming progress chunks dropped because a client's bounded
+    /// outbox was full (slow reader) or its connection was gone.
+    pub stream_chunks_dropped: AtomicU64,
     queue_ns: AtomicU64,
     exec_ns: AtomicU64,
 }
@@ -63,6 +79,24 @@ impl Metrics {
                 self.deadline_expired.load(Ordering::Relaxed) as f64,
             )
             .set("queue_depth_peak", self.queue_depth_peak.load(Ordering::Relaxed) as f64)
+            .set("batch_groups", self.batch_groups.load(Ordering::Relaxed) as f64)
+            .set(
+                "batch_occupancy_peak",
+                self.batch_occupancy_peak.load(Ordering::Relaxed) as f64,
+            )
+            .set(
+                "jobs_shed_interactive",
+                self.shed_interactive.load(Ordering::Relaxed) as f64,
+            )
+            .set("jobs_shed_batch", self.shed_batch.load(Ordering::Relaxed) as f64)
+            .set(
+                "stream_chunks_sent",
+                self.stream_chunks_sent.load(Ordering::Relaxed) as f64,
+            )
+            .set(
+                "stream_chunks_dropped",
+                self.stream_chunks_dropped.load(Ordering::Relaxed) as f64,
+            )
             .set("queue_seconds_total", self.queue_ns.load(Ordering::Relaxed) as f64 / 1e9)
             .set("exec_seconds_total", self.exec_ns.load(Ordering::Relaxed) as f64 / 1e9);
         o
@@ -91,5 +125,26 @@ mod tests {
         assert!((qs - 1.0).abs() < 1e-6, "{qs}");
         let es = j.get("exec_seconds_total").unwrap().as_f64().unwrap();
         assert!((es - 2.0).abs() < 1e-6, "{es}");
+    }
+
+    #[test]
+    fn batch_and_stream_counters_render() {
+        let m = Metrics::default();
+        m.batch_groups.fetch_add(2, Ordering::Relaxed);
+        m.batch_occupancy_peak.fetch_max(5, Ordering::Relaxed);
+        m.shed_interactive.fetch_add(1, Ordering::Relaxed);
+        m.shed_batch.fetch_add(3, Ordering::Relaxed);
+        m.stream_chunks_sent.fetch_add(29, Ordering::Relaxed);
+        let j = m.to_json();
+        for (key, want) in [
+            ("batch_groups", 2.0),
+            ("batch_occupancy_peak", 5.0),
+            ("jobs_shed_interactive", 1.0),
+            ("jobs_shed_batch", 3.0),
+            ("stream_chunks_sent", 29.0),
+            ("stream_chunks_dropped", 0.0),
+        ] {
+            assert_eq!(j.get(key).unwrap().as_f64().unwrap(), want, "{key}");
+        }
     }
 }

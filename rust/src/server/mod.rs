@@ -17,6 +17,21 @@
 //!   [`crate::store::SnapshotStore`]): builds write through to disk and
 //!   a restarted server answers db-backed jobs from the snapshot
 //!   without rebuilding;
+//! * a **cross-request batch scheduler**: dequeue workers drain the
+//!   queue into a short admission window that groups compatible
+//!   database-backed jobs by (model, method family, grid)
+//!   ([`JobSpec::batch_group_key`]) and executes each group's union of
+//!   layer work as ONE pooled build, fanning per-layer results back to
+//!   every member — bit-identical to sequential execution, since
+//!   per-layer database entries are independent;
+//! * **priority classes** (`interactive`/`batch` wire field) with
+//!   per-tenant admission counters and per-class typed
+//!   `"rejected":"overloaded"` backpressure, plus interactive-first
+//!   dequeue ([`queue::Bounded::pop_preferring`]);
+//! * an opt-in **streaming response protocol** (`stream:true`):
+//!   `{"chunk":...}` per-level progress lines ahead of the final blob,
+//!   through a bounded per-connection outbox ([`WireReply`]) so a slow
+//!   reader drops chunks instead of ballooning server memory;
 //! * a line-protocol frontend ([`run_line_protocol`]) shared by
 //!   `examples/serve_compress.rs` and `obc serve`, plus a TCP edition
 //!   ([`net::serve_tcp`], `obc serve --listen ADDR`) running the same
@@ -28,19 +43,30 @@ pub mod net;
 pub mod queue;
 pub mod registry;
 
-use crate::coordinator::jobs::{self, ControlOp, JobResult, JobSpec, Request};
+use crate::coordinator::engine::LayerScope;
+use crate::coordinator::jobs::{self, ControlOp, DbSpec, JobResult, JobSpec, Priority, Request};
+use crate::util::deadline;
 use crate::util::json::Json;
+use crate::util::progress;
 use metrics::Metrics;
 use queue::Bounded;
 use registry::EngineRegistry;
 use std::collections::BTreeMap;
 use std::io::{BufRead, Write};
 use std::path::PathBuf;
-use crate::util::deadline;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
+
+/// Most members one admission-window group will hold.
+const BATCH_GROUP_CAP: usize = 32;
+
+/// Poll granularity while an admission window is open.
+const ADMISSION_POLL: Duration = Duration::from_millis(1);
+
+/// Default bound on a connection's streaming-chunk outbox.
+pub const DEFAULT_CHUNK_OUTBOX: usize = 256;
 
 /// Server tuning.
 pub struct ServerConfig {
@@ -68,6 +94,19 @@ pub struct ServerConfig {
     /// Deadline applied to jobs that don't carry their own
     /// `deadline_ms`. `None` = no implicit deadline.
     pub default_deadline: Option<Duration>,
+    /// How long a worker holds its admission window open after popping a
+    /// groupable (database-backed) job, waiting for compatible jobs to
+    /// arrive and join the group. `None` (default) still groups whatever
+    /// is *already* queued but never adds latency waiting for more.
+    pub batch_window: Option<Duration>,
+    /// Per-tenant admission cap: a tenant (wire field `tenant`) with
+    /// this many accepted-but-unanswered jobs is shed with a typed
+    /// `Overloaded` rejection. `None` = count tenants, never cap.
+    pub tenant_max_in_flight: Option<usize>,
+    /// Bound on each connection's streaming-chunk outbox (chunks
+    /// enqueued but not yet written): past it chunks are dropped, never
+    /// buffered, so a slow streaming reader cannot balloon memory.
+    pub chunk_outbox: usize,
 }
 
 impl Default for ServerConfig {
@@ -81,6 +120,9 @@ impl Default for ServerConfig {
             shed_depth: None,
             shed_bytes: None,
             default_deadline: None,
+            batch_window: None,
+            tenant_max_in_flight: None,
+            chunk_outbox: DEFAULT_CHUNK_OUTBOX,
         }
     }
 }
@@ -170,12 +212,96 @@ impl Response {
     }
 }
 
+/// One message on a wire frontend's outbound channel. Chunks and finals
+/// share one FIFO channel, so every chunk a job emitted is written
+/// before its final response (chunk sends happen-before the final send).
+pub enum Outbound {
+    /// A streaming progress line (`{"chunk":...}`), already augmented
+    /// with the job's `seq`/`model`/`id`.
+    Chunk(Json),
+    /// The final response of a job — exactly one per accepted job.
+    Final(Response),
+}
+
+/// A frontend reply channel that can carry streaming chunks, with a
+/// bounded per-connection outbox: `pending` counts chunks enqueued but
+/// not yet written by the connection's writer; at `cap` further chunks
+/// are dropped (finals are never dropped), so a slow reader costs
+/// chunks, not memory.
+#[derive(Clone)]
+pub struct WireReply {
+    tx: mpsc::Sender<Outbound>,
+    pending: Arc<AtomicUsize>,
+    cap: usize,
+}
+
+impl WireReply {
+    pub fn new(tx: mpsc::Sender<Outbound>, chunk_cap: usize) -> WireReply {
+        WireReply { tx, pending: Arc::new(AtomicUsize::new(0)), cap: chunk_cap.max(1) }
+    }
+
+    /// The outbox gauge. The connection writer decrements it after
+    /// writing each chunk line; it holds no sender, so the writer can
+    /// keep it without pinning the channel open.
+    pub fn outbox(&self) -> Arc<AtomicUsize> {
+        Arc::clone(&self.pending)
+    }
+
+    /// Enqueue a chunk unless the outbox is full or the receiver is
+    /// gone. `false` = dropped.
+    fn try_chunk(&self, chunk: Json) -> bool {
+        if self.pending.fetch_add(1, Ordering::Relaxed) >= self.cap {
+            self.pending.fetch_sub(1, Ordering::Relaxed);
+            return false;
+        }
+        if self.tx.send(Outbound::Chunk(chunk)).is_err() {
+            self.pending.fetch_sub(1, Ordering::Relaxed);
+            return false;
+        }
+        true
+    }
+}
+
+/// Where a job's final response goes.
+enum Reply {
+    /// Library callers: a plain channel of [`Response`]s.
+    Plain(mpsc::Sender<Response>),
+    /// Wire frontends: chunks + finals multiplexed on one channel.
+    Wire(WireReply),
+}
+
+impl Reply {
+    fn send_final(&self, resp: Response) {
+        // A dropped receiver just means the client went away.
+        match self {
+            Reply::Plain(tx) => drop(tx.send(resp)),
+            Reply::Wire(w) => drop(w.tx.send(Outbound::Final(resp))),
+        }
+    }
+}
+
+/// Per-job submission options for the wire frontends (the plain
+/// [`CompressionServer::submit`] fills in defaults).
+#[derive(Default, Clone)]
+pub struct JobOptions {
+    /// Client correlation id, echoed in the response (and chunks).
+    pub client_id: Option<String>,
+    /// Relative deadline; `None` falls back to the server default.
+    pub deadline: Option<Duration>,
+    /// Admission class (default interactive).
+    pub priority: Priority,
+    /// Tenant label for per-tenant admission counting.
+    pub tenant: Option<String>,
+    /// Opt-in streaming progress chunks (needs a wire reply to matter).
+    pub stream: bool,
+}
+
 struct QueuedJob {
     seq: u64,
     client_id: Option<String>,
     model: String,
     spec: JobSpec,
-    reply: mpsc::Sender<Response>,
+    reply: Reply,
     enqueued: Instant,
     /// Absolute wall-clock budget: expired at dequeue → typed Deadline
     /// rejection; checked again at execution checkpoints.
@@ -183,6 +309,10 @@ struct QueuedJob {
     /// Admission-control weight (compact-JSON size of the spec),
     /// released from `in_flight_bytes` when the response is delivered.
     cost: usize,
+    priority: Priority,
+    /// Tenant label, released from the per-tenant counter at delivery.
+    tenant: Option<String>,
+    stream: bool,
 }
 
 struct Inner {
@@ -195,9 +325,14 @@ struct Inner {
     seq: AtomicU64,
     /// Bytes accepted but not yet answered (admission-control gauge).
     in_flight_bytes: AtomicUsize,
+    /// Accepted-but-unanswered jobs per tenant label.
+    tenants: Mutex<BTreeMap<String, usize>>,
     shed_depth: Option<usize>,
     shed_bytes: Option<usize>,
     default_deadline: Option<Duration>,
+    batch_window: Option<Duration>,
+    tenant_cap: Option<usize>,
+    chunk_outbox: usize,
 }
 
 /// The running service: worker threads over a bounded queue.
@@ -227,9 +362,13 @@ impl CompressionServer {
             inflight: Mutex::new(BTreeMap::new()),
             seq: AtomicU64::new(0),
             in_flight_bytes: AtomicUsize::new(0),
+            tenants: Mutex::new(BTreeMap::new()),
             shed_depth: cfg.shed_depth,
             shed_bytes: cfg.shed_bytes,
             default_deadline: cfg.default_deadline,
+            batch_window: cfg.batch_window,
+            tenant_cap: cfg.tenant_max_in_flight,
+            chunk_outbox: cfg.chunk_outbox.max(1),
         });
         let workers = (0..cfg.workers.max(1))
             .map(|i| {
@@ -266,22 +405,47 @@ impl CompressionServer {
         deadline: Option<Duration>,
         reply: mpsc::Sender<Response>,
     ) -> Result<u64, SubmitError> {
+        let opts = JobOptions { client_id, deadline, ..JobOptions::default() };
+        self.submit_inner(model, spec, opts, Reply::Plain(reply))
+    }
+
+    /// Full-option submission for wire frontends: priority class,
+    /// tenant accounting, and streaming chunks multiplexed with the
+    /// final response on the connection's [`Outbound`] channel.
+    pub fn submit_wire(
+        &self,
+        model: &str,
+        spec: JobSpec,
+        opts: JobOptions,
+        reply: WireReply,
+    ) -> Result<u64, SubmitError> {
+        self.submit_inner(model, spec, opts, Reply::Wire(reply))
+    }
+
+    /// The chunk-outbox bound frontends should build [`WireReply`]s with.
+    pub fn chunk_outbox(&self) -> usize {
+        self.inner.chunk_outbox
+    }
+
+    fn submit_inner(
+        &self,
+        model: &str,
+        spec: JobSpec,
+        opts: JobOptions,
+        reply: Reply,
+    ) -> Result<u64, SubmitError> {
         let now = Instant::now();
-        let budget = deadline.or(self.inner.default_deadline);
+        let budget = opts.deadline.or(self.inner.default_deadline);
         let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed);
         let cost = spec.to_json().to_string_compact().len();
-        let job = QueuedJob {
-            seq,
-            client_id,
-            model: model.to_string(),
-            spec,
-            reply,
-            enqueued: now,
-            deadline: budget.and_then(|d| now.checked_add(d)),
-            cost,
-        };
-        let shed = |inner: &Inner, depth: usize| -> SubmitError {
+        let class = opts.priority;
+        let shed = |inner: &Inner, class: Priority, depth: usize| -> SubmitError {
             inner.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            match class {
+                Priority::Interactive => &inner.metrics.shed_interactive,
+                Priority::Batch => &inner.metrics.shed_batch,
+            }
+            .fetch_add(1, Ordering::Relaxed);
             SubmitError::Overloaded {
                 depth,
                 in_flight_bytes: inner.in_flight_bytes.load(Ordering::Relaxed),
@@ -290,16 +454,49 @@ impl CompressionServer {
         // Fault injection: a firing "queue.push" site sheds the job as
         // if a watermark tripped (the typed-backpressure failure mode).
         if crate::faultpoint!("queue.push").is_err() {
-            return Err(shed(&self.inner, self.inner.queue.len()));
+            return Err(shed(&self.inner, class, self.inner.queue.len()));
         }
         if let Some(maxb) = self.inner.shed_bytes {
             if self.inner.in_flight_bytes.load(Ordering::Relaxed) >= maxb {
-                return Err(shed(&self.inner, self.inner.queue.len()));
+                return Err(shed(&self.inner, class, self.inner.queue.len()));
             }
         }
-        let pushed = match self.inner.shed_depth {
+        // Per-tenant admission counter: gauge always, cap when
+        // configured. Released by `deliver` (or below, on a failed push).
+        if let Some(tenant) = opts.tenant.as_deref() {
+            let mut tenants = self.inner.tenants.lock().unwrap();
+            let count = tenants.entry(tenant.to_string()).or_insert(0);
+            if self.inner.tenant_cap.is_some_and(|cap| *count >= cap) {
+                if *count == 0 {
+                    tenants.remove(tenant);
+                }
+                drop(tenants);
+                return Err(shed(&self.inner, class, self.inner.queue.len()));
+            }
+            *count += 1;
+        }
+        let job = QueuedJob {
+            seq,
+            client_id: opts.client_id,
+            model: model.to_string(),
+            spec,
+            reply,
+            enqueued: now,
+            deadline: budget.and_then(|d| now.checked_add(d)),
+            cost,
+            priority: class,
+            tenant: opts.tenant.clone(),
+            stream: opts.stream,
+        };
+        // Batch-class jobs shed at half the interactive depth watermark,
+        // keeping interactive headroom through saturation.
+        let depth_limit = self.inner.shed_depth.map(|d| match class {
+            Priority::Interactive => d,
+            Priority::Batch => (d / 2).max(1),
+        });
+        let pushed = match depth_limit {
             Some(limit) => self.inner.queue.offer(job, limit).map_err(|e| match e {
-                queue::OfferError::Full(_) => Some(shed(&self.inner, limit)),
+                queue::OfferError::Full(_) => Some(shed(&self.inner, class, limit)),
                 queue::OfferError::Closed(_) => None,
             }),
             None => self.inner.queue.push(job).map_err(|_| None),
@@ -311,8 +508,12 @@ impl CompressionServer {
                 self.inner.in_flight_bytes.fetch_add(cost, Ordering::Relaxed);
                 Ok(seq)
             }
-            Err(Some(overloaded)) => Err(overloaded),
+            Err(Some(overloaded)) => {
+                release_tenant(&self.inner, &opts.tenant);
+                Err(overloaded)
+            }
             Err(None) => {
+                release_tenant(&self.inner, &opts.tenant);
                 self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 Err(SubmitError::Closed)
             }
@@ -391,64 +592,251 @@ impl Drop for CompressionServer {
     }
 }
 
-fn worker_loop(inner: &Inner) {
-    while let Some(job) = inner.queue.pop() {
+fn worker_loop(inner: &Arc<Inner>) {
+    // Interactive-first dequeue: with uniform priority this is exact
+    // FIFO; under mixed load interactive jobs jump queued batch work.
+    while let Some(job) = inner.queue.pop_preferring(|j| j.priority == Priority::Interactive) {
         // Deadline at dequeue: a job whose budget lapsed while queued is
         // answered with a typed rejection, never executed (and never
         // attached to the coalescing table — its waiters deserve fresh
         // timing anyway).
-        if job.deadline.is_some_and(|d| Instant::now() >= d) {
-            let queue_s = job.enqueued.elapsed().as_secs_f64();
-            let outcome = Err(format!(
-                "{} before execution (spent {queue_s:.3}s queued)",
-                deadline::EXCEEDED
-            ));
-            deliver(inner, job, &outcome, queue_s, 0.0, false);
+        let Some(job) = reject_if_expired(inner, job) else { continue };
+        match job.spec.batch_group_key(&job.model) {
+            Some(gkey) => {
+                let members = admission_window(inner, job, &gkey);
+                run_group(inner, members);
+            }
+            None => run_single(inner, job),
+        }
+    }
+}
+
+/// Collect compatible queued jobs behind `leader` — the admission
+/// window. Always sweeps what is already queued; with a configured
+/// `batch_window` it also waits (polling) for more compatible jobs to
+/// arrive, up to [`BATCH_GROUP_CAP`] members.
+fn admission_window(inner: &Arc<Inner>, leader: QueuedJob, gkey: &str) -> Vec<QueuedJob> {
+    let mut members = vec![leader];
+    let window_end = inner.batch_window.map(|w| Instant::now() + w);
+    loop {
+        let room = BATCH_GROUP_CAP.saturating_sub(members.len());
+        members.extend(inner.queue.drain_where(
+            |j| j.spec.batch_group_key(&j.model).as_deref() == Some(gkey),
+            room,
+        ));
+        match window_end {
+            Some(end) if members.len() < BATCH_GROUP_CAP && Instant::now() < end => {
+                thread::sleep(ADMISSION_POLL);
+            }
+            _ => break,
+        }
+    }
+    members
+}
+
+/// Execute one admission-window group: the union of the members' layer
+/// work runs ONCE over the shared pool, then every member is answered
+/// from it — exact duplicates get one execution (delivered coalesced),
+/// distinct members execute against the already-built database.
+fn run_group(inner: &Arc<Inner>, members: Vec<QueuedJob>) {
+    let n = members.len() as u64;
+    inner.metrics.batch_occupancy_peak.fetch_max(n, Ordering::Relaxed);
+    if n >= 2 {
+        inner.metrics.batch_groups.fetch_add(1, Ordering::Relaxed);
+        ensure_union_db(inner, &members);
+    }
+    let mut outcomes: BTreeMap<String, Result<JobResult, String>> = BTreeMap::new();
+    for job in members {
+        let key = job.spec.coalesce_key(&job.model);
+        if let Some(outcome) = outcomes.get(&key) {
+            // In-group duplicate: absorbed by its twin's execution.
+            let outcome = outcome.clone();
+            inner.metrics.coalesced.fetch_add(1, Ordering::Relaxed);
+            deliver_shared(inner, job, &outcome);
             continue;
         }
-        let key = job.spec.coalesce_key(&job.model);
-        // Coalescing: identical to a job currently executing → park
-        // behind it and receive its result (jobs are pure).
-        {
-            let mut fl = inner.inflight.lock().unwrap();
-            if let Some(waiters) = fl.get_mut(&key) {
-                waiters.push(job);
-                inner.metrics.coalesced.fetch_add(1, Ordering::Relaxed);
-                continue;
-            }
-            fl.insert(key.clone(), Vec::new());
-        }
+        // The member's own deadline may have lapsed during the window
+        // or the shared build — typed rejection, never execution.
+        let Some(job) = reject_if_expired(inner, job) else { continue };
         let queue_s = job.enqueued.elapsed().as_secs_f64();
         let t0 = Instant::now();
-        // A panicking kernel (e.g. an unsupported method/pattern combo)
-        // must become an error response, not a dead worker.
-        let outcome: Result<JobResult, String> =
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                // Execution checkpoints (registry, per-layer loops) read
-                // the deadline from thread-local scope.
-                deadline::with_deadline(job.deadline, || {
-                    inner
-                        .registry
-                        .get(&job.model)
-                        .and_then(|engine| jobs::execute(&engine, &job.spec))
-                })
-            }))
-            .unwrap_or_else(|p| {
-                let msg = p
-                    .downcast_ref::<String>()
-                    .map(String::as_str)
-                    .or_else(|| p.downcast_ref::<&str>().copied())
-                    .unwrap_or("<non-string panic payload>");
-                Err(crate::err!("job panicked: {msg}"))
-            })
-            .map_err(|e| e.to_string());
+        let outcome = execute_checked(inner, &job);
         let exec_s = t0.elapsed().as_secs_f64();
-        let waiters = inner.inflight.lock().unwrap().remove(&key).unwrap_or_default();
         deliver(inner, job, &outcome, queue_s, exec_s, false);
-        for w in waiters {
-            let wq = w.enqueued.elapsed().as_secs_f64();
-            deliver(inner, w, &outcome, wq, 0.0, true);
+        outcomes.insert(key, outcome);
+    }
+}
+
+/// The non-groupable path: coalescing table + single execution
+/// (unchanged semantics from the pre-batching scheduler).
+fn run_single(inner: &Arc<Inner>, job: QueuedJob) {
+    let key = job.spec.coalesce_key(&job.model);
+    // Coalescing: identical to a job currently executing → park
+    // behind it and receive its result (jobs are pure).
+    {
+        let mut fl = inner.inflight.lock().unwrap();
+        if let Some(waiters) = fl.get_mut(&key) {
+            waiters.push(job);
+            inner.metrics.coalesced.fetch_add(1, Ordering::Relaxed);
+            return;
         }
+        fl.insert(key.clone(), Vec::new());
+    }
+    let queue_s = job.enqueued.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let outcome = execute_checked(inner, &job);
+    let exec_s = t0.elapsed().as_secs_f64();
+    let waiters = inner.inflight.lock().unwrap().remove(&key).unwrap_or_default();
+    deliver(inner, job, &outcome, queue_s, exec_s, false);
+    for w in waiters {
+        deliver_shared(inner, w, &outcome);
+    }
+}
+
+/// If `job`'s deadline has lapsed, answer it with a typed rejection and
+/// return `None`; otherwise hand the job back for execution.
+fn reject_if_expired(inner: &Inner, job: QueuedJob) -> Option<QueuedJob> {
+    if job.deadline.is_some_and(|d| Instant::now() >= d) {
+        let queue_s = job.enqueued.elapsed().as_secs_f64();
+        let outcome = Err(format!(
+            "{} before execution (spent {queue_s:.3}s queued)",
+            deadline::EXCEEDED
+        ));
+        deliver(inner, job, &outcome, queue_s, 0.0, false);
+        return None;
+    }
+    Some(job)
+}
+
+/// Run one job with panic isolation, its own deadline scope, and (for
+/// streaming jobs) its progress sink installed.
+fn execute_checked(inner: &Arc<Inner>, job: &QueuedJob) -> Result<JobResult, String> {
+    let _p = progress::set(chunk_sink(inner, job));
+    // A panicking kernel (e.g. an unsupported method/pattern combo)
+    // must become an error response, not a dead worker.
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        // Execution checkpoints (registry, per-layer loops) read
+        // the deadline from thread-local scope.
+        deadline::with_deadline(job.deadline, || {
+            inner
+                .registry
+                .get(&job.model)
+                .and_then(|engine| jobs::execute(&engine, &job.spec))
+        })
+    }))
+    .unwrap_or_else(|p| {
+        let msg = p
+            .downcast_ref::<String>()
+            .map(String::as_str)
+            .or_else(|| p.downcast_ref::<&str>().copied())
+            .unwrap_or("<non-string panic payload>");
+        Err(crate::err!("job panicked: {msg}"))
+    })
+    .map_err(|e| e.to_string())
+}
+
+/// Build the progress sink for a streaming wire job: augments each
+/// chunk with the job's identity and forwards it through the bounded
+/// outbox (dropping, never blocking, when the reader is slow).
+fn chunk_sink(inner: &Arc<Inner>, job: &QueuedJob) -> Option<progress::Sink> {
+    if !job.stream {
+        return None;
+    }
+    let Reply::Wire(wire) = &job.reply else { return None };
+    let wire = wire.clone();
+    let inner = Arc::clone(inner);
+    let seq = job.seq;
+    let model = job.model.clone();
+    let id = job.client_id.clone();
+    Some(Arc::new(move |mut chunk: Json| {
+        chunk.set("seq", seq as f64).set("model", model.as_str());
+        if let Some(id) = &id {
+            chunk.set("id", id.as_str());
+        }
+        if wire.try_chunk(chunk) {
+            inner.metrics.stream_chunks_sent.fetch_add(1, Ordering::Relaxed);
+        } else {
+            inner.metrics.stream_chunks_dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }))
+}
+
+/// Ensure the group's union database is built (once, over the shared
+/// pool) so every member — including narrower-scope ones, whose
+/// database is assembled from the union's per-layer entries — answers
+/// from cache. Best-effort: on failure each member simply re-attempts
+/// under its own deadline.
+fn ensure_union_db(inner: &Arc<Inner>, members: &[QueuedJob]) {
+    let model = &members[0].model;
+    let Some(proto) = members[0].spec.db_spec() else { return };
+    let scopes = members.iter().filter_map(|m| m.spec.db_spec()).map(|d| d.scope);
+    let union_scope = if scopes.clone().any(|s| s == LayerScope::All) {
+        LayerScope::All
+    } else {
+        LayerScope::SkipFirstLast
+    };
+    let union_spec = DbSpec { scope: union_scope, ..proto.clone() };
+    // The shared build runs on the roomiest member's budget (None if
+    // any member is unbounded); each member's own answer still runs
+    // under its own deadline afterwards.
+    let sponsor = if members.iter().any(|m| m.deadline.is_none()) {
+        None
+    } else {
+        members.iter().filter_map(|m| m.deadline).max()
+    };
+    // The first streaming member watches the shared build's progress.
+    let sink = members.iter().find_map(|m| chunk_sink(inner, m));
+    let _p = progress::set(sink);
+    let shared = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        deadline::with_deadline(sponsor, || {
+            let engine = inner.registry.get(model)?;
+            let (union, _) = jobs::db_for_spec(&engine, &union_spec)?;
+            // Fan per-layer results out to narrower scopes: per-layer
+            // entries are independent, so the assembled subset is
+            // bit-identical to building that scope directly.
+            let mut done = std::collections::BTreeSet::new();
+            done.insert(union_spec.cache_key());
+            for m in members {
+                let Some(d) = m.spec.db_spec() else { continue };
+                let key = d.cache_key();
+                if done.insert(key.clone()) {
+                    engine.db_cached(&key, || Ok(engine.db_subset(&union, d.scope)))?;
+                }
+            }
+            Ok::<(), crate::util::error::ObcError>(())
+        })
+    }));
+    if let Ok(Err(e)) = shared {
+        crate::warnlog!("server", "shared group build failed (members retry solo): {e}");
+    }
+}
+
+fn release_tenant(inner: &Inner, tenant: &Option<String>) {
+    if let Some(t) = tenant {
+        let mut tenants = inner.tenants.lock().unwrap();
+        if let Some(count) = tenants.get_mut(t) {
+            *count -= 1;
+            if *count == 0 {
+                tenants.remove(t);
+            }
+        }
+    }
+}
+
+/// Deliver a leader's outcome to a waiter parked behind it (coalesced
+/// or batched). The waiter's OWN deadline still governs: if it lapsed
+/// before the leader finished, the waiter gets its own typed
+/// `"rejected":"deadline"` instead of a result it no longer wants.
+fn deliver_shared(inner: &Inner, w: QueuedJob, outcome: &Result<JobResult, String>) {
+    let wq = w.enqueued.elapsed().as_secs_f64();
+    if w.deadline.is_some_and(|d| Instant::now() >= d) {
+        let miss = Err(format!(
+            "{} while parked behind a shared execution (spent {wq:.3}s waiting)",
+            deadline::EXCEEDED
+        ));
+        deliver(inner, w, &miss, wq, 0.0, false);
+    } else {
+        deliver(inner, w, outcome, wq, 0.0, true);
     }
 }
 
@@ -461,6 +849,7 @@ fn deliver(
     coalesced: bool,
 ) {
     inner.in_flight_bytes.fetch_sub(job.cost, Ordering::Relaxed);
+    release_tenant(inner, &job.tenant);
     if !coalesced {
         if let Err(msg) = outcome {
             if msg.starts_with(deadline::EXCEEDED) {
@@ -469,8 +858,7 @@ fn deliver(
         }
     }
     inner.metrics.observe_job(queue_s, exec_s, outcome.is_ok());
-    // A dropped receiver just means the client went away; nothing to do.
-    let _ = job.reply.send(Response {
+    job.reply.send_final(Response {
         seq: job.seq,
         client_id: job.client_id,
         model: job.model,
@@ -502,13 +890,25 @@ where
 {
     let server = CompressionServer::start(cfg);
     let out = Arc::new(Mutex::new(out));
-    let (tx, rx) = mpsc::channel::<Response>();
+    let (tx, rx) = mpsc::channel::<Outbound>();
+    let wire = WireReply::new(tx, server.chunk_outbox());
     let writer = {
         let out = Arc::clone(&out);
+        // The writer owns the outbox gauge (not a WireReply clone — the
+        // channel must close once every submitted job has answered).
+        let outbox = wire.outbox();
         thread::spawn(move || {
-            for resp in rx {
+            for msg in rx {
+                let line = match msg {
+                    Outbound::Chunk(j) => {
+                        let line = j.to_string_compact();
+                        outbox.fetch_sub(1, Ordering::Relaxed);
+                        line
+                    }
+                    Outbound::Final(resp) => resp.to_json().to_string_compact(),
+                };
                 let mut o = out.lock().unwrap();
-                let _ = writeln!(o, "{}", resp.to_json().to_string_compact());
+                let _ = writeln!(o, "{line}");
                 let _ = o.flush();
             }
         })
@@ -534,11 +934,15 @@ where
             }
             Ok(Request::Control(ControlOp::Health)) => write_line(&server.health_json())?,
             Ok(Request::Control(ControlOp::Metrics)) => write_line(&server.metrics_json())?,
-            Ok(Request::Job { id, model, spec, deadline_ms }) => {
-                let budget = deadline_ms.map(Duration::from_millis);
-                if let Err(e) =
-                    server.submit_with_deadline(&model, spec, id.clone(), budget, tx.clone())
-                {
+            Ok(Request::Job { id, model, spec, deadline_ms, priority, tenant, stream }) => {
+                let opts = JobOptions {
+                    client_id: id.clone(),
+                    deadline: deadline_ms.map(Duration::from_millis),
+                    priority,
+                    tenant,
+                    stream,
+                };
+                if let Err(e) = server.submit_wire(&model, spec, opts, wire.clone()) {
                     let mut o = Json::obj();
                     o.set("ok", false)
                         .set("error", e.to_string())
@@ -560,7 +964,7 @@ where
 
     // Graceful drain: stop accepting, finish accepted jobs (their
     // responses flow through the writer), then ack.
-    drop(tx);
+    drop(wire);
     server.shutdown();
     let _ = writer.join();
     if explicit_shutdown {

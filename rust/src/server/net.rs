@@ -25,7 +25,7 @@
 //! idle observe the drain via their read timeout and close. Asserted by
 //! `rust/tests/server_concurrency.rs`.
 
-use super::{CompressionServer, Response, ServerConfig};
+use super::{CompressionServer, JobOptions, Outbound, ServerConfig, WireReply};
 use crate::coordinator::jobs::{ControlOp, Request};
 use crate::util::json::Json;
 use std::io::{Read, Write};
@@ -114,7 +114,7 @@ fn process_line(
     server: &CompressionServer,
     stats: &NetStats,
     out: &Mutex<TcpStream>,
-    tx: &mpsc::Sender<Response>,
+    wire: &WireReply,
     line: &str,
 ) -> LineOutcome {
     match Request::parse_line(line) {
@@ -127,11 +127,15 @@ fn process_line(
             stats.augment(&mut m);
             let _ = write_json(out, stats, &m);
         }
-        Ok(Request::Job { id, model, spec, deadline_ms }) => {
-            let budget = deadline_ms.map(Duration::from_millis);
-            if let Err(e) =
-                server.submit_with_deadline(&model, spec, id.clone(), budget, tx.clone())
-            {
+        Ok(Request::Job { id, model, spec, deadline_ms, priority, tenant, stream }) => {
+            let opts = JobOptions {
+                client_id: id.clone(),
+                deadline: deadline_ms.map(Duration::from_millis),
+                priority,
+                tenant,
+                stream,
+            };
+            if let Err(e) = server.submit_wire(&model, spec, opts, wire.clone()) {
                 let mut o = Json::obj();
                 o.set("ok", false)
                     .set("error", e.to_string())
@@ -207,17 +211,28 @@ fn handle_connection(
             return;
         }
     };
-    let (tx, rx) = mpsc::channel::<Response>();
+    let (tx, rx) = mpsc::channel::<Outbound>();
+    let wire = WireReply::new(tx, server.chunk_outbox());
     let writer = {
         let out = Arc::clone(&out);
         let stats = Arc::clone(stats);
+        // The writer owns the outbox gauge only (not a WireReply clone):
+        // the channel must close once every submitted job has answered.
+        let outbox = wire.outbox();
         thread::spawn(move || {
-            for resp in rx {
+            for msg in rx {
+                let j = match msg {
+                    Outbound::Chunk(j) => {
+                        outbox.fetch_sub(1, Ordering::Relaxed);
+                        j
+                    }
+                    Outbound::Final(resp) => resp.to_json(),
+                };
                 // First failed/timed-out write abandons this
                 // connection's output: a half-written line must not be
                 // followed by more frames (garbled framing), and a dead
                 // client must not stall the shutdown drain per response.
-                if write_json(&out, &stats, &resp.to_json()).is_err() {
+                if write_json(&out, &stats, &j).is_err() {
                     break;
                 }
             }
@@ -235,7 +250,7 @@ fn handle_connection(
                 let tail = String::from_utf8_lossy(&buf).into_owned();
                 if !tail.trim().is_empty() {
                     if let LineOutcome::Shutdown =
-                        process_line(server, stats, &out, &tx, tail.trim())
+                        process_line(server, stats, &out, &wire, tail.trim())
                     {
                         initiated_shutdown = true;
                     }
@@ -270,7 +285,7 @@ fn handle_connection(
                     if line.trim().is_empty() {
                         continue;
                     }
-                    match process_line(server, stats, &out, &tx, line.trim()) {
+                    match process_line(server, stats, &out, &wire, line.trim()) {
                         LineOutcome::Continue => {}
                         LineOutcome::Shutdown => {
                             initiated_shutdown = true;
@@ -296,7 +311,7 @@ fn handle_connection(
     // Close our submission side; the writer exits once every job this
     // connection submitted has delivered its response (each queued job
     // holds a sender clone until delivery).
-    drop(tx);
+    drop(wire);
     if initiated_shutdown {
         shutdown.store(true, Ordering::SeqCst);
         // Global graceful drain: refuse new jobs, finish accepted ones

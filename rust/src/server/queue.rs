@@ -115,6 +115,52 @@ impl<T> Bounded<T> {
         }
     }
 
+    /// Dequeue, blocking while empty, preferring the first item matching
+    /// `pref` over strict FIFO (falls back to the front when nothing
+    /// matches). Used for priority classes: with a uniform queue the
+    /// front always matches first, so this degrades to exact FIFO.
+    pub fn pop_preferring(&self, pref: impl Fn(&T) -> bool) -> Option<T> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if !g.q.is_empty() {
+                let i = g.q.iter().position(&pref).unwrap_or(0);
+                let item = g.q.remove(i).expect("index in bounds under the lock");
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking bulk dequeue of every queued item matching `accept`
+    /// (front-to-back, up to `max`) — the batch scheduler's admission
+    /// window. Non-matching items keep their positions; freed slots wake
+    /// blocked producers.
+    pub fn drain_where(&self, accept: impl Fn(&T) -> bool, max: usize) -> Vec<T> {
+        if max == 0 {
+            return Vec::new();
+        }
+        let mut g = self.state.lock().unwrap();
+        let mut taken = Vec::new();
+        let mut i = 0;
+        while i < g.q.len() && taken.len() < max {
+            if accept(&g.q[i]) {
+                taken.push(g.q.remove(i).expect("index in bounds under the lock"));
+            } else {
+                i += 1;
+            }
+        }
+        drop(g);
+        if !taken.is_empty() {
+            self.not_full.notify_all();
+        }
+        taken
+    }
+
     /// Whether [`Bounded::close`] has been called (new pushes refused).
     pub fn is_closed(&self) -> bool {
         self.state.lock().unwrap().closed
@@ -187,6 +233,49 @@ mod tests {
         }
         let drained: Vec<i32> = std::iter::from_fn(|| q.pop()).collect();
         assert_eq!(drained, vec![1, 2, 3], "accepted jobs survive shedding");
+    }
+
+    #[test]
+    fn pop_preferring_jumps_matching_items_but_stays_fifo_within_class() {
+        let q = Bounded::new(8);
+        for i in [10, 11, 1, 12, 2] {
+            q.push(i).map_err(|_| ()).unwrap();
+        }
+        // Prefer single digits (the "interactive class"): they dequeue
+        // first in their own arrival order, then the rest in theirs.
+        let order: Vec<i32> =
+            std::iter::from_fn(|| if q.is_empty() { None } else { q.pop_preferring(|v| *v < 10) })
+                .collect();
+        assert_eq!(order, vec![1, 2, 10, 11, 12]);
+        // With no match it behaves exactly like pop().
+        q.push(42).map_err(|_| ()).unwrap();
+        assert_eq!(q.pop_preferring(|v| *v < 10), Some(42));
+    }
+
+    #[test]
+    fn drain_where_takes_matches_and_keeps_the_rest_in_order() {
+        let q = Bounded::new(8);
+        for i in 0..6 {
+            q.push(i).map_err(|_| ()).unwrap();
+        }
+        assert_eq!(q.drain_where(|v| v % 2 == 0, 2), vec![0, 2], "bounded by max");
+        assert_eq!(q.drain_where(|v| v % 2 == 0, 8), vec![4]);
+        assert_eq!(q.drain_where(|_| true, 0), Vec::<i32>::new());
+        q.close();
+        let rest: Vec<i32> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(rest, vec![1, 3, 5], "non-matching items keep their order");
+    }
+
+    #[test]
+    fn drain_where_frees_slots_for_blocked_producers() {
+        let q = Arc::new(Bounded::new(1));
+        q.push(1).map_err(|_| ()).unwrap();
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || q2.push(2).is_ok());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.drain_where(|_| true, 4), vec![1]);
+        assert!(producer.join().unwrap(), "blocked producer admitted after drain");
+        assert_eq!(q.pop(), Some(2));
     }
 
     #[test]

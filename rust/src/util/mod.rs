@@ -18,6 +18,7 @@ pub mod single_flight;
 pub mod faultpoint;
 pub mod retry;
 pub mod deadline;
+pub mod progress;
 
 pub use error::{ObcError, Result};
 

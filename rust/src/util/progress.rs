@@ -1,0 +1,105 @@
+//! Per-job streaming-progress propagation: a thread-local sink that
+//! compute paths (database builds, per-level assembly) feed with small
+//! JSON progress chunks. The serving layer installs a sink that
+//! augments each chunk with the job's identity and forwards it to the
+//! client's bounded outbox; everywhere else emission is a no-op, so
+//! the engine stays oblivious to whether anyone is watching.
+//!
+//! Mirrors `util::deadline`: a sink is scoped with [`set`] (guard
+//! restores the previous value on drop) and inherited explicitly by
+//! fan-out threads via [`current`] + `set` — thread-locals don't cross
+//! `thread::scope` boundaries on their own. Emission must never
+//! perturb numerics or block compute: sinks are expected to drop
+//! chunks rather than wait when their outbox is full.
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::sync::Arc;
+
+/// A progress sink: receives chunk objects built by compute code.
+pub type Sink = Arc<dyn Fn(Json) + Send + Sync>;
+
+thread_local! {
+    static SINK: RefCell<Option<Sink>> = const { RefCell::new(None) };
+}
+
+/// Restores the previous sink when dropped.
+pub struct ProgressGuard {
+    prev: Option<Sink>,
+}
+
+impl Drop for ProgressGuard {
+    fn drop(&mut self) {
+        SINK.with(|s| *s.borrow_mut() = self.prev.take());
+    }
+}
+
+/// Install `sink` on this thread until the guard drops. `None` clears
+/// it (useful to shield helper work from a caller's sink).
+#[must_use = "the sink lasts only while the guard lives"]
+pub fn set(sink: Option<Sink>) -> ProgressGuard {
+    ProgressGuard { prev: SINK.with(|s| s.replace(sink)) }
+}
+
+/// The sink in force on this thread, if any. Fan-out code captures
+/// this before spawning and re-`set`s it inside each worker.
+pub fn current() -> Option<Sink> {
+    SINK.with(|s| s.borrow().clone())
+}
+
+/// True when someone is listening on this thread.
+pub fn active() -> bool {
+    SINK.with(|s| s.borrow().is_some())
+}
+
+/// Emit one progress chunk. The chunk is only *built* when a sink is
+/// installed — passing a closure keeps the disabled path allocation-free.
+pub fn emit(make: impl FnOnce() -> Json) {
+    if let Some(sink) = current() {
+        sink(make());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn emit_is_a_noop_without_a_sink_and_scoped_with_one() {
+        let seen: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        assert!(!active());
+        emit(|| unreachable!("no sink installed"));
+        {
+            let seen2 = Arc::clone(&seen);
+            let _g = set(Some(Arc::new(move |j: Json| {
+                seen2.lock().unwrap().push(j.to_string_compact());
+            })));
+            assert!(active());
+            emit(|| {
+                let mut j = Json::obj();
+                j.set("chunk", "x");
+                j
+            });
+        }
+        assert!(!active());
+        emit(|| unreachable!("sink restored to none"));
+        assert_eq!(seen.lock().unwrap().as_slice(), ["{\"chunk\":\"x\"}"]);
+    }
+
+    #[test]
+    fn nested_sinks_restore_the_outer_one() {
+        let hits = Arc::new(Mutex::new(Vec::new()));
+        let tag = |name: &'static str, hits: &Arc<Mutex<Vec<&'static str>>>| -> Sink {
+            let hits = Arc::clone(hits);
+            Arc::new(move |_| hits.lock().unwrap().push(name))
+        };
+        let _outer = set(Some(tag("outer", &hits)));
+        {
+            let _inner = set(Some(tag("inner", &hits)));
+            emit(Json::obj);
+        }
+        emit(Json::obj);
+        assert_eq!(hits.lock().unwrap().as_slice(), ["inner", "outer"]);
+    }
+}

@@ -476,3 +476,98 @@ fn zero_probability_plan_covers_catalog_without_firing() {
     }
     faultpoint::clear();
 }
+
+/// A waiter parked behind a coalesced leader keeps its OWN deadline:
+/// when it lapses before the slow leader finishes, the waiter gets its
+/// own typed `"rejected":"deadline"` instead of a result it no longer
+/// wants, while the unbounded leader completes normally.
+#[test]
+fn parked_waiter_expires_on_its_own_deadline_behind_a_slow_leader() {
+    let _g = faultpoint::test_guard();
+    faultpoint::install_from_spec("engine.layer=delay:60ms@1", 4).unwrap();
+    let server = CompressionServer::start(cfg());
+    // Non-db-backed spec: takes the coalescing-table path, not the
+    // batch scheduler.
+    let spec = obc::coordinator::jobs::JobSpec::Prune {
+        method: obc::coordinator::methods::PruneMethod::ExactObs,
+        sparsity: 0.45,
+        scope: obc::coordinator::engine::LayerScope::All,
+    };
+    let (tx, rx) = mpsc::channel();
+    server.submit(SYNTHETIC_MODEL, spec.clone(), Some("lead".into()), tx.clone()).unwrap();
+    // Let the leader claim the coalescing slot and start its first
+    // (delayed) layer before the identical bounded waiter arrives.
+    std::thread::sleep(Duration::from_millis(30));
+    server
+        .submit_with_deadline(
+            SYNTHETIC_MODEL,
+            spec,
+            Some("late".into()),
+            Some(Duration::from_millis(40)),
+            tx,
+        )
+        .unwrap();
+    let resps: Vec<Response> = rx.iter().collect();
+    assert_eq!(resps.len(), 2, "both answered");
+    let by_id = |id: &str| {
+        resps
+            .iter()
+            .find(|r| r.client_id.as_deref() == Some(id))
+            .unwrap_or_else(|| panic!("no response for {id}"))
+    };
+    assert!(by_id("lead").outcome.is_ok(), "{:?}", by_id("lead").outcome);
+    let late = by_id("late");
+    let err = late.outcome.as_ref().unwrap_err();
+    assert!(err.starts_with("deadline exceeded"), "{err}");
+    assert!(err.contains("parked behind a shared execution"), "own typed rejection: {err}");
+    assert_eq!(late.to_json().get("rejected").and_then(|v| v.as_str()), Some("deadline"));
+    let m = server.metrics_json();
+    assert_eq!(counter(&m, "jobs_deadline_expired"), 1.0);
+    assert_eq!(counter(&m, "jobs_coalesced"), 1.0, "the waiter did park");
+    server.shutdown();
+    faultpoint::clear();
+}
+
+/// The batched edition of the same contract: an admission-window group
+/// member whose deadline lapses while the window is open (or the shared
+/// build runs) gets its own typed rejection — the group leader's result
+/// is not silently handed to a client that already timed out.
+#[test]
+fn batched_group_member_expires_on_its_own_deadline() {
+    let _g = faultpoint::test_guard();
+    let lines = vec![
+        r#"{"id":"lead","model":"synthetic","op":"solve","target":"flop","value":1.5,"grid":[0,0.5,0.9]}"#
+            .to_string(),
+        r#"{"id":"late","model":"synthetic","op":"solve","target":"flop","value":1.5,"grid":[0,0.5,0.9],"deadline_ms":50}"#
+            .to_string(),
+    ];
+    // One worker + a 200ms admission window: the worker pops "lead",
+    // holds the window open, drains the identical "late" into the
+    // group — and the window alone outlives late's 50ms budget.
+    let config = ServerConfig {
+        workers: 1,
+        batch_window: Some(Duration::from_millis(200)),
+        ..cfg()
+    };
+    let (jobs, ack) = stdin_run(config, &lines);
+    assert_eq!(jobs.len(), 2, "both requests answered");
+    let by_id = |id: &str| {
+        jobs.iter()
+            .map(|l| obc::util::json::parse(l).unwrap())
+            .find(|j| j.get("id").and_then(|v| v.as_str()) == Some(id))
+            .unwrap_or_else(|| panic!("no response for {id}: {jobs:?}"))
+    };
+    let lead = by_id("lead");
+    assert_eq!(lead.get("ok").and_then(|v| v.as_bool()), Some(true), "{jobs:?}");
+    let late = by_id("late");
+    assert_eq!(late.get("ok").and_then(|v| v.as_bool()), Some(false), "{jobs:?}");
+    assert_eq!(late.get("rejected").and_then(|v| v.as_str()), Some("deadline"), "{jobs:?}");
+    let msg = late.get("error").and_then(|v| v.as_str()).unwrap();
+    assert!(msg.starts_with("deadline exceeded"), "{msg}");
+    assert!(msg.contains("parked behind a shared execution"), "{msg}");
+    assert_eq!(counter(&ack, "batch_groups"), 1.0, "the two jobs did group");
+    assert_eq!(counter(&ack, "jobs_deadline_expired"), 1.0);
+    assert_eq!(counter(&ack, "jobs_completed"), 1.0);
+    assert_eq!(counter(&ack, "jobs_failed"), 1.0);
+    faultpoint::clear();
+}

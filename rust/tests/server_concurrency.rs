@@ -408,4 +408,185 @@ mod tcp {
         while ra.read_line(&mut tail).unwrap_or(0) > 0 {}
         server.join().unwrap();
     }
+
+    /// Overlapping database-backed jobs every batching client sends:
+    /// one (model, method, grid) pool family across both layer scopes —
+    /// a build plus two solver targets.
+    fn overlapping_lines() -> Vec<String> {
+        vec![
+            r#"{"id":"g1","model":"synthetic","op":"db","grid":[0,0.5,0.9]}"#.into(),
+            r#"{"id":"g2","model":"synthetic","op":"solve","target":"flop","value":1.5,"grid":[0,0.5,0.9]}"#
+                .into(),
+            r#"{"id":"g3","model":"synthetic","op":"solve","target":"flop","value":2.0,"grid":[0,0.5,0.9],"scope":"inner"}"#
+                .into(),
+        ]
+    }
+
+    /// Run ONE job alone on a fresh single-worker server (nothing to
+    /// group with, nothing cached) and return its normalized response —
+    /// the strictly-sequential reference for the batch scheduler.
+    fn run_alone(line: &str) -> String {
+        #[derive(Clone, Default)]
+        struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+        impl std::io::Write for SharedBuf {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let input = format!("{line}\n{{\"op\":\"shutdown\"}}\n");
+        let buf = SharedBuf::default();
+        run_line_protocol(ServerConfig { workers: 1, ..cfg() }, input.as_bytes(), buf.clone())
+            .unwrap();
+        let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        let resp = text
+            .lines()
+            .find(|l| l.contains("\"id\":"))
+            .unwrap_or_else(|| panic!("no response for {line}: {text}"));
+        normalize(resp)
+    }
+
+    /// Tentpole acceptance: concurrent TCP clients with overlapping
+    /// layer sets, grouped by the admission window into pooled
+    /// executions, must receive responses **f64-bit-identical** to each
+    /// job run one-at-a-time on a fresh server — and the metrics must
+    /// prove at least one group actually shared an execution.
+    #[test]
+    fn batched_tcp_clients_bit_identical_to_one_at_a_time() {
+        let mut reference: Vec<String> =
+            overlapping_lines().iter().map(|l| run_alone(l)).collect();
+        reference.sort();
+
+        let config = ServerConfig { batch_window: Some(Duration::from_millis(250)), ..cfg() };
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || serve_tcp(config, listener).unwrap());
+
+        let clients: Vec<_> = (0..6)
+            .map(|c| {
+                let lines = overlapping_lines();
+                std::thread::spawn(move || {
+                    let mut s = TcpStream::connect(addr).unwrap();
+                    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+                    for l in &lines {
+                        writeln!(s, "{l}").unwrap();
+                    }
+                    s.flush().unwrap();
+                    let mut r = BufReader::new(s);
+                    let mut got = Vec::new();
+                    for _ in 0..lines.len() {
+                        let mut line = String::new();
+                        r.read_line(&mut line)
+                            .unwrap_or_else(|e| panic!("client {c} read: {e}"));
+                        assert!(!line.is_empty(), "client {c}: connection closed early");
+                        got.push(normalize(line.trim()));
+                    }
+                    got.sort();
+                    got
+                })
+            })
+            .collect();
+        for (c, h) in clients.into_iter().enumerate() {
+            let got = h.join().unwrap();
+            assert_eq!(got, reference, "client {c}: batched run diverged from sequential");
+        }
+
+        // The grouping must be real: at least one admission window held
+        // two or more jobs that shared one pooled execution.
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        writeln!(s, "{{\"op\":\"shutdown\"}}").unwrap();
+        let mut r = BufReader::new(s);
+        let mut ack = String::new();
+        r.read_line(&mut ack).unwrap();
+        let aj = obc::util::json::parse(ack.trim()).unwrap();
+        let groups = aj.get("batch_groups").unwrap().as_f64().unwrap();
+        assert!(groups >= 1.0, "no cross-request group ever formed: {ack}");
+        let peak = aj.get("batch_occupancy_peak").unwrap().as_f64().unwrap();
+        assert!(peak >= 2.0, "no window ever held two jobs: {ack}");
+        server.join().unwrap();
+    }
+
+    /// Streaming acceptance: a `stream:true` db build over the full
+    /// Eq. 10 default grid delivers at least one `{"chunk":...}` line
+    /// per sparsity level before the final response, with each layer's
+    /// levels arriving in order.
+    #[test]
+    fn streaming_db_build_chunks_every_level_before_the_final() {
+        #[derive(Clone, Default)]
+        struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+        impl std::io::Write for SharedBuf {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        // No explicit grid: the build runs the paper-default Eq. 10
+        // grid. An outbox far above layers x levels keeps this
+        // deterministic — nothing can drop.
+        let input = concat!(
+            "{\"id\":\"bd\",\"model\":\"synthetic\",\"op\":\"db\",\"stream\":true}\n",
+            "{\"op\":\"shutdown\"}\n",
+        );
+        let buf = SharedBuf::default();
+        run_line_protocol(
+            ServerConfig { workers: 1, chunk_outbox: 1 << 14, ..cfg() },
+            input.as_bytes(),
+            buf.clone(),
+        )
+        .unwrap();
+        let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        let final_idx = lines
+            .iter()
+            .position(|l| l.contains("\"id\":\"bd\"") && l.contains("\"ok\":true"))
+            .unwrap_or_else(|| panic!("no final response: {text}"));
+        assert!(
+            lines[final_idx..].iter().all(|l| !l.contains("\"chunk\"")),
+            "chunks must precede the final response: {text}"
+        );
+
+        let chunks: Vec<Json> = lines[..final_idx]
+            .iter()
+            .filter(|l| l.contains("\"chunk\""))
+            .map(|l| obc::util::json::parse(l).unwrap())
+            .collect();
+        assert!(!chunks.is_empty(), "streaming build emitted no chunks: {text}");
+        let levels = chunks[0].get("levels").unwrap().as_f64().unwrap() as usize;
+        let expected = obc::solver::sparsity_grid(0.1, 0.95).len();
+        assert_eq!(levels, expected, "full Eq. 10 grid");
+        // Every level is covered by at least one chunk, every chunk
+        // carries the job identity, and per-layer levels ascend.
+        let mut seen = vec![false; levels];
+        let mut last_level: BTreeMap<String, usize> = BTreeMap::new();
+        for c in &chunks {
+            assert_eq!(c.get("chunk").unwrap().as_str().unwrap(), "db_level");
+            assert_eq!(c.get("id").unwrap().as_str().unwrap(), "bd");
+            let layer = c.get("layer").unwrap().as_str().unwrap().to_string();
+            let li = c.get("level").unwrap().as_f64().unwrap() as usize;
+            assert!(li < levels, "level {li} out of range");
+            if let Some(prev) = last_level.get(&layer) {
+                assert!(li > *prev, "layer {layer}: levels must ascend ({prev} -> {li})");
+            }
+            last_level.insert(layer, li);
+            seen[li] = true;
+        }
+        assert!(
+            seen.iter().all(|s| *s),
+            "every sparsity level must stream at least one chunk: {seen:?}"
+        );
+
+        // The ack's counters saw the stream (nothing dropped under the
+        // oversized outbox).
+        let ack = obc::util::json::parse(lines.last().unwrap()).unwrap();
+        let sent = ack.get("stream_chunks_sent").unwrap().as_f64().unwrap();
+        assert!(sent >= levels as f64, "{ack}");
+        assert_eq!(ack.get("stream_chunks_dropped").unwrap().as_f64().unwrap(), 0.0, "{ack}");
+    }
 }

@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Validate the batch-smoke transcript (see `make batch-smoke`).
+
+One streaming db build plus three solver jobs sharing its grid are held
+in a single admission window on a one-worker server, with a cheap
+interactive job behind them. The checker demands exactly-once finals
+for every job, `{"chunk":...}` progress lines strictly before the db
+final with per-layer strictly ascending levels covering the full grid,
+and a pooled group build (batch_groups >= 1) in the shutdown ack.
+"""
+import json
+import sys
+
+GRID_LEVELS = 5
+
+path = sys.argv[1] if len(sys.argv) > 1 else "target/batch_smoke.out"
+lines = [l for l in open(path).read().splitlines() if l.strip()]
+assert lines, f"{path} is empty"
+docs = []
+for l in lines:
+    try:
+        docs.append(json.loads(l))
+    except json.JSONDecodeError as e:
+        raise SystemExit(f"invalid JSON line: {l!r}: {e}")
+
+chunks = [d for d in docs if "chunk" in d]
+finals = [d for d in docs if "id" in d and "chunk" not in d]
+
+# Exactly one final per job, all ok.
+ids = sorted(d["id"] for d in finals)
+assert ids == ["bd", "iq", "s1", "s2", "s3"], ids
+for d in finals:
+    assert d["ok"] is True, f"{d['id']} failed: {d}"
+
+# Every chunk belongs to the streaming db build and precedes its final.
+bd_final_idx = next(
+    i for i, d in enumerate(docs) if d.get("id") == "bd" and "chunk" not in d
+)
+assert chunks, "no streaming chunks"
+for i, d in enumerate(docs):
+    if "chunk" in d:
+        assert i < bd_final_idx, f"chunk after the bd final: {d}"
+        assert d["chunk"] == "db_level" and d["id"] == "bd", d
+
+# Per-layer levels strictly ascend and cover the full grid.
+last_level = {}
+for c in chunks:
+    assert c["levels"] == GRID_LEVELS, c
+    prev = last_level.get(c["layer"], -1)
+    assert c["level"] > prev, f"non-ascending level for {c['layer']}: {c}"
+    last_level[c["layer"]] = c["level"]
+assert last_level, "no layers streamed"
+for layer, last in last_level.items():
+    assert last == GRID_LEVELS - 1, f"layer {layer} stopped at level {last}"
+
+# Shutdown ack: pooled group build + exact streaming counters.
+ack = docs[-1]
+assert ack.get("op") == "shutdown" and ack.get("ok") is True, ack
+assert ack["jobs_completed"] == 5, ack
+assert ack["jobs_failed"] == 0, ack
+assert ack["batch_groups"] >= 1, ack
+assert ack["stream_chunks_sent"] == len(chunks), ack
+assert ack["stream_chunks_dropped"] == 0, ack
+
+print(f"batch-smoke OK: {len(finals)} finals, {len(chunks)} chunks over "
+      f"{len(last_level)} layers, {ack['batch_groups']} pooled group(s)")

@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Validate BENCH_serve.json artifacts (see `make bench-serve`).
+
+Usage: check_serve_bench.py COMMITTED.json [SMOKE.json]
+
+The committed file may be the placeholder written from a container
+without a Rust toolchain (measured:false, metrics null) — the schema
+and the full derived-name list are validated either way, so trajectory
+tooling keys always resolve and unmeasured numbers can never alias
+measured ones.
+
+When a smoke-run file is given as the second argument it must come from
+a real run (smoke:true, every derived metric numeric), and the fairness
+contract the bench asserts is re-checked from the artifact: interactive
+p95 at or under batch p95 despite the batch head start.
+"""
+import json
+import sys
+
+SCHEMA = "obc-bench-serve/v1"
+REQUIRED = [
+    "db_build_cold_seconds",
+    "db_build_warm_seconds",
+    "jobs_per_sec",
+    "jobs_total",
+    "elapsed_seconds",
+    "workers",
+    "calibrations",
+    "jobs_coalesced",
+    "db_cache_hits",
+    "db_cache_misses",
+    "queue_depth_peak",
+    "queue_seconds_total",
+    "exec_seconds_total",
+    "batch_groups",
+    "saturation_jobs",
+    "latency_p50_ms",
+    "latency_p95_ms",
+    "latency_p99_ms",
+    "interactive_p95_ms",
+    "batch_p95_ms",
+]
+
+
+def fail(msg):
+    raise SystemExit(f"check_serve_bench: {msg}")
+
+
+def load(path):
+    try:
+        d = json.load(open(path))
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: {e}")
+    if d.get("schema") != SCHEMA:
+        fail(f"{path}: schema {d.get('schema')!r} != {SCHEMA!r}")
+    if d.get("model") != "synthetic":
+        fail(f"{path}: model {d.get('model')!r} != 'synthetic'")
+    return d
+
+
+def derived_map(d, path):
+    out = {}
+    for e in d.get("derived", []):
+        out[e["name"]] = e.get("value")
+    missing = [n for n in REQUIRED if n not in out]
+    if missing:
+        fail(f"{path}: missing derived metrics {missing}")
+    return out
+
+
+committed = load(sys.argv[1])
+derived_map(committed, sys.argv[1])
+
+if len(sys.argv) > 2:
+    smoke = load(sys.argv[2])
+    if smoke.get("smoke") is not True:
+        fail(f"{sys.argv[2]}: smoke artifact must carry smoke:true")
+    sm = derived_map(smoke, sys.argv[2])
+    bad = [n for n in REQUIRED if not isinstance(sm[n], (int, float))]
+    if bad:
+        fail(f"{sys.argv[2]}: non-numeric derived metrics {bad}")
+    if sm["jobs_per_sec"] <= 0:
+        fail(f"{sys.argv[2]}: jobs_per_sec {sm['jobs_per_sec']} not positive")
+    if sm["calibrations"] != 1:
+        fail(f"{sys.argv[2]}: calibrations {sm['calibrations']} != 1")
+    if sm["interactive_p95_ms"] > sm["batch_p95_ms"]:
+        fail(f"{sys.argv[2]}: fairness violated — interactive p95 "
+             f"{sm['interactive_p95_ms']:.1f} ms above batch p95 "
+             f"{sm['batch_p95_ms']:.1f} ms")
+    print(f"check_serve_bench OK: committed schema valid, smoke run "
+          f"{sm['jobs_per_sec']:.1f} jobs/s, interactive p95 "
+          f"{sm['interactive_p95_ms']:.1f} ms <= batch p95 "
+          f"{sm['batch_p95_ms']:.1f} ms")
+else:
+    print(f"check_serve_bench OK: committed schema valid "
+          f"({len(REQUIRED)} derived names)")
