@@ -19,7 +19,7 @@
 use obc::compress::exact_obs::{self, reference, ObsOpts};
 use obc::compress::hessian::{HessianAccumulator, LayerHessian};
 use obc::compress::{obq, sweep};
-use obc::linalg::Mat;
+use obc::linalg::{FMat, Mat};
 use obc::util::alloc_counter::CountingAlloc;
 use obc::util::benchkit::{bench, selected, JsonReport};
 use obc::util::json::Json;
@@ -35,6 +35,9 @@ struct Sizes {
     hess_n: usize,
     sweep_ds: Vec<usize>,
     rankb_d: usize,
+    /// Row width for the mixed-tier flush case — the headline shape is
+    /// memory-bound, so full mode uses d=1024 (8 MiB H⁻¹, far past L2).
+    mixed_d: usize,
     prune_rows: usize,
     prune_d: usize,
     obq_rows: usize,
@@ -52,6 +55,7 @@ fn sizes() -> Sizes {
             hess_n: 96,
             sweep_ds: vec![24],
             rankb_d: 96,
+            mixed_d: 96,
             prune_rows: 8,
             prune_d: 24,
             obq_rows: 4,
@@ -67,6 +71,7 @@ fn sizes() -> Sizes {
             hess_n: 1024,
             sweep_ds: vec![72, 144, 288],
             rankb_d: 288,
+            mixed_d: 1024,
             prune_rows: 512,
             prune_d: 288,
             obq_rows: 32,
@@ -197,6 +202,87 @@ fn main() {
                 base.min_s / st.min_s.max(1e-12),
             );
         }
+    }
+
+    // ---- Mixed tier (f32 storage / f64 accumulate) vs its f64 oracle.
+    // Both hot paths are bandwidth-model wins (README "Performance
+    // model"): the rank-B flush streams 4-byte H⁻¹ elements instead of
+    // 8 on a memory-bound walk, and the SYRK band loads f32 operands
+    // into f64 accumulators at an 8-wide unroll. Naming contract (used
+    // by scripts/check_bench_kernels.py): every `mixed_<stem>` case has
+    // an `<stem>_f64base` oracle measured in the same block.
+    if selected(&format!("mixed_obs_sweep_row_d{}", sz.mixed_d)) {
+        let d = sz.mixed_d;
+        let b = 32usize;
+        let h = LayerHessian::synthetic(d, 4 + d as u64);
+        let w = Mat::randn(1, d, 5 + d as u64);
+        let h32 = FMat::from_mat(&h.hinv);
+        let mut s = Scratch::new();
+        sweep::prune_sweep_batched(&mut s, w.row(0), &h.hinv, d, b, |_, _| true).unwrap();
+        let base = bench(&format!("obs_sweep_row_d{d}_rankB{b}_f64base"), 1, sz.iters, || {
+            sweep::prune_sweep_batched(&mut s, w.row(0), &h.hinv, d, b, |_, _| true).unwrap();
+            std::hint::black_box(s.out()[0]);
+        });
+        let f64_total: f64 = s.trace_dloss.iter().sum();
+        // Warmup grows the f32 arena buffers (ensure_mixed).
+        sweep::prune_sweep_batched_mixed(&mut s, w.row(0), &h32, d, b, |_, _| true).unwrap();
+        let mx = bench(&format!("mixed_obs_sweep_row_d{d}_rankB{b}"), 1, sz.iters, || {
+            sweep::prune_sweep_batched_mixed(&mut s, w.row(0), &h32, d, b, |_, _| true).unwrap();
+            std::hint::black_box(s.out()[0]);
+        });
+        if let Some(allocs) = mx.allocs_per_iter {
+            assert_eq!(allocs, 0.0, "steady-state mixed sweep must not allocate");
+        }
+        // Near-ties may reorder eliminations between tiers, but the
+        // full-trace objective must track the f64 oracle.
+        assert_eq!(s.trace_dloss.len(), d, "mixed sweep must run the full trace");
+        let mixed_total: f64 = s.trace_dloss.iter().sum();
+        assert!(
+            (mixed_total - f64_total).abs() <= 1e-4 * (1.0 + f64_total.abs()),
+            "mixed total dloss drifted: {mixed_total} vs {f64_total}"
+        );
+        report.case(&base);
+        report.case(&mx);
+        report.derived(
+            &format!("speedup_mixed_obs_sweep_row_d{d}_rankB{b}"),
+            base.min_s / mx.min_s.max(1e-12),
+        );
+    }
+    if selected(&format!("mixed_hessian_xxt_d{}_n{}", sz.hess_d, sz.hess_n)) {
+        let (d, n) = (sz.hess_d, sz.hess_n);
+        let x = Mat::randn(d, n, 1);
+        let x32 = FMat::from_mat(&x);
+        let threads = pooled.size();
+        let mut tile = Vec::new();
+        let mut out = Mat::zeros(d, d);
+        x.xxt_acc_threads(&mut out, 2.0, threads, &mut tile); // warm the tile
+        let base = bench(&format!("hessian_xxt_d{d}_n{n}_f64base"), 1, sz.iters, || {
+            x.xxt_acc_threads(&mut out, 2.0, threads, &mut tile);
+            std::hint::black_box(out.at(0, 0));
+        });
+        let mx = bench(&format!("mixed_hessian_xxt_d{d}_n{n}"), 1, sz.iters, || {
+            x32.xxt_acc_threads_mixed(&mut out, 2.0, threads, &mut tile);
+            std::hint::black_box(out.at(0, 0));
+        });
+        // Tolerance pin: same band split, f32 loads / f64 accumulators.
+        let mut want = Mat::zeros(d, d);
+        x.xxt_acc_threads(&mut want, 1.0, threads, &mut tile);
+        let mut got = Mat::zeros(d, d);
+        x32.xxt_acc_threads_mixed(&mut got, 1.0, threads, &mut tile);
+        for i in 0..d * d {
+            assert!(
+                (got.data[i] - want.data[i]).abs() <= 1e-4 * (1.0 + want.data[i].abs()),
+                "mixed SYRK elem {i}: {} vs {}",
+                got.data[i],
+                want.data[i]
+            );
+        }
+        report.case(&base);
+        report.case(&mx);
+        report.derived(
+            &format!("speedup_mixed_hessian_xxt_d{d}_n{n}"),
+            base.min_s / mx.min_s.max(1e-12),
+        );
     }
 
     // ---- Group-OBS reconstruction at 80% sparsity: ref vs arena.

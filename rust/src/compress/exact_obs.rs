@@ -26,8 +26,9 @@
 use super::hessian::LayerHessian;
 use super::sweep::{self, NonSpd};
 use super::CompressResult;
-use crate::linalg::{cholesky, cholesky_solve, remove_row_col, Mat};
+use crate::linalg::{cholesky, cholesky_solve, remove_row_col, FMat, Mat};
 use crate::util::pool::{self, ThreadPool};
+use crate::util::precision::{configured_precision, Precision};
 use crate::util::scratch;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -48,11 +49,18 @@ pub struct ObsOpts {
     /// the sweep module docs). The engine wires this to
     /// [`sweep::configured_batch`] (`OBC_SWEEP_BATCH`).
     pub batch: usize,
+    /// Compute tier for the row sweeps. [`Precision::F64`] (the default)
+    /// is the exact path, bit-identical to the reference kernels;
+    /// [`Precision::Mixed`] streams the working H⁻¹ as packed f32 with
+    /// f64 accumulation (tolerance-pinned, see the sweep module docs).
+    /// The engine wires this to
+    /// [`configured_precision`] (`OBC_PRECISION` / per-job override).
+    pub precision: Precision,
 }
 
 impl Default for ObsOpts {
     fn default() -> ObsOpts {
-        ObsOpts { trace_cap: 1.0, batch: 1 }
+        ObsOpts { trace_cap: 1.0, batch: 1, precision: Precision::F64 }
     }
 }
 
@@ -232,13 +240,29 @@ pub fn sweep_all_rows_on(
     let cap = (((d as f64) * opts.trace_cap).ceil() as usize).min(d);
     let rows = w.rows;
     let batch = opts.batch;
+    let mixed = opts.precision == Precision::Mixed;
     let wa = Arc::new(w.clone());
     sweep::run_with_redamp(hess, "ExactOBS row sweeps", move |h| {
         let wa = Arc::clone(&wa);
-        let hinv = Arc::new(h.hinv.clone());
+        // Mixed tier: ONE f32 narrowing of H⁻¹ per layer, shared by all
+        // row jobs — each sweep copies it into its arena's f32 working
+        // buffer instead of the f64 one (half the per-row traffic).
+        let (hinv, hinv32) = if mixed {
+            (None, Some(Arc::new(FMat::from_mat(&h.hinv))))
+        } else {
+            (Some(Arc::new(h.hinv.clone())), None)
+        };
         pool.par_map(rows, move |r| {
             scratch::with(|s| {
-                sweep::prune_sweep_batched(s, wa.row(r), &hinv, cap, batch, |_, _| true)?;
+                match (&hinv, &hinv32) {
+                    (_, Some(h32)) => sweep::prune_sweep_batched_mixed(
+                        s, wa.row(r), h32, cap, batch, |_, _| true,
+                    )?,
+                    (Some(h64), _) => sweep::prune_sweep_batched(
+                        s, wa.row(r), h64, cap, batch, |_, _| true,
+                    )?,
+                    _ => unreachable!("one of the precision tiers is built"),
+                }
                 Ok(RowTrace { order: s.trace_order.clone(), dloss: s.trace_dloss.clone() })
             })
         })
@@ -394,12 +418,20 @@ fn reconstruct_rows_on(
 /// to blocks that still have fewer than M−N pruned weights; every row
 /// reaches sparsity (M−N)/M, so no global step is needed (Section 4).
 pub fn prune_nm(w: &Mat, hess: &LayerHessian, n_keep: usize, m: usize) -> CompressResult {
-    prune_nm_batched_on(pool::global(), w, hess, n_keep, m, sweep::configured_batch())
+    prune_nm_batched_on(
+        pool::global(),
+        w,
+        hess,
+        n_keep,
+        m,
+        sweep::configured_batch(),
+        configured_precision(),
+    )
 }
 
 /// [`prune_nm`] on an explicit pool: every row's Algorithm-1 sweep (with
 /// the block-eligibility rule) is an independent arena job. Exact
-/// rank-1 path (batch = 1).
+/// rank-1 f64 path (batch = 1).
 pub fn prune_nm_on(
     pool: &ThreadPool,
     w: &Mat,
@@ -407,12 +439,13 @@ pub fn prune_nm_on(
     n_keep: usize,
     m: usize,
 ) -> CompressResult {
-    prune_nm_batched_on(pool, w, hess, n_keep, m, 1)
+    prune_nm_batched_on(pool, w, hess, n_keep, m, 1, Precision::F64)
 }
 
 /// [`prune_nm_on`] with an explicit rank-B batch size (1 = exact rank-1
-/// path; >1 = lazy-batched, tolerance-pinned). The engine passes
-/// [`sweep::configured_batch`] here.
+/// path; >1 = lazy-batched, tolerance-pinned) and compute tier. The
+/// engine passes [`sweep::configured_batch`] and
+/// [`configured_precision`] here.
 pub fn prune_nm_batched_on(
     pool: &ThreadPool,
     w: &Mat,
@@ -420,15 +453,21 @@ pub fn prune_nm_batched_on(
     n_keep: usize,
     m: usize,
     batch: usize,
+    precision: Precision,
 ) -> CompressResult {
     assert!(n_keep < m && n_keep > 0, "need 0 < N < M");
     let d = w.cols;
     let prune_per_block = m - n_keep;
     let rows = w.rows;
+    let mixed = precision == Precision::Mixed;
     let wa = Arc::new(w.clone());
     let new_rows = sweep::run_with_redamp(hess, "N:M row sweeps", move |h| {
         let wa = Arc::clone(&wa);
-        let hinv = Arc::new(h.hinv.clone());
+        let (hinv, hinv32) = if mixed {
+            (None, Some(Arc::new(FMat::from_mat(&h.hinv))))
+        } else {
+            (Some(Arc::new(h.hinv.clone())), None)
+        };
         pool.par_map(rows, move |r| {
             scratch::with(|s| {
                 // Total to prune in this row (partial tail block prunes
@@ -440,12 +479,21 @@ pub fn prune_nm_batched_on(
                 // pruned only while its block still has fewer than M−N
                 // dead weights (staged-dead counts immediately, so the
                 // rule holds within a rank-B batch too).
-                sweep::prune_sweep_batched(s, wa.row(r), &hinv, k, batch, |p, alive| {
+                let eligible = |p: usize, alive: &[bool]| {
                     let b = p / m;
                     let end = ((b + 1) * m).min(d);
                     let dead = (b * m..end).filter(|&i| !alive[i]).count();
                     dead < prune_per_block
-                })?;
+                };
+                match (&hinv, &hinv32) {
+                    (_, Some(h32)) => sweep::prune_sweep_batched_mixed(
+                        s, wa.row(r), h32, k, batch, eligible,
+                    )?,
+                    (Some(h64), _) => sweep::prune_sweep_batched(
+                        s, wa.row(r), h64, k, batch, eligible,
+                    )?,
+                    _ => unreachable!("one of the precision tiers is built"),
+                }
                 debug_assert_eq!(s.trace_len(), k);
                 Ok(s.out()[..d].to_vec())
             })
@@ -987,7 +1035,8 @@ mod tests {
     #[test]
     fn trace_cap_limits_depth() {
         let (w, h) = setup(2, 16, 23);
-        let traces = sweep_all_rows(&w, &h, &ObsOpts { trace_cap: 0.5, batch: 1 });
+        let traces =
+            sweep_all_rows(&w, &h, &ObsOpts { trace_cap: 0.5, ..Default::default() });
         assert!(traces.iter().all(|t| t.order.len() == 8));
     }
 

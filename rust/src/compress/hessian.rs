@@ -10,7 +10,8 @@
 //! relative diagonal dampening guards against singular H from dead or
 //! linearly-dependent inputs.
 
-use crate::linalg::{cholesky_inverse, Mat};
+use crate::linalg::{cholesky_inverse, FMat, Mat};
+use crate::util::precision::{global_precision, Precision};
 
 /// Streaming accumulator for H = 2·Σ_batches X·Xᵀ.
 ///
@@ -55,21 +56,45 @@ impl HessianAccumulator {
     /// materializing one transposed d_col×N matrix of every sample. The
     /// chunk is sized so the per-chunk scoped-thread spawn cost of the
     /// threaded SYRK stays negligible against the chunk's d²·1024/2 madds.
+    ///
+    /// Under the **global** `mixed` precision policy the chunk is packed
+    /// as f32 and fed through the mixed SYRK instead — and because the
+    /// samples already *are* f32, every product `(a as f64)·(b as f64)`
+    /// is the exact same f64 value the widened-then-multiplied f64 path
+    /// computes, in the same sequential reduction order: the mixed
+    /// accumulation here is **bit-identical** to the f64 path (asserted
+    /// by tests) while streaming half the bytes. Accumulated Hessians
+    /// are shared/cached state, so the per-job precision override
+    /// deliberately does not reach this choice.
     pub fn add_samples(&mut self, samples: &[Vec<f32>]) {
         const CHUNK: usize = 1024;
         let d = self.d_col;
+        let mixed = global_precision() == Precision::Mixed;
+        let threads = crate::util::pool::configured_threads();
         let mut start = 0;
         while start < samples.len() {
             let end = (start + CHUNK).min(samples.len());
             let n = end - start;
-            let mut x = Mat::zeros(d, n);
-            for (j, s) in samples[start..end].iter().enumerate() {
-                assert_eq!(s.len(), d, "sample dim != d_col");
-                for i in 0..d {
-                    x.data[i * n + j] = s[i] as f64;
+            if mixed {
+                let mut x = FMat::zeros(d, n);
+                for (j, s) in samples[start..end].iter().enumerate() {
+                    assert_eq!(s.len(), d, "sample dim != d_col");
+                    for i in 0..d {
+                        x.data[i * n + j] = s[i];
+                    }
                 }
+                x.xxt_acc_threads_mixed(&mut self.h, 2.0, threads, &mut self.syrk_tile);
+                self.n_samples += n;
+            } else {
+                let mut x = Mat::zeros(d, n);
+                for (j, s) in samples[start..end].iter().enumerate() {
+                    assert_eq!(s.len(), d, "sample dim != d_col");
+                    for i in 0..d {
+                        x.data[i * n + j] = s[i] as f64;
+                    }
+                }
+                self.add_batch(&x);
             }
-            self.add_batch(&x);
             start = end;
         }
     }
@@ -224,6 +249,31 @@ mod tests {
         let mut empty = HessianAccumulator::new(d);
         empty.add_samples(&[]);
         assert_eq!(empty.n_samples, 0);
+    }
+
+    /// Calibration samples are f32, so the mixed SYRK's widened products
+    /// are exactly the f64 path's products in the same reduction order:
+    /// the accumulated H must match **bitwise**, not just to tolerance.
+    #[test]
+    fn mixed_sample_accumulation_bit_identical_to_f64() {
+        let d = 6;
+        let n = 50;
+        let big = Mat::randn(d, n, 31);
+        let samples: Vec<Vec<f32>> =
+            (0..n).map(|j| (0..d).map(|i| big.at(i, j) as f32).collect()).collect();
+        let mut acc = HessianAccumulator::new(d);
+        acc.add_samples(&samples); // default policy: exact f64 path
+        // The mixed path, driven directly (the policy gate only routes).
+        let mut x = FMat::zeros(d, n);
+        for (j, s) in samples.iter().enumerate() {
+            for i in 0..d {
+                x.data[i * n + j] = s[i];
+            }
+        }
+        let mut h = Mat::zeros(d, d);
+        let mut tile = Vec::new();
+        x.xxt_acc_threads_mixed(&mut h, 2.0, crate::util::pool::configured_threads(), &mut tile);
+        assert_eq!(h.data, acc.raw().data);
     }
 
     /// `redamped` must add exactly `extra` to the diagonal and stay an

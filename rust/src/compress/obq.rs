@@ -15,8 +15,9 @@ use super::hessian::LayerHessian;
 use super::quant::{fit_grids_per_row, Grid, GridSearch};
 use super::sweep::{self, NonSpd};
 use super::CompressResult;
-use crate::linalg::{remove_row_col, Mat};
+use crate::linalg::{remove_row_col, FMat, Mat};
 use crate::util::pool::{self, ThreadPool};
+use crate::util::precision::{configured_precision, Precision};
 use crate::util::scratch;
 use std::sync::Arc;
 
@@ -33,6 +34,12 @@ pub struct ObqOpts {
     /// values stage up to `batch` eliminations and apply them to H⁻¹ as one
     /// rank-B update (tolerance-pinned, same elimination order).
     pub batch: usize,
+    /// Compute tier for the elimination sweeps. [`Precision::F64`] is the
+    /// exact path (bit-identical to the reference kernels);
+    /// [`Precision::Mixed`] streams the working H⁻¹ as packed f32 with
+    /// f64 accumulation (tolerance-pinned). [`ObqOpts::new`] resolves it
+    /// from [`configured_precision`] (`OBC_PRECISION` / per-job override).
+    pub precision: Precision,
 }
 
 impl ObqOpts {
@@ -43,6 +50,7 @@ impl ObqOpts {
             search: GridSearch::default(),
             outlier_heuristic: true,
             batch: sweep::configured_batch(),
+            precision: configured_precision(),
         }
     }
 
@@ -162,13 +170,26 @@ pub fn quantize_with_grids_on(
     let grids: Arc<Vec<Grid>> = Arc::new(grids.to_vec());
     let outlier = opts.outlier_heuristic;
     let batch = opts.batch;
+    let mixed = opts.precision == Precision::Mixed;
     let new_rows = sweep::run_with_redamp(hess, "OBQ quantization sweeps", move |h| {
         let wa = Arc::clone(&wa);
         let grids = Arc::clone(&grids);
-        let hinv = Arc::new(h.hinv.clone());
+        let (hinv, hinv32) = if mixed {
+            (None, Some(Arc::new(FMat::from_mat(&h.hinv))))
+        } else {
+            (Some(Arc::new(h.hinv.clone())), None)
+        };
         pool.par_map(rows, move |r| {
             scratch::with(|s| {
-                sweep::quant_sweep_batched(s, wa.row(r), &hinv, &grids[r], outlier, batch)?;
+                match (&hinv, &hinv32) {
+                    (_, Some(h32)) => sweep::quant_sweep_batched_mixed(
+                        s, wa.row(r), h32, &grids[r], outlier, batch,
+                    )?,
+                    (Some(h64), _) => sweep::quant_sweep_batched(
+                        s, wa.row(r), h64, &grids[r], outlier, batch,
+                    )?,
+                    _ => unreachable!("one of the precision tiers is built"),
+                }
                 Ok(s.out()[..d].to_vec())
             })
         })
@@ -234,13 +255,26 @@ pub fn quantize_sparse_on(
     let grids = Arc::new(grids);
     let outlier = opts.outlier_heuristic;
     let batch = opts.batch;
+    let mixed = opts.precision == Precision::Mixed;
     let new_rows = sweep::run_with_redamp(hess, "sparse OBQ sweeps", move |h| {
         let wa = Arc::clone(&wa);
         let grids = Arc::clone(&grids);
-        let hinv = Arc::new(h.hinv.clone());
+        let (hinv, hinv32) = if mixed {
+            (None, Some(Arc::new(FMat::from_mat(&h.hinv))))
+        } else {
+            (Some(Arc::new(h.hinv.clone())), None)
+        };
         pool.par_map(rows, move |r| {
             scratch::with(|s| {
-                sweep::quant_sweep_sparse_batched(s, wa.row(r), &hinv, &grids[r], outlier, batch)?;
+                match (&hinv, &hinv32) {
+                    (_, Some(h32)) => sweep::quant_sweep_sparse_batched_mixed(
+                        s, wa.row(r), h32, &grids[r], outlier, batch,
+                    )?,
+                    (Some(h64), _) => sweep::quant_sweep_sparse_batched(
+                        s, wa.row(r), h64, &grids[r], outlier, batch,
+                    )?,
+                    _ => unreachable!("one of the precision tiers is built"),
+                }
                 Ok(s.out()[..d].to_vec())
             })
         })
@@ -386,6 +420,7 @@ mod tests {
             search: GridSearch::MinMax,
             outlier_heuristic: false,
             batch: 1,
+            precision: Precision::F64,
         };
         let q = quantize_row(w.row(0), &h.hinv, &zero_grid, &opts);
         assert!(q.iter().all(|&v| v == 0.0));

@@ -64,8 +64,11 @@
 
 use super::hessian::LayerHessian;
 use super::quant::Grid;
-use crate::linalg::{cholesky_append, cholesky_backward_strided, cholesky_forward_strided, Mat};
+use crate::linalg::{
+    cholesky_append, cholesky_backward_strided, cholesky_forward_strided, FMat, Mat,
+};
 use crate::util::scratch::Scratch;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// A sweep step found a non-positive (or non-finite) [H⁻¹]ₚₚ: the
 /// working inverse is no longer numerically SPD. For group-formula
@@ -349,8 +352,6 @@ fn quant_sweep_core(
 /// reference kernels — so batching is a strictly opt-in throughput knob
 /// for production serving, never a silent accuracy change.
 pub fn configured_batch() -> usize {
-    use std::sync::atomic::{AtomicUsize, Ordering};
-    static BATCH: AtomicUsize = AtomicUsize::new(0);
     let b = BATCH.load(Ordering::Relaxed);
     if b != 0 {
         return b;
@@ -362,6 +363,17 @@ pub fn configured_batch() -> usize {
         .unwrap_or(1);
     BATCH.store(v, Ordering::Relaxed);
     v
+}
+
+/// Cached `OBC_SWEEP_BATCH` value (0 = not yet read).
+static BATCH: AtomicUsize = AtomicUsize::new(0);
+
+/// Test-safe setter for the cached batch knob: tests must use this (and
+/// [`crate::util::precision::set_global_precision`] for the precision
+/// knob) instead of racing on `std::env::set_var` across threads.
+/// `b = 0` resets to "unread" so the next call re-consults the env.
+pub fn set_configured_batch(b: usize) {
+    BATCH.store(b, Ordering::Relaxed);
 }
 
 /// Start a rank-B batch against the current compacted state (`m` live):
@@ -689,6 +701,407 @@ fn quant_sweep_core_batched(
             batch_stage(s, m, q, f, true);
         }
         m = batch_flush(s, m);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Mixed-precision tier (f32 storage / f64 accumulate).
+//
+// The `*_mixed` sweeps mirror the rank-B batched kernels above with the
+// compacted working H⁻¹ (`Scratch::hinv32`) and the staged panel
+// (`Scratch::panel32`) stored as packed f32 — half the bytes streamed by
+// the memory-bound flush — while the weights, lazy diagonal, panel
+// factors and every accumulator stay f64. The effective pivot is
+// computed in f64 and narrowed *once* into the panel; the compensation,
+// diagonal maintenance and flush all read the same rounded panel values
+// (widened back exactly), so stage-time and flush-time arithmetic see
+// one consistent state. There is no mixed rank-1 path: `batch ≤ 1`
+// stages single-element batches through the same code, because the
+// mixed tier is tolerance-pinned at every B (the f64 kernels remain the
+// bit-pinned oracles — see `rust/tests/mixed_precision.rs`).
+// ---------------------------------------------------------------------
+
+/// [`begin`] for the mixed tier: the compacted working copy is narrowed
+/// f32 (`hinv32` is the caller's once-per-layer narrowing of H⁻¹, shared
+/// across row jobs); weights/trace state load exactly as in `begin`.
+fn begin_mixed(s: &mut Scratch, w: &[f64], hinv32: &FMat, batch: usize) -> usize {
+    let d = w.len();
+    debug_assert_eq!(hinv32.rows, d, "H⁻¹ rows != row width");
+    debug_assert_eq!(hinv32.cols, d, "H⁻¹ not square");
+    let b = batch.clamp(1, d.max(1));
+    s.ensure(d);
+    s.ensure_batch(b, d);
+    s.ensure_mixed(b, d);
+    s.hinv32[..d * d].copy_from_slice(&hinv32.data);
+    s.w[..d].copy_from_slice(w);
+    s.out[..d].copy_from_slice(w);
+    s.live.clear();
+    s.live.reserve(d);
+    s.live.extend(0..d);
+    for a in s.alive[..d].iter_mut() {
+        *a = true;
+    }
+    s.trace_order.clear();
+    s.trace_order.reserve(d);
+    s.trace_dloss.clear();
+    s.trace_dloss.reserve(d);
+    d
+}
+
+/// [`batch_begin`] for the mixed tier: snapshot the f32 live diagonal
+/// into the f64 lazy diagonal (widening is exact).
+fn batch_begin_mixed(s: &mut Scratch, m: usize) {
+    for i in 0..m {
+        s.bdiag[i] = s.hinv32[i * m + i] as f64;
+    }
+    s.bq.clear();
+}
+
+/// [`batch_stage`] for the mixed tier: the effective pivot recurrence
+/// runs in f64 (each staged panel row widened per element), is narrowed
+/// once into `panel32`, and the rounded row drives the compensation and
+/// lazy diagonal — so the state the flush later streams is exactly the
+/// state selection saw.
+fn batch_stage_mixed(s: &mut Scratch, m: usize, q: usize, f: f64, compensate: bool) {
+    let blen = s.bq.len();
+    debug_assert!(q < m && s.alive[s.live[q]]);
+    {
+        let Scratch { hinv32, panel32, pivot, pfac, .. } = &mut *s;
+        let prow = &mut pivot[..m];
+        for (x, &hv) in prow.iter_mut().zip(hinv32[q * m..(q + 1) * m].iter()) {
+            *x = hv as f64;
+        }
+        let (head, cur) = panel32.split_at_mut(blen * m);
+        for (r, &inv_d) in pfac[..blen].iter().enumerate() {
+            let pr = &head[r * m..(r + 1) * m];
+            let c = pr[q] as f64;
+            if c != 0.0 {
+                let fr = c * inv_d;
+                for (x, &pv) in prow.iter_mut().zip(pr.iter()) {
+                    *x -= fr * pv as f64;
+                }
+            }
+        }
+        for (dst, &v) in cur[..m].iter_mut().zip(prow.iter()) {
+            *dst = v as f32;
+        }
+    }
+    let inv_d = 1.0 / s.bdiag[q];
+    let prow = &s.panel32[blen * m..(blen + 1) * m];
+    if compensate {
+        for (wj, &pj) in s.w[..m].iter_mut().zip(prow.iter()) {
+            *wj -= f * pj as f64;
+        }
+    }
+    for (dj, &pj) in s.bdiag[..m].iter_mut().zip(prow.iter()) {
+        let p = pj as f64;
+        *dj -= (p * inv_d) * p;
+    }
+    s.pfac[blen] = inv_d;
+    let p = s.live[q];
+    s.alive[p] = false;
+    s.bq.push(q);
+}
+
+/// [`batch_flush`] for the mixed tier: the rank-B delta accumulates in
+/// f64 over f32 panel loads, and the compacted write narrows back to
+/// f32. Where the f64 flush walks staged rows **pairwise**, this one
+/// walks them **four at a time** (half-width lanes → double the unroll,
+/// same register footprint — the f32 counterpart of the 4-wide f64
+/// unroll); each `pdelta[j]` still accumulates its staged terms in one
+/// fixed `sx` order, so the mixed flush is bitwise reproducible across
+/// tile/unroll placement, merely not bit-equal to the f64 oracle.
+fn batch_flush_mixed(s: &mut Scratch, m: usize) -> usize {
+    let blen = s.bq.len();
+    debug_assert!(blen > 0 && blen <= m);
+    let nm = m - blen;
+    s.bq.sort_unstable();
+    {
+        let Scratch { hinv32, panel32, pfac, pdelta, w, bq, .. } = &mut *s;
+        let mut dr = 0usize;
+        let mut rdead = 0usize;
+        for r in 0..m {
+            if rdead < blen && bq[rdead] == r {
+                rdead += 1;
+                continue;
+            }
+            for v in pdelta[..m].iter_mut() {
+                *v = 0.0;
+            }
+            let mut jt = 0usize;
+            while jt < m {
+                let jt1 = (jt + FLUSH_COL_TILE).min(m);
+                let mut sx = 0usize;
+                while sx + 4 <= blen {
+                    let (p0, rest) = panel32[sx * m..].split_at(m);
+                    let (p1, rest) = rest.split_at(m);
+                    let (p2, rest) = rest.split_at(m);
+                    let p3 = &rest[..m];
+                    let f0 = p0[r] as f64 * pfac[sx];
+                    let f1 = p1[r] as f64 * pfac[sx + 1];
+                    let f2 = p2[r] as f64 * pfac[sx + 2];
+                    let f3 = p3[r] as f64 * pfac[sx + 3];
+                    for j in jt..jt1 {
+                        pdelta[j] += f0 * p0[j] as f64
+                            + f1 * p1[j] as f64
+                            + f2 * p2[j] as f64
+                            + f3 * p3[j] as f64;
+                    }
+                    sx += 4;
+                }
+                while sx < blen {
+                    let p0 = &panel32[sx * m..sx * m + m];
+                    let f0 = p0[r] as f64 * pfac[sx];
+                    for (v, &a) in pdelta[jt..jt1].iter_mut().zip(p0[jt..jt1].iter()) {
+                        *v += f0 * a as f64;
+                    }
+                    sx += 1;
+                }
+                jt = jt1;
+            }
+            let src = r * m;
+            let dst = dr * nm;
+            let mut jc = 0usize;
+            let mut jdead = 0usize;
+            for j in 0..m {
+                if jdead < blen && bq[jdead] == j {
+                    jdead += 1;
+                    continue;
+                }
+                hinv32[dst + jc] = (hinv32[src + j] as f64 - pdelta[j]) as f32;
+                jc += 1;
+            }
+            w[dr] = w[r];
+            dr += 1;
+        }
+        debug_assert_eq!(dr, nm);
+    }
+    for i in (0..s.bq.len()).rev() {
+        s.live.remove(s.bq[i]);
+    }
+    s.bq.clear();
+    nm
+}
+
+/// [`prune_sweep_batched`] on the mixed tier. Selection semantics
+/// (argmin order, eligibility, N:M saturation, staged-dead exclusion)
+/// are identical — only the streamed storage narrows — so the trace
+/// *self-consistency* the db spine depends on holds: the orders this
+/// sweep emits are exactly the orders its own reconstruction consumes.
+pub fn prune_sweep_batched_mixed(
+    s: &mut Scratch,
+    w_in: &[f64],
+    hinv32: &FMat,
+    k: usize,
+    batch: usize,
+    mut eligible: impl FnMut(usize, &[bool]) -> bool,
+) -> Result<(), NonSpd> {
+    let d = begin_mixed(s, w_in, hinv32, batch);
+    let batch = batch.max(1);
+    let mut m = d;
+    let mut remaining = k.min(d);
+    while remaining > 0 && m > 0 {
+        batch_begin_mixed(s, m);
+        let bcap = batch.min(remaining).min(m);
+        let mut exhausted = false;
+        while s.bq.len() < bcap {
+            let mut best = usize::MAX;
+            let mut best_score = f64::INFINITY;
+            {
+                let alive = &s.alive[..d];
+                for (i, &p) in s.live.iter().enumerate() {
+                    if !alive[p] || !eligible(p, alive) {
+                        continue;
+                    }
+                    let diag = spd_diag(s.bdiag[i], p)?;
+                    let score = s.w[i] * s.w[i] / diag;
+                    if score < best_score {
+                        best_score = score;
+                        best = i;
+                    }
+                }
+            }
+            if best == usize::MAX {
+                exhausted = true;
+                break;
+            }
+            let q = best;
+            let p = s.live[q];
+            let f = s.w[q] / s.bdiag[q];
+            s.trace_order.push(p);
+            s.trace_dloss.push(0.5 * best_score);
+            s.out[p] = 0.0;
+            batch_stage_mixed(s, m, q, f, true);
+            remaining -= 1;
+        }
+        if !s.bq.is_empty() {
+            m = batch_flush_mixed(s, m);
+        }
+        if exhausted {
+            break;
+        }
+    }
+    scatter(s, m);
+    Ok(())
+}
+
+/// [`quant_sweep_batched`] on the mixed tier.
+pub fn quant_sweep_batched_mixed(
+    s: &mut Scratch,
+    w_in: &[f64],
+    hinv32: &FMat,
+    grid: &Grid,
+    outlier_heuristic: bool,
+    batch: usize,
+) -> Result<(), NonSpd> {
+    let d = begin_mixed(s, w_in, hinv32, batch);
+    quant_sweep_core_batched_mixed(s, d, grid, outlier_heuristic, batch.max(1))
+}
+
+/// [`quant_sweep_sparse_batched`] on the mixed tier: zero positions are
+/// pre-eliminated in batches (pure downdates, no compensation) and stay
+/// exactly zero — zeroness is order-exact even at f32 storage.
+pub fn quant_sweep_sparse_batched_mixed(
+    s: &mut Scratch,
+    w_in: &[f64],
+    hinv32: &FMat,
+    grid: &Grid,
+    outlier_heuristic: bool,
+    batch: usize,
+) -> Result<(), NonSpd> {
+    let d = begin_mixed(s, w_in, hinv32, batch);
+    let batch = batch.max(1);
+    let mut m = d;
+    let mut p = 0usize;
+    while p < d {
+        batch_begin_mixed(s, m);
+        let bcap = batch.min(m.max(1));
+        while p < d && s.bq.len() < bcap {
+            if w_in[p] == 0.0 {
+                let q = s.live.binary_search(&p).expect("zero position must be live");
+                batch_stage_mixed(s, m, q, 0.0, false);
+            }
+            p += 1;
+        }
+        if !s.bq.is_empty() {
+            m = batch_flush_mixed(s, m);
+        }
+    }
+    quant_sweep_core_batched_mixed(s, m, grid, outlier_heuristic, batch)
+}
+
+/// [`quant_sweep_core_batched`] on the mixed tier: identical selection
+/// rules (outlier-Δ/2 worst-first, then argmin e²/diag).
+fn quant_sweep_core_batched_mixed(
+    s: &mut Scratch,
+    mut m: usize,
+    grid: &Grid,
+    outlier_heuristic: bool,
+    batch: usize,
+) -> Result<(), NonSpd> {
+    let half_delta = grid.delta() / 2.0;
+    while m > 0 {
+        batch_begin_mixed(s, m);
+        let bcap = batch.min(m);
+        while s.bq.len() < bcap {
+            let mut q = usize::MAX;
+            if outlier_heuristic {
+                let mut worst = half_delta;
+                for i in 0..m {
+                    if !s.alive[s.live[i]] {
+                        continue;
+                    }
+                    let wi = s.w[i];
+                    let e = (grid.quant(wi) - wi).abs();
+                    if e > worst {
+                        worst = e;
+                        q = i;
+                    }
+                }
+            }
+            if q == usize::MAX {
+                let mut best = f64::INFINITY;
+                for i in 0..m {
+                    if !s.alive[s.live[i]] {
+                        continue;
+                    }
+                    let wi = s.w[i];
+                    let e = grid.quant(wi) - wi;
+                    let diag = spd_diag(s.bdiag[i], s.live[i])?;
+                    let score = e * e / diag;
+                    if score < best {
+                        best = score;
+                        q = i;
+                    }
+                }
+            }
+            debug_assert!(q != usize::MAX);
+            let wq = s.w[q];
+            let qv = grid.quant(wq);
+            let diag = spd_diag(s.bdiag[q], s.live[q])?;
+            let f = (wq - qv) / diag;
+            s.out[s.live[q]] = qv;
+            batch_stage_mixed(s, m, q, f, true);
+        }
+        m = batch_flush_mixed(s, m);
+    }
+    Ok(())
+}
+
+/// [`prefix_reconstruct_multi`] on the mixed tier. The k×k trace-order
+/// Cholesky, its appends and both triangular solves stay **f64 over the
+/// f64 H⁻¹** — the spine that determines each level's solution is exact
+/// and order-identical to the f64 path for a given trace. Only the
+/// Θ(d·k) per-level gather `δ_j = Σ H⁻¹[j,p]·y` — the bandwidth-bound
+/// bulk of the reconstruction — streams the f32 narrowing (`hinv32`
+/// must be the caller's narrowing of `hinv`), accumulating in f64.
+pub fn prefix_reconstruct_multi_mixed(
+    s: &mut Scratch,
+    w: &[f64],
+    hinv: &Mat,
+    hinv32: &FMat,
+    order: &[usize],
+    ks: &[usize],
+    mut emit: impl FnMut(usize, &[f64]),
+) -> Result<(), NonSpd> {
+    let d = w.len();
+    debug_assert_eq!(hinv32.rows, hinv.rows);
+    debug_assert_eq!(hinv32.cols, hinv.cols);
+    s.ensure(d);
+    let Some(&kmax) = ks.last() else {
+        return Ok(());
+    };
+    debug_assert!(kmax <= order.len());
+    debug_assert!(ks.windows(2).all(|p| p[0] < p[1]) && ks[0] > 0, "ks must be ascending, > 0");
+    s.ensure_group(kmax);
+    let mut done = 0usize;
+    for &k in ks {
+        if let Err(fail) =
+            cholesky_append(&mut s.ga, kmax, done, k, |i, j| hinv.at(order[i], order[j]))
+        {
+            return Err(NonSpd { index: order[fail.row], diag: fail.diag });
+        }
+        for (bi, &p) in order[done..k].iter().enumerate() {
+            s.gb[done + bi] = w[p];
+        }
+        cholesky_forward_strided(&s.ga, kmax, done, k, &mut s.gb[..k]);
+        done = k;
+        s.gy[..k].copy_from_slice(&s.gb[..k]);
+        cholesky_backward_strided(&s.ga, kmax, k, &mut s.gy[..k]);
+        s.out[..d].copy_from_slice(w);
+        for j in 0..d {
+            let hrow = hinv32.row(j);
+            let mut acc = 0.0f64;
+            for (bi, &p) in order[..k].iter().enumerate() {
+                acc += hrow[p] as f64 * s.gy[bi];
+            }
+            s.out[j] -= acc;
+        }
+        for &p in &order[..k] {
+            s.out[p] = 0.0;
+        }
+        emit(k, &s.out[..d]);
     }
     Ok(())
 }
@@ -1180,6 +1593,106 @@ mod tests {
         for (k, row) in got {
             group_reconstruct(&mut s2, &w, &h.hinv, &order[..k]).unwrap();
             assert_eq!(row, s2.out()[..d].to_vec(), "level k={k} diverged");
+        }
+    }
+
+    /// The mixed tier (f32 storage / f64 accumulate) must reproduce the
+    /// exact f64 sweep within the f32 storage-rounding tolerance at
+    /// every batch width — including B=1, which stages through the same
+    /// mixed code (there is deliberately no mixed rank-1 path) — with an
+    /// identical selection order on these well-separated fixtures.
+    #[test]
+    fn mixed_sweeps_match_f64_within_tolerance() {
+        let d = 16;
+        let h = layer(d, 41);
+        let h32 = FMat::from_mat(&h.hinv);
+        let w: Vec<f64> = (0..d).map(|i| ((i * 13 % 7) as f64) * 0.31 - 0.9).collect();
+        let tol = |r: f64| 1e-4 * (1.0 + r.abs());
+        let mut s1 = Scratch::new();
+        prune_sweep(&mut s1, &w, &h.hinv, 10, |_, _| true).unwrap();
+        let ref_out = s1.out()[..d].to_vec();
+        for b in [1usize, 4, d] {
+            let mut sm = Scratch::new();
+            prune_sweep_batched_mixed(&mut sm, &w, &h32, 10, b, |_, _| true).unwrap();
+            assert_eq!(sm.trace_order, s1.trace_order, "B={b} order");
+            for (i, (g, r)) in sm.out()[..d].iter().zip(&ref_out).enumerate() {
+                assert!((g - r).abs() <= tol(*r), "B={b} w[{i}]: {g} vs {r}");
+            }
+        }
+        let grid = Grid { scale: 0.21, zero: 7.0, maxq: 15.0 };
+        let mut q1 = Scratch::new();
+        quant_sweep(&mut q1, &w, &h.hinv, &grid, true).unwrap();
+        let qref = q1.out()[..d].to_vec();
+        for b in [1usize, 4, d] {
+            let mut qm = Scratch::new();
+            quant_sweep_batched_mixed(&mut qm, &w, &h32, &grid, true, b).unwrap();
+            for (i, (g, r)) in qm.out()[..d].iter().zip(&qref).enumerate() {
+                // Quantized outputs land exactly on the shared grid, so
+                // agreement is exact unless a selection flipped (which
+                // the tolerance on this fixture rules out).
+                assert_eq!(g, r, "B={b} q[{i}]");
+            }
+        }
+    }
+
+    /// Mixed sparse path: zeros stay exactly zero (zeroness never
+    /// depends on storage precision) and survivors land on the same
+    /// grid points as the f64 sparse sweep.
+    #[test]
+    fn mixed_sparse_keeps_zeros_and_matches() {
+        let d = 12;
+        let h = layer(d, 43);
+        let h32 = FMat::from_mat(&h.hinv);
+        let mut w: Vec<f64> = (0..d).map(|i| (i as f64) * 0.27 + 0.4).collect();
+        for &z in &[1usize, 4, 5, 9] {
+            w[z] = 0.0;
+        }
+        let grid = Grid { scale: 0.4, zero: 0.0, maxq: 15.0 };
+        let mut s1 = Scratch::new();
+        quant_sweep_sparse(&mut s1, &w, &h.hinv, &grid, false).unwrap();
+        let refq = s1.out()[..d].to_vec();
+        for b in [1usize, 3, d] {
+            let mut sm = Scratch::new();
+            quant_sweep_sparse_batched_mixed(&mut sm, &w, &h32, &grid, false, b).unwrap();
+            for &z in &[1usize, 4, 5, 9] {
+                assert_eq!(sm.out()[z], 0.0, "B={b} zero at {z}");
+            }
+            assert_eq!(sm.out()[..d], refq[..], "B={b}");
+        }
+    }
+
+    /// Mixed prefix reconstruction: the k×k spine is exact f64, only the
+    /// Θ(d·k) gather streams f32 — every level within storage tolerance
+    /// of the f64 multi-level path, pruned prefix exactly zero.
+    #[test]
+    fn mixed_prefix_reconstruct_matches_f64_per_level() {
+        let d = 14;
+        let h = layer(d, 23);
+        let h32 = FMat::from_mat(&h.hinv);
+        let w: Vec<f64> = (0..d).map(|i| (i as f64) * 0.37 - 2.1).collect();
+        let order: Vec<usize> = vec![5, 2, 9, 0, 13, 7, 3, 11, 1, 8];
+        let ks = vec![1usize, 3, 4, 8, 10];
+        let mut sf = Scratch::new();
+        let mut exact: Vec<(usize, Vec<f64>)> = Vec::new();
+        prefix_reconstruct_multi(&mut sf, &w, &h.hinv, &order, &ks, |k, row| {
+            exact.push((k, row.to_vec()));
+        })
+        .unwrap();
+        let mut sm = Scratch::new();
+        let mut mixed: Vec<(usize, Vec<f64>)> = Vec::new();
+        prefix_reconstruct_multi_mixed(&mut sm, &w, &h.hinv, &h32, &order, &ks, |k, row| {
+            mixed.push((k, row.to_vec()));
+        })
+        .unwrap();
+        assert_eq!(exact.len(), mixed.len());
+        for ((k, er), (km, mr)) in exact.iter().zip(&mixed) {
+            assert_eq!(k, km);
+            for &p in &order[..*k] {
+                assert_eq!(mr[p], 0.0, "k={k}: pruned {p} must be exactly zero");
+            }
+            for (i, (g, r)) in mr.iter().zip(er).enumerate() {
+                assert!((g - r).abs() <= 1e-4 * (1.0 + r.abs()), "k={k} w[{i}]: {g} vs {r}");
+            }
         }
     }
 

@@ -58,8 +58,9 @@ use super::exact_obs::RowTrace;
 use super::hessian::LayerHessian;
 use super::sweep::{self, NonSpd};
 use super::CompressResult;
-use crate::linalg::Mat;
+use crate::linalg::{FMat, Mat};
 use crate::util::pool::ThreadPool;
+use crate::util::precision::{global_precision, Precision};
 use crate::util::scratch;
 use std::sync::Arc;
 
@@ -248,6 +249,14 @@ fn prefix_levels_stream_on(
     let lens = Arc::new(lens);
     // One arena job per row; NonSpd corruption triggers the layer-level
     // damped retry, like every other reconstruction fan-out.
+    //
+    // Precision gating is GLOBAL-only (not the per-job thread-local
+    // override): database builds feed cached/shared artifacts, so the
+    // same policy rule as `cholesky_inverse` applies. The mixed path
+    // keeps the k×k trace-order factor and solves in exact f64 over the
+    // f64 hinv (identical selection spine); only the Θ(d·k) gather
+    // streams the f32 narrowing.
+    let mixed = global_precision() == Precision::Mixed;
     let rows_by_k: Vec<Vec<(usize, Vec<f64>, f64)>> =
         sweep::run_with_redamp(hess, "incremental multi-level reconstruction", move |h| {
             let wa = Arc::clone(&wa);
@@ -255,6 +264,11 @@ fn prefix_levels_stream_on(
             let orders = Arc::clone(&orders);
             let lens = Arc::clone(&lens);
             let hinv = Arc::new(h.hinv.clone());
+            let hinv32 = if mixed {
+                Some(Arc::new(FMat::from_mat(&h.hinv)))
+            } else {
+                None
+            };
             pool.par_map(rows, move |r| {
                 if lens[r].is_empty() {
                     return Ok(Vec::new());
@@ -262,32 +276,44 @@ fn prefix_levels_stream_on(
                 let mut got: Vec<(usize, Vec<f64>, f64)> =
                     Vec::with_capacity(lens[r].len());
                 scratch::with(|s| {
-                    sweep::prefix_reconstruct_multi(
-                        s,
-                        wa.row(r),
-                        &hinv,
-                        &orders[r],
-                        &lens[r],
-                        |k, row| {
-                            // Per-row error term at this depth: the
-                            // reference layer_sq_err loop body, verbatim.
-                            let term = if compute_err {
-                                let dw: Vec<f64> = wa
-                                    .row(r)
-                                    .iter()
-                                    .zip(row)
-                                    .map(|(a, b)| a - b)
-                                    .collect();
-                                let hv = h_orig.matvec(&dw);
-                                let q: f64 =
-                                    dw.iter().zip(&hv).map(|(a, b)| a * b).sum();
-                                0.5 * q
-                            } else {
-                                0.0
-                            };
-                            got.push((k, row.to_vec(), term));
-                        },
-                    )
+                    let emit_row = |k: usize, row: &[f64]| {
+                        // Per-row error term at this depth: the
+                        // reference layer_sq_err loop body, verbatim.
+                        let term = if compute_err {
+                            let dw: Vec<f64> = wa
+                                .row(r)
+                                .iter()
+                                .zip(row)
+                                .map(|(a, b)| a - b)
+                                .collect();
+                            let hv = h_orig.matvec(&dw);
+                            let q: f64 =
+                                dw.iter().zip(&hv).map(|(a, b)| a * b).sum();
+                            0.5 * q
+                        } else {
+                            0.0
+                        };
+                        got.push((k, row.to_vec(), term));
+                    };
+                    match &hinv32 {
+                        Some(h32) => sweep::prefix_reconstruct_multi_mixed(
+                            s,
+                            wa.row(r),
+                            &hinv,
+                            h32,
+                            &orders[r],
+                            &lens[r],
+                            emit_row,
+                        ),
+                        None => sweep::prefix_reconstruct_multi(
+                            s,
+                            wa.row(r),
+                            &hinv,
+                            &orders[r],
+                            &lens[r],
+                            emit_row,
+                        ),
+                    }
                 })?;
                 Ok(got)
             })

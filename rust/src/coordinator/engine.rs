@@ -645,6 +645,7 @@ impl CompressionEngine {
                     let opts = ObsOpts {
                         trace_cap: (max_s + 0.05).min(1.0),
                         batch: sweep::configured_batch(),
+                        precision: crate::util::precision::configured_precision(),
                     };
                     let traces = exact_obs::sweep_all_rows(&w, &h, &opts);
                     let k_totals: Vec<usize> = grid
@@ -713,8 +714,9 @@ impl CompressionEngine {
             match method {
                 PruneMethod::ExactObs => {
                     let max_s = grid.iter().cloned().fold(0.0, f64::max);
-                    // Reference oracle: always the exact rank-1 path.
-                    let opts = ObsOpts { trace_cap: (max_s + 0.05).min(1.0), batch: 1 };
+                    // Reference oracle: always the exact rank-1 f64 path.
+                    let opts =
+                        ObsOpts { trace_cap: (max_s + 0.05).min(1.0), ..Default::default() };
                     let traces = exact_obs::sweep_all_rows(&w, &h, &opts);
                     for &s in grid {
                         let k = ((w.rows * w.cols) as f64 * s).round() as usize;

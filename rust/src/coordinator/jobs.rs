@@ -18,6 +18,7 @@ use super::methods::{PruneMethod, QuantMethod};
 use crate::db::ModelDb;
 use crate::util::error::Result;
 use crate::util::json::{parse, Json};
+use crate::util::precision::Precision;
 use std::sync::Arc;
 
 // ----------------------------------------------------------------------
@@ -638,6 +639,12 @@ pub enum Request {
         deadline_ms: Option<u64>,
         /// Admission class (default interactive).
         priority: Priority,
+        /// Per-job compute tier (wire field `precision`: `"f64"` or
+        /// `"mixed"`). `None` defers to the server's global policy
+        /// (`OBC_PRECISION`); the worker installs the override for the
+        /// duration of the job and the response echoes the resolved
+        /// tier.
+        precision: Option<Precision>,
         /// Optional tenant label for per-tenant admission counting.
         tenant: Option<String>,
         /// Opt-in streaming: per-layer/per-level `{"chunk":...}` progress
@@ -681,6 +688,17 @@ impl Request {
                             crate::err!("field 'priority' must be a string")
                         })?;
                         Priority::parse(s)?
+                    }
+                },
+                precision: match j.get("precision") {
+                    None => None,
+                    Some(v) => {
+                        let s = v.as_str().ok_or_else(|| {
+                            crate::err!("field 'precision' must be a string")
+                        })?;
+                        Some(Precision::parse(s).ok_or_else(|| {
+                            crate::err!("unknown precision '{s}' (f64|mixed)")
+                        })?)
                     }
                 },
                 tenant: j.get("tenant").and_then(|v| v.as_str()).map(|s| s.to_string()),
@@ -904,12 +922,13 @@ mod tests {
         )
         .unwrap();
         match r {
-            Request::Job { id, model, spec, deadline_ms, priority, tenant, stream } => {
+            Request::Job { id, model, spec, deadline_ms, priority, precision, tenant, stream } => {
                 assert_eq!(id.as_deref(), Some("j1"));
                 assert_eq!(model, "rneta");
                 assert_eq!(spec.op(), "prune");
                 assert_eq!(deadline_ms, None);
                 assert_eq!(priority, Priority::Interactive);
+                assert_eq!(precision, None);
                 assert_eq!(tenant, None);
                 assert!(!stream);
             }
@@ -935,12 +954,24 @@ mod tests {
             }
             _ => panic!("expected a job"),
         }
+        match Request::parse_line(
+            r#"{"model":"m","op":"dense","precision":"mixed"}"#,
+        )
+        .unwrap()
+        {
+            Request::Job { precision, .. } => {
+                assert_eq!(precision, Some(Precision::Mixed));
+            }
+            _ => panic!("expected a job"),
+        }
         for bad in [
             r#"{"model":"m","op":"dense","deadline_ms":"soon"}"#,
             r#"{"model":"m","op":"dense","deadline_ms":-5}"#,
             r#"{"model":"m","op":"dense","priority":"urgent"}"#,
             r#"{"model":"m","op":"dense","priority":7}"#,
             r#"{"model":"m","op":"dense","stream":"yes"}"#,
+            r#"{"model":"m","op":"dense","precision":"half"}"#,
+            r#"{"model":"m","op":"dense","precision":64}"#,
         ] {
             assert!(Request::parse_line(bad).is_err(), "'{bad}' must be rejected");
         }

@@ -42,7 +42,11 @@ impl PruneMethod {
             PruneMethod::AdaPrune => adaprune::prune(w, h, sparsity),
             PruneMethod::AdaPruneIter(k) => adaprune::prune_iterative(w, h, sparsity, *k),
             PruneMethod::ExactObs => {
-                let opts = ObsOpts { batch: sweep::configured_batch(), ..Default::default() };
+                let opts = ObsOpts {
+                    batch: sweep::configured_batch(),
+                    precision: crate::util::precision::configured_precision(),
+                    ..Default::default()
+                };
                 exact_obs::prune_unstructured(w, h, sparsity, &opts)
             }
         }

@@ -287,11 +287,126 @@ pub fn cholesky_blocked(a: &Mat) -> crate::util::error::Result<Mat> {
     Ok(w)
 }
 
+/// [`cholesky_blocked`] on the mixed tier: phases 1–2 (diagonal-block
+/// factor, panel solve) are **identical f64** — every pivot and every
+/// panel entry is computed exactly as the f64 blocked factor computes
+/// them *given its inputs* — and only phase 3, the memory-bound trailing
+/// SYRK that streams the whole trailing triangle once per panel, reads a
+/// once-narrowed f32 copy of the solved panel with f64 accumulators
+/// (half the streamed bytes; the panel is ~n·48 entries, narrowed once
+/// and reused across the whole trailing triangle). The factor therefore
+/// differs from [`cholesky_blocked`] only by the f32 storage rounding of
+/// the trailing updates, pinned at 1e-4 relative by tests; non-positive
+/// pivots report the same true-row error shape.
+pub fn cholesky_blocked_mixed(a: &Mat) -> crate::util::error::Result<Mat> {
+    crate::ensure!(a.rows == a.cols, "cholesky needs a square matrix");
+    let n = a.rows;
+    let mut w = a.clone();
+    let d = &mut w.data;
+    // f32 narrowing of the current panel strip (rows k1..n, columns
+    // k0..k1), row-major at stride CHOL_PANEL; one allocation reused
+    // across every panel step.
+    let mut panel = vec![0.0f32; n * CHOL_PANEL];
+    let mut k0 = 0usize;
+    while k0 < n {
+        let k1 = (k0 + CHOL_PANEL).min(n);
+        let pw = k1 - k0;
+        // 1. Factor the diagonal block in place (exact f64).
+        for i in k0..k1 {
+            for j in k0..i {
+                let mut s = d[i * n + j];
+                for t in k0..j {
+                    s -= d[i * n + t] * d[j * n + t];
+                }
+                d[i * n + j] = s / d[j * n + j];
+            }
+            let mut s = d[i * n + i];
+            for t in k0..i {
+                s -= d[i * n + t] * d[i * n + t];
+            }
+            crate::ensure!(
+                s > 0.0,
+                "matrix not positive definite at pivot {i} (s={s:.3e}); \
+                 increase Hessian dampening"
+            );
+            d[i * n + i] = s.sqrt();
+        }
+        // 2. Panel solve: rows below the block against its factor
+        //    (exact f64).
+        for i in k1..n {
+            for j in k0..k1 {
+                let mut s = d[i * n + j];
+                for t in k0..j {
+                    s -= d[i * n + t] * d[j * n + t];
+                }
+                d[i * n + j] = s / d[j * n + j];
+            }
+        }
+        // Narrow the solved panel once; the trailing SYRK streams this
+        // f32 copy instead of the f64 rows.
+        for i in k1..n {
+            let src = &d[i * n + k0..i * n + k1];
+            let dst = &mut panel[(i - k1) * CHOL_PANEL..(i - k1) * CHOL_PANEL + pw];
+            for (x, &v) in dst.iter_mut().zip(src) {
+                *x = v as f32;
+            }
+        }
+        // 3. Tiled SYRK trailing update, f32 loads / f64 accumulate.
+        let mut ib = k1;
+        while ib < n {
+            let iend = (ib + CHOL_TILE).min(n);
+            let mut jb = k1;
+            while jb < iend {
+                let jend = (jb + CHOL_TILE).min(n);
+                for i in ib..iend {
+                    let rowi = &panel[(i - k1) * CHOL_PANEL..(i - k1) * CHOL_PANEL + pw];
+                    for j in jb..jend.min(i) {
+                        let rowj = &panel[(j - k1) * CHOL_PANEL..(j - k1) * CHOL_PANEL + pw];
+                        let mut s = 0.0f64;
+                        for (x, y) in rowi.iter().zip(rowj) {
+                            s += *x as f64 * *y as f64;
+                        }
+                        d[i * n + j] -= s;
+                    }
+                    if i >= jb && i < jend {
+                        let mut s = 0.0f64;
+                        for x in rowi {
+                            let v = *x as f64;
+                            s += v * v;
+                        }
+                        d[i * n + i] -= s;
+                    }
+                }
+                jb = jend;
+            }
+            ib = iend;
+        }
+        k0 = k1;
+    }
+    for i in 0..n {
+        for v in w.data[i * n + i + 1..(i + 1) * n].iter_mut() {
+            *v = 0.0;
+        }
+    }
+    Ok(w)
+}
+
 /// Full SPD inverse via Cholesky (A⁻¹ = L⁻ᵀ·L⁻¹). Large problems
-/// (n ≥ [`CHOL_BLOCKED_MIN`]) factor through [`cholesky_blocked`];
-/// small ones keep the scalar factor bit-for-bit.
+/// (n ≥ [`CHOL_BLOCKED_MIN`]) factor through [`cholesky_blocked`] — or
+/// [`cholesky_blocked_mixed`] when the **global** precision policy is
+/// `mixed` (inverses feed shared/cached state — layer Hessians, trace
+/// databases — so the per-job override deliberately does not reach this
+/// choice); small ones keep the scalar factor bit-for-bit.
 pub fn cholesky_inverse(a: &Mat) -> crate::util::error::Result<Mat> {
-    let l = if a.rows >= CHOL_BLOCKED_MIN { cholesky_blocked(a)? } else { cholesky(a)? };
+    use crate::util::precision::{global_precision, Precision};
+    let l = if a.rows >= CHOL_BLOCKED_MIN {
+        match global_precision() {
+            Precision::Mixed => cholesky_blocked_mixed(a)?,
+            Precision::F64 => cholesky_blocked(a)?,
+        }
+    } else {
+        cholesky(a)?
+    };
     let n = a.rows;
     // Invert L (lower triangular) in place.
     let mut linv = Mat::zeros(n, n);
@@ -510,6 +625,37 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The mixed blocked factor (f32 trailing-update storage, f64
+    /// accumulate) must agree with the scalar factor at the f32 storage
+    /// tolerance across panel boundaries, including sizes where multiple
+    /// trailing panels compound the rounding.
+    #[test]
+    fn mixed_blocked_factor_matches_scalar_within_tolerance() {
+        for &(n, seed) in &[(30usize, 21u64), (70, 22), (150, 23)] {
+            let a = spd(n, seed);
+            let ls = cholesky(&a).unwrap();
+            let lm = cholesky_blocked_mixed(&a).unwrap();
+            for i in 0..n {
+                for j in 0..n {
+                    let (s, m) = (ls.at(i, j), lm.at(i, j));
+                    assert!(
+                        (s - m).abs() <= 1e-4 * (1.0 + s.abs()),
+                        "n={n} L[{i}][{j}]: {m} vs scalar {s}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Mixed blocked rejection names the true failing pivot too.
+    #[test]
+    fn mixed_blocked_rejects_with_true_pivot() {
+        let mut a = spd(60, 24);
+        *a.at_mut(53, 53) = -4.0;
+        let err = cholesky_blocked_mixed(&a).unwrap_err();
+        assert!(err.to_string().contains("pivot 53"), "{err}");
     }
 
     /// Blocked rejection names the true failing pivot, like the scalar

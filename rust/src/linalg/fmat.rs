@@ -1,0 +1,267 @@
+//! Packed-f32 storage with f64-accumulating kernels — the mixed tier.
+//!
+//! The rank-B flush, SYRK band accumulation and trace-db gathers are
+//! memory-bound at large d: ~2 flops per 8 loaded bytes in f64. Storing
+//! the *streamed* operand as f32 halves the bytes per element while every
+//! reduction still runs in f64 (each f32 load widens once into an f64
+//! accumulator chain), so the error per dot is bounded by the storage
+//! rounding of the inputs (≈ 2⁻²⁴ relative per element), not by
+//! accumulation drift. This is the paper's own operating point — the
+//! reference GPU implementation computes in f32 — but kept strictly
+//! opt-in behind [`crate::util::precision::Precision::Mixed`]: the f64
+//! kernels remain the bit-pinned oracles and every mixed kernel is
+//! tolerance-pinned against them.
+//!
+//! The inner loops here unroll **8 outputs wide** where the f64 kernels
+//! unroll 4: with half the bytes per lane the same vector width covers
+//! twice the columns, so the unroll factor doubles to keep the load
+//! ports saturated. As in the f64 kernels, the unroll is across
+//! *outputs*, never within a reduction — each (i,j) dot is one
+//! sequential t-sweep, so the mixed SYRK is bitwise reproducible for any
+//! unroll/tile/thread configuration (pinned by tests), merely not
+//! bit-equal to the f64 oracle.
+
+use super::mat::{band_bounds, Mat};
+
+/// Row-major dense matrix of f32 — the storage half of the mixed tier.
+/// Constructed by narrowing an f64 [`Mat`] once per layer/batch; all
+/// arithmetic on it accumulates in f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl FMat {
+    pub fn zeros(rows: usize, cols: usize) -> FMat {
+        FMat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Narrow an f64 matrix to f32 storage (lossy — see [`Mat::to_f32`]).
+    pub fn from_mat(m: &Mat) -> FMat {
+        FMat { rows: m.rows, cols: m.cols, data: m.to_f32() }
+    }
+
+    /// Build directly from an f32 slice.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> FMat {
+        assert_eq!(data.len(), rows * cols);
+        FMat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Widen back to f64 (exact — every f32 is representable).
+    pub fn to_mat(&self) -> Mat {
+        Mat::from_f32(self.rows, self.cols, &self.data)
+    }
+
+    /// Mixed-tier `out += alpha · self·selfᵀ`: the f32-storage mirror of
+    /// [`Mat::xxt_acc_threads`] — same band split, same serial cutoff,
+    /// same upper-triangle tile merge, but each band runs
+    /// [`syrk_upper_rows_mixed`] (f32 loads, f64 accumulators, 8-wide).
+    /// Deterministic for any thread count: every (i,j) dot is one
+    /// sequential f64 reduction over widened f32 loads computed by
+    /// exactly one band.
+    pub fn xxt_acc_threads_mixed(
+        &self,
+        out: &mut Mat,
+        alpha: f64,
+        threads: usize,
+        tile: &mut Vec<f64>,
+    ) {
+        let (m, k) = (self.rows, self.cols);
+        assert_eq!(out.rows, m, "xxt_acc_mixed: out rows");
+        assert_eq!(out.cols, m, "xxt_acc_mixed: out cols");
+        if tile.len() < m * m {
+            tile.resize(m * m, 0.0);
+        }
+        // Same flop heuristic as the f64 kernel: below ~2^21 madds the
+        // spawn overhead dominates.
+        let nt = if m * m * k / 2 < (1 << 21) { 1 } else { threads.clamp(1, m.max(1)) };
+        if nt <= 1 {
+            syrk_upper_rows_mixed(&self.data, m, k, 0, m, &mut tile[..m * m]);
+        } else {
+            let bounds = band_bounds(m, nt);
+            let mut bands: Vec<(usize, usize, &mut [f64])> =
+                Vec::with_capacity(bounds.len() - 1);
+            let mut rest: &mut [f64] = &mut tile[..m * m];
+            for wnd in bounds.windows(2) {
+                let (r0, r1) = (wnd[0], wnd[1]);
+                let (band, tail) = rest.split_at_mut((r1 - r0) * m);
+                rest = tail;
+                bands.push((r0, r1, band));
+            }
+            std::thread::scope(|scope| {
+                for (r0, r1, band) in bands {
+                    let data = &self.data;
+                    scope.spawn(move || {
+                        syrk_upper_rows_mixed(data, m, k, r0, r1, band);
+                    });
+                }
+            });
+        }
+        for i in 0..m {
+            let base = i * m;
+            out.data[base + i] += alpha * tile[base + i];
+            for j in i + 1..m {
+                let s = tile[base + j];
+                out.data[base + j] += alpha * s;
+                out.data[j * m + i] += alpha * s;
+            }
+        }
+    }
+}
+
+/// Mixed-tier upper-triangle SYRK over rows `r0..r1`: f32 row loads,
+/// f64 accumulators, written at `out[(i−r0)·m + j]` for j ≥ i. Mirror of
+/// `mat::syrk_upper_rows` with the output unroll widened from 4 to 8
+/// (f32 lanes are half-width, so 8 outputs keep the same vector
+/// footprint) and the same 64-column cache tiling. Each (i,j) entry is
+/// one sequential f64 dot over widened f32 elements, so the result is
+/// bitwise identical to the scalar mixed reference for any tile/unroll
+/// placement — the unroll is across outputs only.
+pub(crate) fn syrk_upper_rows_mixed(
+    data: &[f32],
+    m: usize,
+    k: usize,
+    r0: usize,
+    r1: usize,
+    out: &mut [f64],
+) {
+    const TILE: usize = 64;
+    let mut jt = r0;
+    while jt < m {
+        let jt1 = (jt + TILE).min(m);
+        for i in r0..r1.min(jt1) {
+            let ri = &data[i * k..(i + 1) * k];
+            let orow = &mut out[(i - r0) * m..(i - r0 + 1) * m];
+            let mut j = jt.max(i);
+            while j + 8 <= jt1 {
+                let rj0 = &data[j * k..(j + 1) * k];
+                let rj1 = &data[(j + 1) * k..(j + 2) * k];
+                let rj2 = &data[(j + 2) * k..(j + 3) * k];
+                let rj3 = &data[(j + 3) * k..(j + 4) * k];
+                let rj4 = &data[(j + 4) * k..(j + 5) * k];
+                let rj5 = &data[(j + 5) * k..(j + 6) * k];
+                let rj6 = &data[(j + 6) * k..(j + 7) * k];
+                let rj7 = &data[(j + 7) * k..(j + 8) * k];
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0, 0.0, 0.0);
+                let (mut s4, mut s5, mut s6, mut s7) = (0.0f64, 0.0, 0.0, 0.0);
+                for t in 0..k {
+                    let a = ri[t] as f64;
+                    s0 += a * rj0[t] as f64;
+                    s1 += a * rj1[t] as f64;
+                    s2 += a * rj2[t] as f64;
+                    s3 += a * rj3[t] as f64;
+                    s4 += a * rj4[t] as f64;
+                    s5 += a * rj5[t] as f64;
+                    s6 += a * rj6[t] as f64;
+                    s7 += a * rj7[t] as f64;
+                }
+                orow[j] = s0;
+                orow[j + 1] = s1;
+                orow[j + 2] = s2;
+                orow[j + 3] = s3;
+                orow[j + 4] = s4;
+                orow[j + 5] = s5;
+                orow[j + 6] = s6;
+                orow[j + 7] = s7;
+                j += 8;
+            }
+            while j < jt1 {
+                let rj = &data[j * k..(j + 1) * k];
+                let mut s = 0.0f64;
+                for t in 0..k {
+                    s += ri[t] as f64 * rj[t] as f64;
+                }
+                orow[j] = s;
+                j += 1;
+            }
+        }
+        jt = jt1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The 8-wide unroll and the 64-column tiling must not change a
+    /// single bit vs a scalar f32-load/f64-accumulate dot.
+    #[test]
+    fn mixed_syrk_bit_identical_to_scalar_mixed_dot() {
+        // 64 + 11 crosses the tile seam; odd k exercises no special
+        // path (reduction is sequential) but keeps sizes honest.
+        let x = FMat::from_mat(&Mat::randn(75, 37, 91));
+        let (m, k) = (x.rows, x.cols);
+        let mut out = vec![f64::NAN; m * m];
+        syrk_upper_rows_mixed(&x.data, m, k, 0, m, &mut out);
+        for i in 0..m {
+            for j in i..m {
+                let mut s = 0.0f64;
+                for t in 0..k {
+                    s += x.at(i, t) as f64 * x.at(j, t) as f64;
+                }
+                assert_eq!(out[i * m + j].to_bits(), s.to_bits(), "mixed syrk ({i},{j})");
+            }
+        }
+    }
+
+    /// Banded multi-thread mixed SYRK is deterministic for any thread
+    /// count (same bits as the serial mixed run) and reuses the tile.
+    #[test]
+    fn mixed_xxt_acc_threads_deterministic_any_thread_count() {
+        let m = 80;
+        let x = FMat::from_mat(&Mat::randn(m, 1100, 19));
+        let start = Mat::randn(m, m, 20);
+        let mut tile = Vec::new();
+        let mut serial = start.clone();
+        x.xxt_acc_threads_mixed(&mut serial, 2.0, 1, &mut tile);
+        for threads in [2usize, 5] {
+            let mut out = start.clone();
+            x.xxt_acc_threads_mixed(&mut out, 2.0, threads, &mut tile);
+            assert_eq!(out.data, serial.data, "threads={threads}");
+        }
+        let cap = tile.capacity();
+        let mut out = start.clone();
+        x.xxt_acc_threads_mixed(&mut out, 2.0, 3, &mut tile);
+        assert_eq!(tile.capacity(), cap, "tile must be reused, not regrown");
+    }
+
+    /// Tolerance pin against the f64 oracle: per-entry relative error of
+    /// the mixed SYRK vs `Mat::xxt_acc_threads` bounded by the f32
+    /// storage rounding (≈ k·2⁻²³ worst case; 1e-4 is generous at
+    /// k ≈ 1000 with standard-normal data).
+    #[test]
+    fn mixed_syrk_within_tolerance_of_f64_oracle() {
+        let xf = Mat::randn(40, 600, 33);
+        let x = FMat::from_mat(&xf);
+        let mut exact = Mat::zeros(40, 40);
+        let mut mixed = Mat::zeros(40, 40);
+        let mut tile = Vec::new();
+        xf.xxt_acc_threads(&mut exact, 1.0, 1, &mut tile);
+        let mut tile2 = Vec::new();
+        x.xxt_acc_threads_mixed(&mut mixed, 1.0, 1, &mut tile2);
+        for (i, (&a, &b)) in exact.data.iter().zip(&mixed.data).enumerate() {
+            let rel = (a - b).abs() / (1.0 + a.abs());
+            assert!(rel < 1e-4, "entry {i}: f64 {a:e} vs mixed {b:e} (rel {rel:e})");
+        }
+    }
+
+    #[test]
+    fn from_mat_round_trips_f32_data() {
+        let m = Mat::randn(5, 7, 3);
+        let f = FMat::from_mat(&m);
+        assert_eq!(FMat::from_mat(&f.to_mat()).data, f.data);
+    }
+}

@@ -40,11 +40,24 @@ impl Mat {
     }
 
     /// From an f32 slice (weights coming out of the inference engine).
+    ///
+    /// Widening `f32 → f64` is **exact** for every f32 value, including
+    /// subnormals and signed zeros; NaN stays NaN (payload widened) and
+    /// ±∞ stay ±∞. Therefore `Mat::from_f32(..).to_f32()` reproduces the
+    /// input bit pattern for all non-NaN values (NaN compares unequal but
+    /// remains NaN).
     pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
         assert_eq!(data.len(), rows * cols);
         Mat { rows, cols, data: data.iter().map(|&v| v as f64).collect() }
     }
 
+    /// Narrow to f32 — **lossy** in general: values round to the nearest
+    /// f32 (ties-to-even), magnitudes above `f32::MAX` overflow to ±∞,
+    /// and magnitudes below the subnormal range flush toward ±0. NaN maps
+    /// to NaN and ±∞ to ±∞. Integers with |v| ≤ 2²⁴ and all f64 values
+    /// that originated as f32 narrow exactly, so
+    /// `to_f32 ∘ from_f32 = id` on such data (tested by
+    /// `f32_round_trip_semantics`).
     pub fn to_f32(&self) -> Vec<f32> {
         self.data.iter().map(|&v| v as f32).collect()
     }
@@ -340,7 +353,7 @@ impl Mat {
 /// `xxt_acc_threads_bit_identical_any_thread_count` with m > 64).
 const SYRK_COL_TILE: usize = 64;
 
-fn syrk_upper_rows(data: &[f64], m: usize, k: usize, r0: usize, r1: usize, out: &mut [f64]) {
+pub(crate) fn syrk_upper_rows(data: &[f64], m: usize, k: usize, r0: usize, r1: usize, out: &mut [f64]) {
     let mut jt = r0;
     while jt < m {
         let jt1 = (jt + SYRK_COL_TILE).min(m);
@@ -385,7 +398,7 @@ fn syrk_upper_rows(data: &[f64], m: usize, k: usize, r0: usize, r1: usize, out: 
 
 /// Partition rows `0..m` into at most `nt` contiguous bands of ~equal
 /// upper-triangle area (row i contributes m−i dot products).
-fn band_bounds(m: usize, nt: usize) -> Vec<usize> {
+pub(crate) fn band_bounds(m: usize, nt: usize) -> Vec<usize> {
     let total = (m as u64) * (m as u64 + 1) / 2;
     let target = total / nt as u64 + 1;
     let mut bounds = vec![0usize];
@@ -525,6 +538,55 @@ mod tests {
             let s: f64 = x.row(i).iter().zip(&v).map(|(a, b)| a * b).sum();
             assert_eq!(mv[i].to_bits(), s.to_bits(), "matvec row {i}");
         }
+    }
+
+    /// `from_f32` widens exactly (every f32 is representable in f64);
+    /// `to_f32` narrows lossily but is the exact inverse on data that
+    /// originated as f32. Covers subnormals, signed zero, NaN/inf, the
+    /// exactly-representable integer range boundary (2²⁴), and overflow
+    /// past `f32::MAX`.
+    #[test]
+    fn f32_round_trip_semantics() {
+        let specials: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            1.5,
+            -3.25,
+            f32::MIN_POSITIVE,          // smallest normal
+            f32::MIN_POSITIVE / 2.0,    // subnormal
+            f32::from_bits(1),          // smallest subnormal
+            -f32::from_bits(1),
+            f32::MAX,
+            f32::MIN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            16_777_216.0, // 2^24: last exactly-representable integer
+            2.0f32.powi(24) - 1.0,
+        ];
+        let m = Mat::from_f32(specials.len(), 1, &specials);
+        // Widening is exact: same bit pattern back for non-NaN, NaN→NaN.
+        for (i, (orig, back)) in specials.iter().zip(m.to_f32()).enumerate() {
+            if orig.is_nan() {
+                assert!(back.is_nan());
+                assert!(m.data[i].is_nan(), "widened NaN must stay NaN");
+            } else {
+                assert_eq!(orig.to_bits(), back.to_bits(), "round trip {orig:e}");
+                assert_eq!(*orig as f64, m.data[i], "widening must be exact");
+            }
+        }
+        // Narrowing is lossy: 2^24 + 1 is not representable in f32 and
+        // rounds to even (2^24); beyond f32::MAX overflows to ∞; tiny
+        // f64 values flush into the subnormal range or to zero.
+        let lossy = Mat::from_vec(1, 4, vec![16_777_217.0, 1e300, -1e300, 1e-300]);
+        let n = lossy.to_f32();
+        assert_eq!(n[0], 16_777_216.0);
+        assert_eq!(n[1], f32::INFINITY);
+        assert_eq!(n[2], f32::NEG_INFINITY);
+        assert_eq!(n[3], 0.0);
+        // Integers up to 2^24 in magnitude narrow exactly.
+        let ints = Mat::from_vec(1, 3, vec![-16_777_216.0, 123_456.0, 42.0]);
+        assert_eq!(ints.to_f32(), vec![-16_777_216.0f32, 123_456.0, 42.0]);
     }
 
     #[test]

@@ -5,14 +5,22 @@
 //! reports occasional dampening needs; f64 on CPU removes most of that
 //! fragility while keeping the algorithms identical. Weights enter as f32
 //! (the inference engine's dtype) and are converted per layer.
+//!
+//! The opt-in **mixed tier** ([`FMat`], `OBC_PRECISION=mixed`) stores the
+//! streamed operand of the bandwidth-bound kernels as packed f32 while
+//! every reduction still accumulates in f64 — half the memory traffic,
+//! tolerance-pinned against the f64 oracles, never the default.
 
 mod mat;
 mod chol;
+mod fmat;
 mod inverse;
 
 pub use chol::{
     cholesky, cholesky_append, cholesky_backward_strided, cholesky_blocked,
-    cholesky_forward_strided, cholesky_inverse, cholesky_solve, cholesky_solve_strided, CholFail,
+    cholesky_blocked_mixed, cholesky_forward_strided, cholesky_inverse, cholesky_solve,
+    cholesky_solve_strided, CholFail,
 };
+pub use fmat::FMat;
 pub use inverse::{gauss_jordan_inverse, remove_row_col, remove_row_col_into};
 pub use mat::Mat;

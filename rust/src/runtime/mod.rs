@@ -183,7 +183,10 @@ mod tests {
 
     #[test]
     fn manifest_parse_shape() {
-        // Build a fake manifest in a temp dir and point OBC_ARTIFACTS at it.
+        // Build a fake manifest in a temp dir and point the artifacts
+        // root at it via the thread-scoped override (not
+        // `env::set_var`, which races concurrent `env::var` readers in
+        // parallel tests).
         let dir = std::env::temp_dir().join("obc_rt_test");
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(
@@ -194,9 +197,8 @@ mod tests {
             ]}"#,
         )
         .unwrap();
-        std::env::set_var("OBC_ARTIFACTS", dir.to_str().unwrap());
+        let _artifacts = crate::util::io::override_artifacts_dir(dir.clone());
         let m = Manifest::load().unwrap();
-        std::env::remove_var("OBC_ARTIFACTS");
         assert_eq!(m.kernels.len(), 2);
         assert!(m.find("obs_sweep_r8_d16").is_some());
         let k = m.find_sweep("obs_sweep", 4, 16).unwrap();

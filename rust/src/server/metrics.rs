@@ -44,6 +44,13 @@ pub struct Metrics {
     /// Streaming progress chunks dropped because a client's bounded
     /// outbox was full (slow reader) or its connection was gone.
     pub stream_chunks_dropped: AtomicU64,
+    /// Executions resolved to the mixed (f32-storage / f64-accumulate)
+    /// compute tier — per-job `precision` override or global policy.
+    pub jobs_mixed: AtomicU64,
+    /// Executions resolved to the exact f64 compute tier. Together with
+    /// `jobs_mixed` this counts actual executions, not coalesced
+    /// deliveries (a coalesced waiter reuses its leader's execution).
+    pub jobs_f64: AtomicU64,
     queue_ns: AtomicU64,
     exec_ns: AtomicU64,
 }
@@ -97,6 +104,8 @@ impl Metrics {
                 "stream_chunks_dropped",
                 self.stream_chunks_dropped.load(Ordering::Relaxed) as f64,
             )
+            .set("jobs_mixed", self.jobs_mixed.load(Ordering::Relaxed) as f64)
+            .set("jobs_f64", self.jobs_f64.load(Ordering::Relaxed) as f64)
             .set("queue_seconds_total", self.queue_ns.load(Ordering::Relaxed) as f64 / 1e9)
             .set("exec_seconds_total", self.exec_ns.load(Ordering::Relaxed) as f64 / 1e9);
         o

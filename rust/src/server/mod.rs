@@ -47,6 +47,7 @@ use crate::coordinator::engine::LayerScope;
 use crate::coordinator::jobs::{self, ControlOp, DbSpec, JobResult, JobSpec, Priority, Request};
 use crate::util::deadline;
 use crate::util::json::Json;
+use crate::util::precision::{global_precision, override_precision, Precision};
 use crate::util::progress;
 use metrics::Metrics;
 use queue::Bounded;
@@ -179,6 +180,10 @@ pub struct Response {
     pub exec_s: f64,
     /// True when this response was served by an identical in-flight job.
     pub coalesced: bool,
+    /// The compute tier the job resolved to (its wire `precision` if it
+    /// carried one, else the server's global policy) — echoed so every
+    /// response is auditable for which kernel tier produced it.
+    pub precision: Precision,
 }
 
 impl Response {
@@ -201,7 +206,8 @@ impl Response {
         o.set("seq", self.seq as f64)
             .set("model", self.model.as_str())
             .set("queue_seconds", self.queue_s)
-            .set("seconds", self.exec_s);
+            .set("seconds", self.exec_s)
+            .set("precision", self.precision.token());
         if let Some(id) = &self.client_id {
             o.set("id", id.as_str());
         }
@@ -290,6 +296,10 @@ pub struct JobOptions {
     pub deadline: Option<Duration>,
     /// Admission class (default interactive).
     pub priority: Priority,
+    /// Per-job compute tier; `None` defers to the global policy
+    /// (`OBC_PRECISION`). Installed as a thread-scoped override for the
+    /// duration of the job's execution.
+    pub precision: Option<Precision>,
     /// Tenant label for per-tenant admission counting.
     pub tenant: Option<String>,
     /// Opt-in streaming progress chunks (needs a wire reply to matter).
@@ -310,9 +320,19 @@ struct QueuedJob {
     /// released from `in_flight_bytes` when the response is delivered.
     cost: usize,
     priority: Priority,
+    /// Per-job compute-tier override (`None` = global policy).
+    precision: Option<Precision>,
     /// Tenant label, released from the per-tenant counter at delivery.
     tenant: Option<String>,
     stream: bool,
+}
+
+impl QueuedJob {
+    /// The compute tier this job resolves to: its own override if it
+    /// carried one, else the process-global policy.
+    fn resolved_precision(&self) -> Precision {
+        self.precision.unwrap_or_else(global_precision)
+    }
 }
 
 struct Inner {
@@ -485,6 +505,7 @@ impl CompressionServer {
             deadline: budget.and_then(|d| now.checked_add(d)),
             cost,
             priority: class,
+            precision: opts.precision,
             tenant: opts.tenant.clone(),
             stream: opts.stream,
         };
@@ -712,6 +733,15 @@ fn reject_if_expired(inner: &Inner, job: QueuedJob) -> Option<QueuedJob> {
 /// streaming jobs) its progress sink installed.
 fn execute_checked(inner: &Arc<Inner>, job: &QueuedJob) -> Result<JobResult, String> {
     let _p = progress::set(chunk_sink(inner, job));
+    // Per-precision accounting + the job's compute-tier override,
+    // installed thread-locally for the execution scope so the sweep
+    // kernels (which resolve through `configured_precision`) see it.
+    match job.resolved_precision() {
+        Precision::Mixed => &inner.metrics.jobs_mixed,
+        Precision::F64 => &inner.metrics.jobs_f64,
+    }
+    .fetch_add(1, Ordering::Relaxed);
+    let _tier = job.precision.map(override_precision);
     // A panicking kernel (e.g. an unsupported method/pattern combo)
     // must become an error response, not a dead worker.
     std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -858,6 +888,7 @@ fn deliver(
         }
     }
     inner.metrics.observe_job(queue_s, exec_s, outcome.is_ok());
+    let precision = job.resolved_precision();
     job.reply.send_final(Response {
         seq: job.seq,
         client_id: job.client_id,
@@ -866,6 +897,7 @@ fn deliver(
         queue_s,
         exec_s,
         coalesced,
+        precision,
     });
 }
 
@@ -934,11 +966,12 @@ where
             }
             Ok(Request::Control(ControlOp::Health)) => write_line(&server.health_json())?,
             Ok(Request::Control(ControlOp::Metrics)) => write_line(&server.metrics_json())?,
-            Ok(Request::Job { id, model, spec, deadline_ms, priority, tenant, stream }) => {
+            Ok(Request::Job { id, model, spec, deadline_ms, priority, precision, tenant, stream }) => {
                 let opts = JobOptions {
                     client_id: id.clone(),
                     deadline: deadline_ms.map(Duration::from_millis),
                     priority,
+                    precision,
                     tenant,
                     stream,
                 };
@@ -1158,6 +1191,59 @@ mod tests {
         let coalesced = server.inner.metrics.coalesced.load(Ordering::Relaxed);
         let executed = resps.iter().filter(|r| !r.coalesced).count() as u64;
         assert_eq!(coalesced + executed, 4);
+        server.shutdown();
+    }
+
+    /// A per-job `precision` field resolves to the mixed tier for that
+    /// execution only: the response echoes the resolved tier and the
+    /// per-tier execution counters advance.
+    #[test]
+    fn per_job_precision_is_counted_and_echoed() {
+        let server = synthetic_server(1);
+        let (tx, rx) = mpsc::channel::<Outbound>();
+        let wire = WireReply::new(tx, server.chunk_outbox());
+        let opts = JobOptions {
+            client_id: Some("mx".into()),
+            precision: Some(Precision::Mixed),
+            ..JobOptions::default()
+        };
+        server
+            .submit_wire(registry::SYNTHETIC_MODEL, JobSpec::Dense, opts, wire.clone())
+            .unwrap();
+        // Distinct spec so the two jobs can never coalesce or group.
+        let spec = JobSpec::Prune {
+            method: PruneMethod::Gmp,
+            sparsity: 0.5,
+            scope: LayerScope::All,
+        };
+        server
+            .submit_wire(registry::SYNTHETIC_MODEL, spec, JobOptions::default(), wire)
+            .unwrap();
+        // The channel closes once both jobs have answered (the queued
+        // jobs hold the only remaining senders).
+        let finals: Vec<Response> = rx
+            .iter()
+            .filter_map(|m| match m {
+                Outbound::Final(r) => Some(r),
+                Outbound::Chunk(_) => None,
+            })
+            .collect();
+        assert_eq!(finals.len(), 2);
+        let mixed =
+            finals.iter().find(|r| r.client_id.as_deref() == Some("mx")).unwrap();
+        assert!(mixed.outcome.is_ok());
+        assert_eq!(mixed.precision, Precision::Mixed);
+        assert_eq!(
+            mixed.to_json().get("precision").and_then(|v| v.as_str()),
+            Some("mixed")
+        );
+        // No override → the server's global policy, echoed verbatim.
+        let plain = finals.iter().find(|r| r.client_id.is_none()).unwrap();
+        assert_eq!(plain.precision, global_precision());
+        let m = server.inner.metrics.jobs_mixed.load(Ordering::Relaxed);
+        let f = server.inner.metrics.jobs_f64.load(Ordering::Relaxed);
+        assert_eq!(m + f, 2, "both executions counted (mixed={m}, f64={f})");
+        assert!(m >= 1, "the override job must count as mixed");
         server.shutdown();
     }
 

@@ -127,11 +127,12 @@ fn process_line(
             stats.augment(&mut m);
             let _ = write_json(out, stats, &m);
         }
-        Ok(Request::Job { id, model, spec, deadline_ms, priority, tenant, stream }) => {
+        Ok(Request::Job { id, model, spec, deadline_ms, priority, precision, tenant, stream }) => {
             let opts = JobOptions {
                 client_id: id.clone(),
                 deadline: deadline_ms.map(Duration::from_millis),
                 priority,
+                precision,
                 tenant,
                 stream,
             };

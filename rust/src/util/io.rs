@@ -330,9 +330,46 @@ pub fn write_string(path: &Path, s: &str) -> crate::util::error::Result<()> {
     std::fs::write(path, s).map_err(|e| crate::err!("write {}: {e}", path.display()))
 }
 
-/// Repo-root-relative artifact directory: honours `OBC_ARTIFACTS`, falls
-/// back to `./artifacts` relative to the current directory.
+thread_local! {
+    /// Thread-scoped [`artifacts_dir`] override (see
+    /// [`override_artifacts_dir`]). Thread-local rather than global so
+    /// parallel tests pointing at different directories cannot race each
+    /// other — the same isolation rule as
+    /// `util::precision::override_precision`.
+    static ARTIFACTS_OVERRIDE: std::cell::RefCell<Option<std::path::PathBuf>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Restores the previous [`artifacts_dir`] override when dropped.
+pub struct ArtifactsDirGuard {
+    prev: Option<std::path::PathBuf>,
+}
+
+impl Drop for ArtifactsDirGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        ARTIFACTS_OVERRIDE.with(|o| *o.borrow_mut() = prev);
+    }
+}
+
+/// Point [`artifacts_dir`] at `dir` for the current thread until the
+/// returned guard drops. This is the test-safe alternative to
+/// `std::env::set_var("OBC_ARTIFACTS", ...)`: mutating the process
+/// environment is unsynchronized with concurrent `env::var` readers
+/// (and UB to race on some platforms), while this override is scoped to
+/// the calling thread.
+pub fn override_artifacts_dir(dir: std::path::PathBuf) -> ArtifactsDirGuard {
+    let prev = ARTIFACTS_OVERRIDE.with(|o| o.replace(Some(dir)));
+    ArtifactsDirGuard { prev }
+}
+
+/// Repo-root-relative artifact directory: a thread-local test override
+/// wins, then `OBC_ARTIFACTS`, then `./artifacts` relative to the
+/// current directory.
 pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Some(dir) = ARTIFACTS_OVERRIDE.with(|o| o.borrow().clone()) {
+        return dir;
+    }
     std::env::var("OBC_ARTIFACTS")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
@@ -368,6 +405,26 @@ mod tests {
         let path = dir.join("bad.obcw");
         std::fs::write(&path, b"NOPExxxxxxx").unwrap();
         assert!(load_obcw(&path).is_err());
+    }
+
+    #[test]
+    fn artifacts_dir_override_is_scoped_and_nests() {
+        let base = artifacts_dir();
+        {
+            let _a = override_artifacts_dir(std::path::PathBuf::from("/tmp/obc_a"));
+            assert_eq!(artifacts_dir(), std::path::PathBuf::from("/tmp/obc_a"));
+            {
+                let _b = override_artifacts_dir(std::path::PathBuf::from("/tmp/obc_b"));
+                assert_eq!(artifacts_dir(), std::path::PathBuf::from("/tmp/obc_b"));
+            }
+            // Inner guard restores the outer override, not the default.
+            assert_eq!(artifacts_dir(), std::path::PathBuf::from("/tmp/obc_a"));
+        }
+        assert_eq!(artifacts_dir(), base);
+        // Other threads are unaffected by this thread's override.
+        let _a = override_artifacts_dir(std::path::PathBuf::from("/tmp/obc_a"));
+        let other = std::thread::spawn(artifacts_dir).join().unwrap();
+        assert_eq!(other, base);
     }
 
     #[test]

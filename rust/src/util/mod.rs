@@ -19,6 +19,7 @@ pub mod faultpoint;
 pub mod retry;
 pub mod deadline;
 pub mod progress;
+pub mod precision;
 
 pub use error::{ObcError, Result};
 

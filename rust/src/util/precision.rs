@@ -1,0 +1,153 @@
+//! Compute-precision policy for the mixed-precision tier.
+//!
+//! Every kernel in the tree has an exact f64 path (the oracle). The
+//! opt-in **mixed** tier stores the streamed operand (H⁻¹ panels, SYRK
+//! inputs, trace-db gather rows) as packed f32 and accumulates in f64 —
+//! half the memory traffic on the bandwidth-bound hot loops, reductions
+//! still in double. Mixed results are tolerance-pinned against the f64
+//! mirrors, never bit-pinned, so the tier is strictly opt-in:
+//!
+//! * globally via `OBC_PRECISION=mixed` (read once, cached), or
+//! * per job via the wire field `"precision":"mixed"`, which installs a
+//!   thread-scoped override for that job's sweep work only.
+//!
+//! Cached/shared state (Hessian accumulation, trace databases, snapshot
+//! stores) must never vary per job, so those paths consult only the
+//! *global* policy ([`global_precision`]); per-row sweep kernels resolve
+//! through [`configured_precision`], which sees the job override.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Compute tier for the elimination/SYRK/reconstruction hot loops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// Pure f64 storage + f64 accumulate — the exact, bit-pinned default.
+    F64,
+    /// f32 storage + f64 accumulate — tolerance-pinned bandwidth tier.
+    Mixed,
+}
+
+impl Precision {
+    /// Wire/env token (`"f64"` / `"mixed"`).
+    pub fn token(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::Mixed => "mixed",
+        }
+    }
+
+    /// Parse a wire/env token; `None` for anything unrecognized.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f64" | "double" | "exact" => Some(Precision::F64),
+            "mixed" | "f32" => Some(Precision::Mixed),
+            _ => None,
+        }
+    }
+}
+
+/// Cached global policy: 0 = unset, 1 = F64, 2 = Mixed.
+static GLOBAL: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-job override installed by the server around job execution.
+    static OVERRIDE: Cell<Option<Precision>> = const { Cell::new(None) };
+}
+
+fn decode(v: usize) -> Option<Precision> {
+    match v {
+        1 => Some(Precision::F64),
+        2 => Some(Precision::Mixed),
+        _ => None,
+    }
+}
+
+fn encode(p: Precision) -> usize {
+    match p {
+        Precision::F64 => 1,
+        Precision::Mixed => 2,
+    }
+}
+
+/// The process-wide policy from `OBC_PRECISION`, read once. Unset or
+/// unparsable means [`Precision::F64`] — mixed is never a silent default.
+/// Shared/cached state (Hessians, databases) must key off this, not the
+/// per-job override.
+pub fn global_precision() -> Precision {
+    if let Some(p) = decode(GLOBAL.load(Ordering::Relaxed)) {
+        return p;
+    }
+    let p = std::env::var("OBC_PRECISION")
+        .ok()
+        .and_then(|s| Precision::parse(&s))
+        .unwrap_or(Precision::F64);
+    GLOBAL.store(encode(p), Ordering::Relaxed);
+    p
+}
+
+/// Test-safe setter for the cached global policy — tests must use this
+/// instead of racing on `std::env::set_var` across threads.
+pub fn set_global_precision(p: Precision) {
+    GLOBAL.store(encode(p), Ordering::Relaxed);
+}
+
+/// The precision in effect on this thread: the per-job override if one
+/// is installed, else the global policy. Per-row sweep entry points
+/// resolve through this.
+pub fn configured_precision() -> Precision {
+    OVERRIDE.with(|o| o.get()).unwrap_or_else(global_precision)
+}
+
+/// Install a thread-scoped precision override for the duration of the
+/// returned guard (the server wraps each job's execution in one when the
+/// job carried a wire `"precision"`). Restores the previous override on
+/// drop, so nesting is safe.
+pub fn override_precision(p: Precision) -> OverrideGuard {
+    let prev = OVERRIDE.with(|o| o.replace(Some(p)));
+    OverrideGuard { prev }
+}
+
+/// RAII guard from [`override_precision`].
+pub struct OverrideGuard {
+    prev: Option<Precision>,
+}
+
+impl Drop for OverrideGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        OVERRIDE.with(|o| o.set(prev));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_round_trip() {
+        for p in [Precision::F64, Precision::Mixed] {
+            assert_eq!(Precision::parse(p.token()), Some(p));
+        }
+        assert_eq!(Precision::parse("double"), Some(Precision::F64));
+        assert_eq!(Precision::parse("F32"), Some(Precision::Mixed));
+        assert_eq!(Precision::parse("half"), None);
+        assert_eq!(Precision::parse(""), None);
+    }
+
+    #[test]
+    fn override_guard_restores_previous() {
+        set_global_precision(Precision::F64);
+        assert_eq!(configured_precision(), Precision::F64);
+        {
+            let _g = override_precision(Precision::Mixed);
+            assert_eq!(configured_precision(), Precision::Mixed);
+            {
+                let _g2 = override_precision(Precision::F64);
+                assert_eq!(configured_precision(), Precision::F64);
+            }
+            assert_eq!(configured_precision(), Precision::Mixed);
+        }
+        assert_eq!(configured_precision(), Precision::F64);
+    }
+}

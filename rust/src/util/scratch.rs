@@ -72,6 +72,15 @@ pub struct Scratch {
     /// Compacted positions eliminated in the current batch (staged
     /// order; sorted ascending at flush).
     pub(crate) bq: Vec<usize>,
+    /// Mixed-tier compacted working copy of H⁻¹ (f32 storage, stride
+    /// `m`) — the streamed operand of the mixed flush. All reductions
+    /// over it accumulate in f64.
+    pub(crate) hinv32: Vec<f32>,
+    /// Mixed-tier rank-B panel: staged pivot rows narrowed to f32 (the
+    /// flush streams these alongside `hinv32`; the stage-time
+    /// compensation/diagonal math uses the same rounded values widened
+    /// back, so stage and flush see one consistent panel).
+    pub(crate) panel32: Vec<f32>,
 }
 
 impl Scratch {
@@ -134,6 +143,17 @@ impl Scratch {
         self.bq.reserve(b);
     }
 
+    /// Grow the mixed-tier (f32 storage) buffers: the compacted H⁻¹
+    /// mirror and the rank-B panel.
+    pub(crate) fn ensure_mixed(&mut self, b: usize, d: usize) {
+        if self.hinv32.len() < d * d {
+            self.hinv32.resize(d * d, 0.0);
+        }
+        if self.panel32.len() < b * d {
+            self.panel32.resize(b * d, 0.0);
+        }
+    }
+
     /// The finished output row of the last sweep (original indexing).
     pub fn out(&self) -> &[f64] {
         &self.out
@@ -173,6 +193,8 @@ mod tests {
             assert!(s.panel.len() >= 128);
             assert!(s.pfac.len() >= 8 && s.bdiag.len() >= 16);
             assert!(s.bq.capacity() >= 8);
+            s.ensure_mixed(8, 16);
+            assert!(s.hinv32.len() >= 256 && s.panel32.len() >= 128);
         });
     }
 

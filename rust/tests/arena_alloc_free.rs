@@ -8,7 +8,7 @@
 use obc::compress::hessian::LayerHessian;
 use obc::compress::quant::Grid;
 use obc::compress::sweep;
-use obc::linalg::Mat;
+use obc::linalg::{FMat, Mat};
 use obc::util::alloc_counter::{self, CountingAlloc};
 use obc::util::scratch::Scratch;
 
@@ -23,8 +23,13 @@ fn steady_state_sweeps_are_allocation_free() {
     let grid = Grid { scale: 0.125, zero: 16.0, maxq: 31.0 };
     let mut s = Scratch::new();
 
+    // The layer-shared f32 narrowing is built once, outside the measured
+    // region, exactly as the fan-outs do it.
+    let h32 = FMat::from_mat(&h.hinv);
+
     // Warmup: grows every buffer the kernels will touch — including the
-    // rank-B panel buffers (`ensure_batch`).
+    // rank-B panel buffers (`ensure_batch`) and the mixed-tier f32
+    // scratch panels (`ensure_mixed`).
     sweep::prune_sweep(&mut s, w.row(0), &h.hinv, d, |_, _| true).unwrap();
     sweep::quant_sweep(&mut s, w.row(0), &h.hinv, &grid, true).unwrap();
     sweep::prune_sweep_batched(&mut s, w.row(0), &h.hinv, d, 8, |_, _| true).unwrap();
@@ -33,6 +38,18 @@ fn steady_state_sweeps_are_allocation_free() {
     sweep::group_reconstruct(&mut s, w.row(0), &h.hinv, &[1, 4, 9, 17]).unwrap();
     sweep::prefix_reconstruct_multi(&mut s, w.row(0), &h.hinv, &[2, 7, 1, 12, 5], &[1, 3, 5], |_, _| {})
         .unwrap();
+    sweep::prune_sweep_batched_mixed(&mut s, w.row(0), &h32, d, 8, |_, _| true).unwrap();
+    sweep::quant_sweep_batched_mixed(&mut s, w.row(0), &h32, &grid, true, 8).unwrap();
+    sweep::prefix_reconstruct_multi_mixed(
+        &mut s,
+        w.row(0),
+        &h.hinv,
+        &h32,
+        &[2, 7, 1, 12, 5],
+        &[1, 3, 5],
+        |_, _| {},
+    )
+    .unwrap();
 
     let start = alloc_counter::snapshot();
     for _ in 0..5 {
@@ -50,6 +67,23 @@ fn steady_state_sweeps_are_allocation_free() {
             &mut s,
             w.row(1),
             &h.hinv,
+            &[2, 7, 1, 12, 5],
+            &[1, 3, 5],
+            |k, row| {
+                std::hint::black_box((k, row[0]));
+            },
+        )
+        .unwrap();
+        // The mixed tier holds the same zero-allocation contract: its
+        // f32 working set lives in the warmed arena (`hinv32`/`panel32`)
+        // and the shared narrowing is reused, never rebuilt.
+        sweep::prune_sweep_batched_mixed(&mut s, w.row(1), &h32, d, 8, |_, _| true).unwrap();
+        sweep::quant_sweep_batched_mixed(&mut s, w.row(1), &h32, &grid, true, 8).unwrap();
+        sweep::prefix_reconstruct_multi_mixed(
+            &mut s,
+            w.row(1),
+            &h.hinv,
+            &h32,
             &[2, 7, 1, 12, 5],
             &[1, 3, 5],
             |k, row| {

@@ -15,6 +15,7 @@ use obc::compress::quant::Grid;
 use obc::compress::sweep;
 use obc::linalg::Mat;
 use obc::util::pool::ThreadPool;
+use obc::util::precision::Precision;
 use obc::util::proptest as pt;
 use obc::util::scratch::Scratch;
 
@@ -39,7 +40,8 @@ fn arena_bit_identical_to_reference_across_configs() {
 
         // Unstructured at a random sparsity and trace cap.
         let sparsity = g.f64_in(0.2, 0.9);
-        let opts = ObsOpts { trace_cap: if g.bool() { 1.0 } else { 0.75 }, batch: 1 };
+        let opts =
+            ObsOpts { trace_cap: if g.bool() { 1.0 } else { 0.75 }, ..Default::default() };
         let a = exact_obs::prune_unstructured_on(&pool, &w, &h, sparsity, &opts);
         let r = reference::prune_unstructured_on(&pool, &w, &h, sparsity, &opts);
         if a.w.data != r.w.data {
@@ -108,8 +110,8 @@ fn rank_b_batches_match_rank1_across_configs() {
         let b = batches[g.usize_in(0, batches.len() - 1)];
 
         // Unstructured: opts.batch plumbed through sweep_all_rows.
-        let o1 = ObsOpts { trace_cap: 1.0, batch: 1 };
-        let ob = ObsOpts { trace_cap: 1.0, batch: b };
+        let o1 = ObsOpts { trace_cap: 1.0, ..Default::default() };
+        let ob = ObsOpts { trace_cap: 1.0, batch: b, ..Default::default() };
         let r1 = exact_obs::prune_unstructured_on(&pool, &w, &h, sparsity, &o1);
         let rb = exact_obs::prune_unstructured_on(&pool, &w, &h, sparsity, &ob);
         if b == 1 && rb.w.data != r1.w.data {
@@ -128,8 +130,10 @@ fn rank_b_batches_match_rank1_across_configs() {
 
         // N:M through the batched entry point: pattern stays valid and
         // matches the rank-1 support.
-        let nm1 = exact_obs::prune_nm_batched_on(&pool, &w, &h, 2, 4, 1);
-        let nmb = exact_obs::prune_nm_batched_on(&pool, &w, &h, 2, 4, b);
+        let nm1 =
+            exact_obs::prune_nm_batched_on(&pool, &w, &h, 2, 4, 1, Precision::F64);
+        let nmb =
+            exact_obs::prune_nm_batched_on(&pool, &w, &h, 2, 4, b, Precision::F64);
         for row in 0..d_row {
             for blk in 0..d / 4 {
                 let nz = (0..4).filter(|i| nmb.w.at(row, blk * 4 + i) != 0.0).count();

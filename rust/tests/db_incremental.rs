@@ -34,7 +34,12 @@ fn incremental_unstructured_levels_bit_identical_to_reference() {
         let (w, h) = setup(d_row, d, g.rng.next_u64());
         let pool = &pools[g.usize_in(0, pools.len() - 1)];
         let cap = if g.bool() { 1.0 } else { 0.8 };
-        let traces = exact_obs::sweep_all_rows_on(pool, &w, &h, &ObsOpts { trace_cap: cap, batch: 1 });
+        let traces = exact_obs::sweep_all_rows_on(
+            pool,
+            &w,
+            &h,
+            &ObsOpts { trace_cap: cap, ..Default::default() },
+        );
         // Random grid: unsorted levels, duplicates, extremes included.
         let total = d_row * d;
         let n_levels = g.usize_in(1, 7);

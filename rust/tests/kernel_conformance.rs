@@ -113,6 +113,7 @@ fn obq_sweep_matches_python_golden_cases() {
             search: GridSearch::MinMax,
             outlier_heuristic: outlier,
             batch: 1,
+            precision: obc::util::precision::Precision::F64,
         };
         for r in 0..rows {
             let grid = Grid {

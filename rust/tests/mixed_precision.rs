@@ -1,0 +1,178 @@
+//! Mixed-precision tier acceptance: the f32-storage / f64-accumulate
+//! kernels pinned against the exact f64 oracles across the three
+//! compression paths (unstructured pruning, N:M pruning, dense OBQ).
+//!
+//! The property being pinned is the *layer error*: narrowing H⁻¹ to f32
+//! perturbs scores by O(f32 eps), which may flip near-tied selections,
+//! but every selection the mixed sweep makes is near-optimal under the
+//! same objective — so `sq_err` must track the f64 oracle to ~1e-4
+//! relative on well-conditioned random layers.
+//!
+//! Lives in its own test binary because two tests install the
+//! process-global precision policy; the lib unit tests (which assert
+//! bitwise f64 behavior) must never share a process with that.
+
+use obc::compress::exact_obs::{self, ObsOpts};
+use obc::compress::hessian::LayerHessian;
+use obc::compress::obq::{self, ObqOpts};
+use obc::compress::sweep;
+use obc::coordinator::methods::PruneMethod;
+use obc::linalg::Mat;
+use obc::util::pool::ThreadPool;
+use obc::util::precision::{override_precision, set_global_precision, Precision};
+
+/// Relative tolerance pinning the mixed tier's layer error to f64.
+const TOL: f64 = 1e-4;
+
+fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + b.abs())
+}
+
+/// A well-conditioned random layer: more samples than dimensions plus
+/// the standard damping floor.
+fn layer(rows: usize, d: usize, seed: u64) -> (Mat, LayerHessian) {
+    let w = Mat::randn(rows, d, seed);
+    let x = Mat::randn(d, 2 * d + 16, seed + 1000);
+    (w, LayerHessian::from_inputs(&x, 1e-8))
+}
+
+#[test]
+fn unstructured_mixed_error_tracks_f64() {
+    for (seed, rows, d, sparsity) in
+        [(11, 4, 48, 0.5), (12, 3, 64, 0.7), (13, 2, 96, 0.3)]
+    {
+        let (w, h) = layer(rows, d, seed);
+        let exact = exact_obs::prune_unstructured(&w, &h, sparsity, &ObsOpts::default());
+        for batch in [1usize, 8, 32] {
+            let mixed = exact_obs::prune_unstructured(
+                &w,
+                &h,
+                sparsity,
+                &ObsOpts { batch, precision: Precision::Mixed, ..Default::default() },
+            );
+            // Same budget: Algorithm 2 prunes an exact global count.
+            assert_eq!(
+                mixed.sparsity, exact.sparsity,
+                "seed {seed} B={batch}: sparsity"
+            );
+            assert!(
+                close(mixed.sq_err, exact.sq_err, TOL),
+                "seed {seed} B={batch}: mixed err {} vs f64 {}",
+                mixed.sq_err,
+                exact.sq_err
+            );
+        }
+    }
+}
+
+#[test]
+fn nm_mixed_keeps_the_pattern_and_tracks_f64() {
+    let pool = ThreadPool::new(3);
+    for (seed, rows, d, n_keep, m) in [(21, 4, 32, 2, 4), (22, 3, 64, 1, 4), (23, 2, 48, 4, 8)]
+    {
+        let (w, h) = layer(rows, d, seed);
+        let exact =
+            exact_obs::prune_nm_batched_on(&pool, &w, &h, n_keep, m, 1, Precision::F64);
+        for batch in [1usize, 8] {
+            let mixed = exact_obs::prune_nm_batched_on(
+                &pool,
+                &w,
+                &h,
+                n_keep,
+                m,
+                batch,
+                Precision::Mixed,
+            );
+            // The structural contract is precision-independent: every
+            // group of m keeps exactly n_keep weights.
+            for r in 0..rows {
+                for g in (0..d).step_by(m) {
+                    let kept = mixed.w.row(r)[g..g + m]
+                        .iter()
+                        .filter(|&&v| v != 0.0)
+                        .count();
+                    assert_eq!(
+                        kept, n_keep,
+                        "seed {seed} B={batch} row {r} group {g}: {kept} kept"
+                    );
+                }
+            }
+            assert!(
+                close(mixed.sq_err, exact.sq_err, TOL),
+                "seed {seed} B={batch}: mixed err {} vs f64 {}",
+                mixed.sq_err,
+                exact.sq_err
+            );
+        }
+    }
+}
+
+#[test]
+fn dense_obq_mixed_error_tracks_f64() {
+    for (seed, rows, d, bits) in [(31, 4, 48, 4), (32, 3, 64, 3), (33, 2, 96, 8)] {
+        let (w, h) = layer(rows, d, seed);
+        let f64_opts = ObqOpts { batch: 1, precision: Precision::F64, ..ObqOpts::new(bits) };
+        let exact = obq::quantize(&w, &h, &f64_opts);
+        for batch in [1usize, 8] {
+            let opts = ObqOpts { batch, precision: Precision::Mixed, ..ObqOpts::new(bits) };
+            let mixed = obq::quantize(&w, &h, &opts);
+            // A near-tie can move a weight one grid step, but the grid
+            // is shared and the error objective must track.
+            assert!(
+                close(mixed.sq_err, exact.sq_err, TOL),
+                "seed {seed} B={batch} bits {bits}: mixed err {} vs f64 {}",
+                mixed.sq_err,
+                exact.sq_err
+            );
+        }
+    }
+}
+
+/// The thread-scoped override is what the server installs per job: opts
+/// constructors resolve through it, with no effect on other threads.
+#[test]
+fn thread_override_selects_the_mixed_tier() {
+    let (w, h) = layer(3, 32, 41);
+    let exact = obq::quantize(
+        &w,
+        &h,
+        &ObqOpts { precision: Precision::F64, ..ObqOpts::new(4) },
+    );
+    let mixed = {
+        let _tier = override_precision(Precision::Mixed);
+        let opts = ObqOpts::new(4);
+        assert_eq!(opts.precision, Precision::Mixed, "override resolves into opts");
+        obq::quantize(&w, &h, &opts)
+    };
+    assert!(
+        close(mixed.sq_err, exact.sq_err, TOL),
+        "mixed err {} vs f64 {}",
+        mixed.sq_err,
+        exact.sq_err
+    );
+}
+
+/// The process-global policy (what `OBC_PRECISION=mixed` sets at
+/// startup) flows through method dispatch bit-identically to passing
+/// explicit mixed opts. This is the only test in the binary that writes
+/// the global, and every other test sets its precision explicitly, so
+/// parallel test threads cannot observe a surprise policy.
+#[test]
+fn global_policy_flows_through_method_dispatch() {
+    set_global_precision(Precision::Mixed);
+    let (w, h) = layer(3, 32, 51);
+    let got = PruneMethod::ExactObs.prune(&w, &h, 0.5);
+    let want = exact_obs::prune_unstructured(
+        &w,
+        &h,
+        0.5,
+        &ObsOpts {
+            batch: sweep::configured_batch(),
+            precision: Precision::Mixed,
+            ..Default::default()
+        },
+    );
+    // Same kernels, same pool discipline → bitwise identical.
+    assert_eq!(got.sq_err.to_bits(), want.sq_err.to_bits());
+    assert_eq!(got.w.data, want.w.data);
+}

@@ -15,12 +15,20 @@ steady-state sweeps allocated nothing, and the best blocked sweep beats
 or ties the rank-1 baseline on the largest smoke shape (1.25x slack —
 smoke sizes are tiny and noisy; the committed full-size trajectory is
 where the real crossover is recorded).
+
+Mixed-precision tier: every `mixed_<stem>` case must ship with its
+`<stem>_f64base` oracle (committed and smoke), and in the smoke run each
+mixed case must beat or tie its own f64 base within the same 1.25x
+slack — the committed model_expectations (>=1.5x flush at d=1024,
+>=1.3x SYRK) are the full-size targets; the smoke gate only proves the
+f32 tier is not regressing against its oracle.
 """
 import json
 import sys
 
 SCHEMA = "obc-bench-kernels/v1"
 RANKB_SLACK = 1.25
+MIXED_SLACK = 1.25
 
 
 def fail(msg):
@@ -41,7 +49,13 @@ def load(path):
 
 def rankb_cases(d, path):
     base = [c for c in d["cases"] if c["name"].endswith("_rank1base")]
-    blocked = [c for c in d["cases"] if "_rankB" in c["name"]]
+    # The mixed-tier pairs carry "_rankB" in their names too but bench a
+    # different axis (precision, not batching) at their own shape — the
+    # rank-1-vs-rank-B comparison excludes them.
+    blocked = [c for c in d["cases"]
+               if "_rankB" in c["name"]
+               and not c["name"].startswith("mixed_")
+               and not c["name"].endswith("_f64base")]
     if len(base) != 1:
         fail(f"{path}: expected exactly one _rank1base case, got "
              f"{[c['name'] for c in base]}")
@@ -50,8 +64,24 @@ def rankb_cases(d, path):
     return base[0], blocked
 
 
+def mixed_pairs(d, path):
+    """Pair every mixed_<stem> case with its <stem>_f64base oracle."""
+    byname = {c["name"]: c for c in d["cases"]}
+    mixed = [c for c in d["cases"] if c["name"].startswith("mixed_")]
+    if not mixed:
+        fail(f"{path}: no mixed_ precision-tier cases")
+    pairs = []
+    for m in mixed:
+        base_name = m["name"][len("mixed_"):] + "_f64base"
+        if base_name not in byname:
+            fail(f"{path}: mixed case {m['name']!r} has no {base_name!r} oracle")
+        pairs.append((byname[base_name], m))
+    return pairs
+
+
 committed = load(sys.argv[1])
 base, blocked = rankb_cases(committed, sys.argv[1])
+cpairs = mixed_pairs(committed, sys.argv[1])
 
 # Every operation-count expectation must point at a derived metric the
 # bench actually emits, or the trajectory tooling dangles.
@@ -66,6 +96,10 @@ for e in committed.get("model_expectations", []):
 rankb_expect = [n for n in derived_names if "_rankB" in n]
 if not rankb_expect:
     fail(f"{sys.argv[1]}: no rank-B derived entries")
+for _, m in cpairs:
+    if f"speedup_{m['name']}" not in derived_names:
+        fail(f"{sys.argv[1]}: mixed case {m['name']!r} has no "
+             f"speedup_{m['name']} derived entry")
 
 if len(sys.argv) > 2:
     smoke = load(sys.argv[2])
@@ -82,11 +116,22 @@ if len(sys.argv) > 2:
         fail(f"blocked sweep lost to rank-1 beyond slack: best rankB "
              f"{best:.0f} ns vs rank1base {sbase['min_ns']:.0f} ns "
              f"(limit {RANKB_SLACK}x)")
+    for sb, sm in mixed_pairs(smoke, sys.argv[2]):
+        for c in (sb, sm):
+            if not isinstance(c.get("min_ns"), (int, float)):
+                fail(f"smoke case {c['name']} has no measured min_ns")
+        if sm["min_ns"] > MIXED_SLACK * sb["min_ns"]:
+            fail(f"mixed tier lost to its f64 oracle beyond slack: "
+                 f"{sm['name']} {sm['min_ns']:.0f} ns vs {sb['name']} "
+                 f"{sb['min_ns']:.0f} ns (limit {MIXED_SLACK}x)")
     print(f"check_bench_kernels OK: committed schema valid "
           f"({len(committed['cases'])} cases), smoke rankB best "
-          f"{best:.0f} ns vs rank1 {sbase['min_ns']:.0f} ns")
+          f"{best:.0f} ns vs rank1 {sbase['min_ns']:.0f} ns, "
+          f"{len(mixed_pairs(smoke, sys.argv[2]))} mixed pairs within "
+          f"{MIXED_SLACK}x of their f64 oracles")
 else:
     print(f"check_bench_kernels OK: committed schema valid "
           f"({len(committed['cases'])} cases, "
           f"{len(blocked)} rank-B cases, "
+          f"{len(cpairs)} mixed-tier pairs, "
           f"{len(committed.get('model_expectations', []))} model expectations)")
