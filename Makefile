@@ -2,7 +2,7 @@
 
 CARGO ?= cargo
 
-.PHONY: build test bench bench-json bench-smoke bench-serve bench-db serve-smoke store-smoke chaos-smoke batch-smoke fmt lint clean
+.PHONY: build test bench bench-json bench-smoke bench-serve bench-db serve-smoke store-smoke chaos-smoke batch-smoke obs-smoke fmt lint clean
 
 build:
 	$(CARGO) build --release
@@ -129,6 +129,30 @@ batch-smoke:
 	  '{"op":"shutdown"}' \
 	| $(CARGO) run --release --example serve_compress -- --synthetic --workers 1 --batch-window-ms 200 > target/batch_smoke.out
 	python3 scripts/check_batch_smoke.py target/batch_smoke.out
+
+# Observability smoke: a profiled job batch (prune, quant, db build,
+# solve, each with "profile":true) on a one-worker server pinned to
+# OBC_THREADS=1 so the exclusive span accounting identity holds — the
+# per-job phase_ns sum tracks exec wall time — followed by live JSON
+# metrics, the Prometheus text rendering, and a flight-recorder dump.
+# check_obs_smoke.py validates the contracts end to end: phase sums
+# within 5% of each job's exec seconds, exec-histogram count equal to
+# jobs_completed in the post-drain shutdown ack, faults/profiles
+# aggregates present, and flight events ordered with every accepted
+# job paired to exactly one terminal event.
+obs-smoke:
+	@mkdir -p target
+	printf '%s\n' \
+	  '{"id":"pr","model":"synthetic","op":"prune","method":"exactobs","sparsity":0.5,"profile":true}' \
+	  '{"id":"qt","model":"synthetic","op":"quant","method":"obq","bits":4,"profile":true}' \
+	  '{"id":"bd","model":"synthetic","op":"db","kind":"sparsity","grid":[0,0.5,0.9],"profile":true}' \
+	  '{"id":"sv","model":"synthetic","op":"solve","target":"flop","value":1.5,"grid":[0,0.5,0.9],"profile":true}' \
+	  '{"op":"metrics"}' \
+	  '{"op":"metrics_prom"}' \
+	  '{"op":"flight"}' \
+	  '{"op":"shutdown"}' \
+	| OBC_THREADS=1 $(CARGO) run --release --bin obc -- serve --synthetic --workers 1 > target/obs_smoke.out
+	python3 scripts/check_obs_smoke.py target/obs_smoke.out
 
 fmt:
 	$(CARGO) fmt --all --check

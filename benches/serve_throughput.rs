@@ -24,6 +24,13 @@
 //! interactive p95 stays at or under batch p95 even though the batch
 //! work was queued first (`latency_p*_ms`, `interactive_p95_ms`,
 //! `batch_p95_ms`, `saturation_jobs` in the report).
+//!
+//! A fourth phase measures **span-collection overhead**: the same prune
+//! batch runs on a one-worker server with profiles collected
+//! (`collect_profiles:true`, the serving default) and with the collector
+//! off, min-of-2 per mode to damp scheduler noise. The ratio
+//! (`span_overhead_ratio` = instrumented / collector-off exec time) is
+//! gated < 1.02 by `scripts/check_serve_bench.py` on smoke artifacts.
 
 use obc::coordinator::engine::LayerScope;
 use obc::coordinator::jobs::{DbKind, DbSpec, JobSpec, Priority, TargetKind};
@@ -247,6 +254,61 @@ fn main() {
          (interactive p95 {interactive_p95:.1}ms vs batch p95 {batch_p95:.1}ms)"
     );
 
+    // ---- span-collection overhead: instrumented vs collector-off ----
+    // One worker, pure sweep work (calibration warmed by a throwaway
+    // dense job), min-of-2 rounds per mode: the minimum is the cleanest
+    // estimate of the true cost, insensitive to one-off scheduler noise.
+    let overhead_specs = || -> Vec<JobSpec> {
+        (0..3)
+            .map(|i| JobSpec::Prune {
+                method: PruneMethod::ExactObs,
+                sparsity: 0.40 + 0.02 * i as f64,
+                scope: LayerScope::All,
+            })
+            .collect()
+    };
+    let run_mode = |collect: bool| -> f64 {
+        let server = CompressionServer::start(ServerConfig {
+            workers: 1,
+            queue_cap: 8,
+            models_dir: PathBuf::from("/nonexistent"),
+            synthetic_only: true,
+            collect_profiles: collect,
+            ..ServerConfig::default()
+        });
+        let (tx, rx) = mpsc::channel();
+        server.submit(SYNTHETIC_MODEL, JobSpec::Dense, None, tx).expect("warmup submit");
+        rx.recv().expect("warmup response").outcome.expect("warmup job ok");
+        let mut best = f64::INFINITY;
+        for _ in 0..2 {
+            let (tx, rx) = mpsc::channel();
+            for spec in overhead_specs() {
+                server
+                    .submit(SYNTHETIC_MODEL, spec, None, tx.clone())
+                    .expect("submit overhead job");
+            }
+            drop(tx);
+            let mut total = 0.0;
+            for resp in rx.iter() {
+                if let Err(e) = &resp.outcome {
+                    panic!("overhead job failed: {e}");
+                }
+                total += resp.exec_s;
+            }
+            best = best.min(total);
+        }
+        server.shutdown();
+        best
+    };
+    let span_off_s = run_mode(false);
+    let span_on_s = run_mode(true);
+    let span_overhead_ratio = if span_off_s > 0.0 { span_on_s / span_off_s } else { 1.0 };
+    println!(
+        "serve_throughput: span overhead {:+.2}% (profiles on {span_on_s:.4}s vs off \
+         {span_off_s:.4}s, min of 2)",
+        (span_overhead_ratio - 1.0) * 100.0
+    );
+
     let mut report = JsonReport::with_schema("obc-bench-serve/v1");
     report.derived("db_build_cold_seconds", cold_s);
     report.derived("db_build_warm_seconds", warm_s);
@@ -268,6 +330,9 @@ fn main() {
     report.derived("latency_p99_ms", p99);
     report.derived("interactive_p95_ms", interactive_p95);
     report.derived("batch_p95_ms", batch_p95);
+    report.derived("span_overhead_off_seconds", span_off_s);
+    report.derived("span_overhead_on_seconds", span_on_s);
+    report.derived("span_overhead_ratio", span_overhead_ratio);
     let fname = if smoke { "BENCH_serve.smoke.json" } else { "BENCH_serve.json" };
     report
         .write(

@@ -302,6 +302,7 @@ pub fn global_select(traces: &[RowTrace], k_total: usize) -> Vec<usize> {
 /// the given order. Budgets beyond the combined trace length saturate at
 /// trace exhaustion, exactly as [`global_select`] does.
 pub fn global_select_multi(traces: &[RowTrace], k_totals: &[usize]) -> Vec<Vec<usize>> {
+    crate::span!("sweep.select");
     #[derive(PartialEq)]
     struct Cand(f64, usize);
     impl Eq for Cand {}

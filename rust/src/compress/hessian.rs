@@ -42,6 +42,7 @@ impl HessianAccumulator {
     /// Accumulate a batch X of shape d_col × n.
     pub fn add_batch(&mut self, x: &Mat) {
         assert_eq!(x.rows, self.d_col, "batch row dim != d_col");
+        crate::span!("hessian.syrk");
         let threads = crate::util::pool::configured_threads();
         x.xxt_acc_threads(&mut self.h, 2.0, threads, &mut self.syrk_tile);
         self.n_samples += x.cols;
@@ -67,6 +68,7 @@ impl HessianAccumulator {
     /// are shared/cached state, so the per-job precision override
     /// deliberately does not reach this choice.
     pub fn add_samples(&mut self, samples: &[Vec<f32>]) {
+        crate::span!("hessian.syrk");
         const CHUNK: usize = 1024;
         let d = self.d_col;
         let mixed = global_precision() == Precision::Mixed;

@@ -452,6 +452,7 @@ const FLUSH_COL_TILE: usize = 64;
 /// staged terms in the identical pairwise `sx` order, so even this
 /// tolerance-pinned path is bitwise unchanged by the tiling.
 fn batch_flush(s: &mut Scratch, m: usize) -> usize {
+    crate::span!("sweep.flush");
     let blen = s.bq.len();
     debug_assert!(blen > 0 && blen <= m);
     let nm = m - blen;
@@ -813,6 +814,7 @@ fn batch_stage_mixed(s: &mut Scratch, m: usize, q: usize, f: f64, compensate: bo
 /// fixed `sx` order, so the mixed flush is bitwise reproducible across
 /// tile/unroll placement, merely not bit-equal to the f64 oracle.
 fn batch_flush_mixed(s: &mut Scratch, m: usize) -> usize {
+    crate::span!("sweep.flush");
     let blen = s.bq.len();
     debug_assert!(blen > 0 && blen <= m);
     let nm = m - blen;

@@ -221,6 +221,7 @@ fn prefix_levels_stream_on(
     compute_err: bool,
     mut emit: impl FnMut(usize, &Mat, f64),
 ) {
+    crate::span!("db.assemble");
     let rows = w.rows;
     assert_eq!(orders.len(), rows, "one trace per row");
     for counts in level_counts {

@@ -185,6 +185,7 @@ impl CompressionEngine {
     ) -> crate::util::error::Result<CompressionEngine> {
         let bundle = load_bundle(models_dir, model)?;
         crate::info!("engine", "calibrating {model} ({} samples)", calib.n_samples);
+        crate::span!("calibrate");
         let hessians = calibrate(bundle.model.as_ref(), &bundle, &calib)?;
         Ok(CompressionEngine::new(bundle, hessians, calib, 1024))
     }
@@ -196,6 +197,7 @@ impl CompressionEngine {
     pub fn synthetic(seed: u64) -> crate::util::error::Result<CompressionEngine> {
         let bundle = synthetic_bundle(seed);
         let calib = CalibOpts { n_samples: 32, batch: 16, ..Default::default() };
+        crate::span!("calibrate");
         let hessians = calibrate(bundle.model.as_ref(), &bundle, &calib)?;
         Ok(CompressionEngine::new(bundle, hessians, calib, 32))
     }
@@ -324,6 +326,7 @@ impl CompressionEngine {
     /// Evaluate a stitched model with the task-default statistics
     /// correction applied.
     pub fn eval_corrected(&self, mut model: Box<dyn CompressibleModel>) -> f64 {
+        crate::span!("engine.eval");
         let kind = stats::default_correction(self.model().name());
         stats::apply_with_dense(kind, &mut model, self.model(), &self.bundle);
         eval::evaluate_bundle(&self.bundle, model.as_ref(), self.eval_samples())
@@ -331,6 +334,7 @@ impl CompressionEngine {
 
     /// Evaluate without any statistics correction (Table 9's "raw" mode).
     pub fn eval_raw(&self, model: Box<dyn CompressibleModel>) -> f64 {
+        crate::span!("engine.eval");
         eval::evaluate_bundle(&self.bundle, model.as_ref(), self.eval_samples())
     }
 
@@ -466,7 +470,10 @@ impl CompressionEngine {
                     return Ok(Arc::new(db));
                 }
             }
-            let db = build()?;
+            let db = {
+                crate::span!("engine.db_build");
+                build()?
+            };
             self.db_builds.fetch_add(1, Ordering::Relaxed);
             if let Some(s) = &store {
                 if let Err(e) = s.save(&skey, self.calib_fp, &db) {
@@ -591,12 +598,14 @@ impl CompressionEngine {
             // worker explicitly.
             let inherited = crate::util::deadline::current();
             let sink = crate::util::progress::current();
+            let tracer = crate::util::trace::current();
             let next = AtomicUsize::new(0);
             std::thread::scope(|sc| {
                 for _ in 0..workers {
                     sc.spawn(|| {
                         let _g = crate::util::deadline::set(inherited);
                         let _p = crate::util::progress::set(sink.clone());
+                        let _t = crate::util::trace::set(tracer.clone());
                         loop {
                             let i = next.fetch_add(1, Ordering::Relaxed);
                             if i >= n {
@@ -1194,6 +1203,7 @@ impl CompressionEngine {
         budget: f64,
         cost_fn: impl Fn(&LayerInfo, &Level) -> f64,
     ) -> Option<(f64, f64)> {
+        crate::span!("engine.solve");
         let mut level_lists: Vec<Vec<Level>> = Vec::new();
         let per_layer: Vec<Vec<Choice>> = layers
             .iter()

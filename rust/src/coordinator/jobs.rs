@@ -593,6 +593,12 @@ pub enum ControlOp {
     Health,
     /// Counter snapshot.
     Metrics,
+    /// Counter snapshot rendered as Prometheus-style text (returned in
+    /// the `text` field of a JSON line so the protocol stays
+    /// line-oriented).
+    MetricsProm,
+    /// Flight-recorder dump: the bounded ring of recent serving events.
+    Flight,
 }
 
 /// Admission priority class of a job (wire field `priority`).
@@ -650,6 +656,9 @@ pub enum Request {
         /// Opt-in streaming: per-layer/per-level `{"chunk":...}` progress
         /// lines ahead of the final response.
         stream: bool,
+        /// Opt-in profiling: the response carries a `profile` object
+        /// with per-phase wall-ns for this job's execution.
+        profile: bool,
     },
     Control(ControlOp),
 }
@@ -662,6 +671,8 @@ impl Request {
             "shutdown" => Ok(Request::Control(ControlOp::Shutdown)),
             "health" => Ok(Request::Control(ControlOp::Health)),
             "metrics" => Ok(Request::Control(ControlOp::Metrics)),
+            "metrics_prom" => Ok(Request::Control(ControlOp::MetricsProm)),
+            "flight" => Ok(Request::Control(ControlOp::Flight)),
             _ => Ok(Request::Job {
                 id: j.get("id").and_then(|v| v.as_str()).map(|s| s.to_string()),
                 model: j.req_str("model")?.to_string(),
@@ -707,6 +718,12 @@ impl Request {
                     Some(v) => v
                         .as_bool()
                         .ok_or_else(|| crate::err!("field 'stream' must be a boolean"))?,
+                },
+                profile: match j.get("profile") {
+                    None => false,
+                    Some(v) => v
+                        .as_bool()
+                        .ok_or_else(|| crate::err!("field 'profile' must be a boolean"))?,
                 },
             }),
         }
@@ -922,7 +939,17 @@ mod tests {
         )
         .unwrap();
         match r {
-            Request::Job { id, model, spec, deadline_ms, priority, precision, tenant, stream } => {
+            Request::Job {
+                id,
+                model,
+                spec,
+                deadline_ms,
+                priority,
+                precision,
+                tenant,
+                stream,
+                profile,
+            } => {
                 assert_eq!(id.as_deref(), Some("j1"));
                 assert_eq!(model, "rneta");
                 assert_eq!(spec.op(), "prune");
@@ -931,6 +958,7 @@ mod tests {
                 assert_eq!(precision, None);
                 assert_eq!(tenant, None);
                 assert!(!stream);
+                assert!(!profile);
             }
             _ => panic!("expected a job"),
         }
@@ -954,6 +982,10 @@ mod tests {
             }
             _ => panic!("expected a job"),
         }
+        match Request::parse_line(r#"{"model":"m","op":"dense","profile":true}"#).unwrap() {
+            Request::Job { profile, .. } => assert!(profile),
+            _ => panic!("expected a job"),
+        }
         match Request::parse_line(
             r#"{"model":"m","op":"dense","precision":"mixed"}"#,
         )
@@ -972,6 +1004,7 @@ mod tests {
             r#"{"model":"m","op":"dense","stream":"yes"}"#,
             r#"{"model":"m","op":"dense","precision":"half"}"#,
             r#"{"model":"m","op":"dense","precision":64}"#,
+            r#"{"model":"m","op":"dense","profile":"yes"}"#,
         ] {
             assert!(Request::parse_line(bad).is_err(), "'{bad}' must be rejected");
         }
@@ -986,6 +1019,14 @@ mod tests {
         assert_eq!(
             Request::parse_line(r#"{"op":"metrics"}"#).unwrap(),
             Request::Control(ControlOp::Metrics)
+        );
+        assert_eq!(
+            Request::parse_line(r#"{"op":"metrics_prom"}"#).unwrap(),
+            Request::Control(ControlOp::MetricsProm)
+        );
+        assert_eq!(
+            Request::parse_line(r#"{"op":"flight"}"#).unwrap(),
+            Request::Control(ControlOp::Flight)
         );
     }
 

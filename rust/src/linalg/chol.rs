@@ -207,6 +207,7 @@ const CHOL_BLOCKED_MIN: usize = 128;
 /// with `i` the true failing row.
 pub fn cholesky_blocked(a: &Mat) -> crate::util::error::Result<Mat> {
     crate::ensure!(a.rows == a.cols, "cholesky needs a square matrix");
+    crate::span!("linalg.cholesky");
     let n = a.rows;
     let mut w = a.clone();
     let d = &mut w.data;
@@ -300,6 +301,7 @@ pub fn cholesky_blocked(a: &Mat) -> crate::util::error::Result<Mat> {
 /// pivots report the same true-row error shape.
 pub fn cholesky_blocked_mixed(a: &Mat) -> crate::util::error::Result<Mat> {
     crate::ensure!(a.rows == a.cols, "cholesky needs a square matrix");
+    crate::span!("linalg.cholesky");
     let n = a.rows;
     let mut w = a.clone();
     let d = &mut w.data;
@@ -399,6 +401,7 @@ pub fn cholesky_blocked_mixed(a: &Mat) -> crate::util::error::Result<Mat> {
 /// choice); small ones keep the scalar factor bit-for-bit.
 pub fn cholesky_inverse(a: &Mat) -> crate::util::error::Result<Mat> {
     use crate::util::precision::{global_precision, Precision};
+    crate::span!("linalg.cholesky");
     let l = if a.rows >= CHOL_BLOCKED_MIN {
         match global_precision() {
             Precision::Mixed => cholesky_blocked_mixed(a)?,

@@ -119,6 +119,12 @@ fn main() -> obc::util::Result<()> {
             "serve: per-connection streaming-chunk outbox bound",
             Some("256"),
         ),
+        opt(
+            "metrics-addr",
+            "serve: plaintext HTTP endpoint for GET /metrics (Prometheus text)",
+            None,
+        ),
+        opt("no-profiles", "serve: disable per-phase span collection", None),
         opt("kind", "db kind (sparsity|mixed_gpu|mixed_gpu_baseline|cpu)", Some("sparsity")),
         opt("grid", "db: comma-separated sparsity grid (default Eq. 10)", None),
         opt("out", "db export: output snapshot file", None),
@@ -168,6 +174,8 @@ fn main() -> obc::util::Result<()> {
                     .map(std::time::Duration::from_millis),
                 tenant_max_in_flight: args.get("tenant-cap").and_then(|v| v.parse().ok()),
                 chunk_outbox: args.usize_or("chunk-outbox", obc::server::DEFAULT_CHUNK_OUTBOX),
+                collect_profiles: !args.flag("no-profiles"),
+                metrics_addr: args.get("metrics-addr").map(String::from),
             };
             if let Some(dir) = &cfg.store_dir {
                 eprintln!("obc serve: durable databases in {}", dir.display());

@@ -1,0 +1,159 @@
+//! Flight recorder: a bounded process-global ring buffer of serving
+//! events — job lifecycle transitions, shed/deadline/overload
+//! rejections, faultpoint fires, store quarantine/degrade, batch-group
+//! formation — so a chaos-run failure or a production incident reads as
+//! a timeline instead of a counter diff.
+//!
+//! Capacity is fixed ([`CAPACITY`], 4096 events): recording is O(1), old
+//! events are overwritten, and a dump is always bounded. Events carry a
+//! strictly increasing sequence number and a millisecond timestamp
+//! relative to the first recorded event, both assigned under the ring's
+//! mutex so the dumped order is the recorded order. Dump it live with
+//! the `flight` control op (`ControlOp::Flight`), or find it on stderr
+//! after a worker panic / at shutdown (debug level).
+
+use crate::util::json::Json;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Ring capacity (events). Old events are overwritten once full.
+pub const CAPACITY: usize = 4096;
+
+/// One recorded event.
+#[derive(Clone)]
+pub struct Event {
+    /// Strictly increasing across the process (never reset, so a dump
+    /// reveals how many events were overwritten: `seq[0] > 1`).
+    pub seq: u64,
+    /// Milliseconds since the recorder's first event.
+    pub t_ms: f64,
+    /// Stable dotted kind, e.g. "job.accept", "store.quarantine".
+    pub kind: &'static str,
+    /// Free-form human-readable context (job seq, model, reason, ...).
+    pub detail: String,
+}
+
+struct Ring {
+    events: std::collections::VecDeque<Event>,
+    next_seq: u64,
+    recorded: u64,
+}
+
+fn ring() -> &'static Mutex<Ring> {
+    static RING: OnceLock<Mutex<Ring>> = OnceLock::new();
+    RING.get_or_init(|| {
+        Mutex::new(Ring {
+            events: std::collections::VecDeque::with_capacity(CAPACITY),
+            next_seq: 1,
+            recorded: 0,
+        })
+    })
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Record one event. Cheap (one mutex lock + one String); call it from
+/// lifecycle transitions, not per-element compute loops.
+pub fn note(kind: &'static str, detail: impl Into<String>) {
+    let t_ms = epoch().elapsed().as_secs_f64() * 1e3;
+    let mut r = ring().lock().unwrap();
+    let seq = r.next_seq;
+    r.next_seq += 1;
+    r.recorded += 1;
+    if r.events.len() == CAPACITY {
+        r.events.pop_front();
+    }
+    r.events.push_back(Event { seq, t_ms, kind, detail: detail.into() });
+}
+
+/// Snapshot the ring, oldest first.
+pub fn snapshot() -> Vec<Event> {
+    ring().lock().unwrap().events.iter().cloned().collect()
+}
+
+/// Total events ever recorded (including overwritten ones).
+pub fn recorded_total() -> u64 {
+    ring().lock().unwrap().recorded
+}
+
+/// `{"capacity":N,"recorded":M,"events":[{seq,t_ms,kind,detail},..]}`
+/// with events oldest-first.
+pub fn to_json() -> Json {
+    let events = snapshot();
+    let mut arr = Vec::with_capacity(events.len());
+    for e in events {
+        let mut o = Json::obj();
+        o.set("seq", e.seq as f64)
+            .set("t_ms", e.t_ms)
+            .set("kind", e.kind)
+            .set("detail", e.detail);
+        arr.push(o);
+    }
+    let mut out = Json::obj();
+    out.set("capacity", CAPACITY as f64)
+        .set("recorded", recorded_total() as f64)
+        .set("events", Json::Arr(arr));
+    out
+}
+
+/// Dump the ring to stderr (one line per event), prefixed with `why` —
+/// the automatic post-mortem on worker panic and at shutdown.
+pub fn dump_to_stderr(why: &str) {
+    let events = snapshot();
+    let mut out = String::new();
+    out.push_str(&format!("[obc-flight] dump ({why}): {} events\n", events.len()));
+    for e in events {
+        out.push_str(&format!(
+            "[obc-flight] #{} +{:.3}ms {} {}\n",
+            e.seq, e.t_ms, e.kind, e.detail
+        ));
+    }
+    eprint!("{out}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The recorder is process-global and other server tests write to it
+    // concurrently, so these assertions filter on unique detail markers
+    // instead of assuming exclusive ownership.
+    #[test]
+    fn events_are_ordered_and_bounded() {
+        for i in 0..10 {
+            note("test.flight", format!("ordered-marker-{i}"));
+        }
+        let evs: Vec<Event> = snapshot()
+            .into_iter()
+            .filter(|e| e.detail.starts_with("ordered-marker-"))
+            .collect();
+        assert!(evs.len() >= 10, "own events visible (ring holds {CAPACITY})");
+        for w in evs.windows(2) {
+            assert!(w[0].seq < w[1].seq, "seq strictly increasing");
+            assert!(w[0].t_ms <= w[1].t_ms, "time nondecreasing");
+        }
+        assert!(snapshot().len() <= CAPACITY);
+        assert!(recorded_total() >= 10);
+    }
+
+    #[test]
+    fn json_shape_round_trips() {
+        note("test.flight", "json-marker");
+        let j = to_json();
+        assert_eq!(j.get("capacity").unwrap().as_f64().unwrap() as usize, CAPACITY);
+        let events = j.get("events").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        let found = events.iter().any(|e| {
+            e.get("kind").unwrap().as_str() == Some("test.flight")
+                && e.get("detail").unwrap().as_str() == Some("json-marker")
+        });
+        assert!(found, "recorded event present in JSON dump");
+        for e in events {
+            assert!(e.get("seq").unwrap().as_f64().unwrap() >= 1.0);
+            assert!(e.get("t_ms").unwrap().as_f64().unwrap() >= 0.0);
+        }
+    }
+}

@@ -1,4 +1,7 @@
-//! Server counters: per-job timing, queue depth, outcome counts.
+//! Server counters: per-job timing, queue depth, outcome counts, and
+//! lock-free log2-bucketed latency histograms (queue wait + execution,
+//! keyed by priority class and job kind) with p50/p95/p99 computed at
+//! snapshot time.
 //!
 //! All fields are relaxed atomics — metrics reads race job completion by
 //! design (a snapshot, not a transaction). Durations accumulate as
@@ -6,6 +9,84 @@
 
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// log2 histogram resolution: bucket `i` counts observations in
+/// `[2^i, 2^(i+1))` ns (observations of 0 ns land in bucket 0); the last
+/// bucket absorbs everything ≥ 2^41 ns (≈ 37 minutes).
+pub const HIST_BUCKETS: usize = 42;
+
+/// Priority classes a histogram is keyed by (order is the index).
+pub const HIST_CLASSES: [&str; 2] = ["interactive", "batch"];
+
+/// Job kinds a histogram is keyed by (`JobSpec::op()` tokens; order is
+/// the index).
+pub const HIST_KINDS: [&str; 7] = ["dense", "prune", "nm", "quant", "joint", "db", "solve"];
+
+/// One lock-free latency histogram: log2 ns buckets + count + sum.
+/// Writers race readers by design; a snapshot is consistent enough for
+/// percentiles (counts only ever grow).
+pub struct Histo {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histo {
+    fn default() -> Self {
+        Histo {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histo {
+    fn observe_ns(&self, ns: u64) {
+        let b = (63 - ns.max(1).leading_zeros() as u64) as usize;
+        self.buckets[b.min(HIST_BUCKETS - 1)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Nearest-rank quantile over the bucket snapshot, reported as the
+    /// bucket's exclusive upper bound in ns (`None` when empty). Ranks
+    /// are computed against the buckets' own total, so a racing writer
+    /// can never push the rank past the last counted observation.
+    pub fn quantile_ns(&self, q: f64) -> Option<u64> {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(1u64 << (i + 1).min(63));
+            }
+        }
+        Some(1u64 << HIST_BUCKETS.min(63))
+    }
+
+    /// `{count, sum_ns, p50_ns, p95_ns, p99_ns}`.
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("count", self.count() as f64)
+            .set("sum_ns", self.sum_ns.load(Ordering::Relaxed) as f64);
+        for (key, q) in [("p50_ns", 0.5), ("p95_ns", 0.95), ("p99_ns", 0.99)] {
+            if let Some(ns) = self.quantile_ns(q) {
+                o.set(key, ns as f64);
+            }
+        }
+        o
+    }
+}
 
 #[derive(Default)]
 pub struct Metrics {
@@ -53,6 +134,17 @@ pub struct Metrics {
     pub jobs_f64: AtomicU64,
     queue_ns: AtomicU64,
     exec_ns: AtomicU64,
+    /// Latency histograms `[family][class][kind]`: family 0 = queue
+    /// wait, family 1 = execution.
+    hist: [[[Histo; HIST_KINDS.len()]; HIST_CLASSES.len()]; 2],
+}
+
+fn class_index(class: &str) -> usize {
+    HIST_CLASSES.iter().position(|c| *c == class).unwrap_or(0)
+}
+
+fn kind_index(kind: &str) -> usize {
+    HIST_KINDS.iter().position(|k| *k == kind).unwrap_or(0)
 }
 
 impl Metrics {
@@ -62,15 +154,64 @@ impl Metrics {
     }
 
     /// Record one finished job (including coalesced deliveries: their
-    /// queue wait is real even though they never executed).
-    pub fn observe_job(&self, queue_s: f64, exec_s: f64, ok: bool) {
+    /// queue wait is real even though they never executed). `class` is a
+    /// priority token ("interactive"/"batch") and `kind` a
+    /// `JobSpec::op()` token — unknown values fold into the first cell
+    /// rather than being dropped.
+    pub fn observe_job(&self, queue_s: f64, exec_s: f64, ok: bool, class: &str, kind: &str) {
         if ok {
             self.completed.fetch_add(1, Ordering::Relaxed);
         } else {
             self.failed.fetch_add(1, Ordering::Relaxed);
         }
-        self.queue_ns.fetch_add((queue_s * 1e9) as u64, Ordering::Relaxed);
-        self.exec_ns.fetch_add((exec_s * 1e9) as u64, Ordering::Relaxed);
+        let queue_ns = (queue_s * 1e9) as u64;
+        let exec_ns = (exec_s * 1e9) as u64;
+        self.queue_ns.fetch_add(queue_ns, Ordering::Relaxed);
+        self.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
+        let (ci, ki) = (class_index(class), kind_index(kind));
+        self.hist[0][ci][ki].observe_ns(queue_ns);
+        self.hist[1][ci][ki].observe_ns(exec_ns);
+    }
+
+    /// Direct access to one histogram cell (family "queue"/"exec").
+    pub fn histogram(&self, family: &str, class: &str, kind: &str) -> &Histo {
+        let fi = usize::from(family == "exec");
+        &self.hist[fi][class_index(class)][kind_index(kind)]
+    }
+
+    /// Total observations across one family's cells.
+    pub fn hist_total(&self, family: &str) -> u64 {
+        let fi = usize::from(family == "exec");
+        self.hist[fi].iter().flatten().map(|h| h.count()).sum()
+    }
+
+    /// The `latency` snapshot subtree: `{family: {class: {kind:
+    /// {count,sum_ns,p50_ns,p95_ns,p99_ns}}}}`, non-empty cells only.
+    fn latency_json(&self) -> Json {
+        let mut fam = Json::obj();
+        for (fi, fname) in ["queue", "exec"].iter().enumerate() {
+            let mut classes = Json::obj();
+            for (ci, cname) in HIST_CLASSES.iter().enumerate() {
+                let mut kinds = Json::obj();
+                for (ki, kname) in HIST_KINDS.iter().enumerate() {
+                    let h = &self.hist[fi][ci][ki];
+                    if h.count() > 0 {
+                        kinds.set(kname, h.to_json());
+                    }
+                }
+                if let Json::Obj(m) = &kinds {
+                    if !m.is_empty() {
+                        classes.set(cname, kinds);
+                    }
+                }
+            }
+            if let Json::Obj(m) = &classes {
+                if !m.is_empty() {
+                    fam.set(fname, classes);
+                }
+            }
+        }
+        fam
     }
 
     pub fn to_json(&self) -> Json {
@@ -107,8 +248,47 @@ impl Metrics {
             .set("jobs_mixed", self.jobs_mixed.load(Ordering::Relaxed) as f64)
             .set("jobs_f64", self.jobs_f64.load(Ordering::Relaxed) as f64)
             .set("queue_seconds_total", self.queue_ns.load(Ordering::Relaxed) as f64 / 1e9)
-            .set("exec_seconds_total", self.exec_ns.load(Ordering::Relaxed) as f64 / 1e9);
+            .set("exec_seconds_total", self.exec_ns.load(Ordering::Relaxed) as f64 / 1e9)
+            .set("latency", self.latency_json());
         o
+    }
+}
+
+/// Render a metrics snapshot (the JSON the `metrics` op returns) as
+/// Prometheus-style text exposition: every numeric leaf becomes one
+/// `obc_<path> <value>` line (booleans as 0/1), nested object keys
+/// joined with `_` and sanitized to `[a-zA-Z0-9_]`. Because the text is
+/// generated by walking the snapshot itself, every counter in the JSON
+/// is present as a series by construction (asserted by the round-trip
+/// test). Strings and arrays are skipped.
+pub fn render_prometheus(snapshot: &Json) -> String {
+    let mut out = String::new();
+    render_walk(snapshot, "obc", &mut out);
+    out
+}
+
+fn render_walk(j: &Json, prefix: &str, out: &mut String) {
+    match j {
+        Json::Obj(m) => {
+            for (k, v) in m {
+                let seg: String = k
+                    .chars()
+                    .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+                    .collect();
+                render_walk(v, &format!("{prefix}_{seg}"), out);
+            }
+        }
+        Json::Num(n) => {
+            out.push_str(prefix);
+            out.push(' ');
+            out.push_str(&n.to_string());
+            out.push('\n');
+        }
+        Json::Bool(b) => {
+            out.push_str(prefix);
+            out.push_str(if *b { " 1\n" } else { " 0\n" });
+        }
+        _ => {}
     }
 }
 
@@ -123,8 +303,8 @@ mod tests {
         m.observe_depth(2);
         m.observe_depth(5);
         m.observe_depth(1);
-        m.observe_job(0.25, 1.5, true);
-        m.observe_job(0.75, 0.5, false);
+        m.observe_job(0.25, 1.5, true, "interactive", "dense");
+        m.observe_job(0.75, 0.5, false, "batch", "prune");
         let j = m.to_json();
         assert_eq!(j.get("jobs_submitted").unwrap().as_f64().unwrap(), 3.0);
         assert_eq!(j.get("jobs_completed").unwrap().as_f64().unwrap(), 1.0);
@@ -134,6 +314,147 @@ mod tests {
         assert!((qs - 1.0).abs() < 1e-6, "{qs}");
         let es = j.get("exec_seconds_total").unwrap().as_f64().unwrap();
         assert!((es - 2.0).abs() < 1e-6, "{es}");
+        // Histograms filed under the right class/kind cells.
+        let lat = j.get("latency").unwrap();
+        let cell = lat.get("exec").unwrap().get("interactive").unwrap().get("dense").unwrap();
+        assert_eq!(cell.get("count").unwrap().as_f64().unwrap(), 1.0);
+        let cell = lat.get("queue").unwrap().get("batch").unwrap().get("prune").unwrap();
+        assert_eq!(cell.get("count").unwrap().as_f64().unwrap(), 1.0);
+        assert!(lat.get("exec").unwrap().get("batch").unwrap().get("dense").is_none());
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histo::default();
+        assert_eq!(h.quantile_ns(0.5), None, "empty histogram has no quantiles");
+        // 1000ns lands in bucket floor(log2(1000)) = 9, whose exclusive
+        // upper bound is 2^10 = 1024.
+        h.observe_ns(1_000);
+        assert_eq!(h.quantile_ns(0.5), Some(1 << 10));
+        // 90 observations at ~1ms dominate the upper quantiles.
+        for _ in 0..90 {
+            h.observe_ns(1_000_000);
+        }
+        assert_eq!(h.count(), 91);
+        let p50 = h.quantile_ns(0.5).unwrap();
+        let p95 = h.quantile_ns(0.95).unwrap();
+        let p99 = h.quantile_ns(0.99).unwrap();
+        assert_eq!(p50, 1 << 20, "floor(log2(1e6))=19, upper bound 2^20");
+        assert!(p50 <= p95 && p95 <= p99, "quantiles monotone: {p50} {p95} {p99}");
+        // Zero and huge observations clamp into the first/last buckets.
+        h.observe_ns(0);
+        h.observe_ns(u64::MAX);
+        assert_eq!(h.count(), 93);
+    }
+
+    /// Concurrent writers racing a snapshotting reader: totals
+    /// reconcile afterwards, every intermediate snapshot is internally
+    /// sane (counts never exceed the final total, percentile ranks
+    /// monotone).
+    #[test]
+    fn concurrent_observers_reconcile_with_reader() {
+        use std::sync::atomic::AtomicBool;
+        const THREADS: usize = 4;
+        const PER_THREAD: usize = 500;
+        let m = Metrics::default();
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|sc| {
+            let writers: Vec<_> = (0..THREADS)
+                .map(|t| {
+                    let m = &m;
+                    sc.spawn(move || {
+                        for i in 0..PER_THREAD {
+                            let class = HIST_CLASSES[i % 2];
+                            let kind = HIST_KINDS[(t + i) % HIST_KINDS.len()];
+                            let exec_s = 1e-6 * (1 + i % 7) as f64;
+                            m.observe_job(1e-7, exec_s, i % 5 != 0, class, kind);
+                        }
+                    })
+                })
+                .collect();
+            let m = &m;
+            let stop = &stop;
+            sc.spawn(move || {
+                let total = (THREADS * PER_THREAD) as u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let j = m.to_json();
+                    let done = j.get("jobs_completed").unwrap().as_f64().unwrap()
+                        + j.get("jobs_failed").unwrap().as_f64().unwrap();
+                    assert!(done <= total as f64, "snapshot overshoots: {done}");
+                    assert!(m.hist_total("exec") <= total);
+                    for (p_lo, p_hi) in [(0.5, 0.95), (0.95, 0.99)] {
+                        for class in HIST_CLASSES {
+                            for kind in HIST_KINDS {
+                                let h = m.histogram("exec", class, kind);
+                                if let (Some(lo), Some(hi)) =
+                                    (h.quantile_ns(p_lo), h.quantile_ns(p_hi))
+                                {
+                                    assert!(lo <= hi, "ranks monotone mid-race");
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+            // Keep the reader racing until every writer has finished.
+            for w in writers {
+                w.join().unwrap();
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+        let total = (THREADS * PER_THREAD) as u64;
+        let done = m.completed.load(Ordering::Relaxed) + m.failed.load(Ordering::Relaxed);
+        assert_eq!(done, total, "every observation landed");
+        assert_eq!(m.hist_total("exec"), total, "exec histogram count == jobs observed");
+        assert_eq!(m.hist_total("queue"), total, "queue histogram count == jobs observed");
+    }
+
+    /// Every numeric counter in the JSON snapshot must appear in the
+    /// Prometheus rendering — no silently missing series.
+    #[test]
+    fn prometheus_rendering_round_trips_every_counter() {
+        let m = Metrics::default();
+        m.submitted.fetch_add(7, Ordering::Relaxed);
+        m.observe_depth(3);
+        m.observe_job(0.001, 0.01, true, "interactive", "db");
+        m.observe_job(0.002, 0.02, true, "batch", "solve");
+        m.observe_job(0.004, 0.04, false, "batch", "prune");
+        let mut snap = m.to_json();
+        snap.set("store_degraded", Json::Bool(true)); // exercise bool leaves
+        let text = render_prometheus(&snap);
+        let mut leaves = Vec::new();
+        collect_leaves(&snap, "obc".to_string(), &mut leaves);
+        assert!(!leaves.is_empty());
+        for (name, want) in leaves {
+            let line = text
+                .lines()
+                .find(|l| l.split(' ').next() == Some(name.as_str()))
+                .unwrap_or_else(|| panic!("series {name} missing from:\n{text}"));
+            let got: f64 = line.split(' ').nth(1).unwrap().parse().unwrap();
+            assert_eq!(got, want, "{name}");
+        }
+        // Spot-check a deep histogram path rendered with sanitized name.
+        assert!(
+            text.contains("obc_latency_exec_interactive_db_count 1"),
+            "histogram cell series present:\n{text}"
+        );
+    }
+
+    fn collect_leaves(j: &Json, prefix: String, out: &mut Vec<(String, f64)>) {
+        match j {
+            Json::Obj(m) => {
+                for (k, v) in m {
+                    let seg: String = k
+                        .chars()
+                        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+                        .collect();
+                    collect_leaves(v, format!("{prefix}_{seg}"), out);
+                }
+            }
+            Json::Num(n) => out.push((prefix, *n)),
+            Json::Bool(b) => out.push((prefix, if *b { 1.0 } else { 0.0 })),
+            _ => {}
+        }
     }
 
     #[test]

@@ -36,8 +36,16 @@
 //!   `examples/serve_compress.rs` and `obc serve`, plus a TCP edition
 //!   ([`net::serve_tcp`], `obc serve --listen ADDR`) running the same
 //!   protocol over per-connection reader threads into the one shared
-//!   queue.
+//!   queue;
+//! * **observability**: per-job phase profiles ([`crate::util::trace`],
+//!   opt-in `"profile":true` on the wire) aggregated per model,
+//!   log2-bucketed queue/exec latency histograms with p50/p95/p99
+//!   ([`metrics::Histo`]), a Prometheus text rendering
+//!   (`{"op":"metrics_prom"}` and `--metrics-addr` HTTP GET /metrics),
+//!   and a bounded [`flight`] recorder of recent serving events
+//!   (`{"op":"flight"}`), dumped to stderr on worker panic.
 
+pub mod flight;
 pub mod metrics;
 pub mod net;
 pub mod queue;
@@ -108,6 +116,15 @@ pub struct ServerConfig {
     /// enqueued but not yet written): past it chunks are dropped, never
     /// buffered, so a slow streaming reader cannot balloon memory.
     pub chunk_outbox: usize,
+    /// Collect per-phase execution profiles ([`crate::util::trace`])
+    /// for every job and aggregate them per model. Default on; turn off
+    /// to run jobs with the span collector disarmed (zero tracing
+    /// overhead — used by the overhead benchmark).
+    pub collect_profiles: bool,
+    /// Optional plaintext-HTTP metrics endpoint (`HOST:PORT`): GET
+    /// /metrics answers the Prometheus rendering of the counter
+    /// snapshot. `None` (default) = no listener.
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -124,6 +141,8 @@ impl Default for ServerConfig {
             batch_window: None,
             tenant_max_in_flight: None,
             chunk_outbox: DEFAULT_CHUNK_OUTBOX,
+            collect_profiles: true,
+            metrics_addr: None,
         }
     }
 }
@@ -184,6 +203,10 @@ pub struct Response {
     /// carried one, else the server's global policy) — echoed so every
     /// response is auditable for which kernel tier produced it.
     pub precision: Precision,
+    /// Per-phase execution profile (`{"phase_ns":..,"phase_calls":..,
+    /// "total_ns":..}`) when the job opted in with `"profile":true` and
+    /// the server collects profiles. `None` for coalesced/rejected jobs.
+    pub profile: Option<Json>,
 }
 
 impl Response {
@@ -213,6 +236,9 @@ impl Response {
         }
         if self.coalesced {
             o.set("coalesced", true);
+        }
+        if let Some(p) = &self.profile {
+            o.set("profile", p.clone());
         }
         o
     }
@@ -304,6 +330,8 @@ pub struct JobOptions {
     pub tenant: Option<String>,
     /// Opt-in streaming progress chunks (needs a wire reply to matter).
     pub stream: bool,
+    /// Opt-in per-phase profile in the final response.
+    pub profile: bool,
 }
 
 struct QueuedJob {
@@ -325,6 +353,8 @@ struct QueuedJob {
     /// Tenant label, released from the per-tenant counter at delivery.
     tenant: Option<String>,
     stream: bool,
+    /// Echo the execution profile in this job's response.
+    profile: bool,
 }
 
 impl QueuedJob {
@@ -353,6 +383,10 @@ struct Inner {
     batch_window: Option<Duration>,
     tenant_cap: Option<usize>,
     chunk_outbox: usize,
+    collect_profiles: bool,
+    /// Per-model aggregate of every executed job's phase profile,
+    /// exposed as `"profiles"` in the metrics snapshot.
+    profiles: Mutex<BTreeMap<String, Arc<crate::util::trace::Profile>>>,
 }
 
 /// The running service: worker threads over a bounded queue.
@@ -389,8 +423,10 @@ impl CompressionServer {
             batch_window: cfg.batch_window,
             tenant_cap: cfg.tenant_max_in_flight,
             chunk_outbox: cfg.chunk_outbox.max(1),
+            collect_profiles: cfg.collect_profiles,
+            profiles: Mutex::new(BTreeMap::new()),
         });
-        let workers = (0..cfg.workers.max(1))
+        let mut workers: Vec<thread::JoinHandle<()>> = (0..cfg.workers.max(1))
             .map(|i| {
                 let inner = Arc::clone(&inner);
                 thread::Builder::new()
@@ -399,6 +435,31 @@ impl CompressionServer {
                     .expect("spawn server worker")
             })
             .collect();
+        // Fault-injection fires land in the flight recorder: a chaos
+        // drill's timeline shows WHERE faults hit between job events,
+        // not just the per-site totals in the metrics snapshot.
+        crate::util::faultpoint::set_fire_hook(|site| {
+            flight::note("fault.fire", format!("site {site}"));
+        });
+        // Best-effort Prometheus endpoint: a bind failure is logged and
+        // serving continues without it. The listener thread polls the
+        // queue's closed flag so `shutdown` can join it.
+        if let Some(addr) = cfg.metrics_addr {
+            match std::net::TcpListener::bind(&addr) {
+                Ok(listener) => {
+                    let inner = Arc::clone(&inner);
+                    let h = thread::Builder::new()
+                        .name("obc-serve-metrics".into())
+                        .spawn(move || serve_metrics_http(&inner, listener))
+                        .expect("spawn metrics listener");
+                    workers.push(h);
+                    crate::info!("server", "Prometheus metrics on http://{addr}/metrics");
+                }
+                Err(e) => {
+                    crate::warnlog!("server", "metrics endpoint disabled ({addr}): {e}");
+                }
+            }
+        }
         CompressionServer { inner, workers: Mutex::new(workers) }
     }
 
@@ -458,6 +519,7 @@ impl CompressionServer {
         let budget = opts.deadline.or(self.inner.default_deadline);
         let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed);
         let cost = spec.to_json().to_string_compact().len();
+        let op = spec.op();
         let class = opts.priority;
         let shed = |inner: &Inner, class: Priority, depth: usize| -> SubmitError {
             inner.metrics.shed.fetch_add(1, Ordering::Relaxed);
@@ -466,6 +528,7 @@ impl CompressionServer {
                 Priority::Batch => &inner.metrics.shed_batch,
             }
             .fetch_add(1, Ordering::Relaxed);
+            flight::note("job.shed", format!("seq {seq} class {} depth {depth}", class.token()));
             SubmitError::Overloaded {
                 depth,
                 in_flight_bytes: inner.in_flight_bytes.load(Ordering::Relaxed),
@@ -508,6 +571,7 @@ impl CompressionServer {
             precision: opts.precision,
             tenant: opts.tenant.clone(),
             stream: opts.stream,
+            profile: opts.profile,
         };
         // Batch-class jobs shed at half the interactive depth watermark,
         // keeping interactive headroom through saturation.
@@ -527,6 +591,10 @@ impl CompressionServer {
                 self.inner.metrics.submitted.fetch_add(1, Ordering::Relaxed);
                 self.inner.metrics.observe_depth(depth);
                 self.inner.in_flight_bytes.fetch_add(cost, Ordering::Relaxed);
+                flight::note(
+                    "job.accept",
+                    format!("seq {seq} model {model} op {} class {}", op, class.token()),
+                );
                 Ok(seq)
             }
             Err(Some(overloaded)) => {
@@ -536,6 +604,7 @@ impl CompressionServer {
             Err(None) => {
                 release_tenant(&self.inner, &opts.tenant);
                 self.inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                flight::note("job.reject", format!("seq {seq} model {model} shutdown"));
                 Err(SubmitError::Closed)
             }
         }
@@ -573,36 +642,104 @@ impl CompressionServer {
 
     /// Counter snapshot (`{"op":"metrics"}`).
     pub fn metrics_json(&self) -> Json {
-        let mut o = self.inner.metrics.to_json();
-        let (hits, misses, evictions) = self.inner.registry.db_cache_stats();
-        let st = self.inner.registry.store_stats();
-        o.set("ok", true)
-            .set("op", "metrics")
-            .set("calibrations", self.inner.registry.calibrations() as f64)
-            .set("db_cache_hits", hits as f64)
-            .set("db_cache_misses", misses as f64)
-            .set("db_cache_evictions", evictions as f64)
-            .set("db_cache_bytes", self.inner.registry.db_cache_bytes() as f64)
-            .set("db_builds", self.inner.registry.db_builds() as f64)
-            .set("store_hits", st.hits as f64)
-            .set("store_misses", st.misses as f64)
-            .set("store_stale_rejected", st.stale_rejected as f64)
-            .set("store_saves", st.saves as f64)
-            .set("store_quarantine_evictions", st.quarantine_evictions as f64)
-            .set("store_degraded", if st.degraded { 1.0 } else { 0.0 })
-            .set("store_load_seconds_total", st.load_seconds)
-            .set("in_flight_bytes", self.inner.in_flight_bytes.load(Ordering::Relaxed) as f64)
-            .set("queue_depth", self.queue_depth() as f64);
-        o
+        metrics_snapshot(&self.inner)
     }
 
     /// Graceful shutdown: refuse new jobs, drain accepted ones, join the
     /// workers. Every accepted job gets its response before this returns.
     pub fn shutdown(&self) {
+        if !self.inner.queue.is_closed() {
+            flight::note(
+                "server.shutdown",
+                format!("queue depth {} at close", self.inner.queue.len()),
+            );
+        }
         self.inner.queue.close();
         let mut workers = self.workers.lock().unwrap();
+        let had_workers = !workers.is_empty();
         for w in workers.drain(..) {
             let _ = w.join();
+        }
+        // Post-drain flight dump, debug level only (panic dumps are
+        // unconditional; a clean shutdown shouldn't spam stderr).
+        if had_workers && crate::util::logging::enabled(crate::util::logging::Level::Debug) {
+            flight::dump_to_stderr("shutdown");
+        }
+    }
+}
+
+/// The `{"op":"metrics"}` snapshot body (free function so the HTTP
+/// metrics listener, which only holds [`Inner`], can render it too).
+fn metrics_snapshot(inner: &Inner) -> Json {
+    let mut o = inner.metrics.to_json();
+    let (hits, misses, evictions) = inner.registry.db_cache_stats();
+    let st = inner.registry.store_stats();
+    o.set("ok", true)
+        .set("op", "metrics")
+        .set("calibrations", inner.registry.calibrations() as f64)
+        .set("db_cache_hits", hits as f64)
+        .set("db_cache_misses", misses as f64)
+        .set("db_cache_evictions", evictions as f64)
+        .set("db_cache_bytes", inner.registry.db_cache_bytes() as f64)
+        .set("db_builds", inner.registry.db_builds() as f64)
+        .set("store_hits", st.hits as f64)
+        .set("store_misses", st.misses as f64)
+        .set("store_stale_rejected", st.stale_rejected as f64)
+        .set("store_saves", st.saves as f64)
+        .set("store_quarantine_evictions", st.quarantine_evictions as f64)
+        .set("store_degraded", if st.degraded { 1.0 } else { 0.0 })
+        .set("store_load_seconds_total", st.load_seconds)
+        .set("in_flight_bytes", inner.in_flight_bytes.load(Ordering::Relaxed) as f64)
+        .set("queue_depth", inner.queue.len() as f64);
+    // Per-site fault-injection counters (always present; empty object
+    // when no faultpoint has ever been evaluated).
+    let mut faults = Json::obj();
+    for (site, checks, fires) in crate::util::faultpoint::site_counters() {
+        let mut s = Json::obj();
+        s.set("checks", checks as f64).set("fires", fires as f64);
+        faults.set(&site, s);
+    }
+    o.set("faults", faults);
+    // Per-model aggregate phase profiles.
+    let mut profiles = Json::obj();
+    for (model, prof) in inner.profiles.lock().unwrap().iter() {
+        profiles.set(model, prof.to_json());
+    }
+    o.set("profiles", profiles);
+    o
+}
+
+/// Minimal plaintext-HTTP loop for `GET /metrics`: one short-lived
+/// connection at a time, Prometheus text body. Polls accept so it can
+/// notice queue closure (= shutdown) and exit for the join.
+fn serve_metrics_http(inner: &Inner, listener: std::net::TcpListener) {
+    use std::io::Read as _;
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    while !inner.queue.is_closed() {
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                // Drain (and ignore) the request head; the endpoint
+                // serves exactly one document.
+                let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+                let _ = stream.set_nonblocking(false);
+                let mut head = [0u8; 1024];
+                let _ = stream.read(&mut head);
+                let body = metrics::render_prometheus(&metrics_snapshot(inner));
+                let resp = format!(
+                    "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+                     Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+                    body.len(),
+                    body
+                );
+                let _ = stream.write_all(resp.as_bytes());
+                let _ = stream.flush();
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(25)),
         }
     }
 }
@@ -664,6 +801,10 @@ fn run_group(inner: &Arc<Inner>, members: Vec<QueuedJob>) {
     inner.metrics.batch_occupancy_peak.fetch_max(n, Ordering::Relaxed);
     if n >= 2 {
         inner.metrics.batch_groups.fetch_add(1, Ordering::Relaxed);
+        flight::note(
+            "batch.group",
+            format!("{n} members model {} leader seq {}", members[0].model, members[0].seq),
+        );
         ensure_union_db(inner, &members);
     }
     let mut outcomes: BTreeMap<String, Result<JobResult, String>> = BTreeMap::new();
@@ -681,9 +822,9 @@ fn run_group(inner: &Arc<Inner>, members: Vec<QueuedJob>) {
         let Some(job) = reject_if_expired(inner, job) else { continue };
         let queue_s = job.enqueued.elapsed().as_secs_f64();
         let t0 = Instant::now();
-        let outcome = execute_checked(inner, &job);
+        let (outcome, profile) = execute_checked(inner, &job);
         let exec_s = t0.elapsed().as_secs_f64();
-        deliver(inner, job, &outcome, queue_s, exec_s, false);
+        deliver(inner, job, &outcome, queue_s, exec_s, false, profile);
         outcomes.insert(key, outcome);
     }
 }
@@ -705,10 +846,10 @@ fn run_single(inner: &Arc<Inner>, job: QueuedJob) {
     }
     let queue_s = job.enqueued.elapsed().as_secs_f64();
     let t0 = Instant::now();
-    let outcome = execute_checked(inner, &job);
+    let (outcome, profile) = execute_checked(inner, &job);
     let exec_s = t0.elapsed().as_secs_f64();
     let waiters = inner.inflight.lock().unwrap().remove(&key).unwrap_or_default();
-    deliver(inner, job, &outcome, queue_s, exec_s, false);
+    deliver(inner, job, &outcome, queue_s, exec_s, false, profile);
     for w in waiters {
         deliver_shared(inner, w, &outcome);
     }
@@ -723,15 +864,23 @@ fn reject_if_expired(inner: &Inner, job: QueuedJob) -> Option<QueuedJob> {
             "{} before execution (spent {queue_s:.3}s queued)",
             deadline::EXCEEDED
         ));
-        deliver(inner, job, &outcome, queue_s, 0.0, false);
+        deliver(inner, job, &outcome, queue_s, 0.0, false, None);
         return None;
     }
     Some(job)
 }
 
-/// Run one job with panic isolation, its own deadline scope, and (for
-/// streaming jobs) its progress sink installed.
-fn execute_checked(inner: &Arc<Inner>, job: &QueuedJob) -> Result<JobResult, String> {
+/// Run one job with panic isolation, its own deadline scope, a span
+/// collector (when the server profiles), and (for streaming jobs) its
+/// progress sink installed. Returns the outcome plus the profile JSON
+/// when the job opted in with `profile:true`.
+fn execute_checked(
+    inner: &Arc<Inner>,
+    job: &QueuedJob,
+) -> (Result<JobResult, String>, Option<Json>) {
+    let prof = inner
+        .collect_profiles
+        .then(|| Arc::new(crate::util::trace::Profile::new()));
     let _p = progress::set(chunk_sink(inner, job));
     // Per-precision accounting + the job's compute-tier override,
     // installed thread-locally for the execution scope so the sweep
@@ -742,27 +891,49 @@ fn execute_checked(inner: &Arc<Inner>, job: &QueuedJob) -> Result<JobResult, Str
     }
     .fetch_add(1, Ordering::Relaxed);
     let _tier = job.precision.map(override_precision);
-    // A panicking kernel (e.g. an unsupported method/pattern combo)
-    // must become an error response, not a dead worker.
-    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        // Execution checkpoints (registry, per-layer loops) read
-        // the deadline from thread-local scope.
-        deadline::with_deadline(job.deadline, || {
-            inner
-                .registry
-                .get(&job.model)
-                .and_then(|engine| jobs::execute(&engine, &job.spec))
+    let outcome = {
+        // Collector + root span for the whole execution: unspanned time
+        // lands in "other", so Σ phase_ns tracks exec wall time.
+        let _t = crate::util::trace::set(prof.clone());
+        crate::span!("other");
+        // A panicking kernel (e.g. an unsupported method/pattern combo)
+        // must become an error response, not a dead worker.
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // Execution checkpoints (registry, per-layer loops) read
+            // the deadline from thread-local scope.
+            deadline::with_deadline(job.deadline, || {
+                inner
+                    .registry
+                    .get(&job.model)
+                    .and_then(|engine| jobs::execute(&engine, &job.spec))
+            })
+        }))
+        .unwrap_or_else(|p| {
+            let msg = p
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| p.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic payload>");
+            flight::note(
+                "job.panic",
+                format!("seq {} model {} op {}: {msg}", job.seq, job.model, job.spec.op()),
+            );
+            flight::dump_to_stderr("worker panic");
+            Err(crate::err!("job panicked: {msg}"))
         })
-    }))
-    .unwrap_or_else(|p| {
-        let msg = p
-            .downcast_ref::<String>()
-            .map(String::as_str)
-            .or_else(|| p.downcast_ref::<&str>().copied())
-            .unwrap_or("<non-string panic payload>");
-        Err(crate::err!("job panicked: {msg}"))
-    })
-    .map_err(|e| e.to_string())
+        .map_err(|e| e.to_string())
+    };
+    let profile_json = prof.map(|p| {
+        inner
+            .profiles
+            .lock()
+            .unwrap()
+            .entry(job.model.clone())
+            .or_insert_with(|| Arc::new(crate::util::trace::Profile::new()))
+            .merge_from(&p);
+        p.to_json()
+    });
+    (outcome, if job.profile { profile_json } else { None })
 }
 
 /// Build the progress sink for a streaming wire job: augments each
@@ -877,6 +1048,7 @@ fn deliver(
     queue_s: f64,
     exec_s: f64,
     coalesced: bool,
+    profile: Option<Json>,
 ) {
     inner.in_flight_bytes.fetch_sub(job.cost, Ordering::Relaxed);
     release_tenant(inner, &job.tenant);
@@ -887,7 +1059,29 @@ fn deliver(
             }
         }
     }
-    inner.metrics.observe_job(queue_s, exec_s, outcome.is_ok());
+    inner.metrics.observe_job(queue_s, exec_s, outcome.is_ok(), job.priority.token(), job.spec.op());
+    // Terminal flight event: every accepted job gets exactly one of
+    // done/deadline/fail, pairing with its job.accept.
+    match outcome {
+        Ok(_) => flight::note(
+            "job.done",
+            format!(
+                "seq {} model {} op {} exec_s {exec_s:.3}{}",
+                job.seq,
+                job.model,
+                job.spec.op(),
+                if coalesced { " coalesced" } else { "" }
+            ),
+        ),
+        Err(msg) if msg.starts_with(deadline::EXCEEDED) => flight::note(
+            "job.deadline",
+            format!("seq {} model {} op {}", job.seq, job.model, job.spec.op()),
+        ),
+        Err(_) => flight::note(
+            "job.fail",
+            format!("seq {} model {} op {}", job.seq, job.model, job.spec.op()),
+        ),
+    }
     let precision = job.resolved_precision();
     job.reply.send_final(Response {
         seq: job.seq,
@@ -898,6 +1092,7 @@ fn deliver(
         exec_s,
         coalesced,
         precision,
+        profile,
     });
 }
 
@@ -966,7 +1161,29 @@ where
             }
             Ok(Request::Control(ControlOp::Health)) => write_line(&server.health_json())?,
             Ok(Request::Control(ControlOp::Metrics)) => write_line(&server.metrics_json())?,
-            Ok(Request::Job { id, model, spec, deadline_ms, priority, precision, tenant, stream }) => {
+            Ok(Request::Control(ControlOp::MetricsProm)) => {
+                let mut o = Json::obj();
+                o.set("ok", true)
+                    .set("op", "metrics_prom")
+                    .set("text", metrics::render_prometheus(&server.metrics_json()));
+                write_line(&o)?
+            }
+            Ok(Request::Control(ControlOp::Flight)) => {
+                let mut o = flight::to_json();
+                o.set("ok", true).set("op", "flight");
+                write_line(&o)?
+            }
+            Ok(Request::Job {
+                id,
+                model,
+                spec,
+                deadline_ms,
+                priority,
+                precision,
+                tenant,
+                stream,
+                profile,
+            }) => {
                 let opts = JobOptions {
                     client_id: id.clone(),
                     deadline: deadline_ms.map(Duration::from_millis),
@@ -974,6 +1191,7 @@ where
                     precision,
                     tenant,
                     stream,
+                    profile,
                 };
                 if let Err(e) = server.submit_wire(&model, spec, opts, wire.clone()) {
                     let mut o = Json::obj();
@@ -1247,6 +1465,111 @@ mod tests {
         server.shutdown();
     }
 
+    /// A `profile:true` job answers with per-phase nanoseconds whose sum
+    /// equals `total_ns`, and the execution also lands in the per-model
+    /// aggregate exposed by the metrics snapshot.
+    #[test]
+    fn profiled_job_reports_phases_and_aggregates() {
+        let server = synthetic_server(1);
+        let (tx, rx) = mpsc::channel::<Outbound>();
+        let wire = WireReply::new(tx, server.chunk_outbox());
+        let opts = JobOptions {
+            client_id: Some("pr".into()),
+            profile: true,
+            ..JobOptions::default()
+        };
+        server
+            .submit_wire(registry::SYNTHETIC_MODEL, JobSpec::Dense, opts, wire)
+            .unwrap();
+        let finals: Vec<Response> = rx
+            .iter()
+            .filter_map(|m| match m {
+                Outbound::Final(r) => Some(r),
+                Outbound::Chunk(_) => None,
+            })
+            .collect();
+        assert_eq!(finals.len(), 1);
+        assert!(finals[0].outcome.is_ok());
+        let prof = finals[0].profile.as_ref().expect("profile was requested");
+        let total = prof.get("total_ns").and_then(|v| v.as_f64()).unwrap();
+        assert!(total > 0.0, "the root span must have recorded time");
+        let phase_sum: f64 = match prof.get("phase_ns").unwrap() {
+            Json::Obj(m) => m.values().filter_map(|v| v.as_f64()).sum(),
+            other => panic!("phase_ns must be an object, got {other:?}"),
+        };
+        assert_eq!(phase_sum, total, "phases are exclusive: they sum to the total");
+        let snap = server.metrics_json();
+        let agg = snap
+            .get("profiles")
+            .and_then(|p| p.get(registry::SYNTHETIC_MODEL))
+            .expect("per-model aggregate profile");
+        let agg_total = agg.get("total_ns").and_then(|v| v.as_f64()).unwrap();
+        assert!(agg_total >= total, "aggregate folds in this execution");
+        server.shutdown();
+    }
+
+    /// `collect_profiles:false` disarms the collector: even an opted-in
+    /// job gets no profile (the overhead-benchmark baseline mode).
+    #[test]
+    fn profiles_off_means_no_profile_even_when_requested() {
+        let server = CompressionServer::start(ServerConfig {
+            workers: 1,
+            queue_cap: 16,
+            models_dir: PathBuf::from("/nonexistent"),
+            synthetic_only: true,
+            collect_profiles: false,
+            ..ServerConfig::default()
+        });
+        let (tx, rx) = mpsc::channel::<Outbound>();
+        let wire = WireReply::new(tx, server.chunk_outbox());
+        let opts = JobOptions { profile: true, ..JobOptions::default() };
+        server
+            .submit_wire(registry::SYNTHETIC_MODEL, JobSpec::Dense, opts, wire)
+            .unwrap();
+        let finals: Vec<Response> = rx
+            .iter()
+            .filter_map(|m| match m {
+                Outbound::Final(r) => Some(r),
+                Outbound::Chunk(_) => None,
+            })
+            .collect();
+        assert_eq!(finals.len(), 1);
+        assert!(finals[0].profile.is_none());
+        server.shutdown();
+    }
+
+    /// The `--metrics-addr` endpoint answers GET /metrics with the
+    /// Prometheus text rendering over plain HTTP.
+    #[test]
+    fn http_metrics_endpoint_serves_prometheus_text() {
+        use std::io::Read as _;
+        // Port 0: the OS picks a free port; rediscover it via the
+        // listener the server bound. Easiest probe: bind first, pass the
+        // resolved address down.
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap().to_string();
+        drop(probe);
+        let server = CompressionServer::start(ServerConfig {
+            workers: 1,
+            queue_cap: 16,
+            models_dir: PathBuf::from("/nonexistent"),
+            synthetic_only: true,
+            metrics_addr: Some(addr.clone()),
+            ..ServerConfig::default()
+        });
+        let (tx, rx) = mpsc::channel();
+        server.submit(registry::SYNTHETIC_MODEL, JobSpec::Dense, None, tx).unwrap();
+        assert!(rx.recv().unwrap().outcome.is_ok());
+        let mut stream = std::net::TcpStream::connect(&addr).expect("metrics endpoint up");
+        stream.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut body = String::new();
+        let _ = stream.read_to_string(&mut body);
+        assert!(body.starts_with("HTTP/1.1 200 OK"), "{body}");
+        assert!(body.contains("obc_jobs_completed"), "{body}");
+        assert!(body.contains("obc_latency_exec"), "{body}");
+        server.shutdown();
+    }
+
     #[test]
     fn line_protocol_end_to_end() {
         #[derive(Clone, Default)]
@@ -1263,7 +1586,10 @@ mod tests {
         let input = concat!(
             "{\"op\":\"health\"}\n",
             "{\"id\":\"d1\",\"op\":\"dense\",\"model\":\"synthetic\"}\n",
+            "{\"id\":\"p1\",\"op\":\"dense\",\"model\":\"synthetic\",\"profile\":true}\n",
             "{\"op\":\"metrics\"}\n",
+            "{\"op\":\"metrics_prom\"}\n",
+            "{\"op\":\"flight\"}\n",
             "not json at all\n",
             "{\"op\":\"shutdown\"}\n",
         );
@@ -1288,6 +1614,27 @@ mod tests {
             "{text}"
         );
         assert!(lines.iter().any(|l| l.contains("\"op\":\"metrics\"")), "{text}");
+        // The profiled job's response carries per-phase nanoseconds.
+        assert!(
+            lines
+                .iter()
+                .any(|l| l.contains("\"id\":\"p1\"") && l.contains("\"phase_ns\"")),
+            "{text}"
+        );
+        // Prometheus rendering rides in the `text` field of a JSON line.
+        assert!(
+            lines
+                .iter()
+                .any(|l| l.contains("\"op\":\"metrics_prom\"") && l.contains("obc_")),
+            "{text}"
+        );
+        // Flight dump includes the accept events recorded at submit.
+        assert!(
+            lines
+                .iter()
+                .any(|l| l.contains("\"op\":\"flight\"") && l.contains("job.accept")),
+            "{text}"
+        );
         assert!(lines.iter().any(|l| l.contains("\"ok\":false")), "{text}");
         assert!(
             lines.last().unwrap().contains("\"op\":\"shutdown\""),

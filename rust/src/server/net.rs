@@ -127,7 +127,31 @@ fn process_line(
             stats.augment(&mut m);
             let _ = write_json(out, stats, &m);
         }
-        Ok(Request::Job { id, model, spec, deadline_ms, priority, precision, tenant, stream }) => {
+        Ok(Request::Control(ControlOp::MetricsProm)) => {
+            let mut m = server.metrics_json();
+            stats.augment(&mut m);
+            let mut o = Json::obj();
+            o.set("ok", true)
+                .set("op", "metrics_prom")
+                .set("text", crate::server::metrics::render_prometheus(&m));
+            let _ = write_json(out, stats, &o);
+        }
+        Ok(Request::Control(ControlOp::Flight)) => {
+            let mut o = crate::server::flight::to_json();
+            o.set("ok", true).set("op", "flight");
+            let _ = write_json(out, stats, &o);
+        }
+        Ok(Request::Job {
+            id,
+            model,
+            spec,
+            deadline_ms,
+            priority,
+            precision,
+            tenant,
+            stream,
+            profile,
+        }) => {
             let opts = JobOptions {
                 client_id: id.clone(),
                 deadline: deadline_ms.map(Duration::from_millis),
@@ -135,6 +159,7 @@ fn process_line(
                 precision,
                 tenant,
                 stream,
+                profile,
             };
             if let Err(e) = server.submit_wire(&model, spec, opts, wire.clone()) {
                 let mut o = Json::obj();

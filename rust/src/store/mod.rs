@@ -133,6 +133,10 @@ impl SnapshotStore {
     fn bump_streak(&self, streak: &AtomicU64, what: &str) {
         let n = streak.fetch_add(1, Ordering::Relaxed) + 1;
         if n >= DEGRADE_AFTER && !self.degraded.swap(true, Ordering::Relaxed) {
+            crate::server::flight::note(
+                "store.degraded",
+                format!("{n} {what} failures in a row, dir {}", self.dir.display()),
+            );
             crate::warnlog!(
                 "store",
                 "{} {what} failures in a row — store {} degraded to memory-only \
@@ -148,6 +152,7 @@ impl SnapshotStore {
     /// either no snapshot exists (miss) or it was rejected and
     /// quarantined (corrupt / stale — never silently served).
     pub fn load(&self, key: &str, fingerprint: u64) -> Option<ModelDb> {
+        crate::span!("store.load");
         if self.is_degraded() {
             self.misses.fetch_add(1, Ordering::Relaxed);
             return None;
@@ -281,6 +286,7 @@ impl SnapshotStore {
                 }
             }
         };
+        crate::server::flight::note("store.quarantine", format!("key '{key}': {reason}"));
         crate::warnlog!("store", "rejected snapshot for '{key}': {reason} ({disposition})");
     }
 
@@ -293,6 +299,7 @@ impl SnapshotStore {
         fingerprint: u64,
         db: &ModelDb,
     ) -> crate::util::error::Result<PathBuf> {
+        crate::span!("store.save");
         let path = self.snapshot_path(key);
         if self.is_degraded() {
             crate::debuglog!("store", "degraded: skipping write-through for '{key}'");

@@ -175,6 +175,41 @@ pub fn seen_sites() -> Vec<String> {
     registry().lock().unwrap().counters.keys().cloned().collect()
 }
 
+/// Per-site coverage counters as `(site, checks, fires)`, sorted by
+/// site. Populated only while a plan is armed — the server exports this
+/// through the `metrics` op so a production `OBC_FAULTS` drill is
+/// observable from outside the process.
+pub fn site_counters() -> Vec<(String, u64, u64)> {
+    registry()
+        .lock()
+        .unwrap()
+        .counters
+        .iter()
+        .map(|(site, &(checks, fires))| (site.clone(), checks, fires))
+        .collect()
+}
+
+type FireHook = Box<dyn Fn(&'static str) + Send + Sync>;
+
+fn fire_hook() -> &'static Mutex<Option<FireHook>> {
+    static HOOK: Mutex<Option<FireHook>> = Mutex::new(None);
+    &HOOK
+}
+
+/// Install an observer called with the site name every time a fault
+/// fires (the server points this at the flight recorder). Replaces any
+/// previous hook; `None`-like removal is not needed — the hook is
+/// process-lifetime.
+pub fn set_fire_hook(hook: impl Fn(&'static str) + Send + Sync + 'static) {
+    *fire_hook().lock().unwrap() = Some(Box::new(hook));
+}
+
+fn notify_fire(site: &'static str) {
+    if let Some(h) = fire_hook().lock().unwrap().as_ref() {
+        h(site);
+    }
+}
+
 fn init_from_env() {
     ENV_INIT.call_once(|| {
         if let Ok(spec) = std::env::var("OBC_FAULTS") {
@@ -216,6 +251,11 @@ pub fn check(site: &'static str) -> std::io::Result<()> {
         }
         fire
     };
+    if action.is_some() {
+        // Outside the registry lock: the hook may itself take locks
+        // (the flight recorder's ring mutex).
+        notify_fire(site);
+    }
     match action {
         None => Ok(()),
         Some(FaultAction::Error) => Err(std::io::Error::other(format!(

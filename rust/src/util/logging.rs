@@ -35,48 +35,70 @@ pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// Would a message at level `l` be written? Callers (and the logging
+/// macros) check this BEFORE formatting, so a suppressed message costs
+/// one relaxed atomic load — no `format!` allocation.
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= level()
+}
+
 pub fn log(l: Level, module: &str, msg: &str) {
-    if (l as u8) <= level() {
+    if enabled(l) {
         let tag = match l {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
         };
-        eprintln!("[{tag}] {module}: {msg}");
+        // One pre-formatted line through the locked writer: concurrent
+        // workers' lines interleave whole, never mid-line.
+        let line = format!("[{tag}] {module}: {msg}\n");
+        let stderr = std::io::stderr();
+        let mut out = stderr.lock();
+        let _ = std::io::Write::write_all(&mut out, line.as_bytes());
     }
 }
 
 #[macro_export]
 macro_rules! info {
     ($mod:expr, $($arg:tt)*) => {
-        $crate::util::logging::log($crate::util::logging::Level::Info, $mod, &format!($($arg)*))
+        if $crate::util::logging::enabled($crate::util::logging::Level::Info) {
+            $crate::util::logging::log($crate::util::logging::Level::Info, $mod, &format!($($arg)*));
+        }
     };
 }
 
 #[macro_export]
 macro_rules! warnlog {
     ($mod:expr, $($arg:tt)*) => {
-        $crate::util::logging::log($crate::util::logging::Level::Warn, $mod, &format!($($arg)*))
+        if $crate::util::logging::enabled($crate::util::logging::Level::Warn) {
+            $crate::util::logging::log($crate::util::logging::Level::Warn, $mod, &format!($($arg)*));
+        }
     };
 }
 
 #[macro_export]
 macro_rules! debuglog {
     ($mod:expr, $($arg:tt)*) => {
-        $crate::util::logging::log($crate::util::logging::Level::Debug, $mod, &format!($($arg)*))
+        if $crate::util::logging::enabled($crate::util::logging::Level::Debug) {
+            $crate::util::logging::log($crate::util::logging::Level::Debug, $mod, &format!($($arg)*));
+        }
     };
 }
 
-/// Scoped timer that logs elapsed time on drop (debug level).
+/// Scoped timer that logs elapsed time on drop (debug level). The label
+/// is only materialized when debug logging is enabled at construction —
+/// on the (common) suppressed path a Stopwatch is two words and never
+/// allocates.
 pub struct Stopwatch {
-    label: String,
+    label: Option<String>,
     start: Instant,
 }
 
 impl Stopwatch {
     pub fn new(label: &str) -> Stopwatch {
-        Stopwatch { label: label.to_string(), start: Instant::now() }
+        let label = enabled(Level::Debug).then(|| label.to_string());
+        Stopwatch { label, start: Instant::now() }
     }
 
     pub fn elapsed_s(&self) -> f64 {
@@ -86,17 +108,19 @@ impl Stopwatch {
 
 impl Drop for Stopwatch {
     fn drop(&mut self) {
-        log(
-            Level::Debug,
-            "timer",
-            &format!("{} took {:.3}s", self.label, self.elapsed_s()),
-        );
+        if let Some(label) = &self.label {
+            log(Level::Debug, "timer", &format!("{label} took {:.3}s", self.elapsed_s()));
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    // The level is a process-global: tests that mutate it must not
+    // overlap or their assertions race each other's settings.
+    static LEVEL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
     #[test]
     fn stopwatch_measures() {
@@ -107,9 +131,35 @@ mod tests {
 
     #[test]
     fn log_does_not_panic() {
+        let _l = LEVEL_LOCK.lock().unwrap();
         set_level(Level::Debug);
         log(Level::Info, "test", "hello");
         log(Level::Debug, "test", "debug msg");
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn suppressed_stopwatch_skips_the_label() {
+        let _l = LEVEL_LOCK.lock().unwrap();
+        set_level(Level::Info);
+        let sw = Stopwatch::new("suppressed");
+        assert!(sw.label.is_none(), "label must not be materialized below debug");
+        set_level(Level::Debug);
+        let sw = Stopwatch::new("active");
+        assert_eq!(sw.label.as_deref(), Some("active"));
+        set_level(Level::Info);
+        // Drop of `sw` logs (its label was captured while debug was on);
+        // the suppressed one stays silent. Neither may panic.
+    }
+
+    #[test]
+    fn enabled_tracks_level() {
+        let _l = LEVEL_LOCK.lock().unwrap();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
         set_level(Level::Info);
     }
 }

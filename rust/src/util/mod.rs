@@ -20,6 +20,7 @@ pub mod retry;
 pub mod deadline;
 pub mod progress;
 pub mod precision;
+pub mod trace;
 
 pub use error::{ObcError, Result};
 

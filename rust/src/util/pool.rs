@@ -4,7 +4,7 @@
 //! inside a layer) across this pool. Built in-tree: no `rayon`/`tokio` in
 //! the offline vendor set.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
@@ -132,11 +132,21 @@ impl ThreadPool {
             return Vec::new();
         }
         let f = Arc::new(f);
+        // Jobs inherit the submitting thread's trace collector (the same
+        // explicit hand-off as deadlines across `thread::scope`); the
+        // per-call elapsed accumulator credits worker time back to the
+        // caller's open span so waiting on the pool is not double-
+        // counted. With no collector installed this is a `None` clone
+        // per job — no allocation, no timing.
+        let tracer = crate::util::trace::current();
+        let pool_ns = tracer.as_ref().map(|_| Arc::new(AtomicU64::new(0)));
         let out: Arc<Mutex<Vec<Option<T>>>> =
             Arc::new(Mutex::new((0..n).map(|_| None).collect()));
         let latch = Arc::new(Latch::new(n));
         for i in 0..n {
             let f = Arc::clone(&f);
+            let tracer = tracer.clone();
+            let pool_ns = pool_ns.clone();
             // The guard counts the latch down even if f(i) panics (its
             // drop runs during unwind): a lost result surfaces as the
             // "missing result" panic below, never as a deadlocked
@@ -145,9 +155,12 @@ impl ThreadPool {
             // reference and try_unwrap cannot race a worker that is
             // still tearing its job down.
             let guard = JobGuard { latch: Arc::clone(&latch), out: Some(Arc::clone(&out)) };
-            self.submit(move || guard.store(i, f(i)));
+            self.submit(move || guard.store(i, run_traced(&tracer, &pool_ns, || f(i))));
         }
         latch.wait();
+        if let Some(acc) = &pool_ns {
+            crate::util::trace::absorb_child_ns(acc.load(Ordering::Relaxed));
+        }
         Arc::try_unwrap(out)
             .unwrap_or_else(|_| panic!("par_map results still shared"))
             .into_inner()
@@ -163,15 +176,48 @@ impl ThreadPool {
         F: Fn(std::ops::Range<usize>) + Send + Sync + 'static,
     {
         let f = Arc::new(f);
+        let tracer = crate::util::trace::current();
+        let pool_ns = tracer.as_ref().map(|_| Arc::new(AtomicU64::new(0)));
         let chunk = chunk.max(1);
         let mut start = 0;
         while start < n {
             let end = (start + chunk).min(n);
             let f = Arc::clone(&f);
-            self.submit(move || f(start..end));
+            let tracer = tracer.clone();
+            let pool_ns = pool_ns.clone();
+            self.submit(move || run_traced(&tracer, &pool_ns, || f(start..end)));
             start = end;
         }
         self.wait_idle();
+        if let Some(acc) = &pool_ns {
+            crate::util::trace::absorb_child_ns(acc.load(Ordering::Relaxed));
+        }
+    }
+}
+
+/// Run one pool job under the submitting thread's trace collector (if
+/// any), recording its time under the "pool.job" phase and accumulating
+/// its full elapsed into `pool_ns` for the submitter to absorb. The
+/// untraced path is exactly `f()`.
+fn run_traced<T>(
+    tracer: &Option<Arc<crate::util::trace::Profile>>,
+    pool_ns: &Option<Arc<AtomicU64>>,
+    f: impl FnOnce() -> T,
+) -> T {
+    match tracer {
+        Some(p) => {
+            let t0 = std::time::Instant::now();
+            let v = {
+                let _t = crate::util::trace::set(Some(Arc::clone(p)));
+                let _sp = crate::util::trace::span_named("pool.job");
+                f()
+            };
+            if let Some(acc) = pool_ns {
+                acc.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            v
+        }
+        None => f(),
     }
 }
 
@@ -356,6 +402,35 @@ mod tests {
             fast_elapsed < Duration::from_millis(500),
             "fast par_map waited on foreign jobs: {fast_elapsed:?}"
         );
+    }
+
+    /// Pool jobs inherit the submitting thread's trace collector: spans
+    /// opened inside jobs record into the caller's profile, and the
+    /// caller's enclosing span excludes the absorbed worker time.
+    #[test]
+    fn par_map_inherits_trace_collector() {
+        use crate::util::trace;
+        let pool = ThreadPool::new(2);
+        let p = Arc::new(trace::Profile::new());
+        trace::with_collector(Some(Arc::clone(&p)), || {
+            let _root = trace::span_named("other");
+            let out = pool.par_map(8, |i| {
+                let _sp = trace::span_named("sweep.flush");
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                i
+            });
+            assert_eq!(out.len(), 8);
+        });
+        let get = |name: &str| {
+            p.phases().iter().find(|(n, _, _)| *n == name).map(|&(_, ns, c)| (ns, c))
+        };
+        let (flush_ns, flush_calls) = get("sweep.flush").unwrap();
+        assert_eq!(flush_calls, 8, "one span per job");
+        assert!(flush_ns >= 4_000_000, "8 x 1ms slept, got {flush_ns}ns");
+        // The root span absorbed the jobs' elapsed time: its self-time
+        // is the orchestration sliver, far below the ~4-8ms of work.
+        let (root_ns, _) = get("other").unwrap();
+        assert!(root_ns < 4_000_000, "root self-time {root_ns}ns double-counts pool work");
     }
 
     #[test]

@@ -1,0 +1,344 @@
+//! Per-job phase profiling: thread-local hierarchical spans that
+//! attribute wall-nanoseconds to a fixed taxonomy of named phases.
+//!
+//! A job installs a collector ([`Profile`]) with [`set`] (guard restores
+//! the previous collector on drop — the same scoped-propagation shape as
+//! `util::deadline` / `util::progress`) and instrumented code opens
+//! spans with the [`span!`](crate::span!) macro. Fan-out layers inherit
+//! the collector explicitly: `util::pool::par_map`/`par_chunks` wrap
+//! each job with the submitting thread's collector, and the engine's
+//! scoped layer workers re-`set` [`current`] exactly as they do for
+//! deadlines.
+//!
+//! Accounting is **exclusive (self-time) per thread**: a span records
+//! `elapsed − time spent in same-thread child spans`, so nested spans
+//! never double-count and the per-phase totals of a single-threaded job
+//! sum exactly to the root span's elapsed time. Pool fan-outs credit
+//! each job's full elapsed time back to the *submitting* thread's open
+//! span (see [`absorb_child_ns`]); with one pool thread the sum-of-
+//! phases therefore still equals wall time, while with many threads the
+//! totals read as CPU time and may exceed wall time.
+//!
+//! Cost contract: with no collector installed a span is one
+//! thread-local byte read — no `Instant::now()`, **no allocation**
+//! (asserted by the alloc-counter tests); armed spans are still
+//! allocation-free (two `Instant::now()` calls and a relaxed
+//! `fetch_add`). Instrumentation never touches a float, so numerics are
+//! bitwise identical with and without a collector.
+
+use crate::util::json::Json;
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The fixed phase taxonomy. Index 0 ("other") is the root/uncategorized
+/// bucket: the server's root span lands there, and unknown span names
+/// fold into it rather than being dropped.
+pub const PHASES: &[&str] = &[
+    "other",
+    "calibrate",
+    "hessian.syrk",
+    "linalg.cholesky",
+    "sweep.flush",
+    "sweep.select",
+    "db.assemble",
+    "store.load",
+    "store.save",
+    "engine.db_build",
+    "engine.eval",
+    "engine.solve",
+    "pool.job",
+];
+
+/// Lock-free per-job phase accumulator: nanoseconds and call counts per
+/// [`PHASES`] entry. Shared across a job's fan-out threads via `Arc`.
+pub struct Profile {
+    ns: [AtomicU64; PHASES.len()],
+    calls: [AtomicU64; PHASES.len()],
+}
+
+impl Default for Profile {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Profile {
+    pub fn new() -> Profile {
+        Profile {
+            ns: std::array::from_fn(|_| AtomicU64::new(0)),
+            calls: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    fn add(&self, idx: usize, ns: u64) {
+        self.ns[idx].fetch_add(ns, Ordering::Relaxed);
+        self.calls[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Non-empty phases as `(name, ns, calls)`, in taxonomy order.
+    pub fn phases(&self) -> Vec<(&'static str, u64, u64)> {
+        let mut out = Vec::new();
+        for (i, name) in PHASES.iter().enumerate() {
+            let ns = self.ns[i].load(Ordering::Relaxed);
+            let calls = self.calls[i].load(Ordering::Relaxed);
+            if ns > 0 || calls > 0 {
+                out.push((*name, ns, calls));
+            }
+        }
+        out
+    }
+
+    /// Sum of self-time over all phases.
+    pub fn total_ns(&self) -> u64 {
+        self.ns.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Accumulate another profile into this one (phase-wise). Used by
+    /// the server to fold each finished job's profile into a per-model
+    /// aggregate.
+    pub fn merge_from(&self, other: &Profile) {
+        for i in 0..PHASES.len() {
+            self.ns[i].fetch_add(other.ns[i].load(Ordering::Relaxed), Ordering::Relaxed);
+            self.calls[i].fetch_add(other.calls[i].load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+    }
+
+    /// `{"phase_ns": {..}, "phase_calls": {..}, "total_ns": n}` with
+    /// only non-empty phases listed.
+    pub fn to_json(&self) -> Json {
+        let mut ns = Json::obj();
+        let mut calls = Json::obj();
+        for (name, n, c) in self.phases() {
+            ns.set(name, n as f64);
+            calls.set(name, c as f64);
+        }
+        let mut o = Json::obj();
+        o.set("phase_ns", ns)
+            .set("phase_calls", calls)
+            .set("total_ns", self.total_ns() as f64);
+        o
+    }
+}
+
+thread_local! {
+    // Fast-path arm flag, kept separate so a disabled span reads one
+    // Cell<bool> and returns — it never touches the RefCell.
+    static ARMED: Cell<bool> = const { Cell::new(false) };
+    static COLLECTOR: RefCell<Option<Arc<Profile>>> = const { RefCell::new(None) };
+    // Nanoseconds spent in (same-thread) child spans and absorbed pool
+    // jobs since the innermost open span started.
+    static CHILD_NS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Restores the previous collector (and child accumulator) on drop.
+pub struct TraceGuard {
+    prev: Option<Arc<Profile>>,
+    prev_child: u64,
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        ARMED.with(|a| a.set(prev.is_some()));
+        COLLECTOR.with(|c| *c.borrow_mut() = prev);
+        CHILD_NS.with(|c| c.set(self.prev_child));
+    }
+}
+
+/// Install `collector` on this thread until the guard drops. `None`
+/// disarms tracing (useful to shield helper work from a job's profile).
+#[must_use = "the collector lasts only while the guard lives"]
+pub fn set(collector: Option<Arc<Profile>>) -> TraceGuard {
+    ARMED.with(|a| a.set(collector.is_some()));
+    let prev_child = CHILD_NS.with(|c| c.replace(0));
+    let prev = COLLECTOR.with(|c| c.replace(collector));
+    TraceGuard { prev, prev_child }
+}
+
+/// The collector in force on this thread, if any. Fan-out code captures
+/// this before spawning and re-`set`s it inside each worker.
+pub fn current() -> Option<Arc<Profile>> {
+    COLLECTOR.with(|c| c.borrow().clone())
+}
+
+/// True when a collector is installed on this thread.
+pub fn armed() -> bool {
+    ARMED.with(|a| a.get())
+}
+
+/// Run `f` with `collector` installed on this thread.
+pub fn with_collector<T>(collector: Option<Arc<Profile>>, f: impl FnOnce() -> T) -> T {
+    let _g = set(collector);
+    f()
+}
+
+/// Credit `ns` of work done elsewhere (a pool job that ran on another
+/// thread) to this thread's innermost open span, so the span's
+/// self-time excludes time it merely spent waiting on the pool.
+pub fn absorb_child_ns(ns: u64) {
+    if ns > 0 {
+        CHILD_NS.with(|c| c.set(c.get().saturating_add(ns)));
+    }
+}
+
+/// An open span; records its exclusive time on drop. `active` is `None`
+/// when no collector was installed at open — the drop is then a no-op.
+pub struct Span {
+    active: Option<(usize, u64, Instant)>,
+}
+
+/// Open a span for `name` (one of [`PHASES`]; unknown names fold into
+/// "other"). Prefer the [`span!`](crate::span!) macro at call sites.
+pub fn span_named(name: &'static str) -> Span {
+    if !ARMED.with(|a| a.get()) {
+        return Span { active: None };
+    }
+    let idx = PHASES.iter().position(|p| *p == name).unwrap_or(0);
+    let saved = CHILD_NS.with(|c| c.replace(0));
+    Span { active: Some((idx, saved, Instant::now())) }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some((idx, saved, start)) = self.active.take() else {
+            return;
+        };
+        let elapsed = start.elapsed().as_nanos() as u64;
+        let child = CHILD_NS.with(|c| c.get());
+        COLLECTOR.with(|c| {
+            if let Some(p) = c.borrow().as_deref() {
+                p.add(idx, elapsed.saturating_sub(child));
+            }
+        });
+        // The parent sees this span's FULL elapsed (self + descendants)
+        // as child time.
+        CHILD_NS.with(|c| c.set(saved.saturating_add(elapsed)));
+    }
+}
+
+/// Open a named span until the end of the enclosing scope:
+/// `span!("sweep.flush");`. Strict no-op when no collector is installed.
+#[macro_export]
+macro_rules! span {
+    ($name:literal) => {
+        let _obc_span = $crate::util::trace::span_named($name);
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn disabled_span_is_inert() {
+        assert!(current().is_none());
+        assert!(!armed());
+        let s = span_named("sweep.flush");
+        assert!(s.active.is_none());
+        drop(s);
+    }
+
+    #[test]
+    fn armed_spans_record_and_guard_restores() {
+        let p = Arc::new(Profile::new());
+        {
+            let _g = set(Some(p.clone()));
+            assert!(armed());
+            {
+                span!("sweep.flush");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            {
+                span!("store.load");
+            }
+        }
+        assert!(!armed());
+        assert!(current().is_none());
+        let phases = p.phases();
+        let flush = phases.iter().find(|(n, _, _)| *n == "sweep.flush").unwrap();
+        assert!(flush.1 >= 1_000_000, "slept 2ms, recorded {}ns", flush.1);
+        assert_eq!(flush.2, 1, "one call");
+        assert!(phases.iter().any(|(n, _, _)| *n == "store.load"));
+    }
+
+    #[test]
+    fn nested_spans_are_exclusive() {
+        let p = Arc::new(Profile::new());
+        with_collector(Some(p.clone()), || {
+            let _outer = span_named("engine.db_build");
+            std::thread::sleep(Duration::from_millis(2));
+            {
+                let _inner = span_named("linalg.cholesky");
+                std::thread::sleep(Duration::from_millis(4));
+            }
+        });
+        let get = |name: &str| {
+            p.phases().iter().find(|(n, _, _)| *n == name).map(|&(_, ns, _)| ns).unwrap_or(0)
+        };
+        let outer = get("engine.db_build");
+        let inner = get("linalg.cholesky");
+        assert!(inner >= 3_000_000, "inner {inner}ns");
+        // Outer self-time excludes the inner 4ms: it must be well under
+        // the 6ms total the two sleeps add up to.
+        assert!(outer >= 1_000_000 && outer < 4_000_000, "outer {outer}ns");
+        assert_eq!(p.total_ns(), outer + inner);
+    }
+
+    #[test]
+    fn unknown_phase_folds_into_other() {
+        let p = Arc::new(Profile::new());
+        with_collector(Some(p.clone()), || {
+            span!("not.a.phase");
+        });
+        assert_eq!(p.phases().len(), 1);
+        assert_eq!(p.phases()[0].0, "other");
+    }
+
+    #[test]
+    fn absorbed_pool_time_reduces_parent_self_time() {
+        let p = Arc::new(Profile::new());
+        with_collector(Some(p.clone()), || {
+            let _outer = span_named("engine.db_build");
+            std::thread::sleep(Duration::from_millis(4));
+            // Pretend 3ms of that wait was a pool job's elapsed time.
+            absorb_child_ns(3_000_000);
+        });
+        let (_, ns, _) =
+            *p.phases().iter().find(|(n, _, _)| *n == "engine.db_build").unwrap();
+        assert!(ns < 3_000_000, "absorbed time excluded, got {ns}ns");
+    }
+
+    #[test]
+    fn collector_crosses_threads_via_current() {
+        let p = Arc::new(Profile::new());
+        let _g = set(Some(p.clone()));
+        let inherited = current();
+        std::thread::scope(|sc| {
+            sc.spawn(|| {
+                assert!(!armed(), "not inherited implicitly");
+                let _g = set(inherited.clone());
+                span!("hessian.syrk");
+            });
+        });
+        assert!(p.phases().iter().any(|(n, _, _)| *n == "hessian.syrk"));
+    }
+
+    #[test]
+    fn profile_json_shape() {
+        let p = Profile::new();
+        p.add(1, 500);
+        p.add(1, 500);
+        p.add(7, 250);
+        let j = p.to_json();
+        assert_eq!(j.get("total_ns").unwrap().as_f64().unwrap(), 1250.0);
+        let ns = j.get("phase_ns").unwrap();
+        assert_eq!(ns.get("calibrate").unwrap().as_f64().unwrap(), 1000.0);
+        assert_eq!(ns.get("store.load").unwrap().as_f64().unwrap(), 250.0);
+        assert!(ns.get("sweep.flush").is_none(), "empty phases omitted");
+        let calls = j.get("phase_calls").unwrap();
+        assert_eq!(calls.get("calibrate").unwrap().as_f64().unwrap(), 2.0);
+    }
+}

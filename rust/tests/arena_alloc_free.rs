@@ -15,8 +15,13 @@ use obc::util::scratch::Scratch;
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc;
 
+// The counting allocator is process-wide: tests in this binary must not
+// overlap, or each would see the other's allocations.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 #[test]
 fn steady_state_sweeps_are_allocation_free() {
+    let _serial = SERIAL.lock().unwrap();
     let d = 32;
     let w = Mat::randn(2, d, 950);
     let h = LayerHessian::from_inputs(&Mat::randn(d, d * 2 + 8, 951), 1e-8);
@@ -98,4 +103,53 @@ fn steady_state_sweeps_are_allocation_free() {
         "steady-state sweeps allocated {} times ({} bytes)",
         delta.allocs, delta.bytes
     );
+}
+
+/// The observability contract on the kernel hot path: a `span!` with no
+/// collector installed is one thread-local flag read, and with a
+/// collector armed it is two relaxed `fetch_add`s into a preallocated
+/// profile — neither side allocates in steady state.
+#[test]
+fn spans_allocate_nothing_on_the_sweep_hot_path() {
+    use obc::util::trace;
+    use std::sync::Arc;
+
+    let _serial = SERIAL.lock().unwrap();
+    let d = 32;
+    let w = Mat::randn(2, d, 960);
+    let h = LayerHessian::from_inputs(&Mat::randn(d, d * 2 + 8, 961), 1e-8);
+    let mut s = Scratch::new();
+    // Warmup grows the arena; spans fire inside `batch_flush` on every
+    // call below.
+    sweep::prune_sweep_batched(&mut s, w.row(0), &h.hinv, d, 8, |_, _| true).unwrap();
+
+    // Collector absent (the library default).
+    let start = alloc_counter::snapshot();
+    sweep::prune_sweep_batched(&mut s, w.row(1), &h.hinv, d, 8, |_, _| true).unwrap();
+    let delta = alloc_counter::since(start);
+    assert_eq!(delta.allocs, 0, "disabled spans must not allocate");
+
+    // Collector armed: the profile is preallocated outside the measured
+    // region; recording touches only its atomics.
+    let profile = Arc::new(trace::Profile::new());
+    let guard = trace::set(Some(Arc::clone(&profile)));
+    let start = alloc_counter::snapshot();
+    sweep::prune_sweep_batched(&mut s, w.row(1), &h.hinv, d, 8, |_, _| true).unwrap();
+    let delta = alloc_counter::since(start);
+    assert_eq!(delta.allocs, 0, "armed spans must not allocate");
+    drop(guard);
+    let flush_ns: u64 = profile
+        .phases()
+        .iter()
+        .filter(|(name, _, _)| *name == "sweep.flush")
+        .map(|(_, ns, _)| *ns)
+        .sum();
+    let flush_calls: u64 = profile
+        .phases()
+        .iter()
+        .filter(|(name, _, _)| *name == "sweep.flush")
+        .map(|(_, _, c)| *c)
+        .sum();
+    assert!(flush_calls >= 1, "the armed sweep must have recorded flush spans");
+    assert!(flush_ns > 0 || flush_calls > 0);
 }

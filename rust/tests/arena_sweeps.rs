@@ -231,3 +231,32 @@ fn pooled_arena_still_deterministic_and_valid() {
         }
     }
 }
+
+/// Tracing never touches a float: the same sweep run with a span
+/// collector armed (including across the pool fan-out) is bit-identical
+/// to the untraced run, and the collector actually recorded phases.
+#[test]
+fn armed_tracing_is_bitwise_invisible_to_kernels() {
+    use obc::util::trace;
+    use std::sync::Arc;
+
+    let (w, h) = setup(9, 20, 970);
+    let pooled = ThreadPool::new(4);
+    let untraced = exact_obs::prune_unstructured_on(&pooled, &w, &h, 0.6, &ObsOpts::default());
+
+    let profile = Arc::new(trace::Profile::new());
+    let traced = {
+        let _g = trace::set(Some(Arc::clone(&profile)));
+        exact_obs::prune_unstructured_on(&pooled, &w, &h, 0.6, &ObsOpts::default())
+    };
+    for (a, b) in untraced.w.data.iter().zip(traced.w.data.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "tracing must be bitwise invisible");
+    }
+    assert_eq!(untraced.sq_err.to_bits(), traced.sq_err.to_bits());
+    assert!(profile.total_ns() > 0, "the collector must have recorded spans");
+    let names: Vec<&str> = profile.phases().iter().map(|(n, _, _)| *n).collect();
+    assert!(
+        names.contains(&"sweep.flush") || names.contains(&"pool.job"),
+        "expected kernel phases in {names:?}"
+    );
+}

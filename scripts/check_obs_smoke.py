@@ -1,0 +1,182 @@
+#!/usr/bin/env python3
+"""Validate `make obs-smoke` output (see Makefile for the scripted batch).
+
+The batch runs four profiled jobs (prune, quant, db build, solve) on a
+one-worker server with OBC_THREADS=1, then queries live metrics (JSON +
+Prometheus text) and the flight recorder before shutting down. Checks:
+
+  1. every profiled response carries "profile" whose phase_ns values sum
+     exactly to its total_ns, and total_ns stays within 5% of the job's
+     exec "seconds" (small absolute floor for sub-millisecond jobs —
+     the profile merge/serialisation sits inside the exec window but
+     outside the root span);
+  2. the post-drain shutdown ack's exec-histogram counts sum to
+     jobs_completed, per-cell quantiles are monotone, and the faults /
+     per-model profiles aggregates are present;
+  3. the Prometheus text renders the counter family (including the
+     synchronously-counted obc_jobs_submitted, which is exact even if
+     jobs are still in flight when the scrape line is processed);
+  4. flight events are ordered (event seq strictly increasing, t_ms
+     nondecreasing) and every terminal job event pairs with an accept.
+"""
+import json
+import sys
+
+PROFILED = ["pr", "qt", "bd", "sv"]
+REL_TOL = 0.05          # acceptance gate: phase sums within 5% of exec
+ABS_FLOOR_NS = 2e6      # merge/serialise overhead floor for tiny jobs
+
+
+def fail(msg):
+    raise SystemExit(f"check_obs_smoke: {msg}")
+
+
+path = sys.argv[1]
+docs = []
+for i, line in enumerate(open(path), 1):
+    line = line.strip()
+    if not line:
+        continue
+    try:
+        docs.append(json.loads(line))
+    except json.JSONDecodeError as e:
+        fail(f"{path}:{i}: invalid JSON ({e}): {line[:120]}")
+
+by_id = {d["id"]: d for d in docs if "id" in d}
+by_op = {d["op"]: d for d in docs if "op" in d}
+
+# --- 1. per-job profiles: exact phase-sum identity + 5% of exec time ---
+for jid in PROFILED:
+    d = by_id.get(jid)
+    if d is None:
+        fail(f"no response for profiled job {jid!r}")
+    if d.get("ok") is not True:
+        fail(f"job {jid!r} failed: {d}")
+    prof = d.get("profile")
+    if not isinstance(prof, dict):
+        fail(f"job {jid!r} missing its profile object: {d}")
+    phase_ns = prof.get("phase_ns")
+    total_ns = prof.get("total_ns")
+    if not isinstance(phase_ns, dict) or not phase_ns:
+        fail(f"job {jid!r}: profile has no phase_ns breakdown: {prof}")
+    if not all(v > 0 for v in prof.get("phase_calls", {}).values()):
+        fail(f"job {jid!r}: non-positive phase_calls: {prof}")
+    phase_sum = sum(phase_ns.values())
+    if phase_sum != total_ns:
+        fail(f"job {jid!r}: sum(phase_ns)={phase_sum} != total_ns={total_ns}")
+    exec_ns = d["seconds"] * 1e9
+    tol = max(REL_TOL * exec_ns, ABS_FLOOR_NS)
+    if abs(exec_ns - total_ns) > tol:
+        fail(f"job {jid!r}: profile total {total_ns:.0f} ns vs exec "
+             f"{exec_ns:.0f} ns — off by more than "
+             f"max({REL_TOL:.0%}, {ABS_FLOOR_NS:.0f} ns)")
+
+# The first executed job calibrates inside its span scope, so the
+# per-model aggregate (checked below) must have seen a calibrate phase;
+# at least one of the four per-job profiles must carry it too.
+if not any("calibrate" in by_id[j]["profile"]["phase_ns"] for j in PROFILED):
+    fail("no profiled job recorded a 'calibrate' phase")
+
+# --- 2. shutdown ack: histogram accounting + aggregates -----------------
+ack = by_op.get("shutdown")
+if ack is None or ack.get("ok") is not True:
+    fail(f"missing/failed shutdown ack: {ack}")
+completed = ack.get("jobs_completed")
+if completed != len(PROFILED):
+    fail(f"shutdown ack jobs_completed {completed} != {len(PROFILED)}")
+if ack.get("jobs_failed") != 0:
+    fail(f"shutdown ack jobs_failed {ack.get('jobs_failed')} != 0")
+latency = ack.get("latency", {})
+exec_fam = latency.get("exec")
+if not isinstance(exec_fam, dict) or not exec_fam:
+    fail(f"shutdown ack has no exec latency histograms: {latency}")
+exec_count = 0
+for cname, kinds in exec_fam.items():
+    for kname, cell in kinds.items():
+        exec_count += cell["count"]
+        qs = [cell.get("p50_ns"), cell.get("p95_ns"), cell.get("p99_ns")]
+        if any(q is None for q in qs) or not qs[0] <= qs[1] <= qs[2]:
+            fail(f"non-monotone quantiles in exec[{cname}][{kname}]: {cell}")
+if exec_count != completed:
+    fail(f"exec histogram count {exec_count} != jobs_completed {completed}")
+if not isinstance(ack.get("faults"), dict):
+    fail(f"shutdown ack missing faultpoint counters: {ack.get('faults')}")
+agg = ack.get("profiles", {}).get("synthetic")
+if not isinstance(agg, dict) or "calibrate" not in agg.get("phase_ns", {}):
+    fail(f"per-model profile aggregate missing calibrate phase: {agg}")
+job_total = sum(by_id[j]["profile"]["total_ns"] for j in PROFILED)
+if agg["total_ns"] < job_total:
+    fail(f"aggregate total_ns {agg['total_ns']} below the sum of the "
+         f"per-job profiles {job_total}")
+
+# --- 3. Prometheus text -------------------------------------------------
+prom = by_op.get("metrics_prom")
+if prom is None or prom.get("ok") is not True:
+    fail(f"missing/failed metrics_prom response: {prom}")
+text = prom.get("text", "")
+series = {}
+for ln in text.splitlines():
+    parts = ln.split()
+    if len(parts) == 2:
+        series[parts[0]] = float(parts[1])
+if series.get("obc_jobs_submitted") != float(len(PROFILED)):
+    fail(f"obc_jobs_submitted {series.get('obc_jobs_submitted')} != "
+         f"{len(PROFILED)} in Prometheus text")
+for name in ["obc_jobs_completed", "obc_calibrations", "obc_queue_depth",
+             "obc_store_degraded"]:
+    if name not in series:
+        fail(f"Prometheus text missing series {name!r}")
+allowed = set("abcdefghijklmnopqrstuvwxyz"
+              "ABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_")
+bad = [n for n in series if not set(n) <= allowed]
+if bad:
+    fail(f"unsanitised Prometheus series names: {bad}")
+
+# The live JSON metrics snapshot must expose the same aggregate shape.
+live = by_op.get("metrics")
+if live is None or live.get("ok") is not True:
+    fail(f"missing/failed metrics response: {live}")
+for key in ["latency", "faults", "profiles"]:
+    if key not in live:
+        fail(f"live metrics snapshot missing {key!r}")
+
+# --- 4. flight recorder -------------------------------------------------
+fl = by_op.get("flight")
+if fl is None or fl.get("ok") is not True:
+    fail(f"missing/failed flight response: {fl}")
+events = fl.get("events", [])
+if not events:
+    fail("flight recorder dumped no events")
+if fl.get("recorded") < len(events):
+    fail(f"flight recorded {fl.get('recorded')} < events kept {len(events)}")
+seqs = [e["seq"] for e in events]
+if seqs != sorted(seqs) or len(set(seqs)) != len(seqs):
+    fail(f"flight event seqs not strictly increasing: {seqs}")
+times = [e["t_ms"] for e in events]
+if times != sorted(times):
+    fail(f"flight event t_ms not nondecreasing: {times}")
+
+
+def job_seq(detail):
+    toks = detail.split()
+    return toks[toks.index("seq") + 1] if "seq" in toks else None
+
+
+accepts = {job_seq(e["detail"]) for e in events if e["kind"] == "job.accept"}
+terminals = [e for e in events
+             if e["kind"] in ("job.done", "job.deadline", "job.fail")]
+if len(accepts) != len(PROFILED):
+    fail(f"flight job.accept count {len(accepts)} != {len(PROFILED)}")
+orphans = [e for e in terminals if job_seq(e["detail"]) not in accepts]
+if orphans:
+    fail(f"terminal flight events without a matching accept: {orphans}")
+term_seqs = [job_seq(e["detail"]) for e in terminals]
+if len(term_seqs) != len(set(term_seqs)):
+    fail(f"a job recorded more than one terminal flight event: {term_seqs}")
+if any(e["kind"] != "job.done" for e in terminals):
+    fail(f"unexpected non-done terminal events: {terminals}")
+
+print(f"check_obs_smoke OK: {len(PROFILED)} profiled jobs with phase sums "
+      f"within {REL_TOL:.0%} of exec time, exec histogram count "
+      f"{exec_count} == jobs_completed, {len(events)} flight events "
+      f"ordered and paired, {len(series)} Prometheus series")

@@ -39,7 +39,14 @@ REQUIRED = [
     "latency_p99_ms",
     "interactive_p95_ms",
     "batch_p95_ms",
+    "span_overhead_off_seconds",
+    "span_overhead_on_seconds",
+    "span_overhead_ratio",
 ]
+
+# Instrumented / collector-off exec-time ratio ceiling (the observability
+# acceptance gate: span collection must cost < 2% on real sweep work).
+MAX_SPAN_OVERHEAD_RATIO = 1.02
 
 
 def fail(msg):
@@ -87,10 +94,17 @@ if len(sys.argv) > 2:
         fail(f"{sys.argv[2]}: fairness violated — interactive p95 "
              f"{sm['interactive_p95_ms']:.1f} ms above batch p95 "
              f"{sm['batch_p95_ms']:.1f} ms")
+    if sm["span_overhead_ratio"] >= MAX_SPAN_OVERHEAD_RATIO:
+        fail(f"{sys.argv[2]}: span overhead ratio "
+             f"{sm['span_overhead_ratio']:.4f} exceeds the "
+             f"{MAX_SPAN_OVERHEAD_RATIO} gate (instrumented "
+             f"{sm['span_overhead_on_seconds']:.4f}s vs collector-off "
+             f"{sm['span_overhead_off_seconds']:.4f}s)")
     print(f"check_serve_bench OK: committed schema valid, smoke run "
           f"{sm['jobs_per_sec']:.1f} jobs/s, interactive p95 "
           f"{sm['interactive_p95_ms']:.1f} ms <= batch p95 "
-          f"{sm['batch_p95_ms']:.1f} ms")
+          f"{sm['batch_p95_ms']:.1f} ms, span overhead "
+          f"{(sm['span_overhead_ratio'] - 1.0) * 100.0:+.2f}%")
 else:
     print(f"check_serve_bench OK: committed schema valid "
           f"({len(REQUIRED)} derived names)")
